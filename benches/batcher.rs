@@ -1,0 +1,88 @@
+//! Coordinator/batching benchmark: serving throughput and per-step latency
+//! as the continuous-batching width grows — the L3 scheduling contribution
+//! in isolation (per-sequence dynamic masks, as the paper's limitation
+//! section calls for).
+//!
+//!     cargo bench --bench batcher
+
+use std::sync::Arc;
+use wisparse::model::sampler::Sampling;
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::report::csv::{f, write_csv};
+use wisparse::server::batcher::BatcherCfg;
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+use wisparse::util::timer::Stopwatch;
+
+fn main() {
+    let model = Arc::new(Model::synthetic(
+        ModelConfig::preset("llama-micro").unwrap(),
+        77,
+    ));
+    // A ~50%-density magnitude sparsifier (exact plan irrelevant here).
+    let sp = Arc::new(ScoredSparsifier::new(
+        "teal",
+        (0..model.cfg.n_layers * 7)
+            .map(|_| ScoredLayer { ga: None, tau: 0.45 })
+            .collect(),
+    ));
+    let n_requests = 24;
+    let max_new = 24;
+    let mut csv = Vec::new();
+    println!("== continuous batching: {n_requests} requests x {max_new} new tokens ==");
+    for max_batch in [1usize, 2, 4, 8, 16] {
+        let engine = Arc::new(Engine::new(
+            Arc::clone(&model),
+            sp.clone(),
+            EngineCfg::default(),
+        ));
+        let coord = Coordinator::new(
+            engine,
+            CoordinatorCfg {
+                batcher: BatcherCfg {
+                    max_batch,
+                    max_queue: 256,
+                },
+            },
+        );
+        let sched = Arc::clone(&coord);
+        let handle = std::thread::spawn(move || sched.run_scheduler());
+        let sw = Stopwatch::start();
+        let rxs: Vec<_> = (0..n_requests)
+            .map(|i| {
+                coord
+                    .submit(&format!("prompt number {i} padding"), max_new, Sampling::Greedy)
+                    .expect("submit")
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().expect("completion");
+        }
+        let wall = sw.elapsed_secs();
+        let tput = (n_requests * max_new) as f64 / wall;
+        let m = coord.metrics.lock().unwrap();
+        println!(
+            "batch {max_batch:>2}: {tput:>8.1} tok/s  queue p50 {:>7.1} ms  total p50 {:>8.1} ms",
+            m.queue_ms.percentile(0.5),
+            m.total_ms.percentile(0.5),
+        );
+        csv.push(vec![
+            max_batch.to_string(),
+            f(tput),
+            f(m.queue_ms.percentile(0.5)),
+            f(m.total_ms.percentile(0.5)),
+        ]);
+        drop(m);
+        coord.shutdown();
+        handle.join().unwrap();
+    }
+    write_csv(
+        std::path::Path::new("results/bench_batcher.csv"),
+        &["max_batch", "tokens_per_s", "queue_p50_ms", "total_p50_ms"],
+        &csv,
+    )
+    .expect("csv");
+    println!("-> results/bench_batcher.csv");
+}

@@ -1,0 +1,77 @@
+//! Calibration-cost benchmark: wall-clock of each pipeline stage (capture,
+//! Alg. 3 coarse, Alg. 4 fine, Alg. 2 alpha) — the "setup cost" the paper's
+//! limitation section promises to reduce. Run on the nano profile so the
+//! bench stays fast; ratios between stages are the interesting part.
+//!
+//!     cargo bench --bench calibration
+
+use wisparse::calib::{CalibSet, ModelCalib};
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::report::csv::{f, write_csv};
+use wisparse::sparsity::alpha_search::{search_alphas_into_plan, AlphaSearchCfg};
+use wisparse::sparsity::evo::{evolutionary_block_allocation, EvoCfg};
+use wisparse::sparsity::greedy::{greedy_layer_allocation, GreedyCfg};
+use wisparse::sparsity::plan::SparsityPlan;
+use wisparse::util::timer::Stopwatch;
+
+fn main() {
+    let model = Model::synthetic(ModelConfig::preset("nano").unwrap(), 55);
+    let calib_set = CalibSet::synthetic(4, 48, model.cfg.vocab_size, 57);
+    let mut csv = Vec::new();
+
+    let sw = Stopwatch::start();
+    let calib = ModelCalib::collect(&model, &calib_set);
+    let t_capture = sw.elapsed_ms();
+    println!("capture: {t_capture:.1} ms");
+    csv.push(vec!["capture".into(), f(t_capture)]);
+
+    let sw = Stopwatch::start();
+    let evo_cfg = EvoCfg {
+        generations: 10,
+        offspring: 8,
+        eps: 0.05,
+        ..EvoCfg::default()
+    };
+    let (blocks, _) = evolutionary_block_allocation(&model, &calib, 0.5, &evo_cfg);
+    let t_coarse = sw.elapsed_ms();
+    println!(
+        "coarse (Alg 3, {} gens x {} offspring): {t_coarse:.1} ms",
+        evo_cfg.generations, evo_cfg.offspring
+    );
+    csv.push(vec!["coarse_evo".into(), f(t_coarse)]);
+
+    let sw = Stopwatch::start();
+    let greedy_cfg = GreedyCfg {
+        step: 0.1,
+        ..GreedyCfg::default()
+    };
+    for b in 0..model.cfg.n_layers {
+        let _ = greedy_layer_allocation(&model, b, &calib.blocks[b], blocks[b], &greedy_cfg);
+    }
+    let t_fine = sw.elapsed_ms();
+    println!("fine (Alg 4, all blocks): {t_fine:.1} ms");
+    csv.push(vec!["fine_greedy".into(), f(t_fine)]);
+
+    let sw = Stopwatch::start();
+    let mut plan = SparsityPlan::uniform(&model.cfg, "bench", 0.5);
+    let alpha_cfg = AlphaSearchCfg {
+        n_grid: 10,
+        ..AlphaSearchCfg::default()
+    };
+    search_alphas_into_plan(&model, &calib.blocks, &mut plan, &alpha_cfg);
+    let t_alpha = sw.elapsed_ms();
+    println!("alpha (Alg 2, {} grid pts): {t_alpha:.1} ms", alpha_cfg.n_grid);
+    csv.push(vec!["alpha_grid".into(), f(t_alpha)]);
+
+    let total = t_capture + t_coarse + t_fine + t_alpha;
+    println!("total calibration: {total:.1} ms (nano profile)");
+    csv.push(vec!["total".into(), f(total)]);
+    write_csv(
+        std::path::Path::new("results/bench_calibration.csv"),
+        &["stage", "ms"],
+        &csv,
+    )
+    .expect("csv");
+    println!("-> results/bench_calibration.csv");
+}

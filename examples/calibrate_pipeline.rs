@@ -1,0 +1,114 @@
+//! Walkthrough of the full WiSparse calibration pipeline (Alg. 1), printing
+//! what each stage decides — the "how does the search actually behave"
+//! example.
+//!
+//!     cargo run --release --example calibrate_pipeline
+
+use std::path::Path;
+use wisparse::calib::{CalibSet, ModelCalib};
+use wisparse::eval::kl::mean_token_kl;
+use wisparse::model::layers::{LayerId, LayerKind};
+use wisparse::model::transformer::{ForwardStats, Model};
+use wisparse::model::ModelConfig;
+use wisparse::sparsity::alpha_search::{search_block_alphas, AlphaSearchCfg};
+use wisparse::sparsity::evo::{allocation_loss, evolutionary_block_allocation, EvoCfg};
+use wisparse::sparsity::greedy::{greedy_layer_allocation, GreedyCfg};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts/models/llama-micro");
+    let model = if dir.join("weights.bin").exists() {
+        Model::load_dir(dir)?
+    } else {
+        println!("(synthetic model — run `make artifacts` for the real one)");
+        Model::synthetic(ModelConfig::preset("llama-micro")?, 9)
+    };
+    let calib_set = CalibSet::load(Path::new("artifacts/data/llama-micro/calib.json"))
+        .unwrap_or_else(|_| CalibSet::synthetic(6, 64, 256, 11));
+    println!("== capture ==");
+    let calib = ModelCalib::collect(&model, &calib_set.subset(6, 64));
+    println!(
+        "captured {} blocks x {} calib tokens",
+        calib.blocks.len(),
+        calib.blocks[0].inputs.shape[0]
+    );
+
+    println!("\n== stage 1: coarse (evolutionary block allocation, Alg. 3) ==");
+    let target = 0.5;
+    let uniform_loss = allocation_loss(&model, &calib, &vec![target; model.cfg.n_layers], 1.0);
+    println!("uniform 50% loss (Eq. 8 KL): {uniform_loss:.5}");
+    let evo_cfg = EvoCfg {
+        generations: 8,
+        offspring: 8,
+        eps: 0.04,
+        ..EvoCfg::default()
+    };
+    let (blocks, trace) = evolutionary_block_allocation(&model, &calib, target, &evo_cfg);
+    for t in trace.iter().step_by(2) {
+        println!("  gen {:>3}: best KL {:.5}", t.generation, t.best_loss);
+    }
+    println!(
+        "block sparsities: {:?}",
+        blocks.iter().map(|p| format!("{:.2}", p)).collect::<Vec<_>>()
+    );
+
+    println!("\n== stage 2: fine (greedy intra-block allocation, Alg. 4) ==");
+    let greedy_cfg = GreedyCfg {
+        step: 0.1,
+        ..GreedyCfg::default()
+    };
+    let per_kind = greedy_layer_allocation(&model, 0, &calib.blocks[0], blocks[0], &greedy_cfg);
+    for (i, &kind) in LayerKind::ALL.iter().enumerate() {
+        println!("  block 0 {:<10} -> {:.2}", kind.name(), per_kind[i]);
+    }
+
+    println!("\n== stage 3: weight exponents (Alg. 2 grid search) ==");
+    let alpha_cfg = AlphaSearchCfg {
+        n_grid: 10,
+        ..AlphaSearchCfg::default()
+    };
+    let keep: [f64; 7] = std::array::from_fn(|i| 1.0 - per_kind[i]);
+    let result = search_block_alphas(&model, 0, &calib.blocks[0], &keep, &alpha_cfg);
+    for (i, &kind) in LayerKind::ALL.iter().enumerate() {
+        println!("  block 0 {:<10} alpha* = {:.2}", kind.name(), result.alphas[i]);
+    }
+    println!("  block 0 output MSE at optimum: {:.4e}", result.mse);
+
+    println!("\n== end-to-end check ==");
+    let plan = wisparse::sparsity::allocator::calibrate_wisparse(
+        &model,
+        &calib,
+        target,
+        &wisparse::sparsity::allocator::WiSparseCfg {
+            evo: evo_cfg,
+            greedy: greedy_cfg,
+            alpha: alpha_cfg,
+        },
+        wisparse::sparsity::allocator::PipelineStages::FULL,
+    );
+    let sp = wisparse::sparsity::methods::ScoredSparsifier::from_plan("wisparse", &model, &plan);
+    let mut stats = ForwardStats::default();
+    let mut kl = 0.0;
+    for (seq, dense_logits) in calib.seqs.iter().zip(&calib.dense_logits) {
+        let sparse_logits = model.forward_seq(seq, &sp, &mut stats, None);
+        kl += mean_token_kl(dense_logits, &sparse_logits);
+    }
+    println!(
+        "final plan: effective sparsity {:.3}, achieved density {:.3}, calib KL {:.5} (uniform was {:.5})",
+        plan.effective_sparsity(&model.cfg),
+        stats.density(),
+        kl / calib.seqs.len() as f64,
+        uniform_loss
+    );
+    // Peek at two plan entries.
+    for id in [LayerId::new(0, LayerKind::Up), LayerId::new(1, LayerKind::O)] {
+        let lp = plan.layer(id);
+        println!(
+            "  {}: sparsity {:.2}, alpha {:.2}, tau {:.4}",
+            id.key(),
+            lp.sparsity,
+            lp.alpha,
+            lp.tau
+        );
+    }
+    Ok(())
+}

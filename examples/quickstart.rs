@@ -1,0 +1,72 @@
+//! Quickstart: calibrate a WiSparse plan and compare dense vs sparse
+//! generation on one model.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses trained artifacts when present (`make artifacts`), otherwise falls
+//! back to a synthetic model so the example always runs.
+
+use std::path::Path;
+use std::sync::Arc;
+use wisparse::calib::{CalibSet, ModelCalib};
+use wisparse::model::sampler::Sampling;
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::sparsity::allocator::{calibrate_wisparse, PipelineStages, WiSparseCfg};
+use wisparse::sparsity::evo::EvoCfg;
+use wisparse::sparsity::greedy::GreedyCfg;
+use wisparse::sparsity::alpha_search::AlphaSearchCfg;
+use wisparse::sparsity::methods::ScoredSparsifier;
+use wisparse::sparsity::Dense;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load a model (trained if available).
+    let dir = Path::new("artifacts/models/llama-micro");
+    let model = if dir.join("weights.bin").exists() {
+        println!("loading trained llama-micro from {}", dir.display());
+        Arc::new(Model::load_dir(dir)?)
+    } else {
+        println!("no artifacts — using a synthetic model (run `make artifacts` for real output)");
+        Arc::new(Model::synthetic(ModelConfig::preset("llama-micro")?, 1))
+    };
+
+    // 2. Calibrate a 50% WiSparse plan (quick budget).
+    let calib_path = Path::new("artifacts/data/llama-micro/calib.json");
+    let calib_set = CalibSet::load(calib_path)
+        .unwrap_or_else(|_| CalibSet::synthetic(6, 64, model.cfg.vocab_size, 3));
+    println!("collecting calibration activations...");
+    let calib = ModelCalib::collect(&model, &calib_set.subset(6, 64));
+    let cfg = WiSparseCfg {
+        evo: EvoCfg { generations: 5, offspring: 8, eps: 0.05, ..EvoCfg::default() },
+        greedy: GreedyCfg { step: 0.1, ..GreedyCfg::default() },
+        alpha: AlphaSearchCfg { n_grid: 8, ..AlphaSearchCfg::default() },
+    };
+    println!("running the WiSparse pipeline (Alg. 1) at 50% sparsity...");
+    let plan = calibrate_wisparse(&model, &calib, 0.5, &cfg, PipelineStages::FULL);
+    println!(
+        "plan: effective sparsity {:.3}, block allocation {:?}",
+        plan.effective_sparsity(&model.cfg),
+        plan.block_sparsity
+            .iter()
+            .map(|p| (p * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+
+    // 3. Generate with both engines.
+    let sparse = Arc::new(ScoredSparsifier::from_plan("wisparse", &model, &plan));
+    let dense_engine = Engine::new(Arc::clone(&model), Arc::new(Dense), EngineCfg::default());
+    let sparse_engine = Engine::new(Arc::clone(&model), sparse, EngineCfg::default());
+    for prompt in ["12+34=", "the capital of avaria is ", "rev(abc)="] {
+        let (d_text, d_stats) = dense_engine.run_to_completion(prompt, 12, Sampling::Greedy);
+        let (s_text, s_stats) = sparse_engine.run_to_completion(prompt, 12, Sampling::Greedy);
+        println!(
+            "prompt {prompt:?}\n  dense   (density {:.2}): {:?}\n  wisparse(density {:.2}): {:?}",
+            d_stats.density(),
+            d_text,
+            s_stats.density(),
+            s_text
+        );
+    }
+    Ok(())
+}

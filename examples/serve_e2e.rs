@@ -1,0 +1,163 @@
+//! End-to-end serving driver (DESIGN.md §5, the required E2E example):
+//! starts the full coordinator stack — HTTP front end, FIFO batcher,
+//! continuous-batching scheduler, sparse engine — fires a concurrent
+//! workload of real task prompts over TCP, and reports latency percentiles
+//! and throughput, dense vs WiSparse-50%.
+//!
+//!     cargo run --release --example serve_e2e
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::Arc;
+use wisparse::calib::{CalibSet, ModelCalib};
+use wisparse::data::tasks::full_suite;
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::server::batcher::BatcherCfg;
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::sparsity::allocator::{calibrate_wisparse, PipelineStages, WiSparseCfg};
+use wisparse::sparsity::evo::EvoCfg;
+use wisparse::sparsity::greedy::GreedyCfg;
+use wisparse::sparsity::alpha_search::AlphaSearchCfg;
+use wisparse::sparsity::methods::ScoredSparsifier;
+use wisparse::sparsity::{Dense, Sparsifier};
+use wisparse::util::stats::quantile;
+
+fn http_post(addr: &str, path: &str, body: &str) -> anyhow::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap_or("0").parse()?;
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    reader.read_exact(&mut buf)?;
+    Ok((status, String::from_utf8_lossy(&buf).into_owned()))
+}
+
+fn run_workload(name: &str, model: Arc<Model>, sp: Arc<dyn Sparsifier>) -> anyhow::Result<f64> {
+    let engine = Arc::new(Engine::new(model, sp, EngineCfg::default()));
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 8,
+                max_queue: 512,
+            },
+        },
+    );
+    let sched = Arc::clone(&coord);
+    let sched_handle = std::thread::spawn(move || sched.run_scheduler());
+
+    // HTTP front end on an ephemeral port.
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let http_coord = Arc::clone(&coord);
+    std::thread::spawn(move || {
+        let _ = wisparse::server::http::serve(http_coord, "127.0.0.1:0", move |a| {
+            let _ = addr_tx.send(a);
+        });
+    });
+    let addr = addr_rx.recv()?.to_string();
+    println!("[{name}] listening on {addr}");
+
+    // Workload: real task prompts, 4 concurrent clients x 12 requests.
+    let suite = full_suite(12, 99);
+    let prompts: Vec<String> = suite
+        .iter()
+        .flat_map(|t| t.items.iter().map(|i| i.prompt.clone()))
+        .take(48)
+        .collect();
+    let t0 = std::time::Instant::now();
+    let latencies: Vec<f64> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for chunk in prompts.chunks(prompts.len().div_ceil(4)) {
+            let addr = addr.clone();
+            handles.push(s.spawn(move || {
+                let mut lats = Vec::new();
+                for p in chunk {
+                    let body = format!(r#"{{"prompt": {:?}, "max_new": 16}}"#, p);
+                    let t = std::time::Instant::now();
+                    let (status, _resp) = http_post(&addr, "/generate", &body).expect("request");
+                    assert_eq!(status, 200, "bad status");
+                    lats.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+                lats
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let total_tokens = 16.0 * prompts.len() as f64;
+    let tput = total_tokens / wall;
+    let (status, metrics) = http_post(&addr, "/generate", "not json")?;
+    assert_eq!(status, 400, "error handling regressed: {metrics}");
+    let m = coord.metrics.lock().unwrap();
+    println!(
+        "[{name}] {} requests, wall {:.2}s -> {:.1} generated tok/s, density {:.3}",
+        prompts.len(),
+        wall,
+        tput,
+        m.density()
+    );
+    println!(
+        "[{name}] latency p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",
+        quantile(&latencies, 0.5),
+        quantile(&latencies, 0.9),
+        quantile(&latencies, 0.99)
+    );
+    drop(m);
+    coord.shutdown();
+    // Unblock the accept loop with a dummy connection so the server thread
+    // can observe the shutdown flag, then stop the scheduler.
+    let _ = TcpStream::connect(&addr);
+    sched_handle.join().ok();
+    Ok(tput)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts/models/llama-micro");
+    let model = if dir.join("weights.bin").exists() {
+        Arc::new(Model::load_dir(dir)?)
+    } else {
+        println!("(synthetic model — run `make artifacts` for the real one)");
+        Arc::new(Model::synthetic(ModelConfig::preset("llama-micro")?, 5))
+    };
+    let calib_set = CalibSet::load(Path::new("artifacts/data/llama-micro/calib.json"))
+        .unwrap_or_else(|_| CalibSet::synthetic(6, 64, 256, 3));
+    let calib = ModelCalib::collect(&model, &calib_set.subset(6, 64));
+    let cfg = WiSparseCfg {
+        evo: EvoCfg { generations: 4, offspring: 8, eps: 0.05, ..EvoCfg::default() },
+        greedy: GreedyCfg { step: 0.1, ..GreedyCfg::default() },
+        alpha: AlphaSearchCfg { n_grid: 6, ..AlphaSearchCfg::default() },
+    };
+    let plan = calibrate_wisparse(&model, &calib, 0.5, &cfg, PipelineStages::FULL);
+    let sparse: Arc<dyn Sparsifier> =
+        Arc::new(ScoredSparsifier::from_plan("wisparse", &model, &plan));
+
+    let dense_tput = run_workload("dense", Arc::clone(&model), Arc::new(Dense))?;
+    let sparse_tput = run_workload("wisparse-50", model, sparse)?;
+    println!(
+        "\nend-to-end speedup at 50% sparsity: {:.1}% (paper: 17.2-21.4%)",
+        (sparse_tput / dense_tput - 1.0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time Python: JAX model (L2), Pallas kernels (L1), trainer, AOT.
+
+Nothing here runs on the request path — `make artifacts` invokes this
+package once, and the Rust coordinator serves from the exported artifacts.
+"""

@@ -1,0 +1,112 @@
+"""AOT export: lower the JAX model (dense + wisparse variants) to HLO text
+for the Rust PJRT runtime, plus the parameter manifest the runtime feeds
+literals by.
+
+HLO *text* is the interchange format — jax >= 0.5 serializes protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --models llama-micro,... --models-dir ../artifacts/models \
+        --seq-len 64
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import LAYER_KINDS, forward, make_config, param_order, param_shape
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sparse_param_order(cfg):
+    """`sparse.<block>.<kind>.{ga,tau}` in deterministic order."""
+    names = []
+    for b in range(cfg["n_layers"]):
+        for kind in LAYER_KINDS:
+            names.append(f"sparse.{b}.{kind}.ga")
+            names.append(f"sparse.{b}.{kind}.tau")
+    return names
+
+
+def sparse_param_shape(cfg, name):
+    if name.endswith(".tau"):
+        return (1,)
+    kind = name.split(".")[2]
+    return (cfg["ffn_dim"],) if kind == "down_proj" else (cfg["d_model"],)
+
+
+def export_variant(name, cfg, variant, seq_len, out_dir):
+    weight_names = param_order(cfg)
+    sparse_names = sparse_param_order(cfg) if variant == "wisparse" else []
+
+    def fn(tokens, *flat):
+        params = dict(zip(weight_names, flat[: len(weight_names)]))
+        sparse = (
+            dict(zip(sparse_names, flat[len(weight_names):])) if sparse_names else None
+        )
+        # use_pallas=True: the L1 kernel lowers (interpret mode) into the
+        # same HLO module, so the export exercises the full 3-layer stack.
+        return (forward(params, tokens, cfg, sparse, use_pallas=True),)
+
+    tok_spec = jax.ShapeDtypeStruct((seq_len,), jnp.int32)
+    specs = [tok_spec]
+    for n in weight_names:
+        specs.append(jax.ShapeDtypeStruct(param_shape(cfg, n), jnp.float32))
+    for n in sparse_names:
+        specs.append(jax.ShapeDtypeStruct(sparse_param_shape(cfg, n), jnp.float32))
+
+    lowered = jax.jit(fn).lower(*specs)
+    hlo = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{variant}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    manifest = {
+        "model": name,
+        "variant": variant,
+        "seq_len": seq_len,
+        "vocab_size": cfg["vocab_size"],
+        "params": [
+            {"name": n, "shape": list(param_shape(cfg, n))} for n in weight_names
+        ]
+        + [
+            {"name": n, "shape": list(sparse_param_shape(cfg, n))}
+            for n in sparse_names
+        ],
+    }
+    with open(os.path.join(out_dir, f"{variant}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[{name}] exported {variant}: {len(hlo)} chars of HLO", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="llama-micro,mistral-micro,qwen-micro")
+    ap.add_argument("--models-dir", default="../artifacts/models")
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--variants", default="dense,wisparse")
+    args = ap.parse_args()
+
+    for name in args.models.split(","):
+        name = name.strip()
+        cfg = make_config(name)
+        out_dir = os.path.join(args.models_dir, name)
+        os.makedirs(out_dir, exist_ok=True)
+        for variant in args.variants.split(","):
+            export_variant(name, cfg, variant.strip(), args.seq_len, out_dir)
+
+
+if __name__ == "__main__":
+    main()

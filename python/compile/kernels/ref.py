@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the WiSparse scored sparse matmul.
+
+This is the correctness contract for the Pallas kernel (Eq. 2-5 of the
+paper): mask channels whose weight-aware score `|x_i| * ga_i` falls below
+`tau`, then project with the original weights.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_scores(x, ga):
+    """Weight-aware importance scores s = |x| * ga, ga = g^alpha (Eq. 4)."""
+    return jnp.abs(x) * ga
+
+
+def ref_mask(x, ga, tau):
+    """Binary keep-mask m_i = 1[s_i >= tau] (Eq. 5)."""
+    return (ref_scores(x, ga) >= tau).astype(x.dtype)
+
+
+def ref_wisparse_matmul(x, w, ga, tau):
+    """y = (x ⊙ m) W^T.
+
+    Args:
+      x:  [B, N] activations.
+      w:  [M, N] weights (output-major, PyTorch/JAX linear convention).
+      ga: [N] precomputed g^alpha (>= 0).
+      tau: scalar threshold.
+
+    Returns:
+      [B, M] projections.
+    """
+    masked = x * ref_mask(x, ga, tau)
+    return masked @ w.T

@@ -1,0 +1,107 @@
+"""Layer-1 Pallas kernel: weight-aware scored sparse matmul.
+
+TPU adaptation of TEAL's Triton gather-GEMV (DESIGN.md §6): scoring and
+masking are a VPU elementwise pass over the activation tile resident in
+VMEM; the contraction feeds the MXU with dense tiles (TPU has no lane
+compaction), so sparsity is realized as masked values — the *scheduling*
+win on TPU comes from BlockSpec tiling that keeps each (x-tile, w-tile)
+pair in VMEM, while the arithmetic win is measured on the Rust engine.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO and runs (and AOT-exports)
+on CPU. The BlockSpec structure is still the real TPU schedule; DESIGN.md
+§7 estimates VMEM/MXU numbers from it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, ga_ref, tau_ref, o_ref):
+    """One (B-tile, M-tile) grid cell.
+
+    x_ref:  [bB, N]  activation tile (VMEM)
+    w_ref:  [bM, N]  weight tile (VMEM)
+    ga_ref: [1, N]   precomputed g^alpha
+    tau_ref:[1, 1]   threshold
+    o_ref:  [bB, bM] output tile
+    """
+    x = x_ref[...]
+    ga = ga_ref[...]
+    tau = tau_ref[0, 0]
+    # VPU pass: weight-aware score + mask (Eq. 4-5). One abs, one mul, one
+    # compare per element — the paper's "negligible overhead".
+    keep = (jnp.abs(x) * ga) >= tau
+    masked = jnp.where(keep, x, jnp.zeros_like(x))
+    # MXU pass: dense tile contraction on the masked activations.
+    o_ref[...] = jax.lax.dot_general(
+        masked,
+        w_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pick_tile(dim, target):
+    """Largest divisor of `dim` that is <= target (keeps BlockSpec exact)."""
+    t = min(dim, target)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m"))
+def wisparse_matmul_pallas(x, w, ga, tau, *, block_b=8, block_m=128):
+    """Pallas-tiled y = (x ⊙ m) W^T with m from the weight-aware score.
+
+    Args:
+      x:  [B, N] f32 activations.
+      w:  [M, N] f32 weights.
+      ga: [N] f32 precomputed g^alpha.
+      tau: scalar f32 threshold.
+      block_b / block_m: tile shape targets (clamped to divisors).
+
+    Returns: [B, M] f32.
+    """
+    b_dim, n = x.shape
+    m_dim, n2 = w.shape
+    assert n == n2, f"x cols {n} != w cols {n2}"
+    assert ga.shape == (n,), ga.shape
+    bb = _pick_tile(b_dim, block_b)
+    bm = _pick_tile(m_dim, block_m)
+    ga2 = ga.reshape(1, n)
+    tau2 = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+    grid = (b_dim // bb, m_dim // bm)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b_dim, m_dim), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, ga2, tau2)
+
+
+def wisparse_matmul(x, w, ga, tau):
+    """Public entry: default tile sizes."""
+    return wisparse_matmul_pallas(x, w, ga, tau)
+
+
+def vmem_footprint_bytes(n, block_b=8, block_m=128, dtype_bytes=4):
+    """Estimated VMEM working set of one grid cell (double-buffered):
+    x tile + w tile + ga + out tile, x2 for pipelining. Used by DESIGN.md §7
+    to check tiles fit the ~16 MiB VMEM budget of a TPU core.
+    """
+    x_tile = block_b * n * dtype_bytes
+    w_tile = block_m * n * dtype_bytes
+    ga_tile = n * dtype_bytes
+    out_tile = block_b * block_m * dtype_bytes
+    return 2 * (x_tile + w_tile) + ga_tile + out_tile

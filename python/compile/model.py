@@ -1,0 +1,160 @@
+"""Layer-2: the micro-Llama forward pass in JAX.
+
+Numerics mirror `rust/src/model/transformer.rs` exactly (RMSNorm, half-split
+RoPE, causal MHA with 1/sqrt(hd) scaling, SwiGLU) so the PJRT
+cross-validation in `rust/src/runtime/validate.rs` can assert agreement.
+
+Two variants share the code path:
+  * dense: every projection is a plain matmul;
+  * wisparse: every *block* projection goes through the Layer-1 Pallas
+    kernel with per-layer (ga, tau) parameters (Eq. 4-5).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.wisparse_matmul import wisparse_matmul
+from compile.presets import config_dict
+
+LAYER_KINDS = ("q_proj", "k_proj", "v_proj", "o_proj", "gate_proj", "up_proj", "down_proj")
+
+# Weight-tensor naming (must match rust/src/model/weights.rs conventions).
+_ATTN_SHORT = {"q_proj": "q", "k_proj": "k", "v_proj": "v", "o_proj": "o"}
+_MLP_SHORT = {"gate_proj": "gate", "up_proj": "up", "down_proj": "down"}
+
+
+def weight_name(block, kind):
+    if kind in _ATTN_SHORT:
+        return f"blocks.{block}.attn.w{_ATTN_SHORT[kind]}.weight"
+    return f"blocks.{block}.mlp.w_{_MLP_SHORT[kind]}.weight"
+
+
+def param_order(cfg):
+    """Deterministic parameter order used by the trainer, the AOT export
+    and the Rust manifest loader."""
+    names = ["embed.weight"]
+    for b in range(cfg["n_layers"]):
+        names.append(f"blocks.{b}.attn_norm.weight")
+        for kind in ("q_proj", "k_proj", "v_proj", "o_proj"):
+            names.append(weight_name(b, kind))
+        names.append(f"blocks.{b}.mlp_norm.weight")
+        for kind in ("gate_proj", "up_proj", "down_proj"):
+            names.append(weight_name(b, kind))
+    names.append("final_norm.weight")
+    names.append("lm_head.weight")
+    return names
+
+
+def param_shape(cfg, name):
+    d, f, v = cfg["d_model"], cfg["ffn_dim"], cfg["vocab_size"]
+    if name in ("embed.weight", "lm_head.weight"):
+        return (v, d)
+    if name.endswith("norm.weight"):
+        return (d,)
+    kind = name.split(".")[-2]
+    if kind in ("wq", "wk", "wv", "wo"):
+        return (d, d)
+    if kind in ("w_gate", "w_up"):
+        return (f, d)
+    if kind == "w_down":
+        return (d, f)
+    raise ValueError(f"unknown param {name}")
+
+
+def init_params(cfg, key):
+    """Gaussian init matching Model::synthetic's scales."""
+    params = {}
+    d = cfg["d_model"]
+    std = 0.7 / (d ** 0.5)
+    for name in param_order(cfg):
+        shape = param_shape(cfg, name)
+        key, sub = jax.random.split(key)
+        if name.endswith("norm.weight"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name in ("embed.weight", "lm_head.weight"):
+            params[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope(x, positions, base):
+    """Half-split rotary embedding on [T, H, hd] (matches rope_inplace)."""
+    t, h, hd = x.shape
+    half = hd // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    freq = 1.0 / (base ** (2.0 * i / hd))  # [half]
+    angle = positions[:, None].astype(jnp.float32) * freq[None, :]  # [T, half]
+    sin = jnp.sin(angle)[:, None, :]
+    cos = jnp.cos(angle)[:, None, :]
+    a, b = x[..., :half], x[..., half:]
+    return jnp.concatenate([a * cos - b * sin, a * sin + b * cos], axis=-1)
+
+
+def _project(x, w, sparse_params, block, kind, use_pallas):
+    """One linear projection, dense or through the L1 kernel."""
+    if sparse_params is None:
+        return x @ w.T
+    ga = sparse_params[f"sparse.{block}.{kind}.ga"]
+    tau = sparse_params[f"sparse.{block}.{kind}.tau"][0]
+    if use_pallas:
+        return wisparse_matmul(x, w, ga, tau)
+    # jnp fallback (identical math; used inside jitted training evals).
+    keep = (jnp.abs(x) * ga[None, :]) >= tau
+    return jnp.where(keep, x, 0.0) @ w.T
+
+
+def forward(params, tokens, cfg, sparse_params=None, use_pallas=True):
+    """Full-sequence causal forward. tokens: int32 [T] -> logits [T, vocab].
+
+    `sparse_params`: dict of `sparse.<block>.<kind>.{ga,tau}` arrays; None
+    runs dense. Masking applies to all positions (the calibration/eval
+    convention; the serving-time prefill policy lives in the Rust engine).
+    """
+    t = tokens.shape[0]
+    d = cfg["d_model"]
+    h = cfg["n_heads"]
+    hd = d // h
+    eps = cfg["rmsnorm_eps"]
+    positions = jnp.arange(t)
+    x = params["embed.weight"][tokens]  # [T, d]
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    neg = jnp.asarray(-1e30, jnp.float32)
+    for b in range(cfg["n_layers"]):
+        # --- attention ---
+        xn = rmsnorm(x, params[f"blocks.{b}.attn_norm.weight"], eps)
+        q = _project(xn, params[weight_name(b, "q_proj")], sparse_params, b, "q_proj", use_pallas)
+        k = _project(xn, params[weight_name(b, "k_proj")], sparse_params, b, "k_proj", use_pallas)
+        v = _project(xn, params[weight_name(b, "v_proj")], sparse_params, b, "v_proj", use_pallas)
+        q = rope(q.reshape(t, h, hd), positions, cfg["rope_base"])
+        k = rope(k.reshape(t, h, hd), positions, cfg["rope_base"])
+        v = v.reshape(t, h, hd)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / (hd ** 0.5)
+        scores = jnp.where(causal[None, :, :] > 0, scores, neg)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", probs, v).reshape(t, d)
+        o = _project(attn, params[weight_name(b, "o_proj")], sparse_params, b, "o_proj", use_pallas)
+        x = x + o
+        # --- SwiGLU MLP ---
+        xn = rmsnorm(x, params[f"blocks.{b}.mlp_norm.weight"], eps)
+        g = _project(xn, params[weight_name(b, "gate_proj")], sparse_params, b, "gate_proj", use_pallas)
+        u = _project(xn, params[weight_name(b, "up_proj")], sparse_params, b, "up_proj", use_pallas)
+        hidden = jax.nn.silu(g) * u
+        dn = _project(hidden, params[weight_name(b, "down_proj")], sparse_params, b, "down_proj", use_pallas)
+        x = x + dn
+    x = rmsnorm(x, params["final_norm.weight"], eps)
+    return x @ params["lm_head.weight"].T
+
+
+def forward_batch(params, tokens, cfg):
+    """vmapped dense forward for training. tokens: [B, T] -> [B, T, vocab]."""
+    return jax.vmap(lambda seq: forward(params, seq, cfg, None, use_pallas=False))(tokens)
+
+
+def make_config(name):
+    return config_dict(name)

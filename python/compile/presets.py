@@ -1,0 +1,33 @@
+"""Model presets — MUST mirror `rust/src/model/config.rs::ModelConfig::preset`.
+
+The Rust side owns the definition; `python/tests/test_presets.py` parses the
+Rust source to assert the two tables stay in sync.
+"""
+
+PRESETS = {
+    # name: (d_model, n_layers, n_heads, ffn_dim)
+    "llama-micro": (128, 8, 4, 352),
+    "mistral-micro": (160, 6, 4, 432),
+    "qwen-micro": (96, 10, 4, 256),
+    "nano": (32, 2, 2, 64),
+}
+
+VOCAB_SIZE = 256
+MAX_SEQ = 256
+ROPE_BASE = 10000.0
+RMSNORM_EPS = 1e-5
+
+
+def config_dict(name):
+    d, layers, heads, ffn = PRESETS[name]
+    return {
+        "name": name,
+        "vocab_size": VOCAB_SIZE,
+        "d_model": d,
+        "n_layers": layers,
+        "n_heads": heads,
+        "ffn_dim": ffn,
+        "max_seq": MAX_SEQ,
+        "rope_base": ROPE_BASE,
+        "rmsnorm_eps": RMSNORM_EPS,
+    }

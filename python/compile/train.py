@@ -1,0 +1,135 @@
+"""Build-time trainer: fits the micro models on the synthetic corpus written
+by `wisparse gen-data`, then exports config.json + weights.bin (WSPW0001)
+and the training loss curve.
+
+Usage:
+    python -m compile.train --models llama-micro,mistral-micro,qwen-micro \
+        --corpus ../artifacts/data/corpus.txt --out ../artifacts/models \
+        --steps 600
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import forward_batch, init_params, make_config, param_order
+from compile.weights_io import save_weights
+
+
+def load_corpus(path, max_bytes=None):
+    with open(path, "rb") as f:
+        data = f.read()
+    if max_bytes:
+        data = data[:max_bytes]
+    return np.frombuffer(data, dtype=np.uint8).astype(np.int32)
+
+
+def sample_batch(corpus, batch, seq_len, rng):
+    starts = rng.integers(0, len(corpus) - seq_len - 1, size=batch)
+    x = np.stack([corpus[s : s + seq_len] for s in starts])
+    y = np.stack([corpus[s + 1 : s + seq_len + 1] for s in starts])
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def loss_fn(params, x, y, cfg):
+    logits = forward_batch(params, x, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1).squeeze(-1)
+    return jnp.mean(nll)
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vh_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+
+    def upd(p, m_, v_):
+        mh = m_ * mh_scale
+        vh = v_ * vh_scale
+        return p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total, base=3e-3, warmup=40):
+    warm = jnp.minimum(step / warmup, 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    return base * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+
+
+def train_model(name, corpus, out_dir, steps, batch, seq_len, seed, log_every=50):
+    cfg = make_config(name)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    opt = adamw_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step_fn(params, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y, cfg)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    curve = []
+    t0 = time.time()
+    for step in range(steps):
+        x, y = sample_batch(corpus, batch, seq_len, rng)
+        lr = cosine_lr(jnp.asarray(step, jnp.float32), steps)
+        params, opt, loss = step_fn(params, opt, x, y, lr)
+        if step % log_every == 0 or step == steps - 1:
+            loss_v = float(loss)
+            curve.append((step, loss_v))
+            print(f"[{name}] step {step:4d} loss {loss_v:.4f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    model_dir = os.path.join(out_dir, name)
+    os.makedirs(model_dir, exist_ok=True)
+    with open(os.path.join(model_dir, "config.json"), "w") as f:
+        json.dump(cfg, f, indent=2)
+    tensors = {k: np.asarray(v) for k, v in params.items()}
+    # Order check: every expected parameter present, no extras.
+    assert set(tensors) == set(param_order(cfg))
+    save_weights(os.path.join(model_dir, "weights.bin"), tensors)
+    with open(os.path.join(model_dir, "loss_curve.csv"), "w") as f:
+        f.write("step,loss\n")
+        for s, l in curve:
+            f.write(f"{s},{l:.6f}\n")
+    print(f"[{name}] saved to {model_dir} (final loss {curve[-1][1]:.4f})")
+    return curve[-1][1]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="llama-micro,mistral-micro,qwen-micro")
+    ap.add_argument("--corpus", default="../artifacts/data/corpus.txt")
+    ap.add_argument("--out", default="../artifacts/models")
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    corpus = load_corpus(args.corpus)
+    print(f"corpus: {len(corpus)} bytes from {args.corpus}")
+    for i, name in enumerate(args.models.split(",")):
+        train_model(
+            name.strip(), corpus, args.out, args.steps, args.batch,
+            args.seq_len, seed=args.seed + i,
+        )
+
+
+if __name__ == "__main__":
+    main()

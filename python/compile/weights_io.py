@@ -1,0 +1,53 @@
+"""WSPW0001 binary weight format — writer/reader mirroring
+`rust/src/model/weights.rs`. Tensors are sorted by name (the Rust side uses
+a BTreeMap, so saves are name-ordered; we match for byte-identical
+round-trips)."""
+
+import struct
+
+import numpy as np
+
+MAGIC = b"WSPW0001"
+
+
+def save_weights(path, tensors):
+    """tensors: dict name -> np.ndarray (float32, 1-3 dims)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+            assert 1 <= arr.ndim <= 3, f"{name}: ndim {arr.ndim}"
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<I", dim))
+            f.write(arr.tobytes())
+
+
+def load_weights(path):
+    """Returns dict name -> np.ndarray(float32)."""
+    with open(path, "rb") as f:
+        buf = f.read()
+    assert buf[:8] == MAGIC, "bad magic"
+    pos = 8
+    (count,) = struct.unpack_from("<I", buf, pos)
+    pos += 4
+    out = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack_from("<I", buf, pos)
+        pos += 4
+        name = buf[pos : pos + name_len].decode("utf-8")
+        pos += name_len
+        (ndim,) = struct.unpack_from("<I", buf, pos)
+        pos += 4
+        shape = struct.unpack_from(f"<{ndim}I", buf, pos)
+        pos += 4 * ndim
+        numel = int(np.prod(shape))
+        arr = np.frombuffer(buf, dtype="<f4", count=numel, offset=pos).reshape(shape)
+        pos += 4 * numel
+        out[name] = arr.copy()
+    assert pos == len(buf), f"trailing bytes: {len(buf) - pos}"
+    return out

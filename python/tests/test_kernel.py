@@ -1,0 +1,119 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+This is THE core correctness signal for Layer 1 — hypothesis sweeps shapes,
+tile sizes, thresholds and degenerate inputs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ref_mask, ref_wisparse_matmul
+from compile.kernels.wisparse_matmul import (
+    vmem_footprint_bytes,
+    wisparse_matmul,
+    wisparse_matmul_pallas,
+)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), jnp.float32)
+
+
+def assert_close(a, b, atol=1e-5, rtol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+class TestBasics:
+    def test_zero_tau_is_dense(self):
+        x, w = rand((4, 16), 0), rand((8, 16), 1)
+        ga = jnp.ones(16)
+        got = wisparse_matmul(x, w, ga, 0.0)
+        assert_close(got, x @ w.T, atol=1e-4)
+
+    def test_inf_tau_is_zero(self):
+        x, w = rand((4, 16), 2), rand((8, 16), 3)
+        ga = jnp.ones(16)
+        got = wisparse_matmul(x, w, ga, jnp.inf)
+        assert_close(got, jnp.zeros((4, 8)))
+
+    def test_matches_ref_midrange(self):
+        x, w = rand((8, 32), 4), rand((24, 32), 5)
+        ga = jnp.abs(rand((32,), 6)) + 0.05
+        for tau in (0.1, 0.5, 1.5):
+            assert_close(
+                wisparse_matmul(x, w, ga, tau),
+                ref_wisparse_matmul(x, w, ga, tau),
+                atol=1e-4,
+            )
+
+    def test_weight_aware_rescues_small_activations(self):
+        # The Fig-2 phenomenon: tiny activation, huge weight norm.
+        x = jnp.asarray([[0.05, 1.0]], jnp.float32)
+        w = jnp.asarray([[10.0, 0.1]], jnp.float32)
+        ga_act_only = jnp.ones(2)
+        ga_weighted = jnp.asarray([10.0, 0.1])
+        tau = 0.3
+        # Activation-only mask drops channel 0 (score 0.05 < 0.3).
+        m0 = ref_mask(x, ga_act_only, tau)
+        assert m0[0, 0] == 0.0 and m0[0, 1] == 1.0
+        # Weight-aware mask keeps it (score 0.5 >= 0.3).
+        m1 = ref_mask(x, ga_weighted, tau)
+        assert m1[0, 0] == 1.0
+
+    def test_tile_shapes_do_not_change_result(self):
+        x, w = rand((12, 24), 7), rand((36, 24), 8)
+        ga = jnp.abs(rand((24,), 9)) + 0.1
+        ref = ref_wisparse_matmul(x, w, ga, 0.4)
+        for bb, bm in [(1, 1), (3, 9), (4, 36), (12, 12)]:
+            got = wisparse_matmul_pallas(x, w, ga, 0.4, block_b=bb, block_m=bm)
+            assert_close(got, ref, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 9),
+    m=st.integers(1, 40),
+    n=st.integers(1, 48),
+    tau=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**20),
+)
+def test_kernel_matches_ref_hypothesis(b, m, n, tau, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    ga = jnp.asarray(np.abs(rng.normal(size=n)) + 1e-3, jnp.float32)
+    got = wisparse_matmul(x, w, ga, tau)
+    want = ref_wisparse_matmul(x, w, ga, tau)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_mask_sparsity_monotone_in_tau(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(6, 32)), jnp.float32)
+    ga = jnp.asarray(np.abs(rng.normal(size=32)) + 1e-3, jnp.float32)
+    kept = [float(ref_mask(x, ga, t).sum()) for t in (0.0, 0.3, 0.8, 2.0)]
+    assert kept == sorted(kept, reverse=True)
+    assert kept[0] == 6 * 32  # tau=0 keeps everything
+
+
+class TestVmemEstimate:
+    def test_default_tiles_fit_vmem(self):
+        # Largest layer width across presets is ffn 432.
+        assert vmem_footprint_bytes(432) < 16 * 1024 * 1024
+
+    def test_footprint_grows_with_tiles(self):
+        assert vmem_footprint_bytes(256, block_m=256) > vmem_footprint_bytes(
+            256, block_m=64
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_output_dtype(dtype):
+    x, w = rand((2, 8), 10), rand((4, 8), 11)
+    out = wisparse_matmul(x.astype(dtype), w.astype(dtype), jnp.ones(8), 0.1)
+    assert out.dtype == jnp.float32

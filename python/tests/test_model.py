@@ -1,0 +1,93 @@
+"""L2 model tests: shapes, causality, dense/sparse consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import sparse_param_order, sparse_param_shape
+from compile.model import (
+    LAYER_KINDS,
+    forward,
+    init_params,
+    make_config,
+    param_order,
+    param_shape,
+)
+
+
+CFG = make_config("nano")
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+
+
+def toks(xs):
+    return jnp.asarray(xs, jnp.int32)
+
+
+def zero_tau_sparse(cfg):
+    sp = {}
+    for name in sparse_param_order(cfg):
+        shape = sparse_param_shape(cfg, name)
+        sp[name] = jnp.zeros(shape) if name.endswith(".tau") else jnp.ones(shape)
+    return sp
+
+
+class TestForward:
+    def test_shapes(self):
+        logits = forward(PARAMS, toks([1, 2, 3]), CFG)
+        assert logits.shape == (3, CFG["vocab_size"])
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_causality(self):
+        a = forward(PARAMS, toks([1, 2, 3, 4]), CFG)
+        b = forward(PARAMS, toks([1, 2, 3, 200]), CFG)
+        np.testing.assert_allclose(a[:3], b[:3], atol=1e-5)
+        assert float(jnp.abs(a[3] - b[3]).max()) > 1e-6
+
+    def test_context_matters(self):
+        a = forward(PARAMS, toks([1, 2, 3]), CFG)
+        b = forward(PARAMS, toks([9, 2, 3]), CFG)
+        assert float(jnp.abs(a[2] - b[2]).max()) > 1e-6
+
+    def test_sparse_zero_tau_equals_dense(self):
+        dense = forward(PARAMS, toks([5, 6, 7]), CFG, None)
+        sparse = forward(PARAMS, toks([5, 6, 7]), CFG, zero_tau_sparse(CFG))
+        np.testing.assert_allclose(dense, sparse, atol=1e-4)
+
+    def test_sparse_pallas_equals_jnp_fallback(self):
+        sp = zero_tau_sparse(CFG)
+        # Nonzero taus so masking actually happens.
+        for name in list(sp):
+            if name.endswith(".tau"):
+                sp[name] = jnp.asarray([0.2])
+        a = forward(PARAMS, toks([3, 1, 4]), CFG, sp, use_pallas=True)
+        b = forward(PARAMS, toks([3, 1, 4]), CFG, sp, use_pallas=False)
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+    def test_sparse_changes_output(self):
+        sp = zero_tau_sparse(CFG)
+        for name in list(sp):
+            if name.endswith(".tau"):
+                sp[name] = jnp.asarray([0.5])
+        dense = forward(PARAMS, toks([5, 6, 7]), CFG, None)
+        sparse = forward(PARAMS, toks([5, 6, 7]), CFG, sp)
+        assert float(jnp.abs(dense - sparse).max()) > 1e-6
+
+
+class TestParams:
+    def test_param_order_complete(self):
+        names = param_order(CFG)
+        assert names[0] == "embed.weight"
+        assert names[-1] == "lm_head.weight"
+        assert len(names) == 2 + CFG["n_layers"] * 9 + 1
+        assert len(set(names)) == len(names)
+
+    def test_param_shapes(self):
+        for n in param_order(CFG):
+            assert PARAMS[n].shape == param_shape(CFG, n), n
+
+    def test_sparse_param_order(self):
+        names = sparse_param_order(CFG)
+        assert len(names) == CFG["n_layers"] * len(LAYER_KINDS) * 2
+        assert "sparse.0.down_proj.ga" in names
+        assert sparse_param_shape(CFG, "sparse.0.down_proj.ga") == (CFG["ffn_dim"],)
+        assert sparse_param_shape(CFG, "sparse.0.q_proj.tau") == (1,)

@@ -1,0 +1,33 @@
+"""Preset sync: the Python preset table must mirror the Rust source of
+truth in rust/src/model/config.rs."""
+
+import os
+import re
+
+from compile.presets import PRESETS
+
+RUST_CONFIG = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "src", "model", "config.rs"
+)
+
+
+def rust_presets():
+    with open(RUST_CONFIG) as f:
+        src = f.read()
+    # Lines like: "llama-micro" => (128, 8, 4, 352),
+    pat = re.compile(r'"([a-z-]+)"\s*=>\s*\((\d+),\s*(\d+),\s*(\d+),\s*(\d+)\)')
+    found = {}
+    for name, d, layers, heads, ffn in pat.findall(src):
+        found[name] = (int(d), int(layers), int(heads), int(ffn))
+    return found
+
+
+def test_presets_match_rust():
+    rust = rust_presets()
+    assert rust, "failed to parse rust presets"
+    assert rust == PRESETS, f"preset tables diverged:\nrust={rust}\npython={PRESETS}"
+
+
+def test_head_dims_divide():
+    for name, (d, _, heads, _) in PRESETS.items():
+        assert d % heads == 0, name

@@ -1,0 +1,41 @@
+"""WSPW0001 format round-trip + cross-language conventions."""
+
+import numpy as np
+import pytest
+
+from compile.weights_io import load_weights, save_weights
+
+
+def test_roundtrip(tmp_path):
+    tensors = {
+        "a.weight": np.random.default_rng(0).normal(size=(3, 4)).astype(np.float32),
+        "b": np.arange(7, dtype=np.float32),
+        "c3": np.zeros((2, 3, 4), np.float32),
+    }
+    path = tmp_path / "w.bin"
+    save_weights(path, tensors)
+    back = load_weights(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_name_sorted_on_disk(tmp_path):
+    path = tmp_path / "w.bin"
+    save_weights(path, {"zz": np.ones(1, np.float32), "aa": np.ones(1, np.float32)})
+    raw = path.read_bytes()
+    assert raw.index(b"aa") < raw.index(b"zz")
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = tmp_path / "bad.bin"
+    path.write_bytes(b"NOTMAGIC" + b"\x00" * 8)
+    with pytest.raises(AssertionError):
+        load_weights(path)
+
+
+def test_f64_downcast(tmp_path):
+    path = tmp_path / "w.bin"
+    save_weights(path, {"x": np.array([1.5, 2.5], np.float64)})
+    back = load_weights(path)
+    assert back["x"].dtype == np.float32

@@ -1,0 +1,219 @@
+//! Activation capture: one dense pass over the calibration set collects
+//! everything the searches need.
+
+use crate::calib::dataset::CalibSet;
+use crate::model::layers::{LayerId, LayerKind};
+use crate::model::transformer::{ForwardStats, Model};
+use crate::sparse_kernel::ColMajorMatrix;
+use crate::sparsity::{Dense, Sparsifier};
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Wrapper that records the input activation of every projection it routes,
+/// then delegates to the inner sparsifier. Calibration-only (the Mutex makes
+/// it unsuitable for the serving hot path by design).
+pub struct Capturing<'a> {
+    inner: &'a dyn Sparsifier,
+    store: Mutex<BTreeMap<LayerId, Vec<f32>>>,
+}
+
+impl<'a> Capturing<'a> {
+    pub fn new(inner: &'a dyn Sparsifier) -> Self {
+        Self {
+            inner,
+            store: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Flat captured rows per layer (row length = layer input dim).
+    pub fn into_store(self) -> BTreeMap<LayerId, Vec<f32>> {
+        self.store.into_inner().unwrap()
+    }
+}
+
+impl Sparsifier for Capturing<'_> {
+    fn name(&self) -> &'static str {
+        "capturing"
+    }
+
+    fn project(&self, layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize {
+        self.store
+            .lock()
+            .unwrap()
+            .entry(layer)
+            .or_default()
+            .extend_from_slice(x);
+        self.inner.project(layer, x, w, out)
+    }
+}
+
+/// Calibration captures for one block.
+pub struct BlockCalib {
+    /// `[T, d]` inputs to the block over the whole calibration set
+    /// (concatenated sequences; boundaries in `seq_lens`).
+    pub inputs: Tensor,
+    /// `[T, d]` dense outputs of the block on those inputs.
+    pub dense_out: Tensor,
+    /// Per projection kind: flat `[rows * in_dim]` input activations.
+    pub layer_inputs: BTreeMap<LayerKind, Vec<f32>>,
+    /// Length of each calibration sequence inside `inputs` (attention must
+    /// never cross these boundaries).
+    pub seq_lens: Vec<usize>,
+}
+
+impl BlockCalib {
+    /// Rows captured for a projection kind together with its input dim.
+    pub fn rows_of(&self, kind: LayerKind, cfg: &crate::model::ModelConfig) -> (&[f32], usize) {
+        let dim = kind.dims(cfg).1;
+        (&self.layer_inputs[&kind], dim)
+    }
+
+    /// Run the block on the captured inputs under a sparsifier, respecting
+    /// sequence boundaries (fresh KV state per sequence). This is the
+    /// `F_B^sparse(x_B)` evaluator used by Algs. 2 and 4.
+    pub fn forward_with(
+        &self,
+        model: &Model,
+        block: usize,
+        sp: &dyn Sparsifier,
+        stats: &mut ForwardStats,
+    ) -> Tensor {
+        let (total, d) = self.inputs.dims2();
+        let mut out = Tensor::zeros(&[total, d]);
+        let mut row0 = 0usize;
+        for &t in &self.seq_lens {
+            let xs = Tensor::from_vec(
+                &[t, d],
+                self.inputs.data[row0 * d..(row0 + t) * d].to_vec(),
+            );
+            let o = model.block_forward_seq(block, &xs, sp, stats);
+            out.data[row0 * d..(row0 + t) * d].copy_from_slice(&o.data);
+            row0 += t;
+        }
+        debug_assert_eq!(row0, total);
+        out
+    }
+}
+
+/// Full-model calibration captures plus the dense logits (for Eq. 8's KL).
+pub struct ModelCalib {
+    pub blocks: Vec<BlockCalib>,
+    /// Dense logits per sequence: `[T, vocab]` each.
+    pub dense_logits: Vec<Tensor>,
+    /// The token sequences (kept for sparse re-evaluation).
+    pub seqs: Vec<Vec<usize>>,
+}
+
+impl ModelCalib {
+    /// One dense pass per sequence, capturing block inputs; then one
+    /// instrumented block pass per block to capture per-layer inputs and
+    /// dense block outputs.
+    pub fn collect(model: &Model, calib: &CalibSet) -> ModelCalib {
+        let n_blocks = model.cfg.n_layers;
+        let d = model.cfg.d_model;
+        let mut stats = ForwardStats::default();
+        // Per-block concatenated inputs across sequences.
+        let mut inputs_flat: Vec<Vec<f32>> = vec![Vec::new(); n_blocks];
+        let mut dense_logits = Vec::with_capacity(calib.seqs.len());
+        for seq in &calib.seqs {
+            let mut taps = Vec::new();
+            let logits = model.forward_seq(seq, &Dense, &mut stats, Some(&mut taps));
+            dense_logits.push(logits);
+            for (b, tap) in taps.into_iter().enumerate() {
+                inputs_flat[b].extend_from_slice(&tap.data);
+            }
+        }
+        let total_rows: usize = calib.seqs.iter().map(|s| s.len()).sum();
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for (b, flat) in inputs_flat.into_iter().enumerate() {
+            let inputs = Tensor::from_vec(&[total_rows, d], flat);
+            // Dense block outputs + per-layer inputs, per sequence to keep
+            // positions/causality right.
+            let capturing = Capturing::new(&Dense);
+            let mut dense_out = Tensor::zeros(&[total_rows, d]);
+            let mut row0 = 0usize;
+            for seq in &calib.seqs {
+                let t = seq.len();
+                let xs = Tensor::from_vec(
+                    &[t, d],
+                    inputs.data[row0 * d..(row0 + t) * d].to_vec(),
+                );
+                let out = model.block_forward_seq(b, &xs, &capturing, &mut stats);
+                dense_out.data[row0 * d..(row0 + t) * d].copy_from_slice(&out.data);
+                row0 += t;
+            }
+            let store = capturing.into_store();
+            let mut layer_inputs = BTreeMap::new();
+            for &kind in &LayerKind::ALL {
+                let rows = store
+                    .get(&LayerId::new(b, kind))
+                    .cloned()
+                    .unwrap_or_default();
+                layer_inputs.insert(kind, rows);
+            }
+            blocks.push(BlockCalib {
+                inputs,
+                dense_out,
+                layer_inputs,
+                seq_lens: calib.seqs.iter().map(|s| s.len()).collect(),
+            });
+        }
+        ModelCalib {
+            blocks,
+            dense_logits,
+            seqs: calib.seqs.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn setup() -> (Model, ModelCalib) {
+        let m = Model::synthetic(ModelConfig::preset("nano").unwrap(), 3);
+        let calib = CalibSet::synthetic(2, 12, m.cfg.vocab_size, 5);
+        let mc = ModelCalib::collect(&m, &calib);
+        (m, mc)
+    }
+
+    #[test]
+    fn capture_shapes() {
+        let (m, mc) = setup();
+        assert_eq!(mc.blocks.len(), m.cfg.n_layers);
+        assert_eq!(mc.dense_logits.len(), 2);
+        let total = 24;
+        for bc in &mc.blocks {
+            assert_eq!(bc.inputs.shape, vec![total, m.cfg.d_model]);
+            assert_eq!(bc.dense_out.shape, vec![total, m.cfg.d_model]);
+            // Q/K/V/O/Gate/Up see d_model-dim inputs, Down sees ffn_dim.
+            let (rows, dim) = bc.rows_of(LayerKind::Down, &m.cfg);
+            assert_eq!(dim, m.cfg.ffn_dim);
+            assert_eq!(rows.len(), total * m.cfg.ffn_dim);
+            let (rows_q, dim_q) = bc.rows_of(LayerKind::Q, &m.cfg);
+            assert_eq!(dim_q, m.cfg.d_model);
+            assert_eq!(rows_q.len(), total * m.cfg.d_model);
+        }
+    }
+
+    #[test]
+    fn block_outputs_chain_to_next_inputs() {
+        let (_, mc) = setup();
+        // dense_out of block b == inputs of block b+1.
+        for b in 0..mc.blocks.len() - 1 {
+            let d = mc.blocks[b].dense_out.max_abs_diff(&mc.blocks[b + 1].inputs);
+            assert!(d < 1e-4, "block {b} chain break: {d}");
+        }
+    }
+
+    #[test]
+    fn qkv_inputs_identical() {
+        // Q, K, V all receive the same normed input.
+        let (m, mc) = setup();
+        let (q, _) = mc.blocks[0].rows_of(LayerKind::Q, &m.cfg);
+        let (k, _) = mc.blocks[0].rows_of(LayerKind::K, &m.cfg);
+        assert_eq!(q, k);
+    }
+}

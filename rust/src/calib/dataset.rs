@@ -1,0 +1,155 @@
+//! Calibration sequences.
+//!
+//! The paper calibrates on a pile-val + CodeAlpaca + MetaMathQA mix so that
+//! "math and code tasks can also be calibrated". Our substitute is held-out
+//! slices of the synthetic corpus covering the same three pattern families
+//! (prose-like, code-like, math-like) — written by `python/compile/data.py`
+//! to `artifacts/data/<model>/calib.json` as arrays of byte-token ids. A
+//! Rust-side generator provides equivalent sequences for tests.
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use std::path::Path;
+
+/// A set of token sequences used for calibration.
+#[derive(Clone, Debug)]
+pub struct CalibSet {
+    pub seqs: Vec<Vec<usize>>,
+}
+
+impl CalibSet {
+    /// Load from the JSON written by the Python data generator:
+    /// `{"seqs": [[t, t, ...], ...]}`.
+    pub fn load(path: &Path) -> anyhow::Result<CalibSet> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let seqs = j
+            .req_arr("seqs")?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("calib seq must be an array"))
+                    .map(|a| a.iter().filter_map(|t| t.as_usize()).collect::<Vec<_>>())
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        if seqs.is_empty() || seqs.iter().any(|s| s.is_empty()) {
+            anyhow::bail!("empty calibration set at {}", path.display());
+        }
+        Ok(CalibSet { seqs })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let seqs = Json::Arr(
+            self.seqs
+                .iter()
+                .map(|s| Json::Arr(s.iter().map(|&t| Json::Num(t as f64)).collect()))
+                .collect(),
+        );
+        std::fs::write(path, Json::obj(vec![("seqs", seqs)]).to_string_compact())?;
+        Ok(())
+    }
+
+    /// Total number of tokens.
+    pub fn n_tokens(&self) -> usize {
+        self.seqs.iter().map(|s| s.len()).sum()
+    }
+
+    /// Truncate to at most `n` sequences of at most `max_len` tokens (search
+    /// speed knob; the searches use a slice, final thresholds use more).
+    pub fn subset(&self, n: usize, max_len: usize) -> CalibSet {
+        CalibSet {
+            seqs: self
+                .seqs
+                .iter()
+                .take(n.max(1))
+                .map(|s| s[..s.len().min(max_len.max(1))].to_vec())
+                .collect(),
+        }
+    }
+
+    /// Synthetic byte-token calibration set mirroring the mixed corpus
+    /// (prose / math / code lines). Used by tests and by the quickstart when
+    /// no artifacts are present.
+    pub fn synthetic(n_seqs: usize, seq_len: usize, vocab: usize, seed: u64) -> CalibSet {
+        let mut rng = Pcg64::new(seed);
+        let mut seqs = Vec::with_capacity(n_seqs);
+        for _ in 0..n_seqs {
+            let mut s = Vec::with_capacity(seq_len);
+            while s.len() < seq_len {
+                match rng.below(3) {
+                    0 => {
+                        // prose-like: lowercase words
+                        let wlen = 2 + rng.below(6);
+                        for _ in 0..wlen {
+                            s.push((b'a' + rng.below(26) as u8) as usize % vocab);
+                        }
+                        s.push(b' ' as usize % vocab);
+                    }
+                    1 => {
+                        // math-like: "12+34=46."
+                        for _ in 0..2 {
+                            s.push((b'0' + rng.below(10) as u8) as usize % vocab);
+                        }
+                        s.push(b'+' as usize % vocab);
+                        for _ in 0..2 {
+                            s.push((b'0' + rng.below(10) as u8) as usize % vocab);
+                        }
+                        s.push(b'=' as usize % vocab);
+                    }
+                    _ => {
+                        // code-like: brackets and symbols
+                        for _ in 0..4 {
+                            let syms = b"(){}[];=.";
+                            s.push(syms[rng.below(syms.len())] as usize % vocab);
+                        }
+                    }
+                }
+            }
+            s.truncate(seq_len);
+            seqs.push(s);
+        }
+        CalibSet { seqs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_shape() {
+        let c = CalibSet::synthetic(4, 32, 256, 1);
+        assert_eq!(c.seqs.len(), 4);
+        assert!(c.seqs.iter().all(|s| s.len() == 32));
+        assert!(c.seqs.iter().flatten().all(|&t| t < 256));
+        assert_eq!(c.n_tokens(), 128);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let c = CalibSet::synthetic(3, 16, 256, 2);
+        let path = std::env::temp_dir().join("wisparse_calib_test.json");
+        c.save(&path).unwrap();
+        let c2 = CalibSet::load(&path).unwrap();
+        assert_eq!(c.seqs, c2.seqs);
+    }
+
+    #[test]
+    fn subset_truncates() {
+        let c = CalibSet::synthetic(8, 64, 256, 3);
+        let s = c.subset(2, 10);
+        assert_eq!(s.seqs.len(), 2);
+        assert!(s.seqs.iter().all(|q| q.len() == 10));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = CalibSet::synthetic(2, 20, 256, 9);
+        let b = CalibSet::synthetic(2, 20, 256, 9);
+        assert_eq!(a.seqs, b.seqs);
+    }
+}

@@ -1,0 +1,13 @@
+//! Calibration data handling and activation capture.
+//!
+//! The searches of Sec 4.2/4.3 need, per block: the block's input hidden
+//! states (`x_B`), the dense block outputs (`F_B(x_B)`), and the inputs to
+//! every linear layer inside the block (to pool score distributions for
+//! Eq. 7 thresholds). One dense pass over the calibration set collects all
+//! of it.
+
+pub mod dataset;
+pub mod collector;
+
+pub use collector::{BlockCalib, Capturing, ModelCalib};
+pub use dataset::CalibSet;

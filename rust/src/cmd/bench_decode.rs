@@ -1,0 +1,76 @@
+//! `wisparse bench-decode`: end-to-end decode throughput for one
+//! model/method/target configuration — the single-point version of Fig 4,
+//! matching the paper's protocol (200 tokens from a 5-token prompt).
+
+use std::path::Path;
+use std::sync::Arc;
+use wisparse::calib::ModelCalib;
+use wisparse::model::sampler::Sampling;
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::util::cli::Args;
+use wisparse::util::timer::Stopwatch;
+
+use crate::cmd::common;
+
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("bench-decode", "decode throughput for one config")
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("model", "llama-micro", "model preset")
+        .opt("method", "wisparse", "method")
+        .opt("target", "0.5", "sparsity target")
+        .opt("prompt-len", "5", "prompt length (paper: 5)")
+        .opt("new-tokens", "200", "tokens to generate (paper: 200)")
+        .opt("reps", "3", "repetitions (best reported)")
+        .opt("budget", "quick", "calibration budget if no cached plan")
+        .flag("synthetic", "use random weights")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let model = Arc::new(common::load_model(
+        artifacts,
+        args.get("model"),
+        args.get_flag("synthetic"),
+    )?);
+    let method = args.get("method");
+    let sparsifier = if method == "dense" {
+        Arc::new(wisparse::sparsity::Dense) as Arc<dyn wisparse::sparsity::Sparsifier>
+    } else {
+        let calib_set = common::load_calib(artifacts, args.get("model"), 8, 96);
+        let calib = ModelCalib::collect(&model, &calib_set);
+        let cfg = common::search_cfg(args.get("budget"), wisparse::util::threadpool::num_threads())?;
+        let plan = common::plan_for(
+            artifacts,
+            &model,
+            &calib,
+            method,
+            args.get_f64("target")?,
+            &cfg,
+            true,
+        )?;
+        common::sparsifier_for(&model, method, &plan)?
+    };
+    let engine = Engine::new(Arc::clone(&model), sparsifier, EngineCfg::default());
+    let prompt = "a".repeat(args.get_usize("prompt-len")?);
+    let new_tokens = args.get_usize("new-tokens")?;
+    let mut best_tps = 0.0f64;
+    let mut density = 1.0f64;
+    for rep in 0..args.get_usize("reps")? {
+        let sw = Stopwatch::start();
+        let (_, stats) = engine.run_to_completion(&prompt, new_tokens, Sampling::Greedy);
+        let secs = sw.elapsed_secs();
+        let tps = new_tokens as f64 / secs;
+        density = stats.density();
+        best_tps = best_tps.max(tps);
+        println!(
+            "rep {rep}: {:.1} tok/s  ({} tokens in {:.3}s, density {:.3})",
+            tps, new_tokens, secs, density
+        );
+    }
+    println!(
+        "best: model={} method={} density={:.3} -> {:.1} tokens/s",
+        args.get("model"),
+        method,
+        density,
+        best_tps
+    );
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! `wisparse calibrate`: run a calibration pipeline for one model/method/
+//! target and persist the plan (Alg. 1 end-to-end for wisparse).
+
+use std::path::Path;
+use wisparse::calib::ModelCalib;
+use wisparse::util::cli::Args;
+use wisparse::util::timer::Stopwatch;
+
+use crate::cmd::common;
+
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("calibrate", "calibrate a sparsity plan")
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("model", "llama-micro", "model preset")
+        .opt("method", "wisparse", "dense|teal|rsparse|wina|activation-only|wisparse")
+        .opt("target", "0.5", "global target sparsity")
+        .opt("budget", "default", "search budget: quick|default|paper")
+        .opt("calib-seqs", "8", "calibration sequences")
+        .opt("calib-len", "96", "calibration sequence length")
+        .opt("threads", "0", "worker threads (0 = all cores)")
+        .flag("no-cache", "recalibrate even if a cached plan exists")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let threads = match args.get_usize("threads")? {
+        0 => wisparse::util::threadpool::num_threads(),
+        n => n,
+    };
+    let model = common::load_model(artifacts, args.get("model"), false)?;
+    let calib_set = common::load_calib(
+        artifacts,
+        args.get("model"),
+        args.get_usize("calib-seqs")?,
+        args.get_usize("calib-len")?,
+    );
+    let sw = Stopwatch::start();
+    println!(
+        "collecting calibration activations ({} seqs x {} tokens)...",
+        calib_set.seqs.len(),
+        calib_set.seqs[0].len()
+    );
+    let calib = ModelCalib::collect(&model, &calib_set);
+    println!("capture done in {:.1}s", sw.elapsed_secs());
+
+    let cfg = common::search_cfg(args.get("budget"), threads)?;
+    let target = args.get_f64("target")?;
+    let sw = Stopwatch::start();
+    let plan = common::plan_for(
+        artifacts,
+        &model,
+        &calib,
+        args.get("method"),
+        target,
+        &cfg,
+        !args.get_flag("no-cache"),
+    )?;
+    println!(
+        "calibrated `{}` @ {:.0}% in {:.1}s — effective sparsity {:.3}",
+        plan.method,
+        target * 100.0,
+        sw.elapsed_secs(),
+        plan.effective_sparsity(&model.cfg)
+    );
+    let path = wisparse::sparsity::plan::SparsityPlan::default_path(
+        artifacts,
+        &model.cfg.name,
+        args.get("method"),
+        target,
+    );
+    plan.save(&path)?;
+    println!("plan -> {}", path.display());
+    Ok(())
+}

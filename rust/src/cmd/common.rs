@@ -1,0 +1,143 @@
+//! Shared helpers for subcommands: locating artifacts, loading models and
+//! calibration sets, building sparsifiers from plans (with on-demand
+//! calibration + plan caching).
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use wisparse::calib::{CalibSet, ModelCalib};
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::sparsity::allocator::{
+    calibrate_activation_only, calibrate_rsparse, calibrate_teal, calibrate_wina,
+    calibrate_wisparse, PipelineStages, WiSparseCfg,
+};
+use wisparse::sparsity::alpha_search::AlphaSearchCfg;
+use wisparse::sparsity::evo::EvoCfg;
+use wisparse::sparsity::greedy::GreedyCfg;
+use wisparse::sparsity::methods::{RSparse, ScoredSparsifier};
+use wisparse::sparsity::plan::SparsityPlan;
+use wisparse::sparsity::{Dense, Sparsifier};
+
+
+/// Load a trained model, or synthesize one (tests / pre-training runs) when
+/// `--synthetic` was passed or no artifacts exist.
+pub fn load_model(artifacts: &Path, name: &str, synthetic: bool) -> anyhow::Result<Model> {
+    let dir = artifacts.join("models").join(name);
+    if !synthetic && dir.join("weights.bin").exists() {
+        wisparse::info!("loading trained model from {}", dir.display());
+        return Model::load_dir(&dir);
+    }
+    wisparse::warn_!(
+        "no trained weights at {} — using a synthetic (random) model; run `make artifacts` for real results",
+        dir.display()
+    );
+    Ok(Model::synthetic(ModelConfig::preset(name)?, 0xC0DE))
+}
+
+/// Load the calibration set written by gen-data (or synthesize).
+pub fn load_calib(artifacts: &Path, name: &str, n_seqs: usize, seq_len: usize) -> CalibSet {
+    let path = artifacts.join("data").join(name).join("calib.json");
+    match CalibSet::load(&path) {
+        Ok(c) => c.subset(n_seqs, seq_len),
+        Err(_) => {
+            wisparse::warn_!("no calib at {} — synthesizing", path.display());
+            CalibSet::synthetic(n_seqs, seq_len, 256, 0xCA11B)
+        }
+    }
+}
+
+/// Held-out eval sequences for perplexity work (disjoint seed from calib).
+pub fn eval_seqs(n_seqs: usize, seq_len: usize) -> Vec<Vec<usize>> {
+    let mut gen = wisparse::data::corpus::CorpusGen::new(0xE7A1);
+    gen.calib_sequences(n_seqs, seq_len)
+}
+
+/// Search configuration scaled by a `--budget quick|default|paper` knob.
+pub fn search_cfg(budget: &str, threads: usize) -> anyhow::Result<WiSparseCfg> {
+    let (gens, offspring, eps, grid, passes, step) = match budget {
+        "quick" => (6, 8, 0.05, 8, 1, 0.1),
+        "default" => (40, 16, 0.02, 15, 1, 0.05),
+        // The paper's hyperparameters (Sec 5.1).
+        "paper" => (400, 64, 0.005, 30, 1, 0.05),
+        _ => anyhow::bail!("--budget must be quick|default|paper"),
+    };
+    Ok(WiSparseCfg {
+        evo: EvoCfg {
+            generations: gens,
+            offspring,
+            eps,
+            threads,
+            ..EvoCfg::default()
+        },
+        greedy: GreedyCfg {
+            step,
+            threads,
+            ..GreedyCfg::default()
+        },
+        alpha: AlphaSearchCfg {
+            n_grid: grid,
+            passes,
+            threads,
+            ..AlphaSearchCfg::default()
+        },
+    })
+}
+
+/// Calibrate (or load a cached) plan for a method at a target sparsity.
+pub fn plan_for(
+    artifacts: &Path,
+    model: &Model,
+    calib: &ModelCalib,
+    method: &str,
+    target: f64,
+    cfg: &WiSparseCfg,
+    cache: bool,
+) -> anyhow::Result<SparsityPlan> {
+    let path = SparsityPlan::default_path(artifacts, &model.cfg.name, method, target);
+    if cache && path.exists() {
+        let plan = SparsityPlan::load(&path)?;
+        if plan.layers.len() == model.cfg.n_layers * 7 {
+            wisparse::info!("loaded cached plan {}", path.display());
+            return Ok(plan);
+        }
+    }
+    wisparse::info!(
+        "calibrating {} @ {:.0}% on {}",
+        method,
+        target * 100.0,
+        model.cfg.name
+    );
+    let plan = match method {
+        "wisparse" => calibrate_wisparse(model, calib, target, cfg, PipelineStages::FULL),
+        "teal" => calibrate_teal(model, calib, target, &cfg.greedy),
+        "rsparse" => calibrate_rsparse(model, calib, target),
+        "wina" => calibrate_wina(model, calib, target),
+        "activation-only" => calibrate_activation_only(model, calib, target),
+        other => anyhow::bail!("unknown method `{other}`"),
+    };
+    if cache {
+        plan.save(&path)?;
+    }
+    Ok(plan)
+}
+
+/// Build the runtime sparsifier for a calibrated plan.
+pub fn sparsifier_for(
+    model: &Model,
+    method: &str,
+    plan: &SparsityPlan,
+) -> anyhow::Result<Arc<dyn Sparsifier>> {
+    Ok(match method {
+        "dense" => Arc::new(Dense),
+        "rsparse" => Arc::new(RSparse::from_plan(model, plan, 16)),
+        "teal" => Arc::new(ScoredSparsifier::from_plan("teal", model, plan)),
+        "wina" => Arc::new(ScoredSparsifier::from_plan("wina", model, plan)),
+        "wisparse" => Arc::new(ScoredSparsifier::from_plan("wisparse", model, plan)),
+        "activation-only" => Arc::new(ScoredSparsifier::from_plan("activation-only", model, plan)),
+        other => anyhow::bail!("unknown method `{other}`"),
+    })
+}
+
+pub fn results_dir() -> PathBuf {
+    PathBuf::from("results")
+}

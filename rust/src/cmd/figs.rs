@@ -1,0 +1,337 @@
+//! Figure regeneration commands (Figs 2-6). Each writes a CSV under
+//! `results/` and prints an ASCII rendering of the figure's shape.
+
+use std::path::Path;
+use std::sync::Arc;
+use wisparse::calib::ModelCalib;
+use wisparse::eval::ppl::{delta_ppl_percent, perplexity};
+use wisparse::model::layers::{LayerId, LayerKind};
+use wisparse::model::sampler::Sampling;
+use wisparse::report::chart::ascii_chart;
+use wisparse::report::csv::{f, write_csv};
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::sparsity::evo::sparsifier_for_allocation;
+use wisparse::sparsity::Dense;
+use wisparse::util::cli::Args;
+use wisparse::util::stats::{mean, stddev};
+
+use crate::cmd::common;
+
+fn base_args(cmd: &'static str, about: &'static str) -> Args {
+    Args::new(cmd, about)
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("model", "llama-micro", "model preset")
+        .flag("synthetic", "use random weights")
+}
+
+/// Fig 2: per-channel activation magnitude vs weight column norms for one
+/// layer (default: block n/2's o_proj, as in the paper's block-17 example).
+pub fn fig2(argv: &[String]) -> anyhow::Result<()> {
+    let args = base_args("fig2", "activation vs weight-norm distributions")
+        .opt("block", "-1", "block index (-1 = middle block)")
+        .opt("layer", "o_proj", "projection kind")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let model = common::load_model(artifacts, args.get("model"), args.get_flag("synthetic"))?;
+    let block = match args.get("block").parse::<i64>() {
+        Ok(b) if b >= 0 => b as usize,
+        _ => model.cfg.n_layers / 2,
+    };
+    let kind = LayerKind::from_name(args.get("layer"))
+        .ok_or_else(|| anyhow::anyhow!("unknown layer kind"))?;
+    let calib_set = common::load_calib(artifacts, args.get("model"), 8, 96);
+    let calib = ModelCalib::collect(&model, &calib_set);
+    let (rows, dim) = calib.blocks[block].rows_of(kind, &model.cfg);
+    let id = LayerId::new(block, kind);
+    let g = model.g(id);
+
+    // Mean |x| per channel over the calibration pool.
+    let n_rows = rows.len() / dim;
+    let mut mean_abs = vec![0.0f64; dim];
+    for row in rows.chunks_exact(dim) {
+        for (c, &v) in row.iter().enumerate() {
+            mean_abs[c] += v.abs() as f64;
+        }
+    }
+    for v in mean_abs.iter_mut() {
+        *v /= n_rows as f64;
+    }
+    let mut csv = Vec::with_capacity(dim);
+    for c in 0..dim {
+        csv.push(vec![
+            c.to_string(),
+            f(mean_abs[c]),
+            f(g[c] as f64),
+            f(mean_abs[c] * g[c] as f64),
+        ]);
+    }
+    let out = common::results_dir().join("fig2_magnitudes.csv");
+    write_csv(&out, &["channel", "mean_abs_activation", "weight_col_norm", "product"], &csv)?;
+
+    // The paper's headline statistic: weight-side variance dominates.
+    let g64: Vec<f64> = g.iter().map(|&v| v as f64).collect();
+    let cv_w = stddev(&g64) / mean(&g64).max(1e-12);
+    let cv_a = stddev(&mean_abs) / mean(&mean_abs).max(1e-12);
+    // A channel in the paper's regime: low |x|, top-decile g.
+    let mut by_g: Vec<usize> = (0..dim).collect();
+    by_g.sort_by(|&a, &b| g[b].partial_cmp(&g[a]).unwrap());
+    let mut by_a: Vec<usize> = (0..dim).collect();
+    by_a.sort_by(|&a, &b| mean_abs[a].partial_cmp(&mean_abs[b]).unwrap());
+    let top_g: Vec<usize> = by_g[..dim / 10 + 1].to_vec();
+    let mismatched = by_a[..dim / 4]
+        .iter()
+        .find(|c| top_g.contains(c))
+        .copied();
+    println!("fig2: block {block} {} ({} channels, {} calib rows)", kind.name(), dim, n_rows);
+    println!("  coef-of-variation: weight-col-norms {cv_w:.3} vs activations {cv_a:.3}");
+    match mismatched {
+        Some(c) => println!(
+            "  Observation-1 witness: channel {c} has bottom-quartile |x| (={:.4}) but top-decile ‖W:,c‖ (={:.3})",
+            mean_abs[c], g[c]
+        ),
+        None => println!("  (no bottom-quartile-|x| / top-decile-g channel in this layer)"),
+    }
+    println!("  -> {}", out.display());
+    Ok(())
+}
+
+/// Fig 3: block-wise sensitivity — sparsify ONE block at a time at
+/// {40, 50, 60}%, report ΔPPL vs dense.
+pub fn fig3(argv: &[String]) -> anyhow::Result<()> {
+    let args = base_args("fig3", "block-wise sparsity sensitivity")
+        .opt("sparsities", "0.4,0.5,0.6", "per-block sparsity levels")
+        .opt("eval-seqs", "6", "held-out sequences for PPL")
+        .opt("eval-len", "96", "sequence length")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let model = common::load_model(artifacts, args.get("model"), args.get_flag("synthetic"))?;
+    let calib_set = common::load_calib(artifacts, args.get("model"), 8, 96);
+    let calib = ModelCalib::collect(&model, &calib_set);
+    let eval = common::eval_seqs(args.get_usize("eval-seqs")?, args.get_usize("eval-len")?);
+    let dense_ppl = perplexity(&model, &eval, &Dense);
+    println!("dense ppl {dense_ppl:.4}");
+    let n = model.cfg.n_layers;
+    let levels = args.get_f64_list("sparsities")?;
+    let mut csv = Vec::new();
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for &level in &levels {
+        let mut pts = Vec::new();
+        for b in 0..n {
+            let mut alloc = vec![0.0; n];
+            alloc[b] = level;
+            let sp = sparsifier_for_allocation(&model, &calib, &alloc, 1.0);
+            let ppl = perplexity(&model, &eval, &sp);
+            let dppl = delta_ppl_percent(dense_ppl, ppl);
+            csv.push(vec![b.to_string(), f(level), f(ppl), f(dppl)]);
+            pts.push((b as f64, dppl));
+        }
+        series.push((format!("{:.0}%", level * 100.0), pts));
+    }
+    let out = common::results_dir().join("fig3_sensitivity.csv");
+    write_csv(&out, &["block", "sparsity", "ppl", "delta_ppl_pct"], &csv)?;
+    let series_ref: Vec<(&str, Vec<(f64, f64)>)> = series
+        .iter()
+        .map(|(l, p)| (l.as_str(), p.clone()))
+        .collect();
+    println!(
+        "{}",
+        ascii_chart("Fig 3: ΔPPL% sparsifying one block at a time", &series_ref, 14)
+    );
+    println!("-> {}", out.display());
+    Ok(())
+}
+
+/// Fig 4: achieved FLOPs and tokens/s vs sparsity for all models.
+pub fn fig4(argv: &[String]) -> anyhow::Result<()> {
+    let args = base_args("fig4", "FLOPs + throughput vs sparsity")
+        .opt("models", "llama-micro,mistral-micro,qwen-micro", "comma list")
+        .opt("sparsities", "0.0,0.1,0.2,0.3,0.4,0.5", "levels")
+        .opt("prompt-len", "5", "prompt length (paper: 5)")
+        .opt("new-tokens", "200", "decode length (paper: 200)")
+        .opt("budget", "quick", "calibration budget")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let cfg = common::search_cfg(args.get("budget"), wisparse::util::threadpool::num_threads())?;
+    let prompt = "a".repeat(args.get_usize("prompt-len")?);
+    let new_tokens = args.get_usize("new-tokens")?;
+    let mut csv = Vec::new();
+    let mut tput_series = Vec::new();
+    let mut flop_series = Vec::new();
+    for model_name in args.get("models").split(',') {
+        let model_name = model_name.trim();
+        let model = Arc::new(common::load_model(artifacts, model_name, args.get_flag("synthetic"))?);
+        let calib_set = common::load_calib(artifacts, model_name, 8, 96);
+        let calib = ModelCalib::collect(&model, &calib_set);
+        let mut tput_pts = Vec::new();
+        let mut flop_pts = Vec::new();
+        for target_s in args.get_f64_list("sparsities")? {
+            let sp: Arc<dyn wisparse::sparsity::Sparsifier> = if target_s == 0.0 {
+                Arc::new(Dense)
+            } else {
+                let plan =
+                    common::plan_for(artifacts, &model, &calib, "wisparse", target_s, &cfg, true)?;
+                common::sparsifier_for(&model, "wisparse", &plan)?
+            };
+            let engine = Engine::new(Arc::clone(&model), sp, EngineCfg::default());
+            // Warmup + 3 reps, best wins (paper protocol).
+            let mut best_tps = 0.0f64;
+            let mut tflops = 0.0f64;
+            let mut density = 1.0;
+            for _ in 0..3 {
+                let sw = wisparse::util::timer::Stopwatch::start();
+                let (_, stats) = engine.run_to_completion(&prompt, new_tokens, Sampling::Greedy);
+                let tps = new_tokens as f64 / sw.elapsed_secs();
+                best_tps = best_tps.max(tps);
+                tflops = stats.flops_per_token() * 1e-9; // GFLOP/token
+                density = stats.density();
+            }
+            println!(
+                "{model_name} @ {:.0}%: density {:.3}, {:.3} GFLOP/token, {:.1} tok/s",
+                target_s * 100.0,
+                density,
+                tflops,
+                best_tps
+            );
+            csv.push(vec![
+                model_name.to_string(),
+                f(target_s),
+                f(density),
+                f(tflops),
+                f(best_tps),
+            ]);
+            tput_pts.push((target_s, best_tps));
+            flop_pts.push((target_s, tflops));
+        }
+        tput_series.push((model_name.to_string(), tput_pts));
+        flop_series.push((model_name.to_string(), flop_pts));
+    }
+    let out = common::results_dir().join("fig4_efficiency.csv");
+    write_csv(
+        &out,
+        &["model", "sparsity", "density", "gflop_per_token", "tokens_per_s"],
+        &csv,
+    )?;
+    let fs: Vec<(&str, Vec<(f64, f64)>)> = flop_series
+        .iter()
+        .map(|(l, p)| (l.as_str(), p.clone()))
+        .collect();
+    println!("{}", ascii_chart("Fig 4 (left): GFLOP/token vs sparsity", &fs, 12));
+    let ts: Vec<(&str, Vec<(f64, f64)>)> = tput_series
+        .iter()
+        .map(|(l, p)| (l.as_str(), p.clone()))
+        .collect();
+    println!("{}", ascii_chart("Fig 4 (right): tokens/s vs sparsity", &ts, 12));
+    println!("-> {}", out.display());
+    Ok(())
+}
+
+/// Fig 5: the discovered per-block and per-module sparsity at 50%.
+pub fn fig5(argv: &[String]) -> anyhow::Result<()> {
+    let args = base_args("fig5", "discovered sparsity allocation")
+        .opt("models", "llama-micro,qwen-micro", "comma list (paper shows 2)")
+        .opt("target", "0.5", "global target")
+        .opt("budget", "default", "calibration budget")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let cfg = common::search_cfg(args.get("budget"), wisparse::util::threadpool::num_threads())?;
+    let target = args.get_f64("target")?;
+    let mut csv = Vec::new();
+    for model_name in args.get("models").split(',') {
+        let model_name = model_name.trim();
+        let model = common::load_model(artifacts, model_name, args.get_flag("synthetic"))?;
+        let calib_set = common::load_calib(artifacts, model_name, 8, 96);
+        let calib = ModelCalib::collect(&model, &calib_set);
+        let plan = common::plan_for(artifacts, &model, &calib, "wisparse", target, &cfg, true)?;
+        let mut series = Vec::new();
+        let mut attn_pts = Vec::new();
+        let mut mlp_pts = Vec::new();
+        for b in 0..model.cfg.n_layers {
+            let (mut attn_s, mut attn_w, mut mlp_s, mut mlp_w) = (0.0, 0.0, 0.0, 0.0);
+            for &kind in &LayerKind::ALL {
+                let w = wisparse::model::layers::layer_flops(&model.cfg, kind);
+                let s = plan.layer(LayerId::new(b, kind)).sparsity;
+                if kind.is_attn() {
+                    attn_s += w * s;
+                    attn_w += w;
+                } else {
+                    mlp_s += w * s;
+                    mlp_w += w;
+                }
+            }
+            let attn = attn_s / attn_w;
+            let mlp = mlp_s / mlp_w;
+            csv.push(vec![
+                model_name.to_string(),
+                b.to_string(),
+                f(plan.block_sparsity[b]),
+                f(attn),
+                f(mlp),
+            ]);
+            attn_pts.push((b as f64, attn));
+            mlp_pts.push((b as f64, mlp));
+        }
+        series.push(("attn", attn_pts));
+        series.push(("mlp", mlp_pts));
+        println!(
+            "{}",
+            ascii_chart(
+                &format!("Fig 5: {} per-module sparsity @ {:.0}%", model_name, target * 100.0),
+                &series,
+                10
+            )
+        );
+    }
+    let out = common::results_dir().join("fig5_allocation.csv");
+    write_csv(
+        &out,
+        &["model", "block", "block_sparsity", "attn_sparsity", "mlp_sparsity"],
+        &csv,
+    )?;
+    println!("-> {}", out.display());
+    Ok(())
+}
+
+/// Fig 6: calibrated alpha per layer (attention vs MLP panels).
+pub fn fig6(argv: &[String]) -> anyhow::Result<()> {
+    let args = base_args("fig6", "calibrated alpha values")
+        .opt("target", "0.5", "plan target sparsity")
+        .opt("budget", "default", "calibration budget")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let cfg = common::search_cfg(args.get("budget"), wisparse::util::threadpool::num_threads())?;
+    let model = common::load_model(artifacts, args.get("model"), args.get_flag("synthetic"))?;
+    let calib_set = common::load_calib(artifacts, args.get("model"), 8, 96);
+    let calib = ModelCalib::collect(&model, &calib_set);
+    let target = args.get_f64("target")?;
+    let plan = common::plan_for(artifacts, &model, &calib, "wisparse", target, &cfg, true)?;
+    let mut csv = Vec::new();
+    let mut attn_series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    let mut mlp_series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for &kind in &LayerKind::ALL {
+        let pts: Vec<(f64, f64)> = (0..model.cfg.n_layers)
+            .map(|b| (b as f64, plan.layer(LayerId::new(b, kind)).alpha))
+            .collect();
+        for (b, a) in &pts {
+            csv.push(vec![kind.name().to_string(), b.to_string(), f(*a)]);
+        }
+        if kind.is_attn() {
+            attn_series.push((kind.name().to_string(), pts));
+        } else {
+            mlp_series.push((kind.name().to_string(), pts));
+        }
+    }
+    let a: Vec<(&str, Vec<(f64, f64)>)> = attn_series
+        .iter()
+        .map(|(l, p)| (l.as_str(), p.clone()))
+        .collect();
+    println!("{}", ascii_chart("Fig 6 (left): attention alphas", &a, 10));
+    let m: Vec<(&str, Vec<(f64, f64)>)> = mlp_series
+        .iter()
+        .map(|(l, p)| (l.as_str(), p.clone()))
+        .collect();
+    println!("{}", ascii_chart("Fig 6 (right): MLP alphas", &m, 10));
+    let out = common::results_dir().join("fig6_alphas.csv");
+    write_csv(&out, &["layer_kind", "block", "alpha"], &csv)?;
+    println!("-> {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! `wisparse gen-data`: write the training corpus (for the Python trainer)
+//! and per-model calibration sets.
+
+use std::path::Path;
+use wisparse::calib::CalibSet;
+use wisparse::data::corpus::CorpusGen;
+use wisparse::model::ModelConfig;
+use wisparse::util::cli::Args;
+
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("gen-data", "generate corpus + calibration sets")
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("corpus-bytes", "400000", "approximate corpus size in bytes")
+        .opt("calib-seqs", "16", "calibration sequences per model")
+        .opt("calib-len", "96", "calibration sequence length")
+        .opt("seed", "7", "master seed")
+        .parse(argv)?;
+    let root = Path::new(args.get("artifacts"));
+    let data_dir = root.join("data");
+    std::fs::create_dir_all(&data_dir)?;
+    let seed = args.get_usize("seed")? as u64;
+
+    // Training corpus (shared by all models).
+    let mut gen = CorpusGen::new(seed);
+    let corpus = gen.training_corpus(args.get_usize("corpus-bytes")?);
+    let corpus_path = data_dir.join("corpus.txt");
+    std::fs::write(&corpus_path, &corpus)?;
+    println!("wrote {} bytes -> {}", corpus.len(), corpus_path.display());
+
+    // Per-model calibration sets (held-out slices; disjoint seed per model
+    // to mirror the paper's per-model calibration).
+    for (i, name) in ModelConfig::all_presets().iter().enumerate() {
+        let mut cgen = CorpusGen::new(seed ^ (0x1000 + i as u64));
+        let seqs = cgen.calib_sequences(
+            args.get_usize("calib-seqs")?,
+            args.get_usize("calib-len")?,
+        );
+        let set = CalibSet { seqs };
+        let path = data_dir.join(name).join("calib.json");
+        set.save(&path)?;
+        println!(
+            "wrote {} calib seqs ({} tokens) -> {}",
+            set.seqs.len(),
+            set.n_tokens(),
+            path.display()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Subcommand implementations for the leader binary.
+
+pub mod common;
+pub mod gen_data;
+pub mod calibrate;
+pub mod validate;
+pub mod serve;
+pub mod bench_decode;
+pub mod table1;
+pub mod table2;
+pub mod figs;

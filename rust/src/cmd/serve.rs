@@ -1,0 +1,68 @@
+//! `wisparse serve`: start the HTTP serving coordinator.
+
+use std::path::Path;
+use std::sync::Arc;
+use wisparse::calib::ModelCalib;
+use wisparse::server::batcher::BatcherCfg;
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::util::cli::Args;
+
+use crate::cmd::common;
+
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("serve", "start the serving coordinator")
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("model", "llama-micro", "model preset")
+        .opt("method", "wisparse", "sparsification method (or `dense`)")
+        .opt("target", "0.5", "sparsity target (plan must exist or be calibratable)")
+        .opt("addr", "127.0.0.1:8077", "listen address")
+        .opt("max-batch", "8", "max concurrent sequences")
+        .opt("budget", "quick", "calibration budget if no cached plan")
+        .flag("synthetic", "use random weights (no artifacts needed)")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let model = Arc::new(common::load_model(
+        artifacts,
+        args.get("model"),
+        args.get_flag("synthetic"),
+    )?);
+    let method = args.get("method");
+    let sparsifier = if method == "dense" {
+        Arc::new(wisparse::sparsity::Dense) as Arc<dyn wisparse::sparsity::Sparsifier>
+    } else {
+        let calib_set = common::load_calib(artifacts, args.get("model"), 8, 96);
+        let calib = ModelCalib::collect(&model, &calib_set);
+        let cfg = common::search_cfg(args.get("budget"), wisparse::util::threadpool::num_threads())?;
+        let plan = common::plan_for(
+            artifacts,
+            &model,
+            &calib,
+            method,
+            args.get_f64("target")?,
+            &cfg,
+            true,
+        )?;
+        common::sparsifier_for(&model, method, &plan)?
+    };
+    let engine = Arc::new(Engine::new(model, sparsifier, EngineCfg::default()));
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: args.get_usize("max-batch")?,
+                max_queue: 256,
+            },
+        },
+    );
+    let sched = Arc::clone(&coord);
+    std::thread::spawn(move || sched.run_scheduler());
+    println!(
+        "serving {} ({}) — POST /generate, GET /metrics, GET /health",
+        args.get("model"),
+        method
+    );
+    wisparse::server::http::serve(coord, args.get("addr"), |addr| {
+        println!("listening on http://{addr}");
+    })
+}

@@ -1,0 +1,88 @@
+//! `wisparse table1`: the main accuracy comparison (Table 1) — three
+//! models x {0, 30, 40, 50}% x {R-Sparse, TEAL, WiSparse} x six tasks.
+
+use std::path::Path;
+use wisparse::calib::ModelCalib;
+use wisparse::data::tasks::full_suite;
+use wisparse::eval::harness::{evaluate_suite, EvalReport};
+use wisparse::model::ModelConfig;
+use wisparse::report::csv::{f, write_csv};
+use wisparse::sparsity::Dense;
+use wisparse::util::cli::Args;
+use wisparse::util::timer::Stopwatch;
+
+use crate::cmd::common;
+
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("table1", "accuracy comparison (Table 1)")
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("models", "llama-micro,mistral-micro,qwen-micro", "comma list")
+        .opt("methods", "rsparse,teal,wisparse", "comma list")
+        .opt("sparsities", "0.3,0.4,0.5", "comma list")
+        .opt("items", "40", "items per task")
+        .opt("budget", "default", "search budget: quick|default|paper")
+        .opt("threads", "0", "worker threads (0 = all cores)")
+        .opt("calib-seqs", "8", "calibration sequences")
+        .flag("synthetic", "use random weights")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let threads = match args.get_usize("threads")? {
+        0 => wisparse::util::threadpool::num_threads(),
+        n => n,
+    };
+    let cfg = common::search_cfg(args.get("budget"), threads)?;
+    let items = args.get_usize("items")?;
+    let mut csv_rows: Vec<Vec<String>> = Vec::new();
+
+    for model_name in args.get("models").split(',') {
+        let model_name = model_name.trim();
+        let _ = ModelConfig::preset(model_name)?;
+        let model = common::load_model(artifacts, model_name, args.get_flag("synthetic"))?;
+        let suite = full_suite(items, 0xAB1E);
+        println!("\n=== {} ===", model_name);
+        println!("{}", EvalReport::header());
+
+        // Dense baseline row.
+        let dense_report = evaluate_suite(&model, &suite, &Dense, "baseline", 0.0, threads);
+        println!("{}", dense_report.row());
+        push_csv(&mut csv_rows, model_name, &dense_report);
+
+        let calib_set =
+            common::load_calib(artifacts, model_name, args.get_usize("calib-seqs")?, 96);
+        let calib = ModelCalib::collect(&model, &calib_set);
+
+        for target_s in args.get_f64_list("sparsities")? {
+            for method in args.get("methods").split(',') {
+                let method = method.trim();
+                let sw = Stopwatch::start();
+                let plan =
+                    common::plan_for(artifacts, &model, &calib, method, target_s, &cfg, true)?;
+                let sp = common::sparsifier_for(&model, method, &plan)?;
+                let report =
+                    evaluate_suite(&model, &suite, sp.as_ref(), method, target_s, threads);
+                println!("{}   [{:.0}s]", report.row(), sw.elapsed_secs());
+                push_csv(&mut csv_rows, model_name, &report);
+            }
+        }
+    }
+    let out = common::results_dir().join("table1.csv");
+    write_csv(
+        &out,
+        &[
+            "model", "method", "sparsity", "SIQA", "GSM8K", "WiC", "HumanEval", "MMLU",
+            "CSQA", "Average",
+        ],
+        &csv_rows,
+    )?;
+    println!("\ntable1 -> {}", out.display());
+    Ok(())
+}
+
+fn push_csv(rows: &mut Vec<Vec<String>>, model: &str, r: &EvalReport) {
+    let mut row = vec![model.to_string(), r.method.clone(), f(r.sparsity)];
+    for (_, _, acc) in &r.per_task {
+        row.push(f(*acc));
+    }
+    row.push(f(r.average));
+    rows.push(row);
+}

@@ -1,0 +1,78 @@
+//! `wisparse table2`: the component ablation (Table 2) — activation-only ->
+//! +weight importance -> +coarse search -> +fine search, llama-micro @ 50%.
+
+use std::path::Path;
+use wisparse::calib::ModelCalib;
+use wisparse::data::tasks::full_suite;
+use wisparse::eval::harness::{evaluate_suite, EvalReport};
+use wisparse::report::csv::{f, write_csv};
+use wisparse::sparsity::allocator::{calibrate_wisparse, PipelineStages};
+use wisparse::sparsity::methods::ScoredSparsifier;
+use wisparse::sparsity::Dense;
+use wisparse::util::cli::Args;
+
+use crate::cmd::common;
+
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("table2", "component ablation (Table 2)")
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("model", "llama-micro", "model preset")
+        .opt("target", "0.5", "sparsity")
+        .opt("items", "40", "items per task")
+        .opt("budget", "default", "search budget")
+        .opt("threads", "0", "worker threads (0 = all cores)")
+        .flag("synthetic", "use random weights")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let threads = match args.get_usize("threads")? {
+        0 => wisparse::util::threadpool::num_threads(),
+        n => n,
+    };
+    let cfg = common::search_cfg(args.get("budget"), threads)?;
+    let target = args.get_f64("target")?;
+    let model = common::load_model(artifacts, args.get("model"), args.get_flag("synthetic"))?;
+    let suite = full_suite(args.get_usize("items")?, 0xAB1E);
+    let calib_set = common::load_calib(artifacts, args.get("model"), 8, 96);
+    let calib = ModelCalib::collect(&model, &calib_set);
+
+    println!("{}", EvalReport::header());
+    let dense_report = evaluate_suite(&model, &suite, &Dense, "baseline", 0.0, threads);
+    println!("{}", dense_report.row());
+
+    let mut rows = Vec::new();
+    push(&mut rows, &dense_report);
+    let mut prev_avg = f64::NAN;
+    for (label, stages) in PipelineStages::ablation_ladder() {
+        let plan = calibrate_wisparse(&model, &calib, target, &cfg, stages);
+        let sp = ScoredSparsifier::from_plan("ablation", &model, &plan);
+        let report = evaluate_suite(&model, &suite, &sp, label, target, threads);
+        let delta = if prev_avg.is_nan() {
+            String::new()
+        } else {
+            format!("  (Δ {:+.2})", report.average - prev_avg)
+        };
+        println!("{}{delta}", report.row());
+        prev_avg = report.average;
+        push(&mut rows, &report);
+    }
+    let out = common::results_dir().join("table2.csv");
+    write_csv(
+        &out,
+        &[
+            "method", "sparsity", "SIQA", "GSM8K", "WiC", "HumanEval", "MMLU", "CSQA",
+            "Average",
+        ],
+        &rows,
+    )?;
+    println!("\ntable2 -> {}", out.display());
+    Ok(())
+}
+
+fn push(rows: &mut Vec<Vec<String>>, r: &EvalReport) {
+    let mut row = vec![r.method.clone(), f(r.sparsity)];
+    for (_, _, acc) in &r.per_task {
+        row.push(f(*acc));
+    }
+    row.push(f(r.average));
+    rows.push(row);
+}

@@ -1,0 +1,54 @@
+//! `wisparse validate`: native-engine vs PJRT-HLO cross-validation, dense
+//! and (if a plan exists) wisparse variants.
+
+use std::path::Path;
+use wisparse::runtime::validate::cross_validate;
+use wisparse::sparsity::plan::SparsityPlan;
+use wisparse::util::cli::Args;
+
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("validate", "cross-validate native vs PJRT")
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("model", "llama-micro", "model preset")
+        .opt("tokens", "48", "sequence length to compare")
+        .opt("tol", "2e-3", "max |logit diff| tolerated")
+        .opt("plan", "", "sparsity plan JSON for the wisparse variant")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let model_dir = artifacts.join("models").join(args.get("model"));
+    if !model_dir.join("dense.hlo.txt").exists() {
+        anyhow::bail!(
+            "no HLO artifacts in {} — run `make artifacts` first",
+            model_dir.display()
+        );
+    }
+    let tol = args.get_f64("tol")? as f32;
+    let n = args.get_usize("tokens")?;
+    // Deterministic mixed-family token stream.
+    let mut gen = wisparse::data::corpus::CorpusGen::new(0xA117);
+    let tokens: Vec<usize> = gen.calib_sequences(1, n).remove(0);
+
+    let report = cross_validate(&model_dir, "dense", &tokens, None, tol)?;
+    println!("{}", report.line());
+    let mut all_pass = report.pass;
+
+    // Sparse variant if a plan is available.
+    let plan_path = if args.get("plan").is_empty() {
+        SparsityPlan::default_path(artifacts, args.get("model"), "wisparse", 0.5)
+    } else {
+        args.get("plan").into()
+    };
+    if plan_path.exists() && model_dir.join("wisparse.hlo.txt").exists() {
+        let plan = SparsityPlan::load(&plan_path)?;
+        let report = cross_validate(&model_dir, "wisparse", &tokens, Some(&plan), tol)?;
+        println!("{}", report.line());
+        all_pass &= report.pass;
+    } else {
+        println!("(no wisparse plan at {} — dense only)", plan_path.display());
+    }
+    if !all_pass {
+        anyhow::bail!("cross-validation FAILED");
+    }
+    println!("cross-validation OK: all layers compute the same function");
+    Ok(())
+}

@@ -1,0 +1,362 @@
+//! The synthetic training corpus: six structured pattern families, one per
+//! benchmark skill axis. Byte-level tokens (vocab 256), deterministic given
+//! a seed, with a train/eval split at the *instance* level so eval items
+//! never appear verbatim in training data (except the closed-world fact and
+//! category tables, which are memorization tasks by design, like MMLU
+//! factual recall).
+
+use crate::util::rng::Pcg64;
+
+/// Closed world of entities shared by the generators and the task builders.
+pub mod world {
+    /// Synthetic "country -> capital" fact table (mmlu-like memorization).
+    pub const COUNTRIES: [&str; 16] = [
+        "avaria", "belorn", "cindor", "draken", "elvane", "fornost", "galdor",
+        "hivern", "isgard", "jorvik", "kalora", "lindon", "mordia", "nerath",
+        "ostia", "pelagir",
+    ];
+    pub const CAPITALS: [&str; 16] = [
+        "avapol", "belcity", "cinport", "drakby", "elvtown", "fornham",
+        "galbury", "hivopol", "isfort", "jorton", "kalbury", "linford",
+        "morport", "nerham", "ostgate", "pelham",
+    ];
+
+    /// "noun is-a category" table (csqa-like association).
+    pub const NOUNS: [&str; 16] = [
+        "dog", "cat", "wolf", "crow", "dove", "carp", "pike", "oak", "fir",
+        "rose", "iris", "iron", "gold", "clay", "sand", "mint",
+    ];
+    pub const CATEGORIES: [&str; 16] = [
+        "animal", "animal", "animal", "bird", "bird", "fish", "fish", "tree",
+        "tree", "flower", "flower", "metal", "metal", "soil", "soil", "herb",
+    ];
+
+    /// Actors for social (siqa-like) templates.
+    pub const ACTORS: [&str; 8] = [
+        "tom", "mary", "sam", "lily", "john", "emma", "alex", "ruth",
+    ];
+
+    /// (verb phrase, felt emotion) pairs for social inference.
+    pub const SOCIAL: [(&str, &str); 6] = [
+        ("gives a gift to", "happy"),
+        ("sings a song for", "happy"),
+        ("helps", "glad"),
+        ("shouts at", "angry"),
+        ("ignores", "sad"),
+        ("lies to", "upset"),
+    ];
+    pub const EMOTIONS: [&str; 5] = ["happy", "glad", "angry", "sad", "upset"];
+
+    /// Singular/plural subject pool for the agreement (wic-like) family.
+    pub const AGREE_NOUNS: [&str; 8] = [
+        "cat", "dog", "bird", "fish", "fox", "cow", "hen", "owl",
+    ];
+    pub const AGREE_VERBS: [(&str, &str); 6] = [
+        ("runs", "run"),
+        ("jumps", "jump"),
+        ("sleeps", "sleep"),
+        ("eats", "eat"),
+        ("sings", "sing"),
+        ("hides", "hide"),
+    ];
+}
+
+/// Deterministic corpus generator.
+pub struct CorpusGen {
+    rng: Pcg64,
+}
+
+impl CorpusGen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg64::new(seed),
+        }
+    }
+
+    /// One arithmetic line: "12+34=46." (gsm8k-like). `eval_holdout`
+    /// selects the instance subspace reserved for eval: pairs where
+    /// (a*100+b) % 7 == 0 never appear in training.
+    pub fn arith_line(&mut self, train: bool) -> String {
+        loop {
+            let a = self.rng.below(90) + 10;
+            let b = self.rng.below(90) + 10;
+            let held_out = (a * 100 + b) % 7 == 0;
+            if held_out != train {
+                return format!("{a}+{b}={}.", a + b);
+            }
+        }
+    }
+
+    /// Reserved arithmetic instance for eval.
+    pub fn arith_eval(&mut self) -> (String, String) {
+        loop {
+            let a = self.rng.below(90) + 10;
+            let b = self.rng.below(90) + 10;
+            if (a * 100 + b) % 7 == 0 {
+                return (format!("{a}+{b}="), format!("{}", a + b));
+            }
+        }
+    }
+
+    /// Fact line: "the capital of avaria is avapol."
+    pub fn fact_line(&mut self) -> String {
+        let i = self.rng.below(world::COUNTRIES.len());
+        format!(
+            "the capital of {} is {}.",
+            world::COUNTRIES[i],
+            world::CAPITALS[i]
+        )
+    }
+
+    /// Category line: "a dog is an animal."
+    pub fn category_line(&mut self) -> String {
+        let i = self.rng.below(world::NOUNS.len());
+        format!("a {} is an {}.", world::NOUNS[i], world::CATEGORIES[i])
+    }
+
+    /// Social template: "tom gives a gift to mary. mary feels happy."
+    pub fn social_line(&mut self) -> String {
+        let a = world::ACTORS[self.rng.below(world::ACTORS.len())];
+        let mut b = world::ACTORS[self.rng.below(world::ACTORS.len())];
+        while b == a {
+            b = world::ACTORS[self.rng.below(world::ACTORS.len())];
+        }
+        let (verb, emotion) = world::SOCIAL[self.rng.below(world::SOCIAL.len())];
+        format!("{a} {verb} {b}. {b} feels {emotion}.")
+    }
+
+    /// Agreement line: "one cat runs." / "two cats run." (wic-like binary
+    /// usage-in-context). Training uses counts one/two; "six"/"ten" are
+    /// held out for eval prompts.
+    pub fn agree_line(&mut self, train: bool) -> String {
+        let noun = world::AGREE_NOUNS[self.rng.below(world::AGREE_NOUNS.len())];
+        let (sing, plur) = world::AGREE_VERBS[self.rng.below(world::AGREE_VERBS.len())];
+        let plural = self.rng.below(2) == 1;
+        let count = if train {
+            if plural { "two" } else { "one" }
+        } else if plural {
+            "ten"
+        } else {
+            "six"
+        };
+        // "six" is singularly-numbered in our toy grammar? No: any count >1
+        // is plural; "six"/"ten" both plural. For the singular eval case we
+        // keep "one" (it also appears in training, but with other nouns).
+        if plural {
+            format!("{count} {noun}s {plur}.")
+        } else {
+            format!("one {noun} {sing}.")
+        }
+    }
+
+    /// Code line: "rev(abc)=cba." (humaneval-like exact-match generation).
+    /// Training strings avoid the letter 'z'; eval strings contain it.
+    pub fn code_line(&mut self, train: bool) -> String {
+        let len = 3;
+        let mut s = String::new();
+        for pos in 0..len {
+            let c = if !train && pos == self.rng.below(len) {
+                'z'
+            } else {
+                (b'a' + self.rng.below(25) as u8) as char // a..y
+            };
+            s.push(c);
+        }
+        if !train && !s.contains('z') {
+            s.replace_range(0..1, "z");
+        }
+        let rev: String = s.chars().rev().collect();
+        format!("rev({s})={rev}.")
+    }
+
+    /// Filler prose (keeps the model honest about general text).
+    pub fn prose_line(&mut self) -> String {
+        let words = [
+            "the", "sun", "rises", "over", "hills", "and", "rivers", "flow",
+            "to", "sea", "wind", "moves", "trees", "birds", "fly", "home",
+        ];
+        let n = 4 + self.rng.below(6);
+        let mut line = String::new();
+        for i in 0..n {
+            if i > 0 {
+                line.push(' ');
+            }
+            line.push_str(words[self.rng.below(words.len())]);
+        }
+        line.push('.');
+        line
+    }
+
+    /// A full training line from a random family (weights tuned so every
+    /// family gets enough signal).
+    pub fn train_line(&mut self) -> String {
+        match self.rng.below(10) {
+            0 | 1 => self.arith_line(true),
+            2 => self.fact_line(),
+            3 => self.category_line(),
+            4 | 5 => self.social_line(),
+            6 => self.agree_line(true),
+            7 | 8 => self.code_line(true),
+            _ => self.prose_line(),
+        }
+    }
+
+    /// Generate the training corpus as one newline-joined string of about
+    /// `approx_bytes` bytes.
+    pub fn training_corpus(&mut self, approx_bytes: usize) -> String {
+        let mut out = String::with_capacity(approx_bytes + 64);
+        while out.len() < approx_bytes {
+            out.push_str(&self.train_line());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Calibration sequences: held-out corpus slices covering all families
+    /// (the paper's pile-val + code + math mix).
+    pub fn calib_sequences(&mut self, n_seqs: usize, seq_len: usize) -> Vec<Vec<usize>> {
+        (0..n_seqs)
+            .map(|_| {
+                let mut bytes = Vec::with_capacity(seq_len);
+                while bytes.len() < seq_len {
+                    let line = self.train_line();
+                    bytes.extend(line.bytes().map(|b| b as usize));
+                    bytes.push(b'\n' as usize);
+                }
+                bytes.truncate(seq_len);
+                bytes
+            })
+            .collect()
+    }
+}
+
+/// Byte-level tokenization helpers.
+pub fn tokenize(s: &str) -> Vec<usize> {
+    s.bytes().map(|b| b as usize).collect()
+}
+
+/// Byte tokens back to text. Non-printable / non-ASCII bytes render as `?`
+/// so the output stays one byte per token (the corpus itself is pure ASCII).
+pub fn detokenize(tokens: &[usize]) -> String {
+    tokens
+        .iter()
+        .map(|&t| {
+            let b = t.min(255) as u8;
+            if b == b'\n' || (0x20..0x7f).contains(&b) {
+                b as char
+            } else {
+                '?'
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = CorpusGen::new(7);
+        let mut b = CorpusGen::new(7);
+        for _ in 0..50 {
+            assert_eq!(a.train_line(), b.train_line());
+        }
+    }
+
+    #[test]
+    fn arith_split_is_disjoint() {
+        let mut g = CorpusGen::new(1);
+        for _ in 0..200 {
+            let line = g.arith_line(true);
+            let (ab, _) = line.split_once('=').unwrap();
+            let (a, b) = ab.split_once('+').unwrap();
+            let key: usize = a.parse::<usize>().unwrap() * 100 + b.parse::<usize>().unwrap();
+            assert_ne!(key % 7, 0, "eval instance leaked into training: {line}");
+        }
+        for _ in 0..50 {
+            let (prompt, ans) = g.arith_eval();
+            let nums: Vec<usize> = prompt
+                .trim_end_matches('=')
+                .split('+')
+                .map(|x| x.parse().unwrap())
+                .collect();
+            assert_eq!((nums[0] * 100 + nums[1]) % 7, 0);
+            assert_eq!(ans.parse::<usize>().unwrap(), nums[0] + nums[1]);
+        }
+    }
+
+    #[test]
+    fn arith_correctness() {
+        let mut g = CorpusGen::new(2);
+        for _ in 0..100 {
+            let line = g.arith_line(true);
+            let body = line.trim_end_matches('.');
+            let (lhs, rhs) = body.split_once('=').unwrap();
+            let (a, b) = lhs.split_once('+').unwrap();
+            assert_eq!(
+                a.parse::<usize>().unwrap() + b.parse::<usize>().unwrap(),
+                rhs.parse::<usize>().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn code_split_by_letter_z() {
+        let mut g = CorpusGen::new(3);
+        for _ in 0..100 {
+            assert!(!g.code_line(true).contains('z'));
+            assert!(g.code_line(false).contains('z'));
+        }
+    }
+
+    #[test]
+    fn code_reversal_correct() {
+        let mut g = CorpusGen::new(4);
+        for train in [true, false] {
+            for _ in 0..50 {
+                let line = g.code_line(train);
+                let inner = line
+                    .strip_prefix("rev(")
+                    .unwrap()
+                    .strip_suffix('.')
+                    .unwrap();
+                let (s, rev) = inner.split_once(")=").unwrap();
+                let expect: String = s.chars().rev().collect();
+                assert_eq!(rev, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn corpus_is_ascii_and_sized() {
+        let mut g = CorpusGen::new(5);
+        let c = g.training_corpus(10_000);
+        assert!(c.len() >= 10_000);
+        assert!(c.is_ascii());
+        assert!(c.lines().count() > 100);
+    }
+
+    #[test]
+    fn calib_sequences_byte_range() {
+        let mut g = CorpusGen::new(6);
+        let seqs = g.calib_sequences(3, 64);
+        assert_eq!(seqs.len(), 3);
+        for s in &seqs {
+            assert_eq!(s.len(), 64);
+            assert!(s.iter().all(|&t| t < 256));
+        }
+    }
+
+    #[test]
+    fn tokenize_roundtrip() {
+        let s = "rev(abc)=cba.";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn world_tables_consistent() {
+        assert_eq!(world::COUNTRIES.len(), world::CAPITALS.len());
+        assert_eq!(world::NOUNS.len(), world::CATEGORIES.len());
+    }
+}

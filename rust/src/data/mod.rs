@@ -1,0 +1,16 @@
+//! Synthetic corpus + benchmark substrate.
+//!
+//! The paper evaluates on OpenCompass (SIQA, GSM8K, WiC, HumanEval, MMLU,
+//! CSQA) with HF-pretrained 7-8B models. Neither is available here, so this
+//! module is the substitution (DESIGN.md §2): a deterministic generator of
+//! a mixed structured corpus that the micro models are trained on at build
+//! time, plus six task families probing the same six skill axes, scored the
+//! same two ways the originals are (choice-by-logprob, exact-match
+//! generation). Rust is the single source of truth: `wisparse gen-data`
+//! writes the corpus for the Python trainer and the calibration sets.
+
+pub mod corpus;
+pub mod tasks;
+
+pub use corpus::CorpusGen;
+pub use tasks::{Task, TaskItem, TaskKind};

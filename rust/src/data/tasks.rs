@@ -1,0 +1,330 @@
+//! The six task families probing the paper's six benchmark axes.
+//!
+//! | Paper benchmark | Family here  | Skill probed            | Scoring    |
+//! |-----------------|--------------|-------------------------|------------|
+//! | SIQA            | `social`     | social-emotion inference| choice     |
+//! | GSM8K           | `arith`      | 2-digit addition        | exact gen  |
+//! | WiC             | `agree`      | usage-in-context        | choice (2) |
+//! | HumanEval       | `strrev`     | string transformation   | exact gen  |
+//! | MMLU            | `facts`      | factual recall          | choice (4) |
+//! | CSQA            | `category`   | concept association     | choice (4) |
+
+use crate::data::corpus::{world, CorpusGen};
+use crate::util::rng::Pcg64;
+
+/// Scoring mode of a task family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    /// Rank `choices` by sequence logprob after `prompt`; correct iff the
+    /// `answer` index wins (how OpenCompass scores MC benchmarks).
+    Choice,
+    /// Greedy-decode after `prompt`; correct iff the decode starts with
+    /// `answer_text` (how exact-match generation benchmarks score).
+    Generate,
+}
+
+/// One evaluation item.
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub prompt: String,
+    /// For Choice tasks: candidate continuations (index `answer` correct).
+    pub choices: Vec<String>,
+    pub answer: usize,
+    /// For Generate tasks: the expected continuation text.
+    pub answer_text: String,
+}
+
+/// A named task with its items.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub name: &'static str,
+    pub paper_analogue: &'static str,
+    pub kind: TaskKind,
+    pub items: Vec<TaskItem>,
+}
+
+impl Task {
+    pub fn n(&self) -> usize {
+        self.items.len()
+    }
+}
+
+fn choice_item(prompt: String, choices: Vec<String>, answer: usize) -> TaskItem {
+    TaskItem {
+        prompt,
+        choices,
+        answer,
+        answer_text: String::new(),
+    }
+}
+
+fn gen_item(prompt: String, answer_text: String) -> TaskItem {
+    TaskItem {
+        prompt,
+        choices: Vec::new(),
+        answer: 0,
+        answer_text,
+    }
+}
+
+/// GSM8K-like: held-out 2-digit additions, exact-match generation.
+pub fn arith_task(n: usize, seed: u64) -> Task {
+    let mut g = CorpusGen::new(seed);
+    let items = (0..n)
+        .map(|_| {
+            let (prompt, ans) = g.arith_eval();
+            gen_item(prompt, format!("{ans}."))
+        })
+        .collect();
+    Task {
+        name: "arith",
+        paper_analogue: "GSM8K",
+        kind: TaskKind::Generate,
+        items,
+    }
+}
+
+/// HumanEval-like: string reversal on held-out strings (contain 'z').
+pub fn strrev_task(n: usize, seed: u64) -> Task {
+    let mut g = CorpusGen::new(seed);
+    let items = (0..n)
+        .map(|_| {
+            let line = g.code_line(false);
+            let inner = line.strip_prefix("rev(").unwrap().strip_suffix('.').unwrap();
+            let (s, rev) = inner.split_once(")=").unwrap();
+            gen_item(format!("rev({s})="), format!("{rev}."))
+        })
+        .collect();
+    Task {
+        name: "strrev",
+        paper_analogue: "HumanEval",
+        kind: TaskKind::Generate,
+        items,
+    }
+}
+
+/// MMLU-like: capital-of recall, 4-way choice.
+pub fn facts_task(n: usize, seed: u64) -> Task {
+    let mut rng = Pcg64::new(seed);
+    let k = world::COUNTRIES.len();
+    let items = (0..n)
+        .map(|_| {
+            let i = rng.below(k);
+            let mut distractors: Vec<usize> = (0..k).filter(|&j| j != i).collect();
+            rng.shuffle(&mut distractors);
+            let mut choice_idx = vec![i, distractors[0], distractors[1], distractors[2]];
+            rng.shuffle(&mut choice_idx);
+            let answer = choice_idx.iter().position(|&c| c == i).unwrap();
+            choice_item(
+                format!("the capital of {} is ", world::COUNTRIES[i]),
+                choice_idx
+                    .iter()
+                    .map(|&c| format!("{}.", world::CAPITALS[c]))
+                    .collect(),
+                answer,
+            )
+        })
+        .collect();
+    Task {
+        name: "facts",
+        paper_analogue: "MMLU",
+        kind: TaskKind::Choice,
+        items,
+    }
+}
+
+/// CSQA-like: category association, 4-way choice.
+pub fn category_task(n: usize, seed: u64) -> Task {
+    let mut rng = Pcg64::new(seed);
+    let k = world::NOUNS.len();
+    let uniq_cats: Vec<&str> = {
+        let mut v: Vec<&str> = world::CATEGORIES.to_vec();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let items = (0..n)
+        .map(|_| {
+            let i = rng.below(k);
+            let correct = world::CATEGORIES[i];
+            let mut wrong: Vec<&str> = uniq_cats
+                .iter()
+                .copied()
+                .filter(|&c| c != correct)
+                .collect();
+            rng.shuffle(&mut wrong);
+            let mut cands = vec![correct, wrong[0], wrong[1], wrong[2]];
+            rng.shuffle(&mut cands);
+            let answer = cands.iter().position(|&c| c == correct).unwrap();
+            choice_item(
+                format!("a {} is an ", world::NOUNS[i]),
+                cands.iter().map(|c| format!("{c}.")).collect(),
+                answer,
+            )
+        })
+        .collect();
+    Task {
+        name: "category",
+        paper_analogue: "CSQA",
+        kind: TaskKind::Choice,
+        items,
+    }
+}
+
+/// SIQA-like: emotion inference from a social template, choice over the
+/// emotion vocabulary.
+pub fn social_task(n: usize, seed: u64) -> Task {
+    let mut rng = Pcg64::new(seed);
+    let items = (0..n)
+        .map(|_| {
+            let a = world::ACTORS[rng.below(world::ACTORS.len())];
+            let mut b = world::ACTORS[rng.below(world::ACTORS.len())];
+            while b == a {
+                b = world::ACTORS[rng.below(world::ACTORS.len())];
+            }
+            let (verb, emotion) = world::SOCIAL[rng.below(world::SOCIAL.len())];
+            let mut cands: Vec<&str> = world::EMOTIONS
+                .iter()
+                .copied()
+                .filter(|&e| e != emotion)
+                .collect();
+            rng.shuffle(&mut cands);
+            let mut choices = vec![emotion, cands[0], cands[1]];
+            rng.shuffle(&mut choices);
+            let answer = choices.iter().position(|&e| e == emotion).unwrap();
+            choice_item(
+                format!("{a} {verb} {b}. {b} feels "),
+                choices.iter().map(|e| format!("{e}.")).collect(),
+                answer,
+            )
+        })
+        .collect();
+    Task {
+        name: "social",
+        paper_analogue: "SIQA",
+        kind: TaskKind::Choice,
+        items,
+    }
+}
+
+/// WiC-like: number agreement in context, binary choice between the
+/// singular and plural verb forms after held-out count words.
+pub fn agree_task(n: usize, seed: u64) -> Task {
+    let mut rng = Pcg64::new(seed);
+    let items = (0..n)
+        .map(|_| {
+            let noun = world::AGREE_NOUNS[rng.below(world::AGREE_NOUNS.len())];
+            let (sing, plur) = world::AGREE_VERBS[rng.below(world::AGREE_VERBS.len())];
+            let plural = rng.below(2) == 1;
+            let (prompt, correct, wrong) = if plural {
+                (format!("ten {noun}s "), plur, sing)
+            } else {
+                (format!("one {noun} "), sing, plur)
+            };
+            let flip = rng.below(2) == 1;
+            let (choices, answer) = if flip {
+                (vec![format!("{wrong}."), format!("{correct}.")], 1)
+            } else {
+                (vec![format!("{correct}."), format!("{wrong}.")], 0)
+            };
+            choice_item(prompt, choices, answer)
+        })
+        .collect();
+    Task {
+        name: "agree",
+        paper_analogue: "WiC",
+        kind: TaskKind::Choice,
+        items,
+    }
+}
+
+/// The full suite in the paper's column order
+/// (SIQA, GSM8K, WiC, HumanEval, MMLU, CSQA).
+pub fn full_suite(n_per_task: usize, seed: u64) -> Vec<Task> {
+    vec![
+        social_task(n_per_task, seed ^ 0x51),
+        arith_task(n_per_task, seed ^ 0x52),
+        agree_task(n_per_task, seed ^ 0x53),
+        strrev_task(n_per_task, seed ^ 0x54),
+        facts_task(n_per_task, seed ^ 0x55),
+        category_task(n_per_task, seed ^ 0x56),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_six_tasks_in_paper_order() {
+        let suite = full_suite(5, 1);
+        let names: Vec<&str> = suite.iter().map(|t| t.paper_analogue).collect();
+        assert_eq!(
+            names,
+            vec!["SIQA", "GSM8K", "WiC", "HumanEval", "MMLU", "CSQA"]
+        );
+        assert!(suite.iter().all(|t| t.n() == 5));
+    }
+
+    #[test]
+    fn choice_answers_in_range() {
+        for t in full_suite(30, 2) {
+            if t.kind == TaskKind::Choice {
+                for item in &t.items {
+                    assert!(item.answer < item.choices.len(), "{}", t.name);
+                    // Answer text is one of the choices, all distinct.
+                    let mut c = item.choices.clone();
+                    c.sort();
+                    c.dedup();
+                    assert_eq!(c.len(), item.choices.len(), "{} dup choices", t.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generate_answers_nonempty() {
+        for t in full_suite(20, 3) {
+            if t.kind == TaskKind::Generate {
+                for item in &t.items {
+                    assert!(!item.answer_text.is_empty());
+                    assert!(item.answer_text.ends_with('.'));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn answer_position_unbiased() {
+        // Over many items, the correct index must not always be 0 — that
+        // would let a degenerate model score 100%.
+        let t = facts_task(100, 4);
+        let zero_frac = t.items.iter().filter(|i| i.answer == 0).count();
+        assert!(zero_frac < 50, "answer index biased: {zero_frac}/100 at 0");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = arith_task(10, 9);
+        let b = arith_task(10, 9);
+        for (x, y) in a.items.iter().zip(&b.items) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.answer_text, y.answer_text);
+        }
+    }
+
+    #[test]
+    fn facts_correct_choice_matches_table() {
+        let t = facts_task(50, 5);
+        for item in &t.items {
+            let country = item
+                .prompt
+                .strip_prefix("the capital of ")
+                .unwrap()
+                .strip_suffix(" is ")
+                .unwrap();
+            let i = world::COUNTRIES.iter().position(|&c| c == country).unwrap();
+            assert_eq!(item.choices[item.answer], format!("{}.", world::CAPITALS[i]));
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Suite-level evaluation: accuracy per task + average, the row format of
+//! Table 1 / Table 2.
+
+use crate::data::tasks::{full_suite, Task};
+use crate::eval::tasks::task_accuracy;
+use crate::model::transformer::Model;
+use crate::sparsity::Sparsifier;
+
+/// One method's row: per-task accuracies in paper column order + average.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub method: String,
+    pub sparsity: f64,
+    /// (task name, paper analogue, accuracy %).
+    pub per_task: Vec<(String, String, f64)>,
+    pub average: f64,
+}
+
+impl EvalReport {
+    pub fn header() -> String {
+        format!(
+            "{:<22} {:>6} {:>7} {:>7} {:>7} {:>9} {:>7} {:>7} {:>8}",
+            "method", "sparse", "SIQA", "GSM8K", "WiC", "HumanEval", "MMLU", "CSQA", "Average"
+        )
+    }
+
+    pub fn row(&self) -> String {
+        let mut s = format!("{:<22} {:>5.0}% ", self.method, self.sparsity * 100.0);
+        for (i, (_, _, acc)) in self.per_task.iter().enumerate() {
+            let w = if i == 3 { 9 } else { 7 };
+            s.push_str(&format!("{acc:>w$.2} "));
+        }
+        s.push_str(&format!("{:>8.2}", self.average));
+        s
+    }
+}
+
+/// Evaluate a (model, sparsifier) pair over a task suite.
+pub fn evaluate_suite(
+    model: &Model,
+    suite: &[Task],
+    sp: &dyn Sparsifier,
+    method: &str,
+    sparsity: f64,
+    threads: usize,
+) -> EvalReport {
+    let mut per_task = Vec::with_capacity(suite.len());
+    let mut sum = 0.0;
+    for t in suite {
+        let acc = task_accuracy(model, t, sp, threads);
+        per_task.push((t.name.to_string(), t.paper_analogue.to_string(), acc));
+        sum += acc;
+    }
+    EvalReport {
+        method: method.to_string(),
+        sparsity,
+        average: sum / suite.len().max(1) as f64,
+        per_task,
+    }
+}
+
+/// Evaluate with the default suite size.
+pub fn evaluate_all(
+    model: &Model,
+    sp: &dyn Sparsifier,
+    method: &str,
+    sparsity: f64,
+    n_per_task: usize,
+    seed: u64,
+    threads: usize,
+) -> EvalReport {
+    let suite = full_suite(n_per_task, seed);
+    evaluate_suite(model, &suite, sp, method, sparsity, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::sparsity::Dense;
+
+    #[test]
+    fn report_covers_six_tasks() {
+        let m = Model::synthetic(ModelConfig::preset("nano").unwrap(), 71);
+        let r = evaluate_all(&m, &Dense, "dense", 0.0, 4, 1, 2);
+        assert_eq!(r.per_task.len(), 6);
+        assert!(r.average >= 0.0 && r.average <= 100.0);
+        let row = r.row();
+        assert!(row.contains("dense"));
+        assert!(!EvalReport::header().is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation: perplexity, KL divergence (Eq. 8), and the six synthetic
+//! task families mirroring the paper's benchmark suite (SIQA, GSM8K, WiC,
+//! HumanEval, MMLU, CSQA).
+
+pub mod kl;
+pub mod ppl;
+pub mod tasks;
+pub mod harness;
+
+pub use harness::{evaluate_all, EvalReport};

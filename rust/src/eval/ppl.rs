@@ -1,0 +1,70 @@
+//! Perplexity on held-out sequences — the metric behind the block-wise
+//! sensitivity study (Fig 3).
+
+use crate::model::transformer::{ForwardStats, Model};
+use crate::sparsity::Sparsifier;
+use crate::tensor::ops::log_softmax;
+
+/// Mean negative log-likelihood (nats/token) of next-token prediction over
+/// the sequences; positions predict the *next* token, so a length-T sequence
+/// contributes T-1 terms.
+pub fn mean_nll(model: &Model, seqs: &[Vec<usize>], sp: &dyn Sparsifier) -> f64 {
+    let mut stats = ForwardStats::default();
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for seq in seqs {
+        if seq.len() < 2 {
+            continue;
+        }
+        let logits = model.forward_seq(seq, sp, &mut stats, None);
+        for t in 0..seq.len() - 1 {
+            let ls = log_softmax(logits.row(t));
+            total -= ls[seq[t + 1]] as f64;
+            count += 1;
+        }
+    }
+    assert!(count > 0, "no scored positions");
+    total / count as f64
+}
+
+/// Perplexity = exp(mean NLL).
+pub fn perplexity(model: &Model, seqs: &[Vec<usize>], sp: &dyn Sparsifier) -> f64 {
+    mean_nll(model, seqs, sp).exp()
+}
+
+/// Relative perplexity change vs the dense model, in percent — Fig 3's
+/// y-axis (ΔPPL %).
+pub fn delta_ppl_percent(dense_ppl: f64, sparse_ppl: f64) -> f64 {
+    (sparse_ppl - dense_ppl) / dense_ppl * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::sparsity::Dense;
+
+    #[test]
+    fn ppl_positive_and_bounded_by_vocab() {
+        let m = Model::synthetic(ModelConfig::preset("nano").unwrap(), 31);
+        let seqs = vec![vec![1usize, 5, 9, 13, 2], vec![3usize, 3, 3, 3]];
+        let ppl = perplexity(&m, &seqs, &Dense);
+        assert!(ppl > 1.0);
+        // A random model's ppl is near vocab size; must not exceed it by much.
+        assert!(ppl < m.cfg.vocab_size as f64 * 2.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn delta_ppl_sign() {
+        assert!(delta_ppl_percent(10.0, 11.0) > 0.0);
+        assert!(delta_ppl_percent(10.0, 9.0) < 0.0);
+        assert!((delta_ppl_percent(10.0, 10.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = Model::synthetic(ModelConfig::preset("nano").unwrap(), 37);
+        let seqs = vec![vec![7usize, 8, 9, 10]];
+        assert_eq!(mean_nll(&m, &seqs, &Dense), mean_nll(&m, &seqs, &Dense));
+    }
+}

@@ -1,0 +1,25 @@
+//! WiSparse: weight-aware mixed-granularity training-free activation sparsity.
+//!
+//! Reproduction of "WiSparse: Boosting LLM Inference Efficiency with
+//! Weight-Aware Mixed Activation Sparsity" (CS.LG 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 1** (`python/compile/kernels/`): Pallas kernel implementing the
+//!   weight-aware scored sparse matmul, validated against a pure-jnp oracle.
+//! - **Layer 2** (`python/compile/model.py`): JAX transformer forward pass
+//!   calling the kernel, AOT-lowered to HLO text at build time.
+//! - **Layer 3** (this crate): the serving coordinator, the native sparse
+//!   inference engine, and the calibration search algorithms (Algs. 1-4 of
+//!   the paper). Python is never on the request path.
+
+pub mod util;
+pub mod data;
+pub mod tensor;
+pub mod model;
+pub mod sparsity;
+pub mod sparse_kernel;
+pub mod calib;
+pub mod eval;
+pub mod server;
+pub mod runtime;
+pub mod report;

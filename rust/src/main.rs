@@ -1,0 +1,65 @@
+//! `wisparse` — the leader binary: data generation, calibration, serving,
+//! and one subcommand per paper table/figure.
+
+mod cmd;
+
+const USAGE: &str = "\
+wisparse — Weight-aware Mixed-Granularity Training-free Activation Sparsity
+
+USAGE: wisparse <command> [options]   (--help per command)
+
+setup
+  gen-data      generate the synthetic corpus + calibration sets
+  calibrate     run a calibration pipeline, write a sparsity plan
+  validate      cross-validate native engine vs PJRT-compiled HLO
+
+serving
+  serve         start the HTTP serving coordinator
+  bench-decode  end-to-end decode throughput for one configuration
+
+experiments (regenerate the paper's tables and figures)
+  table1        accuracy: methods x sparsities x models (Table 1)
+  table2        component ablation at 50% (Table 2)
+  fig2          activation vs weight-norm distributions (Fig 2)
+  fig3          block-wise sparsity sensitivity (Fig 3)
+  fig4          FLOPs + tokens/s vs sparsity (Fig 4)
+  fig5          discovered per-block/module sparsity (Fig 5)
+  fig6          calibrated alpha values per layer (Fig 6)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match argv.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match cmd {
+        "gen-data" => cmd::gen_data::run(&rest),
+        "calibrate" => cmd::calibrate::run(&rest),
+        "validate" => cmd::validate::run(&rest),
+        "serve" => cmd::serve::run(&rest),
+        "bench-decode" => cmd::bench_decode::run(&rest),
+        "table1" => cmd::table1::run(&rest),
+        "table2" => cmd::table2::run(&rest),
+        "fig2" => cmd::figs::fig2(&rest),
+        "fig3" => cmd::figs::fig3(&rest),
+        "fig4" => cmd::figs::fig4(&rest),
+        "fig5" => cmd::figs::fig5(&rest),
+        "fig6" => cmd::figs::fig6(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,146 @@
+//! Model architecture configuration, serialized as JSON next to the weight
+//! binary (written by `python/compile/train.py`, read here).
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Llama-style decoder config. Field names match the JSON emitted by the
+/// Python trainer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn_dim: usize,
+    pub max_seq: usize,
+    pub rope_base: f32,
+    pub rmsnorm_eps: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// The three micro-model profiles mirroring the paper's Llama-3.1-8B /
+    /// Mistral-7B / Qwen-2.5-7B trio (distinct depth/width so the
+    /// sensitivity landscapes differ, as in Fig 5).
+    pub fn preset(name: &str) -> anyhow::Result<ModelConfig> {
+        let (d_model, n_layers, n_heads, ffn_dim) = match name {
+            "llama-micro" => (128, 8, 4, 352),
+            "mistral-micro" => (160, 6, 4, 432),
+            "qwen-micro" => (96, 10, 4, 256),
+            "nano" => (32, 2, 2, 64), // test-only profile
+            _ => anyhow::bail!(
+                "unknown model preset `{name}` (expected llama-micro|mistral-micro|qwen-micro|nano)"
+            ),
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab_size: 256,
+            d_model,
+            n_layers,
+            n_heads,
+            ffn_dim,
+            max_seq: 256,
+            rope_base: 10000.0,
+            rmsnorm_eps: 1e-5,
+        })
+    }
+
+    pub fn all_presets() -> [&'static str; 3] {
+        ["llama-micro", "mistral-micro", "qwen-micro"]
+    }
+
+    /// Parameter count (embeddings + blocks + head).
+    pub fn n_params(&self) -> usize {
+        let d = self.d_model;
+        let f = self.ffn_dim;
+        let per_block = 4 * d * d + 3 * d * f + 2 * d; // attn + mlp + 2 norms
+        self.vocab_size * d * 2 + self.n_layers * per_block + d
+    }
+
+    /// FLOPs (multiply-adds x2) of the *linear projections* for one decoded
+    /// token at density 1.0. This is the quantity the paper's Fig 4 scales
+    /// with sparsity; attention score/value FLOPs are excluded, matching the
+    /// "skipped activation channels in linear projections" accounting.
+    pub fn linear_flops_per_token(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.ffn_dim as u64;
+        let per_block = 2 * (4 * d * d + 3 * d * f);
+        per_block * self.n_layers as u64 + 2 * d * self.vocab_size as u64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("vocab_size", Json::Num(self.vocab_size as f64)),
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("ffn_dim", Json::Num(self.ffn_dim as f64)),
+            ("max_seq", Json::Num(self.max_seq as f64)),
+            ("rope_base", Json::Num(self.rope_base as f64)),
+            ("rmsnorm_eps", Json::Num(self.rmsnorm_eps as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            vocab_size: j.req_usize("vocab_size")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            ffn_dim: j.req_usize("ffn_dim")?,
+            max_seq: j.req_usize("max_seq")?,
+            rope_base: j.req_f64("rope_base")? as f32,
+            rmsnorm_eps: j.req_f64("rmsnorm_eps")? as f32,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ModelConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_valid() {
+        for name in ModelConfig::all_presets() {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.d_model % c.n_heads, 0, "{name}");
+            assert!(c.n_params() > 100_000, "{name}");
+        }
+        assert!(ModelConfig::preset("bogus").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::preset("llama-micro").unwrap();
+        let j = c.to_json();
+        let c2 = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn flops_scale_with_depth() {
+        let a = ModelConfig::preset("llama-micro").unwrap();
+        let b = ModelConfig::preset("qwen-micro").unwrap();
+        assert!(a.linear_flops_per_token() > 0);
+        assert_ne!(a.linear_flops_per_token(), b.linear_flops_per_token());
+    }
+}

@@ -1,0 +1,95 @@
+//! Per-sequence KV cache for incremental decoding.
+
+use crate::model::ModelConfig;
+
+/// One block's cached keys/values, row-major `[pos, d_model]` (heads are
+/// interleaved inside d_model exactly as the projections emit them).
+#[derive(Clone, Debug)]
+pub struct BlockKv {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    d: usize,
+}
+
+impl BlockKv {
+    fn new(max_seq: usize, d: usize) -> Self {
+        Self {
+            k: vec![0.0; max_seq * d],
+            v: vec![0.0; max_seq * d],
+            d,
+        }
+    }
+
+    #[inline]
+    pub fn k_at(&self, pos: usize) -> &[f32] {
+        &self.k[pos * self.d..(pos + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn v_at(&self, pos: usize) -> &[f32] {
+        &self.v[pos * self.d..(pos + 1) * self.d]
+    }
+
+    pub fn store(&mut self, pos: usize, k: &[f32], v: &[f32]) {
+        self.k[pos * self.d..(pos + 1) * self.d].copy_from_slice(k);
+        self.v[pos * self.d..(pos + 1) * self.d].copy_from_slice(v);
+    }
+}
+
+/// Full-model KV cache; `len` is the number of positions already decoded.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub blocks: Vec<BlockKv>,
+    pub len: usize,
+    pub max_seq: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        Self {
+            blocks: (0..cfg.n_layers)
+                .map(|_| BlockKv::new(cfg.max_seq, cfg.d_model))
+                .collect(),
+            len: 0,
+            max_seq: cfg.max_seq,
+        }
+    }
+
+    /// Single-block cache (used by `block_forward_seq` during calibration).
+    pub fn single_block(cfg: &ModelConfig) -> Self {
+        Self {
+            blocks: vec![BlockKv::new(cfg.max_seq, cfg.d_model)],
+            len: 0,
+            max_seq: cfg.max_seq,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.max_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_and_read() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut c = KvCache::new(&cfg);
+        assert_eq!(c.blocks.len(), cfg.n_layers);
+        let k: Vec<f32> = (0..cfg.d_model).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..cfg.d_model).map(|i| -(i as f32)).collect();
+        c.blocks[0].store(3, &k, &v);
+        assert_eq!(c.blocks[0].k_at(3), &k[..]);
+        assert_eq!(c.blocks[0].v_at(3), &v[..]);
+        c.len = cfg.max_seq;
+        assert!(c.is_full());
+        c.reset();
+        assert_eq!(c.len, 0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Layer addressing: the paper allocates sparsity and tunes exponents per
+//! *linear layer* within each transformer *block*, so every projection gets a
+//! stable identifier used by sparsity plans, calibration captures and
+//! reports.
+
+use crate::model::ModelConfig;
+
+/// The seven sparsifiable linear projections in one block (paper Sec 5.1:
+/// "all linear layers in the transformer blocks").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LayerKind {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+impl LayerKind {
+    pub const ALL: [LayerKind; 7] = [
+        LayerKind::Q,
+        LayerKind::K,
+        LayerKind::V,
+        LayerKind::O,
+        LayerKind::Gate,
+        LayerKind::Up,
+        LayerKind::Down,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LayerKind::Q => "q_proj",
+            LayerKind::K => "k_proj",
+            LayerKind::V => "v_proj",
+            LayerKind::O => "o_proj",
+            LayerKind::Gate => "gate_proj",
+            LayerKind::Up => "up_proj",
+            LayerKind::Down => "down_proj",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<LayerKind> {
+        LayerKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    pub fn index(self) -> usize {
+        LayerKind::ALL.iter().position(|&k| k == self).unwrap()
+    }
+
+    /// Whether this projection belongs to the attention module (for the
+    /// per-module breakdown of Fig 5).
+    pub fn is_attn(self) -> bool {
+        matches!(self, LayerKind::Q | LayerKind::K | LayerKind::V | LayerKind::O)
+    }
+
+    /// (out_dim, in_dim) of the projection's weight for a given config.
+    pub fn dims(self, cfg: &ModelConfig) -> (usize, usize) {
+        let d = cfg.d_model;
+        let f = cfg.ffn_dim;
+        match self {
+            LayerKind::Q | LayerKind::K | LayerKind::V | LayerKind::O => (d, d),
+            LayerKind::Gate | LayerKind::Up => (f, d),
+            LayerKind::Down => (d, f),
+        }
+    }
+}
+
+/// Address of one linear layer in the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerId {
+    pub block: usize,
+    pub kind: LayerKind,
+}
+
+impl LayerId {
+    pub fn new(block: usize, kind: LayerKind) -> Self {
+        Self { block, kind }
+    }
+
+    /// Flat index over the model's `n_layers * 7` linear layers.
+    pub fn flat(self) -> usize {
+        self.block * 7 + self.kind.index()
+    }
+
+    pub fn from_flat(flat: usize) -> LayerId {
+        LayerId {
+            block: flat / 7,
+            kind: LayerKind::ALL[flat % 7],
+        }
+    }
+
+    /// Stable string form used in JSON plans: `"3.up_proj"`.
+    pub fn key(self) -> String {
+        format!("{}.{}", self.block, self.kind.name())
+    }
+
+    pub fn from_key(s: &str) -> Option<LayerId> {
+        let (b, k) = s.split_once('.')?;
+        Some(LayerId {
+            block: b.parse().ok()?,
+            kind: LayerKind::from_name(k)?,
+        })
+    }
+}
+
+/// Iterate every linear layer id in a model, block-major.
+pub fn all_layers(cfg: &ModelConfig) -> Vec<LayerId> {
+    (0..cfg.n_layers)
+        .flat_map(|b| LayerKind::ALL.iter().map(move |&k| LayerId::new(b, k)))
+        .collect()
+}
+
+/// Per-layer FLOP weight (2*m*n multiply-adds) used when averaging layer
+/// sparsities into an *effective* block/model sparsity: skipping a channel in
+/// a big projection saves more compute than in a small one.
+pub fn layer_flops(cfg: &ModelConfig, kind: LayerKind) -> f64 {
+    let (m, n) = kind.dims(cfg);
+    2.0 * m as f64 * n as f64
+}
+
+/// FLOP-weighted effective sparsity of a block given per-kind sparsities.
+pub fn block_effective_sparsity(cfg: &ModelConfig, per_kind: &[f64; 7]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &k) in LayerKind::ALL.iter().enumerate() {
+        let w = layer_flops(cfg, k);
+        num += w * per_kind[i];
+        den += w;
+    }
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_roundtrip() {
+        for b in 0..4 {
+            for &k in &LayerKind::ALL {
+                let id = LayerId::new(b, k);
+                assert_eq!(LayerId::from_key(&id.key()), Some(id));
+                assert_eq!(LayerId::from_flat(id.flat()), id);
+            }
+        }
+        assert_eq!(LayerId::from_key("junk"), None);
+        assert_eq!(LayerId::from_key("1.nope"), None);
+    }
+
+    #[test]
+    fn dims_consistent() {
+        let cfg = ModelConfig::preset("llama-micro").unwrap();
+        assert_eq!(LayerKind::Q.dims(&cfg), (128, 128));
+        assert_eq!(LayerKind::Up.dims(&cfg), (352, 128));
+        assert_eq!(LayerKind::Down.dims(&cfg), (128, 352));
+    }
+
+    #[test]
+    fn all_layers_count() {
+        let cfg = ModelConfig::preset("qwen-micro").unwrap();
+        assert_eq!(all_layers(&cfg).len(), cfg.n_layers * 7);
+    }
+
+    #[test]
+    fn effective_sparsity_weighted() {
+        let cfg = ModelConfig::preset("llama-micro").unwrap();
+        // All layers at 0.5 -> effective 0.5 regardless of weights.
+        assert!((block_effective_sparsity(&cfg, &[0.5; 7]) - 0.5).abs() < 1e-12);
+        // Sparsity only on the largest layers > only on the smallest.
+        let mut big = [0.0; 7];
+        big[LayerKind::Up.index()] = 1.0;
+        big[LayerKind::Down.index()] = 1.0;
+        let mut small = [0.0; 7];
+        small[LayerKind::K.index()] = 1.0;
+        assert!(
+            block_effective_sparsity(&cfg, &big) > block_effective_sparsity(&cfg, &small)
+        );
+    }
+
+    #[test]
+    fn attn_split() {
+        assert!(LayerKind::O.is_attn());
+        assert!(!LayerKind::Gate.is_attn());
+    }
+}

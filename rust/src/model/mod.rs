@@ -1,0 +1,17 @@
+//! Native transformer inference engine (the serving substrate).
+//!
+//! A Llama-architecture decoder (RMSNorm, RoPE, MHA, SwiGLU) sized down to
+//! "micro" models trained at build time by `python/compile/train.py`. The
+//! engine runs every linear projection through a [`crate::sparsity::Sparsifier`]
+//! so dense, TEAL, R-Sparse, WINA and WiSparse execution share one code path.
+
+pub mod config;
+pub mod weights;
+pub mod layers;
+pub mod kv_cache;
+pub mod transformer;
+pub mod sampler;
+
+pub use config::ModelConfig;
+pub use layers::{LayerId, LayerKind};
+pub use transformer::Model;

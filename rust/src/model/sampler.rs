@@ -1,0 +1,75 @@
+//! Token sampling policies for the serving path.
+
+use crate::tensor::ops::{argmax, softmax_inplace};
+use crate::util::rng::Pcg64;
+
+/// Sampling configuration attached to a generation request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    /// Temperature sampling (t > 0); t -> 0 approaches greedy.
+    Temperature(f32),
+}
+
+impl Sampling {
+    pub fn sample(&self, logits: &[f32], rng: &mut Pcg64) -> usize {
+        match *self {
+            Sampling::Greedy => argmax(logits),
+            Sampling::Temperature(t) => {
+                let t = t.max(1e-4);
+                let mut probs: Vec<f32> = logits.iter().map(|&l| l / t).collect();
+                softmax_inplace(&mut probs);
+                let u = rng.next_f32();
+                let mut acc = 0.0f32;
+                for (i, &p) in probs.iter().enumerate() {
+                    acc += p;
+                    if u < acc {
+                        return i;
+                    }
+                }
+                probs.len() - 1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.0f32, 3.0, -1.0];
+        let mut rng = Pcg64::new(1);
+        assert_eq!(Sampling::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let logits = vec![0.0f32, 5.0, 1.0];
+        let mut rng = Pcg64::new(2);
+        for _ in 0..50 {
+            assert_eq!(Sampling::Temperature(0.01).sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_explores() {
+        let logits = vec![0.0f32, 1.0, 0.5];
+        let mut rng = Pcg64::new(3);
+        let mut seen = [false; 3];
+        for _ in 0..500 {
+            seen[Sampling::Temperature(10.0).sample(&logits, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "high temp should reach all tokens");
+    }
+
+    #[test]
+    fn sample_always_in_range() {
+        let logits = vec![-100.0f32; 16];
+        let mut rng = Pcg64::new(4);
+        for _ in 0..100 {
+            assert!(Sampling::Temperature(1.0).sample(&logits, &mut rng) < 16);
+        }
+    }
+}

@@ -1,0 +1,569 @@
+//! The Llama-style decoder, generic over a [`Sparsifier`].
+//!
+//! One code path serves dense and every sparse method: each of the seven
+//! linear projections per block calls `sparsifier.project`, which realizes
+//! Eq. 2's `y = (x ⊙ m) W^T`. The numeric conventions (RMSNorm, half-split
+//! RoPE, SwiGLU, 1/sqrt(hd) attention scaling) mirror
+//! `python/compile/model.py` so PJRT cross-validation can assert agreement.
+
+use crate::model::kv_cache::KvCache;
+use crate::model::layers::{LayerId, LayerKind};
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::sparse_kernel::{dense_gemv, ColMajorMatrix};
+use crate::sparsity::Sparsifier;
+use crate::tensor::ops::{rmsnorm, rope_inplace, silu, softmax_inplace};
+use crate::tensor::Tensor;
+use std::path::Path;
+
+/// One transformer block's weights in kernel layout.
+pub struct BlockWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: ColMajorMatrix,
+    pub wk: ColMajorMatrix,
+    pub wv: ColMajorMatrix,
+    pub wo: ColMajorMatrix,
+    pub mlp_norm: Vec<f32>,
+    pub w_gate: ColMajorMatrix,
+    pub w_up: ColMajorMatrix,
+    pub w_down: ColMajorMatrix,
+}
+
+impl BlockWeights {
+    pub fn w(&self, kind: LayerKind) -> &ColMajorMatrix {
+        match kind {
+            LayerKind::Q => &self.wq,
+            LayerKind::K => &self.wk,
+            LayerKind::V => &self.wv,
+            LayerKind::O => &self.wo,
+            LayerKind::Gate => &self.w_gate,
+            LayerKind::Up => &self.w_up,
+            LayerKind::Down => &self.w_down,
+        }
+    }
+}
+
+/// FLOP accounting collected during forward passes (Fig 4's metric).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ForwardStats {
+    /// Multiply-adds actually spent in block linear projections.
+    pub macs_kept: u64,
+    /// Multiply-adds a dense pass would have spent in the same projections.
+    pub macs_dense: u64,
+    /// Extra MACs from method side-paths (e.g. R-Sparse low-rank).
+    pub macs_extra: u64,
+    /// Tokens processed.
+    pub tokens: u64,
+}
+
+impl ForwardStats {
+    pub fn add(&mut self, other: &ForwardStats) {
+        self.macs_kept += other.macs_kept;
+        self.macs_dense += other.macs_dense;
+        self.macs_extra += other.macs_extra;
+        self.tokens += other.tokens;
+    }
+
+    /// Achieved density of the linear projections (1.0 = dense).
+    pub fn density(&self) -> f64 {
+        if self.macs_dense == 0 {
+            return 1.0;
+        }
+        (self.macs_kept + self.macs_extra) as f64 / self.macs_dense as f64
+    }
+
+    /// FLOPs (2 * MACs) per token actually spent.
+    pub fn flops_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            return 0.0;
+        }
+        2.0 * (self.macs_kept + self.macs_extra) as f64 / self.tokens as f64
+    }
+}
+
+/// Reusable per-sequence scratch buffers (kept out of the hot loop's
+/// allocator traffic).
+pub struct Scratch {
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    o: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    hbuf: Vec<f32>,
+    down: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        let d = cfg.d_model;
+        let f = cfg.ffn_dim;
+        Self {
+            normed: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            attn_out: vec![0.0; d],
+            o: vec![0.0; d],
+            gate: vec![0.0; f],
+            up: vec![0.0; f],
+            hbuf: vec![0.0; f],
+            down: vec![0.0; d],
+            scores: vec![0.0; cfg.max_seq],
+        }
+    }
+}
+
+/// The model: weights in kernel layout plus precomputed per-layer column
+/// norms (`g` of Eq. 4).
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub embed: Tensor,
+    pub blocks: Vec<BlockWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: ColMajorMatrix,
+    /// `g` vectors indexed by `LayerId::flat()`.
+    pub col_norms: Vec<Vec<f32>>,
+}
+
+impl Model {
+    /// Assemble from a named-tensor store (the trainer's output).
+    pub fn from_weights(cfg: ModelConfig, w: &Weights) -> anyhow::Result<Model> {
+        let expect2 = |name: &str, m: usize, n: usize| -> anyhow::Result<ColMajorMatrix> {
+            let t = w.get(name)?;
+            let (tm, tn) = t.dims2();
+            if (tm, tn) != (m, n) {
+                anyhow::bail!("tensor `{name}`: expected [{m}, {n}], got {:?}", t.shape);
+            }
+            Ok(ColMajorMatrix::from_row_major(t))
+        };
+        let expect1 = |name: &str, n: usize| -> anyhow::Result<Vec<f32>> {
+            let t = w.get(name)?;
+            if t.shape != vec![n] {
+                anyhow::bail!("tensor `{name}`: expected [{n}], got {:?}", t.shape);
+            }
+            Ok(t.data.clone())
+        };
+        let d = cfg.d_model;
+        let f = cfg.ffn_dim;
+        let embed = w.get("embed.weight")?.clone();
+        if embed.shape != vec![cfg.vocab_size, d] {
+            anyhow::bail!("embed.weight shape {:?}", embed.shape);
+        }
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for b in 0..cfg.n_layers {
+            blocks.push(BlockWeights {
+                attn_norm: expect1(&format!("blocks.{b}.attn_norm.weight"), d)?,
+                wq: expect2(&Weights::attn_weight_name(b, "q"), d, d)?,
+                wk: expect2(&Weights::attn_weight_name(b, "k"), d, d)?,
+                wv: expect2(&Weights::attn_weight_name(b, "v"), d, d)?,
+                wo: expect2(&Weights::attn_weight_name(b, "o"), d, d)?,
+                mlp_norm: expect1(&format!("blocks.{b}.mlp_norm.weight"), d)?,
+                w_gate: expect2(&Weights::mlp_weight_name(b, "gate"), f, d)?,
+                w_up: expect2(&Weights::mlp_weight_name(b, "up"), f, d)?,
+                w_down: expect2(&Weights::mlp_weight_name(b, "down"), d, f)?,
+            });
+        }
+        let final_norm = expect1("final_norm.weight", d)?;
+        let lm_head = expect2("lm_head.weight", cfg.vocab_size, d)?;
+        let mut col_norms = Vec::with_capacity(cfg.n_layers * 7);
+        for block in &blocks {
+            for &kind in &LayerKind::ALL {
+                col_norms.push(block.w(kind).col_l2_norms());
+            }
+        }
+        Ok(Model {
+            cfg,
+            embed,
+            blocks,
+            final_norm,
+            lm_head,
+            col_norms,
+        })
+    }
+
+    /// Load `config.json` + `weights.bin` from a model directory.
+    pub fn load_dir(dir: &Path) -> anyhow::Result<Model> {
+        let cfg = ModelConfig::load(&dir.join("config.json"))?;
+        let w = Weights::load(&dir.join("weights.bin"))?;
+        Self::from_weights(cfg, &w)
+    }
+
+    pub fn w(&self, id: LayerId) -> &ColMajorMatrix {
+        self.blocks[id.block].w(id.kind)
+    }
+
+    /// Precomputed `g_i = ||W[:,i]||_2` for a layer.
+    pub fn g(&self, id: LayerId) -> &[f32] {
+        &self.col_norms[id.flat()]
+    }
+
+    /// Run one token through one block in place. `x` is the residual stream.
+    #[allow(clippy::too_many_arguments)]
+    fn block_step(
+        &self,
+        b: usize,
+        cache_block_idx: usize,
+        x: &mut [f32],
+        pos: usize,
+        cache: &mut KvCache,
+        sp: &dyn Sparsifier,
+        scratch: &mut Scratch,
+        stats: &mut ForwardStats,
+    ) {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let hd = cfg.head_dim();
+        let block = &self.blocks[b];
+        let proj = |kind: LayerKind,
+                        input: &[f32],
+                        out: &mut [f32],
+                        stats: &mut ForwardStats| {
+            let id = LayerId::new(b, kind);
+            let w = block.w(kind);
+            let kept = sp.project(id, input, w, out);
+            stats.macs_kept += (kept * w.m) as u64;
+            stats.macs_dense += (w.n * w.m) as u64;
+            stats.macs_extra += sp.extra_macs(id, w);
+        };
+
+        // --- attention ---
+        rmsnorm(x, &block.attn_norm, cfg.rmsnorm_eps, &mut scratch.normed);
+        proj(LayerKind::Q, &scratch.normed, &mut scratch.q, stats);
+        proj(LayerKind::K, &scratch.normed, &mut scratch.k, stats);
+        proj(LayerKind::V, &scratch.normed, &mut scratch.v, stats);
+        for h in 0..cfg.n_heads {
+            rope_inplace(&mut scratch.q[h * hd..(h + 1) * hd], pos, cfg.rope_base);
+            rope_inplace(&mut scratch.k[h * hd..(h + 1) * hd], pos, cfg.rope_base);
+        }
+        cache.blocks[cache_block_idx].store(pos, &scratch.k, &scratch.v);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let cache_block = &cache.blocks[cache_block_idx];
+        for h in 0..cfg.n_heads {
+            let qh = &scratch.q[h * hd..(h + 1) * hd];
+            let scores = &mut scratch.scores[..=pos];
+            for (t, s) in scores.iter_mut().enumerate() {
+                let kh = &cache_block.k_at(t)[h * hd..(h + 1) * hd];
+                let mut acc = 0.0f32;
+                for i in 0..hd {
+                    acc += qh[i] * kh[i];
+                }
+                *s = acc * scale;
+            }
+            softmax_inplace(scores);
+            let out_h = &mut scratch.attn_out[h * hd..(h + 1) * hd];
+            out_h.fill(0.0);
+            for (t, &sc) in scores.iter().enumerate() {
+                let vh = &cache_block.v_at(t)[h * hd..(h + 1) * hd];
+                for i in 0..hd {
+                    out_h[i] += sc * vh[i];
+                }
+            }
+        }
+        proj(LayerKind::O, &scratch.attn_out, &mut scratch.o, stats);
+        for i in 0..d {
+            x[i] += scratch.o[i];
+        }
+
+        // --- MLP (SwiGLU) ---
+        rmsnorm(x, &block.mlp_norm, cfg.rmsnorm_eps, &mut scratch.normed);
+        proj(LayerKind::Gate, &scratch.normed, &mut scratch.gate, stats);
+        proj(LayerKind::Up, &scratch.normed, &mut scratch.up, stats);
+        for i in 0..cfg.ffn_dim {
+            scratch.hbuf[i] = silu(scratch.gate[i]) * scratch.up[i];
+        }
+        proj(LayerKind::Down, &scratch.hbuf, &mut scratch.down, stats);
+        for i in 0..d {
+            x[i] += scratch.down[i];
+        }
+    }
+
+    /// Decode one token: returns the logits for the next position.
+    /// `cache.len` is the current position; it is incremented.
+    pub fn forward_token(
+        &self,
+        token: usize,
+        cache: &mut KvCache,
+        sp: &dyn Sparsifier,
+        scratch: &mut Scratch,
+        stats: &mut ForwardStats,
+    ) -> Vec<f32> {
+        assert!(token < self.cfg.vocab_size, "token {token} out of vocab");
+        assert!(!cache.is_full(), "KV cache full (max_seq {})", cache.max_seq);
+        let pos = cache.len;
+        let mut x = self.embed.row(token).to_vec();
+        for b in 0..self.cfg.n_layers {
+            self.block_step(b, b, &mut x, pos, cache, sp, scratch, stats);
+        }
+        cache.len = pos + 1;
+        stats.tokens += 1;
+        let mut normed = vec![0.0f32; self.cfg.d_model];
+        rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut normed);
+        let mut logits = vec![0.0f32; self.cfg.vocab_size];
+        dense_gemv(&self.lm_head, &normed, &mut logits);
+        logits
+    }
+
+    /// Full-sequence forward. Returns `[T, vocab]` logits. If `block_taps`
+    /// is provided it receives, per block, the `[T, d]` inputs to that block
+    /// (the calibration capture for Alg. 2-4).
+    pub fn forward_seq(
+        &self,
+        tokens: &[usize],
+        sp: &dyn Sparsifier,
+        stats: &mut ForwardStats,
+        mut block_taps: Option<&mut Vec<Tensor>>,
+    ) -> Tensor {
+        assert!(!tokens.is_empty());
+        assert!(tokens.len() <= self.cfg.max_seq, "sequence too long");
+        let d = self.cfg.d_model;
+        if let Some(taps) = block_taps.as_deref_mut() {
+            taps.clear();
+            for _ in 0..self.cfg.n_layers {
+                taps.push(Tensor::zeros(&[tokens.len(), d]));
+            }
+        }
+        let mut cache = KvCache::new(&self.cfg);
+        let mut scratch = Scratch::new(&self.cfg);
+        let mut logits = Tensor::zeros(&[tokens.len(), self.cfg.vocab_size]);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let pos = cache.len;
+            let mut x = self.embed.row(tok).to_vec();
+            for b in 0..self.cfg.n_layers {
+                if let Some(taps) = block_taps.as_deref_mut() {
+                    taps[b].row_mut(t).copy_from_slice(&x);
+                }
+                self.block_step(b, b, &mut x, pos, &mut cache, sp, &mut scratch, stats);
+            }
+            cache.len = pos + 1;
+            stats.tokens += 1;
+            let mut normed = vec![0.0f32; d];
+            rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut normed);
+            dense_gemv(&self.lm_head, &normed, logits.row_mut(t));
+        }
+        logits
+    }
+
+    /// Run captured block inputs `xs: [T, d]` through block `b` alone
+    /// (fresh local KV cache), returning the block outputs `[T, d]`.
+    /// This is `F_B(x_B)` / `F_B^sparse(x_B; alpha, tau)` from Eq. 6.
+    pub fn block_forward_seq(
+        &self,
+        b: usize,
+        xs: &Tensor,
+        sp: &dyn Sparsifier,
+        stats: &mut ForwardStats,
+    ) -> Tensor {
+        let (t_len, d) = xs.dims2();
+        assert_eq!(d, self.cfg.d_model);
+        let mut cache = KvCache::single_block(&self.cfg);
+        let mut scratch = Scratch::new(&self.cfg);
+        let mut out = Tensor::zeros(&[t_len, d]);
+        for t in 0..t_len {
+            let mut x = xs.row(t).to_vec();
+            self.block_step(b, 0, &mut x, t, &mut cache, sp, &mut scratch, stats);
+            out.row_mut(t).copy_from_slice(&x);
+        }
+        out
+    }
+
+    /// Greedy-decode `n_new` tokens after a prompt. Returns generated ids.
+    pub fn generate_greedy(
+        &self,
+        prompt: &[usize],
+        n_new: usize,
+        sp: &dyn Sparsifier,
+        stats: &mut ForwardStats,
+    ) -> Vec<usize> {
+        let mut cache = KvCache::new(&self.cfg);
+        let mut scratch = Scratch::new(&self.cfg);
+        let mut logits = vec![];
+        for &t in prompt {
+            logits = self.forward_token(t, &mut cache, sp, &mut scratch, stats);
+        }
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            if cache.is_full() {
+                break;
+            }
+            let next = crate::tensor::ops::argmax(&logits);
+            out.push(next);
+            logits = self.forward_token(next, &mut cache, sp, &mut scratch, stats);
+        }
+        out
+    }
+
+    /// Synthetic randomly-initialized model (tests only; real weights come
+    /// from the Python trainer).
+    pub fn synthetic(cfg: ModelConfig, seed: u64) -> Model {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(seed);
+        let d = cfg.d_model;
+        let f = cfg.ffn_dim;
+        let std = 0.7 / (d as f32).sqrt();
+        let mut w = Weights::default();
+        w.insert("embed.weight", Tensor::randn(&[cfg.vocab_size, d], 0.02, &mut rng));
+        for b in 0..cfg.n_layers {
+            w.insert(
+                &format!("blocks.{b}.attn_norm.weight"),
+                Tensor::full(&[d], 1.0),
+            );
+            for which in ["q", "k", "v", "o"] {
+                w.insert(
+                    &Weights::attn_weight_name(b, which),
+                    Tensor::randn(&[d, d], std, &mut rng),
+                );
+            }
+            w.insert(
+                &format!("blocks.{b}.mlp_norm.weight"),
+                Tensor::full(&[d], 1.0),
+            );
+            w.insert(
+                &Weights::mlp_weight_name(b, "gate"),
+                Tensor::randn(&[f, d], std, &mut rng),
+            );
+            w.insert(
+                &Weights::mlp_weight_name(b, "up"),
+                Tensor::randn(&[f, d], std, &mut rng),
+            );
+            w.insert(
+                &Weights::mlp_weight_name(b, "down"),
+                Tensor::randn(&[d, f], std, &mut rng),
+            );
+        }
+        w.insert("final_norm.weight", Tensor::full(&[d], 1.0));
+        w.insert("lm_head.weight", Tensor::randn(&[cfg.vocab_size, d], 0.02, &mut rng));
+        Model::from_weights(cfg, &w).expect("synthetic weights are well-formed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::Dense;
+
+    fn nano() -> Model {
+        Model::synthetic(ModelConfig::preset("nano").unwrap(), 42)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = nano();
+        let mut stats = ForwardStats::default();
+        let logits = m.forward_seq(&[1, 2, 3, 4], &Dense, &mut stats, None);
+        assert_eq!(logits.shape, vec![4, m.cfg.vocab_size]);
+        assert_eq!(stats.tokens, 4);
+        assert!(stats.macs_dense > 0);
+        assert_eq!(stats.macs_kept, stats.macs_dense); // dense keeps all
+        assert!((stats.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn incremental_matches_seq() {
+        let m = nano();
+        let tokens = [5usize, 9, 200, 3, 77];
+        let mut stats = ForwardStats::default();
+        let seq_logits = m.forward_seq(&tokens, &Dense, &mut stats, None);
+        // Incremental decode must produce identical logits per position.
+        let mut cache = KvCache::new(&m.cfg);
+        let mut scratch = Scratch::new(&m.cfg);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let l = m.forward_token(tok, &mut cache, &Dense, &mut scratch, &mut stats);
+            for v in 0..m.cfg.vocab_size {
+                assert!(
+                    (l[v] - seq_logits.at2(t, v)).abs() < 1e-4,
+                    "pos {t} vocab {v}: {} vs {}",
+                    l[v],
+                    seq_logits.at2(t, v)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn logits_depend_on_context() {
+        let m = nano();
+        let mut stats = ForwardStats::default();
+        let a = m.forward_seq(&[1, 2, 3], &Dense, &mut stats, None);
+        let b = m.forward_seq(&[7, 2, 3], &Dense, &mut stats, None);
+        // Same last token, different context -> different last logits.
+        let diff: f32 = (0..m.cfg.vocab_size)
+            .map(|v| (a.at2(2, v) - b.at2(2, v)).abs())
+            .sum();
+        assert!(diff > 1e-4, "attention ignored context");
+    }
+
+    #[test]
+    fn causality() {
+        // Changing a FUTURE token must not change past logits.
+        let m = nano();
+        let mut stats = ForwardStats::default();
+        let a = m.forward_seq(&[1, 2, 3, 4], &Dense, &mut stats, None);
+        let b = m.forward_seq(&[1, 2, 3, 200], &Dense, &mut stats, None);
+        for t in 0..3 {
+            for v in 0..m.cfg.vocab_size {
+                assert!(
+                    (a.at2(t, v) - b.at2(t, v)).abs() < 1e-6,
+                    "future token leaked into position {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_taps_capture_inputs() {
+        let m = nano();
+        let mut stats = ForwardStats::default();
+        let mut taps = Vec::new();
+        let _ = m.forward_seq(&[1, 2, 3], &Dense, &mut stats, Some(&mut taps));
+        assert_eq!(taps.len(), m.cfg.n_layers);
+        assert_eq!(taps[0].shape, vec![3, m.cfg.d_model]);
+        // Block 0 inputs are the embeddings.
+        for t in 0..3 {
+            let tok = [1usize, 2, 3][t];
+            for i in 0..m.cfg.d_model {
+                assert!((taps[0].at2(t, i) - m.embed.at2(tok, i)).abs() < 1e-6);
+            }
+        }
+        // Deeper blocks see transformed inputs.
+        assert!(taps[1].max_abs_diff(&taps[0]) > 1e-6);
+    }
+
+    #[test]
+    fn block_forward_consistent_with_taps() {
+        // Running block b on its captured inputs reproduces block b+1 inputs.
+        let m = nano();
+        let mut stats = ForwardStats::default();
+        let mut taps = Vec::new();
+        let _ = m.forward_seq(&[10, 20, 30], &Dense, &mut stats, Some(&mut taps));
+        let out0 = m.block_forward_seq(0, &taps[0], &Dense, &mut stats);
+        assert!(
+            out0.max_abs_diff(&taps[1]) < 1e-4,
+            "block_forward_seq diverges from in-model block output"
+        );
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let m = nano();
+        let mut s1 = ForwardStats::default();
+        let mut s2 = ForwardStats::default();
+        let a = m.generate_greedy(&[1, 2], 8, &Dense, &mut s1);
+        let b = m.generate_greedy(&[1, 2], 8, &Dense, &mut s2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn g_vectors_present_for_all_layers() {
+        let m = nano();
+        for id in crate::model::layers::all_layers(&m.cfg) {
+            let g = m.g(id);
+            assert_eq!(g.len(), id.kind.dims(&m.cfg).1);
+            assert!(g.iter().all(|&v| v >= 0.0));
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Binary weight interchange format shared with the Python trainer.
+//!
+//! Layout (all little-endian):
+//! ```text
+//!   magic    8 bytes  "WSPW0001"
+//!   count    u32      number of tensors
+//!   repeat count times:
+//!     name_len u32, name bytes (utf-8)
+//!     ndim     u32, dims ndim x u32
+//!     data     prod(dims) x f32
+//! ```
+//! Tensor names follow the convention used by `python/compile/train.py`:
+//! `embed.weight`, `blocks.{i}.attn_norm.weight`, `blocks.{i}.attn.wq.weight`,
+//! ..., `final_norm.weight`, `lm_head.weight`.
+
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"WSPW0001";
+
+/// Named tensor store (order-preserving by name via BTreeMap).
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing tensor `{name}`"))
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            let nb = name.as_bytes();
+            buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            buf.extend_from_slice(nb);
+            buf.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Weights> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> anyhow::Result<Weights> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> anyhow::Result<&[u8]> {
+            if *pos + n > buf.len() {
+                anyhow::bail!("truncated weight file at byte {pos}");
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let magic = take(&mut pos, 8)?;
+        if magic != MAGIC {
+            anyhow::bail!("bad magic {:?} (not a WSPW0001 weight file)", magic);
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut w = Weights::default();
+        for _ in 0..count {
+            let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .map_err(|_| anyhow::anyhow!("non-utf8 tensor name"))?;
+            let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            if ndim == 0 || ndim > 3 {
+                anyhow::bail!("tensor `{name}`: bad ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let raw = take(&mut pos, numel * 4)?;
+            let mut data = Vec::with_capacity(numel);
+            for c in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            w.tensors.insert(name, Tensor::from_vec(&shape, data));
+        }
+        if pos != buf.len() {
+            anyhow::bail!("trailing bytes in weight file ({} unused)", buf.len() - pos);
+        }
+        Ok(w)
+    }
+
+    /// Tensor-name helpers matching the Python trainer's convention.
+    pub fn attn_weight_name(block: usize, which: &str) -> String {
+        format!("blocks.{block}.attn.w{which}.weight")
+    }
+
+    pub fn mlp_weight_name(block: usize, which: &str) -> String {
+        format!("blocks.{block}.mlp.w_{which}.weight")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Pcg64::new(4);
+        let mut w = Weights::default();
+        w.insert("a.weight", Tensor::randn(&[3, 4], 1.0, &mut rng));
+        w.insert("b", Tensor::randn(&[7], 0.5, &mut rng));
+        w.insert("c3", Tensor::randn(&[2, 3, 4], 2.0, &mut rng));
+        let dir = std::env::temp_dir().join("wisparse_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        w.save(&path).unwrap();
+        let w2 = Weights::load(&path).unwrap();
+        assert_eq!(w.tensors.len(), w2.tensors.len());
+        for (name, t) in &w.tensors {
+            assert_eq!(t, w2.tensors.get(name).unwrap(), "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Weights::from_bytes(b"NOTMAGIC\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut w = Weights::default();
+        w.insert("t", Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]));
+        let dir = std::env::temp_dir().join("wisparse_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        w.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(Weights::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // Trailing junk also rejected.
+        let mut extended = bytes.clone();
+        extended.extend_from_slice(&[0u8; 4]);
+        assert!(Weights::from_bytes(&extended).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let w = Weights::default();
+        assert!(w.get("nope").is_err());
+    }
+}

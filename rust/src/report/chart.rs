@@ -1,0 +1,86 @@
+//! ASCII charts: enough to eyeball the shape of every figure in a terminal.
+
+/// Render labeled series as a simple scaled bar/line chart.
+/// `series`: (label, points). All series share the y-scale.
+pub fn ascii_chart(title: &str, series: &[(&str, Vec<(f64, f64)>)], height: usize) -> String {
+    let mut out = format!("── {title} ──\n");
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().map(|&(_, y)| y))
+        .collect();
+    if all.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let ymin = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let ymax = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (ymax - ymin).max(1e-12);
+    let height = height.max(3);
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    // One row of columns per series point, rasterized to a grid.
+    let width: usize = series.iter().map(|(_, p)| p.len()).max().unwrap_or(0);
+    let mut grid = vec![vec![' '; width * 2]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for (xi, &(_, y)) in pts.iter().enumerate() {
+            let row = ((y - ymin) / span * (height - 1) as f64).round() as usize;
+            let r = height - 1 - row.min(height - 1);
+            grid[r][xi * 2] = marks[si % marks.len()];
+        }
+    }
+    for (r, row) in grid.iter().enumerate() {
+        let yval = ymax - span * r as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:>10.3} |"));
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width * 2)));
+    // X labels: first and last x of the longest series.
+    if let Some((_, pts)) = series.iter().max_by_key(|(_, p)| p.len()) {
+        if let (Some(first), Some(last)) = (pts.first(), pts.last()) {
+            out.push_str(&format!(
+                "{:>11}{:<width$.3}{:>8.3}\n",
+                "",
+                first.0,
+                last.0,
+                width = (width * 2).saturating_sub(8).max(1)
+            ));
+        }
+    }
+    for (si, (label, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {label}\n", marks[si % marks.len()]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_basic_chart() {
+        let s = ascii_chart(
+            "test",
+            &[
+                ("up", vec![(0.0, 1.0), (1.0, 2.0), (2.0, 3.0)]),
+                ("down", vec![(0.0, 3.0), (1.0, 2.0), (2.0, 1.0)]),
+            ],
+            5,
+        );
+        assert!(s.contains("── test ──"));
+        assert!(s.contains('*'));
+        assert!(s.contains('o'));
+        assert!(s.contains("up"));
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let s = ascii_chart("empty", &[], 5);
+        assert!(s.contains("(no data)"));
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let s = ascii_chart("flat", &[("c", vec![(0.0, 5.0), (1.0, 5.0)])], 4);
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,66 @@
+//! CSV output for figures (each bench target writes `results/*.csv` so the
+//! series can be re-plotted outside the terminal).
+
+use std::path::Path;
+
+/// Quote a CSV field if needed.
+fn field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Write rows of stringified cells with a header.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.iter().map(|h| field(h)).collect::<Vec<_>>().join(","));
+    out.push('\n');
+    for row in rows {
+        if row.len() != header.len() {
+            anyhow::bail!("row width {} != header width {}", row.len(), header.len());
+        }
+        out.push_str(&row.iter().map(|c| field(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Convenience: format an f64 for CSV.
+pub fn f(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let path = std::env::temp_dir().join("wisparse_csv_test.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            &[
+                vec!["1".into(), "x,y".into()],
+                vec!["2".into(), "plain".into()],
+            ],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert!(text.contains("\"x,y\""));
+        assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let path = std::env::temp_dir().join("wisparse_csv_test2.csv");
+        assert!(write_csv(&path, &["a", "b"], &[vec!["1".into()]]).is_err());
+    }
+}

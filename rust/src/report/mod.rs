@@ -1,0 +1,8 @@
+//! Reporting: CSV emission and terminal-friendly charts for regenerating
+//! the paper's tables and figures.
+
+pub mod csv;
+pub mod chart;
+
+pub use csv::write_csv;
+pub use chart::ascii_chart;

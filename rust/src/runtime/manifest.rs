@@ -1,0 +1,135 @@
+//! AOT parameter manifest: the contract between `python/compile/aot.py`
+//! (which lowers the JAX model with a fixed parameter order) and the Rust
+//! runtime (which must feed literals in exactly that order).
+//!
+//! ```json
+//! {
+//!   "model": "llama-micro",
+//!   "variant": "dense" | "wisparse",
+//!   "seq_len": 64,
+//!   "vocab_size": 256,
+//!   "params": [{"name": "embed.weight", "shape": [256, 128]}, ...]
+//! }
+//! ```
+//! `params` excludes the token input (always parameter 0 on the HLO side).
+//! For the "wisparse" variant, extra parameters named `sparse.<layer>.ga`
+//! (shape `[in_dim]`) and `sparse.<layer>.tau` (shape `[1]`) follow the
+//! weights; the Rust side materializes them from a calibrated plan.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub model: String,
+    pub variant: String,
+    pub seq_len: usize,
+    pub vocab_size: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn from_json(j: &Json) -> anyhow::Result<Manifest> {
+        let params = j
+            .req_arr("params")?
+            .iter()
+            .map(|p| {
+                let name = p.req_str("name")?.to_string();
+                let shape = p
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("param `{name}`: missing shape"))?
+                    .iter()
+                    .map(|d| {
+                        d.as_usize()
+                            .ok_or_else(|| anyhow::anyhow!("param `{name}`: bad dim"))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                Ok(ParamSpec { name, shape })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Manifest {
+            model: j.req_str("model")?.to_string(),
+            variant: j.req_str("variant")?.to_string(),
+            seq_len: j.req_usize("seq_len")?,
+            vocab_size: j.req_usize("vocab_size")?,
+            params,
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("variant", Json::Str(self.variant.clone())),
+            ("seq_len", Json::Num(self.seq_len as f64)),
+            ("vocab_size", Json::Num(self.vocab_size as f64)),
+            (
+                "params",
+                Json::Arr(
+                    self.params
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("name", Json::Str(p.name.clone())),
+                                (
+                                    "shape",
+                                    Json::Arr(
+                                        p.shape
+                                            .iter()
+                                            .map(|&d| Json::Num(d as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let m = Manifest {
+            model: "llama-micro".into(),
+            variant: "dense".into(),
+            seq_len: 64,
+            vocab_size: 256,
+            params: vec![
+                ParamSpec {
+                    name: "embed.weight".into(),
+                    shape: vec![256, 128],
+                },
+                ParamSpec {
+                    name: "final_norm.weight".into(),
+                    shape: vec![128],
+                },
+            ],
+        };
+        let m2 = Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let j = Json::parse(r#"{"model": "x"}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

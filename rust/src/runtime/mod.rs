@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO (text) produced by
+//! `python/compile/aot.py`, compile it on the PJRT CPU client, and execute
+//! it with weight literals — the Rust side of the L2/L3 bridge. Python is
+//! build-time only; at runtime this module and the native engine are the
+//! only execution paths.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod validate;
+
+pub use manifest::Manifest;
+pub use pjrt::PjrtModel;

@@ -1,0 +1,164 @@
+//! PJRT CPU execution of AOT-lowered HLO text.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::model::layers::LayerId;
+use crate::model::weights::Weights;
+use crate::runtime::manifest::Manifest;
+use crate::sparsity::plan::SparsityPlan;
+use crate::sparsity::score::pow_clamped;
+use crate::tensor::Tensor;
+use std::path::Path;
+
+/// A compiled HLO model ready to execute.
+pub struct PjrtModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+impl PjrtModel {
+    /// Load `<dir>/<variant>.hlo.txt` + `<dir>/<variant>.manifest.json`,
+    /// compile on a fresh CPU client.
+    pub fn load(dir: &Path, variant: &str) -> anyhow::Result<PjrtModel> {
+        let manifest = Manifest::load(&dir.join(format!("{variant}.manifest.json")))?;
+        let hlo_path = dir.join(format!("{variant}.hlo.txt"));
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", hlo_path.display()))?;
+        Ok(PjrtModel { exe, manifest })
+    }
+
+    /// Build the literal list for the weight parameters (in manifest
+    /// order); sparse params are resolved from `plan` (required iff the
+    /// variant is "wisparse").
+    fn param_literals(
+        &self,
+        weights: &Weights,
+        plan: Option<&SparsityPlan>,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(self.manifest.params.len());
+        for spec in &self.manifest.params {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let data: Vec<f32> = if let Some(rest) = spec.name.strip_prefix("sparse.") {
+                let plan = plan.ok_or_else(|| {
+                    anyhow::anyhow!("variant `{}` needs a sparsity plan", self.manifest.variant)
+                })?;
+                let (layer_key, field) = rest
+                    .rsplit_once('.')
+                    .ok_or_else(|| anyhow::anyhow!("bad sparse param `{}`", spec.name))?;
+                let id = LayerId::from_key(layer_key)
+                    .ok_or_else(|| anyhow::anyhow!("bad layer key `{layer_key}`"))?;
+                let lp = plan.layer(id);
+                match field {
+                    "ga" => {
+                        // g must come from the weights we are executing with.
+                        let wname = weight_name_for(id);
+                        let w = weights.get(&wname)?;
+                        pow_clamped(&w.col_l2_norms(), lp.alpha)
+                    }
+                    "tau" => vec![lp.tau],
+                    _ => anyhow::bail!("unknown sparse field `{field}`"),
+                }
+            } else {
+                let t = weights.get(&spec.name)?;
+                if t.shape != spec.shape {
+                    anyhow::bail!(
+                        "param `{}`: manifest shape {:?} != weight shape {:?}",
+                        spec.name,
+                        spec.shape,
+                        t.shape
+                    );
+                }
+                t.data.clone()
+            };
+            let expected: usize = spec.shape.iter().product();
+            if data.len() != expected {
+                anyhow::bail!("param `{}`: built {} values, need {expected}", spec.name, data.len());
+            }
+            let lit = xla::Literal::vec1(&data)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshaping `{}`: {e:?}", spec.name))?;
+            lits.push(lit);
+        }
+        Ok(lits)
+    }
+
+    /// Execute the model on a token sequence (padded/truncated to the
+    /// manifest's fixed seq_len). Returns `[seq_len, vocab]` logits.
+    pub fn forward(
+        &self,
+        tokens: &[usize],
+        weights: &Weights,
+        plan: Option<&SparsityPlan>,
+    ) -> anyhow::Result<Tensor> {
+        let t_len = self.manifest.seq_len;
+        let mut toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        toks.resize(t_len, 0);
+        let tok_lit = xla::Literal::vec1(&toks)
+            .reshape(&[t_len as i64])
+            .map_err(|e| anyhow::anyhow!("token literal: {e:?}"))?;
+        let mut args = vec![tok_lit];
+        args.extend(self.param_literals(weights, plan)?);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let values: Vec<f32> = out
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        let vocab = self.manifest.vocab_size;
+        if values.len() != t_len * vocab {
+            anyhow::bail!(
+                "unexpected output size {} (want {} x {})",
+                values.len(),
+                t_len,
+                vocab
+            );
+        }
+        Ok(Tensor::from_vec(&[t_len, vocab], values))
+    }
+}
+
+/// Map a LayerId to its weight tensor name (trainer convention).
+pub fn weight_name_for(id: LayerId) -> String {
+    use crate::model::layers::LayerKind::*;
+    match id.kind {
+        Q => Weights::attn_weight_name(id.block, "q"),
+        K => Weights::attn_weight_name(id.block, "k"),
+        V => Weights::attn_weight_name(id.block, "v"),
+        O => Weights::attn_weight_name(id.block, "o"),
+        Gate => Weights::mlp_weight_name(id.block, "gate"),
+        Up => Weights::mlp_weight_name(id.block, "up"),
+        Down => Weights::mlp_weight_name(id.block, "down"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layers::LayerKind;
+
+    #[test]
+    fn weight_names_match_convention() {
+        assert_eq!(
+            weight_name_for(LayerId::new(2, LayerKind::Q)),
+            "blocks.2.attn.wq.weight"
+        );
+        assert_eq!(
+            weight_name_for(LayerId::new(0, LayerKind::Down)),
+            "blocks.0.mlp.w_down.weight"
+        );
+    }
+}

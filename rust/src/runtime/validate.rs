@@ -1,0 +1,83 @@
+//! Native-vs-PJRT cross-validation: the two execution backends must agree
+//! on logits for the same weights, both dense and under a WiSparse plan.
+//! This is the proof that the three layers (Pallas kernel -> JAX model ->
+//! Rust engine) compute the same function.
+
+use crate::model::transformer::{ForwardStats, Model};
+use crate::model::weights::Weights;
+use crate::runtime::pjrt::PjrtModel;
+use crate::sparsity::methods::ScoredSparsifier;
+use crate::sparsity::plan::SparsityPlan;
+use crate::sparsity::Dense;
+use std::path::Path;
+
+/// Result of one cross-validation run.
+#[derive(Debug)]
+pub struct ValidationReport {
+    pub variant: String,
+    pub seq_len: usize,
+    pub max_abs_diff: f32,
+    pub mean_abs_diff: f64,
+    pub pass: bool,
+}
+
+impl ValidationReport {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<10} seq {:>4}  max|Δ| {:.3e}  mean|Δ| {:.3e}  {}",
+            self.variant,
+            self.seq_len,
+            self.max_abs_diff,
+            self.mean_abs_diff,
+            if self.pass { "PASS" } else { "FAIL" }
+        )
+    }
+}
+
+/// Compare the native engine against the compiled HLO on one token
+/// sequence. `tol` is in absolute logits (f32 accumulation-order noise).
+pub fn cross_validate(
+    model_dir: &Path,
+    variant: &str,
+    tokens: &[usize],
+    plan: Option<&SparsityPlan>,
+    tol: f32,
+) -> anyhow::Result<ValidationReport> {
+    let model = Model::load_dir(model_dir)?;
+    let weights = Weights::load(&model_dir.join("weights.bin"))?;
+    let pjrt = PjrtModel::load(model_dir, variant)?;
+    let t_len = pjrt.manifest.seq_len.min(tokens.len());
+    let tokens = &tokens[..t_len];
+
+    // Native logits.
+    let mut stats = ForwardStats::default();
+    let native = match (variant, plan) {
+        ("dense", _) => model.forward_seq(tokens, &Dense, &mut stats, None),
+        ("wisparse", Some(p)) => {
+            let sp = ScoredSparsifier::from_plan("wisparse", &model, p);
+            model.forward_seq(tokens, &sp, &mut stats, None)
+        }
+        _ => anyhow::bail!("variant `{variant}` needs a plan iff sparse"),
+    };
+
+    // PJRT logits (fixed seq_len; compare the first t_len rows).
+    let pjrt_logits = pjrt.forward(tokens, &weights, plan)?;
+    let vocab = model.cfg.vocab_size;
+    let mut max_diff = 0.0f32;
+    let mut sum_diff = 0.0f64;
+    for t in 0..t_len {
+        for v in 0..vocab {
+            let d = (native.at2(t, v) - pjrt_logits.at2(t, v)).abs();
+            max_diff = max_diff.max(d);
+            sum_diff += d as f64;
+        }
+    }
+    let mean = sum_diff / (t_len * vocab) as f64;
+    Ok(ValidationReport {
+        variant: variant.to_string(),
+        seq_len: t_len,
+        max_abs_diff: max_diff,
+        mean_abs_diff: mean,
+        pass: max_diff <= tol,
+    })
+}

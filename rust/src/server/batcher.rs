@@ -1,0 +1,131 @@
+//! Continuous batcher: FIFO admission with a bounded active set.
+//!
+//! New sequences are admitted between decode steps whenever a slot frees up
+//! (the Orca/vLLM iteration-level scheduling discipline), with backpressure
+//! via a bounded waiting queue.
+
+use crate::server::request::GenRequest;
+use std::collections::VecDeque;
+
+/// Batcher configuration.
+#[derive(Clone, Debug)]
+pub struct BatcherCfg {
+    /// Max concurrent sequences in the decode batch.
+    pub max_batch: usize,
+    /// Max queued (unadmitted) requests before the router returns 503.
+    pub max_queue: usize,
+}
+
+impl Default for BatcherCfg {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_queue: 256,
+        }
+    }
+}
+
+/// FIFO queue with explicit capacity; thread-safety is provided by the
+/// coordinator's mutex around the whole scheduling state.
+pub struct Batcher {
+    cfg: BatcherCfg,
+    waiting: VecDeque<GenRequest>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherCfg) -> Self {
+        Self {
+            cfg,
+            waiting: VecDeque::new(),
+        }
+    }
+
+    /// Try to enqueue; Err = backpressure (queue full).
+    pub fn enqueue(&mut self, req: GenRequest) -> Result<(), GenRequest> {
+        if self.waiting.len() >= self.cfg.max_queue {
+            return Err(req);
+        }
+        self.waiting.push_back(req);
+        Ok(())
+    }
+
+    /// Admit as many waiting requests as fit given `active` running
+    /// sequences. Returns the admitted requests, FIFO order.
+    pub fn admit(&mut self, active: usize) -> Vec<GenRequest> {
+        let slots = self.cfg.max_batch.saturating_sub(active);
+        let take = slots.min(self.waiting.len());
+        self.waiting.drain(..take).collect()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.cfg.max_batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> GenRequest {
+        GenRequest::new(id, "p", 4)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut b = Batcher::new(BatcherCfg {
+            max_batch: 2,
+            max_queue: 10,
+        });
+        for i in 0..5 {
+            b.enqueue(req(i)).unwrap();
+        }
+        let first = b.admit(0);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        let second = b.admit(1); // one active slot occupied
+        assert_eq!(second.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(b.queue_len(), 2);
+    }
+
+    #[test]
+    fn backpressure() {
+        let mut b = Batcher::new(BatcherCfg {
+            max_batch: 1,
+            max_queue: 2,
+        });
+        assert!(b.enqueue(req(0)).is_ok());
+        assert!(b.enqueue(req(1)).is_ok());
+        let rejected = b.enqueue(req(2));
+        assert!(rejected.is_err());
+        assert_eq!(rejected.unwrap_err().id, 2);
+    }
+
+    #[test]
+    fn no_admission_when_full() {
+        let mut b = Batcher::new(BatcherCfg {
+            max_batch: 4,
+            max_queue: 10,
+        });
+        b.enqueue(req(0)).unwrap();
+        assert!(b.admit(4).is_empty());
+        assert_eq!(b.queue_len(), 1);
+    }
+
+    #[test]
+    fn admit_never_exceeds_batch() {
+        let mut b = Batcher::new(BatcherCfg {
+            max_batch: 3,
+            max_queue: 100,
+        });
+        for i in 0..50 {
+            b.enqueue(req(i)).unwrap();
+        }
+        for active in 0..=3 {
+            let admitted = b.admit(active);
+            assert!(admitted.len() + active <= 3);
+        }
+    }
+}

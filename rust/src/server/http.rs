@@ -1,0 +1,195 @@
+//! Minimal HTTP/1.1 front end over std::net (no tokio in this environment).
+//!
+//! Routes:
+//!   GET  /health            -> {"status": "ok"}
+//!   GET  /metrics           -> serving metrics JSON
+//!   POST /generate          -> {"prompt", "max_new"?, "temperature"?}
+//!
+//! One thread per connection; connections are closed after each response
+//! (`Connection: close`), which keeps the parser honest and is plenty for a
+//! reproduction-scale router.
+
+use crate::server::coordinator::Coordinator;
+use crate::server::request::GenRequest;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// A parsed HTTP request (just what the router needs).
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Parse one HTTP/1.1 request from a stream.
+pub fn parse_request<R: BufRead>(reader: &mut R) -> anyhow::Result<HttpRequest> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("missing path"))?
+        .to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad content-length"))?;
+            }
+        }
+    }
+    if content_length > 1 << 20 {
+        anyhow::bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8(body).map_err(|_| anyhow::anyhow!("non-utf8 body"))?,
+    })
+}
+
+/// Serialize an HTTP response.
+pub fn response(status: u16, reason: &str, body: &str) -> String {
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Route one request against the coordinator.
+pub fn route(coord: &Arc<Coordinator>, req: &HttpRequest) -> (u16, &'static str, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => (200, "OK", r#"{"status":"ok"}"#.to_string()),
+        ("GET", "/metrics") => (
+            200,
+            "OK",
+            coord.metrics.lock().unwrap().to_json().to_string_pretty(),
+        ),
+        ("POST", "/generate") => {
+            let parsed = Json::parse(&req.body)
+                .map_err(|e| e.to_string())
+                .and_then(|j| GenRequest::from_json(0, &j).map_err(|e| e.to_string()));
+            match parsed {
+                Err(e) => (
+                    400,
+                    "Bad Request",
+                    Json::obj(vec![("error", Json::Str(e))]).to_string_compact(),
+                ),
+                Ok(r) => match coord.submit_blocking(&r.prompt, r.max_new, r.sampling) {
+                    Ok(resp) => (200, "OK", resp.to_json().to_string_pretty()),
+                    Err(e) => (
+                        503,
+                        "Service Unavailable",
+                        Json::obj(vec![("error", Json::Str(e.to_string()))])
+                            .to_string_compact(),
+                    ),
+                },
+            }
+        }
+        _ => (
+            404,
+            "Not Found",
+            r#"{"error":"not found"}"#.to_string(),
+        ),
+    }
+}
+
+fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
+    let peer = stream.peer_addr().ok();
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut stream = stream;
+    match parse_request(&mut reader) {
+        Ok(req) => {
+            let (status, reason, body) = route(&coord, &req);
+            let _ = stream.write_all(response(status, reason, &body).as_bytes());
+            crate::debug!("{:?} {} {} -> {status}", peer, req.method, req.path);
+        }
+        Err(e) => {
+            let _ = stream.write_all(
+                response(400, "Bad Request", &format!(r#"{{"error":"{e}"}}"#)).as_bytes(),
+            );
+        }
+    }
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:8077"). Returns the bound local
+/// address via the callback before blocking (useful when binding port 0).
+pub fn serve(
+    coord: Arc<Coordinator>,
+    addr: &str,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    on_bound(listener.local_addr()?);
+    for stream in listener.incoming() {
+        if coord.is_shutdown() {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let c = Arc::clone(&coord);
+                std::thread::spawn(move || handle_conn(c, s));
+            }
+            Err(e) => crate::warn_!("accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_post() {
+        let raw = "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 15\r\n\r\n{\"prompt\":\"ab\"}";
+        let req = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/generate");
+        assert_eq!(req.body, "{\"prompt\":\"ab\"}");
+    }
+
+    #[test]
+    fn parse_get_without_body() {
+        let raw = "GET /health HTTP/1.1\r\n\r\n";
+        let req = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_giant_body() {
+        let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 1 << 22);
+        assert!(parse_request(&mut Cursor::new(raw.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn response_has_content_length() {
+        let r = response(200, "OK", "{}");
+        assert!(r.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(r.contains("Content-Length: 2\r\n"));
+        assert!(r.ends_with("{}"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Serving metrics: throughput, latency percentiles, achieved density.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Aggregated serving metrics; the coordinator holds this behind its lock.
+pub struct Metrics {
+    started: Instant,
+    pub requests_total: u64,
+    pub requests_rejected: u64,
+    pub tokens_generated: u64,
+    pub tokens_prefilled: u64,
+    pub queue_ms: Summary,
+    pub total_ms: Summary,
+    pub per_token_ms: Summary,
+    pub macs_kept: u64,
+    pub macs_dense: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            requests_total: 0,
+            requests_rejected: 0,
+            tokens_generated: 0,
+            tokens_prefilled: 0,
+            queue_ms: Summary::new(1024),
+            total_ms: Summary::new(1024),
+            per_token_ms: Summary::new(4096),
+            macs_kept: 0,
+            macs_dense: 0,
+        }
+    }
+
+    /// Decode throughput over the server's lifetime (tokens/s).
+    pub fn throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / secs
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.macs_dense == 0 {
+            return 1.0;
+        }
+        self.macs_kept as f64 / self.macs_dense as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("requests_total", Json::Num(self.requests_total as f64)),
+            ("requests_rejected", Json::Num(self.requests_rejected as f64)),
+            ("tokens_generated", Json::Num(self.tokens_generated as f64)),
+            ("tokens_prefilled", Json::Num(self.tokens_prefilled as f64)),
+            ("throughput_tok_s", Json::Num(self.throughput())),
+            ("density", Json::Num(self.density())),
+            ("queue_ms_p50", Json::Num(self.queue_ms.percentile(0.5))),
+            ("queue_ms_p99", Json::Num(self.queue_ms.percentile(0.99))),
+            ("total_ms_p50", Json::Num(self.total_ms.percentile(0.5))),
+            ("total_ms_p99", Json::Num(self.total_ms.percentile(0.99))),
+            (
+                "per_token_ms_p50",
+                Json::Num(self.per_token_ms.percentile(0.5)),
+            ),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn density_tracks_macs() {
+        let mut m = Metrics::new();
+        assert_eq!(m.density(), 1.0);
+        m.macs_kept = 50;
+        m.macs_dense = 100;
+        assert!((m.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_contains_fields() {
+        let mut m = Metrics::new();
+        m.requests_total = 3;
+        m.tokens_generated = 42;
+        m.queue_ms.add(1.0);
+        let j = m.to_json();
+        assert_eq!(j.get("requests_total").as_usize(), Some(3));
+        assert_eq!(j.get("tokens_generated").as_usize(), Some(42));
+        assert!(j.get("throughput_tok_s").as_f64().is_some());
+    }
+}

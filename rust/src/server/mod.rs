@@ -1,0 +1,20 @@
+//! The L3 serving coordinator.
+//!
+//! A vLLM-router-shaped stack scaled to this testbed: an HTTP/1.1 front end
+//! (std::net + threads — the environment has no tokio), a FIFO admission
+//! queue, a continuous batcher that admits new sequences between decode
+//! steps, and the sparse inference engine running every sequence's
+//! per-token dynamic masks. Python is never on this path: the engine serves
+//! from the native weights, with the PJRT backend available for
+//! cross-validation.
+
+pub mod request;
+pub mod engine;
+pub mod batcher;
+pub mod metrics;
+pub mod http;
+pub mod coordinator;
+
+pub use coordinator::{Coordinator, CoordinatorCfg};
+pub use engine::{Engine, EngineCfg};
+pub use request::{GenRequest, GenResponse};

@@ -1,0 +1,123 @@
+//! Request/response types for the serving path.
+
+use crate::model::sampler::Sampling;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// A generation request as admitted by the router.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+    pub sampling: Sampling,
+    /// Wall-clock admission timestamp (for queue-latency metrics).
+    pub arrived: Instant,
+}
+
+impl GenRequest {
+    pub fn new(id: u64, prompt: &str, max_new: usize) -> Self {
+        Self {
+            id,
+            prompt: prompt.to_string(),
+            max_new,
+            sampling: Sampling::Greedy,
+            arrived: Instant::now(),
+        }
+    }
+
+    /// Parse the POST /generate body:
+    /// `{"prompt": "...", "max_new": 32, "temperature": 0.0}`.
+    pub fn from_json(id: u64, j: &Json) -> anyhow::Result<GenRequest> {
+        let prompt = j.req_str("prompt")?.to_string();
+        if prompt.is_empty() {
+            anyhow::bail!("empty prompt");
+        }
+        let max_new = j.get("max_new").as_usize().unwrap_or(32);
+        let temp = j.get("temperature").as_f64().unwrap_or(0.0);
+        Ok(GenRequest {
+            id,
+            prompt,
+            max_new,
+            sampling: if temp > 0.0 {
+                Sampling::Temperature(temp as f32)
+            } else {
+                Sampling::Greedy
+            },
+            arrived: Instant::now(),
+        })
+    }
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    pub text: String,
+    pub n_prompt_tokens: usize,
+    pub n_generated: usize,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    /// Achieved density over this request's linear projections.
+    pub density: f64,
+}
+
+impl GenResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("text", Json::Str(self.text.clone())),
+            ("prompt_tokens", Json::Num(self.n_prompt_tokens as f64)),
+            ("generated_tokens", Json::Num(self.n_generated as f64)),
+            ("queue_ms", Json::Num(self.queue_ms)),
+            ("total_ms", Json::Num(self.total_ms)),
+            ("density", Json::Num(self.density)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_json() {
+        let j = Json::parse(r#"{"prompt": "12+34=", "max_new": 8}"#).unwrap();
+        let r = GenRequest::from_json(1, &j).unwrap();
+        assert_eq!(r.prompt, "12+34=");
+        assert_eq!(r.max_new, 8);
+        assert_eq!(r.sampling, Sampling::Greedy);
+    }
+
+    #[test]
+    fn parse_with_temperature() {
+        let j = Json::parse(r#"{"prompt": "x", "temperature": 0.7}"#).unwrap();
+        let r = GenRequest::from_json(2, &j).unwrap();
+        assert_eq!(r.sampling, Sampling::Temperature(0.7));
+        assert_eq!(r.max_new, 32); // default
+    }
+
+    #[test]
+    fn rejects_missing_prompt() {
+        let j = Json::parse(r#"{"max_new": 8}"#).unwrap();
+        assert!(GenRequest::from_json(3, &j).is_err());
+        let j2 = Json::parse(r#"{"prompt": ""}"#).unwrap();
+        assert!(GenRequest::from_json(4, &j2).is_err());
+    }
+
+    #[test]
+    fn response_serializes() {
+        let r = GenResponse {
+            id: 9,
+            text: "46.".into(),
+            n_prompt_tokens: 6,
+            n_generated: 3,
+            queue_ms: 0.1,
+            total_ms: 5.0,
+            density: 0.55,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("text").as_str(), Some("46."));
+        assert_eq!(j.get("generated_tokens").as_usize(), Some(3));
+    }
+}

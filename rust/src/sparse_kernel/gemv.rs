@@ -1,0 +1,321 @@
+//! Channel-skipping GEMV kernels.
+//!
+//! All kernels compute `y = x_S (W[:,S])^T` (Eq. 3) for different ways of
+//! choosing `S`, and return `|S|` so the engine can account actual FLOPs.
+//! They accumulate with a single pass over kept channels; each kept channel
+//! contributes one contiguous AXPY over the output vector, which the
+//! compiler auto-vectorizes.
+
+use super::layout::ColMajorMatrix;
+
+/// Dense projection (S = all channels). Baseline for the speedup plots.
+pub fn dense_gemv(w: &ColMajorMatrix, x: &[f32], out: &mut [f32]) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    out.fill(0.0);
+    for (c, &xv) in x.iter().enumerate() {
+        axpy(xv, w.col(c), out);
+    }
+    w.n
+}
+
+/// WiSparse / WINA scored projection: keep channel c iff
+/// `|x_c| * ga_c >= tau`, where `ga_c = g_c^alpha` is precomputed (Eq. 4-5).
+/// Scoring is fused into the accumulation pass — the per-channel overhead is
+/// one abs, one multiply and one compare, matching the paper's "negligible
+/// overhead" claim.
+pub fn sparse_gemv_scored(
+    w: &ColMajorMatrix,
+    x: &[f32],
+    ga: &[f32],
+    tau: f32,
+    out: &mut [f32],
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(ga.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    out.fill(0.0);
+    let mut kept = 0usize;
+    for (c, &xv) in x.iter().enumerate() {
+        if xv.abs() * ga[c] >= tau {
+            axpy(xv, w.col(c), out);
+            kept += 1;
+        }
+    }
+    kept
+}
+
+/// TEAL-style magnitude thresholding: keep iff `|x_c| >= tau`.
+pub fn sparse_gemv_threshold(
+    w: &ColMajorMatrix,
+    x: &[f32],
+    tau: f32,
+    out: &mut [f32],
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    out.fill(0.0);
+    let mut kept = 0usize;
+    for (c, &xv) in x.iter().enumerate() {
+        if xv.abs() >= tau {
+            axpy(xv, w.col(c), out);
+            kept += 1;
+        }
+    }
+    kept
+}
+
+/// Projection over an explicit channel index set (R-Sparse's top-k path,
+/// and the generic fallback).
+pub fn sparse_gemv_indices(
+    w: &ColMajorMatrix,
+    x: &[f32],
+    channels: &[usize],
+    out: &mut [f32],
+) -> usize {
+    debug_assert_eq!(out.len(), w.m);
+    out.fill(0.0);
+    for &c in channels {
+        axpy(x[c], w.col(c), out);
+    }
+    channels.len()
+}
+
+/// Scored projection that additionally writes the kept-channel indices into
+/// `kept_buf` (used by R-Sparse to route the complement through the low-rank
+/// path, and by diagnostics).
+pub fn sparse_gemv_scored_collect(
+    w: &ColMajorMatrix,
+    x: &[f32],
+    ga: &[f32],
+    tau: f32,
+    out: &mut [f32],
+    kept_buf: &mut Vec<usize>,
+) -> usize {
+    out.fill(0.0);
+    kept_buf.clear();
+    for (c, &xv) in x.iter().enumerate() {
+        if xv.abs() * ga[c] >= tau {
+            axpy(xv, w.col(c), out);
+            kept_buf.push(c);
+        }
+    }
+    kept_buf.len()
+}
+
+/// out += a * col. The single hot loop of the engine; kept free of bounds
+/// checks via exact-length slices so LLVM vectorizes it.
+#[inline]
+pub fn axpy(a: f32, col: &[f32], out: &mut [f32]) {
+    if a == 0.0 {
+        return;
+    }
+    let n = out.len();
+    debug_assert_eq!(col.len(), n);
+    let (col, out) = (&col[..n], &mut out[..n]);
+    for i in 0..n {
+        out[i] += a * col[i];
+    }
+}
+
+/// Scored projection with 4-column fused accumulation (§Perf optimization):
+/// kept channels are batched in groups of four so the output vector is
+/// loaded/stored once per four AXPYs instead of once per AXPY, quartering
+/// the dominant store traffic of the skinny-GEMV regime.
+pub fn sparse_gemv_scored_x4(
+    w: &ColMajorMatrix,
+    x: &[f32],
+    ga: &[f32],
+    tau: f32,
+    out: &mut [f32],
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(ga.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    out.fill(0.0);
+    let m = w.m;
+    let mut kept = 0usize;
+    // Pending (coefficient, column offset) pairs awaiting a fused flush.
+    let mut coeffs = [0.0f32; 4];
+    let mut offs = [0usize; 4];
+    let mut pending = 0usize;
+    for (c, &xv) in x.iter().enumerate() {
+        if xv.abs() * ga[c] >= tau {
+            coeffs[pending] = xv;
+            offs[pending] = c * m;
+            pending += 1;
+            kept += 1;
+            if pending == 4 {
+                axpy4(&coeffs, &offs, &w.data, out);
+                pending = 0;
+            }
+        }
+    }
+    for p in 0..pending {
+        axpy(coeffs[p], &w.data[offs[p]..offs[p] + m], out);
+    }
+    kept
+}
+
+/// out += sum_j coeffs[j] * data[offs[j]..offs[j]+m]. All four columns are
+/// walked in lockstep; LLVM vectorizes the inner loop into FMA chains.
+#[inline]
+fn axpy4(coeffs: &[f32; 4], offs: &[usize; 4], data: &[f32], out: &mut [f32]) {
+    let m = out.len();
+    let (a0, a1, a2, a3) = (coeffs[0], coeffs[1], coeffs[2], coeffs[3]);
+    let c0 = &data[offs[0]..offs[0] + m];
+    let c1 = &data[offs[1]..offs[1] + m];
+    let c2 = &data[offs[2]..offs[2] + m];
+    let c3 = &data[offs[3]..offs[3] + m];
+    for i in 0..m {
+        out[i] += a0 * c0[i] + a1 * c1[i] + a2 * c2[i] + a3 * c3[i];
+    }
+}
+
+/// Count of channels a scored mask keeps (no compute) — used by FLOP
+/// accounting dry-runs and tests.
+pub fn count_kept_scored(x: &[f32], ga: &[f32], tau: f32) -> usize {
+    x.iter()
+        .zip(ga)
+        .filter(|(&xv, &g)| xv.abs() * g >= tau)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul_xwt;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg64;
+
+    fn setup(m: usize, n: usize, seed: u64) -> (Tensor, ColMajorMatrix, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let cm = ColMajorMatrix::from_row_major(&w);
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        (w, cm, x)
+    }
+
+    #[test]
+    fn dense_matches_reference_matmul() {
+        let (w, cm, x) = setup(17, 23, 31);
+        let mut out = vec![0.0f32; 17];
+        let kept = dense_gemv(&cm, &x, &mut out);
+        assert_eq!(kept, 23);
+        let xr = Tensor::from_vec(&[1, 23], x.clone());
+        let expect = matmul_xwt(&xr, &w);
+        for i in 0..17 {
+            assert!((out[i] - expect.data[i]).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn scored_with_zero_tau_keeps_all() {
+        let (_, cm, x) = setup(8, 12, 5);
+        let ga = vec![1.0f32; 12];
+        let mut dense = vec![0.0f32; 8];
+        let mut scored = vec![0.0f32; 8];
+        dense_gemv(&cm, &x, &mut dense);
+        let kept = sparse_gemv_scored(&cm, &x, &ga, 0.0, &mut scored);
+        assert_eq!(kept, 12);
+        assert_eq!(dense, scored);
+    }
+
+    #[test]
+    fn scored_equals_masked_reference() {
+        let (w, cm, x) = setup(10, 20, 7);
+        let mut rng = Pcg64::new(99);
+        let ga: Vec<f32> = (0..20).map(|_| rng.next_f32() + 0.1).collect();
+        let tau = 0.5f32;
+        // Reference: zero masked channels, dense matmul.
+        let masked: Vec<f32> = x
+            .iter()
+            .zip(&ga)
+            .map(|(&xv, &g)| if xv.abs() * g >= tau { xv } else { 0.0 })
+            .collect();
+        let expect = matmul_xwt(&Tensor::from_vec(&[1, 20], masked.clone()), &w);
+        let mut out = vec![0.0f32; 10];
+        let kept = sparse_gemv_scored(&cm, &x, &ga, tau, &mut out);
+        assert_eq!(kept, masked.iter().filter(|&&v| v != 0.0).count());
+        for i in 0..10 {
+            assert!((out[i] - expect.data[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn threshold_is_scored_with_unit_ga() {
+        let (_, cm, x) = setup(6, 15, 13);
+        let ga = vec![1.0f32; 15];
+        let mut a = vec![0.0f32; 6];
+        let mut b = vec![0.0f32; 6];
+        let ka = sparse_gemv_threshold(&cm, &x, 0.7, &mut a);
+        let kb = sparse_gemv_scored(&cm, &x, &ga, 0.7, &mut b);
+        assert_eq!(ka, kb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn indices_variant_matches() {
+        let (_, cm, x) = setup(9, 14, 17);
+        let channels: Vec<usize> = vec![0, 3, 7, 13];
+        let mut by_idx = vec![0.0f32; 9];
+        sparse_gemv_indices(&cm, &x, &channels, &mut by_idx);
+        // Equivalent dense with zeroed complement.
+        let mut xz = vec![0.0f32; 14];
+        for &c in &channels {
+            xz[c] = x[c];
+        }
+        let mut by_dense = vec![0.0f32; 9];
+        dense_gemv(&cm, &xz, &mut by_dense);
+        for i in 0..9 {
+            assert!((by_idx[i] - by_dense[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn collect_reports_kept_channels() {
+        let (_, cm, x) = setup(4, 10, 19);
+        let ga = vec![1.0f32; 10];
+        let mut out = vec![0.0f32; 4];
+        let mut kept = Vec::new();
+        sparse_gemv_scored_collect(&cm, &x, &ga, 0.4, &mut out, &mut kept);
+        for &c in &kept {
+            assert!(x[c].abs() >= 0.4);
+        }
+        for c in 0..10 {
+            if !kept.contains(&c) {
+                assert!(x[c].abs() < 0.4);
+            }
+        }
+        assert_eq!(kept.len(), count_kept_scored(&x, &ga, 0.4));
+    }
+
+    #[test]
+    fn x4_variant_matches_scalar() {
+        for seed in [3u64, 7, 11, 13] {
+            let (_, cm, x) = setup(23, 37, seed);
+            let mut rng = Pcg64::new(seed ^ 0xF0);
+            let ga: Vec<f32> = (0..37).map(|_| rng.next_f32() + 0.05).collect();
+            for tau in [0.0f32, 0.2, 0.6, 1.4, f32::INFINITY] {
+                let mut a = vec![0.0f32; 23];
+                let mut b = vec![0.0f32; 23];
+                let ka = sparse_gemv_scored(&cm, &x, &ga, tau, &mut a);
+                let kb = sparse_gemv_scored_x4(&cm, &x, &ga, tau, &mut b);
+                assert_eq!(ka, kb, "tau {tau}");
+                for i in 0..23 {
+                    assert!((a[i] - b[i]).abs() < 1e-4, "tau {tau} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_tau_keeps_nothing() {
+        let (_, cm, x) = setup(5, 8, 23);
+        let ga = vec![1.0f32; 8];
+        let mut out = vec![1.0f32; 5];
+        let kept = sparse_gemv_scored(&cm, &x, &ga, f32::INFINITY, &mut out);
+        assert_eq!(kept, 0);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

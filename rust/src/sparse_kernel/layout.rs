@@ -1,0 +1,102 @@
+//! Column-major weight layout for channel-skipping projections.
+
+use crate::tensor::Tensor;
+
+/// Weight matrix stored column-major: for a projection `y = x W^T` with
+/// `W: [m, n]` (m outputs, n input channels), `col(c)` is the contiguous
+/// m-vector of weights consuming input channel `c`. Skipping channel `c`
+/// skips one contiguous read — this is what makes activation sparsity pay.
+#[derive(Clone, Debug)]
+pub struct ColMajorMatrix {
+    /// Output dimension m.
+    pub m: usize,
+    /// Input dimension n (channels).
+    pub n: usize,
+    /// n * m values, column (input channel) major.
+    pub data: Vec<f32>,
+}
+
+impl ColMajorMatrix {
+    /// Convert from the row-major `[m, n]` tensor convention used by the
+    /// weight files.
+    pub fn from_row_major(w: &Tensor) -> Self {
+        let (m, n) = w.dims2();
+        let mut data = vec![0.0f32; m * n];
+        for i in 0..m {
+            let row = w.row(i);
+            for (c, &v) in row.iter().enumerate() {
+                data[c * m + i] = v;
+            }
+        }
+        Self { m, n, data }
+    }
+
+    #[inline]
+    pub fn col(&self, c: usize) -> &[f32] {
+        debug_assert!(c < self.n);
+        &self.data[c * self.m..(c + 1) * self.m]
+    }
+
+    /// Back to a row-major tensor (tests / reporting).
+    pub fn to_row_major(&self) -> Tensor {
+        let mut t = Tensor::zeros(&[self.m, self.n]);
+        for c in 0..self.n {
+            let col = self.col(c);
+            for i in 0..self.m {
+                t.data[i * self.n + c] = col[i];
+            }
+        }
+        t
+    }
+
+    /// L2 norm of every column — `g_i` from Eq. 4, precomputed once at load.
+    pub fn col_l2_norms(&self) -> Vec<f32> {
+        (0..self.n)
+            .map(|c| {
+                self.col(c)
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    .sqrt() as f32
+            })
+            .collect()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::new(8);
+        let w = Tensor::randn(&[5, 9], 1.0, &mut rng);
+        let cm = ColMajorMatrix::from_row_major(&w);
+        assert_eq!(cm.to_row_major(), w);
+    }
+
+    #[test]
+    fn col_view() {
+        let w = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let cm = ColMajorMatrix::from_row_major(&w);
+        assert_eq!(cm.col(0), &[1., 4.]);
+        assert_eq!(cm.col(2), &[3., 6.]);
+    }
+
+    #[test]
+    fn norms_match_tensor() {
+        let mut rng = Pcg64::new(9);
+        let w = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let cm = ColMajorMatrix::from_row_major(&w);
+        let a = cm.col_l2_norms();
+        let b = w.col_l2_norms();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! The performance-critical sparse linear-projection kernels (L3 hot path).
+//!
+//! The paper's efficiency claim rests on converting *channel* sparsity into
+//! skipped memory traffic and FLOPs inside `y = (x ⊙ m) W^T`. We store every
+//! weight matrix column-major (one contiguous slice per *input channel*), so
+//! skipping a pruned channel skips exactly its column read and its
+//! multiply-accumulate — the same mechanism as TEAL's gather kernels, mapped
+//! to CPU SIMD instead of CUDA threadblocks (see DESIGN.md §2, §6).
+
+pub mod layout;
+pub mod gemv;
+pub mod batched;
+
+pub use gemv::{dense_gemv, sparse_gemv_indices, sparse_gemv_scored, sparse_gemv_threshold};
+pub use layout::ColMajorMatrix;

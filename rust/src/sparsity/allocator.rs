@@ -1,0 +1,271 @@
+//! Alg. 1: the full WiSparse calibration pipeline, plus the baseline
+//! calibration recipes (how TEAL / R-Sparse / WINA / activation-only derive
+//! their plans), so Table 1/2 compare like for like.
+
+use crate::calib::collector::ModelCalib;
+use crate::model::layers::{LayerId, LayerKind};
+use crate::model::transformer::Model;
+use crate::sparsity::alpha_search::{finalize_taus, search_alphas_into_plan, AlphaSearchCfg};
+use crate::sparsity::evo::{evolutionary_block_allocation, EvoCfg};
+use crate::sparsity::greedy::{greedy_layer_allocation, GreedyCfg};
+use crate::sparsity::plan::SparsityPlan;
+
+/// Which components of the pipeline to run — the ablation axis of Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineStages {
+    /// Weight-aware score (alpha search). Off = activation-only (alpha 0).
+    pub weight_aware: bool,
+    /// Coarse evolutionary block allocation. Off = uniform blocks.
+    pub coarse: bool,
+    /// Fine greedy intra-block allocation. Off = uniform within block.
+    pub fine: bool,
+}
+
+impl PipelineStages {
+    pub const FULL: PipelineStages = PipelineStages {
+        weight_aware: true,
+        coarse: true,
+        fine: true,
+    };
+
+    /// Table 2 ablation ladder, in paper order.
+    pub fn ablation_ladder() -> [(&'static str, PipelineStages); 4] {
+        [
+            (
+                "activation-only",
+                PipelineStages {
+                    weight_aware: false,
+                    coarse: false,
+                    fine: false,
+                },
+            ),
+            (
+                "+weight-importance",
+                PipelineStages {
+                    weight_aware: true,
+                    coarse: false,
+                    fine: false,
+                },
+            ),
+            (
+                "+coarse-search",
+                PipelineStages {
+                    weight_aware: true,
+                    coarse: true,
+                    fine: false,
+                },
+            ),
+            ("+fine-search", PipelineStages::FULL),
+        ]
+    }
+}
+
+/// Tuning knobs for the full pipeline.
+#[derive(Clone, Debug, Default)]
+pub struct WiSparseCfg {
+    pub evo: EvoCfg,
+    pub greedy: GreedyCfg,
+    pub alpha: AlphaSearchCfg,
+}
+
+/// Alg. 1: coarse block allocation -> fine layer allocation -> alpha search
+/// -> final thresholds. Returns a fully-calibrated plan.
+pub fn calibrate_wisparse(
+    model: &Model,
+    calib: &ModelCalib,
+    target: f64,
+    cfg: &WiSparseCfg,
+    stages: PipelineStages,
+) -> SparsityPlan {
+    let method = if stages == PipelineStages::FULL {
+        "wisparse"
+    } else {
+        "wisparse-ablation"
+    };
+    let mut plan = SparsityPlan::uniform(&model.cfg, method, target);
+
+    // Stage 1 (coarse): block-level allocation via evolutionary search.
+    if stages.coarse {
+        let (block_sparsity, trace) =
+            evolutionary_block_allocation(model, calib, target, &cfg.evo);
+        crate::info!(
+            "coarse search: loss {:.4e} -> {:.4e} over {} generations",
+            trace.first().map(|t| t.best_loss).unwrap_or(0.0),
+            trace.last().map(|t| t.best_loss).unwrap_or(0.0),
+            trace.len() - 1
+        );
+        plan.block_sparsity = block_sparsity;
+    }
+
+    // Stage 2 (fine): distribute each block's budget across its layers.
+    for b in 0..model.cfg.n_layers {
+        let pb = plan.block_sparsity[b];
+        if stages.fine {
+            let per_kind = greedy_layer_allocation(model, b, &calib.blocks[b], pb, &cfg.greedy);
+            for (i, &kind) in LayerKind::ALL.iter().enumerate() {
+                plan.layer_mut(LayerId::new(b, kind)).sparsity = per_kind[i];
+            }
+        } else {
+            for &kind in &LayerKind::ALL {
+                plan.layer_mut(LayerId::new(b, kind)).sparsity = pb;
+            }
+        }
+    }
+
+    // Stage 3: weight exponents (Alg. 2) + final Eq. 7 thresholds.
+    if stages.weight_aware {
+        search_alphas_into_plan(model, &calib.blocks, &mut plan, &cfg.alpha);
+    } else {
+        for lp in plan.layers.iter_mut() {
+            lp.alpha = 0.0;
+        }
+        finalize_taus(model, &calib.blocks, &mut plan);
+    }
+    plan
+}
+
+/// TEAL baseline: activation-magnitude score (alpha = 0), uniform block
+/// allocation, greedy intra-block allocation (their recipe), thresholds via
+/// quantile calibration.
+pub fn calibrate_teal(
+    model: &Model,
+    calib: &ModelCalib,
+    target: f64,
+    greedy_cfg: &GreedyCfg,
+) -> SparsityPlan {
+    let mut plan = SparsityPlan::uniform(&model.cfg, "teal", target);
+    let cfg = GreedyCfg {
+        search_alpha: 0.0,
+        ..greedy_cfg.clone()
+    };
+    for b in 0..model.cfg.n_layers {
+        let per_kind = greedy_layer_allocation(model, b, &calib.blocks[b], target, &cfg);
+        for (i, &kind) in LayerKind::ALL.iter().enumerate() {
+            plan.layer_mut(LayerId::new(b, kind)).sparsity = per_kind[i];
+        }
+    }
+    for lp in plan.layers.iter_mut() {
+        lp.alpha = 0.0;
+    }
+    finalize_taus(model, &calib.blocks, &mut plan);
+    plan
+}
+
+/// R-Sparse baseline plan: uniform allocation, magnitude thresholds; the
+/// low-rank side path is attached by `RSparse::from_plan`.
+pub fn calibrate_rsparse(model: &Model, calib: &ModelCalib, target: f64) -> SparsityPlan {
+    let mut plan = SparsityPlan::uniform(&model.cfg, "rsparse", target);
+    for lp in plan.layers.iter_mut() {
+        lp.alpha = 0.0;
+    }
+    finalize_taus(model, &calib.blocks, &mut plan);
+    plan
+}
+
+/// WINA baseline: `|x| * ||W:,i||` score (alpha = 1 fixed), uniform
+/// allocation — the paper's description of Chen et al. 2025.
+pub fn calibrate_wina(model: &Model, calib: &ModelCalib, target: f64) -> SparsityPlan {
+    let mut plan = SparsityPlan::uniform(&model.cfg, "wina", target);
+    for lp in plan.layers.iter_mut() {
+        lp.alpha = 1.0;
+    }
+    finalize_taus(model, &calib.blocks, &mut plan);
+    plan
+}
+
+/// Activation-only baseline: |x| score, uniform allocation (Table 2 row 1).
+pub fn calibrate_activation_only(model: &Model, calib: &ModelCalib, target: f64) -> SparsityPlan {
+    let mut plan = SparsityPlan::uniform(&model.cfg, "activation-only", target);
+    for lp in plan.layers.iter_mut() {
+        lp.alpha = 0.0;
+    }
+    finalize_taus(model, &calib.blocks, &mut plan);
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::CalibSet;
+    use crate::model::ModelConfig;
+    use crate::sparsity::alpha_search::AlphaSearchCfg;
+    use crate::sparsity::evo::EvoCfg;
+
+    fn quick_cfg() -> WiSparseCfg {
+        WiSparseCfg {
+            evo: EvoCfg {
+                generations: 2,
+                offspring: 3,
+                eps: 0.05,
+                threads: 2,
+                ..EvoCfg::default()
+            },
+            greedy: GreedyCfg {
+                step: 0.1,
+                threads: 2,
+                ..GreedyCfg::default()
+            },
+            alpha: AlphaSearchCfg {
+                n_grid: 4,
+                passes: 1,
+                threads: 2,
+                ..AlphaSearchCfg::default()
+            },
+        }
+    }
+
+    fn setup() -> (Model, ModelCalib) {
+        let m = Model::synthetic(ModelConfig::preset("nano").unwrap(), 53);
+        let calib = CalibSet::synthetic(2, 8, m.cfg.vocab_size, 59);
+        let mc = ModelCalib::collect(&m, &calib);
+        (m, mc)
+    }
+
+    #[test]
+    fn full_pipeline_produces_valid_plan() {
+        let (m, mc) = setup();
+        let plan = calibrate_wisparse(&m, &mc, 0.5, &quick_cfg(), PipelineStages::FULL);
+        // Budget respected (block average <= target + step slack).
+        let mean: f64 =
+            plan.block_sparsity.iter().sum::<f64>() / plan.block_sparsity.len() as f64;
+        assert!(mean <= 0.5 + 1e-9);
+        // Effective layer-level sparsity near target.
+        let eff = plan.effective_sparsity(&m.cfg);
+        assert!(eff > 0.3 && eff < 0.7, "effective {eff}");
+        // Alphas on the search grid, thresholds finite.
+        assert!(plan.layers.iter().all(|lp| lp.alpha >= 0.0 && lp.alpha <= 1.5));
+        assert!(plan.layers.iter().all(|lp| lp.tau.is_finite()));
+        assert_eq!(plan.method, "wisparse");
+    }
+
+    #[test]
+    fn ablation_stages_differ() {
+        let (m, mc) = setup();
+        let ladder = PipelineStages::ablation_ladder();
+        let p0 = calibrate_wisparse(&m, &mc, 0.5, &quick_cfg(), ladder[0].1);
+        let p1 = calibrate_wisparse(&m, &mc, 0.5, &quick_cfg(), ladder[1].1);
+        // Stage 0 has alpha = 0 everywhere; stage 1 must have searched some.
+        assert!(p0.layers.iter().all(|lp| lp.alpha == 0.0));
+        assert!(p1.layers.iter().any(|lp| lp.alpha != 0.0));
+        // Stage 0/1 keep uniform blocks.
+        assert!(p0
+            .block_sparsity
+            .iter()
+            .all(|&p| (p - 0.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn baselines_have_expected_signatures() {
+        let (m, mc) = setup();
+        let teal = calibrate_teal(&m, &mc, 0.4, &quick_cfg().greedy);
+        assert!(teal.layers.iter().all(|lp| lp.alpha == 0.0));
+        assert_eq!(teal.method, "teal");
+        let wina = calibrate_wina(&m, &mc, 0.4);
+        assert!(wina.layers.iter().all(|lp| lp.alpha == 1.0));
+        assert!(wina.layers.iter().all(|lp| (lp.sparsity - 0.4).abs() < 1e-12));
+        let rs = calibrate_rsparse(&m, &mc, 0.4);
+        assert_eq!(rs.method, "rsparse");
+        let act = calibrate_activation_only(&m, &mc, 0.4);
+        assert!(act.layers.iter().all(|lp| lp.alpha == 0.0 && (lp.sparsity - 0.4).abs() < 1e-12));
+    }
+}

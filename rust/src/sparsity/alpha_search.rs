@@ -1,0 +1,253 @@
+//! Alg. 2: lightweight block-wise grid search for the weight exponents.
+//!
+//! For each block, each layer's exponent `alpha_l` is swept over a grid on
+//! [0, 1.5] (paper: step 0.05, i.e. 30 points) minimizing the MSE between
+//! dense and sparse block outputs on calibration data (Eq. 6). Candidate
+//! thresholds are recomputed per alpha via Eq. 7 so every candidate hits the
+//! layer's target keep ratio. Layers are optimized coordinate-wise, which
+//! is what lets Fig 6 show distinct alphas per projection.
+
+use crate::calib::collector::BlockCalib;
+use crate::model::layers::{LayerId, LayerKind};
+use crate::model::transformer::{ForwardStats, Model};
+use crate::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+use crate::sparsity::plan::SparsityPlan;
+use crate::sparsity::score::{pow_clamped, tau_from_rows};
+use crate::util::threadpool::parallel_map;
+
+/// Grid-search configuration.
+#[derive(Clone, Debug)]
+pub struct AlphaSearchCfg {
+    /// Number of grid points over [0, alpha_max] (paper: 30).
+    pub n_grid: usize,
+    /// Upper end of the grid (paper: 1.5).
+    pub alpha_max: f64,
+    /// Coordinate-descent passes over the block's layers.
+    pub passes: usize,
+    pub threads: usize,
+}
+
+impl Default for AlphaSearchCfg {
+    fn default() -> Self {
+        Self {
+            n_grid: 30,
+            alpha_max: 1.5,
+            passes: 1,
+            threads: crate::util::threadpool::num_threads(),
+        }
+    }
+}
+
+/// Sparse-block-output MSE for a candidate per-kind (alpha -> ga, tau)
+/// assignment. `sp` must already carry the candidate parameters for this
+/// block's seven layers.
+fn block_mse(model: &Model, block: usize, bc: &BlockCalib, sp: &ScoredSparsifier) -> f64 {
+    let mut stats = ForwardStats::default();
+    let out = bc.forward_with(model, block, sp, &mut stats);
+    out.mse(&bc.dense_out)
+}
+
+/// Build a `ScoredSparsifier` whose entries for `block` follow the given
+/// per-kind alphas and keep ratios (thresholds via Eq. 7 on the captured
+/// layer inputs). Other blocks are identity (the block forward never
+/// touches them).
+fn sparsifier_for_block(
+    model: &Model,
+    block: usize,
+    bc: &BlockCalib,
+    alphas: &[f64; 7],
+    keep_ratios: &[f64; 7],
+) -> ScoredSparsifier {
+    let mut sp = ScoredSparsifier::identity("wisparse", model.cfg.n_layers * 7);
+    for (i, &kind) in LayerKind::ALL.iter().enumerate() {
+        let id = LayerId::new(block, kind);
+        let (rows, dim) = bc.rows_of(kind, &model.cfg);
+        let ga = pow_clamped(model.g(id), alphas[i]);
+        let tau = if rows.is_empty() {
+            0.0
+        } else {
+            tau_from_rows(rows, dim, &ga, keep_ratios[i])
+        };
+        *sp.layer_mut(id) = ScoredLayer { ga: Some(ga), tau };
+    }
+    sp
+}
+
+/// Result of the per-block search.
+#[derive(Clone, Debug)]
+pub struct BlockAlphas {
+    pub alphas: [f64; 7],
+    pub mse: f64,
+}
+
+/// Coordinate-wise grid search for one block (Alg. 2). `keep_ratios` are
+/// the per-kind keep ratios fixed by the earlier allocation stages
+/// (r = 1 - sparsity).
+pub fn search_block_alphas(
+    model: &Model,
+    block: usize,
+    bc: &BlockCalib,
+    keep_ratios: &[f64; 7],
+    cfg: &AlphaSearchCfg,
+) -> BlockAlphas {
+    // Start from alpha = 1 (the WINA operating point) — a good prior.
+    let mut alphas = [1.0f64; 7];
+    let grid: Vec<f64> = (0..cfg.n_grid)
+        .map(|i| i as f64 * cfg.alpha_max / cfg.n_grid as f64)
+        .collect();
+    let mut best_mse = {
+        let sp = sparsifier_for_block(model, block, bc, &alphas, keep_ratios);
+        block_mse(model, block, bc, &sp)
+    };
+    for _pass in 0..cfg.passes.max(1) {
+        for li in 0..7 {
+            // Evaluate the whole grid for this coordinate in parallel.
+            let losses = parallel_map(grid.len(), cfg.threads, |gi| {
+                let mut cand = alphas;
+                cand[li] = grid[gi];
+                let sp = sparsifier_for_block(model, block, bc, &cand, keep_ratios);
+                block_mse(model, block, bc, &sp)
+            });
+            let (gi_best, &loss_best) = losses
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            if loss_best < best_mse {
+                best_mse = loss_best;
+                alphas[li] = grid[gi_best];
+            }
+        }
+    }
+    BlockAlphas {
+        alphas,
+        mse: best_mse,
+    }
+}
+
+/// Run Alg. 2 over all blocks, writing alphas and final Eq. 7 thresholds
+/// into the plan (keep ratios come from the plan's per-layer sparsities).
+pub fn search_alphas_into_plan(
+    model: &Model,
+    calib_blocks: &[BlockCalib],
+    plan: &mut SparsityPlan,
+    cfg: &AlphaSearchCfg,
+) {
+    for b in 0..model.cfg.n_layers {
+        let mut keep = [0.0f64; 7];
+        for (i, &kind) in LayerKind::ALL.iter().enumerate() {
+            keep[i] = 1.0 - plan.layer(LayerId::new(b, kind)).sparsity;
+        }
+        let result = search_block_alphas(model, b, &calib_blocks[b], &keep, cfg);
+        for (i, &kind) in LayerKind::ALL.iter().enumerate() {
+            let id = LayerId::new(b, kind);
+            plan.layer_mut(id).alpha = result.alphas[i];
+        }
+        crate::debug!(
+            "block {b}: alphas {:?} mse {:.3e}",
+            result.alphas,
+            result.mse
+        );
+    }
+    finalize_taus(model, calib_blocks, plan);
+}
+
+/// Compute the fixed per-layer inference thresholds (Eq. 7) for whatever
+/// (alpha, sparsity) the plan currently holds.
+pub fn finalize_taus(model: &Model, calib_blocks: &[BlockCalib], plan: &mut SparsityPlan) {
+    for b in 0..model.cfg.n_layers {
+        for &kind in &LayerKind::ALL {
+            let id = LayerId::new(b, kind);
+            let lp = *plan.layer(id);
+            let keep = 1.0 - lp.sparsity;
+            let (rows, dim) = calib_blocks[b].rows_of(kind, &model.cfg);
+            let tau = if rows.is_empty() || keep >= 1.0 {
+                0.0
+            } else {
+                let ga = pow_clamped(model.g(id), lp.alpha);
+                tau_from_rows(rows, dim, &ga, keep)
+            };
+            plan.layer_mut(id).tau = tau;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::{CalibSet, ModelCalib};
+    use crate::model::{Model, ModelConfig};
+
+    fn setup() -> (Model, ModelCalib) {
+        let m = Model::synthetic(ModelConfig::preset("nano").unwrap(), 13);
+        let calib = CalibSet::synthetic(2, 10, m.cfg.vocab_size, 17);
+        let mc = ModelCalib::collect(&m, &calib);
+        (m, mc)
+    }
+
+    #[test]
+    fn search_returns_grid_values() {
+        let (m, mc) = setup();
+        let cfg = AlphaSearchCfg {
+            n_grid: 6,
+            alpha_max: 1.5,
+            passes: 1,
+            threads: 2,
+        };
+        let r = search_block_alphas(&m, 0, &mc.blocks[0], &[0.5; 7], &cfg);
+        for a in r.alphas {
+            // Either the 1.0 prior or a grid point.
+            let on_grid = (0..6).any(|i| (a - i as f64 * 0.25).abs() < 1e-9);
+            assert!(on_grid || (a - 1.0).abs() < 1e-9, "alpha {a}");
+        }
+        assert!(r.mse.is_finite());
+    }
+
+    #[test]
+    fn weight_aware_beats_activation_only_on_block_mse() {
+        // The searched alphas must do at least as well as alpha = 0
+        // (activation-only) — Observation 1's fix.
+        let (m, mc) = setup();
+        let keep = [0.5f64; 7];
+        let sp0 = sparsifier_for_block(&m, 0, &mc.blocks[0], &[0.0; 7], &keep);
+        let mse0 = block_mse(&m, 0, &mc.blocks[0], &sp0);
+        let cfg = AlphaSearchCfg {
+            n_grid: 10,
+            alpha_max: 1.5,
+            passes: 1,
+            threads: 2,
+        };
+        let r = search_block_alphas(&m, 0, &mc.blocks[0], &keep, &cfg);
+        assert!(
+            r.mse <= mse0 + 1e-12,
+            "searched mse {} worse than alpha=0 mse {}",
+            r.mse,
+            mse0
+        );
+    }
+
+    #[test]
+    fn finalize_taus_hits_keep_ratio() {
+        let (m, mc) = setup();
+        let mut plan = SparsityPlan::uniform(&m.cfg, "wisparse", 0.4);
+        for lp in plan.layers.iter_mut() {
+            lp.alpha = 1.0;
+        }
+        finalize_taus(&m, &mc.blocks, &mut plan);
+        // Check realized keep fraction on the calibration pool for a layer.
+        let id = LayerId::new(0, LayerKind::Up);
+        let (rows, dim) = mc.blocks[0].rows_of(LayerKind::Up, &m.cfg);
+        let ga = pow_clamped(m.g(id), 1.0);
+        let realized =
+            crate::sparsity::score::realized_keep_fraction(rows, dim, &ga, plan.layer(id).tau);
+        assert!((realized - 0.6).abs() < 0.05, "realized {realized}");
+    }
+
+    #[test]
+    fn zero_sparsity_gives_zero_tau() {
+        let (m, mc) = setup();
+        let mut plan = SparsityPlan::uniform(&m.cfg, "wisparse", 0.0);
+        finalize_taus(&m, &mc.blocks, &mut plan);
+        assert!(plan.layers.iter().all(|lp| lp.tau == 0.0));
+    }
+}

@@ -1,0 +1,247 @@
+//! Alg. 3: evolutionary block-level sparsity allocation (the coarse stage).
+//!
+//! Candidates are block-sparsity vectors constrained to average to the
+//! global target. Offspring are produced by localized mutation (raise a
+//! random ~10% of blocks by `eps`, then lower random blocks until the
+//! constraint holds), and selected by the token-averaged KL divergence
+//! between dense and sparse logits (Eq. 8) on the calibration set.
+
+use crate::calib::collector::ModelCalib;
+use crate::eval::kl::mean_token_kl;
+use crate::model::layers::{LayerId, LayerKind};
+use crate::model::transformer::{ForwardStats, Model};
+use crate::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+use crate::sparsity::score::{pow_clamped, tau_from_rows};
+use crate::util::rng::Pcg64;
+use crate::util::threadpool::parallel_map;
+
+/// Evolutionary-search configuration. Paper defaults: 400 generations,
+/// 64 offspring, eps 0.5%, 10% of blocks mutated. The defaults here are
+/// scaled to the micro models; the paper values are reachable via CLI
+/// flags.
+#[derive(Clone, Debug)]
+pub struct EvoCfg {
+    pub generations: usize,
+    pub offspring: usize,
+    /// Mutation step size (paper: 0.005).
+    pub eps: f64,
+    /// Fraction of blocks mutated per offspring (paper: 0.1).
+    pub mutate_frac: f64,
+    /// Sparsity clamp range per block.
+    pub min_sparsity: f64,
+    pub max_sparsity: f64,
+    pub seed: u64,
+    pub threads: usize,
+    /// The alpha used to score channels during the search (the exponent
+    /// search runs later in the pipeline; 1.0 = WINA operating point).
+    pub search_alpha: f64,
+}
+
+impl Default for EvoCfg {
+    fn default() -> Self {
+        Self {
+            generations: 40,
+            offspring: 16,
+            eps: 0.02,
+            mutate_frac: 0.1,
+            min_sparsity: 0.0,
+            max_sparsity: 0.95,
+            seed: 0xE0_5EED,
+            threads: crate::util::threadpool::num_threads(),
+            search_alpha: 1.0,
+        }
+    }
+}
+
+/// Mutate a parent allocation per Alg. 3: raise a random subset, then lower
+/// random blocks until the mean returns to the target.
+pub fn mutate(parent: &[f64], target: f64, cfg: &EvoCfg, rng: &mut Pcg64) -> Vec<f64> {
+    let n = parent.len();
+    let mut child = parent.to_vec();
+    let num_flips = ((n as f64 * cfg.mutate_frac).floor() as usize).max(1);
+    for _ in 0..num_flips {
+        let b = rng.below(n);
+        child[b] = (child[b] + cfg.eps).min(cfg.max_sparsity);
+    }
+    // Constraint enforcement: average back down to the target.
+    let mut guard = 0usize;
+    while mean(&child) > target + 1e-12 && guard < 10_000 {
+        let b = rng.below(n);
+        if child[b] > cfg.min_sparsity {
+            child[b] = (child[b] - cfg.eps).max(cfg.min_sparsity);
+        }
+        guard += 1;
+    }
+    child
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Build a uniform-within-block sparsifier for a candidate block allocation:
+/// every layer in block `b` runs at keep ratio `1 - p[b]`, thresholds from
+/// Eq. 7 over the captured layer inputs, score exponent `search_alpha`.
+pub fn sparsifier_for_allocation(
+    model: &Model,
+    calib: &ModelCalib,
+    p: &[f64],
+    alpha: f64,
+) -> ScoredSparsifier {
+    let mut sp = ScoredSparsifier::identity("evo-candidate", model.cfg.n_layers * 7);
+    for (b, &pb) in p.iter().enumerate() {
+        let keep = (1.0 - pb).clamp(0.0, 1.0);
+        for &kind in &LayerKind::ALL {
+            let id = LayerId::new(b, kind);
+            let (rows, dim) = calib.blocks[b].rows_of(kind, &model.cfg);
+            let ga = pow_clamped(model.g(id), alpha);
+            let tau = if rows.is_empty() || keep >= 1.0 {
+                0.0
+            } else {
+                tau_from_rows(rows, dim, &ga, keep)
+            };
+            *sp.layer_mut(id) = ScoredLayer { ga: Some(ga), tau };
+        }
+    }
+    sp
+}
+
+/// Eq. 8: mean token-level KL(dense || sparse) over the calibration set for
+/// a candidate allocation.
+pub fn allocation_loss(model: &Model, calib: &ModelCalib, p: &[f64], alpha: f64) -> f64 {
+    let sp = sparsifier_for_allocation(model, calib, p, alpha);
+    let mut stats = ForwardStats::default();
+    let mut total = 0.0f64;
+    for (seq, dense_logits) in calib.seqs.iter().zip(&calib.dense_logits) {
+        let sparse_logits = model.forward_seq(seq, &sp, &mut stats, None);
+        total += mean_token_kl(dense_logits, &sparse_logits);
+    }
+    total / calib.seqs.len() as f64
+}
+
+/// Search trace entry (per generation) for reporting/diagnostics.
+#[derive(Clone, Debug)]
+pub struct EvoTrace {
+    pub generation: usize,
+    pub best_loss: f64,
+}
+
+/// Run Alg. 3. Returns the best block allocation and the per-generation
+/// loss trace.
+pub fn evolutionary_block_allocation(
+    model: &Model,
+    calib: &ModelCalib,
+    target: f64,
+    cfg: &EvoCfg,
+) -> (Vec<f64>, Vec<EvoTrace>) {
+    let n = model.cfg.n_layers;
+    let mut parent = vec![target; n];
+    let mut parent_loss = allocation_loss(model, calib, &parent, cfg.search_alpha);
+    let mut trace = vec![EvoTrace {
+        generation: 0,
+        best_loss: parent_loss,
+    }];
+    let mut rng = Pcg64::new(cfg.seed);
+    for generation in 1..=cfg.generations {
+        // Generate offspring serially (cheap), evaluate in parallel
+        // (expensive: one sparse forward over the calibration set each).
+        let offspring: Vec<Vec<f64>> = (0..cfg.offspring)
+            .map(|_| mutate(&parent, target, cfg, &mut rng))
+            .collect();
+        let losses = parallel_map(offspring.len(), cfg.threads, |i| {
+            allocation_loss(model, calib, &offspring[i], cfg.search_alpha)
+        });
+        let (best_i, &best_loss) = losses
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if best_loss < parent_loss {
+            parent = offspring[best_i].clone();
+            parent_loss = best_loss;
+        }
+        trace.push(EvoTrace {
+            generation,
+            best_loss: parent_loss,
+        });
+    }
+    (parent, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::{CalibSet, ModelCalib};
+    use crate::model::{Model, ModelConfig};
+
+    fn setup() -> (Model, ModelCalib) {
+        let m = Model::synthetic(ModelConfig::preset("nano").unwrap(), 23);
+        let calib = CalibSet::synthetic(2, 8, m.cfg.vocab_size, 29);
+        let mc = ModelCalib::collect(&m, &calib);
+        (m, mc)
+    }
+
+    fn quick_cfg() -> EvoCfg {
+        EvoCfg {
+            generations: 3,
+            offspring: 4,
+            eps: 0.05,
+            threads: 2,
+            ..EvoCfg::default()
+        }
+    }
+
+    #[test]
+    fn mutation_preserves_constraint() {
+        let cfg = quick_cfg();
+        let mut rng = Pcg64::new(1);
+        let parent = vec![0.5; 8];
+        for _ in 0..50 {
+            let child = mutate(&parent, 0.5, &cfg, &mut rng);
+            assert!(mean(&child) <= 0.5 + 1e-9, "mean {}", mean(&child));
+            assert!(child
+                .iter()
+                .all(|&p| (cfg.min_sparsity..=cfg.max_sparsity).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn mutation_changes_something() {
+        let cfg = quick_cfg();
+        let mut rng = Pcg64::new(2);
+        let parent = vec![0.5; 8];
+        let child = mutate(&parent, 0.5, &cfg, &mut rng);
+        assert!(child.iter().zip(&parent).any(|(a, b)| (a - b).abs() > 1e-12));
+    }
+
+    #[test]
+    fn zero_allocation_has_zero_loss() {
+        let (m, mc) = setup();
+        let loss = allocation_loss(&m, &mc, &vec![0.0; m.cfg.n_layers], 1.0);
+        assert!(loss.abs() < 1e-6, "dense candidate must have ~0 KL, got {loss}");
+    }
+
+    #[test]
+    fn higher_sparsity_higher_loss() {
+        let (m, mc) = setup();
+        let lo = allocation_loss(&m, &mc, &vec![0.2; m.cfg.n_layers], 1.0);
+        let hi = allocation_loss(&m, &mc, &vec![0.8; m.cfg.n_layers], 1.0);
+        assert!(hi > lo, "hi {hi} <= lo {lo}");
+    }
+
+    #[test]
+    fn search_never_worse_than_uniform() {
+        let (m, mc) = setup();
+        let cfg = quick_cfg();
+        let uniform_loss = allocation_loss(&m, &mc, &vec![0.5; m.cfg.n_layers], 1.0);
+        let (best, trace) = evolutionary_block_allocation(&m, &mc, 0.5, &cfg);
+        let best_loss = trace.last().unwrap().best_loss;
+        assert!(best_loss <= uniform_loss + 1e-12);
+        assert!(mean(&best) <= 0.5 + 1e-9);
+        assert_eq!(trace.len(), cfg.generations + 1);
+        // Trace is monotone non-increasing.
+        for w in trace.windows(2) {
+            assert!(w[1].best_loss <= w[0].best_loss + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Sparsifier implementations: WiSparse and the baselines it is compared
+//! against in Table 1/2 (TEAL, R-Sparse, WINA, activation-only).
+//!
+//! All scored methods share [`ScoredSparsifier`] — the only differences
+//! between WiSparse, WINA, TEAL and activation-only are *how the per-layer
+//! `(ga, tau)` parameters are calibrated*, which happens in
+//! `sparsity::allocator`. R-Sparse additionally carries a low-rank side
+//! path per layer.
+
+mod scored;
+mod rsparse;
+
+pub use rsparse::{RSparse, RSparseLayer};
+pub use scored::{ScoredLayer, ScoredSparsifier};

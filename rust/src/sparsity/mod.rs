@@ -1,0 +1,71 @@
+//! WiSparse core: the weight-aware importance score (Sec 4.2), the
+//! mixed-granularity allocation searches (Sec 4.3, Algs 1-4) and the
+//! baseline sparsifiers (TEAL, R-Sparse, WINA, activation-only).
+//!
+//! Everything runs through the [`Sparsifier`] trait so the transformer
+//! engine has exactly one execution path for all methods.
+
+pub mod score;
+pub mod analytic;
+pub mod plan;
+pub mod methods;
+pub mod alpha_search;
+pub mod evo;
+pub mod greedy;
+pub mod allocator;
+
+pub use plan::{LayerPlan, SparsityPlan};
+pub use score::{pow_clamped, tau_for_keep_ratio};
+
+use crate::model::LayerId;
+use crate::sparse_kernel::ColMajorMatrix;
+
+/// A sparsification policy for linear projections.
+///
+/// `project` computes `out = (x ⊙ m) W^T` for the layer's dynamic mask `m`
+/// and returns the number of kept channels, so the engine can account the
+/// FLOPs actually spent (Fig 4's x-axis). Implementations must be `Sync`:
+/// the serving coordinator shares one sparsifier across worker threads.
+pub trait Sparsifier: Sync + Send {
+    fn name(&self) -> &'static str;
+
+    fn project(&self, layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize;
+
+    /// Extra multiply-accumulates this method spends *outside* the kept
+    /// channels (e.g. R-Sparse's low-rank path). Default zero.
+    fn extra_macs(&self, _layer: LayerId, _w: &ColMajorMatrix) -> u64 {
+        0
+    }
+}
+
+/// Dense execution (the 0%-sparsity baseline).
+pub struct Dense;
+
+impl Sparsifier for Dense {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn project(&self, _layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize {
+        crate::sparse_kernel::dense_gemv(w, x, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerKind;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dense_projects() {
+        let mut rng = Pcg64::new(1);
+        let w = ColMajorMatrix::from_row_major(&Tensor::randn(&[4, 6], 1.0, &mut rng));
+        let x: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; 4];
+        let kept = Dense.project(LayerId::new(0, LayerKind::Q), &x, &w, &mut out);
+        assert_eq!(kept, 6);
+        assert_eq!(Dense.extra_macs(LayerId::new(0, LayerKind::Q), &w), 0);
+    }
+}

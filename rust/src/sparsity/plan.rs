@@ -1,0 +1,195 @@
+//! Sparsity plans: the serializable output of the calibration pipeline
+//! (Alg. 1) consumed by the serving engine at startup.
+
+use crate::model::layers::{all_layers, LayerId};
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Per-linear-layer calibrated parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerPlan {
+    /// Target sparsity (fraction of channels pruned) for this layer.
+    pub sparsity: f64,
+    /// Weight exponent `alpha_l` (Eq. 4).
+    pub alpha: f64,
+    /// Fixed inference threshold `tau_l` (Eq. 7).
+    pub tau: f32,
+}
+
+impl Default for LayerPlan {
+    fn default() -> Self {
+        Self {
+            sparsity: 0.0,
+            alpha: 0.0,
+            tau: 0.0,
+        }
+    }
+}
+
+/// Calibrated sparsity configuration for one model + method + target.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparsityPlan {
+    pub model: String,
+    pub method: String,
+    pub target_sparsity: f64,
+    /// Block-level allocation found by the coarse search (len = n_layers).
+    pub block_sparsity: Vec<f64>,
+    /// Per linear layer, indexed by `LayerId::flat()`.
+    pub layers: Vec<LayerPlan>,
+}
+
+impl SparsityPlan {
+    /// Uniform plan: every layer at `target`, alpha 0 everywhere, taus unset.
+    pub fn uniform(cfg: &ModelConfig, method: &str, target: f64) -> Self {
+        Self {
+            model: cfg.name.clone(),
+            method: method.to_string(),
+            target_sparsity: target,
+            block_sparsity: vec![target; cfg.n_layers],
+            layers: vec![
+                LayerPlan {
+                    sparsity: target,
+                    alpha: 0.0,
+                    tau: 0.0,
+                };
+                cfg.n_layers * 7
+            ],
+        }
+    }
+
+    pub fn layer(&self, id: LayerId) -> &LayerPlan {
+        &self.layers[id.flat()]
+    }
+
+    pub fn layer_mut(&mut self, id: LayerId) -> &mut LayerPlan {
+        &mut self.layers[id.flat()]
+    }
+
+    /// FLOP-weighted model-level sparsity implied by the per-layer values.
+    pub fn effective_sparsity(&self, cfg: &ModelConfig) -> f64 {
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for id in all_layers(cfg) {
+            let w = crate::model::layers::layer_flops(cfg, id.kind);
+            num += w * self.layers[id.flat()].sparsity;
+            den += w;
+        }
+        num / den
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(flat, lp)| {
+                Json::obj(vec![
+                    ("layer", Json::Str(LayerId::from_flat(flat).key())),
+                    ("sparsity", Json::Num(lp.sparsity)),
+                    ("alpha", Json::Num(lp.alpha)),
+                    ("tau", Json::Num(lp.tau as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("method", Json::Str(self.method.clone())),
+            ("target_sparsity", Json::Num(self.target_sparsity)),
+            ("block_sparsity", Json::arr_f64(&self.block_sparsity)),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SparsityPlan> {
+        let block_sparsity = j
+            .get("block_sparsity")
+            .f64_vec()
+            .ok_or_else(|| anyhow::anyhow!("missing block_sparsity"))?;
+        let raw_layers = j.req_arr("layers")?;
+        let mut layers = vec![LayerPlan::default(); raw_layers.len()];
+        for lj in raw_layers {
+            let key = lj.req_str("layer")?;
+            let id = LayerId::from_key(key)
+                .ok_or_else(|| anyhow::anyhow!("bad layer key `{key}`"))?;
+            if id.flat() >= layers.len() {
+                anyhow::bail!("layer `{key}` out of range");
+            }
+            layers[id.flat()] = LayerPlan {
+                sparsity: lj.req_f64("sparsity")?,
+                alpha: lj.req_f64("alpha")?,
+                tau: lj.req_f64("tau")? as f32,
+            };
+        }
+        Ok(SparsityPlan {
+            model: j.req_str("model")?.to_string(),
+            method: j.req_str("method")?.to_string(),
+            target_sparsity: j.req_f64("target_sparsity")?,
+            block_sparsity,
+            layers,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<SparsityPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Conventional on-disk location for a calibrated plan.
+    pub fn default_path(artifacts: &Path, model: &str, method: &str, target: f64) -> std::path::PathBuf {
+        artifacts
+            .join("plans")
+            .join(format!("{model}_{method}_{}.json", (target * 100.0).round() as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerKind;
+
+    #[test]
+    fn uniform_plan_shape() {
+        let cfg = ModelConfig::preset("llama-micro").unwrap();
+        let p = SparsityPlan::uniform(&cfg, "test", 0.5);
+        assert_eq!(p.layers.len(), cfg.n_layers * 7);
+        assert!((p.effective_sparsity(&cfg) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut p = SparsityPlan::uniform(&cfg, "wisparse", 0.4);
+        p.layer_mut(LayerId::new(1, LayerKind::Up)).alpha = 0.65;
+        p.layer_mut(LayerId::new(0, LayerKind::Q)).tau = 0.123;
+        p.block_sparsity = vec![0.3, 0.5];
+        let j = p.to_json();
+        let p2 = SparsityPlan::from_json(&j).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn save_load() {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let p = SparsityPlan::uniform(&cfg, "teal", 0.3);
+        let dir = std::env::temp_dir().join("wisparse_plan_test");
+        let path = dir.join("plan.json");
+        p.save(&path).unwrap();
+        assert_eq!(SparsityPlan::load(&path).unwrap(), p);
+    }
+
+    #[test]
+    fn default_path_encodes_target() {
+        let p = SparsityPlan::default_path(Path::new("artifacts"), "llama-micro", "wisparse", 0.5);
+        assert!(p.to_string_lossy().contains("llama-micro_wisparse_50.json"));
+    }
+}

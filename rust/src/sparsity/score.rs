@@ -1,0 +1,137 @@
+//! The weight-aware importance score (Eq. 4-5, 7) and threshold calibration.
+//!
+//! `s_i = |x_i| * g_i^{alpha_l}` with `g_i = ||W[:,i]||_2` precomputed. At
+//! inference `g^alpha` is a single fixed vector per layer, so scoring costs
+//! one abs + one multiply + one compare per channel.
+
+use crate::util::stats::select_kth_f32;
+
+/// `g_i^alpha`, clamped below at 1e-4 exactly as Alg. 2's
+/// `scales <- score^alpha.clamp(min=1e-4)` does: a dead column (g = 0) must
+/// not force the score to zero for every token.
+pub fn pow_clamped(g: &[f32], alpha: f64) -> Vec<f32> {
+    g.iter()
+        .map(|&gi| (gi as f64).powf(alpha).max(1e-4) as f32)
+        .collect()
+}
+
+/// Scores for one activation vector.
+pub fn scores(x: &[f32], ga: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), ga.len());
+    x.iter().zip(ga).map(|(&xv, &g)| xv.abs() * g).collect()
+}
+
+/// Threshold achieving a target keep ratio over pooled calibration scores
+/// (Eq. 7): `tau = Quantile_{1-r}({s_i})`. Keep ratio `r` in [0, 1];
+/// sparsity = 1 - r. Implemented with quickselect, O(N).
+///
+/// With `tau` set to the (1-r)-quantile and the mask keeping `s_i >= tau`,
+/// the realized keep fraction over the calibration pool is ~r (exact up to
+/// ties and the discreteness of the pool).
+pub fn tau_for_keep_ratio(pooled_scores: &[f32], keep_ratio: f64) -> f32 {
+    assert!(!pooled_scores.is_empty(), "empty score pool");
+    assert!((0.0..=1.0).contains(&keep_ratio));
+    if keep_ratio >= 1.0 {
+        return 0.0; // keep everything
+    }
+    if keep_ratio <= 0.0 {
+        return f32::INFINITY; // drop everything
+    }
+    let n = pooled_scores.len();
+    // Index of the first kept score in ascending order: drop floor((1-r)*n).
+    let drop = (((1.0 - keep_ratio) * n as f64).floor() as usize).min(n - 1);
+    let mut work = pooled_scores.to_vec();
+    select_kth_f32(&mut work, drop)
+}
+
+/// Pool scores over many activation rows, then compute tau (convenience for
+/// calibration: `rows` is a flat `[n_rows * dim]` buffer).
+pub fn tau_from_rows(rows: &[f32], dim: usize, ga: &[f32], keep_ratio: f64) -> f32 {
+    assert_eq!(rows.len() % dim, 0);
+    assert_eq!(ga.len(), dim);
+    let mut pool = Vec::with_capacity(rows.len());
+    for row in rows.chunks_exact(dim) {
+        for (c, &xv) in row.iter().enumerate() {
+            pool.push(xv.abs() * ga[c]);
+        }
+    }
+    tau_for_keep_ratio(&pool, keep_ratio)
+}
+
+/// Realized keep fraction of a (ga, tau) pair over calibration rows —
+/// used by tests and by the plan validator to confirm Eq. 7 calibration.
+pub fn realized_keep_fraction(rows: &[f32], dim: usize, ga: &[f32], tau: f32) -> f64 {
+    let mut kept = 0usize;
+    let mut total = 0usize;
+    for row in rows.chunks_exact(dim) {
+        for (c, &xv) in row.iter().enumerate() {
+            if xv.abs() * ga[c] >= tau {
+                kept += 1;
+            }
+            total += 1;
+        }
+    }
+    kept as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn pow_clamped_basics() {
+        let g = vec![0.0f32, 1.0, 4.0];
+        let ga = pow_clamped(&g, 0.5);
+        assert_eq!(ga[0], 1e-4); // clamped
+        assert!((ga[1] - 1.0).abs() < 1e-6);
+        assert!((ga[2] - 2.0).abs() < 1e-5);
+        // alpha = 0 -> all ones (weight term disabled).
+        let ga0 = pow_clamped(&g, 0.0);
+        assert!(ga0.iter().all(|&v| (v - 1.0).abs() < 1e-6 || v == 1.0));
+    }
+
+    #[test]
+    fn tau_hits_keep_ratio() {
+        let mut rng = Pcg64::new(5);
+        let dim = 64;
+        let rows: Vec<f32> = (0..200 * dim).map(|_| rng.normal() as f32).collect();
+        let ga: Vec<f32> = (0..dim).map(|_| rng.next_f32() + 0.1).collect();
+        for r in [0.3, 0.5, 0.7] {
+            let tau = tau_from_rows(&rows, dim, &ga, r);
+            let realized = realized_keep_fraction(&rows, dim, &ga, tau);
+            assert!(
+                (realized - r).abs() < 0.01,
+                "keep {r}: realized {realized}"
+            );
+        }
+    }
+
+    #[test]
+    fn tau_extremes() {
+        let scores = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(tau_for_keep_ratio(&scores, 1.0), 0.0);
+        assert_eq!(tau_for_keep_ratio(&scores, 0.0), f32::INFINITY);
+    }
+
+    #[test]
+    fn tau_monotone_in_keep_ratio() {
+        let mut rng = Pcg64::new(6);
+        let scores: Vec<f32> = (0..1000).map(|_| rng.next_f32()).collect();
+        let t30 = tau_for_keep_ratio(&scores, 0.3);
+        let t50 = tau_for_keep_ratio(&scores, 0.5);
+        let t70 = tau_for_keep_ratio(&scores, 0.7);
+        assert!(t30 >= t50 && t50 >= t70);
+    }
+
+    #[test]
+    fn scores_weight_interaction() {
+        // The motivating example (Fig 2): small activation, huge weight norm.
+        let x = vec![0.1f32, 1.0];
+        let g = vec![50.0f32, 1.0];
+        let s1 = scores(&x, &pow_clamped(&g, 1.0));
+        assert!(s1[0] > s1[1], "weight-aware score must rescue channel 0");
+        let s0 = scores(&x, &pow_clamped(&g, 0.0));
+        assert!(s0[0] < s0[1], "activation-only score misses channel 0");
+    }
+}

@@ -1,0 +1,208 @@
+//! Dense row-major f32 tensor with up to 3 dimensions.
+//!
+//! The engine is deliberately simple: shapes are small (micro-models) and
+//! everything hot lives in `sparse_kernel/` which operates on raw slices, so
+//! this type optimizes for clarity and debuggability, not generality.
+
+use crate::util::rng::Pcg64;
+
+/// Row-major dense f32 tensor. `shape` has 1..=3 dims.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        assert!(!shape.is_empty() && shape.len() <= 3, "1..=3 dims");
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} vs data len {}", data.len());
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    /// Gaussian init (used only in tests / synthetic weights).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Pcg64) -> Self {
+        let n: usize = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal() as f32 * std).collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.ndim(), 2, "expected 2-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn dims3(&self) -> (usize, usize, usize) {
+        assert_eq!(self.ndim(), 3, "expected 3-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1], self.shape[2])
+    }
+
+    /// Immutable row view of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (r, c) = self.dims2();
+        assert!(i < r);
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (r, c) = self.dims2();
+        assert!(i < r);
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        let (_, c) = self.dims2();
+        self.data[i * c + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let (_, c) = self.dims2();
+        self.data[i * c + j] = v;
+    }
+
+    /// Reshape without copying (numel must match).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D transpose (copying).
+    pub fn transpose2(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Column L2 norms of a 2-D tensor with rows = output dim, cols = input
+    /// dim; this is exactly `g_i = ||W[:,i]||_2` from Eq. 4 of the paper.
+    pub fn col_l2_norms(&self) -> Vec<f32> {
+        let (r, c) = self.dims2();
+        let mut acc = vec![0.0f64; c];
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            for (j, &x) in row.iter().enumerate() {
+                acc[j] += (x as f64) * (x as f64);
+            }
+        }
+        acc.into_iter().map(|x| x.sqrt() as f32).collect()
+    }
+
+    /// Row L2 norms of a 2-D tensor.
+    pub fn row_l2_norms(&self) -> Vec<f32> {
+        let (r, _) = self.dims2();
+        (0..r)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    .sqrt() as f32
+            })
+            .collect()
+    }
+
+    /// Max |a - b| between two tensors of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Mean squared error vs another tensor.
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let t = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        assert_eq!(t.transpose2().transpose2(), t);
+    }
+
+    #[test]
+    fn col_norms() {
+        let t = Tensor::from_vec(&[2, 2], vec![3., 0., 4., 0.]);
+        let g = t.col_l2_norms();
+        assert!((g[0] - 5.0).abs() < 1e-6);
+        assert_eq!(g[1], 0.0);
+    }
+
+    #[test]
+    fn mse_and_maxdiff() {
+        let a = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[1, 2], vec![1.5, 2.0]);
+        assert!((a.mse(&b) - 0.125).abs() < 1e-9);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

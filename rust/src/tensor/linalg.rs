@@ -1,0 +1,285 @@
+//! Small linear-algebra toolbox: truncated SVD via subspace (block power)
+//! iteration. Needed by the R-Sparse baseline, which routes low-magnitude
+//! activations through a precomputed rank-r approximation of each weight
+//! matrix (Zhang et al., 2025).
+
+use crate::tensor::ops::matmul;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+
+/// Truncated SVD `W ≈ U diag(s) V^T` with `U: [m, r]`, `V: [n, r]`.
+#[derive(Clone, Debug)]
+pub struct TruncatedSvd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub v: Tensor,
+}
+
+impl TruncatedSvd {
+    /// Reconstruct the rank-r approximation (test/diagnostic use).
+    pub fn reconstruct(&self) -> Tensor {
+        let (m, r) = self.u.dims2();
+        let (n, _) = self.v.dims2();
+        let mut us = self.u.clone();
+        for i in 0..m {
+            for j in 0..r {
+                us.data[i * r + j] *= self.s[j];
+            }
+        }
+        matmul(&us, &self.v.transpose2()).reshape(&[m, n])
+    }
+
+    /// Low-rank matvec: y = W_r x = U diag(s) V^T x. O((m+n) r).
+    pub fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        let (m, r) = self.u.dims2();
+        let (n, _) = self.v.dims2();
+        assert_eq!(x.len(), n);
+        assert_eq!(out.len(), m);
+        // t = diag(s) V^T x
+        let mut t = vec![0.0f32; r];
+        for j in 0..r {
+            let mut acc = 0.0f32;
+            for i in 0..n {
+                acc += self.v.data[i * r + j] * x[i];
+            }
+            t[j] = acc * self.s[j];
+        }
+        // out = U t
+        for i in 0..m {
+            let ur = &self.u.data[i * r..(i + 1) * r];
+            let mut acc = 0.0f32;
+            for j in 0..r {
+                acc += ur[j] * t[j];
+            }
+            out[i] = acc;
+        }
+    }
+
+    /// Low-rank matvec restricted to a channel subset: y = U diag(s)
+    /// (V[S,:])^T x[S]. Used by R-Sparse to route *pruned* channels through
+    /// the low-rank path.
+    pub fn matvec_subset(&self, x: &[f32], channels: &[usize], out: &mut [f32]) {
+        let (m, r) = self.u.dims2();
+        let mut t = vec![0.0f32; r];
+        for &c in channels {
+            let xv = x[c];
+            if xv == 0.0 {
+                continue;
+            }
+            let vr = &self.v.data[c * r..(c + 1) * r];
+            for j in 0..r {
+                t[j] += vr[j] * xv;
+            }
+        }
+        for j in 0..r {
+            t[j] *= self.s[j];
+        }
+        for i in 0..m {
+            let ur = &self.u.data[i * r..(i + 1) * r];
+            let mut acc = 0.0f32;
+            for j in 0..r {
+                acc += ur[j] * t[j];
+            }
+            out[i] = acc;
+        }
+    }
+}
+
+/// Orthonormalize the columns of a [m, r] matrix in place (modified
+/// Gram-Schmidt). Returns false if a column collapsed to ~zero.
+fn orthonormalize_cols(q: &mut Tensor) -> bool {
+    let (m, r) = q.dims2();
+    for j in 0..r {
+        // Subtract projections onto previous columns.
+        for k in 0..j {
+            let mut dot = 0.0f64;
+            for i in 0..m {
+                dot += q.data[i * r + j] as f64 * q.data[i * r + k] as f64;
+            }
+            for i in 0..m {
+                q.data[i * r + j] -= (dot as f32) * q.data[i * r + k];
+            }
+        }
+        let norm = (0..m)
+            .map(|i| (q.data[i * r + j] as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        if norm < 1e-12 {
+            return false;
+        }
+        let inv = (1.0 / norm) as f32;
+        for i in 0..m {
+            q.data[i * r + j] *= inv;
+        }
+    }
+    true
+}
+
+/// Truncated SVD of `w` ([m, n]) to rank `rank` via subspace iteration with
+/// `iters` power steps (default 12 is plenty for the decaying spectra of
+/// trained weight matrices).
+pub fn truncated_svd(w: &Tensor, rank: usize, iters: usize, seed: u64) -> TruncatedSvd {
+    let (m, n) = w.dims2();
+    let r = rank.min(m).min(n).max(1);
+    let mut rng = Pcg64::new(seed);
+    // Start from a random [n, r] block.
+    let mut v = Tensor::randn(&[n, r], 1.0, &mut rng);
+    orthonormalize_cols(&mut v);
+    let wt = w.transpose2();
+    #[allow(unused_assignments)]
+    let mut u = Tensor::zeros(&[m, r]);
+    for _ in 0..iters.max(1) {
+        // u = W v ; orthonormalize
+        u = matmul(w, &v);
+        if !orthonormalize_cols(&mut u) {
+            // Degenerate: re-randomize the collapsed subspace.
+            u = Tensor::randn(&[m, r], 1.0, &mut rng);
+            orthonormalize_cols(&mut u);
+        }
+        // v = W^T u ; orthonormalize
+        v = matmul(&wt, &u);
+        if !orthonormalize_cols(&mut v) {
+            v = Tensor::randn(&[n, r], 1.0, &mut rng);
+            orthonormalize_cols(&mut v);
+        }
+    }
+    // Final pass: u_raw = W v; s_j = ||u_raw[:, j]||; u = u_raw / s.
+    let u_raw = matmul(w, &v);
+    let mut s = vec![0.0f32; r];
+    let mut u_final = Tensor::zeros(&[m, r]);
+    for j in 0..r {
+        let norm = (0..m)
+            .map(|i| (u_raw.data[i * r + j] as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        s[j] = norm as f32;
+        let inv = if norm > 1e-12 { (1.0 / norm) as f32 } else { 0.0 };
+        for i in 0..m {
+            u_final.data[i * r + j] = u_raw.data[i * r + j] * inv;
+        }
+    }
+    // Sort singular triplets by decreasing s.
+    let mut order: Vec<usize> = (0..r).collect();
+    order.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+    let mut u_sorted = Tensor::zeros(&[m, r]);
+    let mut v_sorted = Tensor::zeros(&[n, r]);
+    let mut s_sorted = vec![0.0f32; r];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        s_sorted[new_j] = s[old_j];
+        for i in 0..m {
+            u_sorted.data[i * r + new_j] = u_final.data[i * r + old_j];
+        }
+        for i in 0..n {
+            v_sorted.data[i * r + new_j] = v.data[i * r + old_j];
+        }
+    }
+    TruncatedSvd {
+        u: u_sorted,
+        s: s_sorted,
+        v: v_sorted,
+    }
+}
+
+/// Frobenius norm.
+pub fn fro_norm(w: &Tensor) -> f64 {
+    w.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a matrix with a known decaying spectrum.
+    fn spectral_matrix(m: usize, n: usize, decay: f32, seed: u64) -> Tensor {
+        let r = m.min(n);
+        let mut rng = Pcg64::new(seed);
+        let mut u = Tensor::randn(&[m, r], 1.0, &mut rng);
+        let mut v = Tensor::randn(&[n, r], 1.0, &mut rng);
+        orthonormalize_cols(&mut u);
+        orthonormalize_cols(&mut v);
+        let mut us = u.clone();
+        for i in 0..m {
+            for j in 0..r {
+                us.data[i * r + j] *= decay.powi(j as i32);
+            }
+        }
+        matmul(&us, &v.transpose2())
+    }
+
+    #[test]
+    fn svd_recovers_low_rank() {
+        let w = spectral_matrix(24, 16, 0.3, 7); // fast decay -> effectively rank ~5
+        let svd = truncated_svd(&w, 8, 20, 1);
+        let approx = svd.reconstruct();
+        let err = w
+            .data
+            .iter()
+            .zip(&approx.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!(err / fro_norm(&w) < 1e-2, "rel err {}", err / fro_norm(&w));
+    }
+
+    #[test]
+    fn singular_values_decreasing() {
+        let w = spectral_matrix(20, 20, 0.6, 3);
+        let svd = truncated_svd(&w, 6, 15, 2);
+        for j in 1..svd.s.len() {
+            assert!(svd.s[j - 1] >= svd.s[j] - 1e-4);
+        }
+        // Leading singular value ≈ 1 (decay^0).
+        assert!((svd.s[0] - 1.0).abs() < 0.05, "s0={}", svd.s[0]);
+    }
+
+    #[test]
+    fn matvec_matches_reconstruct() {
+        let w = spectral_matrix(12, 10, 0.5, 5);
+        let svd = truncated_svd(&w, 4, 15, 9);
+        let rec = svd.reconstruct();
+        let mut rng = Pcg64::new(10);
+        let x: Vec<f32> = (0..10).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0.0f32; 12];
+        svd.matvec(&x, &mut y);
+        // reference: rec @ x
+        for i in 0..12 {
+            let expect: f32 = (0..10).map(|j| rec.data[i * 10 + j] * x[j]).sum();
+            assert!((y[i] - expect).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn matvec_subset_is_masked_matvec() {
+        let w = spectral_matrix(8, 6, 0.7, 11);
+        let svd = truncated_svd(&w, 3, 15, 12);
+        let x: Vec<f32> = (0..6).map(|i| i as f32 * 0.5 - 1.0).collect();
+        let subset = vec![1usize, 3, 4];
+        let mut masked = vec![0.0f32; 6];
+        for &c in &subset {
+            masked[c] = x[c];
+        }
+        let mut y_subset = vec![0.0f32; 8];
+        let mut y_masked = vec![0.0f32; 8];
+        svd.matvec_subset(&x, &subset, &mut y_subset);
+        svd.matvec(&masked, &mut y_masked);
+        for i in 0..8 {
+            assert!((y_subset[i] - y_masked[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn orthonormalize_produces_orthonormal() {
+        let mut rng = Pcg64::new(21);
+        let mut q = Tensor::randn(&[10, 4], 1.0, &mut rng);
+        assert!(orthonormalize_cols(&mut q));
+        for a in 0..4 {
+            for b in 0..4 {
+                let dot: f64 = (0..10)
+                    .map(|i| q.data[i * 4 + a] as f64 * q.data[i * 4 + b] as f64)
+                    .sum();
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-5, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Host tensor substrate: dense f32 tensors plus the numeric primitives the
+//! transformer engine needs (matmul, softmax, rmsnorm, rope) and a small
+//! linear-algebra toolbox (power-iteration SVD for the R-Sparse baseline).
+
+pub mod dense;
+pub mod ops;
+pub mod linalg;
+
+pub use dense::Tensor;

@@ -1,0 +1,242 @@
+//! Numeric primitives for the native transformer engine.
+//!
+//! These are the *reference* (dense) implementations; the optimized sparse
+//! paths live in `sparse_kernel/`. Conventions match the JAX model in
+//! `python/compile/model.py` exactly so the PJRT cross-validation can assert
+//! near-bit agreement: RMSNorm without bias, rotary embeddings in half-split
+//! layout, causal attention with 1/sqrt(d) scaling, SwiGLU MLP.
+
+use crate::tensor::Tensor;
+
+/// y = x @ W^T where x: [s, n], w: [m, n] -> y: [s, m].
+///
+/// This matches the projection convention of Eq. 1 in the paper (weights
+/// stored output-major, as PyTorch/JAX linear layers do).
+pub fn matmul_xwt(x: &Tensor, w: &Tensor) -> Tensor {
+    let (s, n) = x.dims2();
+    let (m, n2) = w.dims2();
+    assert_eq!(n, n2, "x cols {n} vs w cols {n2}");
+    let mut out = Tensor::zeros(&[s, m]);
+    for i in 0..s {
+        let xr = x.row(i);
+        let or = out.row_mut(i);
+        for (j, o) in or.iter_mut().enumerate() {
+            let wr = w.row(j);
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc += xr[k] * wr[k];
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// Plain a @ b: a[s, k] x b[k, m] -> [s, m].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (s, k) = a.dims2();
+    let (k2, m) = b.dims2();
+    assert_eq!(k, k2);
+    let mut out = Tensor::zeros(&[s, m]);
+    for i in 0..s {
+        let ar = a.row(i);
+        let or = out.row_mut(i);
+        for (kk, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let br = &b.data[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                or[j] += av * br[j];
+            }
+        }
+    }
+    out
+}
+
+/// In-place numerically-stable softmax over the last dim of a 2-D tensor.
+pub fn softmax_rows(x: &mut Tensor) {
+    let (r, _) = x.dims2();
+    for i in 0..r {
+        softmax_inplace(x.row_mut(i));
+    }
+}
+
+/// Numerically-stable softmax on a slice.
+pub fn softmax_inplace(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// log-softmax into a new vector (used by eval for logprobs / KL).
+pub fn log_softmax(row: &[f32]) -> Vec<f32> {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let logsum = row.iter().map(|&v| ((v - max) as f64).exp()).sum::<f64>().ln() as f32 + max;
+    row.iter().map(|&v| v - logsum).collect()
+}
+
+/// RMSNorm: x * w / rms(x), rms over the last dim. eps matches JAX side.
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    assert_eq!(x.len(), w.len());
+    assert_eq!(x.len(), out.len());
+    let ms = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64;
+    let inv = 1.0 / ((ms as f32 + eps).sqrt());
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+/// Rotary position embedding, half-split layout (as in Llama/JAX):
+/// for head dim d, pairs are (i, i + d/2). `pos` is the absolute position.
+/// theta-base matches the python side (10000.0).
+pub fn rope_inplace(q: &mut [f32], pos: usize, rope_base: f32) {
+    let d = q.len();
+    assert!(d % 2 == 0, "head dim must be even");
+    let half = d / 2;
+    for i in 0..half {
+        let freq = 1.0 / rope_base.powf(2.0 * i as f32 / d as f32);
+        let angle = pos as f32 * freq;
+        let (sin, cos) = angle.sin_cos();
+        let a = q[i];
+        let b = q[i + half];
+        q[i] = a * cos - b * sin;
+        q[i + half] = a * sin + b * cos;
+    }
+}
+
+/// SiLU activation: x * sigmoid(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// argmax of a slice.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest values (descending by value).
+pub fn topk_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let k = k.min(xs.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1).min(xs.len() - 1), |&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap()
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matmul_xwt_small() {
+        // x = [[1, 2]], W = [[3, 4], [5, 6]] (2 outputs, 2 inputs)
+        // y = [1*3+2*4, 1*5+2*6] = [11, 17]
+        let x = Tensor::from_vec(&[1, 2], vec![1., 2.]);
+        let w = Tensor::from_vec(&[2, 2], vec![3., 4., 5., 6.]);
+        let y = matmul_xwt(&x, &w);
+        assert_eq!(y.data, vec![11., 17.]);
+    }
+
+    #[test]
+    fn matmul_agrees_with_xwt() {
+        let mut rng = Pcg64::new(2);
+        let x = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let w = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let a = matmul_xwt(&x, &w);
+        let b = matmul(&x, &w.transpose2());
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., -1., 0., 100.]);
+        softmax_rows(&mut t);
+        for i in 0..2 {
+            let s: f32 = t.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // Large logit dominates without NaN.
+        assert!(t.at2(1, 2) > 0.999);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let row = vec![0.5f32, -1.0, 2.0, 0.0];
+        let ls = log_softmax(&row);
+        let total: f32 = ls.iter().map(|&v| v.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        let mut sm = row.clone();
+        softmax_inplace(&mut sm);
+        for (a, b) in ls.iter().zip(&sm) {
+            assert!((a.exp() - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_unit_property() {
+        // rmsnorm of a constant vector with unit weights -> ±1 values.
+        let x = vec![3.0f32; 8];
+        let w = vec![1.0f32; 8];
+        let mut out = vec![0.0; 8];
+        rmsnorm(&x, &w, 1e-5, &mut out);
+        for &v in &out {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut rng = Pcg64::new(3);
+        let mut q: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        let norm0: f32 = q.iter().map(|v| v * v).sum();
+        rope_inplace(&mut q, 7, 10000.0);
+        let norm1: f32 = q.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rope_pos_zero_is_identity() {
+        let mut q: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let orig = q.clone();
+        rope_inplace(&mut q, 0, 10000.0);
+        for (a, b) in q.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!(silu(10.0) > 9.9);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn topk() {
+        let xs = vec![0.1f32, 5.0, -1.0, 3.0, 4.0];
+        assert_eq!(topk_indices(&xs, 3), vec![1, 4, 3]);
+        assert_eq!(argmax(&xs), 1);
+        assert_eq!(topk_indices(&xs, 10).len(), 5);
+    }
+}

@@ -1,0 +1,240 @@
+//! Tiny declarative CLI argument parser (clap replacement).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! per-subcommand help text. The binary dispatches subcommands itself; this
+//! module only parses one subcommand's argument list.
+
+use std::collections::BTreeMap;
+
+/// Declared option.
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument parser for one subcommand.
+pub struct Args {
+    cmd: &'static str,
+    about: &'static str,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(cmd: &'static str, about: &'static str) -> Self {
+        Self {
+            cmd,
+            about,
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare a `--name <value>` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>` option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("wisparse {} — {}\n\noptions:\n", self.cmd, self.about);
+        for o in &self.opts {
+            let head = if o.takes_value {
+                format!("  --{} <v>", o.name)
+            } else {
+                format!("  --{}", o.name)
+            };
+            let def = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:28} {}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse an argument list. Returns Err with usage text on bad input or
+    /// `--help`.
+    pub fn parse(mut self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.usage()))?;
+                if opt.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?
+                        }
+                    };
+                    self.values.insert(key, val);
+                } else {
+                    if inline_val.is_some() {
+                        anyhow::bail!("--{key} does not take a value");
+                    }
+                    self.flags.insert(key, true);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Apply defaults, check required.
+        for o in &self.opts {
+            if o.takes_value && !self.values.contains_key(o.name) {
+                match &o.default {
+                    Some(d) => {
+                        self.values.insert(o.name.to_string(), d.clone());
+                    }
+                    None => anyhow::bail!("missing required --{}\n{}", o.name, self.usage()),
+                }
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} was not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be an integer, got `{}`", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} must be a number, got `{}`", self.get(name)))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Comma-separated list of f64 (e.g. `--sparsities 0.3,0.4,0.5`).
+    pub fn get_f64_list(&self, name: &str) -> anyhow::Result<Vec<f64>> {
+        self.get(name)
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--{name}: `{s}` is not a number"))
+            })
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t", "test")
+            .opt("model", "llama-micro", "model name")
+            .opt("steps", "10", "steps")
+            .parse(&v(&["--steps", "20"]))
+            .unwrap();
+        assert_eq!(a.get("model"), "llama-micro");
+        assert_eq!(a.get_usize("steps").unwrap(), 20);
+    }
+
+    #[test]
+    fn eq_syntax_and_flags() {
+        let a = Args::new("t", "test")
+            .opt("x", "1", "")
+            .flag("verbose", "")
+            .parse(&v(&["--x=5", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get("x"), "5");
+        assert!(a.get_flag("verbose"));
+    }
+
+    #[test]
+    fn required_missing() {
+        let r = Args::new("t", "test").req("out", "").parse(&v(&[]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let r = Args::new("t", "test").parse(&v(&["--bogus"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = Args::new("t", "test")
+            .opt("sparsities", "0.3,0.4,0.5", "")
+            .parse(&v(&[]))
+            .unwrap();
+        assert_eq!(a.get_f64_list("sparsities").unwrap(), vec![0.3, 0.4, 0.5]);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = Args::new("t", "test").parse(&v(&["one", "two"])).unwrap();
+        assert_eq!(a.positional(), &["one".to_string(), "two".to_string()]);
+    }
+}

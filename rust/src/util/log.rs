@@ -1,0 +1,110 @@
+//! Leveled stderr logger with wall-clock timestamps relative to process
+//! start. Controlled by `WISPARSE_LOG` (error|warn|info|debug|trace).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static START: OnceLock<Instant> = OnceLock::new();
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn init() {
+    INIT.get_or_init(|| {
+        START.get_or_init(Instant::now);
+        if let Ok(s) = std::env::var("WISPARSE_LOG") {
+            let lv = match s.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "info" => Level::Info,
+                "debug" => Level::Debug,
+                "trace" => Level::Trace,
+                _ => Level::Info,
+            };
+            LEVEL.store(lv as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+pub fn set_level(lv: Level) {
+    init();
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lv: Level) -> bool {
+    init();
+    (lv as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(lv: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(lv) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    eprintln!(
+        "[{:>9.3}s {} {}] {}",
+        t.as_secs_f64(),
+        lv.tag(),
+        module,
+        msg
+    );
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

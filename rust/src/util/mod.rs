@@ -1,0 +1,16 @@
+//! Offline-environment substrates: everything a normal project would pull
+//! from crates.io (rand, serde_json, clap, criterion-lite, rayon-lite,
+//! proptest-lite) implemented from scratch because the build is fully
+//! offline and only the `xla` crate closure is vendored.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod stats;
+pub mod threadpool;
+pub mod prop;
+pub mod log;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use json::Json;

@@ -1,0 +1,223 @@
+//! Mini property-based testing harness (proptest replacement).
+//!
+//! Provides seeded random case generation with bounded shrinking: when a
+//! case fails, the harness retries with "smaller" inputs produced by the
+//! generator's `shrink` to report a minimal-ish counterexample. Used by the
+//! invariant tests on routing, batching, masks and allocation.
+
+use crate::util::rng::Pcg64;
+
+/// A generator of random values with an optional shrinker.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+    /// Candidate smaller values; default none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f64 in [lo, hi).
+pub struct F64In(pub f64, pub f64);
+
+impl Gen for F64In {
+    type Value = f64;
+    fn generate(&self, rng: &mut Pcg64) -> f64 {
+        rng.range_f64(self.0, self.1)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mid = self.0 + (*v - self.0) / 2.0;
+        if (mid - *v).abs() > 1e-9 {
+            vec![self.0, mid]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vec<f32> of length in [min_len, max_len], values in [lo, hi).
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let n = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..n)
+            .map(|_| self.lo + (self.hi - self.lo) * rng.next_f32())
+            .collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // Halve the tail.
+            let keep = (v.len() / 2).max(self.min_len);
+            out.push(v[..keep].to_vec());
+        }
+        // Zero everything (often the minimal interesting case).
+        if v.iter().any(|&x| x != 0.0) && self.lo <= 0.0 {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Result of a property check.
+pub struct CheckConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for CheckConfig {
+    fn default() -> Self {
+        Self {
+            cases: 100,
+            seed: 0xC0FFEE,
+            max_shrink_steps: 200,
+        }
+    }
+}
+
+/// Check `prop` over `cfg.cases` generated values. Panics with the minimal
+/// found counterexample on failure (so it composes with `#[test]`).
+pub fn check<G, P>(cfg: &CheckConfig, gen: &G, prop: P)
+where
+    G: Gen,
+    P: Fn(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // Shrink.
+            let mut best = v.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in gen.shrink(&best) {
+                    steps += 1;
+                    if steps > cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {}): {best_msg}\ncounterexample: {best:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Check a property over pairs from two generators.
+pub fn check2<G1, G2, P>(cfg: &CheckConfig, g1: &G1, g2: &G2, prop: P)
+where
+    G1: Gen,
+    G2: Gen,
+    P: Fn(&G1::Value, &G2::Value) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let a = g1.generate(&mut rng);
+        let b = g2.generate(&mut rng);
+        if let Err(msg) = prop(&a, &b) {
+            panic!("property failed (case {case}): {msg}\ninputs: {a:?}, {b:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(&CheckConfig::default(), &UsizeIn(0, 100), |&n| {
+            if n <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(&CheckConfig::default(), &UsizeIn(0, 100), |&n| {
+            if n < 50 {
+                Ok(())
+            } else {
+                Err(format!("{n} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        check(
+            &CheckConfig::default(),
+            &VecF32 {
+                min_len: 2,
+                max_len: 64,
+                lo: -1.0,
+                hi: 1.0,
+            },
+            |v| {
+                if v.len() < 2 || v.len() > 64 {
+                    return Err(format!("len {}", v.len()));
+                }
+                if v.iter().any(|&x| !(-1.0..1.0).contains(&x)) {
+                    return Err("value out of range".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pairs() {
+        check2(
+            &CheckConfig::default(),
+            &UsizeIn(1, 10),
+            &UsizeIn(1, 10),
+            |&a, &b| {
+                if a * b >= a {
+                    Ok(())
+                } else {
+                    Err("mult".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,227 @@
+//! Small statistics helpers shared by calibration, eval and the bench
+//! harness: means, quantiles, and streaming summaries.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// q-quantile (0 <= q <= 1) with linear interpolation, like numpy's default.
+/// Sorts a copy; fine for calibration-sized data.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// q-quantile of an already-sorted slice.
+pub fn quantile_sorted(v: &[f64], q: f64) -> f64 {
+    let n = v.len();
+    if n == 1 {
+        return v[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// f32 variant used on activation scores (hot during calibration).
+pub fn quantile_f32(xs: &[f32], q: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n == 1 {
+        return v[0];
+    }
+    let pos = q * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = (pos - lo as f64) as f32;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// Select the k-th smallest element (0-based) in O(n) average via quickselect.
+/// Used for exact top-k thresholds on large score vectors without a full sort.
+pub fn select_kth_f32(xs: &mut [f32], k: usize) -> f32 {
+    assert!(k < xs.len());
+    let mut lo = 0usize;
+    let mut hi = xs.len() - 1;
+    // Deterministic pivot walk (median-of-three) to avoid adversarial cases.
+    loop {
+        if lo == hi {
+            return xs[lo];
+        }
+        let mid = lo + (hi - lo) / 2;
+        // median-of-three pivot
+        let (a, b, c) = (xs[lo], xs[mid], xs[hi]);
+        let pivot = if (a <= b) == (b <= c) {
+            b
+        } else if (b <= a) == (a <= c) {
+            a
+        } else {
+            c
+        };
+        // 3-way partition
+        let (mut i, mut j, mut p) = (lo, hi, lo);
+        while p <= j {
+            if xs[p] < pivot {
+                xs.swap(p, i);
+                i += 1;
+                p += 1;
+            } else if xs[p] > pivot {
+                xs.swap(p, j);
+                if j == 0 {
+                    break;
+                }
+                j -= 1;
+            } else {
+                p += 1;
+            }
+        }
+        if k < i {
+            hi = i - 1;
+        } else if k > j {
+            lo = j + 1;
+        } else {
+            return pivot;
+        }
+    }
+}
+
+/// Streaming summary used by the serving metrics: count / mean / min / max
+/// with reservoir-free exact percentiles over a bounded window.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    window: Vec<f64>,
+    cap: usize,
+}
+
+impl Summary {
+    pub fn new(window_cap: usize) -> Self {
+        Self {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            window: Vec::new(),
+            cap: window_cap.max(1),
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if self.window.len() == self.cap {
+            // Overwrite ring-style.
+            let i = (self.count as usize - 1) % self.cap;
+            self.window[i] = x;
+        } else {
+            self.window.push(x);
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Percentile over the retained window (recent values).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.window.is_empty() {
+            return 0.0;
+        }
+        quantile(&self.window, q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn mean_stddev() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_matches_numpy_convention() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 4.0).abs() < 1e-12);
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_unsorted_input() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn select_kth_matches_sort() {
+        let mut r = Pcg64::new(17);
+        for n in [1usize, 2, 3, 10, 101, 1000] {
+            let xs: Vec<f32> = (0..n).map(|_| r.next_f32() * 100.0).collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for k in [0, n / 3, n / 2, n - 1] {
+                let mut work = xs.clone();
+                assert_eq!(select_kth_f32(&mut work, k), sorted[k], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn select_kth_with_duplicates() {
+        let mut xs = vec![5.0f32; 100];
+        assert_eq!(select_kth_f32(&mut xs, 50), 5.0);
+        let mut xs: Vec<f32> = (0..100).map(|i| (i % 3) as f32).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(select_kth_f32(&mut xs, 70), sorted[70]);
+    }
+
+    #[test]
+    fn summary_window() {
+        let mut s = Summary::new(4);
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count, 6);
+        assert_eq!(s.max, 6.0);
+        assert_eq!(s.min, 1.0);
+        assert!((s.mean() - 3.5).abs() < 1e-12);
+        // Window holds the last 4 values {5, 6, 3, 4}.
+        assert!(s.percentile(1.0) >= 5.0);
+    }
+}

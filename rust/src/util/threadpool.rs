@@ -1,0 +1,167 @@
+//! Scoped data-parallel helpers (rayon replacement).
+//!
+//! The hot path (sparse GEMV over large output dims, calibration sweeps,
+//! evolutionary-search candidate evaluation) wants simple fork-join
+//! parallelism. `std::thread::scope` gives us that without any dependency;
+//! this module wraps it with chunked iteration utilities.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `WISPARSE_THREADS` env override, else
+/// available parallelism, else 1.
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("WISPARSE_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(chunk_index, item_range)` over `n` items split into contiguous
+/// chunks, one chunk per thread. `f` must be `Sync` (it is shared by
+/// reference across the scope's threads).
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, 0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fref = &f;
+            s.spawn(move || fref(t, lo..hi));
+        }
+    });
+}
+
+/// Parallel map with dynamic work stealing over an index range: each worker
+/// pulls the next index from a shared atomic counter. Good when per-item cost
+/// varies a lot (e.g. evaluating evolutionary-search candidates).
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let fref = &f;
+            let nextref = &next;
+            let resref = &results;
+            s.spawn(move || loop {
+                let i = nextref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = fref(i);
+                resref.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|x| x.expect("worker filled every slot"))
+        .collect()
+}
+
+/// Split a mutable slice into `k` disjoint contiguous chunks and run `f` on
+/// each in parallel. Used to parallelize GEMV output rows without
+/// synchronization.
+pub fn parallel_slices<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync, // (chunk_idx, offset, chunk)
+{
+    let n = data.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, 0, data);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut offset = 0usize;
+        let mut t = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fref = &f;
+            let off = offset;
+            let ti = t;
+            s.spawn(move || fref(ti, off, head));
+            rest = tail;
+            offset += take;
+            t += 1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_identity() {
+        let out = parallel_map(100, 4, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_single_thread() {
+        let out = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(out.len(), 10);
+        assert_eq!(out[9], 10);
+    }
+
+    #[test]
+    fn chunks_cover_everything() {
+        let seen = Mutex::new(vec![false; 1000]);
+        parallel_chunks(1000, 7, |_, range| {
+            let mut s = seen.lock().unwrap();
+            for i in range {
+                assert!(!s[i], "index {i} visited twice");
+                s[i] = true;
+            }
+        });
+        assert!(seen.into_inner().unwrap().into_iter().all(|b| b));
+    }
+
+    #[test]
+    fn slices_disjoint_and_complete() {
+        let mut data = vec![0usize; 97];
+        parallel_slices(&mut data, 4, |_, offset, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = offset + i;
+            }
+        });
+        assert_eq!(data, (0..97).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_items() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+        parallel_chunks(0, 4, |_, r| assert!(r.is_empty()));
+    }
+}

@@ -1,0 +1,168 @@
+//! Benchmark timing substrate (criterion replacement).
+//!
+//! `Bench` runs a closure repeatedly with warmup, measures per-iteration
+//! wall time, and reports mean / median / p10 / p90 plus derived throughput.
+//! Bench targets in `benches/` use `harness = false` and drive this.
+
+use std::time::{Duration, Instant};
+
+/// One measured distribution of iteration times.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// items/sec given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_secs()
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  median {:>12}  p90 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p90_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner configuration.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(400),
+            min_iters: 5,
+            max_iters: 100_000,
+        }
+    }
+
+    /// Run `f` repeatedly and collect per-iteration timings. A `black_box`
+    /// on the closure's output is the caller's responsibility (return a
+    /// value and `std::hint::black_box` it inside `f`).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut times_ns: Vec<f64> = Vec::new();
+        let m0 = Instant::now();
+        while (m0.elapsed() < self.measure || times_ns.len() < self.min_iters)
+            && times_ns.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            times_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        times_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = times_ns.len();
+        let mean = times_ns.iter().sum::<f64>() / n as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: crate::util::stats::quantile_sorted(&times_ns, 0.5),
+            p10_ns: crate::util::stats::quantile_sorted(&times_ns, 0.1),
+            p90_ns: crate::util::stats::quantile_sorted(&times_ns, 0.9),
+            min_ns: times_ns[0],
+        }
+    }
+}
+
+/// Simple scope timer for coarse phase reporting.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+            max_iters: 10_000,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p90_ns >= r.median_ns);
+        assert!(r.median_ns >= r.min_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

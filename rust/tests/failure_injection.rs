@@ -1,0 +1,122 @@
+//! Failure injection: every artifact-loading path must reject corrupted
+//! inputs with an error, never a panic or silent garbage.
+
+use std::io::Write;
+use wisparse::calib::CalibSet;
+use wisparse::model::weights::Weights;
+use wisparse::model::{Model, ModelConfig};
+use wisparse::runtime::manifest::Manifest;
+use wisparse::sparsity::plan::SparsityPlan;
+use wisparse::util::json::Json;
+
+fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("wisparse_failtest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(bytes).unwrap();
+    path
+}
+
+#[test]
+fn corrupted_weight_files_rejected() {
+    for (name, bytes) in [
+        ("empty.bin", &b""[..]),
+        ("short_magic.bin", &b"WSPW"[..]),
+        ("wrong_magic.bin", &b"XXXX0001\x01\x00\x00\x00"[..]),
+        // Valid magic, count says 1 tensor, then truncates.
+        ("truncated.bin", &b"WSPW0001\x01\x00\x00\x00\x02\x00\x00\x00ab"[..]),
+    ] {
+        let path = tmp(name, bytes);
+        assert!(Weights::load(&path).is_err(), "{name} must be rejected");
+    }
+}
+
+#[test]
+fn weight_file_with_wrong_shapes_rejected_by_model() {
+    // Well-formed container, wrong tensor set for the config.
+    let mut w = Weights::default();
+    w.insert(
+        "embed.weight",
+        wisparse::tensor::Tensor::zeros(&[10, 10]), // wrong shape
+    );
+    let cfg = ModelConfig::preset("nano").unwrap();
+    assert!(Model::from_weights(cfg, &w).is_err());
+}
+
+#[test]
+fn corrupted_plans_rejected() {
+    for (name, text) in [
+        ("notjson.json", "{{{{"),
+        ("missing_fields.json", r#"{"model": "x"}"#),
+        (
+            "bad_layer_key.json",
+            r#"{"model":"m","method":"x","target_sparsity":0.5,
+               "block_sparsity":[0.5],
+               "layers":[{"layer":"0.bogus_proj","sparsity":0.5,"alpha":0,"tau":0}]}"#,
+        ),
+        (
+            "layer_out_of_range.json",
+            r#"{"model":"m","method":"x","target_sparsity":0.5,
+               "block_sparsity":[0.5],
+               "layers":[{"layer":"9.q_proj","sparsity":0.5,"alpha":0,"tau":0}]}"#,
+        ),
+    ] {
+        let path = tmp(name, text.as_bytes());
+        assert!(SparsityPlan::load(&path).is_err(), "{name} must be rejected");
+    }
+}
+
+#[test]
+fn corrupted_manifests_rejected() {
+    for (name, text) in [
+        ("m1.json", "[]"),
+        ("m2.json", r#"{"model":"x","variant":"dense","seq_len":4}"#),
+        (
+            "m3.json",
+            r#"{"model":"x","variant":"dense","seq_len":4,"vocab_size":256,
+               "params":[{"name":"w"}]}"#,
+        ),
+    ] {
+        let path = tmp(name, text.as_bytes());
+        assert!(Manifest::load(&path).is_err(), "{name} must be rejected");
+    }
+}
+
+#[test]
+fn corrupted_calib_sets_rejected() {
+    for (name, text) in [
+        ("c1.json", r#"{"seqs": []}"#),          // empty set
+        ("c2.json", r#"{"seqs": [[]]}"#),        // empty sequence
+        ("c3.json", r#"{"noseqs": 1}"#),         // missing field
+        ("c4.json", r#"{"seqs": "nope"}"#),      // wrong type
+    ] {
+        let path = tmp(name, text.as_bytes());
+        assert!(CalibSet::load(&path).is_err(), "{name} must be rejected");
+    }
+}
+
+#[test]
+fn json_parser_rejects_depth_bombs_gracefully() {
+    // Deeply nested arrays: must error or parse, not crash the process
+    // with a stack overflow at sane depths.
+    let depth = 200;
+    let text = "[".repeat(depth) + &"]".repeat(depth);
+    let _ = Json::parse(&text); // any Result is fine; no panic
+}
+
+#[test]
+fn generation_request_bounds() {
+    use std::sync::Arc;
+    use wisparse::model::sampler::Sampling;
+    use wisparse::server::engine::{Engine, EngineCfg};
+    use wisparse::sparsity::Dense;
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 1));
+    let engine = Engine::new(model, Arc::new(Dense), EngineCfg::default());
+    // max_new larger than the context: engine must clamp, not panic.
+    let (text, _) = engine.run_to_completion("ab", 10_000, Sampling::Greedy);
+    assert!(text.len() < 10_000);
+    // Prompt longer than the context: truncated on admit.
+    let (text, _) = engine.run_to_completion(&"x".repeat(5_000), 4, Sampling::Greedy);
+    assert_eq!(text.len(), 4);
+}

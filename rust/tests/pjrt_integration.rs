@@ -1,0 +1,99 @@
+//! Integration: PJRT runtime against build artifacts.
+//!
+//! These tests exercise the full three-layer bridge (Pallas kernel -> JAX
+//! model -> HLO text -> xla crate -> native comparison). They require
+//! `make artifacts` to have run; otherwise they skip (printing why), so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+use wisparse::calib::{CalibSet, ModelCalib};
+use wisparse::model::transformer::Model;
+use wisparse::runtime::pjrt::PjrtModel;
+use wisparse::runtime::validate::cross_validate;
+use wisparse::sparsity::allocator::{calibrate_wisparse, PipelineStages, WiSparseCfg};
+use wisparse::sparsity::alpha_search::AlphaSearchCfg;
+use wisparse::sparsity::evo::EvoCfg;
+use wisparse::sparsity::greedy::GreedyCfg;
+
+fn model_dir() -> Option<PathBuf> {
+    let dir = Path::new("artifacts/models/llama-micro");
+    if dir.join("dense.hlo.txt").exists() && dir.join("weights.bin").exists() {
+        Some(dir.to_path_buf())
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn test_tokens(n: usize) -> Vec<usize> {
+    wisparse::data::corpus::CorpusGen::new(0xBEEF)
+        .calib_sequences(1, n)
+        .remove(0)
+}
+
+#[test]
+fn dense_hlo_matches_native_engine() {
+    let Some(dir) = model_dir() else { return };
+    let report = cross_validate(&dir, "dense", &test_tokens(48), None, 2e-3).unwrap();
+    eprintln!("{}", report.line());
+    assert!(
+        report.pass,
+        "dense PJRT vs native diverged: max {}",
+        report.max_abs_diff
+    );
+}
+
+#[test]
+fn wisparse_hlo_matches_native_engine() {
+    let Some(dir) = model_dir() else { return };
+    if !dir.join("wisparse.hlo.txt").exists() {
+        eprintln!("SKIP: no wisparse.hlo.txt");
+        return;
+    }
+    // Calibrate a quick plan against the real model.
+    let model = Model::load_dir(&dir).unwrap();
+    let calib_set = CalibSet::load(Path::new("artifacts/data/llama-micro/calib.json"))
+        .unwrap_or_else(|_| CalibSet::synthetic(4, 48, 256, 7));
+    let calib = ModelCalib::collect(&model, &calib_set.subset(4, 48));
+    let cfg = WiSparseCfg {
+        evo: EvoCfg {
+            generations: 2,
+            offspring: 4,
+            eps: 0.05,
+            ..EvoCfg::default()
+        },
+        greedy: GreedyCfg {
+            step: 0.1,
+            ..GreedyCfg::default()
+        },
+        alpha: AlphaSearchCfg {
+            n_grid: 4,
+            ..AlphaSearchCfg::default()
+        },
+    };
+    let plan = calibrate_wisparse(&model, &calib, 0.5, &cfg, PipelineStages::FULL);
+    let report =
+        cross_validate(&dir, "wisparse", &test_tokens(48), Some(&plan), 2e-3).unwrap();
+    eprintln!("{}", report.line());
+    assert!(
+        report.pass,
+        "sparse PJRT vs native diverged: max {}",
+        report.max_abs_diff
+    );
+}
+
+#[test]
+fn manifest_covers_all_weights() {
+    let Some(dir) = model_dir() else { return };
+    let pjrt = PjrtModel::load(&dir, "dense").unwrap();
+    let weights = wisparse::model::weights::Weights::load(&dir.join("weights.bin")).unwrap();
+    assert_eq!(
+        pjrt.manifest.params.len(),
+        weights.tensors.len(),
+        "manifest/weights count mismatch"
+    );
+    for p in &pjrt.manifest.params {
+        let t = weights.get(&p.name).expect("manifest param has a weight");
+        assert_eq!(t.shape, p.shape, "{}", p.name);
+    }
+}

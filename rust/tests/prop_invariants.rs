@@ -1,0 +1,220 @@
+//! Property-based invariant tests (custom mini-harness in util::prop, since
+//! proptest isn't available offline). Each property is checked over many
+//! seeded random cases with shrinking on failure.
+
+use wisparse::model::ModelConfig;
+use wisparse::sparse_kernel::{
+    dense_gemv, sparse_gemv_scored, sparse_gemv_threshold, ColMajorMatrix,
+};
+use wisparse::sparsity::evo::{mutate, EvoCfg};
+use wisparse::sparsity::plan::SparsityPlan;
+use wisparse::sparsity::score::{pow_clamped, realized_keep_fraction, tau_from_rows};
+use wisparse::tensor::Tensor;
+use wisparse::util::prop::{check, check2, CheckConfig, F64In, UsizeIn, VecF32};
+use wisparse::util::rng::Pcg64;
+
+fn cfgc(cases: usize) -> CheckConfig {
+    CheckConfig {
+        cases,
+        ..CheckConfig::default()
+    }
+}
+
+#[test]
+fn prop_kept_channels_monotone_in_tau() {
+    // For any activation vector, raising tau never keeps MORE channels.
+    check(
+        &cfgc(100),
+        &VecF32 {
+            min_len: 1,
+            max_len: 128,
+            lo: -3.0,
+            hi: 3.0,
+        },
+        |x| {
+            let n = x.len();
+            let ga = vec![1.0f32; n];
+            let w = ColMajorMatrix::from_row_major(&Tensor::full(&[2, n], 0.5));
+            let mut out = vec![0.0f32; 2];
+            let mut prev = usize::MAX;
+            for tau in [0.0f32, 0.5, 1.0, 2.0, 4.0] {
+                let kept = sparse_gemv_scored(&w, x, &ga, tau, &mut out);
+                if kept > prev {
+                    return Err(format!("kept rose from {prev} to {kept} at tau {tau}"));
+                }
+                prev = kept;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scored_gemv_equals_masked_dense() {
+    // sparse_gemv_scored == dense_gemv on the explicitly-masked input.
+    check2(
+        &cfgc(60),
+        &VecF32 {
+            min_len: 2,
+            max_len: 64,
+            lo: -2.0,
+            hi: 2.0,
+        },
+        &F64In(0.0, 2.0),
+        |x, &tau| {
+            let n = x.len();
+            let mut rng = Pcg64::new(n as u64);
+            let w = ColMajorMatrix::from_row_major(&Tensor::randn(&[5, n], 1.0, &mut rng));
+            let ga: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.01).collect();
+            let mut scored = vec![0.0f32; 5];
+            sparse_gemv_scored(&w, x, &ga, tau as f32, &mut scored);
+            let masked: Vec<f32> = x
+                .iter()
+                .zip(&ga)
+                .map(|(&xv, &g)| if xv.abs() * g >= tau as f32 { xv } else { 0.0 })
+                .collect();
+            let mut dense = vec![0.0f32; 5];
+            dense_gemv(&w, &masked, &mut dense);
+            for i in 0..5 {
+                if (scored[i] - dense[i]).abs() > 1e-4 {
+                    return Err(format!("row {i}: {} vs {}", scored[i], dense[i]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tau_calibration_hits_keep_ratio() {
+    // Eq. 7: the calibrated threshold realizes ~the requested keep ratio on
+    // the pool it was calibrated on.
+    check2(
+        &cfgc(40),
+        &UsizeIn(4, 64),
+        &F64In(0.05, 0.95),
+        |&dim, &keep| {
+            let mut rng = Pcg64::new(dim as u64 ^ 0xFEED);
+            let rows: Vec<f32> = (0..50 * dim).map(|_| rng.normal() as f32).collect();
+            let ga: Vec<f32> = (0..dim).map(|_| rng.next_f32() + 0.05).collect();
+            let tau = tau_from_rows(&rows, dim, &ga, keep);
+            let realized = realized_keep_fraction(&rows, dim, &ga, tau);
+            if (realized - keep).abs() > 0.05 {
+                return Err(format!("asked {keep}, realized {realized}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pow_clamped_positive_and_monotone() {
+    // g^alpha stays >= 1e-4, and is monotone in g for any fixed alpha >= 0.
+    check2(
+        &cfgc(60),
+        &VecF32 {
+            min_len: 2,
+            max_len: 32,
+            lo: 0.0,
+            hi: 5.0,
+        },
+        &F64In(0.0, 1.5),
+        |g, &alpha| {
+            let ga = pow_clamped(g, alpha);
+            if ga.iter().any(|&v| v < 1e-4) {
+                return Err("clamp violated".into());
+            }
+            // Monotonicity on a sorted copy.
+            let mut pairs: Vec<(f32, f32)> = g.iter().cloned().zip(ga.iter().cloned()).collect();
+            pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in pairs.windows(2) {
+                if w[1].1 < w[0].1 - 1e-6 {
+                    return Err(format!("not monotone: {:?} -> {:?}", w[0], w[1]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_evo_mutation_respects_budget_and_bounds() {
+    check2(
+        &cfgc(80),
+        &UsizeIn(2, 24),
+        &F64In(0.05, 0.9),
+        |&n_blocks, &target| {
+            let cfg = EvoCfg {
+                eps: 0.03,
+                ..EvoCfg::default()
+            };
+            let mut rng = Pcg64::new(n_blocks as u64);
+            let parent = vec![target; n_blocks];
+            for _ in 0..5 {
+                let child = mutate(&parent, target, &cfg, &mut rng);
+                let mean = child.iter().sum::<f64>() / child.len() as f64;
+                if mean > target + 1e-9 {
+                    return Err(format!("budget violated: mean {mean} > {target}"));
+                }
+                if child
+                    .iter()
+                    .any(|&p| !(cfg.min_sparsity..=cfg.max_sparsity).contains(&p))
+                {
+                    return Err("bounds violated".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plan_json_roundtrip() {
+    // Any randomized plan survives JSON serialization exactly.
+    check(&cfgc(30), &UsizeIn(0, 1 << 30), |&seed| {
+        let cfg = ModelConfig::preset("nano").unwrap();
+        let mut rng = Pcg64::new(seed as u64);
+        let mut plan = SparsityPlan::uniform(&cfg, "prop", rng.next_f64());
+        for lp in plan.layers.iter_mut() {
+            lp.sparsity = rng.next_f64();
+            lp.alpha = rng.next_f64() * 1.5;
+            lp.tau = rng.next_f32();
+        }
+        plan.block_sparsity = (0..cfg.n_layers).map(|_| rng.next_f64()).collect();
+        let j = plan.to_json().to_string_pretty();
+        let back = SparsityPlan::from_json(&wisparse::util::json::Json::parse(&j).unwrap())
+            .map_err(|e| e.to_string())?;
+        if back != plan {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_threshold_kernel_is_scored_with_unit_ga() {
+    check(
+        &cfgc(60),
+        &VecF32 {
+            min_len: 1,
+            max_len: 96,
+            lo: -2.0,
+            hi: 2.0,
+        },
+        |x| {
+            let n = x.len();
+            let mut rng = Pcg64::new(n as u64 ^ 0xAA);
+            let w = ColMajorMatrix::from_row_major(&Tensor::randn(&[3, n], 1.0, &mut rng));
+            let ga = vec![1.0f32; n];
+            let mut a = vec![0.0f32; 3];
+            let mut b = vec![0.0f32; 3];
+            let tau = 0.8f32;
+            let ka = sparse_gemv_threshold(&w, x, tau, &mut a);
+            let kb = sparse_gemv_scored(&w, x, &ga, tau, &mut b);
+            if ka != kb || a != b {
+                return Err(format!("kernels diverge: {ka} vs {kb}"));
+            }
+            Ok(())
+        },
+    );
+}

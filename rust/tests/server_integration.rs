@@ -1,0 +1,137 @@
+//! Integration: the HTTP front end over a real TCP socket.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::server::batcher::BatcherCfg;
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::sparsity::Dense;
+use wisparse::util::json::Json;
+
+fn start_server() -> (Arc<Coordinator>, String) {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 201));
+    let engine = Arc::new(Engine::new(
+        model,
+        Arc::new(Dense),
+        EngineCfg {
+            threads: 2,
+            ..EngineCfg::default()
+        },
+    ));
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 4,
+                max_queue: 64,
+            },
+        },
+    );
+    let sched = Arc::clone(&coord);
+    std::thread::spawn(move || sched.run_scheduler());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let http_coord = Arc::clone(&coord);
+    std::thread::spawn(move || {
+        wisparse::server::http::serve(http_coord, "127.0.0.1:0", move |a| {
+            tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = rx.recv().unwrap().to_string();
+    (coord, addr)
+}
+
+fn request(addr: &str, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap();
+            }
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    reader.read_exact(&mut buf).unwrap();
+    (status, String::from_utf8(buf).unwrap())
+}
+
+#[test]
+fn health_metrics_generate_roundtrip() {
+    let (coord, addr) = start_server();
+
+    let (status, body) = request(&addr, "GET", "/health", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("ok"));
+
+    let (status, body) = request(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "12+34=", "max_new": 6}"#,
+    );
+    assert_eq!(status, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("generated_tokens").as_usize(), Some(6));
+    assert_eq!(j.get("text").as_str().map(|s| s.len()), Some(6));
+
+    let (status, body) = request(&addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let m = Json::parse(&body).unwrap();
+    assert_eq!(m.get("requests_total").as_usize(), Some(1));
+    assert_eq!(m.get("tokens_generated").as_usize(), Some(6));
+
+    // Errors.
+    let (status, _) = request(&addr, "POST", "/generate", "not json");
+    assert_eq!(status, 400);
+    let (status, _) = request(&addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_http_clients() {
+    let (coord, addr) = start_server();
+    let results: Vec<(u16, String)> = std::thread::scope(|s| {
+        (0..6)
+            .map(|i| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    request(
+                        &addr,
+                        "POST",
+                        "/generate",
+                        &format!(r#"{{"prompt": "client {i} says", "max_new": 5}}"#),
+                    )
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (status, body) in &results {
+        assert_eq!(*status, 200, "{body}");
+    }
+    assert_eq!(coord.metrics.lock().unwrap().requests_total, 6);
+    coord.shutdown();
+}
