@@ -43,6 +43,8 @@ fn main() {
         alpha: AlphaSearchCfg { n_grid: 6, ..AlphaSearchCfg::default() },
     };
     let target = 0.5;
+    // One wisparse plan shared by the SIMD row and its pre-SIMD A/B twin.
+    let wisparse_plan = calibrate_wisparse(&model, &calib, target, &cfg, PipelineStages::FULL);
     let methods: Vec<(&str, Arc<dyn Sparsifier>)> = vec![
         ("dense", Arc::new(Dense)),
         ("rsparse", {
@@ -57,14 +59,22 @@ fn main() {
             let plan = calibrate_wina(&model, &calib, target);
             Arc::new(ScoredSparsifier::from_plan("wina", &model, &plan))
         }),
+        ("wisparse-scalar", {
+            // Same plan as `wisparse` below but forced through the pre-SIMD
+            // kernels (x4 fused scored / scalar threshold) — the baseline
+            // this PR's dispatched backend is measured against end to end.
+            let sp = ScoredSparsifier::from_plan("wisparse", &model, &wisparse_plan);
+            Arc::new(sp.force_scalar(true))
+        }),
         ("wisparse", {
-            let plan = calibrate_wisparse(&model, &calib, target, &cfg, PipelineStages::FULL);
-            Arc::new(ScoredSparsifier::from_plan("wisparse", &model, &plan))
+            Arc::new(ScoredSparsifier::from_plan("wisparse", &model, &wisparse_plan))
         }),
     ];
     let prompt = "aaaaa"; // 5 tokens, paper protocol
     let new_tokens = 200;
     let mut dense_tps = 0.0;
+    let mut scalar_tps = 0.0;
+    let mut simd_tps = 0.0;
     let mut csv = Vec::new();
     println!("== e2e decode: 200 tokens from a 5-token prompt (llama-micro) ==");
     for (name, sp) in methods {
@@ -81,6 +91,10 @@ fn main() {
         }
         if name == "dense" {
             dense_tps = best;
+        } else if name == "wisparse-scalar" {
+            scalar_tps = best;
+        } else if name == "wisparse" {
+            simd_tps = best;
         }
         println!(
             "{name:<10} density {density:.3}  {best:>8.1} tok/s  ({:+.1}% vs dense)",
@@ -101,4 +115,10 @@ fn main() {
     )
     .expect("csv");
     println!("-> results/bench_e2e_decode.csv  (paper: +17.2% on Llama-3.1 at 50%)");
+    if scalar_tps > 0.0 {
+        println!(
+            "SIMD dispatched kernels vs pre-SIMD path (same plan): {:+.1}% tokens/s",
+            (simd_tps / scalar_tps - 1.0) * 100.0
+        );
+    }
 }

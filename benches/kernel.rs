@@ -7,10 +7,15 @@
 
 use std::hint::black_box;
 use wisparse::report::csv::{f, write_csv};
-use wisparse::sparse_kernel::{dense_gemv, sparse_gemv_scored, ColMajorMatrix};
+use wisparse::sparse_kernel::gemv::{
+    count_kept_scored, sparse_gemv_fused_parallel_with, sparse_gemv_fused_with,
+};
+use wisparse::sparse_kernel::{dense_gemv, simd, sparse_gemv_scored, ColMajorMatrix};
 use wisparse::sparsity::score::tau_for_keep_ratio;
 use wisparse::tensor::Tensor;
+use wisparse::util::json::Json;
 use wisparse::util::rng::Pcg64;
+use wisparse::util::threadpool::num_threads;
 use wisparse::util::timer::Bench;
 
 fn main() {
@@ -118,6 +123,100 @@ fn main() {
             f(a.mean_ns / b.mean_ns),
         ]);
     }
+
+    // §SIMD: scalar reference vs every dispatched fused backend, plus the
+    // intra-GEMV row-parallel kernel, at 50% sparsity. Includes a
+    // 4096x4096 projection (real-model `lm_head`/`gate` scale) — the shape
+    // the tentpole's >=1.3x acceptance criterion is measured on. Results go
+    // to BENCH_kernel.json so future PRs can track the perf trajectory.
+    println!("\n== §SIMD: scalar reference vs dispatched fused backends (50% sparsity) ==");
+    let quick = Bench::quick();
+    let threads = num_threads();
+    let mut json_shapes: Vec<Json> = Vec::new();
+    let simd_shapes = [
+        (352usize, 128usize, "llama up/gate"),
+        (1024, 1024, "1k proj"),
+        (4096, 4096, "4k proj"),
+    ];
+    for &(m, n, label) in &simd_shapes {
+        let w = ColMajorMatrix::from_row_major(&Tensor::randn(&[m, n], 0.05, &mut rng));
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let ga: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+        let scores: Vec<f32> = x.iter().zip(&ga).map(|(&xv, &g)| xv.abs() * g).collect();
+        let tau = tau_for_keep_ratio(&scores, 0.5);
+        let kept = count_kept_scored(&x, &ga, tau);
+        let col_bytes = (kept * m * std::mem::size_of::<f32>()) as f64;
+        let mut out = vec![0.0f32; m];
+        let mut entries: Vec<Json> = Vec::new();
+        let mut record = |name: &str, mean_ns: f64, scalar_ns: f64| {
+            let speedup = scalar_ns / mean_ns;
+            let tokens_per_s = 1e9 / mean_ns;
+            let gb_per_s = col_bytes / mean_ns; // bytes/ns == GB/s
+            println!(
+                "{label:<16} {name:<22} {:>10}  {tokens_per_s:>9.0} tok/s  {gb_per_s:>6.1} GB/s  ({speedup:.2}x vs scalar)",
+                wisparse::util::timer::fmt_ns(mean_ns)
+            );
+            entries.push(Json::obj(vec![
+                ("backend", Json::Str(name.to_string())),
+                ("mean_ns", Json::Num(mean_ns)),
+                ("tokens_per_s", Json::Num(tokens_per_s)),
+                ("gb_per_s", Json::Num(gb_per_s)),
+                ("speedup_vs_scalar", Json::Num(speedup)),
+            ]));
+        };
+        let scalar = quick.run(&format!("{label} scalar-ref"), || {
+            black_box(sparse_gemv_scored(&w, black_box(&x), &ga, tau, &mut out));
+        });
+        record("scalar-ref", scalar.mean_ns, scalar.mean_ns);
+        let mut kept_idx: Vec<u32> = Vec::new();
+        for backend in simd::available_backends() {
+            let r = quick.run(&format!("{label} fused {}", backend.name()), || {
+                black_box(sparse_gemv_fused_with(
+                    backend,
+                    &w,
+                    black_box(&x),
+                    Some(&ga),
+                    tau,
+                    &mut out,
+                    &mut kept_idx,
+                ));
+            });
+            record(&format!("fused-{}", backend.name()), r.mean_ns, scalar.mean_ns);
+        }
+        // min_macs = 0 forces the row split so this row measures the
+        // parallel kernel on every shape (the production gate would keep
+        // the small shapes serial and silently duplicate the fused row).
+        let r = quick.run(&format!("{label} fused dispatched+par"), || {
+            black_box(sparse_gemv_fused_parallel_with(
+                simd::active(),
+                &w,
+                black_box(&x),
+                Some(&ga),
+                tau,
+                &mut out,
+                &mut kept_idx,
+                threads,
+                0,
+            ));
+        });
+        record(&format!("dispatched-par-t{threads}"), r.mean_ns, scalar.mean_ns);
+        json_shapes.push(Json::obj(vec![
+            ("label", Json::Str(label.to_string())),
+            ("m", Json::Num(m as f64)),
+            ("n", Json::Num(n as f64)),
+            ("sparsity", Json::Num(0.5)),
+            ("kept", Json::Num(kept as f64)),
+            ("backends", Json::Arr(entries)),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("bench", Json::Str("kernel".to_string())),
+        ("simd_active", Json::Str(simd::active().name().to_string())),
+        ("threads", Json::Num(threads as f64)),
+        ("shapes", Json::Arr(json_shapes)),
+    ]);
+    std::fs::write("BENCH_kernel.json", report.to_string_pretty()).expect("BENCH_kernel.json");
+    println!("-> BENCH_kernel.json");
 
     // Scoring overhead: scored with tau=0 (keeps all) vs dense.
     println!("\n== scoring overhead (tau=0: same work + scoring) ==");

@@ -1,12 +1,14 @@
 //! `wisparse validate`: native-engine vs PJRT-HLO cross-validation, dense
-//! and (if a plan exists) wisparse variants.
+//! and (if a plan exists) wisparse variants. Requires the `pjrt` cargo
+//! feature (vendored `xla` crate).
 
-use std::path::Path;
-use wisparse::runtime::validate::cross_validate;
-use wisparse::sparsity::plan::SparsityPlan;
-use wisparse::util::cli::Args;
-
+#[cfg(feature = "pjrt")]
 pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    use std::path::Path;
+    use wisparse::runtime::validate::cross_validate;
+    use wisparse::sparsity::plan::SparsityPlan;
+    use wisparse::util::cli::Args;
+
     let args = Args::new("validate", "cross-validate native vs PJRT")
         .opt("artifacts", "artifacts", "artifacts root")
         .opt("model", "llama-micro", "model preset")
@@ -51,4 +53,15 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     }
     println!("cross-validation OK: all layers compute the same function");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub fn run(_argv: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "this binary was built without the `pjrt` feature. Cross-validation \
+         against the compiled HLO needs the vendored `xla` crate: add it as \
+         a path dependency in Cargo.toml (e.g. `xla = {{ path = \"...\" }}` \
+         pointing at the build image's xla checkout, see /opt/xla-example), \
+         then rebuild with `cargo build --features pjrt`"
+    )
 }

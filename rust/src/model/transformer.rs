@@ -10,10 +10,11 @@ use crate::model::kv_cache::KvCache;
 use crate::model::layers::{LayerId, LayerKind};
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
-use crate::sparse_kernel::{dense_gemv, ColMajorMatrix};
+use crate::sparse_kernel::{dense_gemv_parallel, ColMajorMatrix};
 use crate::sparsity::Sparsifier;
 use crate::tensor::ops::{rmsnorm, rope_inplace, silu, softmax_inplace};
 use crate::tensor::Tensor;
+use crate::util::threadpool::intra_op_threads;
 use std::path::Path;
 
 /// One transformer block's weights in kernel layout.
@@ -82,8 +83,15 @@ impl ForwardStats {
 }
 
 /// Reusable per-sequence scratch buffers (kept out of the hot loop's
-/// allocator traffic).
+/// allocator traffic). Together with the caller-owned logits buffer this
+/// covers every vector the decode path touches: steady-state
+/// `forward_token` performs zero heap allocations as long as projections
+/// stay below the intra-GEMV row-split threshold (asserted by
+/// `rust/tests/alloc_steady_state.rs`; the split path forks scoped
+/// threads, which allocate).
 pub struct Scratch {
+    /// Residual stream for the token being decoded.
+    resid: Vec<f32>,
     normed: Vec<f32>,
     q: Vec<f32>,
     k: Vec<f32>,
@@ -102,6 +110,7 @@ impl Scratch {
         let d = cfg.d_model;
         let f = cfg.ffn_dim;
         Self {
+            resid: vec![0.0; d],
             normed: vec![0.0; d],
             q: vec![0.0; d],
             k: vec![0.0; d],
@@ -281,8 +290,9 @@ impl Model {
         }
     }
 
-    /// Decode one token: returns the logits for the next position.
-    /// `cache.len` is the current position; it is incremented.
+    /// Decode one token, writing the next position's logits into `logits`
+    /// (resized on first use, then reused — the steady state allocates
+    /// nothing). `cache.len` is the current position; it is incremented.
     pub fn forward_token(
         &self,
         token: usize,
@@ -290,21 +300,25 @@ impl Model {
         sp: &dyn Sparsifier,
         scratch: &mut Scratch,
         stats: &mut ForwardStats,
-    ) -> Vec<f32> {
+        logits: &mut Vec<f32>,
+    ) {
         assert!(token < self.cfg.vocab_size, "token {token} out of vocab");
         assert!(!cache.is_full(), "KV cache full (max_seq {})", cache.max_seq);
         let pos = cache.len;
-        let mut x = self.embed.row(token).to_vec();
+        // The residual stream lives in scratch; it is taken out for the
+        // duration of the block loop so `scratch`'s other buffers stay
+        // borrowable, and put back afterwards.
+        let mut x = std::mem::take(&mut scratch.resid);
+        x.copy_from_slice(self.embed.row(token));
         for b in 0..self.cfg.n_layers {
             self.block_step(b, b, &mut x, pos, cache, sp, scratch, stats);
         }
         cache.len = pos + 1;
         stats.tokens += 1;
-        let mut normed = vec![0.0f32; self.cfg.d_model];
-        rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut normed);
-        let mut logits = vec![0.0f32; self.cfg.vocab_size];
-        dense_gemv(&self.lm_head, &normed, &mut logits);
-        logits
+        rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut scratch.normed);
+        scratch.resid = x;
+        logits.resize(self.cfg.vocab_size, 0.0);
+        dense_gemv_parallel(&self.lm_head, &scratch.normed, logits, intra_op_threads());
     }
 
     /// Full-sequence forward. Returns `[T, vocab]` logits. If `block_taps`
@@ -329,9 +343,10 @@ impl Model {
         let mut cache = KvCache::new(&self.cfg);
         let mut scratch = Scratch::new(&self.cfg);
         let mut logits = Tensor::zeros(&[tokens.len(), self.cfg.vocab_size]);
+        let mut x = std::mem::take(&mut scratch.resid);
         for (t, &tok) in tokens.iter().enumerate() {
             let pos = cache.len;
-            let mut x = self.embed.row(tok).to_vec();
+            x.copy_from_slice(self.embed.row(tok));
             for b in 0..self.cfg.n_layers {
                 if let Some(taps) = block_taps.as_deref_mut() {
                     taps[b].row_mut(t).copy_from_slice(&x);
@@ -340,10 +355,15 @@ impl Model {
             }
             cache.len = pos + 1;
             stats.tokens += 1;
-            let mut normed = vec![0.0f32; d];
-            rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut normed);
-            dense_gemv(&self.lm_head, &normed, logits.row_mut(t));
+            rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut scratch.normed);
+            dense_gemv_parallel(
+                &self.lm_head,
+                &scratch.normed,
+                logits.row_mut(t),
+                intra_op_threads(),
+            );
         }
+        scratch.resid = x;
         logits
     }
 
@@ -380,9 +400,9 @@ impl Model {
     ) -> Vec<usize> {
         let mut cache = KvCache::new(&self.cfg);
         let mut scratch = Scratch::new(&self.cfg);
-        let mut logits = vec![];
+        let mut logits: Vec<f32> = Vec::new();
         for &t in prompt {
-            logits = self.forward_token(t, &mut cache, sp, &mut scratch, stats);
+            self.forward_token(t, &mut cache, sp, &mut scratch, stats, &mut logits);
         }
         let mut out = Vec::with_capacity(n_new);
         for _ in 0..n_new {
@@ -391,7 +411,7 @@ impl Model {
             }
             let next = crate::tensor::ops::argmax(&logits);
             out.push(next);
-            logits = self.forward_token(next, &mut cache, sp, &mut scratch, stats);
+            self.forward_token(next, &mut cache, sp, &mut scratch, stats, &mut logits);
         }
         out
     }
@@ -470,8 +490,9 @@ mod tests {
         // Incremental decode must produce identical logits per position.
         let mut cache = KvCache::new(&m.cfg);
         let mut scratch = Scratch::new(&m.cfg);
+        let mut l: Vec<f32> = Vec::new();
         for (t, &tok) in tokens.iter().enumerate() {
-            let l = m.forward_token(tok, &mut cache, &Dense, &mut scratch, &mut stats);
+            m.forward_token(tok, &mut cache, &Dense, &mut scratch, &mut stats, &mut l);
             for v in 0..m.cfg.vocab_size {
                 assert!(
                     (l[v] - seq_logits.at2(t, v)).abs() < 1e-4,

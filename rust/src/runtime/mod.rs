@@ -3,10 +3,18 @@
 //! it with weight literals — the Rust side of the L2/L3 bridge. Python is
 //! build-time only; at runtime this module and the native engine are the
 //! only execution paths.
+//!
+//! The PJRT execution path needs the vendored `xla` crate, which is not
+//! part of the default offline build: it is gated behind the `pjrt` cargo
+//! feature (`cargo build --features pjrt`). The manifest schema is always
+//! available so plans/manifests can be read and validated without XLA.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod validate;
 
 pub use manifest::Manifest;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtModel;

@@ -137,34 +137,21 @@ impl Coordinator {
             if active.is_empty() {
                 continue;
             }
-            // One decode step across the batch.
+            // One decode step across the batch: only unfinished sequences
+            // enter (chunks stay balanced when completions cluster); the
+            // decode policy itself is shared with `Engine::step_batch`.
             let t0 = Instant::now();
-            {
-                let mut seqs: Vec<&mut SeqState> =
-                    active.iter_mut().map(|(_, s, _)| s).collect();
-                // step_batch wants a contiguous slice; decode each directly.
-                let engine = &self.engine;
-                if seqs.len() == 1 {
-                    if !seqs[0].finished() {
-                        engine.decode_one(seqs[0]);
-                    }
-                } else {
-                    let slots: Vec<Mutex<&mut SeqState>> =
-                        seqs.drain(..).map(Mutex::new).collect();
-                    crate::util::threadpool::parallel_map(
-                        slots.len(),
-                        engine.cfg.threads.min(slots.len()),
-                        |i| {
-                            let mut guard = slots[i].lock().unwrap();
-                            if !guard.finished() {
-                                engine.decode_one(&mut guard);
-                            }
-                        },
-                    );
-                }
-            }
+            let stepped = {
+                let mut seqs: Vec<&mut SeqState> = active
+                    .iter_mut()
+                    .map(|(_, s, _)| s)
+                    .filter(|s| !s.finished())
+                    .collect();
+                let n = seqs.len();
+                self.engine.step_slots(&mut seqs[..]);
+                n
+            };
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
-            let stepped = active.iter().filter(|(_, s, _)| !s.finished()).count() + 1;
             {
                 let mut m = self.metrics.lock().unwrap();
                 m.per_token_ms.add(step_ms / stepped.max(1) as f64);

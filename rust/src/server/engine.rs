@@ -13,7 +13,7 @@ use crate::model::sampler::Sampling;
 use crate::model::transformer::{ForwardStats, Model, Scratch};
 use crate::sparsity::{Dense, Sparsifier};
 use crate::util::rng::Pcg64;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::parallel_slices;
 use std::sync::Arc;
 
 /// Engine configuration.
@@ -21,7 +21,11 @@ use std::sync::Arc;
 pub struct EngineCfg {
     /// Fraction of prefill tokens (the trailing part) run sparse (paper: 0.5).
     pub prefill_sparse_fraction: f64,
-    /// Threads for batched decode.
+    /// Threads for batch-level decode (sequences per step). Single-sequence
+    /// decode additionally uses kernel-level intra-GEMV parallelism budgeted
+    /// from `WISPARSE_THREADS`; inside batched steps that budget is scoped
+    /// to 1 per worker (`with_intra_op_threads`), so the two levels never
+    /// multiply.
     pub threads: usize,
     pub seed: u64,
 }
@@ -93,7 +97,8 @@ impl Engine {
         SeqState {
             id,
             prompt_tokens: tokens,
-            generated: Vec::new(),
+            // Preallocated so steady-state decode never grows it.
+            generated: Vec::with_capacity(max_new),
             max_new,
             sampling,
             cache: KvCache::new(&self.model.cfg),
@@ -117,14 +122,24 @@ impl Engine {
             } else {
                 self.sparsifier.as_ref()
             };
-            seq.last_logits =
-                self.model
-                    .forward_token(tok, &mut seq.cache, sp, &mut seq.scratch, &mut seq.stats);
+            self.model.forward_token(
+                tok,
+                &mut seq.cache,
+                sp,
+                &mut seq.scratch,
+                &mut seq.stats,
+                &mut seq.last_logits,
+            );
         }
         seq.prefilled = true;
     }
 
-    /// One decode step for a single sequence (assumes prefilled).
+    /// One decode step for a single sequence (assumes prefilled). Steady
+    /// state performs no heap allocations on the projection/attention path:
+    /// logits, residual, scratch and the kernel index buffers are all
+    /// reused. (Projections big enough to take the intra-GEMV row-split —
+    /// beyond `PAR_MIN_MACS` kept MACs — fork scoped threads, which is the
+    /// one remaining allocation source on very large models.)
     pub fn decode_one(&self, seq: &mut SeqState) {
         debug_assert!(seq.prefilled && !seq.finished());
         let next = seq.sampling.sample(&seq.last_logits, &mut seq.rng);
@@ -132,36 +147,49 @@ impl Engine {
         if seq.finished() {
             return;
         }
-        seq.last_logits = self.model.forward_token(
+        self.model.forward_token(
             next,
             &mut seq.cache,
             self.sparsifier.as_ref(),
             &mut seq.scratch,
             &mut seq.stats,
+            &mut seq.last_logits,
         );
     }
 
     /// One decode step across a batch of sequences, parallel over
-    /// sequences. Finished sequences are skipped.
+    /// sequences. Finished sequences are filtered out before the split so
+    /// chunks stay balanced even when completions cluster.
     pub fn step_batch(&self, seqs: &mut [SeqState]) {
-        if seqs.is_empty() {
+        let mut active: Vec<&mut SeqState> =
+            seqs.iter_mut().filter(|s| !s.finished()).collect();
+        self.step_slots(&mut active[..]);
+    }
+
+    /// One decode step over a set of sequence slots — the shared policy
+    /// behind [`Engine::step_batch`] and the serving coordinator: single-
+    /// sequence fast path, then disjoint contiguous chunks of slots per
+    /// worker (split_at_mut under the hood, kernel thread budget pinned to
+    /// 1 per worker by `parallel_slices`), so there is no per-sequence lock
+    /// to take. Finished slots are skipped defensively.
+    pub fn step_slots(&self, slots: &mut [&mut SeqState]) {
+        if slots.is_empty() {
             return;
         }
-        let threads = self.cfg.threads.min(seqs.len());
+        let threads = self.cfg.threads.min(slots.len());
         if threads <= 1 {
-            for seq in seqs.iter_mut().filter(|s| !s.finished()) {
-                self.decode_one(seq);
+            for seq in slots.iter_mut() {
+                if !seq.finished() {
+                    self.decode_one(&mut **seq);
+                }
             }
             return;
         }
-        // Distribute mutable sequence slots across threads.
-        let slots: Vec<&mut SeqState> = seqs.iter_mut().collect();
-        let slots: Vec<std::sync::Mutex<&mut SeqState>> =
-            slots.into_iter().map(std::sync::Mutex::new).collect();
-        let _ = parallel_map(slots.len(), threads, |i| {
-            let mut guard = slots[i].lock().unwrap();
-            if !guard.finished() {
-                self.decode_one(&mut guard);
+        parallel_slices(slots, threads, |_, _, chunk| {
+            for seq in chunk.iter_mut() {
+                if !seq.finished() {
+                    self.decode_one(&mut **seq);
+                }
             }
         });
     }

@@ -4,12 +4,16 @@
 //! sequence can yield a different sparsity pattern" — as the open kernel
 //! problem. Our batched kernel handles it directly: every row of the batch
 //! carries its own dynamic mask (scored against the same per-layer `ga`/τ),
-//! and rows are distributed across threads. This is the "improved sparse
-//! kernels" piece of the reproduction.
+//! and contiguous row ranges are distributed across threads. Each worker
+//! writes straight into its disjoint `ys` window and reuses one kept-index
+//! scratch buffer across its rows — no per-row temporaries, no result
+//! copying, no locks.
 
-use super::gemv::{dense_gemv, sparse_gemv_scored};
+use super::gemv::{dense_gemv_simd_with, sparse_gemv_fused_with};
 use super::layout::ColMajorMatrix;
-use crate::util::threadpool::parallel_map;
+use super::simd;
+use crate::util::threadpool::parallel_slices_aligned;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Batched scored projection: `ys[r] = (xs[r] ⊙ m_r) W^T` with per-row
 /// masks. `xs` is row-major `[rows, n]`, `ys` row-major `[rows, m]`.
@@ -28,34 +32,41 @@ pub fn batched_gemm_scored(
     if rows == 0 {
         return 0;
     }
-    if threads <= 1 || rows == 1 {
-        let mut kept = 0;
-        for r in 0..rows {
-            let x = &xs[r * w.n..(r + 1) * w.n];
-            let y = &mut ys[r * w.m..(r + 1) * w.m];
-            kept += sparse_gemv_scored(w, x, ga, tau, y);
+    let backend = simd::active();
+    let n = w.n;
+    let m = w.m;
+    let threads = threads.max(1).min(rows);
+    if threads <= 1 {
+        let mut kept_idx = Vec::new();
+        let mut kept = 0usize;
+        for (r, y) in ys.chunks_mut(m).enumerate() {
+            let x = &xs[r * n..(r + 1) * n];
+            kept += sparse_gemv_fused_with(backend, w, x, Some(ga), tau, y, &mut kept_idx);
         }
         return kept;
     }
-    // Work-stealing over rows; each row writes a disjoint output slice, so
-    // we hand out raw row buffers via index math inside parallel_map.
-    let m = w.m;
-    let n = w.n;
-    let results = parallel_map(rows, threads, |r| {
-        let x = &xs[r * n..(r + 1) * n];
-        let mut y = vec![0.0f32; m];
-        let kept = sparse_gemv_scored(w, x, ga, tau, &mut y);
-        (r, y, kept)
+    // Rows split contiguously across threads (`align = m` keeps chunk
+    // boundaries on row edges); each worker owns a disjoint window of `ys`,
+    // so no synchronization is needed on the output. Kept counts reduce
+    // through one atomic; each worker reuses one kept-index scratch across
+    // its rows.
+    let total = AtomicUsize::new(0);
+    parallel_slices_aligned(ys, threads, m, |_, offset, window| {
+        let base = offset / m;
+        let mut kept_idx = Vec::new();
+        let mut kept = 0usize;
+        for (i, y) in window.chunks_mut(m).enumerate() {
+            let r = base + i;
+            let x = &xs[r * n..(r + 1) * n];
+            kept += sparse_gemv_fused_with(backend, w, x, Some(ga), tau, y, &mut kept_idx);
+        }
+        total.fetch_add(kept, Ordering::Relaxed);
     });
-    let mut total = 0usize;
-    for (r, y, kept) in results {
-        ys[r * m..(r + 1) * m].copy_from_slice(&y);
-        total += kept;
-    }
-    total
+    total.into_inner()
 }
 
-/// Batched dense projection (baseline).
+/// Batched dense projection (baseline). Both the serial and the threaded
+/// path report `rows * n` kept channels (every channel of every row).
 pub fn batched_gemm_dense(
     w: &ColMajorMatrix,
     xs: &[f32],
@@ -65,31 +76,33 @@ pub fn batched_gemm_dense(
 ) -> usize {
     assert_eq!(xs.len(), rows * w.n);
     assert_eq!(ys.len(), rows * w.m);
-    if threads <= 1 || rows <= 1 {
-        for r in 0..rows {
-            let x = &xs[r * w.n..(r + 1) * w.n];
-            let y = &mut ys[r * w.m..(r + 1) * w.m];
-            dense_gemv(w, x, y);
-        }
-        return rows * w.n;
+    if rows == 0 {
+        return 0;
     }
-    let m = w.m;
+    let backend = simd::active();
     let n = w.n;
-    let results = parallel_map(rows, threads, |r| {
-        let x = &xs[r * n..(r + 1) * n];
-        let mut y = vec![0.0f32; m];
-        dense_gemv(w, x, &mut y);
-        (r, y)
-    });
-    for (r, y) in results {
-        ys[r * m..(r + 1) * m].copy_from_slice(&y);
+    let m = w.m;
+    let threads = threads.max(1).min(rows);
+    if threads <= 1 {
+        for (r, y) in ys.chunks_mut(m).enumerate() {
+            dense_gemv_simd_with(backend, w, &xs[r * n..(r + 1) * n], y);
+        }
+        return rows * n;
     }
-    rows * w.n
+    parallel_slices_aligned(ys, threads, m, |_, offset, window| {
+        let base = offset / m;
+        for (i, y) in window.chunks_mut(m).enumerate() {
+            let r = base + i;
+            dense_gemv_simd_with(backend, w, &xs[r * n..(r + 1) * n], y);
+        }
+    });
+    rows * n
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse_kernel::gemv::{dense_gemv, sparse_gemv_scored};
     use crate::tensor::Tensor;
     use crate::util::rng::Pcg64;
 
@@ -149,9 +162,19 @@ mod tests {
         let (w, xs, _) = setup(7, 9, 3, 47);
         let mut a = vec![0.0f32; 3 * 7];
         let mut b = vec![0.0f32; 3 * 7];
-        batched_gemm_dense(&w, &xs, 3, &mut a, 1);
-        batched_gemm_dense(&w, &xs, 3, &mut b, 4);
+        let ka = batched_gemm_dense(&w, &xs, 3, &mut a, 1);
+        let kb = batched_gemm_dense(&w, &xs, 3, &mut b, 4);
+        assert_eq!(ka, 3 * 9);
+        assert_eq!(ka, kb, "kept counts must agree across thread counts");
         assert_eq!(a, b);
+        // And against the reference row-by-row kernel.
+        let mut reference = vec![0.0f32; 7];
+        for r in 0..3 {
+            dense_gemv(&w, &xs[r * 9..(r + 1) * 9], &mut reference);
+            for i in 0..7 {
+                assert!((a[r * 7 + i] - reference[i]).abs() < 1e-4);
+            }
+        }
     }
 
     #[test]
@@ -159,5 +182,18 @@ mod tests {
         let (w, _, ga) = setup(4, 6, 1, 53);
         let mut ys = vec![];
         assert_eq!(batched_gemm_scored(&w, &[], 0, &ga, 0.1, &mut ys, 4), 0);
+        assert_eq!(batched_gemm_dense(&w, &[], 0, &mut ys, 4), 0);
+    }
+
+    #[test]
+    fn uneven_row_split() {
+        // rows not divisible by threads: last window is short.
+        let (w, xs, ga) = setup(9, 17, 7, 59);
+        let mut a = vec![0.0f32; 7 * 9];
+        let mut b = vec![0.0f32; 7 * 9];
+        let ka = batched_gemm_scored(&w, &xs, 7, &ga, 0.2, &mut a, 1);
+        let kb = batched_gemm_scored(&w, &xs, 7, &ga, 0.2, &mut b, 3);
+        assert_eq!(ka, kb);
+        assert_eq!(a, b);
     }
 }

@@ -7,6 +7,14 @@
 //! compiler auto-vectorizes.
 
 use super::layout::ColMajorMatrix;
+use super::simd::{self, Backend};
+use crate::util::threadpool::parallel_slices_aligned;
+
+/// Minimum multiply-accumulates before intra-GEMV row parallelism pays for
+/// its thread fork-join. Below this the fused kernels run on the calling
+/// thread (micro/nano model shapes never split; `lm_head`-sized projections
+/// on real vocabularies do).
+pub const PAR_MIN_MACS: usize = 1 << 21;
 
 /// Dense projection (S = all channels). Baseline for the speedup plots.
 pub fn dense_gemv(w: &ColMajorMatrix, x: &[f32], out: &mut [f32]) -> usize {
@@ -92,6 +100,9 @@ pub fn sparse_gemv_scored_collect(
     out: &mut [f32],
     kept_buf: &mut Vec<usize>,
 ) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(ga.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
     out.fill(0.0);
     kept_buf.clear();
     for (c, &xv) in x.iter().enumerate() {
@@ -169,6 +180,212 @@ fn axpy4(coeffs: &[f32; 4], offs: &[usize; 4], data: &[f32], out: &mut [f32]) {
     let c3 = &data[offs[3]..offs[3] + m];
     for i in 0..m {
         out[i] += a0 * c0[i] + a1 * c1[i] + a2 * c2[i] + a3 * c3[i];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Two-pass fused kernels (SIMD backend, §Tentpole): pass 1 scans the mask
+// predicate into a reusable index buffer, pass 2 accumulates kept columns in
+// fused groups of eight so the output vector is loaded/stored once per eight
+// AXPYs. `ga = None` is the TEAL/magnitude path — it gets the same fused
+// treatment, which the single-pass kernels above never gave it.
+// ---------------------------------------------------------------------------
+
+/// Fused scored/threshold projection on the process-wide SIMD backend.
+/// `kept_idx` is caller-owned scratch (no allocation once warm).
+pub fn sparse_gemv_fused(
+    w: &ColMajorMatrix,
+    x: &[f32],
+    ga: Option<&[f32]>,
+    tau: f32,
+    out: &mut [f32],
+    kept_idx: &mut Vec<u32>,
+) -> usize {
+    sparse_gemv_fused_with(simd::active(), w, x, ga, tau, out, kept_idx)
+}
+
+/// Fused projection on an explicit backend (tests / bench sweeps).
+pub fn sparse_gemv_fused_with(
+    backend: Backend,
+    w: &ColMajorMatrix,
+    x: &[f32],
+    ga: Option<&[f32]>,
+    tau: f32,
+    out: &mut [f32],
+    kept_idx: &mut Vec<u32>,
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    match ga {
+        Some(ga) => {
+            debug_assert_eq!(ga.len(), w.n);
+            simd::scan_scored_with(backend, x, ga, tau, kept_idx);
+        }
+        None => simd::scan_threshold_with(backend, x, tau, kept_idx),
+    }
+    out.fill(0.0);
+    accum_rows(backend, w, x, kept_idx, 0, out);
+    kept_idx.len()
+}
+
+/// Fused projection with intra-GEMV row parallelism: when the kept work is
+/// large enough (`PAR_MIN_MACS`), the output range is split into contiguous
+/// row windows across `threads`, each walking the same kept-index list over
+/// its own column sub-slices. Window boundaries are aligned to the SIMD
+/// group width, so every element lands in the same vector-body/scalar-tail
+/// position as in the serial kernel and the result is bit-identical at any
+/// thread count.
+pub fn sparse_gemv_fused_parallel(
+    w: &ColMajorMatrix,
+    x: &[f32],
+    ga: Option<&[f32]>,
+    tau: f32,
+    out: &mut [f32],
+    kept_idx: &mut Vec<u32>,
+    threads: usize,
+) -> usize {
+    sparse_gemv_fused_parallel_with(
+        simd::active(),
+        w,
+        x,
+        ga,
+        tau,
+        out,
+        kept_idx,
+        threads,
+        PAR_MIN_MACS,
+    )
+}
+
+/// As [`sparse_gemv_fused_parallel`] with explicit backend and split
+/// threshold (tests force `min_macs = 0` to exercise the split path on
+/// small shapes).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_gemv_fused_parallel_with(
+    backend: Backend,
+    w: &ColMajorMatrix,
+    x: &[f32],
+    ga: Option<&[f32]>,
+    tau: f32,
+    out: &mut [f32],
+    kept_idx: &mut Vec<u32>,
+    threads: usize,
+    min_macs: usize,
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    match ga {
+        Some(ga) => {
+            debug_assert_eq!(ga.len(), w.n);
+            simd::scan_scored_with(backend, x, ga, tau, kept_idx);
+        }
+        None => simd::scan_threshold_with(backend, x, tau, kept_idx),
+    }
+    let kept = kept_idx.len();
+    if threads <= 1 || w.m.saturating_mul(kept) < min_macs.max(1) {
+        out.fill(0.0);
+        accum_rows(backend, w, x, kept_idx, 0, out);
+        return kept;
+    }
+    let idx: &[u32] = kept_idx.as_slice();
+    parallel_slices_aligned(out, threads, 8, |_, row0, rows| {
+        rows.fill(0.0);
+        accum_rows(backend, w, x, idx, row0, rows);
+    });
+    kept
+}
+
+/// Dense projection on an explicit SIMD backend (all channels kept; no scan
+/// or index buffer needed).
+pub fn dense_gemv_simd_with(
+    backend: Backend,
+    w: &ColMajorMatrix,
+    x: &[f32],
+    out: &mut [f32],
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    out.fill(0.0);
+    dense_rows(backend, w, x, 0, out);
+    w.n
+}
+
+/// Dense projection with intra-GEMV row parallelism — the `lm_head` path of
+/// single-sequence decode, where the output dim (vocab) dwarfs every other
+/// projection.
+pub fn dense_gemv_parallel(
+    w: &ColMajorMatrix,
+    x: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    let backend = simd::active();
+    if threads <= 1 || w.m.saturating_mul(w.n) < PAR_MIN_MACS {
+        out.fill(0.0);
+        dense_rows(backend, w, x, 0, out);
+        return w.n;
+    }
+    parallel_slices_aligned(out, threads, 8, |_, row0, rows| {
+        rows.fill(0.0);
+        dense_rows(backend, w, x, row0, rows);
+    });
+    w.n
+}
+
+/// rows += sum over kept channels of `x[c] * W[row0..row0+rows.len(), c]`,
+/// fused eight columns at a time.
+fn accum_rows(
+    backend: Backend,
+    w: &ColMajorMatrix,
+    x: &[f32],
+    idx: &[u32],
+    row0: usize,
+    rows: &mut [f32],
+) {
+    let m = w.m;
+    debug_assert!(row0 + rows.len() <= m);
+    let mut coeffs = [0.0f32; 8];
+    let mut offs = [0usize; 8];
+    let groups = idx.chunks_exact(8);
+    let rem = groups.remainder();
+    for group in groups {
+        for (j, &c) in group.iter().enumerate() {
+            let c = c as usize;
+            coeffs[j] = x[c];
+            offs[j] = c * m + row0;
+        }
+        simd::axpy8_with(backend, &coeffs, &offs, &w.data, rows);
+    }
+    for &c in rem {
+        let c = c as usize;
+        let lo = c * m + row0;
+        simd::axpy_with(backend, x[c], &w.data[lo..lo + rows.len()], rows);
+    }
+}
+
+/// rows += `x W[row0..row0+rows.len(), :]^T` over every channel, fused eight
+/// columns at a time (dense counterpart of [`accum_rows`]).
+fn dense_rows(backend: Backend, w: &ColMajorMatrix, x: &[f32], row0: usize, rows: &mut [f32]) {
+    let m = w.m;
+    let n = w.n;
+    debug_assert!(row0 + rows.len() <= m);
+    let mut coeffs = [0.0f32; 8];
+    let mut offs = [0usize; 8];
+    let mut c = 0usize;
+    while c + 8 <= n {
+        for j in 0..8 {
+            coeffs[j] = x[c + j];
+            offs[j] = (c + j) * m + row0;
+        }
+        simd::axpy8_with(backend, &coeffs, &offs, &w.data, rows);
+        c += 8;
+    }
+    while c < n {
+        let lo = c * m + row0;
+        simd::axpy_with(backend, x[c], &w.data[lo..lo + rows.len()], rows);
+        c += 1;
     }
 }
 
@@ -306,6 +523,79 @@ mod tests {
                     assert!((a[i] - b[i]).abs() < 1e-4, "tau {tau} row {i}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn fused_matches_scalar_scored_and_threshold() {
+        for seed in [2u64, 5, 9] {
+            // Odd dims on purpose: exercise the SIMD remainders.
+            let (_, cm, x) = setup(29, 41, seed);
+            let mut rng = Pcg64::new(seed ^ 0xAB);
+            let ga: Vec<f32> = (0..41).map(|_| rng.next_f32() + 0.05).collect();
+            let mut kept_idx = Vec::new();
+            for tau in [0.0f32, 0.3, 0.9, f32::INFINITY] {
+                let mut a = vec![0.0f32; 29];
+                let mut b = vec![0.0f32; 29];
+                let ka = sparse_gemv_scored(&cm, &x, &ga, tau, &mut a);
+                let kb = sparse_gemv_fused(&cm, &x, Some(&ga), tau, &mut b, &mut kept_idx);
+                assert_eq!(ka, kb, "scored tau {tau}");
+                for i in 0..29 {
+                    assert!((a[i] - b[i]).abs() < 1e-4, "scored tau {tau} row {i}");
+                }
+                let ka = sparse_gemv_threshold(&cm, &x, tau, &mut a);
+                let kb = sparse_gemv_fused(&cm, &x, None, tau, &mut b, &mut kept_idx);
+                assert_eq!(ka, kb, "threshold tau {tau}");
+                for i in 0..29 {
+                    assert!((a[i] - b[i]).abs() < 1e-4, "threshold tau {tau} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_parallel_split_is_bit_identical_to_serial() {
+        let (_, cm, x) = setup(53, 31, 71);
+        let mut rng = Pcg64::new(0x17);
+        let ga: Vec<f32> = (0..31).map(|_| rng.next_f32() + 0.05).collect();
+        let mut kept_idx = Vec::new();
+        let mut serial = vec![0.0f32; 53];
+        let ks = sparse_gemv_fused(&cm, &x, Some(&ga), 0.4, &mut serial, &mut kept_idx);
+        for threads in [2usize, 3, 8] {
+            let mut par = vec![0.0f32; 53];
+            // min_macs = 0 forces the row split even on this tiny shape.
+            let kp = sparse_gemv_fused_parallel_with(
+                crate::sparse_kernel::simd::active(),
+                &cm,
+                &x,
+                Some(&ga),
+                0.4,
+                &mut par,
+                &mut kept_idx,
+                threads,
+                0,
+            );
+            assert_eq!(ks, kp);
+            assert_eq!(serial, par, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn dense_simd_and_parallel_match_reference() {
+        let (_, cm, x) = setup(27, 19, 83);
+        let mut reference = vec![0.0f32; 27];
+        dense_gemv(&cm, &x, &mut reference);
+        for backend in crate::sparse_kernel::simd::available_backends() {
+            let mut out = vec![0.0f32; 27];
+            assert_eq!(dense_gemv_simd_with(backend, &cm, &x, &mut out), 19);
+            for i in 0..27 {
+                assert!((out[i] - reference[i]).abs() < 1e-4, "{} row {i}", backend.name());
+            }
+        }
+        let mut out = vec![1.0f32; 27];
+        assert_eq!(dense_gemv_parallel(&cm, &x, &mut out, 4), 19);
+        for i in 0..27 {
+            assert!((out[i] - reference[i]).abs() < 1e-4, "parallel row {i}");
         }
     }
 

@@ -8,8 +8,13 @@
 //! to CPU SIMD instead of CUDA threadblocks (see DESIGN.md §2, §6).
 
 pub mod layout;
+pub mod simd;
 pub mod gemv;
 pub mod batched;
 
-pub use gemv::{dense_gemv, sparse_gemv_indices, sparse_gemv_scored, sparse_gemv_threshold};
+pub use gemv::{
+    dense_gemv, dense_gemv_parallel, sparse_gemv_fused, sparse_gemv_fused_parallel,
+    sparse_gemv_indices, sparse_gemv_scored, sparse_gemv_threshold,
+};
 pub use layout::ColMajorMatrix;
+pub use simd::Backend;

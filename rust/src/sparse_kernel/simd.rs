@@ -1,0 +1,593 @@
+//! Runtime-dispatched SIMD primitives for the sparse GEMV hot loops.
+//!
+//! Three operations cover every hot path in the engine: `axpy` (one kept
+//! column into the accumulator), `axpy8` (eight kept columns fused into one
+//! load/store pass over the accumulator, which is what makes the skinny-GEMV
+//! regime memory-efficient), and the scored mask scans that turn
+//! `|x_c| * ga_c >= tau` into a packed index list.
+//!
+//! The backend is chosen once per process via [`active`]:
+//!
+//! - `x86_64` with AVX2+FMA detected at runtime → [`Backend::Avx2`]
+//! - `aarch64` → [`Backend::Neon`]
+//! - anything else, or `WISPARSE_SIMD=off` → [`Backend::Scalar`]
+//!
+//! The scalar implementations are the reference: every dispatched kernel is
+//! property-tested against them (`rust/tests/simd_backends.rs`), and forcing
+//! `WISPARSE_SIMD=off` must never change kept-channel counts — the scan
+//! predicate is evaluated with identical semantics (NaN scores and
+//! `tau = inf` included) on every backend.
+
+use std::sync::OnceLock;
+
+/// A SIMD instruction-set backend. Variants only exist on architectures
+/// where the implementation can run, so dispatch is exhaustive per-target.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable reference implementation (also the `WISPARSE_SIMD=off` path).
+    Scalar,
+    /// AVX2 + FMA, 8 lanes of f32.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON, 4 lanes of f32.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Best backend the running CPU supports (ignores the env override).
+pub fn best_available() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_supported() {
+            Backend::Avx2
+        } else {
+            Backend::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Backend::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Backend::Scalar
+    }
+}
+
+/// Every backend runnable on this CPU (always includes `Scalar`). Used by
+/// the property tests and the kernel bench to sweep implementations.
+pub fn available_backends() -> Vec<Backend> {
+    let mut out = vec![Backend::Scalar];
+    let best = best_available();
+    if best != Backend::Scalar {
+        out.push(best);
+    }
+    out
+}
+
+/// Resolve a `WISPARSE_SIMD` preference string to a backend. Pure function
+/// so the dispatch rule is unit-testable without touching process env.
+/// Matching is case-insensitive: `off|scalar|0|no|false` force the scalar
+/// reference; a backend name (`avx2`, `neon`) requests it and falls back to
+/// **scalar** when this CPU/arch can't run it (never silently to another
+/// SIMD backend — the override is a debugging kill switch and must not
+/// surprise). Only unset/empty picks [`best_available`].
+pub fn choose_backend(pref: Option<&str>) -> Backend {
+    let pref = pref.map(|s| s.trim().to_ascii_lowercase());
+    match pref.as_deref() {
+        None | Some("") => best_available(),
+        Some("off") | Some("scalar") | Some("0") | Some("no") | Some("false") => Backend::Scalar,
+        Some(name) => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if name == "avx2" && avx2_supported() {
+                    return Backend::Avx2;
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                if name == "neon" {
+                    return Backend::Neon;
+                }
+            }
+            // Unknown or unavailable backend: fail safe to the reference.
+            let _ = name;
+            Backend::Scalar
+        }
+    }
+}
+
+/// The process-wide backend, detected once (first call reads
+/// `WISPARSE_SIMD`; later changes to the env have no effect).
+pub fn active() -> Backend {
+    static ACTIVE: OnceLock<Backend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let pref = std::env::var("WISPARSE_SIMD").ok();
+        choose_backend(pref.as_deref())
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entry points. `*_with` takes an explicit backend (tests, bench
+// sweeps); the bare name uses the process-wide choice.
+// ---------------------------------------------------------------------------
+
+/// out += a * col.
+#[inline]
+pub fn axpy(a: f32, col: &[f32], out: &mut [f32]) {
+    axpy_with(active(), a, col, out)
+}
+
+#[inline]
+pub fn axpy_with(backend: Backend, a: f32, col: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(col.len(), out.len());
+    if a == 0.0 {
+        return;
+    }
+    match backend {
+        Backend::Scalar => scalar_axpy(a, col, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only constructed after avx2_supported() passed.
+        Backend::Avx2 => unsafe { avx2::axpy(a, col, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Backend::Neon => unsafe { neon::axpy(a, col, out) },
+    }
+}
+
+/// out[i] += sum_j coeffs[j] * data[offs[j] + i] for i in 0..out.len().
+/// The eight columns are walked in lockstep so `out` is loaded and stored
+/// once per eight AXPYs. Callers guarantee `offs[j] + out.len() <= data.len()`.
+#[inline]
+pub fn axpy8_with(
+    backend: Backend,
+    coeffs: &[f32; 8],
+    offs: &[usize; 8],
+    data: &[f32],
+    out: &mut [f32],
+) {
+    let m = out.len();
+    for &o in offs.iter() {
+        assert!(o + m <= data.len(), "axpy8 column slice out of bounds");
+    }
+    match backend {
+        Backend::Scalar => scalar_axpy8(coeffs, offs, data, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: bounds asserted above; feature checked at construction.
+        Backend::Avx2 => unsafe { avx2::axpy8(coeffs, offs, data, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: bounds asserted above; NEON is baseline on aarch64.
+        Backend::Neon => unsafe { neon::axpy8(coeffs, offs, data, out) },
+    }
+}
+
+/// Scan the WiSparse/WINA predicate `|x_c| * ga_c >= tau` into `idx`
+/// (cleared first). Index buffer is reusable scratch: after warmup no
+/// allocation happens on any steady-state call with the same `n`.
+#[inline]
+pub fn scan_scored(x: &[f32], ga: &[f32], tau: f32, idx: &mut Vec<u32>) {
+    scan_scored_with(active(), x, ga, tau, idx)
+}
+
+#[inline]
+pub fn scan_scored_with(backend: Backend, x: &[f32], ga: &[f32], tau: f32, idx: &mut Vec<u32>) {
+    debug_assert_eq!(x.len(), ga.len());
+    idx.clear();
+    idx.reserve(x.len());
+    match backend {
+        Backend::Scalar => scalar_scan_scored(x, ga, tau, idx),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: feature checked at construction.
+        Backend::Avx2 => unsafe { avx2::scan_scored(x, ga, tau, idx) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Backend::Neon => unsafe { neon::scan_scored(x, ga, tau, idx) },
+    }
+}
+
+/// Scan the TEAL predicate `|x_c| >= tau` into `idx` (cleared first).
+#[inline]
+pub fn scan_threshold(x: &[f32], tau: f32, idx: &mut Vec<u32>) {
+    scan_threshold_with(active(), x, tau, idx)
+}
+
+#[inline]
+pub fn scan_threshold_with(backend: Backend, x: &[f32], tau: f32, idx: &mut Vec<u32>) {
+    idx.clear();
+    idx.reserve(x.len());
+    match backend {
+        Backend::Scalar => scalar_scan_threshold(x, tau, idx),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: feature checked at construction.
+        Backend::Avx2 => unsafe { avx2::scan_threshold(x, tau, idx) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Backend::Neon => unsafe { neon::scan_threshold(x, tau, idx) },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference implementations.
+// ---------------------------------------------------------------------------
+
+fn scalar_axpy(a: f32, col: &[f32], out: &mut [f32]) {
+    let n = out.len();
+    let (col, out) = (&col[..n], &mut out[..n]);
+    for i in 0..n {
+        out[i] += a * col[i];
+    }
+}
+
+fn scalar_axpy8(coeffs: &[f32; 8], offs: &[usize; 8], data: &[f32], out: &mut [f32]) {
+    let m = out.len();
+    let c0 = &data[offs[0]..offs[0] + m];
+    let c1 = &data[offs[1]..offs[1] + m];
+    let c2 = &data[offs[2]..offs[2] + m];
+    let c3 = &data[offs[3]..offs[3] + m];
+    let c4 = &data[offs[4]..offs[4] + m];
+    let c5 = &data[offs[5]..offs[5] + m];
+    let c6 = &data[offs[6]..offs[6] + m];
+    let c7 = &data[offs[7]..offs[7] + m];
+    for i in 0..m {
+        out[i] += coeffs[0] * c0[i]
+            + coeffs[1] * c1[i]
+            + coeffs[2] * c2[i]
+            + coeffs[3] * c3[i]
+            + coeffs[4] * c4[i]
+            + coeffs[5] * c5[i]
+            + coeffs[6] * c6[i]
+            + coeffs[7] * c7[i];
+    }
+}
+
+fn scalar_scan_scored(x: &[f32], ga: &[f32], tau: f32, idx: &mut Vec<u32>) {
+    for (c, (&xv, &g)) in x.iter().zip(ga).enumerate() {
+        if xv.abs() * g >= tau {
+            idx.push(c as u32);
+        }
+    }
+}
+
+fn scalar_scan_threshold(x: &[f32], tau: f32, idx: &mut Vec<u32>) {
+    for (c, &xv) in x.iter().enumerate() {
+        if xv.abs() >= tau {
+            idx.push(c as u32);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// SAFETY: caller checked avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(a: f32, col: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let c = _mm256_loadu_ps(col.as_ptr().add(i));
+            let o = _mm256_loadu_ps(out.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_fmadd_ps(va, c, o));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) += a * *col.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    /// SAFETY: caller checked avx2+fma support and that every
+    /// `offs[j] + out.len() <= data.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy8(coeffs: &[f32; 8], offs: &[usize; 8], data: &[f32], out: &mut [f32]) {
+        let m = out.len();
+        let base = data.as_ptr();
+        let mut va = [_mm256_setzero_ps(); 8];
+        let mut ptrs = [base; 8];
+        for j in 0..8 {
+            va[j] = _mm256_set1_ps(coeffs[j]);
+            ptrs[j] = base.add(offs[j]);
+        }
+        let mut i = 0usize;
+        while i + 8 <= m {
+            let mut acc = _mm256_loadu_ps(out.as_ptr().add(i));
+            for j in 0..8 {
+                acc = _mm256_fmadd_ps(va[j], _mm256_loadu_ps(ptrs[j].add(i)), acc);
+            }
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), acc);
+            i += 8;
+        }
+        while i < m {
+            let mut s = *out.get_unchecked(i);
+            for j in 0..8 {
+                s += coeffs[j] * *ptrs[j].add(i);
+            }
+            *out.get_unchecked_mut(i) = s;
+            i += 1;
+        }
+    }
+
+    /// SAFETY: caller checked avx2+fma support; `x.len() == ga.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scan_scored(x: &[f32], ga: &[f32], tau: f32, idx: &mut Vec<u32>) {
+        let n = x.len();
+        let vt = _mm256_set1_ps(tau);
+        let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let mut c = 0usize;
+        while c + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(c));
+            let g = _mm256_loadu_ps(ga.as_ptr().add(c));
+            let s = _mm256_mul_ps(_mm256_and_ps(xv, abs_mask), g);
+            let mut bits = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(s, vt)) as u32;
+            while bits != 0 {
+                idx.push(c as u32 + bits.trailing_zeros());
+                bits &= bits - 1;
+            }
+            c += 8;
+        }
+        while c < n {
+            if x.get_unchecked(c).abs() * *ga.get_unchecked(c) >= tau {
+                idx.push(c as u32);
+            }
+            c += 1;
+        }
+    }
+
+    /// SAFETY: caller checked avx2+fma support.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scan_threshold(x: &[f32], tau: f32, idx: &mut Vec<u32>) {
+        let n = x.len();
+        let vt = _mm256_set1_ps(tau);
+        let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let mut c = 0usize;
+        while c + 8 <= n {
+            let xv = _mm256_and_ps(_mm256_loadu_ps(x.as_ptr().add(c)), abs_mask);
+            let mut bits = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_GE_OQ>(xv, vt)) as u32;
+            while bits != 0 {
+                idx.push(c as u32 + bits.trailing_zeros());
+                bits &= bits - 1;
+            }
+            c += 8;
+        }
+        while c < n {
+            if x.get_unchecked(c).abs() >= tau {
+                idx.push(c as u32);
+            }
+            c += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON (aarch64). NEON is part of the aarch64 baseline, so detection always
+// succeeds; the module is still behind `target_feature` for uniformity.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// SAFETY: NEON is baseline on aarch64.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(a: f32, col: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let va = vdupq_n_f32(a);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let c = vld1q_f32(col.as_ptr().add(i));
+            let o = vld1q_f32(out.as_ptr().add(i));
+            vst1q_f32(out.as_mut_ptr().add(i), vfmaq_f32(o, va, c));
+            i += 4;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) += a * *col.get_unchecked(i);
+            i += 1;
+        }
+    }
+
+    /// SAFETY: NEON baseline; caller bounds-checked `offs`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy8(coeffs: &[f32; 8], offs: &[usize; 8], data: &[f32], out: &mut [f32]) {
+        let m = out.len();
+        let base = data.as_ptr();
+        let mut va = [vdupq_n_f32(0.0); 8];
+        let mut ptrs = [base; 8];
+        for j in 0..8 {
+            va[j] = vdupq_n_f32(coeffs[j]);
+            ptrs[j] = base.add(offs[j]);
+        }
+        let mut i = 0usize;
+        while i + 4 <= m {
+            let mut acc = vld1q_f32(out.as_ptr().add(i));
+            for j in 0..8 {
+                acc = vfmaq_f32(acc, va[j], vld1q_f32(ptrs[j].add(i)));
+            }
+            vst1q_f32(out.as_mut_ptr().add(i), acc);
+            i += 4;
+        }
+        while i < m {
+            let mut s = *out.get_unchecked(i);
+            for j in 0..8 {
+                s += coeffs[j] * *ptrs[j].add(i);
+            }
+            *out.get_unchecked_mut(i) = s;
+            i += 1;
+        }
+    }
+
+    /// SAFETY: NEON baseline; `x.len() == ga.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scan_scored(x: &[f32], ga: &[f32], tau: f32, idx: &mut Vec<u32>) {
+        let n = x.len();
+        let vt = vdupq_n_f32(tau);
+        let mut lanes = [0u32; 4];
+        let mut c = 0usize;
+        while c + 4 <= n {
+            let xa = vabsq_f32(vld1q_f32(x.as_ptr().add(c)));
+            let s = vmulq_f32(xa, vld1q_f32(ga.as_ptr().add(c)));
+            vst1q_u32(lanes.as_mut_ptr(), vcgeq_f32(s, vt));
+            for (j, &hit) in lanes.iter().enumerate() {
+                if hit != 0 {
+                    idx.push((c + j) as u32);
+                }
+            }
+            c += 4;
+        }
+        while c < n {
+            if x.get_unchecked(c).abs() * *ga.get_unchecked(c) >= tau {
+                idx.push(c as u32);
+            }
+            c += 1;
+        }
+    }
+
+    /// SAFETY: NEON baseline.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scan_threshold(x: &[f32], tau: f32, idx: &mut Vec<u32>) {
+        let n = x.len();
+        let vt = vdupq_n_f32(tau);
+        let mut lanes = [0u32; 4];
+        let mut c = 0usize;
+        while c + 4 <= n {
+            let s = vabsq_f32(vld1q_f32(x.as_ptr().add(c)));
+            vst1q_u32(lanes.as_mut_ptr(), vcgeq_f32(s, vt));
+            for (j, &hit) in lanes.iter().enumerate() {
+                if hit != 0 {
+                    idx.push((c + j) as u32);
+                }
+            }
+            c += 4;
+        }
+        while c < n {
+            if x.get_unchecked(c).abs() >= tau {
+                idx.push(c as u32);
+            }
+            c += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(available_backends().contains(&Backend::Scalar));
+        assert!(available_backends().contains(&best_available()));
+    }
+
+    #[test]
+    fn env_off_forces_scalar() {
+        assert_eq!(choose_backend(Some("off")), Backend::Scalar);
+        assert_eq!(choose_backend(Some("OFF")), Backend::Scalar);
+        assert_eq!(choose_backend(Some(" scalar ")), Backend::Scalar);
+        assert_eq!(choose_backend(Some("0")), Backend::Scalar);
+        assert_eq!(choose_backend(Some("no")), Backend::Scalar);
+        assert_eq!(choose_backend(None), best_available());
+        assert_eq!(choose_backend(Some("")), best_available());
+        // Unknown values fail safe to the reference, never to a SIMD path.
+        assert_eq!(choose_backend(Some("bogus")), Backend::Scalar);
+        // A backend name this arch can't run falls back to scalar too.
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(choose_backend(Some("neon")), Backend::Scalar);
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(choose_backend(Some("avx2")), Backend::Scalar);
+    }
+
+    #[test]
+    fn axpy_matches_scalar_on_odd_lengths() {
+        for backend in available_backends() {
+            for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 31, 100] {
+                let col = randvec(n, 1 + n as u64);
+                let mut a = randvec(n, 2 + n as u64);
+                let mut b = a.clone();
+                scalar_axpy(0.7, &col, &mut a);
+                axpy_with(backend, 0.7, &col, &mut b);
+                for i in 0..n {
+                    assert!((a[i] - b[i]).abs() < 1e-5, "{} n={n} i={i}", backend.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy8_matches_scalar() {
+        let m = 37;
+        let data = randvec(8 * m + 5, 77);
+        let coeffs = [0.3f32, -1.1, 0.0, 2.5, 0.01, -0.7, 1.0, 0.5];
+        let offs = [0, m, 2 * m, 3 * m, 4 * m, 5 * m, 5, 7 * m];
+        for backend in available_backends() {
+            let mut a = randvec(m, 99);
+            let mut b = a.clone();
+            scalar_axpy8(&coeffs, &offs, &data, &mut a);
+            axpy8_with(backend, &coeffs, &offs, &data, &mut b);
+            for i in 0..m {
+                assert!((a[i] - b[i]).abs() < 1e-4, "{} i={i}", backend.name());
+            }
+        }
+    }
+
+    #[test]
+    fn scans_match_scalar_in_all_tau_regimes() {
+        for backend in available_backends() {
+            for n in [0usize, 1, 5, 8, 13, 64, 129] {
+                let x = randvec(n, 3 + n as u64);
+                let ga: Vec<f32> = randvec(n, 5 + n as u64)
+                    .iter()
+                    .map(|v| v.abs() + 0.05)
+                    .collect();
+                for tau in [0.0f32, 0.4, 1.5, f32::INFINITY] {
+                    let mut a = Vec::new();
+                    let mut b = Vec::new();
+                    scan_scored_with(Backend::Scalar, &x, &ga, tau, &mut a);
+                    scan_scored_with(backend, &x, &ga, tau, &mut b);
+                    assert_eq!(a, b, "{} scored n={n} tau={tau}", backend.name());
+                    scan_threshold_with(Backend::Scalar, &x, tau, &mut a);
+                    scan_threshold_with(backend, &x, tau, &mut b);
+                    assert_eq!(a, b, "{} threshold n={n} tau={tau}", backend.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scan_tau_zero_keeps_everything() {
+        let x = randvec(23, 9);
+        let ga = vec![1.0f32; 23];
+        for backend in available_backends() {
+            let mut idx = Vec::new();
+            scan_scored_with(backend, &x, &ga, 0.0, &mut idx);
+            assert_eq!(idx, (0..23u32).collect::<Vec<_>>(), "{}", backend.name());
+        }
+    }
+}

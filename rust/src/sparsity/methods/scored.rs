@@ -6,11 +6,19 @@
 
 use crate::model::layers::LayerId;
 use crate::model::transformer::Model;
-use crate::sparse_kernel::gemv::sparse_gemv_scored_x4;
+use crate::sparse_kernel::gemv::{sparse_gemv_fused_parallel, sparse_gemv_scored_x4};
 use crate::sparse_kernel::{sparse_gemv_threshold, ColMajorMatrix};
 use crate::sparsity::plan::SparsityPlan;
 use crate::sparsity::score::pow_clamped;
 use crate::sparsity::Sparsifier;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Reusable kept-index scratch for the two-pass fused kernel: one buffer
+    /// per worker thread, grown once to the widest layer and never freed, so
+    /// steady-state projections allocate nothing.
+    static KEPT_IDX: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Per-layer scored-mask parameters.
 #[derive(Clone, Debug, Default)]
@@ -25,19 +33,43 @@ pub struct ScoredLayer {
 pub struct ScoredSparsifier {
     method: &'static str,
     layers: Vec<ScoredLayer>,
+    /// Thread budget for intra-GEMV row parallelism on large-output layers
+    /// (`gate`/`up`-sized and beyond; small layers never split).
+    intra_threads: usize,
+    /// Route through the pre-SIMD kernels (auto-vectorized x4 fused for the
+    /// scored path, single-pass scalar for the threshold path) instead of
+    /// the dispatched fused path — the honest "before this backend existed"
+    /// A/B baseline in `benches/e2e_decode.rs`.
+    force_scalar: bool,
 }
 
 impl ScoredSparsifier {
     pub fn new(method: &'static str, layers: Vec<ScoredLayer>) -> Self {
-        Self { method, layers }
+        Self {
+            method,
+            layers,
+            intra_threads: crate::util::threadpool::num_threads_cached(),
+            force_scalar: false,
+        }
     }
 
     /// All-pass instance (tau = 0 everywhere): behaves exactly like dense.
     pub fn identity(method: &'static str, n_layers_flat: usize) -> Self {
-        Self {
-            method,
-            layers: vec![ScoredLayer::default(); n_layers_flat],
-        }
+        Self::new(method, vec![ScoredLayer::default(); n_layers_flat])
+    }
+
+    /// Force the pre-SIMD kernels (the exact projection path this codebase
+    /// used before the dispatched backend), selectable per-sparsifier for
+    /// A/B benchmarking.
+    pub fn force_scalar(mut self, on: bool) -> Self {
+        self.force_scalar = on;
+        self
+    }
+
+    /// Cap the intra-GEMV thread budget (1 disables row splitting).
+    pub fn with_intra_threads(mut self, threads: usize) -> Self {
+        self.intra_threads = threads.max(1);
+        self
     }
 
     /// Build from a calibrated plan: `ga = g^alpha` per layer, thresholds
@@ -61,7 +93,7 @@ impl ScoredSparsifier {
                 ScoredLayer { ga, tau: lp.tau }
             })
             .collect();
-        Self { method, layers }
+        Self::new(method, layers)
     }
 
     pub fn layer(&self, id: LayerId) -> &ScoredLayer {
@@ -84,12 +116,26 @@ impl Sparsifier for ScoredSparsifier {
 
     fn project(&self, layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize {
         let lp = &self.layers[layer.flat()];
-        match &lp.ga {
-            // x4 = 4-column fused accumulation, +19-51% over the scalar
-            // kernel on this testbed (EXPERIMENTS.md §Perf).
-            Some(ga) => sparse_gemv_scored_x4(w, x, ga, lp.tau, out),
-            None => sparse_gemv_threshold(w, x, lp.tau, out),
+        if self.force_scalar {
+            // The pre-SIMD production path, kept verbatim for A/B runs.
+            return match &lp.ga {
+                Some(ga) => sparse_gemv_scored_x4(w, x, ga, lp.tau, out),
+                None => sparse_gemv_threshold(w, x, lp.tau, out),
+            };
         }
+        // Two-pass fused SIMD kernel for both the WiSparse/WINA (`ga`) and
+        // the TEAL (`ga = None`) score; the kept-index scratch is per-thread
+        // and reused across layers and tokens.
+        // The builder cap and the current thread's scoped budget (see
+        // `with_intra_op_threads`) both bound the row split, so batched
+        // decode never multiplies to threads^2.
+        let threads = self
+            .intra_threads
+            .min(crate::util::threadpool::intra_op_threads());
+        KEPT_IDX.with(|cell| {
+            let kept_idx = &mut *cell.borrow_mut();
+            sparse_gemv_fused_parallel(w, x, lp.ga.as_deref(), lp.tau, out, kept_idx, threads)
+        })
     }
 }
 

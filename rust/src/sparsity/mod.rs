@@ -47,7 +47,12 @@ impl Sparsifier for Dense {
     }
 
     fn project(&self, _layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize {
-        crate::sparse_kernel::dense_gemv(w, x, out)
+        crate::sparse_kernel::dense_gemv_parallel(
+            w,
+            x,
+            out,
+            crate::util::threadpool::intra_op_threads(),
+        )
     }
 }
 

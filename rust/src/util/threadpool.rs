@@ -6,7 +6,7 @@
 //! this module wraps it with chunked iteration utilities.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::OnceLock;
 
 /// Number of worker threads to use: `WISPARSE_THREADS` env override, else
 /// available parallelism, else 1.
@@ -19,6 +19,42 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// [`num_threads`] resolved once per process — the per-projection hot paths
+/// (kernel dispatch, `lm_head`) must not re-read the environment, which
+/// takes a process-global lock.
+pub fn num_threads_cached() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(num_threads)
+}
+
+thread_local! {
+    /// Per-thread override of the intra-op (kernel-level) thread budget.
+    /// `None` = full [`num_threads_cached`] budget.
+    static INTRA_BUDGET: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+}
+
+/// Thread budget for intra-GEMV row parallelism on the *current* thread.
+/// Defaults to [`num_threads_cached`]; batch-level workers scope it down via
+/// [`with_intra_op_threads`] so nested fork-join never multiplies to
+/// `threads^2` runnable threads.
+pub fn intra_op_threads() -> usize {
+    INTRA_BUDGET
+        .with(|c| c.get())
+        .unwrap_or_else(num_threads_cached)
+}
+
+/// Run `f` with the current thread's intra-op budget set to `n` (restored
+/// afterwards). Used by the batched-decode workers, which already own one
+/// core each.
+pub fn with_intra_op_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    INTRA_BUDGET.with(|c| {
+        let prev = c.replace(Some(n.max(1)));
+        let out = f();
+        c.set(prev);
+        out
+    })
 }
 
 /// Run `f(chunk_index, item_range)` over `n` items split into contiguous
@@ -50,6 +86,10 @@ where
 /// Parallel map with dynamic work stealing over an index range: each worker
 /// pulls the next index from a shared atomic counter. Good when per-item cost
 /// varies a lot (e.g. evaluating evolutionary-search candidates).
+///
+/// Lock-free: every worker accumulates `(index, value)` pairs in its own
+/// buffer, returned through the scoped join handle; the pairs are scattered
+/// into place after the scope joins. No worker ever contends on a mutex.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -60,45 +100,77 @@ where
         return (0..n).map(&f).collect();
     }
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    let mut parts: Vec<Vec<(usize, T)>> = Vec::with_capacity(threads);
     std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
         for _ in 0..threads {
             let fref = &f;
             let nextref = &next;
-            let resref = &results;
-            s.spawn(move || loop {
-                let i = nextref.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let out = fref(i);
-                resref.lock().unwrap()[i] = Some(out);
-            });
+            handles.push(s.spawn(move || {
+                // Each worker owns one core: pin the kernel-level budget so
+                // items that hit big projections don't fork threads^2.
+                with_intra_op_threads(1, || {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = nextref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, fref(i)));
+                    }
+                    local
+                })
+            }));
+        }
+        for h in handles {
+            parts.push(h.join().expect("parallel_map worker panicked"));
         }
     });
-    results
-        .into_inner()
-        .unwrap()
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for part in parts {
+        for (i, v) in part {
+            debug_assert!(slots[i].is_none(), "index {i} produced twice");
+            slots[i] = Some(v);
+        }
+    }
+    slots
         .into_iter()
         .map(|x| x.expect("worker filled every slot"))
         .collect()
 }
 
 /// Split a mutable slice into `k` disjoint contiguous chunks and run `f` on
-/// each in parallel. Used to parallelize GEMV output rows without
-/// synchronization.
+/// each in parallel. Used to parallelize GEMV output rows and batched
+/// sequence decode without synchronization.
 pub fn parallel_slices<T, F>(data: &mut [T], threads: usize, f: F)
 where
     T: Send,
     F: Fn(usize, usize, &mut [T]) + Sync, // (chunk_idx, offset, chunk)
 {
+    parallel_slices_aligned(data, threads, 1, f)
+}
+
+/// [`parallel_slices`] with chunk boundaries aligned to multiples of
+/// `align` elements (except the final chunk, which takes the remainder).
+/// The kernels use `align = 8` so every output element keeps the same
+/// SIMD-body/scalar-tail position as a serial pass (bit-identical results);
+/// the batched GEMM uses `align = m` so chunks land on row boundaries.
+/// Worker threads run with their intra-op budget pinned to 1 — each already
+/// owns a core, so nested kernel fan-out must not multiply.
+pub fn parallel_slices_aligned<T, F>(data: &mut [T], threads: usize, align: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync, // (chunk_idx, offset, chunk)
+{
     let n = data.len();
-    let threads = threads.max(1).min(n.max(1));
+    let align = align.max(1);
+    let units = n.div_ceil(align);
+    let threads = threads.max(1).min(units.max(1));
     if threads <= 1 || n == 0 {
         f(0, 0, data);
         return;
     }
-    let chunk = n.div_ceil(threads);
+    let chunk = units.div_ceil(threads) * align;
     std::thread::scope(|s| {
         let mut rest = data;
         let mut offset = 0usize;
@@ -109,7 +181,7 @@ where
             let fref = &f;
             let off = offset;
             let ti = t;
-            s.spawn(move || fref(ti, off, head));
+            s.spawn(move || with_intra_op_threads(1, || fref(ti, off, head)));
             rest = tail;
             offset += take;
             t += 1;
@@ -120,6 +192,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
 
     #[test]
     fn map_identity() {
@@ -163,5 +236,38 @@ mod tests {
         let out: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(out.is_empty());
         parallel_chunks(0, 4, |_, r| assert!(r.is_empty()));
+    }
+
+    #[test]
+    fn aligned_slices_land_on_alignment_boundaries() {
+        let mut data = vec![0usize; 103];
+        let chunks_seen = Mutex::new(Vec::new());
+        parallel_slices_aligned(&mut data, 4, 8, |_, off, chunk| {
+            chunks_seen.lock().unwrap().push((off, chunk.len()));
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = off + i;
+            }
+        });
+        assert_eq!(data, (0..103).collect::<Vec<_>>());
+        for &(off, len) in chunks_seen.lock().unwrap().iter() {
+            assert_eq!(off % 8, 0, "chunk offset {off} not aligned");
+            if off + len < 103 {
+                assert_eq!(len % 8, 0, "interior chunk length {len} not aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn intra_budget_scoped_and_restored() {
+        let base = intra_op_threads();
+        with_intra_op_threads(1, || {
+            assert_eq!(intra_op_threads(), 1);
+            with_intra_op_threads(3, || assert_eq!(intra_op_threads(), 3));
+            assert_eq!(intra_op_threads(), 1);
+        });
+        assert_eq!(intra_op_threads(), base);
+        // Fan-out workers run with the budget pinned to 1.
+        let seen = parallel_map(4, 4, |_| intra_op_threads());
+        assert!(seen.iter().all(|&n| n == 1), "worker budgets: {seen:?}");
     }
 }

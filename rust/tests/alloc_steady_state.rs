@@ -1,0 +1,118 @@
+//! Steady-state decode must perform zero heap allocations in the
+//! projection/attention path (ISSUE 1 acceptance criterion).
+//!
+//! A counting global allocator wraps `System`; after prefill plus a few
+//! warmup decode steps (which grow the reusable buffers — logits, residual,
+//! kept-index scratch — to their steady-state sizes), further
+//! `Engine::decode_one` calls must not touch the allocator at all.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use wisparse::model::layers::LayerId;
+use wisparse::model::sampler::Sampling;
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Build a nano engine running the scored sparse path (`with_ga = true`:
+/// WiSparse/WINA weight-aware score; `false`: TEAL magnitude score).
+fn sparse_engine(with_ga: bool) -> Engine {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 7));
+    let layers: Vec<ScoredLayer> = (0..model.cfg.n_layers * 7)
+        .map(|flat| {
+            let id = LayerId::from_flat(flat);
+            let n = id.kind.dims(&model.cfg).1;
+            ScoredLayer {
+                ga: if with_ga { Some(vec![1.0; n]) } else { None },
+                tau: 0.3,
+            }
+        })
+        .collect();
+    let name = if with_ga { "wina" } else { "teal" };
+    let sp = Arc::new(ScoredSparsifier::new(name, layers));
+    Engine::new(
+        model,
+        sp,
+        EngineCfg {
+            threads: 1,
+            ..EngineCfg::default()
+        },
+    )
+}
+
+#[test]
+fn decode_steady_state_allocates_nothing() {
+    for with_ga in [false, true] {
+        let engine = sparse_engine(with_ga);
+        let mut seq = engine.admit(0, "warmup prompt", 64, Sampling::Greedy);
+        engine.prefill(&mut seq);
+        // Warmup: first decode steps grow logits / kept-index scratch.
+        for _ in 0..4 {
+            engine.decode_one(&mut seq);
+        }
+        assert!(!seq.finished(), "warmup exhausted the sequence");
+        let before = ALLOC_CALLS.load(Ordering::Relaxed);
+        for _ in 0..16 {
+            engine.decode_one(&mut seq);
+        }
+        let allocs = ALLOC_CALLS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            allocs, 0,
+            "steady-state decode hit the allocator {allocs} times (with_ga={with_ga})"
+        );
+        assert_eq!(seq.generated.len(), 20);
+    }
+}
+
+#[test]
+fn dense_decode_steady_state_allocates_nothing() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 9));
+    let engine = Engine::dense(
+        model,
+        EngineCfg {
+            threads: 1,
+            ..EngineCfg::default()
+        },
+    );
+    let mut seq = engine.admit(0, "abcd", 64, Sampling::Greedy);
+    engine.prefill(&mut seq);
+    for _ in 0..4 {
+        engine.decode_one(&mut seq);
+    }
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..16 {
+        engine.decode_one(&mut seq);
+    }
+    let allocs = ALLOC_CALLS.load(Ordering::Relaxed) - before;
+    assert_eq!(allocs, 0, "dense steady-state decode hit the allocator {allocs} times");
+}

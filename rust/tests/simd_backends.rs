@@ -1,0 +1,177 @@
+//! Property tests for the runtime-dispatched SIMD kernel backends.
+//!
+//! Every backend the CPU can run must match the single-pass scalar reference
+//! kernels (`sparse_gemv_scored` / `sparse_gemv_threshold`) within 1e-4,
+//! across odd shapes (m, n deliberately not multiples of any vector width),
+//! all tau regimes (0 = keep-all, a mid quantile, +inf = keep-nothing), and
+//! both the weight-aware (`ga`) and magnitude (`ga = None`) score paths.
+//! Kept-channel counts must agree *exactly* — the mask predicate is the
+//! semantics of the method, not an approximation.
+
+use wisparse::sparse_kernel::gemv::{
+    sparse_gemv_fused, sparse_gemv_fused_parallel_with, sparse_gemv_fused_with,
+    sparse_gemv_scored, sparse_gemv_threshold,
+};
+use wisparse::sparse_kernel::simd::{self, Backend};
+use wisparse::sparse_kernel::ColMajorMatrix;
+use wisparse::tensor::Tensor;
+use wisparse::util::prop::{check2, CheckConfig, UsizeIn};
+use wisparse::util::rng::Pcg64;
+
+fn setup(m: usize, n: usize, seed: u64) -> (ColMajorMatrix, Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::new(seed);
+    let w = ColMajorMatrix::from_row_major(&Tensor::randn(&[m, n], 1.0, &mut rng));
+    let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let ga: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.05).collect();
+    (w, x, ga)
+}
+
+/// A tau that keeps roughly half the channels of this particular input.
+fn mid_tau(x: &[f32], ga: &[f32]) -> f32 {
+    let mut scores: Vec<f32> = x.iter().zip(ga).map(|(&xv, &g)| xv.abs() * g).collect();
+    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    scores[scores.len() / 2]
+}
+
+fn cfg(cases: usize) -> CheckConfig {
+    CheckConfig {
+        cases,
+        ..CheckConfig::default()
+    }
+}
+
+#[test]
+fn every_backend_matches_the_scalar_reference() {
+    check2(&cfg(60), &UsizeIn(1, 67), &UsizeIn(1, 77), |&m, &n| {
+        let (w, x, ga) = setup(m, n, (m * 1009 + n) as u64);
+        let taus = [0.0f32, mid_tau(&x, &ga), f32::INFINITY];
+        let mut kept_idx = Vec::new();
+        for backend in simd::available_backends() {
+            for &tau in &taus {
+                // Weight-aware scored path.
+                let mut reference = vec![0.0f32; m];
+                let mut fused = vec![0.0f32; m];
+                let kr = sparse_gemv_scored(&w, &x, &ga, tau, &mut reference);
+                let kf = sparse_gemv_fused_with(
+                    backend,
+                    &w,
+                    &x,
+                    Some(&ga),
+                    tau,
+                    &mut fused,
+                    &mut kept_idx,
+                );
+                if kr != kf {
+                    return Err(format!(
+                        "{}: scored kept {kf} != reference {kr} (m={m} n={n} tau={tau})",
+                        backend.name()
+                    ));
+                }
+                for i in 0..m {
+                    if (reference[i] - fused[i]).abs() > 1e-4 {
+                        return Err(format!(
+                            "{}: scored out[{i}] {} vs {} (m={m} n={n} tau={tau})",
+                            backend.name(),
+                            fused[i],
+                            reference[i]
+                        ));
+                    }
+                }
+                // Magnitude / TEAL path (ga = None).
+                let kr = sparse_gemv_threshold(&w, &x, tau, &mut reference);
+                let kf =
+                    sparse_gemv_fused_with(backend, &w, &x, None, tau, &mut fused, &mut kept_idx);
+                if kr != kf {
+                    return Err(format!(
+                        "{}: threshold kept {kf} != reference {kr} (m={m} n={n} tau={tau})",
+                        backend.name()
+                    ));
+                }
+                for i in 0..m {
+                    if (reference[i] - fused[i]).abs() > 1e-4 {
+                        return Err(format!(
+                            "{}: threshold out[{i}] {} vs {} (m={m} n={n} tau={tau})",
+                            backend.name(),
+                            fused[i],
+                            reference[i]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn intra_gemv_row_split_is_bit_exact() {
+    // The row-parallel kernel must produce *bit-identical* output to the
+    // serial fused kernel at any thread count (same per-element accumulation
+    // order), including when rows don't divide evenly.
+    check2(&cfg(40), &UsizeIn(2, 61), &UsizeIn(1, 53), |&m, &n| {
+        let (w, x, ga) = setup(m, n, (m * 31 + n * 7) as u64);
+        let tau = mid_tau(&x, &ga);
+        let mut kept_idx = Vec::new();
+        let mut serial = vec![0.0f32; m];
+        let ks = sparse_gemv_fused(&w, &x, Some(&ga), tau, &mut serial, &mut kept_idx);
+        for threads in [2usize, 3, 7] {
+            let mut par = vec![0.0f32; m];
+            // min_macs = 0 forces the split even on tiny shapes.
+            let kp = sparse_gemv_fused_parallel_with(
+                simd::active(),
+                &w,
+                &x,
+                Some(&ga),
+                tau,
+                &mut par,
+                &mut kept_idx,
+                threads,
+                0,
+            );
+            if ks != kp {
+                return Err(format!("kept {kp} != serial {ks} at {threads} threads"));
+            }
+            if serial != par {
+                return Err(format!("row-split output diverged at {threads} threads (m={m} n={n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn forced_scalar_and_dispatched_keep_identical_channels() {
+    // `WISPARSE_SIMD=off` resolves to the scalar backend...
+    assert_eq!(simd::choose_backend(Some("off")), Backend::Scalar);
+    // ...and scalar vs dispatched runs must select the *same* channels:
+    // identical kept counts and identical index lists, every tau regime.
+    check2(&cfg(40), &UsizeIn(1, 57), &UsizeIn(1, 71), |&m, &n| {
+        let (_, x, ga) = setup(m, n, (m * 13 + n * 3) as u64);
+        let taus = [0.0f32, mid_tau(&x, &ga), f32::INFINITY];
+        let mut scalar_idx = Vec::new();
+        let mut simd_idx = Vec::new();
+        for &tau in &taus {
+            simd::scan_scored_with(Backend::Scalar, &x, &ga, tau, &mut scalar_idx);
+            simd::scan_scored_with(simd::active(), &x, &ga, tau, &mut simd_idx);
+            if scalar_idx != simd_idx {
+                return Err(format!("scored mask diverged (n={n} tau={tau})"));
+            }
+            simd::scan_threshold_with(Backend::Scalar, &x, tau, &mut scalar_idx);
+            simd::scan_threshold_with(simd::active(), &x, tau, &mut simd_idx);
+            if scalar_idx != simd_idx {
+                return Err(format!("threshold mask diverged (n={n} tau={tau})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatched_backend_is_a_known_backend() {
+    let active = simd::active();
+    assert!(
+        simd::available_backends().contains(&active),
+        "active backend {:?} not in available set",
+        active
+    );
+}
