@@ -1,11 +1,14 @@
 //! Coordinator/batching benchmark: serving throughput and per-step latency
-//! as the continuous-batching width grows — the L3 scheduling contribution
-//! in isolation (per-sequence dynamic masks, as the paper's limitation
-//! section calls for).
+//! as the continuous-batching width grows, plus the shared-prefix workload
+//! that exercises the paged KV cache's radix-tree prefix sharing (N clients
+//! behind one long common system prompt). Writes `results/bench_batcher.csv`
+//! and `BENCH_serve.json` (prefill tok/s with the prefix cache on vs off,
+//! speedup, hit rate) so future PRs can track the serving trajectory.
 //!
 //!     cargo bench --bench batcher
 
 use std::sync::Arc;
+use wisparse::kv::KvCfg;
 use wisparse::model::sampler::Sampling;
 use wisparse::model::transformer::Model;
 use wisparse::model::ModelConfig;
@@ -14,29 +17,39 @@ use wisparse::server::batcher::BatcherCfg;
 use wisparse::server::engine::{Engine, EngineCfg};
 use wisparse::server::{Coordinator, CoordinatorCfg};
 use wisparse::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+use wisparse::util::json::Json;
 use wisparse::util::timer::Stopwatch;
 
-fn main() {
-    let model = Arc::new(Model::synthetic(
-        ModelConfig::preset("llama-micro").unwrap(),
-        77,
-    ));
-    // A ~50%-density magnitude sparsifier (exact plan irrelevant here).
-    let sp = Arc::new(ScoredSparsifier::new(
+/// A ~50%-density magnitude sparsifier (exact plan irrelevant here).
+fn teal_sparsifier(model: &Model) -> Arc<ScoredSparsifier> {
+    Arc::new(ScoredSparsifier::new(
         "teal",
         (0..model.cfg.n_layers * 7)
             .map(|_| ScoredLayer { ga: None, tau: 0.45 })
             .collect(),
+    ))
+}
+
+fn batch_width_sweep() -> Vec<Vec<String>> {
+    let model = Arc::new(Model::synthetic(
+        ModelConfig::preset("llama-micro").unwrap(),
+        77,
     ));
+    let sp = teal_sparsifier(&model);
     let n_requests = 24;
     let max_new = 24;
     let mut csv = Vec::new();
     println!("== continuous batching: {n_requests} requests x {max_new} new tokens ==");
     for max_batch in [1usize, 2, 4, 8, 16] {
-        let engine = Arc::new(Engine::new(
+        let engine = Arc::new(Engine::paged(
             Arc::clone(&model),
             sp.clone(),
             EngineCfg::default(),
+            &KvCfg {
+                pool_blocks: 512,
+                block_size: 16,
+                prefix_cache: false, // unique prompts; isolate batching
+            },
         ));
         let coord = Coordinator::new(
             engine,
@@ -78,6 +91,93 @@ fn main() {
         coord.shutdown();
         handle.join().unwrap();
     }
+    csv
+}
+
+struct SharedPrefixResult {
+    prefill_tok_s: f64,
+    e2e_tok_s: f64,
+    hit_rate: f64,
+    preemptions: f64,
+}
+
+/// N clients sharing a long common system prompt — the paged-KV headline
+/// workload. `max_new` is kept tiny so wall time is prefill-dominated and
+/// the prefill tok/s comparison is clean.
+fn shared_prefix_run(
+    model: &Arc<Model>,
+    prefix_cache: bool,
+    n_clients: usize,
+    prefix_tokens: usize,
+) -> SharedPrefixResult {
+    let sp = teal_sparsifier(model);
+    let engine = Arc::new(Engine::paged(
+        Arc::clone(model),
+        sp,
+        EngineCfg::default(),
+        &KvCfg {
+            pool_blocks: 512,
+            block_size: 16,
+            prefix_cache,
+        },
+    ));
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: n_clients,
+                max_queue: 256,
+            },
+        },
+    );
+    let sched = Arc::clone(&coord);
+    let handle = std::thread::spawn(move || sched.run_scheduler());
+
+    // One byte per token: a `prefix_tokens`-char system prompt.
+    let system_prompt: String = (0..prefix_tokens)
+        .map(|i| (b'a' + (i % 26) as u8) as char)
+        .collect();
+    let max_new = 2usize;
+    let prompt_for = |i: usize| format!("{system_prompt} user {i:03} asks");
+
+    // Warm the cache with one sequential request (its prefill publishes the
+    // shared prefix blocks), then fire all clients concurrently.
+    coord
+        .submit_blocking(&prompt_for(999), max_new, Sampling::Greedy)
+        .expect("warm request");
+    let total_prompt_tokens: usize = (0..n_clients).map(|i| prompt_for(i).len()).sum();
+    let sw = Stopwatch::start();
+    let responses: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_clients)
+            .map(|i| {
+                let coord = Arc::clone(&coord);
+                let prompt = prompt_for(i);
+                s.spawn(move || {
+                    coord
+                        .submit_blocking(&prompt, max_new, Sampling::Greedy)
+                        .expect("client request")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = sw.elapsed_secs();
+    let generated: usize = responses.iter().map(|r| r.n_generated).sum();
+    let m = coord.metrics_json();
+    let hit_rate = m.get("prefix_hit_rate").as_f64().unwrap_or(0.0);
+    let preemptions = m.get("preemptions_total").as_f64().unwrap_or(0.0);
+    coord.shutdown();
+    handle.join().unwrap();
+    SharedPrefixResult {
+        prefill_tok_s: total_prompt_tokens as f64 / wall,
+        e2e_tok_s: (total_prompt_tokens + generated) as f64 / wall,
+        hit_rate,
+        preemptions,
+    }
+}
+
+fn main() {
+    let csv = batch_width_sweep();
     write_csv(
         std::path::Path::new("results/bench_batcher.csv"),
         &["max_batch", "tokens_per_s", "queue_p50_ms", "total_p50_ms"],
@@ -85,4 +185,38 @@ fn main() {
     )
     .expect("csv");
     println!("-> results/bench_batcher.csv");
+
+    // Shared-prefix workload: 8 clients, common 256-token system prompt.
+    // max_seq is widened so prompt + generation fit beyond the prefix.
+    let mut cfg = ModelConfig::preset("llama-micro").unwrap();
+    cfg.max_seq = 512;
+    let model = Arc::new(Model::synthetic(cfg, 77));
+    let n_clients = 8;
+    let prefix_tokens = 256;
+    println!("== shared-prefix serving: {n_clients} clients, {prefix_tokens}-token common prompt ==");
+    let off = shared_prefix_run(&model, false, n_clients, prefix_tokens);
+    let on = shared_prefix_run(&model, true, n_clients, prefix_tokens);
+    let speedup = on.prefill_tok_s / off.prefill_tok_s;
+    println!(
+        "prefix cache off: {:>8.1} prefill tok/s  (hit rate {:.3})",
+        off.prefill_tok_s, off.hit_rate
+    );
+    println!(
+        "prefix cache on : {:>8.1} prefill tok/s  (hit rate {:.3})  -> {speedup:.2}x",
+        on.prefill_tok_s, on.hit_rate
+    );
+    let report = Json::obj(vec![
+        ("bench", Json::Str("serve_shared_prefix".into())),
+        ("n_clients", Json::Num(n_clients as f64)),
+        ("prefix_tokens", Json::Num(prefix_tokens as f64)),
+        ("prefill_tok_s_prefix_off", Json::Num(off.prefill_tok_s)),
+        ("prefill_tok_s_prefix_on", Json::Num(on.prefill_tok_s)),
+        ("prefill_speedup", Json::Num(speedup)),
+        ("e2e_tok_s_prefix_off", Json::Num(off.e2e_tok_s)),
+        ("e2e_tok_s_prefix_on", Json::Num(on.e2e_tok_s)),
+        ("prefix_hit_rate", Json::Num(on.hit_rate)),
+        ("preemptions_total", Json::Num(on.preemptions)),
+    ]);
+    std::fs::write("BENCH_serve.json", report.to_string_pretty()).expect("BENCH_serve.json");
+    println!("-> BENCH_serve.json");
 }

@@ -55,7 +55,13 @@ fn http_post(addr: &str, path: &str, body: &str) -> anyhow::Result<(u16, String)
 }
 
 fn run_workload(name: &str, model: Arc<Model>, sp: Arc<dyn Sparsifier>) -> anyhow::Result<f64> {
-    let engine = Arc::new(Engine::new(model, sp, EngineCfg::default()));
+    // The production configuration: paged KV pool + radix prefix cache.
+    let engine = Arc::new(Engine::paged(
+        model,
+        sp,
+        EngineCfg::default(),
+        &wisparse::kv::KvCfg::default(),
+    ));
     let coord = Coordinator::new(
         engine,
         CoordinatorCfg {
@@ -110,6 +116,7 @@ fn run_workload(name: &str, model: Arc<Model>, sp: Arc<dyn Sparsifier>) -> anyho
     let tput = total_tokens / wall;
     let (status, metrics) = http_post(&addr, "/generate", "not json")?;
     assert_eq!(status, 400, "error handling regressed: {metrics}");
+    let pool = coord.metrics_json();
     let m = coord.metrics.lock().unwrap();
     println!(
         "[{name}] {} requests, wall {:.2}s -> {:.1} generated tok/s, density {:.3}",
@@ -117,6 +124,12 @@ fn run_workload(name: &str, model: Arc<Model>, sp: Arc<dyn Sparsifier>) -> anyho
         wall,
         tput,
         m.density()
+    );
+    println!(
+        "[{name}] kv pool: {}/{} blocks in use, prefix hit rate {:.3}",
+        pool.get("blocks_in_use").as_f64().unwrap_or(0.0),
+        pool.get("blocks_total").as_f64().unwrap_or(0.0),
+        pool.get("prefix_hit_rate").as_f64().unwrap_or(0.0)
     );
     println!(
         "[{name}] latency p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",

@@ -19,6 +19,9 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         .opt("addr", "127.0.0.1:8077", "listen address")
         .opt("max-batch", "8", "max concurrent sequences")
         .opt("budget", "quick", "calibration budget if no cached plan")
+        .opt("kv-pool-blocks", "256", "paged-KV pool size in blocks")
+        .opt("kv-block-size", "16", "positions per KV block")
+        .opt("prefix-cache", "on", "radix-tree prompt prefix sharing (on|off)")
         .flag("synthetic", "use random weights (no artifacts needed)")
         .parse(argv)?;
     let artifacts = Path::new(args.get("artifacts"));
@@ -45,7 +48,17 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         )?;
         common::sparsifier_for(&model, method, &plan)?
     };
-    let engine = Arc::new(Engine::new(model, sparsifier, EngineCfg::default()));
+    let kv_cfg = wisparse::kv::KvCfg {
+        pool_blocks: args.get_usize("kv-pool-blocks")?,
+        block_size: args.get_usize("kv-block-size")?,
+        prefix_cache: args.get("prefix-cache") != "off",
+    };
+    let engine = Arc::new(Engine::paged(
+        model,
+        sparsifier,
+        EngineCfg::default(),
+        &kv_cfg,
+    ));
     let coord = Coordinator::new(
         engine,
         CoordinatorCfg {
@@ -61,6 +74,12 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         "serving {} ({}) — POST /generate, GET /metrics, GET /health",
         args.get("model"),
         method
+    );
+    println!(
+        "paged KV: {} blocks x {} positions, prefix cache {}",
+        kv_cfg.pool_blocks,
+        kv_cfg.block_size,
+        if kv_cfg.prefix_cache { "on" } else { "off" }
     );
     wisparse::server::http::serve(coord, args.get("addr"), |addr| {
         println!("listening on http://{addr}");

@@ -1,0 +1,55 @@
+//! Paged KV-cache subsystem: a global ref-counted block pool, per-sequence
+//! page tables, and a radix-tree prefix cache with LRU eviction.
+//!
+//! Replaces the dense per-sequence `[max_seq, d_model]` K/V slabs on the
+//! serving path: resident KV memory becomes `O(live tokens)` under a fixed
+//! pool budget, sequences sharing a prompt prefix share physical blocks
+//! (copy-on-write on first divergent append), and the scheduler gains
+//! block-aware admission with preempt-and-requeue on pool exhaustion.
+
+pub mod paged;
+pub mod pool;
+pub mod radix;
+
+pub use paged::{KvCfg, KvManager, KvStats, PagedSeq};
+pub use pool::{BlockId, BlockPool, KvBlockData, KvLayout};
+pub use radix::RadixCache;
+
+/// Per-sequence KV storage contract shared by the flat slab
+/// ([`crate::model::kv_cache::KvCache`]) and the paged table
+/// ([`PagedSeq`]). Attention visits K/V rows strictly in ascending position
+/// order through `with_k`/`with_v`, performing the same arithmetic per row
+/// regardless of how storage is chunked — which is what makes paged
+/// attention bit-identical to the flat baseline.
+pub trait KvSeq {
+    /// Positions already stored (== the next token's position).
+    fn seq_len(&self) -> usize;
+
+    /// Context-window capacity in tokens.
+    fn capacity(&self) -> usize;
+
+    fn is_full(&self) -> bool {
+        self.seq_len() >= self.capacity()
+    }
+
+    /// Ensure storage exists for position `seq_len()`, allocating or
+    /// copy-on-writing as needed. Returns false when backing memory is
+    /// exhausted (pool dry or context window full).
+    fn try_reserve(&mut self) -> bool;
+
+    /// Write one position's K/V rows for a layer. The position must have
+    /// been reserved.
+    fn store(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+
+    /// Commit the current position (`seq_len += 1`).
+    fn advance(&mut self);
+
+    /// Visit K rows of `layer` covering positions `[0, upto)` in ascending
+    /// order, as `(start_pos, rows)` chunks with `rows` row-major
+    /// `[n, d_model]`.
+    fn with_k(&self, layer: usize, upto: usize, f: &mut dyn FnMut(usize, &[f32]));
+
+    /// Visit V rows of `layer` covering positions `[0, upto)`, as in
+    /// [`KvSeq::with_k`].
+    fn with_v(&self, layer: usize, upto: usize, f: &mut dyn FnMut(usize, &[f32]));
+}

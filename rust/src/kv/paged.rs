@@ -1,0 +1,466 @@
+//! Per-sequence page tables over the block pool, plus the serving-level
+//! manager that ties pool + radix prefix cache together.
+
+use crate::kv::pool::{BlockId, BlockPool, KvLayout};
+use crate::kv::radix::RadixCache;
+use crate::kv::KvSeq;
+use crate::model::ModelConfig;
+use std::sync::{Arc, Mutex};
+
+/// Paged-KV configuration (the `wisparse serve` knobs).
+#[derive(Clone, Debug)]
+pub struct KvCfg {
+    /// Physical blocks in the global pool.
+    pub pool_blocks: usize,
+    /// Positions per block.
+    pub block_size: usize,
+    /// Enable the radix-tree prefix cache.
+    pub prefix_cache: bool,
+}
+
+impl Default for KvCfg {
+    fn default() -> Self {
+        Self {
+            pool_blocks: 256,
+            block_size: 16,
+            prefix_cache: true,
+        }
+    }
+}
+
+/// Prefix-cache hit accounting (served from shared blocks vs computed).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KvStats {
+    pub prefix_hit_tokens: u64,
+    pub prefix_miss_tokens: u64,
+}
+
+/// A sequence's KV view: an ordered list of (possibly shared) physical
+/// blocks. The tail block is made private before any write (copy-on-write),
+/// so shared prefix blocks are immutable for their whole cached life.
+pub struct PagedSeq {
+    pool: Arc<BlockPool>,
+    blocks: Vec<BlockId>,
+    /// Positions stored so far.
+    len: usize,
+    /// Context-window capacity in tokens (the model's max_seq).
+    capacity: usize,
+    /// Leading tokens adopted from the prefix cache (never recomputed).
+    prefix_len: usize,
+}
+
+impl PagedSeq {
+    pub fn new(pool: Arc<BlockPool>, capacity_tokens: usize) -> Self {
+        PagedSeq {
+            pool,
+            blocks: Vec::new(),
+            len: 0,
+            capacity: capacity_tokens,
+            prefix_len: 0,
+        }
+    }
+
+    /// Adopt already-populated full blocks as this sequence's prefix. The
+    /// caller must have retained each block for this page table.
+    pub fn adopt_prefix(&mut self, blocks: Vec<BlockId>) {
+        assert_eq!(self.len, 0, "adopt_prefix on a non-empty sequence");
+        let bs = self.pool.layout().block_size;
+        self.len = blocks.len() * bs;
+        self.prefix_len = self.len;
+        self.blocks = blocks;
+    }
+
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Tokens served from the prefix cache at acquire time.
+    pub fn prefix_len(&self) -> usize {
+        self.prefix_len
+    }
+}
+
+impl Drop for PagedSeq {
+    fn drop(&mut self) {
+        for &b in &self.blocks {
+            self.pool.release(b);
+        }
+    }
+}
+
+impl KvSeq for PagedSeq {
+    fn seq_len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Ensure position `len` is writable: allocate a fresh tail block at
+    /// block boundaries, copy-on-write a shared tail otherwise. False when
+    /// the pool is dry (callers evict or preempt and retry) or the context
+    /// window is exhausted.
+    ///
+    /// Note: the serving flows share only *full* blocks (prefix matching
+    /// and insertion are block-granular), so decode always appends into a
+    /// privately-owned tail and the copy-on-write branch is a guard rail —
+    /// it keeps any future sub-block sharing (fork/n>1 sampling, partial
+    /// prefix adoption) correct and is unit-tested directly.
+    fn try_reserve(&mut self) -> bool {
+        if self.len >= self.capacity {
+            return false;
+        }
+        let bs = self.pool.layout().block_size;
+        if self.len == self.blocks.len() * bs {
+            match self.pool.try_alloc() {
+                Some(b) => {
+                    self.blocks.push(b);
+                    true
+                }
+                None => false,
+            }
+        } else {
+            let tail = *self.blocks.last().expect("partial tail implies a block");
+            if self.pool.ref_count(tail) > 1 {
+                let Some(fresh) = self.pool.try_alloc() else {
+                    return false;
+                };
+                let filled = self.len - (self.blocks.len() - 1) * bs;
+                {
+                    let src = self.pool.block(tail).read().unwrap();
+                    let mut dst = self.pool.block(fresh).write().unwrap();
+                    dst.copy_prefix_from(&src, filled);
+                }
+                *self.blocks.last_mut().expect("tail exists") = fresh;
+                self.pool.release(tail);
+            }
+            true
+        }
+    }
+
+    fn store(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let bs = self.pool.layout().block_size;
+        let b = self.blocks[pos / bs];
+        debug_assert!(
+            self.pool.ref_count(b) == 1,
+            "store into shared kv block {b}"
+        );
+        self.pool
+            .block(b)
+            .write()
+            .unwrap()
+            .store(layer, pos % bs, k, v);
+    }
+
+    fn advance(&mut self) {
+        self.len += 1;
+    }
+
+    fn with_k(&self, layer: usize, upto: usize, f: &mut dyn FnMut(usize, &[f32])) {
+        let bs = self.pool.layout().block_size;
+        let mut pos = 0usize;
+        for &b in &self.blocks {
+            if pos >= upto {
+                break;
+            }
+            let n = (upto - pos).min(bs);
+            let g = self.pool.block(b).read().unwrap();
+            f(pos, g.k_rows(layer, n));
+            pos += bs;
+        }
+    }
+
+    fn with_v(&self, layer: usize, upto: usize, f: &mut dyn FnMut(usize, &[f32])) {
+        let bs = self.pool.layout().block_size;
+        let mut pos = 0usize;
+        for &b in &self.blocks {
+            if pos >= upto {
+                break;
+            }
+            let n = (upto - pos).min(bs);
+            let g = self.pool.block(b).read().unwrap();
+            f(pos, g.v_rows(layer, n));
+            pos += bs;
+        }
+    }
+}
+
+/// The serving-side owner of the pool and prefix cache. One per engine;
+/// admission, prefix matching and eviction all go through here.
+pub struct KvManager {
+    pool: Arc<BlockPool>,
+    radix: Mutex<RadixCache>,
+    stats: Mutex<KvStats>,
+    prefix_cache: bool,
+    max_seq: usize,
+}
+
+impl KvManager {
+    pub fn new(cfg: &ModelConfig, kv: &KvCfg) -> Arc<KvManager> {
+        let layout = KvLayout {
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            block_size: kv.block_size,
+        };
+        Arc::new(KvManager {
+            pool: BlockPool::new(layout, kv.pool_blocks),
+            radix: Mutex::new(RadixCache::new(kv.block_size)),
+            stats: Mutex::new(KvStats::default()),
+            prefix_cache: kv.prefix_cache,
+            max_seq: cfg.max_seq,
+        })
+    }
+
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_cache
+    }
+
+    pub fn blocks_total(&self) -> usize {
+        self.pool.n_blocks()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.pool.blocks_in_use()
+    }
+
+    pub fn stats(&self) -> KvStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Build a sequence's KV view for `prompt`, adopting cached prefix
+    /// blocks. The match is capped below the full prompt so the last prompt
+    /// token is always recomputed (its logits seed decoding). Returns the
+    /// sequence and the number of prefix tokens served from cache.
+    pub fn acquire(&self, prompt: &[usize]) -> (PagedSeq, usize) {
+        let mut seq = PagedSeq::new(Arc::clone(&self.pool), self.max_seq);
+        let mut hit = 0usize;
+        if self.prefix_cache && prompt.len() > 1 {
+            let bs = self.pool.layout().block_size;
+            let usable = (prompt.len() - 1) / bs * bs;
+            if usable > 0 {
+                // match_prefix retains the matched blocks for this page
+                // table inside the radix lock, so a concurrent eviction can
+                // never free them between match and adoption.
+                let blocks = self
+                    .radix
+                    .lock()
+                    .unwrap()
+                    .match_prefix(&prompt[..usable], &self.pool);
+                hit = blocks.len() * bs;
+                if !blocks.is_empty() {
+                    seq.adopt_prefix(blocks);
+                }
+            }
+        }
+        let mut s = self.stats.lock().unwrap();
+        s.prefix_hit_tokens += hit as u64;
+        s.prefix_miss_tokens += (prompt.len() - hit) as u64;
+        drop(s);
+        (seq, hit)
+    }
+
+    /// Publish a prefilled prompt's full blocks into the prefix cache so
+    /// later sequences can share them.
+    pub fn insert_prefix(&self, prompt: &[usize], seq: &PagedSeq) {
+        if !self.prefix_cache {
+            return;
+        }
+        self.radix
+            .lock()
+            .unwrap()
+            .insert(prompt, seq.blocks(), &self.pool);
+    }
+
+    /// Room for one more token, evicting LRU cached prefixes while the pool
+    /// is dry. False only when eviction can free nothing more.
+    pub fn try_reserve(&self, seq: &mut PagedSeq) -> bool {
+        loop {
+            if seq.try_reserve() {
+                return true;
+            }
+            if seq.seq_len() >= seq.capacity() {
+                return false; // context window, not pool pressure
+            }
+            if self.radix.lock().unwrap().evict(1, &self.pool) == 0 {
+                return false;
+            }
+        }
+    }
+
+    /// Worst-case block demand of a request running `total_tokens`.
+    pub fn worst_case_blocks(&self, total_tokens: usize) -> usize {
+        self.pool
+            .layout()
+            .blocks_for(total_tokens.min(self.max_seq))
+    }
+
+    /// Admission headroom: free blocks plus everything eviction could
+    /// release. Optimistic when cached blocks are also held by live
+    /// sequences (evicting those frees no memory) — the scheduler's
+    /// preempt-and-requeue path covers the shortfall.
+    pub fn admissible_blocks(&self) -> usize {
+        self.pool.blocks_free() + self.radix.lock().unwrap().blocks_cached()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::preset("nano").unwrap()
+    }
+
+    fn kv_cfg(pool_blocks: usize, block_size: usize) -> KvCfg {
+        KvCfg {
+            pool_blocks,
+            block_size,
+            prefix_cache: true,
+        }
+    }
+
+    #[test]
+    fn append_grows_blocks_and_drop_releases() {
+        let mgr = KvManager::new(&cfg(), &kv_cfg(8, 4));
+        let (mut seq, hit) = mgr.acquire(&[1, 2, 3]);
+        assert_eq!(hit, 0);
+        let d = cfg().d_model;
+        let k = vec![1.0; d];
+        let v = vec![2.0; d];
+        for pos in 0..6 {
+            assert!(mgr.try_reserve(&mut seq));
+            for layer in 0..cfg().n_layers {
+                seq.store(layer, pos, &k, &v);
+            }
+            seq.advance();
+        }
+        assert_eq!(seq.blocks().len(), 2, "6 tokens at bs=4 -> 2 blocks");
+        assert_eq!(mgr.blocks_in_use(), 2);
+        drop(seq);
+        assert_eq!(mgr.blocks_in_use(), 0, "drop releases the page table");
+    }
+
+    #[test]
+    fn with_k_visits_positions_in_order() {
+        let mgr = KvManager::new(&cfg(), &kv_cfg(8, 4));
+        let (mut seq, _) = mgr.acquire(&[9]);
+        let d = cfg().d_model;
+        for pos in 0..7 {
+            assert!(mgr.try_reserve(&mut seq));
+            let k = vec![pos as f32; d];
+            seq.store(0, pos, &k, &k);
+            seq.advance();
+        }
+        let mut seen = Vec::new();
+        seq.with_k(0, 6, &mut |start, rows| {
+            for (r, row) in rows.chunks_exact(d).enumerate() {
+                seen.push((start + r, row[0]));
+            }
+        });
+        assert_eq!(seen.len(), 6);
+        for (i, &(p, val)) in seen.iter().enumerate() {
+            assert_eq!(p, i);
+            assert_eq!(val, i as f32);
+        }
+    }
+
+    #[test]
+    fn cow_unshares_tail_block() {
+        let mgr = KvManager::new(&cfg(), &kv_cfg(8, 4));
+        let (mut seq, _) = mgr.acquire(&[1]);
+        let d = cfg().d_model;
+        for pos in 0..2 {
+            assert!(mgr.try_reserve(&mut seq));
+            let k = vec![10.0 + pos as f32; d];
+            for layer in 0..cfg().n_layers {
+                seq.store(layer, pos, &k, &k);
+            }
+            seq.advance();
+        }
+        let tail = seq.blocks()[0];
+        // Simulate an external share of the (partial) tail block.
+        mgr.pool().retain(tail);
+        assert!(mgr.try_reserve(&mut seq), "reserve triggers copy-on-write");
+        let fresh = seq.blocks()[0];
+        assert_ne!(fresh, tail, "tail was replaced by a private copy");
+        assert_eq!(mgr.pool().ref_count(tail), 1, "seq dropped its shared ref");
+        // The private copy carries the already-stored positions.
+        let src = mgr.pool().block(tail).read().unwrap();
+        let dst = mgr.pool().block(fresh).read().unwrap();
+        assert_eq!(src.k_rows(1, 2), dst.k_rows(1, 2));
+        // Writing the private copy leaves the shared original untouched.
+        drop(src);
+        drop(dst);
+        seq.store(0, 2, &vec![77.0; d], &vec![77.0; d]);
+        seq.advance();
+        let src = mgr.pool().block(tail).read().unwrap();
+        assert_eq!(src.k_rows(0, 2)[0], 10.0);
+        drop(src);
+        drop(seq);
+        mgr.pool().release(tail);
+        assert_eq!(mgr.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn reserve_evicts_cached_prefix_under_pressure() {
+        let c = cfg();
+        let mgr = KvManager::new(&c, &kv_cfg(2, 4));
+        let d = c.d_model;
+        let prompt: Vec<usize> = vec![1, 2, 3, 4];
+        let (mut a, _) = mgr.acquire(&prompt);
+        for pos in 0..4 {
+            assert!(mgr.try_reserve(&mut a));
+            for layer in 0..c.n_layers {
+                a.store(layer, pos, &vec![0.5; d], &vec![0.5; d]);
+            }
+            a.advance();
+        }
+        mgr.insert_prefix(&prompt, &a);
+        drop(a); // tree still caches 1 block; 1 block free
+        assert_eq!(mgr.blocks_in_use(), 1);
+        // A new unrelated sequence needs both blocks: the second reserve
+        // must evict the cached prefix to make room.
+        let (mut b, hit) = mgr.acquire(&[9, 9, 9, 9, 9]);
+        assert_eq!(hit, 0);
+        for pos in 0..8 {
+            assert!(mgr.try_reserve(&mut b), "eviction frees the pool at pos {pos}");
+            b.store(0, pos, &vec![0.1; d], &vec![0.1; d]);
+            b.advance();
+        }
+        assert_eq!(b.blocks().len(), 2);
+        drop(b);
+        assert_eq!(mgr.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn acquire_caps_match_below_full_prompt() {
+        let c = cfg();
+        let mgr = KvManager::new(&c, &kv_cfg(8, 4));
+        let d = c.d_model;
+        let prompt: Vec<usize> = (0..8).collect();
+        let (mut a, hit0) = mgr.acquire(&prompt);
+        assert_eq!(hit0, 0);
+        for pos in 0..8 {
+            assert!(mgr.try_reserve(&mut a));
+            for layer in 0..c.n_layers {
+                a.store(layer, pos, &vec![1.0; d], &vec![1.0; d]);
+            }
+            a.advance();
+        }
+        mgr.insert_prefix(&prompt, &a);
+        // Identical prompt: only (8-1)/4*4 = 4 tokens may come from cache,
+        // so the final prompt token always produces fresh logits.
+        let (b, hit) = mgr.acquire(&prompt);
+        assert_eq!(hit, 4);
+        assert_eq!(b.seq_len(), 4);
+        assert_eq!(b.blocks()[0], a.blocks()[0]);
+        let s = mgr.stats();
+        assert_eq!(s.prefix_hit_tokens, 4);
+        assert_eq!(s.prefix_miss_tokens, 8 + 4);
+    }
+}

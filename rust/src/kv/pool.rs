@@ -1,0 +1,301 @@
+//! The global ref-counted KV block pool.
+//!
+//! Physical memory for the paged KV cache: a fixed set of blocks, each
+//! holding `block_size` positions of K and V for every layer. Blocks are
+//! handed out by id, shared across sequences via refcounts (the prefix
+//! cache and every page table referencing a block each hold one ref), and
+//! recycled through a free list — total resident KV memory is
+//! `n_blocks * 2 * n_layers * block_size * d_model` floats, fixed at
+//! startup, instead of `O(max_batch * max_seq)`.
+//!
+//! Concurrency contract: block *metadata* (refcounts, free list) is behind
+//! one mutex; block *data* sits behind a per-block RwLock. The write lock
+//! is only ever taken by the sequence that uniquely owns the tail block
+//! (copy-on-write guarantees rc == 1 before any store), so readers of
+//! shared prefix blocks never contend with writers.
+
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Index of a physical block in the pool.
+pub type BlockId = u32;
+
+/// Geometry of one block (shared by the pool and every page table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvLayout {
+    pub n_layers: usize,
+    pub d_model: usize,
+    /// Positions per block.
+    pub block_size: usize,
+}
+
+impl KvLayout {
+    /// f32 count of one side (K or V) of one block.
+    pub fn floats_per_side(&self) -> usize {
+        self.n_layers * self.block_size * self.d_model
+    }
+
+    /// Blocks needed to hold `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+}
+
+/// One block's K/V storage: per layer a contiguous `[block_size, d_model]`
+/// row-major slab, K and V separate.
+pub struct KvBlockData {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    bs: usize,
+    d: usize,
+}
+
+impl KvBlockData {
+    fn new(layout: &KvLayout) -> Self {
+        Self {
+            k: vec![0.0; layout.floats_per_side()],
+            v: vec![0.0; layout.floats_per_side()],
+            bs: layout.block_size,
+            d: layout.d_model,
+        }
+    }
+
+    #[inline]
+    fn layer_off(&self, layer: usize) -> usize {
+        layer * self.bs * self.d
+    }
+
+    /// Write one position's K/V rows for a layer.
+    pub fn store(&mut self, layer: usize, pos_in_block: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(pos_in_block < self.bs);
+        let at = self.layer_off(layer) + pos_in_block * self.d;
+        self.k[at..at + self.d].copy_from_slice(k);
+        self.v[at..at + self.d].copy_from_slice(v);
+    }
+
+    /// The first `n` K rows of a layer, row-major `[n, d_model]`.
+    pub fn k_rows(&self, layer: usize, n: usize) -> &[f32] {
+        let off = self.layer_off(layer);
+        &self.k[off..off + n * self.d]
+    }
+
+    /// The first `n` V rows of a layer, row-major `[n, d_model]`.
+    pub fn v_rows(&self, layer: usize, n: usize) -> &[f32] {
+        let off = self.layer_off(layer);
+        &self.v[off..off + n * self.d]
+    }
+
+    /// Copy the first `n` positions of every layer from `src` (the
+    /// copy-on-write path when a shared tail block must become private).
+    pub fn copy_prefix_from(&mut self, src: &KvBlockData, n: usize) {
+        debug_assert!(n <= self.bs && self.bs == src.bs && self.d == src.d);
+        let n_layers = self.k.len() / (self.bs * self.d);
+        for layer in 0..n_layers {
+            let off = self.layer_off(layer);
+            self.k[off..off + n * self.d].copy_from_slice(&src.k[off..off + n * self.d]);
+            self.v[off..off + n * self.d].copy_from_slice(&src.v[off..off + n * self.d]);
+        }
+    }
+}
+
+struct PoolMeta {
+    rc: Vec<u32>,
+    free: Vec<BlockId>,
+    allocs: u64,
+    frees: u64,
+}
+
+/// The fixed-size block pool. Created once per server, shared via `Arc`.
+pub struct BlockPool {
+    layout: KvLayout,
+    data: Vec<RwLock<KvBlockData>>,
+    meta: Mutex<PoolMeta>,
+}
+
+impl BlockPool {
+    pub fn new(layout: KvLayout, n_blocks: usize) -> Arc<BlockPool> {
+        assert!(n_blocks > 0, "kv pool needs at least one block");
+        assert!(
+            n_blocks <= BlockId::MAX as usize,
+            "kv pool too large for u32 block ids"
+        );
+        assert!(layout.block_size > 0 && layout.d_model > 0 && layout.n_layers > 0);
+        Arc::new(BlockPool {
+            layout,
+            data: (0..n_blocks)
+                .map(|_| RwLock::new(KvBlockData::new(&layout)))
+                .collect(),
+            meta: Mutex::new(PoolMeta {
+                rc: vec![0; n_blocks],
+                // Pop from the back: hand out low ids first.
+                free: (0..n_blocks as BlockId).rev().collect(),
+                allocs: 0,
+                frees: 0,
+            }),
+        })
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Allocate a block with refcount 1. `None` when the pool is exhausted
+    /// (callers evict cached prefixes or preempt, then retry).
+    pub fn try_alloc(&self) -> Option<BlockId> {
+        let mut m = self.meta.lock().unwrap();
+        let id = m.free.pop()?;
+        debug_assert_eq!(m.rc[id as usize], 0);
+        m.rc[id as usize] = 1;
+        m.allocs += 1;
+        Some(id)
+    }
+
+    /// Add a reference to a live block (page-table adoption, prefix-cache
+    /// registration).
+    pub fn retain(&self, id: BlockId) {
+        let mut m = self.meta.lock().unwrap();
+        assert!(m.rc[id as usize] > 0, "retain of free kv block {id}");
+        m.rc[id as usize] += 1;
+    }
+
+    /// Drop a reference; the block returns to the free list at rc 0.
+    /// Returns true when this release actually freed the block (refcount
+    /// reached zero) — eviction uses this to count reclaimed memory.
+    /// Panics on double-free (releasing an already-free block).
+    pub fn release(&self, id: BlockId) -> bool {
+        let mut m = self.meta.lock().unwrap();
+        let rc = &mut m.rc[id as usize];
+        assert!(*rc > 0, "double free of kv block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            m.free.push(id);
+            m.frees += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.meta.lock().unwrap().rc[id as usize]
+    }
+
+    pub fn blocks_free(&self) -> usize {
+        self.meta.lock().unwrap().free.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.n_blocks() - self.blocks_free()
+    }
+
+    /// Lifetime (allocs, frees) counters — the refcount-invariant check used
+    /// by the property test: after all refs are dropped, allocs == frees and
+    /// blocks_in_use == 0.
+    pub fn counters(&self) -> (u64, u64) {
+        let m = self.meta.lock().unwrap();
+        (m.allocs, m.frees)
+    }
+
+    /// Data access for a block id. Readers of shared blocks and the single
+    /// writer of an owned tail block synchronize here.
+    pub fn block(&self, id: BlockId) -> &RwLock<KvBlockData> {
+        &self.data[id as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> KvLayout {
+        KvLayout {
+            n_layers: 2,
+            d_model: 4,
+            block_size: 3,
+        }
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let pool = BlockPool::new(layout(), 4);
+        assert_eq!(pool.blocks_free(), 4);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(pool.blocks_in_use(), 2);
+        pool.retain(a);
+        pool.release(a);
+        assert_eq!(pool.ref_count(a), 1, "retained block survives one release");
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.blocks_in_use(), 0);
+        let (allocs, frees) = pool.counters();
+        assert_eq!(allocs, 2);
+        assert_eq!(frees, 2);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let pool = BlockPool::new(layout(), 2);
+        let a = pool.try_alloc().unwrap();
+        let _b = pool.try_alloc().unwrap();
+        assert!(pool.try_alloc().is_none());
+        pool.release(a);
+        assert!(pool.try_alloc().is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let pool = BlockPool::new(layout(), 2);
+        let a = pool.try_alloc().unwrap();
+        pool.release(a);
+        pool.release(a);
+    }
+
+    #[test]
+    fn store_and_read_rows() {
+        let l = layout();
+        let pool = BlockPool::new(l, 1);
+        let id = pool.try_alloc().unwrap();
+        let k: Vec<f32> = (0..l.d_model).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..l.d_model).map(|i| -(i as f32)).collect();
+        {
+            let mut b = pool.block(id).write().unwrap();
+            b.store(1, 2, &k, &v);
+        }
+        let b = pool.block(id).read().unwrap();
+        let rows = b.k_rows(1, 3);
+        assert_eq!(&rows[2 * l.d_model..3 * l.d_model], &k[..]);
+        let rows = b.v_rows(1, 3);
+        assert_eq!(&rows[2 * l.d_model..3 * l.d_model], &v[..]);
+    }
+
+    #[test]
+    fn copy_prefix_copies_all_layers() {
+        let l = layout();
+        let pool = BlockPool::new(l, 2);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        let k = vec![7.0; l.d_model];
+        let v = vec![9.0; l.d_model];
+        for layer in 0..l.n_layers {
+            pool.block(a).write().unwrap().store(layer, 0, &k, &v);
+            pool.block(a).write().unwrap().store(layer, 1, &v, &k);
+        }
+        {
+            let src = pool.block(a).read().unwrap();
+            let mut dst = pool.block(b).write().unwrap();
+            dst.copy_prefix_from(&src, 2);
+        }
+        let src = pool.block(a).read().unwrap();
+        let dst = pool.block(b).read().unwrap();
+        for layer in 0..l.n_layers {
+            assert_eq!(src.k_rows(layer, 2), dst.k_rows(layer, 2));
+            assert_eq!(src.v_rows(layer, 2), dst.v_rows(layer, 2));
+        }
+    }
+}

@@ -1,0 +1,419 @@
+//! Radix-tree prefix cache over token sequences, block-granular.
+//!
+//! Nodes hold edge labels whose length is a whole number of KV blocks, so a
+//! cached prefix maps 1:1 onto physical blocks in the [`BlockPool`]. Children
+//! are keyed by their edge's first *block* of tokens (not the first token),
+//! which lets two prompts that diverge inside their first block coexist —
+//! sharing below block granularity is impossible anyway.
+//!
+//! The tree holds one pool reference per cached block. Eviction (LRU over
+//! leaves that can actually free memory) releases only the tree's
+//! reference: a full block is never written again, so sequences still
+//! mapping it through their page tables keep reading valid data. No pin
+//! counts are needed. `match_prefix` retains matched blocks for the caller
+//! *inside* the tree walk, so a concurrent eviction can never free a block
+//! between match and adoption.
+//!
+//! Not internally synchronized — the owner (`KvManager`) wraps it in a
+//! mutex, and that mutex is load-bearing: matching/insertion run on the
+//! scheduler side, but decode workers reach `evict` through
+//! `KvManager::try_reserve` when the pool runs dry mid-step.
+
+use crate::kv::pool::{BlockId, BlockPool};
+use std::collections::HashMap;
+
+struct Node {
+    /// Edge label from the parent; a positive multiple of `block_size`
+    /// tokens (empty only for the root).
+    tokens: Vec<usize>,
+    /// Physical blocks backing `tokens` (`tokens.len() / block_size` ids).
+    blocks: Vec<BlockId>,
+    /// Children keyed by the first `block_size` tokens of their edge.
+    children: HashMap<Vec<usize>, usize>,
+    parent: usize,
+    /// Logical timestamp of the last match/insert touching this node.
+    last_access: u64,
+    in_use: bool,
+}
+
+/// The prefix cache. Node 0 is the root (empty edge).
+pub struct RadixCache {
+    block_size: usize,
+    nodes: Vec<Node>,
+    free_nodes: Vec<usize>,
+    clock: u64,
+    /// Blocks currently referenced by the tree (== sum of node block counts).
+    blocks_cached: usize,
+}
+
+fn common_prefix_len(a: &[usize], b: &[usize]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl RadixCache {
+    pub fn new(block_size: usize) -> Self {
+        assert!(block_size > 0);
+        RadixCache {
+            block_size,
+            nodes: vec![Node {
+                tokens: Vec::new(),
+                blocks: Vec::new(),
+                children: HashMap::new(),
+                parent: 0,
+                last_access: 0,
+                in_use: true,
+            }],
+            free_nodes: Vec::new(),
+            clock: 0,
+            blocks_cached: 0,
+        }
+    }
+
+    /// Number of blocks the tree currently references.
+    pub fn blocks_cached(&self) -> usize {
+        self.blocks_cached
+    }
+
+    fn new_node(&mut self, node: Node) -> usize {
+        if let Some(i) = self.free_nodes.pop() {
+            self.nodes[i] = node;
+            i
+        } else {
+            self.nodes.push(node);
+            self.nodes.len() - 1
+        }
+    }
+
+    /// Longest cached full-block prefix of `tokens`, as physical block ids.
+    /// Each returned block is retained on behalf of the caller's page table
+    /// before this returns (while the tree still holds its own reference),
+    /// so the handoff is atomic under the owner's lock. Touches LRU clocks.
+    pub fn match_prefix(&mut self, tokens: &[usize], pool: &BlockPool) -> Vec<BlockId> {
+        self.clock += 1;
+        let clock = self.clock;
+        let bs = self.block_size;
+        let mut out = Vec::new();
+        let mut node = 0usize;
+        let mut rem = tokens;
+        loop {
+            self.nodes[node].last_access = clock;
+            if rem.len() < bs {
+                break;
+            }
+            let child = match self.nodes[node].children.get(&rem[..bs]) {
+                Some(&c) => c,
+                None => break,
+            };
+            let common = common_prefix_len(&self.nodes[child].tokens, rem);
+            let common_blocks = common / bs * bs;
+            debug_assert!(common_blocks >= bs, "child key matched but edge does not");
+            if common_blocks < self.nodes[child].tokens.len() {
+                // Divergence (or exhaustion) inside this edge: split so the
+                // matched full-block prefix is its own node, and take it.
+                let head = self.split(child, common_blocks);
+                self.nodes[head].last_access = clock;
+                out.extend_from_slice(&self.nodes[head].blocks);
+                break;
+            }
+            out.extend_from_slice(&self.nodes[child].blocks);
+            rem = &rem[self.nodes[child].tokens.len()..];
+            node = child;
+        }
+        for &b in &out {
+            pool.retain(b);
+        }
+        out
+    }
+
+    /// Split `child`'s edge at `at` tokens (a positive multiple of
+    /// block_size strictly inside the edge), inserting a new head node
+    /// between parent and child. Returns the head's index; `child` keeps its
+    /// index and the edge tail.
+    fn split(&mut self, child: usize, at: usize) -> usize {
+        let bs = self.block_size;
+        debug_assert!(at > 0 && at % bs == 0 && at < self.nodes[child].tokens.len());
+        let parent = self.nodes[child].parent;
+        let head_tokens: Vec<usize> = self.nodes[child].tokens[..at].to_vec();
+        let head_blocks: Vec<BlockId> = self.nodes[child].blocks[..at / bs].to_vec();
+        let tail_tokens: Vec<usize> = self.nodes[child].tokens[at..].to_vec();
+        let tail_blocks: Vec<BlockId> = self.nodes[child].blocks[at / bs..].to_vec();
+        let last_access = self.nodes[child].last_access;
+        let mut head_children = HashMap::new();
+        head_children.insert(tail_tokens[..bs].to_vec(), child);
+        let head = self.new_node(Node {
+            tokens: head_tokens,
+            blocks: head_blocks,
+            children: head_children,
+            parent,
+            last_access,
+            in_use: true,
+        });
+        let head_key = self.nodes[head].tokens[..bs].to_vec();
+        self.nodes[parent].children.insert(head_key, head);
+        let c = &mut self.nodes[child];
+        c.tokens = tail_tokens;
+        c.blocks = tail_blocks;
+        c.parent = head;
+        head
+    }
+
+    /// Register the full-block prefix of `tokens` (backed by `blocks`, the
+    /// sequence's page table) with the tree. Newly referenced blocks get a
+    /// pool retain (the tree's own reference); already-cached spans are left
+    /// untouched.
+    pub fn insert(&mut self, tokens: &[usize], blocks: &[BlockId], pool: &BlockPool) {
+        self.clock += 1;
+        let clock = self.clock;
+        let bs = self.block_size;
+        let n_blocks = (tokens.len() / bs).min(blocks.len());
+        let mut rem = &tokens[..n_blocks * bs];
+        let mut rem_blocks = &blocks[..n_blocks];
+        let mut node = 0usize;
+        loop {
+            self.nodes[node].last_access = clock;
+            if rem.is_empty() {
+                return;
+            }
+            match self.nodes[node].children.get(&rem[..bs]).copied() {
+                None => {
+                    for &b in rem_blocks {
+                        pool.retain(b);
+                    }
+                    self.blocks_cached += rem_blocks.len();
+                    let leaf = self.new_node(Node {
+                        tokens: rem.to_vec(),
+                        blocks: rem_blocks.to_vec(),
+                        children: HashMap::new(),
+                        parent: node,
+                        last_access: clock,
+                        in_use: true,
+                    });
+                    self.nodes[node].children.insert(rem[..bs].to_vec(), leaf);
+                    return;
+                }
+                Some(child) => {
+                    let common = common_prefix_len(&self.nodes[child].tokens, rem);
+                    let cb = common / bs * bs;
+                    debug_assert!(cb >= bs);
+                    let next = if cb < self.nodes[child].tokens.len() {
+                        self.split(child, cb)
+                    } else {
+                        child
+                    };
+                    self.nodes[next].last_access = clock;
+                    rem = &rem[cb..];
+                    rem_blocks = &rem_blocks[cb / bs..];
+                    node = next;
+                }
+            }
+        }
+    }
+
+    /// Remove one leaf, releasing the tree's block references. Returns how
+    /// many blocks actually went back to the free list (refcount hit 0).
+    fn evict_leaf(&mut self, leaf: usize, pool: &BlockPool) -> usize {
+        let bs = self.block_size;
+        let mut freed = 0usize;
+        for &b in &self.nodes[leaf].blocks {
+            if pool.release(b) {
+                freed += 1;
+            }
+        }
+        self.blocks_cached -= self.nodes[leaf].blocks.len();
+        let parent = self.nodes[leaf].parent;
+        let key: Vec<usize> = self.nodes[leaf].tokens[..bs].to_vec();
+        self.nodes[parent].children.remove(&key);
+        let n = &mut self.nodes[leaf];
+        n.in_use = false;
+        n.tokens = Vec::new();
+        n.blocks = Vec::new();
+        self.free_nodes.push(leaf);
+        freed
+    }
+
+    /// Evict least-recently-used leaves until at least `want` blocks have
+    /// actually returned to `pool`'s free list. Leaves whose blocks are all
+    /// still mapped by live page tables are skipped — evicting them frees
+    /// no memory and would only trash the cache under the very load where
+    /// it matters most. Returns the number of blocks freed; 0 means nothing
+    /// evictable can reclaim memory right now.
+    pub fn evict(&mut self, want: usize, pool: &BlockPool) -> usize {
+        let mut freed = 0usize;
+        while freed < want {
+            let mut best: Option<usize> = None;
+            for i in 1..self.nodes.len() {
+                let n = &self.nodes[i];
+                if !n.in_use || !n.children.is_empty() {
+                    continue;
+                }
+                // Only the tree's own reference left on some block?
+                if !n.blocks.iter().any(|&b| pool.ref_count(b) == 1) {
+                    continue;
+                }
+                match best {
+                    None => best = Some(i),
+                    Some(b) if n.last_access < self.nodes[b].last_access => best = Some(i),
+                    _ => {}
+                }
+            }
+            let Some(leaf) = best else { break };
+            freed += self.evict_leaf(leaf, pool);
+        }
+        freed
+    }
+
+    /// Drop every cached prefix unconditionally (shutdown/tests) — unlike
+    /// [`RadixCache::evict`], this also unwinds leaves whose blocks are
+    /// still shared with live sequences.
+    pub fn clear(&mut self, pool: &BlockPool) {
+        loop {
+            let leaf = (1..self.nodes.len())
+                .find(|&i| self.nodes[i].in_use && self.nodes[i].children.is_empty());
+            match leaf {
+                Some(l) => {
+                    self.evict_leaf(l, pool);
+                }
+                None => return,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::pool::KvLayout;
+    use std::sync::Arc;
+
+    fn pool(n: usize) -> Arc<BlockPool> {
+        BlockPool::new(
+            KvLayout {
+                n_layers: 1,
+                d_model: 2,
+                block_size: 4,
+            },
+            n,
+        )
+    }
+
+    /// Allocate `n` pool blocks to stand in for a prefilled page table.
+    fn take(pool: &BlockPool, n: usize) -> Vec<BlockId> {
+        (0..n).map(|_| pool.try_alloc().unwrap()).collect()
+    }
+
+    #[test]
+    fn insert_then_match_roundtrip() {
+        let pool = pool(8);
+        let mut t = RadixCache::new(4);
+        let tokens: Vec<usize> = (0..12).collect();
+        let blocks = take(&pool, 3);
+        t.insert(&tokens, &blocks, &pool);
+        assert_eq!(t.blocks_cached(), 3);
+        // Tree holds its own refs on top of the page table's.
+        assert!(blocks.iter().all(|&b| pool.ref_count(b) == 2));
+        assert_eq!(t.match_prefix(&tokens, &pool), blocks);
+        // A match retains each returned block for the caller.
+        assert!(blocks.iter().all(|&b| pool.ref_count(b) == 3));
+        // Longer query still matches the cached 3 blocks.
+        let longer: Vec<usize> = (0..16).collect();
+        assert_eq!(t.match_prefix(&longer, &pool), blocks);
+        // Shorter query matches only whole blocks it covers.
+        assert_eq!(t.match_prefix(&tokens[..7], &pool), &blocks[..1]);
+    }
+
+    #[test]
+    fn diverging_prompts_split_shared_prefix() {
+        let pool = pool(8);
+        let mut t = RadixCache::new(4);
+        // a: blocks [0..2) over tokens 0..8; b shares block 0 then diverges.
+        let a_tokens: Vec<usize> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let a_blocks = take(&pool, 2);
+        t.insert(&a_tokens, &a_blocks, &pool);
+        let b_tokens: Vec<usize> = vec![1, 2, 3, 4, 99, 98, 97, 96];
+        let matched = t.match_prefix(&b_tokens, &pool);
+        assert_eq!(matched, &a_blocks[..1], "shared first block matches");
+        let b_blocks = take(&pool, 2);
+        // b's page table: shared block 0 + its own block for tokens 4..8.
+        let b_table = vec![a_blocks[0], b_blocks[0]];
+        t.insert(&b_tokens, &b_table, &pool);
+        // Shared block cached once: refs = a's table + b's table would be
+        // managed by callers; here tree added exactly one ref for it.
+        assert_eq!(t.blocks_cached(), 3);
+        assert_eq!(t.match_prefix(&a_tokens, &pool), a_blocks);
+        assert_eq!(t.match_prefix(&b_tokens, &pool), b_table);
+    }
+
+    #[test]
+    fn no_sharing_below_block_granularity() {
+        let pool = pool(8);
+        let mut t = RadixCache::new(4);
+        let a_tokens: Vec<usize> = vec![1, 2, 3, 4];
+        let a_blocks = take(&pool, 1);
+        t.insert(&a_tokens, &a_blocks, &pool);
+        // Diverges at token 2 — inside the first block: no match.
+        let b_tokens: Vec<usize> = vec![1, 2, 9, 9];
+        assert!(t.match_prefix(&b_tokens, &pool).is_empty());
+        let b_blocks = take(&pool, 1);
+        t.insert(&b_tokens, &b_blocks, &pool);
+        assert_eq!(t.blocks_cached(), 2);
+        assert_eq!(t.match_prefix(&a_tokens, &pool), a_blocks);
+        assert_eq!(t.match_prefix(&b_tokens, &pool), b_blocks);
+    }
+
+    #[test]
+    fn evict_lru_releases_refs() {
+        let pool = pool(8);
+        let mut t = RadixCache::new(4);
+        let old_tokens: Vec<usize> = (0..4).collect();
+        let old_blocks = take(&pool, 1);
+        t.insert(&old_tokens, &old_blocks, &pool);
+        let new_tokens: Vec<usize> = (100..104).collect();
+        let new_blocks = take(&pool, 1);
+        t.insert(&new_tokens, &new_blocks, &pool);
+        // Eviction skips leaves whose blocks live sequences still map —
+        // releasing those frees no memory.
+        assert_eq!(t.evict(1, &pool), 0, "all cached blocks still mapped");
+        assert_eq!(t.blocks_cached(), 2);
+        // Sequences complete: page tables drop their refs.
+        pool.release(old_blocks[0]);
+        pool.release(new_blocks[0]);
+        // Touch the new prefix so the old one is LRU (drop the match ref).
+        for b in t.match_prefix(&new_tokens, &pool) {
+            pool.release(b);
+        }
+        let freed = t.evict(1, &pool);
+        assert_eq!(freed, 1, "LRU leaf freed one real block");
+        assert_eq!(t.blocks_cached(), 1);
+        assert_eq!(pool.blocks_in_use(), 1, "only the hot cached block left");
+        assert!(
+            t.match_prefix(&old_tokens, &pool).is_empty(),
+            "old prefix gone"
+        );
+        let hot = t.match_prefix(&new_tokens, &pool);
+        assert_eq!(hot, new_blocks, "hot prefix kept");
+        for &b in &hot {
+            pool.release(b);
+        }
+        t.clear(&pool);
+        assert_eq!(pool.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn evict_unwinds_inner_nodes() {
+        let pool = pool(8);
+        let mut t = RadixCache::new(4);
+        let a: Vec<usize> = (0..8).collect();
+        let ab = take(&pool, 2);
+        t.insert(&a, &ab, &pool);
+        let b: Vec<usize> = (0..4).chain(50..54).collect();
+        let bb = vec![ab[0], take(&pool, 1)[0]];
+        t.insert(&b, &bb, &pool);
+        // Three cached blocks across a split node and two leaves; full
+        // eviction must unwind leaves then the inner node.
+        assert_eq!(t.blocks_cached(), 3);
+        t.clear(&pool);
+        assert_eq!(t.blocks_cached(), 0);
+        // Only page-table refs remain.
+        assert_eq!(pool.ref_count(ab[0]), 1);
+    }
+}

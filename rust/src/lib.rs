@@ -16,6 +16,7 @@ pub mod util;
 pub mod data;
 pub mod tensor;
 pub mod model;
+pub mod kv;
 pub mod sparsity;
 pub mod sparse_kernel;
 pub mod calib;

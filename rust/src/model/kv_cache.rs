@@ -34,6 +34,18 @@ impl BlockKv {
         self.k[pos * self.d..(pos + 1) * self.d].copy_from_slice(k);
         self.v[pos * self.d..(pos + 1) * self.d].copy_from_slice(v);
     }
+
+    /// The first `upto` K rows, row-major `[upto, d_model]`.
+    #[inline]
+    pub fn k_rows(&self, upto: usize) -> &[f32] {
+        &self.k[..upto * self.d]
+    }
+
+    /// The first `upto` V rows, row-major `[upto, d_model]`.
+    #[inline]
+    pub fn v_rows(&self, upto: usize) -> &[f32] {
+        &self.v[..upto * self.d]
+    }
 }
 
 /// Full-model KV cache; `len` is the number of positions already decoded.
@@ -70,6 +82,39 @@ impl KvCache {
 
     pub fn is_full(&self) -> bool {
         self.len >= self.max_seq
+    }
+}
+
+/// The flat slab as a [`KvSeq`]: one contiguous chunk per layer, visited in
+/// a single callback. This is the baseline the paged implementation must
+/// match bit-for-bit.
+impl crate::kv::KvSeq for KvCache {
+    fn seq_len(&self) -> usize {
+        self.len
+    }
+
+    fn capacity(&self) -> usize {
+        self.max_seq
+    }
+
+    fn try_reserve(&mut self) -> bool {
+        self.len < self.max_seq
+    }
+
+    fn store(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.blocks[layer].store(pos, k, v);
+    }
+
+    fn advance(&mut self) {
+        self.len += 1;
+    }
+
+    fn with_k(&self, layer: usize, upto: usize, f: &mut dyn FnMut(usize, &[f32])) {
+        f(0, self.blocks[layer].k_rows(upto));
+    }
+
+    fn with_v(&self, layer: usize, upto: usize, f: &mut dyn FnMut(usize, &[f32])) {
+        f(0, self.blocks[layer].v_rows(upto));
     }
 }
 

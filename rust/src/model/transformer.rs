@@ -6,6 +6,7 @@
 //! RoPE, SwiGLU, 1/sqrt(hd) attention scaling) mirror
 //! `python/compile/model.py` so PJRT cross-validation can assert agreement.
 
+use crate::kv::KvSeq;
 use crate::model::kv_cache::KvCache;
 use crate::model::layers::{LayerId, LayerKind};
 use crate::model::weights::Weights;
@@ -211,14 +212,19 @@ impl Model {
     }
 
     /// Run one token through one block in place. `x` is the residual stream.
+    /// `cache_layer` is the KV store's layer index (== `b` except for the
+    /// single-layer cache `block_forward_seq` uses). The KV store may be the
+    /// flat slab or a paged page table — attention visits rows through
+    /// [`KvSeq::with_k`]/[`KvSeq::with_v`] in ascending position order, so
+    /// both produce bit-identical outputs.
     #[allow(clippy::too_many_arguments)]
     fn block_step(
         &self,
         b: usize,
-        cache_block_idx: usize,
+        cache_layer: usize,
         x: &mut [f32],
         pos: usize,
-        cache: &mut KvCache,
+        cache: &mut dyn KvSeq,
         sp: &dyn Sparsifier,
         scratch: &mut Scratch,
         stats: &mut ForwardStats,
@@ -248,29 +254,34 @@ impl Model {
             rope_inplace(&mut scratch.q[h * hd..(h + 1) * hd], pos, cfg.rope_base);
             rope_inplace(&mut scratch.k[h * hd..(h + 1) * hd], pos, cfg.rope_base);
         }
-        cache.blocks[cache_block_idx].store(pos, &scratch.k, &scratch.v);
+        cache.store(cache_layer, pos, &scratch.k, &scratch.v);
         let scale = 1.0 / (hd as f32).sqrt();
-        let cache_block = &cache.blocks[cache_block_idx];
         for h in 0..cfg.n_heads {
             let qh = &scratch.q[h * hd..(h + 1) * hd];
             let scores = &mut scratch.scores[..=pos];
-            for (t, s) in scores.iter_mut().enumerate() {
-                let kh = &cache_block.k_at(t)[h * hd..(h + 1) * hd];
-                let mut acc = 0.0f32;
-                for i in 0..hd {
-                    acc += qh[i] * kh[i];
+            cache.with_k(cache_layer, pos + 1, &mut |start, rows| {
+                for (r, kr) in rows.chunks_exact(d).enumerate() {
+                    let kh = &kr[h * hd..(h + 1) * hd];
+                    let mut acc = 0.0f32;
+                    for i in 0..hd {
+                        acc += qh[i] * kh[i];
+                    }
+                    scores[start + r] = acc * scale;
                 }
-                *s = acc * scale;
-            }
+            });
             softmax_inplace(scores);
             let out_h = &mut scratch.attn_out[h * hd..(h + 1) * hd];
             out_h.fill(0.0);
-            for (t, &sc) in scores.iter().enumerate() {
-                let vh = &cache_block.v_at(t)[h * hd..(h + 1) * hd];
-                for i in 0..hd {
-                    out_h[i] += sc * vh[i];
+            let scores: &[f32] = scores;
+            cache.with_v(cache_layer, pos + 1, &mut |start, rows| {
+                for (r, vr) in rows.chunks_exact(d).enumerate() {
+                    let sc = scores[start + r];
+                    let vh = &vr[h * hd..(h + 1) * hd];
+                    for i in 0..hd {
+                        out_h[i] += sc * vh[i];
+                    }
                 }
-            }
+            });
         }
         proj(LayerKind::O, &scratch.attn_out, &mut scratch.o, stats);
         for i in 0..d {
@@ -292,19 +303,26 @@ impl Model {
 
     /// Decode one token, writing the next position's logits into `logits`
     /// (resized on first use, then reused — the steady state allocates
-    /// nothing). `cache.len` is the current position; it is incremented.
+    /// nothing). `cache.seq_len()` is the current position; it is advanced.
+    /// The caller must have reserved room (serving does, via the KV
+    /// manager's evict-then-preempt path); the internal reserve here is the
+    /// flat-cache path plus a backstop assert for paged stores.
     pub fn forward_token(
         &self,
         token: usize,
-        cache: &mut KvCache,
+        cache: &mut dyn KvSeq,
         sp: &dyn Sparsifier,
         scratch: &mut Scratch,
         stats: &mut ForwardStats,
         logits: &mut Vec<f32>,
     ) {
         assert!(token < self.cfg.vocab_size, "token {token} out of vocab");
-        assert!(!cache.is_full(), "KV cache full (max_seq {})", cache.max_seq);
-        let pos = cache.len;
+        let pos = cache.seq_len();
+        assert!(
+            cache.try_reserve(),
+            "KV reserve failed at pos {pos} (capacity {})",
+            cache.capacity()
+        );
         // The residual stream lives in scratch; it is taken out for the
         // duration of the block loop so `scratch`'s other buffers stay
         // borrowable, and put back afterwards.
@@ -313,7 +331,7 @@ impl Model {
         for b in 0..self.cfg.n_layers {
             self.block_step(b, b, &mut x, pos, cache, sp, scratch, stats);
         }
-        cache.len = pos + 1;
+        cache.advance();
         stats.tokens += 1;
         rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut scratch.normed);
         scratch.resid = x;

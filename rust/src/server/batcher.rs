@@ -52,9 +52,41 @@ impl Batcher {
     /// Admit as many waiting requests as fit given `active` running
     /// sequences. Returns the admitted requests, FIFO order.
     pub fn admit(&mut self, active: usize) -> Vec<GenRequest> {
-        let slots = self.cfg.max_batch.saturating_sub(active);
-        let take = slots.min(self.waiting.len());
-        self.waiting.drain(..take).collect()
+        self.admit_with(active, |_| true)
+    }
+
+    /// Block-aware admission: admit FIFO while batch slots remain and
+    /// `fits` approves the queue head. The head blocks the line when it
+    /// doesn't fit (no skip-ahead), preserving FIFO fairness.
+    pub fn admit_with(
+        &mut self,
+        active: usize,
+        mut fits: impl FnMut(&GenRequest) -> bool,
+    ) -> Vec<GenRequest> {
+        let mut slots = self.cfg.max_batch.saturating_sub(active);
+        let mut out = Vec::new();
+        while slots > 0 {
+            match self.waiting.front() {
+                Some(head) if fits(head) => {
+                    out.push(self.waiting.pop_front().expect("head exists"));
+                    slots -= 1;
+                }
+                _ => break,
+            }
+        }
+        out
+    }
+
+    /// Put a preempted request back at the head of the line. Bypasses the
+    /// queue capacity: preemption must never drop accepted work.
+    pub fn requeue_front(&mut self, req: GenRequest) {
+        self.waiting.push_front(req);
+    }
+
+    /// Forced admission of the queue head (progress guarantee when nothing
+    /// is active and the head's worst case exceeds the pool).
+    pub fn pop_front(&mut self) -> Option<GenRequest> {
+        self.waiting.pop_front()
     }
 
     pub fn queue_len(&self) -> usize {
@@ -112,6 +144,39 @@ mod tests {
         b.enqueue(req(0)).unwrap();
         assert!(b.admit(4).is_empty());
         assert_eq!(b.queue_len(), 1);
+    }
+
+    #[test]
+    fn admit_with_blocks_on_unfitting_head() {
+        let mut b = Batcher::new(BatcherCfg {
+            max_batch: 4,
+            max_queue: 10,
+        });
+        for i in 0..4 {
+            b.enqueue(req(i)).unwrap();
+        }
+        // Head (id 0) fits, id 1 does not: admission stops at the head of
+        // line even though id 2 would fit.
+        let admitted = b.admit_with(0, |r| r.id != 1);
+        assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(b.queue_len(), 3);
+    }
+
+    #[test]
+    fn requeue_front_goes_first() {
+        let mut b = Batcher::new(BatcherCfg {
+            max_batch: 2,
+            max_queue: 2,
+        });
+        b.enqueue(req(1)).unwrap();
+        b.enqueue(req(2)).unwrap();
+        // Preempted request jumps the (full) queue.
+        b.requeue_front(req(7));
+        assert_eq!(b.queue_len(), 3);
+        let admitted = b.admit(0);
+        assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![7, 1]);
+        assert_eq!(b.pop_front().unwrap().id, 2);
+        assert!(b.pop_front().is_none());
     }
 
     #[test]

@@ -2,8 +2,15 @@
 //!
 //! One scheduler thread owns the active set. Router threads (HTTP or
 //! in-process callers) enqueue requests and block on a per-request channel;
-//! the scheduler admits between decode steps, prefalls new sequences,
+//! the scheduler admits between decode steps, prefills new sequences,
 //! steps the batch, and completes finished sequences.
+//!
+//! With a paged-KV engine the scheduler is block-aware: a request is only
+//! admitted when its worst-case page demand fits the pool's free-plus-
+//! evictable headroom, and if the pool still runs dry mid-decode (shared
+//! prefix blocks make the headroom estimate optimistic) the youngest
+//! active sequence is preempted — its pages released, its request requeued
+//! at the head of the line — instead of any sequence failing.
 
 use crate::model::sampler::Sampling;
 use crate::server::batcher::{Batcher, BatcherCfg};
@@ -97,6 +104,21 @@ impl Coordinator {
         self.shutdown.load(Ordering::SeqCst)
     }
 
+    /// Report-time metrics snapshot: refreshes the paged-KV gauges (pool
+    /// occupancy, prefix hit/miss) before serializing, so `/metrics` always
+    /// reflects live pool state.
+    pub fn metrics_json(&self) -> crate::util::json::Json {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(mgr) = self.engine.kv.as_ref() {
+            m.blocks_total = mgr.blocks_total() as u64;
+            m.blocks_in_use = mgr.blocks_in_use() as u64;
+            let s = mgr.stats();
+            m.prefix_hit_tokens = s.prefix_hit_tokens;
+            m.prefix_miss_tokens = s.prefix_miss_tokens;
+        }
+        m.to_json()
+    }
+
     /// The scheduler loop. Run on a dedicated thread:
     /// `std::thread::spawn(move || coordinator.run_scheduler())`.
     pub fn run_scheduler(self: &Arc<Self>) {
@@ -106,7 +128,11 @@ impl Coordinator {
             if self.is_shutdown() {
                 return;
             }
-            // Admit new work.
+            // Admit new work. With a paged engine, admit only while the
+            // head request's worst-case page demand fits the free +
+            // evictable headroom; with nothing active, force-admit the head
+            // anyway so oversized requests still make progress (they end
+            // with `cache_full` rather than waiting forever).
             let admitted: Vec<GenRequest> = {
                 let mut st = self.state.lock().unwrap();
                 if active.is_empty() && st.batcher.queue_len() == 0 {
@@ -119,24 +145,59 @@ impl Coordinator {
                     st2.batcher.queue_len(); // keep borrowck simple
                     continue;
                 }
-                st.batcher.admit(active.len())
+                let mut adm = match self.engine.kv.as_ref() {
+                    Some(mgr) => {
+                        // Deduct demand committed earlier in this same pass
+                        // so co-admitted requests can't double-count the
+                        // one headroom snapshot.
+                        let mut committed = 0usize;
+                        st.batcher.admit_with(active.len(), |req| {
+                            let tokens =
+                                self.engine.worst_case_tokens(&req.prompt, req.max_new);
+                            let need = mgr.worst_case_blocks(tokens);
+                            if committed + need <= mgr.admissible_blocks() {
+                                committed += need;
+                                true
+                            } else {
+                                false
+                            }
+                        })
+                    }
+                    None => st.batcher.admit(active.len()),
+                };
+                if adm.is_empty() && active.is_empty() {
+                    if let Some(head) = st.batcher.pop_front() {
+                        adm.push(head);
+                    }
+                }
+                adm
             };
             for req in admitted {
                 let queue_ms = req.arrived.elapsed().as_secs_f64() * 1e3;
                 let mut seq =
                     self.engine
                         .admit(req.id, &req.prompt, req.max_new, req.sampling);
+                seq.resumed = req.preempted;
                 self.engine.prefill(&mut seq);
                 {
                     let mut m = self.metrics.lock().unwrap();
-                    m.queue_ms.add(queue_ms);
-                    m.tokens_prefilled += seq.prompt_tokens.len() as u64;
+                    // A resumed request's wait includes its first run's
+                    // decode time — sampling it again would both double-
+                    // count the request and pollute queue_ms with run time.
+                    if !req.preempted {
+                        m.queue_ms.add(queue_ms);
+                    }
+                    // Tokens actually forwarded: excludes prefix-cache hits
+                    // and anything cut off by a cache_full abort.
+                    m.tokens_prefilled +=
+                        (seq.kv.seq_len() - seq.prefix_hit_tokens) as u64;
                 }
                 active.push((req, seq, Instant::now()));
             }
             if active.is_empty() {
                 continue;
             }
+            self.reserve_or_preempt(&mut active);
             // One decode step across the batch: only unfinished sequences
             // enter (chunks stay balanced when completions cluster); the
             // decode policy itself is shared with `Engine::step_batch`.
@@ -170,6 +231,8 @@ impl Coordinator {
                         queue_ms: (started - req.arrived).as_secs_f64() * 1e3,
                         total_ms,
                         density: seq.stats.density(),
+                        finish_reason: seq.finish_reason().as_str().to_string(),
+                        prefix_hit_tokens: seq.prefix_hit_tokens,
                     };
                     {
                         let mut m = self.metrics.lock().unwrap();
@@ -187,6 +250,54 @@ impl Coordinator {
                     i += 1;
                 }
             }
+        }
+    }
+
+    /// Guarantee every sequence that will forward this step has a KV page
+    /// reserved. On pool exhaustion (eviction included — `reserve_seq` runs
+    /// the manager's evict-then-alloc path) the youngest active unfinished
+    /// sequence is preempted: pages released, request requeued at the head
+    /// of the line with its `preempted` mark. Restarting the scan after a
+    /// preemption is cheap because successful reservations are idempotent.
+    fn reserve_or_preempt(&self, active: &mut Vec<(GenRequest, SeqState, Instant)>) {
+        if self.engine.kv.is_none() {
+            return;
+        }
+        let mut i = 0;
+        while i < active.len() {
+            let needs = {
+                let s = &active[i].1;
+                // decode_one samples one token first; a forward (and thus a
+                // page) is only needed when that doesn't finish the seq.
+                !s.finished() && s.generated.len() + 1 < s.max_new
+            };
+            if !needs || self.engine.reserve_seq(&mut active[i].1) {
+                i += 1;
+                continue;
+            }
+            // With a single unfinished sequence there is nobody to yield
+            // to: preempting it would requeue-and-fail forever. Let
+            // `decode_one` surface `cache_full` instead.
+            if active.iter().filter(|(_, s, _)| !s.finished()).count() <= 1 {
+                i += 1;
+                continue;
+            }
+            // Preempt the youngest unfinished sequence (highest id ==
+            // latest submitted; preempted-and-resumed requests keep their
+            // original low id, so they are preempted last).
+            let victim = active
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, s, _))| !s.finished())
+                .max_by_key(|(_, (r, _, _))| r.id)
+                .map(|(idx, _)| idx)
+                .expect("sequence i itself is unfinished");
+            let (mut req, seq, _) = active.swap_remove(victim);
+            drop(seq); // releases the page table's block refs
+            req.preempted = true;
+            self.state.lock().unwrap().batcher.requeue_front(req);
+            self.metrics.lock().unwrap().preemptions_total += 1;
+            i = 0;
         }
     }
 }

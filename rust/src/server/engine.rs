@@ -2,12 +2,20 @@
 //!
 //! Implements the paper's serving policy (Sec 5.1): only the second half of
 //! prefill tokens run sparse, all decode tokens run sparse. Sequences carry
-//! their own KV cache and scratch; a decode step runs every active sequence
+//! their own KV view and scratch; a decode step runs every active sequence
 //! through one token, distributed over threads — each sequence's mask is
 //! computed independently (the "per-sequence sparsity pattern" case the
 //! paper's limitation section raises).
+//!
+//! KV storage is either the flat per-sequence slab (`Engine::new`, the
+//! baseline) or pages from a shared [`KvManager`] pool (`Engine::paged` /
+//! `Engine::with_kv`): page tables replace the `[max_seq, d_model]` buffers,
+//! prompts sharing a cached prefix skip both dense and sparse prefill
+//! compute for the shared tokens, and pool exhaustion surfaces as a
+//! `cache_full` finish or a scheduler preemption instead of a panic.
 
 use crate::data::corpus::{detokenize, tokenize};
+use crate::kv::{KvCfg, KvManager, KvSeq, PagedSeq};
 use crate::model::kv_cache::KvCache;
 use crate::model::sampler::Sampling;
 use crate::model::transformer::{ForwardStats, Model, Scratch};
@@ -40,6 +48,57 @@ impl Default for EngineCfg {
     }
 }
 
+/// Why a sequence stopped generating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated the requested `max_new` tokens.
+    Length,
+    /// Ran out of KV storage (context window or block pool) before
+    /// `max_new` — previously indistinguishable from completing.
+    CacheFull,
+    /// Was preempted for pool pressure, resumed later, and completed.
+    PreemptedResumed,
+}
+
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::CacheFull => "cache_full",
+            FinishReason::PreemptedResumed => "preempted->resumed",
+        }
+    }
+}
+
+/// A sequence's KV storage: flat slab (baseline engines) or pooled pages.
+pub enum SeqKv {
+    Flat(KvCache),
+    Paged(PagedSeq),
+}
+
+impl SeqKv {
+    pub fn as_dyn(&mut self) -> &mut dyn KvSeq {
+        match self {
+            SeqKv::Flat(c) => c,
+            SeqKv::Paged(p) => p,
+        }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        match self {
+            SeqKv::Flat(c) => c.len,
+            SeqKv::Paged(p) => p.seq_len(),
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        match self {
+            SeqKv::Flat(c) => c.is_full(),
+            SeqKv::Paged(p) => KvSeq::is_full(p),
+        }
+    }
+}
+
 /// One in-flight sequence.
 pub struct SeqState {
     pub id: u64,
@@ -47,17 +106,40 @@ pub struct SeqState {
     pub generated: Vec<usize>,
     pub max_new: usize,
     pub sampling: Sampling,
-    cache: KvCache,
+    pub kv: SeqKv,
     scratch: Scratch,
     last_logits: Vec<f32>,
     pub stats: ForwardStats,
     rng: Pcg64,
     prefilled: bool,
+    /// Prompt tokens served from the prefix cache (skipped in prefill).
+    pub prefix_hit_tokens: usize,
+    /// Set when the sequence was preempted and re-admitted.
+    pub resumed: bool,
+    finish_override: Option<FinishReason>,
 }
 
 impl SeqState {
     pub fn finished(&self) -> bool {
-        self.generated.len() >= self.max_new || self.cache.is_full()
+        self.finish_override.is_some()
+            || self.generated.len() >= self.max_new
+            || self.kv.is_full()
+    }
+
+    /// Why this (finished) sequence stopped.
+    pub fn finish_reason(&self) -> FinishReason {
+        if let Some(r) = self.finish_override {
+            return r;
+        }
+        if self.generated.len() >= self.max_new {
+            if self.resumed {
+                FinishReason::PreemptedResumed
+            } else {
+                FinishReason::Length
+            }
+        } else {
+            FinishReason::CacheFull
+        }
     }
 
     pub fn text(&self) -> String {
@@ -65,11 +147,13 @@ impl SeqState {
     }
 }
 
-/// The engine: shared model + sparse policy.
+/// The engine: shared model + sparse policy (+ optional paged-KV manager).
 pub struct Engine {
     pub model: Arc<Model>,
     pub sparsifier: Arc<dyn Sparsifier>,
     pub cfg: EngineCfg,
+    /// Paged-KV manager; `None` runs the flat per-sequence slabs.
+    pub kv: Option<Arc<KvManager>>,
 }
 
 impl Engine {
@@ -78,7 +162,34 @@ impl Engine {
             model,
             sparsifier,
             cfg,
+            kv: None,
         }
+    }
+
+    /// Engine backed by an existing paged-KV manager.
+    pub fn with_kv(
+        model: Arc<Model>,
+        sparsifier: Arc<dyn Sparsifier>,
+        cfg: EngineCfg,
+        kv: Arc<KvManager>,
+    ) -> Self {
+        Self {
+            model,
+            sparsifier,
+            cfg,
+            kv: Some(kv),
+        }
+    }
+
+    /// Engine with a fresh paged-KV pool built from `kv_cfg`.
+    pub fn paged(
+        model: Arc<Model>,
+        sparsifier: Arc<dyn Sparsifier>,
+        cfg: EngineCfg,
+        kv_cfg: &KvCfg,
+    ) -> Self {
+        let mgr = KvManager::new(&model.cfg, kv_cfg);
+        Self::with_kv(model, sparsifier, cfg, mgr)
     }
 
     /// Dense-executing engine (the 0%-sparsity baseline).
@@ -87,13 +198,21 @@ impl Engine {
     }
 
     /// Create sequence state for a prompt (tokenized, truncated to fit the
-    /// context window with room for generation).
+    /// context window with room for generation). Paged engines adopt any
+    /// cached prefix blocks here; `prefill` then computes only the suffix.
     pub fn admit(&self, id: u64, prompt: &str, max_new: usize, sampling: Sampling) -> SeqState {
         let mut tokens = tokenize(prompt);
-        let budget = self.model.cfg.max_seq.saturating_sub(max_new.max(1));
-        if tokens.len() > budget {
-            tokens.drain(..tokens.len() - budget.max(1));
+        let keep = self.truncated_prompt_len(tokens.len(), max_new);
+        if tokens.len() > keep {
+            tokens.drain(..tokens.len() - keep);
         }
+        let (kv, hit) = match &self.kv {
+            Some(mgr) => {
+                let (seq, hit) = mgr.acquire(&tokens);
+                (SeqKv::Paged(seq), hit)
+            }
+            None => (SeqKv::Flat(KvCache::new(&self.model.cfg)), 0),
+        };
         SeqState {
             id,
             prompt_tokens: tokens,
@@ -101,22 +220,66 @@ impl Engine {
             generated: Vec::with_capacity(max_new),
             max_new,
             sampling,
-            cache: KvCache::new(&self.model.cfg),
+            kv,
             scratch: Scratch::new(&self.model.cfg),
             last_logits: Vec::new(),
             stats: ForwardStats::default(),
             rng: Pcg64::with_stream(self.cfg.seed, id),
             prefilled: false,
+            prefix_hit_tokens: hit,
+            resumed: false,
+            finish_override: None,
+        }
+    }
+
+    /// Prompt length `admit` keeps after context-window truncation — the
+    /// single source of truth shared with admission headroom checks.
+    fn truncated_prompt_len(&self, prompt_tokens: usize, max_new: usize) -> usize {
+        let budget = self.model.cfg.max_seq.saturating_sub(max_new.max(1));
+        if prompt_tokens > budget {
+            budget.max(1)
+        } else {
+            prompt_tokens
+        }
+    }
+
+    /// Worst-case token footprint of a request (prompt after truncation plus
+    /// generation budget) — what block-aware admission reserves against.
+    pub fn worst_case_tokens(&self, prompt: &str, max_new: usize) -> usize {
+        // The byte tokenizer maps one byte to one token (`tokenize` is
+        // `s.bytes()`), so `prompt.len()` equals the pre-truncation count.
+        let ptok = self.truncated_prompt_len(prompt.len(), max_new);
+        (ptok + max_new).min(self.model.cfg.max_seq)
+    }
+
+    /// Ensure the sequence can store one more token, evicting cached
+    /// prefixes when the pool is dry. False means pool exhaustion (paged)
+    /// or a full context window.
+    pub fn reserve_seq(&self, seq: &mut SeqState) -> bool {
+        match (&self.kv, &mut seq.kv) {
+            (Some(mgr), SeqKv::Paged(p)) => mgr.try_reserve(p),
+            (_, SeqKv::Flat(c)) => !c.is_full(),
+            (None, SeqKv::Paged(p)) => p.try_reserve(),
         }
     }
 
     /// Prefill one sequence (paper policy: leading fraction dense, trailing
-    /// fraction sparse).
+    /// fraction sparse). Tokens covered by a prefix-cache hit are skipped
+    /// entirely — their K/V pages are already resident and shared. After a
+    /// successful prefill the prompt's full blocks are published to the
+    /// prefix cache.
     pub fn prefill(&self, seq: &mut SeqState) {
         assert!(!seq.prefilled);
         let n = seq.prompt_tokens.len();
+        let start = seq.kv.seq_len();
+        debug_assert_eq!(start, seq.prefix_hit_tokens);
         let dense_upto = ((1.0 - self.cfg.prefill_sparse_fraction) * n as f64).floor() as usize;
-        for (i, &tok) in seq.prompt_tokens.iter().enumerate() {
+        for i in start..n {
+            if !self.reserve_seq(seq) {
+                seq.finish_override = Some(FinishReason::CacheFull);
+                break;
+            }
+            let tok = seq.prompt_tokens[i];
             let sp: &dyn Sparsifier = if i < dense_upto {
                 &Dense
             } else {
@@ -124,7 +287,7 @@ impl Engine {
             };
             self.model.forward_token(
                 tok,
-                &mut seq.cache,
+                seq.kv.as_dyn(),
                 sp,
                 &mut seq.scratch,
                 &mut seq.stats,
@@ -132,6 +295,11 @@ impl Engine {
             );
         }
         seq.prefilled = true;
+        if seq.finish_override.is_none() {
+            if let (Some(mgr), SeqKv::Paged(p)) = (&self.kv, &seq.kv) {
+                mgr.insert_prefix(&seq.prompt_tokens, p);
+            }
+        }
     }
 
     /// One decode step for a single sequence (assumes prefilled). Steady
@@ -147,9 +315,16 @@ impl Engine {
         if seq.finished() {
             return;
         }
+        if !self.reserve_seq(seq) {
+            // Pool exhausted and nothing evictable: stop early rather than
+            // panic. The coordinator avoids this by preempting before the
+            // step; standalone engine users see a `cache_full` finish.
+            seq.finish_override = Some(FinishReason::CacheFull);
+            return;
+        }
         self.model.forward_token(
             next,
-            &mut seq.cache,
+            seq.kv.as_dyn(),
             self.sparsifier.as_ref(),
             &mut seq.scratch,
             &mut seq.stats,
@@ -285,6 +460,10 @@ mod tests {
         let long_prompt: String = "x".repeat(1000);
         let seq = e.admit(0, &long_prompt, 16, Sampling::Greedy);
         assert!(seq.prompt_tokens.len() + 16 <= e.model.cfg.max_seq);
+        assert_eq!(
+            e.worst_case_tokens(&long_prompt, 16),
+            seq.prompt_tokens.len() + 16
+        );
     }
 
     #[test]
@@ -296,5 +475,43 @@ mod tests {
         e.prefill(&mut seq);
         let d = seq.stats.density();
         assert!(d > 0.05 && d < 0.95, "density {d}");
+    }
+
+    #[test]
+    fn finish_reason_length_vs_cache_full() {
+        // Flat engine completing normally reports `length`.
+        let e = engine(None);
+        let mut seq = e.admit(0, "abc", 4, Sampling::Greedy);
+        e.prefill(&mut seq);
+        while !seq.finished() {
+            e.decode_one(&mut seq);
+        }
+        assert_eq!(seq.finish_reason(), FinishReason::Length);
+
+        // A paged engine with a starved pool stops early with `cache_full`.
+        let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+        let pe = Engine::paged(
+            model,
+            Arc::new(Dense),
+            EngineCfg {
+                threads: 1,
+                ..EngineCfg::default()
+            },
+            &KvCfg {
+                pool_blocks: 2,
+                block_size: 4,
+                prefix_cache: true,
+            },
+        );
+        let mut seq = pe.admit(0, "abcd", 32, Sampling::Greedy);
+        pe.prefill(&mut seq);
+        while !seq.finished() {
+            pe.decode_one(&mut seq);
+        }
+        assert_eq!(seq.finish_reason(), FinishReason::CacheFull);
+        assert!(
+            seq.generated.len() < 32,
+            "pool of 8 positions cannot satisfy max_new=32"
+        );
     }
 }

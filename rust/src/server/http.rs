@@ -78,11 +78,7 @@ pub fn response(status: u16, reason: &str, body: &str) -> String {
 pub fn route(coord: &Arc<Coordinator>, req: &HttpRequest) -> (u16, &'static str, String) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/health") => (200, "OK", r#"{"status":"ok"}"#.to_string()),
-        ("GET", "/metrics") => (
-            200,
-            "OK",
-            coord.metrics.lock().unwrap().to_json().to_string_pretty(),
-        ),
+        ("GET", "/metrics") => (200, "OK", coord.metrics_json().to_string_pretty()),
         ("POST", "/generate") => {
             let parsed = Json::parse(&req.body)
                 .map_err(|e| e.to_string())

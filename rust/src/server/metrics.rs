@@ -16,6 +16,15 @@ pub struct Metrics {
     pub per_token_ms: Summary,
     pub macs_kept: u64,
     pub macs_dense: u64,
+    /// Sequences preempted and requeued for KV pool pressure.
+    pub preemptions_total: u64,
+    /// Paged-KV pool gauges (updated by the coordinator at report time;
+    /// stay 0 for flat-cache engines).
+    pub blocks_total: u64,
+    pub blocks_in_use: u64,
+    /// Prompt tokens served from / missed by the prefix cache.
+    pub prefix_hit_tokens: u64,
+    pub prefix_miss_tokens: u64,
 }
 
 impl Metrics {
@@ -31,7 +40,22 @@ impl Metrics {
             per_token_ms: Summary::new(4096),
             macs_kept: 0,
             macs_dense: 0,
+            preemptions_total: 0,
+            blocks_total: 0,
+            blocks_in_use: 0,
+            prefix_hit_tokens: 0,
+            prefix_miss_tokens: 0,
         }
+    }
+
+    /// Fraction of prompt tokens served from the prefix cache (0.0 before
+    /// any prompt has been seen).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hit_tokens + self.prefix_miss_tokens;
+        if total == 0 {
+            return 0.0;
+        }
+        self.prefix_hit_tokens as f64 / total as f64
     }
 
     /// Decode throughput over the server's lifetime (tokens/s).
@@ -67,6 +91,21 @@ impl Metrics {
                 "per_token_ms_p50",
                 Json::Num(self.per_token_ms.percentile(0.5)),
             ),
+            ("blocks_total", Json::Num(self.blocks_total as f64)),
+            ("blocks_in_use", Json::Num(self.blocks_in_use as f64)),
+            (
+                "prefix_hit_tokens",
+                Json::Num(self.prefix_hit_tokens as f64),
+            ),
+            (
+                "prefix_miss_tokens",
+                Json::Num(self.prefix_miss_tokens as f64),
+            ),
+            ("prefix_hit_rate", Json::Num(self.prefix_hit_rate())),
+            (
+                "preemptions_total",
+                Json::Num(self.preemptions_total as f64),
+            ),
         ])
     }
 }
@@ -100,5 +139,33 @@ mod tests {
         assert_eq!(j.get("requests_total").as_usize(), Some(3));
         assert_eq!(j.get("tokens_generated").as_usize(), Some(42));
         assert!(j.get("throughput_tok_s").as_f64().is_some());
+        assert_eq!(j.get("blocks_total").as_usize(), Some(0));
+        assert_eq!(j.get("preemptions_total").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn prefix_hit_rate_derivation() {
+        let mut m = Metrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0, "no prompts yet");
+        m.prefix_hit_tokens = 75;
+        m.prefix_miss_tokens = 25;
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((m.to_json().get("prefix_hit_rate").as_f64().unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_robust_below_window_capacity() {
+        // A Summary with capacity 1024 but only 3 samples must interpolate
+        // over those 3 values, never uninitialized window slots.
+        let mut m = Metrics::new();
+        for x in [10.0, 20.0, 30.0] {
+            m.per_token_ms.add(x);
+        }
+        let p99 = m.per_token_ms.percentile(0.99);
+        assert!(
+            (10.0..=30.0).contains(&p99) && p99 > 29.0,
+            "p99 of 3 samples should sit just under the max, got {p99}"
+        );
+        assert_eq!(m.per_token_ms.percentile(0.0), 10.0);
     }
 }

@@ -13,6 +13,9 @@ pub struct GenRequest {
     pub sampling: Sampling,
     /// Wall-clock admission timestamp (for queue-latency metrics).
     pub arrived: Instant,
+    /// Set when the scheduler preempted this request's sequence for pool
+    /// pressure and requeued it (surfaces as `preempted->resumed`).
+    pub preempted: bool,
 }
 
 impl GenRequest {
@@ -23,6 +26,7 @@ impl GenRequest {
             max_new,
             sampling: Sampling::Greedy,
             arrived: Instant::now(),
+            preempted: false,
         }
     }
 
@@ -45,6 +49,7 @@ impl GenRequest {
                 Sampling::Greedy
             },
             arrived: Instant::now(),
+            preempted: false,
         })
     }
 }
@@ -60,6 +65,11 @@ pub struct GenResponse {
     pub total_ms: f64,
     /// Achieved density over this request's linear projections.
     pub density: f64,
+    /// Why generation stopped: `length`, `cache_full`, or
+    /// `preempted->resumed` (see [`crate::server::engine::FinishReason`]).
+    pub finish_reason: String,
+    /// Prompt tokens served from the shared prefix cache (0 without one).
+    pub prefix_hit_tokens: usize,
 }
 
 impl GenResponse {
@@ -72,6 +82,8 @@ impl GenResponse {
             ("queue_ms", Json::Num(self.queue_ms)),
             ("total_ms", Json::Num(self.total_ms)),
             ("density", Json::Num(self.density)),
+            ("finish_reason", Json::Str(self.finish_reason.clone())),
+            ("prefix_hit_tokens", Json::Num(self.prefix_hit_tokens as f64)),
         ])
     }
 }
@@ -115,9 +127,13 @@ mod tests {
             queue_ms: 0.1,
             total_ms: 5.0,
             density: 0.55,
+            finish_reason: "length".into(),
+            prefix_hit_tokens: 4,
         };
         let j = r.to_json();
         assert_eq!(j.get("text").as_str(), Some("46."));
         assert_eq!(j.get("generated_tokens").as_usize(), Some(3));
+        assert_eq!(j.get("finish_reason").as_str(), Some("length"));
+        assert_eq!(j.get("prefix_hit_tokens").as_usize(), Some(4));
     }
 }

@@ -212,6 +212,23 @@ mod tests {
     }
 
     #[test]
+    fn summary_percentiles_with_few_samples() {
+        // Fewer samples than the window capacity: percentiles interpolate
+        // over exactly the recorded values, never uninitialized slots.
+        let mut s = Summary::new(1024);
+        for x in [3.0, 1.0, 2.0] {
+            s.add(x);
+        }
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(1.0), 3.0);
+        assert!((s.percentile(0.5) - 2.0).abs() < 1e-12);
+        let p99 = s.percentile(0.99);
+        assert!((2.0..=3.0).contains(&p99) && p99 > 2.9, "p99 {p99}");
+        // Empty summary is defined (0.0), not a panic.
+        assert_eq!(Summary::new(8).percentile(0.99), 0.0);
+    }
+
+    #[test]
     fn summary_window() {
         let mut s = Summary::new(4);
         for x in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0] {

@@ -1,0 +1,434 @@
+//! Paged KV-cache subsystem: pool refcount invariants under concurrency,
+//! bit-identical paged-vs-flat attention, prefix-cache reuse, and
+//! scheduler preemption (ISSUE 2 acceptance criteria).
+
+use std::sync::Arc;
+use wisparse::kv::{BlockPool, KvCfg, KvLayout, KvManager, KvSeq, PagedSeq};
+use wisparse::model::kv_cache::KvCache;
+use wisparse::model::sampler::Sampling;
+use wisparse::model::transformer::{ForwardStats, Model, Scratch};
+use wisparse::model::ModelConfig;
+use wisparse::server::batcher::BatcherCfg;
+use wisparse::server::engine::{Engine, EngineCfg, FinishReason};
+use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+use wisparse::sparsity::{Dense, Sparsifier};
+use wisparse::util::rng::Pcg64;
+
+/// Property: under concurrent alloc/retain/release from many threads, the
+/// pool never double-frees (that panics) and never leaks — after every
+/// thread drops its references, all blocks are free and lifetime allocs
+/// equal lifetime frees.
+#[test]
+fn pool_refcount_invariant_under_concurrency() {
+    let pool = BlockPool::new(
+        KvLayout {
+            n_layers: 1,
+            d_model: 4,
+            block_size: 2,
+        },
+        64,
+    );
+    let n_threads = 8;
+    let iters = 2000;
+    std::thread::scope(|s| {
+        for t in 0..n_threads {
+            let pool = Arc::clone(&pool);
+            s.spawn(move || {
+                let mut rng = Pcg64::new(0xB10C + t as u64);
+                // Per-thread multiset of held references.
+                let mut held: Vec<u32> = Vec::new();
+                for _ in 0..iters {
+                    match rng.below(4) {
+                        0 | 1 => {
+                            if let Some(id) = pool.try_alloc() {
+                                held.push(id);
+                            }
+                        }
+                        2 => {
+                            if !held.is_empty() {
+                                // Extra ref on a random held block.
+                                let id = held[rng.below(held.len())];
+                                pool.retain(id);
+                                held.push(id);
+                            }
+                        }
+                        _ => {
+                            if !held.is_empty() {
+                                let i = rng.below(held.len());
+                                let id = held.swap_remove(i);
+                                pool.release(id);
+                            }
+                        }
+                    }
+                }
+                for id in held {
+                    pool.release(id);
+                }
+            });
+        }
+    });
+    assert_eq!(pool.blocks_in_use(), 0, "leak: blocks still referenced");
+    assert_eq!(pool.blocks_free(), 64);
+    let (allocs, frees) = pool.counters();
+    assert_eq!(allocs, frees, "every allocated block was freed exactly once");
+    assert!(allocs > 0, "the property test actually allocated");
+}
+
+fn teal(model: &Model, tau: f32) -> Arc<dyn Sparsifier> {
+    Arc::new(ScoredSparsifier::new(
+        "teal",
+        (0..model.cfg.n_layers * 7)
+            .map(|_| ScoredLayer { ga: None, tau })
+            .collect(),
+    ))
+}
+
+/// Decode `tokens` twice — flat slab vs paged pool — and require logits to
+/// be bit-identical at every position. The paged run uses a block size
+/// that doesn't divide the sequence length, so chunk boundaries are
+/// exercised mid-attention.
+fn assert_paged_matches_flat(model: &Model, sp: &dyn Sparsifier, tokens: &[usize], bs: usize) {
+    let mgr = KvManager::new(
+        &model.cfg,
+        &KvCfg {
+            pool_blocks: model.cfg.max_seq.div_ceil(bs) + 2,
+            block_size: bs,
+            prefix_cache: true,
+        },
+    );
+    let mut flat = KvCache::new(&model.cfg);
+    let (mut paged, hit) = mgr.acquire(tokens);
+    assert_eq!(hit, 0, "cold cache");
+    let mut scratch_a = Scratch::new(&model.cfg);
+    let mut scratch_b = Scratch::new(&model.cfg);
+    let mut stats = ForwardStats::default();
+    let mut la: Vec<f32> = Vec::new();
+    let mut lb: Vec<f32> = Vec::new();
+    for (pos, &t) in tokens.iter().enumerate() {
+        model.forward_token(t, &mut flat, sp, &mut scratch_a, &mut stats, &mut la);
+        assert!(mgr.try_reserve(&mut paged));
+        model.forward_token(t, &mut paged, sp, &mut scratch_b, &mut stats, &mut lb);
+        for v in 0..model.cfg.vocab_size {
+            assert_eq!(
+                la[v].to_bits(),
+                lb[v].to_bits(),
+                "logit mismatch at pos {pos} vocab {v}: {} vs {}",
+                la[v],
+                lb[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn paged_attention_bit_identical_to_flat() {
+    let model = Model::synthetic(ModelConfig::preset("nano").unwrap(), 42);
+    let mut rng = Pcg64::new(7);
+    let tokens: Vec<usize> = (0..37).map(|_| rng.below(model.cfg.vocab_size)).collect();
+    // Dense and sparse execution, block sizes that straddle the length.
+    for bs in [3usize, 16, 64] {
+        assert_paged_matches_flat(&model, &Dense, &tokens, bs);
+    }
+    let sp = teal(&model, 0.4);
+    assert_paged_matches_flat(&model, sp.as_ref(), &tokens, 5);
+}
+
+#[test]
+fn paged_attention_bit_identical_on_larger_model() {
+    let model = Model::synthetic(ModelConfig::preset("qwen-micro").unwrap(), 11);
+    let mut rng = Pcg64::new(13);
+    let tokens: Vec<usize> = (0..21).map(|_| rng.below(model.cfg.vocab_size)).collect();
+    assert_paged_matches_flat(&model, &Dense, &tokens, 4);
+}
+
+/// A prompt served from the prefix cache must produce bit-identical logits
+/// to the same prompt computed cold: the shared pages ARE the cold run's
+/// pages.
+#[test]
+fn prefix_cache_hit_is_bit_identical() {
+    let model = Model::synthetic(ModelConfig::preset("nano").unwrap(), 42);
+    let cfg = &model.cfg;
+    let bs = 4usize;
+    let mgr = KvManager::new(
+        cfg,
+        &KvCfg {
+            pool_blocks: 64,
+            block_size: bs,
+            prefix_cache: true,
+        },
+    );
+    let mut rng = Pcg64::new(3);
+    let prompt: Vec<usize> = (0..19).map(|_| rng.below(cfg.vocab_size)).collect();
+
+    // Cold run; publish the prompt's full blocks.
+    let (mut cold, hit) = mgr.acquire(&prompt);
+    assert_eq!(hit, 0);
+    let mut scratch = Scratch::new(cfg);
+    let mut stats = ForwardStats::default();
+    let mut cold_logits: Vec<f32> = Vec::new();
+    for &t in &prompt {
+        assert!(mgr.try_reserve(&mut cold));
+        model.forward_token(t, &mut cold, &Dense, &mut scratch, &mut stats, &mut cold_logits);
+    }
+    mgr.insert_prefix(&prompt, &cold);
+
+    // Warm run: adopts (19-1)/4*4 = 16 tokens, computes the last 3.
+    let (mut warm, hit) = mgr.acquire(&prompt);
+    assert_eq!(hit, 16);
+    assert_eq!(warm.seq_len(), 16);
+    // Shared blocks are physically the same pages.
+    assert_eq!(&cold.blocks()[..4], warm.blocks());
+    let mut scratch2 = Scratch::new(cfg);
+    let mut warm_logits: Vec<f32> = Vec::new();
+    for &t in &prompt[16..] {
+        assert!(mgr.try_reserve(&mut warm));
+        model.forward_token(t, &mut warm, &Dense, &mut scratch2, &mut stats, &mut warm_logits);
+    }
+    for v in 0..cfg.vocab_size {
+        assert_eq!(
+            cold_logits[v].to_bits(),
+            warm_logits[v].to_bits(),
+            "prefix-cached decode diverged at vocab {v}"
+        );
+    }
+    let s = mgr.stats();
+    assert_eq!(s.prefix_hit_tokens, 16);
+}
+
+/// Engine-level prefix sharing: identical prompts produce identical text,
+/// the second sequence skips most of its prefill, and pages are shared.
+#[test]
+fn engine_prefix_sharing_skips_prefill_compute() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let engine = Engine::paged(
+        Arc::clone(&model),
+        teal(&model, 0.3),
+        EngineCfg {
+            threads: 1,
+            ..EngineCfg::default()
+        },
+        &KvCfg {
+            pool_blocks: 64,
+            block_size: 4,
+            prefix_cache: true,
+        },
+    );
+    let prompt = "a shared system prompt for everyone";
+    let run = |engine: &Engine, id: u64| {
+        let mut seq = engine.admit(id, prompt, 8, Sampling::Greedy);
+        engine.prefill(&mut seq);
+        while !seq.finished() {
+            engine.decode_one(&mut seq);
+        }
+        seq
+    };
+    let a = run(&engine, 1);
+    assert_eq!(a.prefix_hit_tokens, 0);
+    let b = run(&engine, 2);
+    let n = prompt.len();
+    assert_eq!(b.prefix_hit_tokens, (n - 1) / 4 * 4, "warm prompt hits cache");
+    assert_eq!(a.text(), b.text(), "shared prefix changed decoding");
+    // The skipped tokens really skipped compute: fewer forward tokens.
+    assert_eq!(
+        b.stats.tokens + b.prefix_hit_tokens as u64,
+        a.stats.tokens,
+        "hit tokens were not recomputed"
+    );
+    assert_eq!(b.finish_reason(), FinishReason::Length);
+}
+
+/// Pool pressure with two co-resident sequences: the scheduler preempts
+/// the youngest, requeues it at the head of the line, and the resumed
+/// request completes with `preempted->resumed` while the older request
+/// finishes normally.
+#[test]
+fn coordinator_preempts_youngest_and_resumes() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 91));
+    let engine = Arc::new(Engine::paged(
+        model,
+        Arc::new(Dense),
+        EngineCfg {
+            threads: 2,
+            ..EngineCfg::default()
+        },
+        &KvCfg {
+            pool_blocks: 16,
+            block_size: 4,
+            prefix_cache: true,
+        },
+    ));
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 4,
+                max_queue: 32,
+            },
+        },
+    );
+    // Two requests sharing a 16-token prompt, each needing 12 blocks worst
+    // case (16 prompt + 32 new at bs=4) against a 16-block pool: admission
+    // lets both in (B shares 3 prefix blocks), decode exhausts the pool,
+    // B (younger) is preempted and resumed after A completes.
+    let prompt = "abcdefghijklmnop"; // 16 one-byte tokens
+    let rx_a = coord.submit(prompt, 32, Sampling::Greedy).unwrap();
+    let rx_b = coord.submit(prompt, 32, Sampling::Greedy).unwrap();
+    // Both queued before the scheduler starts: deterministic co-admission.
+    let sched = Arc::clone(&coord);
+    let handle = std::thread::spawn(move || sched.run_scheduler());
+    let resp_a = rx_a.recv().unwrap();
+    let resp_b = rx_b.recv().unwrap();
+    assert_eq!(resp_a.n_generated, 32);
+    assert_eq!(resp_b.n_generated, 32);
+    assert_eq!(resp_a.finish_reason, "length");
+    assert_eq!(resp_b.finish_reason, "preempted->resumed");
+    assert_eq!(resp_a.text, resp_b.text, "resume changed decoding");
+    // Eviction skips blocks still mapped by live sequences, so the cached
+    // prefix survives the pressure and the resumed request hits it again.
+    assert_eq!(resp_b.prefix_hit_tokens, 12);
+    let m = coord.metrics_json();
+    assert!(
+        m.get("preemptions_total").as_usize().unwrap() >= 1,
+        "pool pressure must have preempted"
+    );
+    // Both of B's admissions (initial + resumed) shared A's prompt blocks:
+    // 12 of 16 prompt tokens at bs=4, each time.
+    assert!(
+        m.get("prefix_hit_tokens").as_usize().unwrap() >= 24,
+        "both admissions of the twin prompt hit the prefix cache"
+    );
+    assert_eq!(m.get("blocks_total").as_usize(), Some(16));
+    coord.shutdown();
+    handle.join().unwrap();
+}
+
+/// Oversized single request: too big for the whole pool, still makes
+/// progress (force admission) and reports `cache_full` instead of hanging
+/// or being silently truncated as `length`.
+#[test]
+fn oversized_request_finishes_cache_full() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 92));
+    let engine = Arc::new(Engine::paged(
+        model,
+        Arc::new(Dense),
+        EngineCfg {
+            threads: 1,
+            ..EngineCfg::default()
+        },
+        &KvCfg {
+            pool_blocks: 3,
+            block_size: 4,
+            prefix_cache: false,
+        },
+    ));
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 2,
+                max_queue: 8,
+            },
+        },
+    );
+    let sched = Arc::clone(&coord);
+    let handle = std::thread::spawn(move || sched.run_scheduler());
+    // 8 prompt tokens + 64 requested >> 12 pool positions.
+    let resp = coord
+        .submit_blocking("abcdefgh", 64, Sampling::Greedy)
+        .unwrap();
+    assert_eq!(resp.finish_reason, "cache_full");
+    assert!(
+        resp.n_generated < 64,
+        "generated {} tokens from a 12-position pool",
+        resp.n_generated
+    );
+    assert!(resp.n_generated > 0, "still produced output");
+    coord.shutdown();
+    handle.join().unwrap();
+}
+
+/// Paged decode through the engine equals the flat engine's output exactly
+/// (text level), sparse path included.
+#[test]
+fn paged_engine_text_equals_flat_engine() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let sp = teal(&model, 0.3);
+    let flat = Engine::new(
+        Arc::clone(&model),
+        Arc::clone(&sp),
+        EngineCfg {
+            threads: 1,
+            ..EngineCfg::default()
+        },
+    );
+    let paged = Engine::paged(
+        Arc::clone(&model),
+        sp,
+        EngineCfg {
+            threads: 1,
+            ..EngineCfg::default()
+        },
+        &KvCfg {
+            pool_blocks: 64,
+            block_size: 8,
+            prefix_cache: true,
+        },
+    );
+    for prompt in ["12+34=", "the sun ", "abc"] {
+        let (a, _) = flat.run_to_completion(prompt, 12, Sampling::Greedy);
+        let (b, _) = paged.run_to_completion(prompt, 12, Sampling::Greedy);
+        assert_eq!(a, b, "paged engine diverged on {prompt:?}");
+    }
+}
+
+/// PagedSeq is a drop-release RAII handle: engine sequences going out of
+/// scope return every page, including shared prefix pages.
+#[test]
+fn dropped_sequences_return_all_pages() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let engine = Engine::paged(
+        Arc::clone(&model),
+        Arc::new(Dense),
+        EngineCfg {
+            threads: 1,
+            ..EngineCfg::default()
+        },
+        &KvCfg {
+            pool_blocks: 32,
+            block_size: 4,
+            prefix_cache: true,
+        },
+    );
+    let mgr = engine.kv.as_ref().unwrap();
+    {
+        let mut s1 = engine.admit(1, "shared prefix here", 4, Sampling::Greedy);
+        engine.prefill(&mut s1);
+        let mut s2 = engine.admit(2, "shared prefix here", 4, Sampling::Greedy);
+        engine.prefill(&mut s2);
+        assert!(mgr.blocks_in_use() > 0);
+    }
+    // Sequences dropped: only the radix tree's cached prompt blocks remain.
+    let cached = mgr.blocks_in_use();
+    assert_eq!(
+        cached,
+        "shared prefix here".len() / 4,
+        "exactly the cached full prompt blocks stay resident"
+    );
+    // An unrelated flood evicts them when it needs the room.
+    let mut big = PagedSeq::new(Arc::clone(mgr.pool()), 256);
+    let mut filled = 0;
+    while mgr.try_reserve(&mut big) {
+        // Reserving walks block by block; advance a full block each time.
+        for _ in 0..4 {
+            big.advance();
+        }
+        filled += 1;
+        if filled == 32 {
+            break;
+        }
+    }
+    assert_eq!(filled, 32, "eviction reclaimed every cached block");
+    drop(big);
+    assert_eq!(mgr.blocks_in_use(), 0);
+}

@@ -13,12 +13,18 @@ use wisparse::util::json::Json;
 
 fn start_server() -> (Arc<Coordinator>, String) {
     let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 201));
-    let engine = Arc::new(Engine::new(
+    // The serving path runs on the paged KV pool with prefix sharing on.
+    let engine = Arc::new(Engine::paged(
         model,
         Arc::new(Dense),
         EngineCfg {
             threads: 2,
             ..EngineCfg::default()
+        },
+        &wisparse::kv::KvCfg {
+            pool_blocks: 128,
+            block_size: 8,
+            prefix_cache: true,
         },
     ));
     let coord = Coordinator::new(
@@ -92,12 +98,17 @@ fn health_metrics_generate_roundtrip() {
     let j = Json::parse(&body).unwrap();
     assert_eq!(j.get("generated_tokens").as_usize(), Some(6));
     assert_eq!(j.get("text").as_str().map(|s| s.len()), Some(6));
+    assert_eq!(j.get("finish_reason").as_str(), Some("length"));
 
     let (status, body) = request(&addr, "GET", "/metrics", "");
     assert_eq!(status, 200);
     let m = Json::parse(&body).unwrap();
     assert_eq!(m.get("requests_total").as_usize(), Some(1));
     assert_eq!(m.get("tokens_generated").as_usize(), Some(6));
+    assert_eq!(m.get("blocks_total").as_usize(), Some(128));
+    assert!(m.get("blocks_in_use").as_usize().is_some());
+    assert!(m.get("prefix_hit_rate").as_f64().is_some());
+    assert_eq!(m.get("preemptions_total").as_usize(), Some(0));
 
     // Errors.
     let (status, _) = request(&addr, "POST", "/generate", "not json");
