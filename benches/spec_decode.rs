@@ -1,0 +1,233 @@
+//! Self-speculative decoding A/B bench: baseline decode tok/s vs
+//! speculative decode (high-sparsity draft + layer-major production verify
+//! chunk) on a deliberately memory-heavy synthetic model, where the verify
+//! chunk's weight-stream amortization is the mechanism under test. Writes
+//! `results/bench_spec.csv` (the sweep) and `BENCH_spec.json` (the A/B row
+//! at the default config, plus a self-consistency sanity row that must hit
+//! 100% acceptance).
+//!
+//!     cargo bench --bench spec_decode
+
+use std::sync::Arc;
+use wisparse::model::sampler::Sampling;
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::report::csv::{f, write_csv};
+use wisparse::server::engine::{Engine, EngineCfg, SpecCfg, SpecEngine};
+use wisparse::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+use wisparse::sparsity::Sparsifier;
+use wisparse::util::json::Json;
+use wisparse::util::timer::Stopwatch;
+
+/// A wider/deeper profile than the paper presets so the projection weights
+/// (~32 MB) dwarf typical L2: token-major decode re-streams the whole model
+/// per token, which is exactly the regime speculative verify amortizes.
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        name: "spec-bench".to_string(),
+        vocab_size: 256,
+        d_model: 256,
+        n_layers: 10,
+        n_heads: 4,
+        ffn_dim: 704,
+        max_seq: 192,
+        rope_base: 10000.0,
+        rmsnorm_eps: 1e-5,
+    }
+}
+
+fn teal(model: &Model, tau: f32) -> Arc<dyn Sparsifier> {
+    Arc::new(ScoredSparsifier::new(
+        "teal",
+        (0..model.cfg.n_layers * 7)
+            .map(|_| ScoredLayer { ga: None, tau })
+            .collect(),
+    ))
+}
+
+const PROMPTS: [&str; 3] = ["the quick brown fox ", "12 + 34 = ", "once upon a time "];
+const MAX_NEW: usize = 96;
+
+struct RunResult {
+    tok_s: f64,
+    density: f64,
+    acceptance: f64,
+    tokens_per_round: f64,
+    texts: Vec<String>,
+}
+
+/// Baseline: plain sequential decode at production sparsity (prefill
+/// excluded from the timed section).
+fn baseline_run(engine: &Arc<Engine>) -> RunResult {
+    let mut texts = Vec::new();
+    let mut secs = 0.0f64;
+    let mut tokens = 0usize;
+    let mut density = 0.0f64;
+    for (i, prompt) in PROMPTS.iter().enumerate() {
+        let mut seq = engine.admit(i as u64, prompt, MAX_NEW, Sampling::Greedy);
+        engine.prefill(&mut seq);
+        let sw = Stopwatch::start();
+        while !seq.finished() {
+            engine.decode_one(&mut seq);
+        }
+        secs += sw.elapsed_secs();
+        tokens += seq.generated.len();
+        density += seq.stats.density();
+        texts.push(seq.text());
+    }
+    RunResult {
+        tok_s: tokens as f64 / secs,
+        density: density / PROMPTS.len() as f64,
+        acceptance: 0.0,
+        tokens_per_round: 1.0,
+        texts,
+    }
+}
+
+/// Speculative: draft at `draft_tau`, verify at production sparsity in
+/// layer-major chunks. Greedy output is asserted token-identical to the
+/// baseline, so the bench doubles as an end-to-end differential smoke.
+fn spec_run(engine: &Arc<Engine>, draft: Arc<dyn Sparsifier>, k: usize) -> RunResult {
+    let spec = SpecEngine::new(
+        Arc::clone(engine),
+        draft,
+        SpecCfg {
+            k,
+            ..SpecCfg::default()
+        },
+    );
+    let mut texts = Vec::new();
+    let mut secs = 0.0f64;
+    let mut tokens = 0usize;
+    let mut density = 0.0f64;
+    let (mut drafted, mut accepted, mut rounds) = (0u64, 0u64, 0u64);
+    for (i, prompt) in PROMPTS.iter().enumerate() {
+        let mut seq = spec.admit(i as u64, prompt, MAX_NEW, Sampling::Greedy);
+        spec.prefill(&mut seq);
+        let sw = Stopwatch::start();
+        while !seq.finished() {
+            spec.spec_round(&mut seq);
+        }
+        secs += sw.elapsed_secs();
+        tokens += seq.generated.len();
+        density += seq.stats.density();
+        drafted += seq.spec.drafted;
+        accepted += seq.spec.accepted;
+        rounds += seq.spec.rounds;
+        texts.push(seq.text());
+    }
+    RunResult {
+        tok_s: tokens as f64 / secs,
+        density: density / PROMPTS.len() as f64,
+        acceptance: if drafted == 0 {
+            0.0
+        } else {
+            accepted as f64 / drafted as f64
+        },
+        tokens_per_round: tokens as f64 / rounds.max(1) as f64,
+        texts,
+    }
+}
+
+fn main() {
+    let cfg = bench_config();
+    println!(
+        "== speculative decode: {} ({} params, {} prompts x {MAX_NEW} tokens) ==",
+        cfg.name,
+        cfg.n_params(),
+        PROMPTS.len()
+    );
+    let model = Arc::new(Model::synthetic(cfg, 77));
+    let prod_tau = 0.45f32; // the ~50%-density production config other benches use
+    let prod = teal(&model, prod_tau);
+    let engine = Arc::new(Engine::new(
+        Arc::clone(&model),
+        Arc::clone(&prod),
+        EngineCfg::default(),
+    ));
+    let base = baseline_run(&engine);
+    println!(
+        "baseline          : {:>8.1} tok/s  (density {:.3})",
+        base.tok_s, base.density
+    );
+
+    // Sweep: (draft tau, k). The first row is the self-consistency sanity
+    // check (draft == production must be fully accepted); the (0.9, 4) row
+    // is the default `--speculative` configuration.
+    let sweep: [(f32, usize); 5] = [(prod_tau, 4), (0.9, 4), (0.9, 8), (1.3, 4), (1.3, 8)];
+    let default_row = 1usize;
+    let mut csv = Vec::new();
+    let mut results = Vec::new();
+    for &(draft_tau, k) in &sweep {
+        let r = spec_run(&engine, teal(&model, draft_tau), k);
+        for (a, b) in r.texts.iter().zip(&base.texts) {
+            assert_eq!(a, b, "speculative decode diverged from baseline");
+        }
+        let speedup = r.tok_s / base.tok_s;
+        println!(
+            "spec tau={draft_tau:<4} k={k}: {:>8.1} tok/s  ({speedup:.2}x, accept {:.3}, {:.2} tok/round)",
+            r.tok_s, r.acceptance, r.tokens_per_round
+        );
+        csv.push(vec![
+            format!("{draft_tau}"),
+            k.to_string(),
+            f(r.tok_s),
+            f(speedup),
+            f(r.acceptance),
+            f(r.tokens_per_round),
+            f(r.density),
+        ]);
+        results.push(r);
+    }
+    assert!(
+        results[0].acceptance > 0.999,
+        "self-consistency: a draft identical to production must be fully \
+         accepted (got {})",
+        results[0].acceptance
+    );
+    write_csv(
+        std::path::Path::new("results/bench_spec.csv"),
+        &[
+            "draft_tau",
+            "k",
+            "tokens_per_s",
+            "speedup",
+            "acceptance_rate",
+            "tokens_per_round",
+            "density",
+        ],
+        &csv,
+    )
+    .expect("csv");
+    println!("-> results/bench_spec.csv");
+
+    // Headline A/B row: default config vs baseline, plus the sanity row.
+    let best = results
+        .iter()
+        .zip(&sweep)
+        .max_by(|a, b| a.0.tok_s.partial_cmp(&b.0.tok_s).expect("finite"))
+        .expect("nonempty sweep");
+    let dflt = &results[default_row];
+    let report = Json::obj(vec![
+        ("bench", Json::Str("spec_decode".into())),
+        ("model", Json::Str("spec-bench-d256-l10".into())),
+        ("prompts", Json::Num(PROMPTS.len() as f64)),
+        ("max_new", Json::Num(MAX_NEW as f64)),
+        ("production_tau", Json::Num(prod_tau as f64)),
+        ("draft_tau", Json::Num(sweep[default_row].0 as f64)),
+        ("spec_k", Json::Num(sweep[default_row].1 as f64)),
+        ("baseline_tok_s", Json::Num(base.tok_s)),
+        ("spec_tok_s", Json::Num(dflt.tok_s)),
+        ("speedup", Json::Num(dflt.tok_s / base.tok_s)),
+        ("acceptance_rate", Json::Num(dflt.acceptance)),
+        ("tokens_per_round", Json::Num(dflt.tokens_per_round)),
+        ("sanity_acceptance_rate", Json::Num(results[0].acceptance)),
+        ("best_tok_s", Json::Num(best.0.tok_s)),
+        ("best_speedup", Json::Num(best.0.tok_s / base.tok_s)),
+        ("best_draft_tau", Json::Num(best.1 .0 as f64)),
+        ("best_k", Json::Num(best.1 .1 as f64)),
+        ("greedy_output_identical", Json::Num(1.0)),
+    ]);
+    std::fs::write("BENCH_spec.json", report.to_string_pretty()).expect("BENCH_spec.json");
+    println!("-> BENCH_spec.json");
+}

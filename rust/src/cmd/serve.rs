@@ -4,7 +4,7 @@ use std::path::Path;
 use std::sync::Arc;
 use wisparse::calib::ModelCalib;
 use wisparse::server::batcher::BatcherCfg;
-use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::server::engine::{Engine, EngineCfg, SpecCfg, SpecEngine};
 use wisparse::server::{Coordinator, CoordinatorCfg};
 use wisparse::util::cli::Args;
 
@@ -22,6 +22,9 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         .opt("kv-pool-blocks", "256", "paged-KV pool size in blocks")
         .opt("kv-block-size", "16", "positions per KV block")
         .opt("prefix-cache", "on", "radix-tree prompt prefix sharing (on|off)")
+        .opt("draft-sparsity", "0.75", "draft sparsity target for --speculative")
+        .opt("spec-k", "4", "initial speculative draft-chain length")
+        .flag("speculative", "self-speculative decoding (high-sparsity draft, production verify)")
         .flag("synthetic", "use random weights (no artifacts needed)")
         .parse(argv)?;
     let artifacts = Path::new(args.get("artifacts"));
@@ -31,19 +34,27 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         args.get_flag("synthetic"),
     )?);
     let method = args.get("method");
+    let speculative = args.get_flag("speculative");
+    // Calibration activations feed both the production plan (non-dense
+    // methods) and the speculative draft plan.
+    let search_cfg =
+        common::search_cfg(args.get("budget"), wisparse::util::threadpool::num_threads())?;
+    let calib = if method != "dense" || speculative {
+        let calib_set = common::load_calib(artifacts, args.get("model"), 8, 96);
+        Some(ModelCalib::collect(&model, &calib_set))
+    } else {
+        None
+    };
     let sparsifier = if method == "dense" {
         Arc::new(wisparse::sparsity::Dense) as Arc<dyn wisparse::sparsity::Sparsifier>
     } else {
-        let calib_set = common::load_calib(artifacts, args.get("model"), 8, 96);
-        let calib = ModelCalib::collect(&model, &calib_set);
-        let cfg = common::search_cfg(args.get("budget"), wisparse::util::threadpool::num_threads())?;
         let plan = common::plan_for(
             artifacts,
             &model,
-            &calib,
+            calib.as_ref().expect("calib collected for sparse methods"),
             method,
             args.get_f64("target")?,
-            &cfg,
+            &search_cfg,
             true,
         )?;
         common::sparsifier_for(&model, method, &plan)?
@@ -54,20 +65,47 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         prefix_cache: args.get("prefix-cache") != "off",
     };
     let engine = Arc::new(Engine::paged(
-        model,
+        Arc::clone(&model),
         sparsifier,
         EngineCfg::default(),
         &kv_cfg,
     ));
-    let coord = Coordinator::new(
-        engine,
-        CoordinatorCfg {
-            batcher: BatcherCfg {
-                max_batch: args.get_usize("max-batch")?,
-                max_queue: 256,
-            },
+    let coord_cfg = CoordinatorCfg {
+        batcher: BatcherCfg {
+            max_batch: args.get_usize("max-batch")?,
+            max_queue: 256,
         },
-    );
+    };
+    let coord = if speculative {
+        // The draft is the same weights at higher sparsity: a calibrated
+        // plan for the production method (or TEAL magnitude masks when the
+        // production path is dense) at `--draft-sparsity`.
+        let draft_method = if method == "dense" { "teal" } else { method };
+        let draft_target = args.get_f64("draft-sparsity")?;
+        let draft_plan = common::plan_for(
+            artifacts,
+            &model,
+            calib.as_ref().expect("calib collected for --speculative"),
+            draft_method,
+            draft_target,
+            &search_cfg,
+            true,
+        )?;
+        let draft = common::sparsifier_for(&model, draft_method, &draft_plan)?;
+        let spec_cfg = SpecCfg {
+            k: args.get_usize("spec-k")?,
+            ..SpecCfg::default()
+        };
+        println!(
+            "speculative decode: draft {draft_method} @ {:.0}% sparsity, k={} (adaptive)",
+            draft_target * 100.0,
+            spec_cfg.k
+        );
+        let spec = Arc::new(SpecEngine::new(Arc::clone(&engine), draft, spec_cfg));
+        Coordinator::new_spec(spec, coord_cfg)
+    } else {
+        Coordinator::new(engine, coord_cfg)
+    };
     let sched = Arc::clone(&coord);
     std::thread::spawn(move || sched.run_scheduler());
     println!(

@@ -44,6 +44,22 @@ pub trait KvSeq {
     /// Commit the current position (`seq_len += 1`).
     fn advance(&mut self);
 
+    /// Roll the sequence back to `new_len` positions (`new_len <=
+    /// seq_len()`), returning backing storage the rolled-back tail no longer
+    /// needs. Paged implementations release whole now-unused blocks to the
+    /// pool; the data of retained positions is untouched. This is the KV
+    /// primitive behind speculative-decode rejection.
+    fn truncate(&mut self, new_len: usize);
+
+    /// Roll back to `new_len` positions but *keep* the backing storage: the
+    /// caller is about to rewrite the same positions (speculative verify
+    /// re-running the draft chain at production sparsity). Defaults to
+    /// [`KvSeq::truncate`]; paged implementations override it to avoid
+    /// releasing blocks they will re-allocate within the same round.
+    fn rewind(&mut self, new_len: usize) {
+        self.truncate(new_len);
+    }
+
     /// Visit K rows of `layer` covering positions `[0, upto)` in ascending
     /// order, as `(start_pos, rows)` chunks with `rows` row-major
     /// `[n, d_model]`.

@@ -78,6 +78,33 @@ impl PagedSeq {
     pub fn prefix_len(&self) -> usize {
         self.prefix_len
     }
+
+    /// Ensure backing blocks exist for the next `n` positions — allocating
+    /// tail blocks ahead of time and copy-on-writing a shared tail first —
+    /// without advancing `len`. Returns how many of those positions are now
+    /// writable (less than `n` when the pool or the context window runs
+    /// out). Speculative rounds reserve their whole draft-plus-verify
+    /// footprint up front so mid-round allocation can never fail.
+    pub fn reserve_ahead(&mut self, n: usize) -> usize {
+        let n = n.min(self.capacity.saturating_sub(self.len));
+        if n == 0 {
+            return 0;
+        }
+        // COW/alloc for the block holding position `len` (only that block
+        // can be shared; everything allocated beyond it is freshly owned).
+        if !self.try_reserve() {
+            return 0;
+        }
+        let bs = self.pool.layout().block_size;
+        let need = self.pool.layout().blocks_for(self.len + n);
+        while self.blocks.len() < need {
+            match self.pool.try_alloc() {
+                Some(b) => self.blocks.push(b),
+                None => break,
+            }
+        }
+        (self.blocks.len() * bs - self.len).min(n)
+    }
 }
 
 impl Drop for PagedSeq {
@@ -112,7 +139,9 @@ impl KvSeq for PagedSeq {
             return false;
         }
         let bs = self.pool.layout().block_size;
-        if self.len == self.blocks.len() * bs {
+        let bi = self.len / bs;
+        if bi >= self.blocks.len() {
+            debug_assert_eq!(bi, self.blocks.len(), "page table has a hole");
             match self.pool.try_alloc() {
                 Some(b) => {
                     self.blocks.push(b);
@@ -121,19 +150,22 @@ impl KvSeq for PagedSeq {
                 None => false,
             }
         } else {
-            let tail = *self.blocks.last().expect("partial tail implies a block");
-            if self.pool.ref_count(tail) > 1 {
+            // The block already exists (partial tail, or pre-allocated by
+            // `reserve_ahead` / retained across a `rewind`): make it private
+            // before the write.
+            let cur = self.blocks[bi];
+            if self.pool.ref_count(cur) > 1 {
                 let Some(fresh) = self.pool.try_alloc() else {
                     return false;
                 };
-                let filled = self.len - (self.blocks.len() - 1) * bs;
+                let filled = self.len - bi * bs;
                 {
-                    let src = self.pool.block(tail).read().unwrap();
+                    let src = self.pool.block(cur).read().unwrap();
                     let mut dst = self.pool.block(fresh).write().unwrap();
                     dst.copy_prefix_from(&src, filled);
                 }
-                *self.blocks.last_mut().expect("tail exists") = fresh;
-                self.pool.release(tail);
+                self.blocks[bi] = fresh;
+                self.pool.release(cur);
             }
             true
         }
@@ -155,6 +187,31 @@ impl KvSeq for PagedSeq {
 
     fn advance(&mut self) {
         self.len += 1;
+    }
+
+    /// Roll back to `new_len` positions and release every whole block the
+    /// retained prefix no longer needs. A partially-covered tail block stays
+    /// mapped; if it is shared, the next append copy-on-writes it, so
+    /// sharers (prefix cache, forked sequences) keep reading valid data.
+    fn truncate(&mut self, new_len: usize) {
+        assert!(new_len <= self.len, "truncate beyond seq_len");
+        let keep = self.pool.layout().blocks_for(new_len);
+        while self.blocks.len() > keep {
+            let b = self.blocks.pop().expect("block count checked");
+            self.pool.release(b);
+        }
+        self.len = new_len;
+        self.prefix_len = self.prefix_len.min(new_len);
+    }
+
+    /// Logical rollback that keeps the tail blocks mapped: the speculative
+    /// verify pass rewrites the same positions immediately, so releasing
+    /// and re-allocating them would only add pool churn (and a window for a
+    /// concurrent sequence to starve this one mid-round).
+    fn rewind(&mut self, new_len: usize) {
+        assert!(new_len <= self.len, "rewind beyond seq_len");
+        self.len = new_len;
+        self.prefix_len = self.prefix_len.min(new_len);
     }
 
     fn with_k(&self, layer: usize, upto: usize, f: &mut dyn FnMut(usize, &[f32])) {
@@ -290,6 +347,55 @@ impl KvManager {
                 return false;
             }
         }
+    }
+
+    /// Room for the next `n` tokens (blocks pre-allocated, `len` not
+    /// advanced), evicting LRU cached prefixes while the pool is dry.
+    /// Returns how many of the `n` positions are covered — speculative
+    /// rounds shrink their draft chain to this.
+    pub fn reserve_ahead(&self, seq: &mut PagedSeq, n: usize) -> usize {
+        loop {
+            let got = seq.reserve_ahead(n);
+            if got >= n.min(seq.capacity().saturating_sub(seq.seq_len())) {
+                return got;
+            }
+            if self.radix.lock().unwrap().evict(1, &self.pool) == 0 {
+                return got;
+            }
+        }
+    }
+
+    /// Roll a sequence back to `new_len` positions. Before the tail blocks
+    /// are released, every prefix-cache entry referencing a block that
+    /// covers a rolled-back position is invalidated (split before the
+    /// block, subtree dropped), so a later prefix hit can never adopt
+    /// rejected-token KV.
+    pub fn rollback(&self, seq: &mut PagedSeq, new_len: usize) {
+        if new_len >= seq.seq_len() {
+            return;
+        }
+        if self.prefix_cache {
+            let bs = self.pool.layout().block_size;
+            let first_affected = new_len / bs;
+            if first_affected < seq.blocks().len() {
+                // Only shared blocks can be cached (the tree holds its own
+                // ref); rolled-back blocks are almost always this round's
+                // fresh rc==1 allocations, so the common case skips the
+                // radix lock and tree scan entirely.
+                let bad: Vec<BlockId> = seq.blocks()[first_affected..]
+                    .iter()
+                    .copied()
+                    .filter(|&b| self.pool.ref_count(b) > 1)
+                    .collect();
+                if !bad.is_empty() {
+                    self.radix
+                        .lock()
+                        .unwrap()
+                        .invalidate_blocks(&bad, &self.pool);
+                }
+            }
+        }
+        seq.truncate(new_len);
     }
 
     /// Worst-case block demand of a request running `total_tokens`.

@@ -231,6 +231,89 @@ impl RadixCache {
         freed
     }
 
+    /// Drop an entire subtree hanging below `node` (the node itself is
+    /// kept), releasing the tree's reference on every block it cached.
+    /// Returns the number of tree block references released.
+    fn drop_children(&mut self, node: usize, pool: &BlockPool) -> usize {
+        let mut released = 0usize;
+        let mut stack: Vec<usize> = self.nodes[node].children.values().copied().collect();
+        self.nodes[node].children.clear();
+        while let Some(i) = stack.pop() {
+            stack.extend(self.nodes[i].children.values().copied());
+            let blocks = std::mem::take(&mut self.nodes[i].blocks);
+            self.blocks_cached -= blocks.len();
+            released += blocks.len();
+            for b in blocks {
+                pool.release(b);
+            }
+            let n = &mut self.nodes[i];
+            n.in_use = false;
+            n.tokens = Vec::new();
+            n.children = HashMap::new();
+            n.parent = 0;
+            self.free_nodes.push(i);
+        }
+        released
+    }
+
+    /// Invalidate every cached prefix that runs through one of `bad`'s
+    /// blocks: the owning node's edge is truncated just before its first bad
+    /// block and everything hanging below it is dropped, so a later
+    /// `match_prefix` can never hand out a block whose positions were
+    /// rolled back (speculative-decode rejection, KV truncation). Clean
+    /// leading blocks of a split node stay cached. Returns the number of
+    /// tree block references released.
+    pub fn invalidate_blocks(&mut self, bad: &[BlockId], pool: &BlockPool) -> usize {
+        if bad.is_empty() {
+            return 0;
+        }
+        let bad: std::collections::HashSet<BlockId> = bad.iter().copied().collect();
+        let hits: Vec<(usize, usize)> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .skip(1)
+            .filter(|(_, n)| n.in_use)
+            .filter_map(|(i, n)| {
+                n.blocks.iter().position(|b| bad.contains(b)).map(|fb| (i, fb))
+            })
+            .collect();
+        let mut released = 0usize;
+        let bs = self.block_size;
+        for (node, first_bad) in hits {
+            if !self.nodes[node].in_use {
+                continue; // already dropped as a descendant of an earlier hit
+            }
+            // Everything below this node extends through the bad block.
+            released += self.drop_children(node, pool);
+            let (tail, unlink_key) = {
+                let n = &mut self.nodes[node];
+                let key = n.tokens[..bs].to_vec();
+                let tail = n.blocks.split_off(first_bad);
+                n.tokens.truncate(first_bad * bs);
+                (tail, if first_bad == 0 { Some(key) } else { None })
+            };
+            self.blocks_cached -= tail.len();
+            released += tail.len();
+            for &b in &tail {
+                pool.release(b);
+            }
+            if let Some(key) = unlink_key {
+                // Nothing clean remains: unlink from the parent and recycle.
+                let parent = self.nodes[node].parent;
+                self.nodes[parent].children.remove(&key);
+                let n = &mut self.nodes[node];
+                n.in_use = false;
+                n.tokens = Vec::new();
+                n.blocks = Vec::new();
+                n.children = HashMap::new();
+                n.parent = 0;
+                self.free_nodes.push(node);
+            }
+        }
+        released
+    }
+
     /// Evict least-recently-used leaves until at least `want` blocks have
     /// actually returned to `pool`'s free list. Leaves whose blocks are all
     /// still mapped by live page tables are skipped — evicting them frees
@@ -395,6 +478,40 @@ mod tests {
             pool.release(b);
         }
         t.clear(&pool);
+        assert_eq!(pool.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn invalidate_blocks_splits_and_drops_subtrees() {
+        let pool = pool(8);
+        let mut t = RadixCache::new(4);
+        // Entry 0..8 (2 blocks) with an extension 8..12 (1 more block).
+        let a: Vec<usize> = (0..8).collect();
+        let ab = take(&pool, 2);
+        t.insert(&a, &ab, &pool);
+        let long: Vec<usize> = (0..12).collect();
+        let b2 = take(&pool, 1)[0];
+        t.insert(&long, &[ab[0], ab[1], b2], &pool);
+        assert_eq!(t.blocks_cached(), 3);
+        // Invalidate the middle block: the entry splits before it and the
+        // extension (whose prefix runs through it) is dropped.
+        let released = t.invalidate_blocks(&[ab[1]], &pool);
+        assert_eq!(released, 2, "bad block + the extension beyond it");
+        assert_eq!(t.blocks_cached(), 1);
+        let m = t.match_prefix(&long, &pool);
+        assert_eq!(m, &ab[..1], "clean leading block still matches");
+        pool.release(ab[0]); // drop the match's caller ref
+        // Invalidating the sole remaining block unlinks the entry entirely.
+        assert_eq!(t.invalidate_blocks(&[ab[0]], &pool), 1);
+        assert_eq!(t.blocks_cached(), 0);
+        assert!(t.match_prefix(&a, &pool).is_empty());
+        // Only the simulated page-table refs remain.
+        assert_eq!(pool.ref_count(ab[0]), 1);
+        assert_eq!(pool.ref_count(ab[1]), 1);
+        assert_eq!(pool.ref_count(b2), 1);
+        pool.release(ab[0]);
+        pool.release(ab[1]);
+        pool.release(b2);
         assert_eq!(pool.blocks_in_use(), 0);
     }
 

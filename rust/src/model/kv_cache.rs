@@ -109,6 +109,15 @@ impl crate::kv::KvSeq for KvCache {
         self.len += 1;
     }
 
+    /// Rolling back the flat slab is purely logical: rows beyond `new_len`
+    /// become stale and are overwritten by the next stores before any
+    /// attention pass can read them (`with_k`/`with_v` never visit past
+    /// `seq_len`).
+    fn truncate(&mut self, new_len: usize) {
+        assert!(new_len <= self.len, "truncate beyond seq_len");
+        self.len = new_len;
+    }
+
     fn with_k(&self, layer: usize, upto: usize, f: &mut dyn FnMut(usize, &[f32])) {
         f(0, self.blocks[layer].k_rows(upto));
     }

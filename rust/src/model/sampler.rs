@@ -19,18 +19,80 @@ impl Sampling {
                 let t = t.max(1e-4);
                 let mut probs: Vec<f32> = logits.iter().map(|&l| l / t).collect();
                 softmax_inplace(&mut probs);
-                let u = rng.next_f32();
-                let mut acc = 0.0f32;
-                for (i, &p) in probs.iter().enumerate() {
-                    acc += p;
-                    if u < acc {
-                        return i;
-                    }
-                }
-                probs.len() - 1
+                sample_from(&probs, rng)
             }
         }
     }
+
+    /// The full next-token distribution this policy samples from, written
+    /// into `probs` (cleared and refilled; no allocation once warm). Greedy
+    /// is the argmax point mass. Speculative decoding needs the explicit
+    /// distributions for its accept/residual arithmetic.
+    pub fn probs_into(&self, logits: &[f32], probs: &mut Vec<f32>) {
+        probs.clear();
+        match *self {
+            Sampling::Greedy => {
+                probs.resize(logits.len(), 0.0);
+                probs[argmax(logits)] = 1.0;
+            }
+            Sampling::Temperature(t) => {
+                let t = t.max(1e-4);
+                probs.extend(logits.iter().map(|&l| l / t));
+                softmax_inplace(probs);
+            }
+        }
+    }
+}
+
+/// Draw from an explicit probability vector (non-negative, sums to ~1).
+pub fn sample_from(probs: &[f32], rng: &mut Pcg64) -> usize {
+    let u = rng.next_f32();
+    let mut acc = 0.0f32;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i;
+        }
+    }
+    probs.len() - 1
+}
+
+/// Speculative rejection sampling (the standard accept rule): a draft token
+/// `d` drawn from the draft distribution `q` is accepted against the target
+/// distribution `p` with probability `min(1, p[d]/q[d])`. On rejection the
+/// caller must draw the correction from [`residual_sample`]; the combined
+/// procedure emits tokens distributed exactly as `p`.
+pub fn spec_accept(p: &[f32], q: &[f32], d: usize, rng: &mut Pcg64) -> bool {
+    let ratio = (p[d] / q[d].max(1e-12)).min(1.0);
+    rng.next_f32() < ratio
+}
+
+/// Sample from the normalized residual `max(p - q, 0)` — the rejection
+/// branch of speculative sampling. Falls back to `p` itself when the
+/// residual has no mass (p == q).
+pub fn residual_sample(p: &[f32], q: &[f32], rng: &mut Pcg64) -> usize {
+    debug_assert_eq!(p.len(), q.len());
+    let mut total = 0.0f32;
+    for i in 0..p.len() {
+        total += (p[i] - q[i]).max(0.0);
+    }
+    if total <= 0.0 {
+        return sample_from(p, rng);
+    }
+    let u = rng.next_f32() * total;
+    let mut acc = 0.0f32;
+    let mut last = 0usize;
+    for i in 0..p.len() {
+        let r = (p[i] - q[i]).max(0.0);
+        if r > 0.0 {
+            last = i;
+            acc += r;
+            if u < acc {
+                return i;
+            }
+        }
+    }
+    last
 }
 
 #[cfg(test)]
@@ -62,6 +124,42 @@ mod tests {
             seen[Sampling::Temperature(10.0).sample(&logits, &mut rng)] = true;
         }
         assert!(seen.iter().all(|&s| s), "high temp should reach all tokens");
+    }
+
+    #[test]
+    fn probs_into_greedy_is_point_mass() {
+        let logits = vec![0.0f32, 3.0, -1.0];
+        let mut probs = Vec::new();
+        Sampling::Greedy.probs_into(&logits, &mut probs);
+        assert_eq!(probs, vec![0.0, 1.0, 0.0]);
+        Sampling::Temperature(1.0).probs_into(&logits, &mut probs);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(probs[1] > probs[0] && probs[0] > probs[2]);
+    }
+
+    #[test]
+    fn spec_accept_is_certain_when_target_dominates() {
+        let p = vec![0.25f32, 0.75];
+        let q = vec![0.5f32, 0.5];
+        let mut rng = Pcg64::new(5);
+        for _ in 0..50 {
+            assert!(spec_accept(&p, &q, 1, &mut rng), "p[1] > q[1] always accepts");
+        }
+    }
+
+    #[test]
+    fn residual_only_emits_underdrawn_tokens() {
+        let p = vec![0.1f32, 0.6, 0.3];
+        let q = vec![0.5f32, 0.2, 0.3];
+        let mut rng = Pcg64::new(6);
+        for _ in 0..200 {
+            let c = residual_sample(&p, &q, &mut rng);
+            assert!(p[c] > q[c], "residual token {c} has no excess mass");
+        }
+        // p == q: falls back to p itself, stays in range.
+        for _ in 0..50 {
+            assert!(residual_sample(&p, &p, &mut rng) < 3);
+        }
     }
 
     #[test]

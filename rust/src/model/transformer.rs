@@ -104,6 +104,9 @@ pub struct Scratch {
     hbuf: Vec<f32>,
     down: Vec<f32>,
     scores: Vec<f32>,
+    /// Residual streams for multi-token chunk passes (`[m, d_model]`, grown
+    /// to the widest chunk seen and then reused).
+    chunk: Vec<f32>,
 }
 
 impl Scratch {
@@ -123,6 +126,7 @@ impl Scratch {
             hbuf: vec![0.0; f],
             down: vec![0.0; d],
             scores: vec![0.0; cfg.max_seq],
+            chunk: Vec::new(),
         }
     }
 }
@@ -337,6 +341,81 @@ impl Model {
         scratch.resid = x;
         logits.resize(self.cfg.vocab_size, 0.0);
         dense_gemv_parallel(&self.lm_head, &scratch.normed, logits, intra_op_threads());
+    }
+
+    /// Decode a chunk of `m` already-known tokens in one layer-major pass,
+    /// writing per-position logits into `logits` (`[m, vocab]`, row-major,
+    /// resized on first use). This is the speculative-decode verify pass:
+    /// the draft chain's tokens are all known up front, so instead of
+    /// streaming every layer's weights once per token (token-major
+    /// [`Model::forward_token`]), the block loop is interchanged — each
+    /// layer's weights are visited once per *chunk* and stay cache-hot
+    /// across the `m` tokens, which is where the verify pass beats `m`
+    /// sequential decode steps on memory-bound models.
+    ///
+    /// Per-token arithmetic is exactly [`Model::forward_token`]'s — same
+    /// ops in the same order, with causal attention inside the chunk
+    /// reading K/V rows stored earlier in the same layer iteration — so the
+    /// resulting logits are bit-identical to `m` sequential calls. The
+    /// differential-equivalence suite (`rust/tests/spec_decode.rs`) pins
+    /// this down; it is what makes greedy speculative decoding
+    /// token-identical to the baseline.
+    ///
+    /// The caller must have made room for all `m` positions (see
+    /// `reserve_ahead` on the KV manager); reservation failure here panics
+    /// like [`Model::forward_token`]'s.
+    pub fn forward_chunk(
+        &self,
+        tokens: &[usize],
+        cache: &mut dyn KvSeq,
+        sp: &dyn Sparsifier,
+        scratch: &mut Scratch,
+        stats: &mut ForwardStats,
+        logits: &mut Vec<f32>,
+    ) {
+        let m = tokens.len();
+        assert!(m > 0, "empty chunk");
+        let d = self.cfg.d_model;
+        let vocab = self.cfg.vocab_size;
+        let pos0 = cache.seq_len();
+        for (j, &t) in tokens.iter().enumerate() {
+            assert!(t < vocab, "token {t} out of vocab");
+            assert!(
+                cache.try_reserve(),
+                "KV reserve failed at pos {} (capacity {})",
+                pos0 + j,
+                cache.capacity()
+            );
+            cache.advance();
+        }
+        let mut xs = std::mem::take(&mut scratch.chunk);
+        xs.resize(m * d, 0.0);
+        for (j, &t) in tokens.iter().enumerate() {
+            xs[j * d..(j + 1) * d].copy_from_slice(self.embed.row(t));
+        }
+        for b in 0..self.cfg.n_layers {
+            for j in 0..m {
+                let x = &mut xs[j * d..(j + 1) * d];
+                self.block_step(b, b, x, pos0 + j, cache, sp, scratch, stats);
+            }
+        }
+        stats.tokens += m as u64;
+        logits.resize(m * vocab, 0.0);
+        for j in 0..m {
+            rmsnorm(
+                &xs[j * d..(j + 1) * d],
+                &self.final_norm,
+                self.cfg.rmsnorm_eps,
+                &mut scratch.normed,
+            );
+            dense_gemv_parallel(
+                &self.lm_head,
+                &scratch.normed,
+                &mut logits[j * vocab..(j + 1) * vocab],
+                intra_op_threads(),
+            );
+        }
+        scratch.chunk = xs;
     }
 
     /// Full-sequence forward. Returns `[T, vocab]` logits. If `block_taps`
@@ -583,6 +662,58 @@ mod tests {
             out0.max_abs_diff(&taps[1]) < 1e-4,
             "block_forward_seq diverges from in-model block output"
         );
+    }
+
+    #[test]
+    fn chunk_forward_bit_identical_to_sequential() {
+        // The speculative verify pass (layer-major chunk) must reproduce
+        // token-major decode bit-for-bit at every position.
+        let m = nano();
+        let tokens = [5usize, 9, 200, 3, 77, 13, 1];
+        let mut stats = ForwardStats::default();
+        let mut seq_cache = KvCache::new(&m.cfg);
+        let mut seq_scratch = Scratch::new(&m.cfg);
+        let mut seq_logits: Vec<f32> = Vec::new();
+        let mut expect: Vec<Vec<f32>> = Vec::new();
+        for &t in &tokens {
+            m.forward_token(
+                t,
+                &mut seq_cache,
+                &Dense,
+                &mut seq_scratch,
+                &mut stats,
+                &mut seq_logits,
+            );
+            expect.push(seq_logits.clone());
+        }
+        // One warm-up token decoded normally, then the rest as a chunk —
+        // exercises a non-zero chunk start position.
+        let mut cache = KvCache::new(&m.cfg);
+        let mut scratch = Scratch::new(&m.cfg);
+        let mut logits: Vec<f32> = Vec::new();
+        m.forward_token(tokens[0], &mut cache, &Dense, &mut scratch, &mut stats, &mut logits);
+        let mut chunk_logits: Vec<f32> = Vec::new();
+        m.forward_chunk(
+            &tokens[1..],
+            &mut cache,
+            &Dense,
+            &mut scratch,
+            &mut stats,
+            &mut chunk_logits,
+        );
+        assert_eq!(cache.len, tokens.len());
+        for (j, exp) in expect.iter().enumerate().skip(1) {
+            let row = &chunk_logits[(j - 1) * m.cfg.vocab_size..j * m.cfg.vocab_size];
+            for v in 0..m.cfg.vocab_size {
+                assert_eq!(
+                    row[v].to_bits(),
+                    exp[v].to_bits(),
+                    "chunk diverged at pos {j} vocab {v}: {} vs {}",
+                    row[v],
+                    exp[v]
+                );
+            }
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 use crate::model::sampler::Sampling;
 use crate::server::batcher::{Batcher, BatcherCfg};
-use crate::server::engine::{Engine, SeqState};
+use crate::server::engine::{Engine, SeqState, SpecEngine};
 use crate::server::metrics::Metrics;
 use crate::server::request::{GenRequest, GenResponse};
 use std::collections::HashMap;
@@ -37,6 +37,9 @@ struct SchedState {
 /// The serving coordinator. Cloneable handle via Arc.
 pub struct Coordinator {
     engine: Arc<Engine>,
+    /// Speculative decoder over the same engine; armed requests run
+    /// draft/verify rounds instead of single-token steps.
+    spec: Option<Arc<SpecEngine>>,
     state: Mutex<SchedState>,
     wake: Condvar,
     pub metrics: Mutex<Metrics>,
@@ -46,8 +49,27 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(engine: Arc<Engine>, cfg: CoordinatorCfg) -> Arc<Self> {
+        Self::build(engine, None, cfg)
+    }
+
+    /// Coordinator running speculative decode rounds (the engine is the
+    /// spec engine's verify engine, so admission, KV accounting and
+    /// preemption are unchanged; the per-round chain cap keeps the
+    /// speculative KV peak — draft lookahead included — inside the
+    /// worst-case reservation block-aware admission already makes).
+    pub fn new_spec(spec: Arc<SpecEngine>, cfg: CoordinatorCfg) -> Arc<Self> {
+        let engine = Arc::clone(&spec.verify);
+        Self::build(engine, Some(spec), cfg)
+    }
+
+    fn build(
+        engine: Arc<Engine>,
+        spec: Option<Arc<SpecEngine>>,
+        cfg: CoordinatorCfg,
+    ) -> Arc<Self> {
         Arc::new(Self {
             engine,
+            spec,
             state: Mutex::new(SchedState {
                 batcher: Batcher::new(cfg.batcher),
                 waiters: HashMap::new(),
@@ -67,9 +89,22 @@ impl Coordinator {
         max_new: usize,
         sampling: Sampling,
     ) -> anyhow::Result<std::sync::mpsc::Receiver<GenResponse>> {
+        self.submit_opts(prompt, max_new, sampling, true)
+    }
+
+    /// [`Coordinator::submit`] with the per-request speculative opt-out
+    /// (no effect on a non-speculative coordinator).
+    pub fn submit_opts(
+        &self,
+        prompt: &str,
+        max_new: usize,
+        sampling: Sampling,
+        speculative: bool,
+    ) -> anyhow::Result<std::sync::mpsc::Receiver<GenResponse>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = GenRequest::new(id, prompt, max_new);
         req.sampling = sampling;
+        req.speculative = speculative;
         let (tx, rx) = channel();
         {
             let mut st = self.state.lock().unwrap();
@@ -90,7 +125,19 @@ impl Coordinator {
         max_new: usize,
         sampling: Sampling,
     ) -> anyhow::Result<GenResponse> {
-        let rx = self.submit(prompt, max_new, sampling)?;
+        self.submit_blocking_opts(prompt, max_new, sampling, true)
+    }
+
+    /// [`Coordinator::submit_blocking`] with the per-request speculative
+    /// opt-out — the one blocking completion path (HTTP router included).
+    pub fn submit_blocking_opts(
+        &self,
+        prompt: &str,
+        max_new: usize,
+        sampling: Sampling,
+        speculative: bool,
+    ) -> anyhow::Result<GenResponse> {
+        let rx = self.submit_opts(prompt, max_new, sampling, speculative)?;
         rx.recv()
             .map_err(|_| anyhow::anyhow!("scheduler dropped request"))
     }
@@ -178,6 +225,9 @@ impl Coordinator {
                     self.engine
                         .admit(req.id, &req.prompt, req.max_new, req.sampling);
                 seq.resumed = req.preempted;
+                if let (Some(spec), true) = (&self.spec, req.speculative) {
+                    spec.init_seq(&mut seq);
+                }
                 self.engine.prefill(&mut seq);
                 {
                     let mut m = self.metrics.lock().unwrap();
@@ -200,22 +250,29 @@ impl Coordinator {
             self.reserve_or_preempt(&mut active);
             // One decode step across the batch: only unfinished sequences
             // enter (chunks stay balanced when completions cluster); the
-            // decode policy itself is shared with `Engine::step_batch`.
+            // decode policy itself is shared with `Engine::step_batch`. A
+            // speculative coordinator runs one draft/verify round per armed
+            // sequence instead, which can commit several tokens at once —
+            // per-token latency divides by the tokens actually committed.
             let t0 = Instant::now();
-            let stepped = {
+            let committed = {
                 let mut seqs: Vec<&mut SeqState> = active
                     .iter_mut()
                     .map(|(_, s, _)| s)
                     .filter(|s| !s.finished())
                     .collect();
-                let n = seqs.len();
-                self.engine.step_slots(&mut seqs[..]);
-                n
+                let before: usize = seqs.iter().map(|s| s.generated.len()).sum();
+                match &self.spec {
+                    Some(spec) => spec.step_slots(&mut seqs[..]),
+                    None => self.engine.step_slots(&mut seqs[..]),
+                }
+                let after: usize = seqs.iter().map(|s| s.generated.len()).sum();
+                after - before
             };
             let step_ms = t0.elapsed().as_secs_f64() * 1e3;
             {
                 let mut m = self.metrics.lock().unwrap();
-                m.per_token_ms.add(step_ms / stepped.max(1) as f64);
+                m.per_token_ms.add(step_ms / committed.max(1) as f64);
             }
             // Complete finished sequences.
             let mut i = 0;
@@ -241,6 +298,9 @@ impl Coordinator {
                         m.total_ms.add(total_ms);
                         m.macs_kept += seq.stats.macs_kept + seq.stats.macs_extra;
                         m.macs_dense += seq.stats.macs_dense;
+                        m.spec_rounds_total += seq.spec.rounds;
+                        m.spec_drafted_tokens += seq.spec.drafted;
+                        m.spec_accepted_tokens += seq.spec.accepted;
                     }
                     let tx = self.state.lock().unwrap().waiters.remove(&req.id);
                     if let Some(tx) = tx {

@@ -17,9 +17,10 @@
 use crate::data::corpus::{detokenize, tokenize};
 use crate::kv::{KvCfg, KvManager, KvSeq, PagedSeq};
 use crate::model::kv_cache::KvCache;
-use crate::model::sampler::Sampling;
+use crate::model::sampler::{residual_sample, sample_from, spec_accept, Sampling};
 use crate::model::transformer::{ForwardStats, Model, Scratch};
 use crate::sparsity::{Dense, Sparsifier};
+use crate::tensor::ops::argmax;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::parallel_slices;
 use std::sync::Arc;
@@ -99,6 +100,45 @@ impl SeqKv {
     }
 }
 
+/// Per-sequence speculative-decoding state: acceptance counters driving the
+/// adaptive draft length, plus the reusable round buffers. `cur_k == 0`
+/// means the sequence decodes normally (speculative and plain sequences
+/// coexist in one batch).
+#[derive(Default)]
+pub struct SpecState {
+    /// Draft-chain length for the next round, counting the free first token
+    /// (the production-quality decision already in `last_logits`). 0 = not
+    /// speculative.
+    pub cur_k: usize,
+    /// Speculative rounds run (each = one draft pass + one verify chunk).
+    pub rounds: u64,
+    /// Draft tokens proposed beyond the free first token.
+    pub drafted: u64,
+    /// Of those, accepted by the production-sparsity verify pass.
+    pub accepted: u64,
+    /// Draft token chain scratch ([0] is the free first token).
+    chain: Vec<usize>,
+    /// Draft-pass logits for the token being drafted (reused per step).
+    qstep: Vec<f32>,
+    /// Draft distributions `q_i`, row-major `[m-1, vocab]` (temperature
+    /// sampling only; greedy needs no accept arithmetic).
+    draft_probs: Vec<f32>,
+    /// Verify-chunk logits, row-major `[m, vocab]`.
+    chunk_logits: Vec<f32>,
+    /// Target-distribution scratch for the accept/residual math.
+    pbuf: Vec<f32>,
+}
+
+impl SpecState {
+    /// Fraction of proposed draft tokens the verifier accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            return 0.0;
+        }
+        self.accepted as f64 / self.drafted as f64
+    }
+}
+
 /// One in-flight sequence.
 pub struct SeqState {
     pub id: u64,
@@ -116,6 +156,8 @@ pub struct SeqState {
     pub prefix_hit_tokens: usize,
     /// Set when the sequence was preempted and re-admitted.
     pub resumed: bool,
+    /// Speculative-decoding state (inert unless a [`SpecEngine`] armed it).
+    pub spec: SpecState,
     finish_override: Option<FinishReason>,
 }
 
@@ -228,6 +270,7 @@ impl Engine {
             prefilled: false,
             prefix_hit_tokens: hit,
             resumed: false,
+            spec: SpecState::default(),
             finish_override: None,
         }
     }
@@ -260,6 +303,31 @@ impl Engine {
             (Some(mgr), SeqKv::Paged(p)) => mgr.try_reserve(p),
             (_, SeqKv::Flat(c)) => !c.is_full(),
             (None, SeqKv::Paged(p)) => p.try_reserve(),
+        }
+    }
+
+    /// Make room for the sequence's next `n` positions without advancing it
+    /// (speculative rounds reserve their whole draft-plus-verify footprint
+    /// up front). Paged engines allocate tail blocks, evicting cached
+    /// prefixes under pressure; flat caches are bounded by the context
+    /// window. Returns how many of the `n` positions are covered.
+    pub fn reserve_ahead(&self, seq: &mut SeqState, n: usize) -> usize {
+        match (&self.kv, &mut seq.kv) {
+            (Some(mgr), SeqKv::Paged(p)) => mgr.reserve_ahead(p, n),
+            (_, SeqKv::Flat(c)) => n.min(c.max_seq.saturating_sub(c.len)),
+            (None, SeqKv::Paged(p)) => p.reserve_ahead(n),
+        }
+    }
+
+    /// Roll the sequence's KV back to `new_len` positions, releasing whole
+    /// rejected blocks. On the managed paged path this also invalidates any
+    /// prefix-cache entry overlapping the rolled-back tail, so later prefix
+    /// hits can never serve rejected-token KV.
+    pub fn rollback_seq(&self, seq: &mut SeqState, new_len: usize) {
+        match (&self.kv, &mut seq.kv) {
+            (Some(mgr), SeqKv::Paged(p)) => mgr.rollback(p, new_len),
+            (_, SeqKv::Flat(c)) => c.truncate(new_len),
+            (None, SeqKv::Paged(p)) => p.truncate(new_len),
         }
     }
 
@@ -342,12 +410,22 @@ impl Engine {
     }
 
     /// One decode step over a set of sequence slots — the shared policy
-    /// behind [`Engine::step_batch`] and the serving coordinator: single-
-    /// sequence fast path, then disjoint contiguous chunks of slots per
-    /// worker (split_at_mut under the hood, kernel thread budget pinned to
-    /// 1 per worker by `parallel_slices`), so there is no per-sequence lock
-    /// to take. Finished slots are skipped defensively.
+    /// behind [`Engine::step_batch`] and the serving coordinator.
     pub fn step_slots(&self, slots: &mut [&mut SeqState]) {
+        self.step_slots_with(slots, |seq| self.decode_one(seq));
+    }
+
+    /// The slot-scheduling policy itself, shared with [`SpecEngine`]:
+    /// single-thread fast path, then disjoint contiguous chunks of slots
+    /// per worker (split_at_mut under the hood, kernel thread budget pinned
+    /// to 1 per worker by `parallel_slices`), so there is no per-sequence
+    /// lock to take. Finished slots are skipped defensively; `step` runs
+    /// once per unfinished slot.
+    pub fn step_slots_with(
+        &self,
+        slots: &mut [&mut SeqState],
+        step: impl Fn(&mut SeqState) + Sync,
+    ) {
         if slots.is_empty() {
             return;
         }
@@ -355,7 +433,7 @@ impl Engine {
         if threads <= 1 {
             for seq in slots.iter_mut() {
                 if !seq.finished() {
-                    self.decode_one(&mut **seq);
+                    step(&mut **seq);
                 }
             }
             return;
@@ -363,7 +441,7 @@ impl Engine {
         parallel_slices(slots, threads, |_, _, chunk| {
             for seq in chunk.iter_mut() {
                 if !seq.finished() {
-                    self.decode_one(&mut **seq);
+                    step(&mut **seq);
                 }
             }
         });
@@ -382,6 +460,294 @@ impl Engine {
         while !seq.finished() {
             self.decode_one(&mut seq);
         }
+        (seq.text(), seq.stats)
+    }
+}
+
+/// Speculative-decoding configuration (the `wisparse serve --speculative`
+/// knobs).
+#[derive(Clone, Debug)]
+pub struct SpecCfg {
+    /// Initial draft-chain length per round, counting the free first token.
+    pub k: usize,
+    /// Adaptive-k floor.
+    pub min_k: usize,
+    /// Adaptive-k ceiling (also the cap on the verify chunk width).
+    pub max_k: usize,
+    /// Adapt each sequence's chain length to its observed acceptance: grow
+    /// by one on a fully-accepted round, shrink to the accepted length on a
+    /// rejection.
+    pub adaptive: bool,
+}
+
+impl Default for SpecCfg {
+    fn default() -> Self {
+        Self {
+            k: 4,
+            min_k: 2,
+            max_k: 12,
+            adaptive: true,
+        }
+    }
+}
+
+/// Self-speculative decoding: the same weights at a high-sparsity
+/// [`Sparsifier`] act as a free draft model for the production-sparsity
+/// configuration. Each round drafts a chain of tokens sequentially at draft
+/// sparsity, rolls the draft KV back, and re-scores the whole chain in one
+/// layer-major verify chunk at production sparsity
+/// ([`Model::forward_chunk`]) — weights stream once per chunk instead of
+/// once per token, which is what makes decode latency scale with the
+/// acceptance rate instead of the token count. Greedy acceptance keeps the
+/// longest draft prefix matching the verifier's argmax, making speculative
+/// output token-identical to baseline decode (the chunk pass is bit-exact
+/// per token); temperature sampling uses standard rejection sampling
+/// (accept with `min(1, p/q)`, correct from the residual), which preserves
+/// the verifier's output distribution exactly.
+///
+/// Wraps a verify [`Engine`] (production sparsifier + KV manager), so flat
+/// and paged KV, prefix sharing and block-aware admission all apply
+/// unchanged. The per-round chain length is capped by the sequence's
+/// remaining token budget, so the speculative KV peak — draft lookahead
+/// included — never exceeds the baseline worst case that admission
+/// reserved.
+pub struct SpecEngine {
+    /// The production engine: model, target sparsifier, KV manager.
+    pub verify: Arc<Engine>,
+    /// The high-sparsity draft configuration over the same weights.
+    pub draft: Arc<dyn Sparsifier>,
+    pub cfg: SpecCfg,
+}
+
+impl SpecEngine {
+    pub fn new(verify: Arc<Engine>, draft: Arc<dyn Sparsifier>, cfg: SpecCfg) -> Self {
+        assert!(cfg.k >= 1 && cfg.min_k >= 1 && cfg.max_k >= cfg.min_k);
+        Self { verify, draft, cfg }
+    }
+
+    /// Arm a sequence for speculative decoding (idempotent; sequences left
+    /// unarmed decode normally alongside speculative ones).
+    pub fn init_seq(&self, seq: &mut SeqState) {
+        seq.spec.cur_k = self.cfg.k.clamp(self.cfg.min_k, self.cfg.max_k);
+    }
+
+    /// Create and arm sequence state for a prompt.
+    pub fn admit(&self, id: u64, prompt: &str, max_new: usize, sampling: Sampling) -> SeqState {
+        let mut seq = self.verify.admit(id, prompt, max_new, sampling);
+        self.init_seq(&mut seq);
+        seq
+    }
+
+    /// Prefill runs on the verify engine unchanged (same paper policy, same
+    /// prefix-cache publication) — speculation only touches decode.
+    pub fn prefill(&self, seq: &mut SeqState) {
+        self.verify.prefill(seq);
+    }
+
+    /// Worst-case token footprint for admission. Draft lookahead is already
+    /// included: every round caps its chain at the remaining budget, so the
+    /// speculative KV peak (prompt + committed + in-flight chain) never
+    /// exceeds the baseline `prompt + max_new` reservation.
+    pub fn worst_case_tokens(&self, prompt: &str, max_new: usize) -> usize {
+        self.verify.worst_case_tokens(prompt, max_new)
+    }
+
+    /// One speculative round: draft up to `cur_k - 1` tokens beyond the
+    /// free first token, verify the chain in one production-sparsity chunk,
+    /// commit the accepted prefix and roll back the rest. Preserves
+    /// `decode_one`'s invariants (every committed token's KV resident
+    /// except a final unforwarded token, `last_logits` predicting the next
+    /// position), so rounds and plain decode steps interleave freely.
+    pub fn spec_round(&self, seq: &mut SeqState) {
+        debug_assert!(seq.prefilled && !seq.finished());
+        let model = &self.verify.model;
+        let vocab = model.cfg.vocab_size;
+        let greedy = matches!(seq.sampling, Sampling::Greedy);
+
+        // The free first token: the production-quality decision already in
+        // `last_logits` — bitwise the token baseline decode would emit.
+        let d1 = seq.sampling.sample(&seq.last_logits, &mut seq.rng);
+        seq.generated.push(d1);
+        if seq.finished() {
+            return; // hit max_new: token committed unforwarded, like decode_one
+        }
+
+        // Chain length: capped by the remaining budget so the speculative
+        // KV peak stays within the admission-time worst case, and by what
+        // the pool can actually back right now.
+        let rem = seq.max_new - seq.generated.len();
+        let want = seq.spec.cur_k.clamp(1, self.cfg.max_k).min(rem + 1);
+        let have = self.verify.reserve_ahead(seq, want);
+        if have == 0 {
+            seq.finish_override = Some(FinishReason::CacheFull);
+            return;
+        }
+        let m = want.min(have);
+        let l0 = seq.kv.seq_len();
+        debug_assert!(
+            l0 + m <= seq.prompt_tokens.len() + seq.max_new,
+            "speculative lookahead exceeded the admission worst case"
+        );
+        seq.spec.rounds += 1;
+
+        let mut chain = std::mem::take(&mut seq.spec.chain);
+        let mut qall = std::mem::take(&mut seq.spec.draft_probs);
+        let mut qstep = std::mem::take(&mut seq.spec.qstep);
+        let mut vlog = std::mem::take(&mut seq.spec.chunk_logits);
+        let mut pbuf = std::mem::take(&mut seq.spec.pbuf);
+        chain.clear();
+        chain.push(d1);
+        qall.clear();
+
+        // --- draft: m-1 sequential steps at draft sparsity ---
+        for i in 1..m {
+            let prev = chain[i - 1];
+            model.forward_token(
+                prev,
+                seq.kv.as_dyn(),
+                self.draft.as_ref(),
+                &mut seq.scratch,
+                &mut seq.stats,
+                &mut qstep,
+            );
+            let next = if greedy {
+                argmax(&qstep)
+            } else {
+                seq.sampling.probs_into(&qstep, &mut pbuf);
+                let d = sample_from(&pbuf, &mut seq.rng);
+                qall.extend_from_slice(&pbuf);
+                d
+            };
+            chain.push(next);
+        }
+        seq.spec.drafted += (m - 1) as u64;
+
+        // --- verify: rewind the draft KV (blocks retained — the chunk
+        // rewrites the same positions) and re-score the chain in one
+        // layer-major production pass ---
+        seq.kv.as_dyn().rewind(l0);
+        model.forward_chunk(
+            &chain[..m],
+            seq.kv.as_dyn(),
+            self.verify.sparsifier.as_ref(),
+            &mut seq.scratch,
+            &mut seq.stats,
+            &mut vlog,
+        );
+
+        // --- accept the longest matching prefix ---
+        let mut a = 1usize; // chain[0] came from production logits: committed
+        let mut correction: Option<usize> = None;
+        while a < m {
+            let row = &vlog[(a - 1) * vocab..a * vocab];
+            if greedy {
+                if chain[a] == argmax(row) {
+                    seq.generated.push(chain[a]);
+                    a += 1;
+                } else {
+                    break; // next round's free token re-derives the argmax
+                }
+            } else {
+                seq.sampling.probs_into(row, &mut pbuf);
+                let q = &qall[(a - 1) * vocab..a * vocab];
+                if spec_accept(&pbuf, q, chain[a], &mut seq.rng) {
+                    seq.generated.push(chain[a]);
+                    a += 1;
+                } else {
+                    correction = Some(residual_sample(&pbuf, q, &mut seq.rng));
+                    break;
+                }
+            }
+        }
+        seq.spec.accepted += (a - 1) as u64;
+
+        // --- commit: free rejected positions (prefix-cache entries
+        // overlapping them are invalidated), adopt the last accepted
+        // position's production logits ---
+        if a < m {
+            self.verify.rollback_seq(seq, l0 + a);
+        }
+        seq.last_logits.clear();
+        seq.last_logits
+            .extend_from_slice(&vlog[(a - 1) * vocab..a * vocab]);
+
+        seq.spec.chain = chain;
+        seq.spec.draft_probs = qall;
+        seq.spec.qstep = qstep;
+        seq.spec.chunk_logits = vlog;
+        seq.spec.pbuf = pbuf;
+
+        if let Some(c) = correction {
+            // Rejection sampling's residual draw is a committed token; it
+            // must be forwarded now (production) to keep the invariants.
+            seq.generated.push(c);
+            if !seq.finished() {
+                if self.verify.reserve_seq(seq) {
+                    model.forward_token(
+                        c,
+                        seq.kv.as_dyn(),
+                        self.verify.sparsifier.as_ref(),
+                        &mut seq.scratch,
+                        &mut seq.stats,
+                        &mut seq.last_logits,
+                    );
+                } else {
+                    seq.finish_override = Some(FinishReason::CacheFull);
+                }
+            }
+        }
+
+        if self.cfg.adaptive {
+            seq.spec.cur_k = if a == m {
+                (seq.spec.cur_k + 1).min(self.cfg.max_k)
+            } else {
+                a.clamp(self.cfg.min_k, self.cfg.max_k)
+            };
+        }
+    }
+
+    /// One scheduling step over sequence slots: armed sequences run a full
+    /// speculative round, unarmed ones a plain decode step — the chunked
+    /// slot parallelism is [`Engine::step_slots_with`]'s, so speculative
+    /// and normal sequences coexist in one batch.
+    pub fn step_slots(&self, slots: &mut [&mut SeqState]) {
+        self.verify.step_slots_with(slots, |seq| self.step_one(seq));
+    }
+
+    fn step_one(&self, seq: &mut SeqState) {
+        if seq.spec.cur_k > 0 {
+            self.spec_round(seq);
+        } else {
+            self.verify.decode_one(seq);
+        }
+    }
+
+    /// One step across a batch (unfinished sequences only).
+    pub fn step_batch(&self, seqs: &mut [SeqState]) {
+        let mut active: Vec<&mut SeqState> =
+            seqs.iter_mut().filter(|s| !s.finished()).collect();
+        self.step_slots(&mut active[..]);
+    }
+
+    /// Run a prompt to completion speculatively, returning the sequence for
+    /// inspection (acceptance counters, stats, finish reason).
+    pub fn run_seq(&self, id: u64, prompt: &str, max_new: usize, sampling: Sampling) -> SeqState {
+        let mut seq = self.admit(id, prompt, max_new, sampling);
+        self.prefill(&mut seq);
+        while !seq.finished() {
+            self.spec_round(&mut seq);
+        }
+        seq
+    }
+
+    /// Run a prompt to completion (prefill + speculative decode rounds).
+    pub fn run_to_completion(
+        &self,
+        prompt: &str,
+        max_new: usize,
+        sampling: Sampling,
+    ) -> (String, ForwardStats) {
+        let seq = self.run_seq(0, prompt, max_new, sampling);
         (seq.text(), seq.stats)
     }
 }
@@ -475,6 +841,41 @@ mod tests {
         e.prefill(&mut seq);
         let d = seq.stats.density();
         assert!(d > 0.05 && d < 0.95, "density {d}");
+    }
+
+    #[test]
+    fn spec_with_identical_draft_accepts_everything() {
+        // Draft config == production config: every draft token is exactly
+        // the verifier's choice, so acceptance must be total and the text
+        // identical to plain decode.
+        let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+        let sp: Arc<dyn Sparsifier> = Arc::new(ScoredSparsifier::new(
+            "teal",
+            (0..model.cfg.n_layers * 7)
+                .map(|_| ScoredLayer { ga: None, tau: 0.3 })
+                .collect(),
+        ));
+        let engine = Arc::new(Engine::new(
+            Arc::clone(&model),
+            Arc::clone(&sp),
+            EngineCfg {
+                threads: 1,
+                ..EngineCfg::default()
+            },
+        ));
+        let (baseline, _) = engine.run_to_completion("the sun ", 16, Sampling::Greedy);
+        let spec = SpecEngine::new(Arc::clone(&engine), sp, SpecCfg::default());
+        let seq = spec.run_seq(0, "the sun ", 16, Sampling::Greedy);
+        assert_eq!(seq.text(), baseline);
+        assert_eq!(seq.generated.len(), 16);
+        assert!(seq.spec.drafted > 0, "rounds actually drafted");
+        assert_eq!(
+            seq.spec.accepted, seq.spec.drafted,
+            "identical draft must be fully accepted"
+        );
+        assert!((seq.spec.acceptance_rate() - 1.0).abs() < 1e-12);
+        // Full acceptance grows the adaptive chain toward the ceiling.
+        assert!(seq.spec.cur_k > SpecCfg::default().k);
     }
 
     #[test]

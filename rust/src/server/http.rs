@@ -89,7 +89,12 @@ pub fn route(coord: &Arc<Coordinator>, req: &HttpRequest) -> (u16, &'static str,
                     "Bad Request",
                     Json::obj(vec![("error", Json::Str(e))]).to_string_compact(),
                 ),
-                Ok(r) => match coord.submit_blocking(&r.prompt, r.max_new, r.sampling) {
+                Ok(r) => match coord.submit_blocking_opts(
+                    &r.prompt,
+                    r.max_new,
+                    r.sampling,
+                    r.speculative,
+                ) {
                     Ok(resp) => (200, "OK", resp.to_json().to_string_pretty()),
                     Err(e) => (
                         503,

@@ -25,6 +25,12 @@ pub struct Metrics {
     /// Prompt tokens served from / missed by the prefix cache.
     pub prefix_hit_tokens: u64,
     pub prefix_miss_tokens: u64,
+    /// Speculative-decoding rounds (draft pass + verify chunk) completed.
+    pub spec_rounds_total: u64,
+    /// Draft tokens proposed beyond each round's free first token.
+    pub spec_drafted_tokens: u64,
+    /// Of those, accepted by the production verify pass.
+    pub spec_accepted_tokens: u64,
 }
 
 impl Metrics {
@@ -45,7 +51,19 @@ impl Metrics {
             blocks_in_use: 0,
             prefix_hit_tokens: 0,
             prefix_miss_tokens: 0,
+            spec_rounds_total: 0,
+            spec_drafted_tokens: 0,
+            spec_accepted_tokens: 0,
         }
+    }
+
+    /// Fraction of proposed draft tokens accepted by verification (0.0
+    /// before any speculative round has run).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_drafted_tokens == 0 {
+            return 0.0;
+        }
+        self.spec_accepted_tokens as f64 / self.spec_drafted_tokens as f64
     }
 
     /// Fraction of prompt tokens served from the prefix cache (0.0 before
@@ -106,6 +124,22 @@ impl Metrics {
                 "preemptions_total",
                 Json::Num(self.preemptions_total as f64),
             ),
+            (
+                "spec_rounds_total",
+                Json::Num(self.spec_rounds_total as f64),
+            ),
+            (
+                "spec_drafted_tokens",
+                Json::Num(self.spec_drafted_tokens as f64),
+            ),
+            (
+                "spec_accepted_tokens",
+                Json::Num(self.spec_accepted_tokens as f64),
+            ),
+            (
+                "spec_acceptance_rate",
+                Json::Num(self.spec_acceptance_rate()),
+            ),
         ])
     }
 }
@@ -141,6 +175,18 @@ mod tests {
         assert!(j.get("throughput_tok_s").as_f64().is_some());
         assert_eq!(j.get("blocks_total").as_usize(), Some(0));
         assert_eq!(j.get("preemptions_total").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn spec_acceptance_rate_derivation() {
+        let mut m = Metrics::new();
+        assert_eq!(m.spec_acceptance_rate(), 0.0, "no rounds yet");
+        m.spec_drafted_tokens = 40;
+        m.spec_accepted_tokens = 30;
+        assert!((m.spec_acceptance_rate() - 0.75).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("spec_drafted_tokens").as_usize(), Some(40));
+        assert!((j.get("spec_acceptance_rate").as_f64().unwrap() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -16,5 +16,5 @@ pub mod http;
 pub mod coordinator;
 
 pub use coordinator::{Coordinator, CoordinatorCfg};
-pub use engine::{Engine, EngineCfg};
+pub use engine::{Engine, EngineCfg, SpecCfg, SpecEngine};
 pub use request::{GenRequest, GenResponse};

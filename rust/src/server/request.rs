@@ -16,6 +16,11 @@ pub struct GenRequest {
     /// Set when the scheduler preempted this request's sequence for pool
     /// pressure and requeued it (surfaces as `preempted->resumed`).
     pub preempted: bool,
+    /// Opt this request out of speculative decoding (`"speculative": false`
+    /// in the body) on a `--speculative` server; speculative and plain
+    /// sequences share the batch. Ignored when the server isn't
+    /// speculative.
+    pub speculative: bool,
 }
 
 impl GenRequest {
@@ -27,11 +32,13 @@ impl GenRequest {
             sampling: Sampling::Greedy,
             arrived: Instant::now(),
             preempted: false,
+            speculative: true,
         }
     }
 
     /// Parse the POST /generate body:
-    /// `{"prompt": "...", "max_new": 32, "temperature": 0.0}`.
+    /// `{"prompt": "...", "max_new": 32, "temperature": 0.0,
+    /// "speculative": true}`.
     pub fn from_json(id: u64, j: &Json) -> anyhow::Result<GenRequest> {
         let prompt = j.req_str("prompt")?.to_string();
         if prompt.is_empty() {
@@ -39,6 +46,7 @@ impl GenRequest {
         }
         let max_new = j.get("max_new").as_usize().unwrap_or(32);
         let temp = j.get("temperature").as_f64().unwrap_or(0.0);
+        let speculative = j.get("speculative").as_bool().unwrap_or(true);
         Ok(GenRequest {
             id,
             prompt,
@@ -50,6 +58,7 @@ impl GenRequest {
             },
             arrived: Instant::now(),
             preempted: false,
+            speculative,
         })
     }
 }
@@ -107,6 +116,13 @@ mod tests {
         let r = GenRequest::from_json(2, &j).unwrap();
         assert_eq!(r.sampling, Sampling::Temperature(0.7));
         assert_eq!(r.max_new, 32); // default
+        assert!(r.speculative, "speculative defaults on");
+    }
+
+    #[test]
+    fn parse_speculative_opt_out() {
+        let j = Json::parse(r#"{"prompt": "x", "speculative": false}"#).unwrap();
+        assert!(!GenRequest::from_json(5, &j).unwrap().speculative);
     }
 
     #[test]

@@ -382,6 +382,210 @@ fn paged_engine_text_equals_flat_engine() {
     }
 }
 
+/// Property: random interleavings of append / truncate / external share on
+/// a `PagedSeq` never leak or double-free pool blocks (double-free panics
+/// inside the pool). After every round all references drop and the pool
+/// must be empty with balanced lifetime counters. Truncation goes through
+/// `KvManager::rollback`, so the prefix-cache invalidation path runs under
+/// the same interleavings.
+#[test]
+fn truncate_interleaving_property_no_leak_no_double_free() {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let bs = 4usize;
+    let mgr = KvManager::new(
+        &cfg,
+        &KvCfg {
+            pool_blocks: 48,
+            block_size: bs,
+            prefix_cache: true,
+        },
+    );
+    let d = cfg.d_model;
+    let k = vec![0.25f32; d];
+    let v = vec![0.75f32; d];
+    let mut rng = Pcg64::new(0x7AC4);
+    for round in 0..30 {
+        let (mut seq, hit) = mgr.acquire(&[1]);
+        assert_eq!(hit, 0);
+        let mut external: Vec<u32> = Vec::new();
+        let mut len = 0usize;
+        for _ in 0..150 {
+            match rng.below(6) {
+                0 | 1 | 2 => {
+                    // Append one position (may fail under pool pressure
+                    // from external shares — that is fine).
+                    if mgr.try_reserve(&mut seq) {
+                        for layer in 0..cfg.n_layers {
+                            seq.store(layer, len, &k, &v);
+                        }
+                        seq.advance();
+                        len += 1;
+                    }
+                }
+                3 => {
+                    // Roll back to a random point (0..=len).
+                    let to = rng.below(len + 1);
+                    mgr.rollback(&mut seq, to);
+                    len = to;
+                }
+                4 => {
+                    // External share of a random mapped block (a prefix
+                    // cache or forked sequence would hold such a ref).
+                    if !seq.blocks().is_empty() {
+                        let b = seq.blocks()[rng.below(seq.blocks().len())];
+                        mgr.pool().retain(b);
+                        external.push(b);
+                    }
+                }
+                _ => {
+                    // Drop an external share.
+                    if let Some(b) = external.pop() {
+                        mgr.pool().release(b);
+                    }
+                }
+            }
+            assert_eq!(seq.seq_len(), len, "length bookkeeping diverged");
+            assert!(
+                seq.blocks().len() >= len.div_ceil(bs),
+                "page table lost blocks it still needs"
+            );
+        }
+        drop(seq);
+        for b in external {
+            mgr.pool().release(b);
+        }
+        assert_eq!(mgr.blocks_in_use(), 0, "round {round} leaked blocks");
+    }
+    let (allocs, frees) = mgr.pool().counters();
+    assert_eq!(allocs, frees, "lifetime alloc/free imbalance");
+    assert!(allocs > 0, "the property test actually allocated");
+}
+
+/// Truncate-then-reappend must be invisible: decoding a detour of garbage
+/// tokens, rolling them back, and continuing produces bit-identical logits
+/// to the straight-line run — on the flat slab and on pages, with the cut
+/// point inside a block.
+#[test]
+fn truncate_then_reappend_is_bit_identical() {
+    let model = Model::synthetic(ModelConfig::preset("nano").unwrap(), 42);
+    let cfg = &model.cfg;
+    let mut rng = Pcg64::new(17);
+    let tokens: Vec<usize> = (0..14).map(|_| rng.below(cfg.vocab_size)).collect();
+    let garbage: Vec<usize> = (0..5).map(|_| rng.below(cfg.vocab_size)).collect();
+    let cut = 7usize; // mid-block at bs=4
+
+    // Straight-line reference (flat).
+    let mut stats = ForwardStats::default();
+    let mut scratch = Scratch::new(cfg);
+    let mut flat_ref = KvCache::new(cfg);
+    let mut logits: Vec<f32> = Vec::new();
+    let mut reference: Vec<Vec<f32>> = Vec::new();
+    for &t in &tokens {
+        model.forward_token(t, &mut flat_ref, &Dense, &mut scratch, &mut stats, &mut logits);
+        reference.push(logits.clone());
+    }
+
+    // Detour runs: decode `cut` tokens, wander into garbage, roll back,
+    // continue with the real suffix.
+    let mgr = KvManager::new(
+        cfg,
+        &KvCfg {
+            pool_blocks: 64,
+            block_size: 4,
+            prefix_cache: true,
+        },
+    );
+    for backend in 0..2 {
+        let mut flat = KvCache::new(cfg);
+        let (mut paged_seq, _) = mgr.acquire(&tokens);
+        let kv: &mut dyn KvSeq = if backend == 0 { &mut flat } else { &mut paged_seq };
+        let mut scratch = Scratch::new(cfg);
+        let mut l: Vec<f32> = Vec::new();
+        for &t in &tokens[..cut] {
+            assert!(kv.try_reserve());
+            model.forward_token(t, &mut *kv, &Dense, &mut scratch, &mut stats, &mut l);
+        }
+        for &g in &garbage {
+            assert!(kv.try_reserve());
+            model.forward_token(g, &mut *kv, &Dense, &mut scratch, &mut stats, &mut l);
+        }
+        kv.truncate(cut);
+        assert_eq!(kv.seq_len(), cut);
+        for (j, &t) in tokens.iter().enumerate().skip(cut) {
+            assert!(kv.try_reserve());
+            model.forward_token(t, &mut *kv, &Dense, &mut scratch, &mut stats, &mut l);
+            for vx in 0..cfg.vocab_size {
+                assert_eq!(
+                    l[vx].to_bits(),
+                    reference[j][vx].to_bits(),
+                    "backend {backend}: post-rollback logits diverged at pos {j} vocab {vx}"
+                );
+            }
+        }
+    }
+}
+
+/// Regression (ISSUE 3 satellite): prefix-cache entries overlapping a
+/// rolled-back tail must be invalidated on rollback, so a later prefix hit
+/// can never adopt rejected-token KV. Clean leading blocks of the same
+/// entry stay cached.
+#[test]
+fn rollback_invalidates_overlapping_prefix_entries() {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let bs = 4usize;
+    let mgr = KvManager::new(
+        &cfg,
+        &KvCfg {
+            pool_blocks: 32,
+            block_size: bs,
+            prefix_cache: true,
+        },
+    );
+    let d = cfg.d_model;
+    // 8 prompt tokens + 4 generated: 3 full blocks.
+    let full: Vec<usize> = (0..12).collect();
+    let probe: Vec<usize> = (0..16).collect();
+    let (mut seq, _) = mgr.acquire(&full[..8]);
+    for pos in 0..12 {
+        assert!(mgr.try_reserve(&mut seq));
+        for layer in 0..cfg.n_layers {
+            seq.store(layer, pos, &vec![1.0; d], &vec![2.0; d]);
+        }
+        seq.advance();
+    }
+    // Publish prompt + generated continuation (the flow a
+    // publish-on-completion feature would run).
+    mgr.insert_prefix(&full, &seq);
+    let cached_before = mgr.pool().ref_count(seq.blocks()[2]);
+    assert_eq!(cached_before, 2, "tree holds a ref on the generated block");
+    let (warm, hit) = mgr.acquire(&probe);
+    assert_eq!(hit, 12, "warm probe sees all three cached blocks");
+    drop(warm);
+
+    // Reject the last 3 generated tokens: keep 9 positions. Block 2
+    // (positions 8..12) overlaps the rolled-back tail.
+    let block2 = seq.blocks()[2];
+    mgr.rollback(&mut seq, 9);
+    assert_eq!(seq.seq_len(), 9);
+    assert_eq!(seq.blocks().len(), 3, "partially-kept tail block stays mapped");
+    assert_eq!(
+        mgr.pool().ref_count(block2),
+        1,
+        "tree ref on the overlapping block released"
+    );
+
+    // A later identical prompt must hit only the clean prompt blocks.
+    let (warm, hit) = mgr.acquire(&probe);
+    assert_eq!(
+        hit, 8,
+        "prefix hits stop before the invalidated generated block"
+    );
+    assert_eq!(warm.blocks(), &seq.blocks()[..2]);
+    drop(warm);
+    drop(seq);
+    assert_eq!(mgr.blocks_in_use(), 2, "only the clean cached blocks remain");
+}
+
 /// PagedSeq is a drop-release RAII handle: engine sequences going out of
 /// scope return every page, including shared prefix pages.
 #[test]
