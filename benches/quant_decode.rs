@@ -1,0 +1,263 @@
+//! Quantized-weights decode A/B bench: dense-f32 vs int8 vs int4 at 0% and
+//! ~50% activation sparsity on a deliberately memory-heavy synthetic model
+//! (decode streams every projection's weights once per token, which is
+//! exactly the traffic group quantization divides by 4x/8x). Writes
+//! `results/bench_quant.csv` (all rows) and `BENCH_quant.json` (the A/B
+//! summary the CI smoke job checks: tok/s, weight-GB/s, logits KL vs f32,
+//! compression ratios).
+//!
+//!     cargo bench --bench quant_decode
+
+use std::sync::Arc;
+use wisparse::eval::kl::mean_token_kl;
+use wisparse::model::sampler::Sampling;
+use wisparse::model::transformer::{ForwardStats, Model};
+use wisparse::model::ModelConfig;
+use wisparse::quant::QuantMode;
+use wisparse::report::csv::{f, write_csv};
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+use wisparse::sparsity::Sparsifier;
+use wisparse::util::json::Json;
+use wisparse::util::timer::Stopwatch;
+
+/// Same memory-heavy profile as the speculative bench: ~32 MB of f32
+/// projection weights, so token-major decode is bandwidth-bound.
+fn bench_config() -> ModelConfig {
+    ModelConfig {
+        name: "quant-bench".to_string(),
+        vocab_size: 256,
+        d_model: 256,
+        n_layers: 10,
+        n_heads: 4,
+        ffn_dim: 704,
+        max_seq: 192,
+        rope_base: 10000.0,
+        rmsnorm_eps: 1e-5,
+    }
+}
+
+fn teal(model: &Model, tau: f32) -> Arc<dyn Sparsifier> {
+    Arc::new(ScoredSparsifier::new(
+        "teal",
+        (0..model.cfg.n_layers * 7)
+            .map(|_| ScoredLayer { ga: None, tau })
+            .collect(),
+    ))
+}
+
+const PROMPTS: [&str; 3] = ["the quick brown fox ", "12 + 34 = ", "once upon a time "];
+const MAX_NEW: usize = 96;
+const REPS: usize = 2;
+const GROUP: usize = 64;
+/// tau 0.0 keeps everything (the 0%-sparsity row); 0.45 is the ~50%-density
+/// production configuration other benches use.
+const TAUS: [f32; 2] = [0.0, 0.45];
+
+struct Row {
+    repr: &'static str,
+    tau: f32,
+    tok_s: f64,
+    gb_s: f64,
+    density: f64,
+    kl_vs_f32: f64,
+    compression: f64,
+}
+
+/// Timed decode (prefill excluded), best of REPS.
+fn decode_run(model: &Arc<Model>, sp: &Arc<dyn Sparsifier>) -> (f64, f64) {
+    let engine = Engine::new(Arc::clone(model), Arc::clone(sp), EngineCfg::default());
+    let mut best_tok_s = 0.0f64;
+    let mut density = 1.0f64;
+    for _ in 0..REPS {
+        let mut secs = 0.0f64;
+        let mut tokens = 0usize;
+        let mut dsum = 0.0f64;
+        for (i, prompt) in PROMPTS.iter().enumerate() {
+            let mut seq = engine.admit(i as u64, prompt, MAX_NEW, Sampling::Greedy);
+            engine.prefill(&mut seq);
+            let sw = Stopwatch::start();
+            while !seq.finished() {
+                engine.decode_one(&mut seq);
+            }
+            secs += sw.elapsed_secs();
+            tokens += seq.generated.len();
+            dsum += seq.stats.density();
+        }
+        let tok_s = tokens as f64 / secs;
+        if tok_s > best_tok_s {
+            best_tok_s = tok_s;
+            density = dsum / PROMPTS.len() as f64;
+        }
+    }
+    (best_tok_s, density)
+}
+
+/// Teacher-forced logits for a fixed token sequence under a sparsifier.
+fn forced_logits(model: &Model, tokens: &[usize], sp: &dyn Sparsifier) -> wisparse::tensor::Tensor {
+    let mut stats = ForwardStats::default();
+    model.forward_seq(tokens, sp, &mut stats, None)
+}
+
+fn main() {
+    let cfg = bench_config();
+    println!(
+        "== quantized decode A/B: {} ({} params, {} prompts x {MAX_NEW} tokens, group {GROUP}) ==",
+        cfg.name,
+        cfg.n_params(),
+        PROMPTS.len()
+    );
+    let f32_model = Arc::new(Model::synthetic(cfg, 99));
+    let mut models: Vec<(&'static str, Arc<Model>)> = vec![("f32", Arc::clone(&f32_model))];
+    for mode in [QuantMode::Int8, QuantMode::Int4] {
+        let mut m = Model::synthetic(bench_config(), 99);
+        m.quantize(mode, GROUP);
+        models.push((mode.name(), Arc::new(m)));
+    }
+
+    // Fixed evaluation sequence for the KL columns: the f32 model's own
+    // dense greedy continuation, teacher-forced through every repr.
+    let mut stats = ForwardStats::default();
+    let prompt_tokens: Vec<usize> = "the quick brown fox ".bytes().map(|b| b as usize).collect();
+    let continuation =
+        f32_model.generate_greedy(&prompt_tokens, 48, &wisparse::sparsity::Dense, &mut stats);
+    let mut eval_tokens = prompt_tokens.clone();
+    eval_tokens.extend(&continuation);
+    // f32 reference logits per tau, computed once and shared by both
+    // quantized reprs' KL columns.
+    let f32_refs: Vec<(f32, wisparse::tensor::Tensor)> = TAUS
+        .iter()
+        .map(|&tau| {
+            let sp = teal(&f32_model, tau);
+            (tau, forced_logits(&f32_model, &eval_tokens, sp.as_ref()))
+        })
+        .collect();
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut csv = Vec::new();
+    for (repr, model) in models.iter() {
+        let repr: &'static str = *repr;
+        let compression =
+            model.weight_bytes_dense() as f64 / model.weight_bytes_resident() as f64;
+        for &tau in &TAUS {
+            let sp = teal(model, tau);
+            let (tok_s, density) = decode_run(model, &sp);
+            // Weight bytes actually streamed per token: kept fraction of
+            // the block projections plus the always-dense lm_head.
+            let lm_head_bytes = {
+                use wisparse::quant::WeightRepr;
+                model.lm_head.resident_bytes()
+            };
+            let proj_bytes = model.weight_bytes_resident() as f64
+                - model.embed.numel() as f64 * 4.0
+                - lm_head_bytes as f64;
+            let bytes_per_token = proj_bytes * density + lm_head_bytes as f64;
+            let gb_s = bytes_per_token * tok_s / 1e9;
+            let kl_vs_f32 = if repr == "f32" {
+                0.0
+            } else {
+                let (_, a) = f32_refs
+                    .iter()
+                    .find(|(t, _)| *t == tau)
+                    .expect("reference computed for every tau");
+                let b = forced_logits(model, &eval_tokens, sp.as_ref());
+                mean_token_kl(a, &b)
+            };
+            println!(
+                "{repr:>5} tau={tau:<4}: {tok_s:>8.1} tok/s  ({gb_s:.2} weight-GB/s, density {density:.3}, KL {kl_vs_f32:.5}, {compression:.2}x)",
+            );
+            csv.push(vec![
+                repr.to_string(),
+                format!("{tau}"),
+                f(tok_s),
+                f(gb_s),
+                f(density),
+                f(kl_vs_f32),
+                f(compression),
+            ]);
+            rows.push(Row {
+                repr,
+                tau,
+                tok_s,
+                gb_s,
+                density,
+                kl_vs_f32,
+                compression,
+            });
+        }
+    }
+    write_csv(
+        std::path::Path::new("results/bench_quant.csv"),
+        &[
+            "repr",
+            "tau",
+            "tokens_per_s",
+            "weight_gb_per_s",
+            "density",
+            "kl_vs_f32",
+            "compression",
+        ],
+        &csv,
+    )
+    .expect("csv");
+    println!("-> results/bench_quant.csv");
+
+    let find = |repr: &str, tau: f32| -> &Row {
+        rows.iter()
+            .find(|r| r.repr == repr && r.tau == tau)
+            .expect("row present")
+    };
+    let (f32_d, f32_s) = (find("f32", TAUS[0]), find("f32", TAUS[1]));
+    let (i8_d, i8_s) = (find("int8", TAUS[0]), find("int8", TAUS[1]));
+    let (i4_d, i4_s) = (find("int4", TAUS[0]), find("int4", TAUS[1]));
+    let row_json = |r: &Row| {
+        Json::obj(vec![
+            ("repr", Json::Str(r.repr.to_string())),
+            ("tau", Json::Num(r.tau as f64)),
+            ("tok_s", Json::Num(r.tok_s)),
+            ("weight_gb_s", Json::Num(r.gb_s)),
+            ("density", Json::Num(r.density)),
+            ("kl_vs_f32", Json::Num(r.kl_vs_f32)),
+            ("compression", Json::Num(r.compression)),
+        ])
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::Str("quant_decode".into())),
+        ("model", Json::Str("quant-bench-d256-l10".into())),
+        ("prompts", Json::Num(PROMPTS.len() as f64)),
+        ("max_new", Json::Num(MAX_NEW as f64)),
+        ("group", Json::Num(GROUP as f64)),
+        ("sparse_tau", Json::Num(TAUS[1] as f64)),
+        ("rows", Json::Arr(rows.iter().map(row_json).collect())),
+        ("f32_dense_tok_s", Json::Num(f32_d.tok_s)),
+        ("f32_sparse_tok_s", Json::Num(f32_s.tok_s)),
+        ("int8_dense_tok_s", Json::Num(i8_d.tok_s)),
+        ("int8_sparse_tok_s", Json::Num(i8_s.tok_s)),
+        ("int4_dense_tok_s", Json::Num(i4_d.tok_s)),
+        ("int4_sparse_tok_s", Json::Num(i4_s.tok_s)),
+        ("int8_speedup_dense", Json::Num(i8_d.tok_s / f32_d.tok_s)),
+        ("int8_speedup_sparse", Json::Num(i8_s.tok_s / f32_s.tok_s)),
+        ("int4_speedup_sparse", Json::Num(i4_s.tok_s / f32_s.tok_s)),
+        (
+            "int8_ge_f32_at_equal_sparsity",
+            Json::Num(if i8_d.tok_s >= f32_d.tok_s && i8_s.tok_s >= f32_s.tok_s {
+                1.0
+            } else {
+                0.0
+            }),
+        ),
+        ("int8_kl", Json::Num(i8_s.kl_vs_f32)),
+        ("int4_kl", Json::Num(i4_s.kl_vs_f32)),
+        ("int8_compression", Json::Num(i8_d.compression)),
+        ("int4_compression", Json::Num(i4_d.compression)),
+    ]);
+    std::fs::write("BENCH_quant.json", report.to_string_pretty()).expect("BENCH_quant.json");
+    println!("-> BENCH_quant.json");
+    println!(
+        "int8 vs f32: {:.2}x dense, {:.2}x at tau {} | int4: {:.2}x sparse",
+        i8_d.tok_s / f32_d.tok_s,
+        i8_s.tok_s / f32_s.tok_s,
+        TAUS[1],
+        i4_s.tok_s / f32_s.tok_s
+    );
+}

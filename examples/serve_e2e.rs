@@ -54,6 +54,40 @@ fn http_post(addr: &str, path: &str, body: &str) -> anyhow::Result<(u16, String)
     Ok((status, String::from_utf8_lossy(&buf).into_owned()))
 }
 
+/// POST a streaming request and reassemble the chunked NDJSON body.
+fn http_post_chunked(addr: &str, path: &str, body: &str) -> anyhow::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap_or("0").parse()?;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim_end().is_empty() {
+            break;
+        }
+    }
+    let mut out = String::new();
+    loop {
+        let mut size_line = String::new();
+        reader.read_line(&mut size_line)?;
+        let size = usize::from_str_radix(size_line.trim(), 16)?;
+        if size == 0 {
+            break;
+        }
+        let mut buf = vec![0u8; size + 2]; // data + CRLF
+        reader.read_exact(&mut buf)?;
+        out.push_str(&String::from_utf8_lossy(&buf[..size]));
+    }
+    Ok((status, out))
+}
+
 fn run_workload(name: &str, model: Arc<Model>, sp: Arc<dyn Sparsifier>) -> anyhow::Result<f64> {
     // The production configuration: paged KV pool + radix prefix cache.
     let engine = Arc::new(Engine::paged(
@@ -138,6 +172,26 @@ fn run_workload(name: &str, model: Arc<Model>, sp: Arc<dyn Sparsifier>) -> anyho
         quantile(&latencies, 0.99)
     );
     drop(m);
+    // Per-token streaming: `"stream": true` must emit one NDJSON line per
+    // accepted token plus a final done summary whose text equals their
+    // concatenation.
+    let (status, ndjson) = http_post_chunked(
+        &addr,
+        "/generate",
+        r#"{"prompt": "stream check ", "max_new": 8, "stream": true}"#,
+    )?;
+    assert_eq!(status, 200, "streaming request failed");
+    let lines: Vec<&str> = ndjson.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 9, "8 token lines + done, got: {ndjson}");
+    let mut streamed = String::new();
+    for line in &lines[..8] {
+        let j = wisparse::util::json::Json::parse(line).expect("token line is JSON");
+        streamed.push_str(j.get("token").as_str().unwrap_or(""));
+    }
+    let done = wisparse::util::json::Json::parse(lines[8]).expect("done line is JSON");
+    assert_eq!(done.get("done").as_bool(), Some(true));
+    assert_eq!(done.get("text").as_str(), Some(streamed.as_str()));
+    println!("[{name}] streaming: {} per-token lines ok", lines.len() - 1);
     coord.shutdown();
     // Unblock the accept loop with a dummy connection so the server thread
     // can observe the shutdown flag, then stop the scheduler.

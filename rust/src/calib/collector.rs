@@ -4,7 +4,7 @@
 use crate::calib::dataset::CalibSet;
 use crate::model::layers::{LayerId, LayerKind};
 use crate::model::transformer::{ForwardStats, Model};
-use crate::sparse_kernel::ColMajorMatrix;
+use crate::quant::WeightRepr;
 use crate::sparsity::{Dense, Sparsifier};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
@@ -37,7 +37,7 @@ impl Sparsifier for Capturing<'_> {
         "capturing"
     }
 
-    fn project(&self, layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize {
+    fn project(&self, layer: LayerId, x: &[f32], w: &dyn WeightRepr, out: &mut [f32]) -> usize {
         self.store
             .lock()
             .unwrap()

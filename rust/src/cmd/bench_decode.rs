@@ -22,14 +22,34 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         .opt("new-tokens", "200", "tokens to generate (paper: 200)")
         .opt("reps", "3", "repetitions (best reported)")
         .opt("budget", "quick", "calibration budget if no cached plan")
+        .opt("quant", "off", "weight quantization (off|int8|int4)")
+        .opt("quant-group", "64", "rows per scale group when quantizing")
         .flag("synthetic", "use random weights")
         .parse(argv)?;
     let artifacts = Path::new(args.get("artifacts"));
-    let model = Arc::new(common::load_model(
+    let quant = args.get("quant");
+    let mut model = common::load_model(
         artifacts,
         args.get("model"),
         args.get_flag("synthetic"),
-    )?);
+    )?;
+    if quant != "off" {
+        let mode = wisparse::quant::QuantMode::parse(quant)
+            .ok_or_else(|| anyhow::anyhow!("--quant must be off|int8|int4, got `{quant}`"))?;
+        model.quantize(mode, args.get_usize("quant-group")?);
+        if model.weight_repr_name() != mode.name() {
+            // quantize() never re-rounds existing codes: refuse to mislabel
+            // a run that would actually execute another representation.
+            anyhow::bail!(
+                "model {} already carries {} weights; cannot bench it as {}",
+                args.get("model"),
+                model.weight_repr_name(),
+                mode.name()
+            );
+        }
+        model.cfg.name = mode.checkpoint_name(args.get("model"));
+    }
+    let model = Arc::new(model);
     let method = args.get("method");
     let sparsifier = if method == "dense" {
         Arc::new(wisparse::sparsity::Dense) as Arc<dyn wisparse::sparsity::Sparsifier>
@@ -66,9 +86,11 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         );
     }
     println!(
-        "best: model={} method={} density={:.3} -> {:.1} tokens/s",
-        args.get("model"),
+        "best: model={} method={} weights={} ({:.1} MB resident) density={:.3} -> {:.1} tokens/s",
+        model.cfg.name,
         method,
+        model.weight_repr_name(),
+        model.weight_bytes_resident() as f64 / 1e6,
         density,
         best_tps
     );

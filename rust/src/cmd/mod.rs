@@ -3,6 +3,7 @@
 pub mod common;
 pub mod gen_data;
 pub mod calibrate;
+pub mod quantize;
 pub mod validate;
 pub mod serve;
 pub mod bench_decode;

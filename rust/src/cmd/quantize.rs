@@ -1,0 +1,84 @@
+//! `wisparse quantize`: group-quantize a checkpoint and re-run calibration
+//! against the quantized weights, so the deployed plan's weight-aware
+//! scores and thresholds match what the fused dequant×sparse kernels will
+//! actually multiply.
+
+use std::path::Path;
+use wisparse::calib::ModelCalib;
+use wisparse::quant::QuantMode;
+use wisparse::sparsity::plan::SparsityPlan;
+use wisparse::util::cli::Args;
+
+use crate::cmd::common;
+
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::new("quantize", "group-quantize a checkpoint and recalibrate")
+        .opt("artifacts", "artifacts", "artifacts root")
+        .opt("model", "llama-micro", "model preset to quantize")
+        .opt("mode", "int8", "quantization mode (int8|int4)")
+        .opt("group", "64", "rows per scale group within a column")
+        .opt("method", "wisparse", "sparsification method to recalibrate (or `dense`)")
+        .opt("target", "0.5", "sparsity target for the recalibrated plan")
+        .opt("budget", "quick", "calibration budget (quick|default|paper)")
+        .flag("synthetic", "use random weights (no artifacts needed)")
+        .flag("no-calibrate", "write the checkpoint only, skip recalibration")
+        .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let base = args.get("model");
+    let mode = QuantMode::parse(args.get("mode"))
+        .ok_or_else(|| anyhow::anyhow!("--mode must be int8|int4, got `{}`", args.get("mode")))?;
+    let group = args.get_usize("group")?;
+    if group == 0 {
+        anyhow::bail!("--group must be >= 1");
+    }
+
+    let mut model = common::load_model(artifacts, base, args.get_flag("synthetic"))?;
+    let dense_bytes = model.weight_bytes_dense();
+    model.quantize(mode, group);
+    if model.weight_repr_name() != mode.name() {
+        // quantize() never re-rounds existing codes: requantizing a lossy
+        // checkpoint into another mode would silently keep the old codes.
+        anyhow::bail!(
+            "model {base} already carries {} weights; quantize the original \
+             f32 checkpoint instead",
+            model.weight_repr_name()
+        );
+    }
+    let qname = mode.checkpoint_name(base);
+    model.cfg.name = qname.clone();
+    let resident = model.weight_bytes_resident();
+    println!(
+        "quantized {base} -> {qname}: {:.2} MB -> {:.2} MB ({:.2}x compression, {} group {group})",
+        dense_bytes as f64 / 1e6,
+        resident as f64 / 1e6,
+        dense_bytes as f64 / resident as f64,
+        mode.name(),
+    );
+
+    let dir = artifacts.join("models").join(&qname);
+    std::fs::create_dir_all(&dir)?;
+    model.cfg.save(&dir.join("config.json"))?;
+    model.export_weights().save(&dir.join("weights.bin"))?;
+    println!("checkpoint -> {}", dir.display());
+
+    let method = args.get("method");
+    if args.get_flag("no-calibrate") || method == "dense" {
+        return Ok(());
+    }
+    // Recalibrate on the quantized model: the collector's dense passes, the
+    // `g^alpha` scores, and the tau quantiles all see the dequantized values
+    // the kernels will multiply at serving time.
+    let calib_set = common::load_calib(artifacts, base, 8, 96);
+    let calib = ModelCalib::collect(&model, &calib_set);
+    let cfg = common::search_cfg(args.get("budget"), wisparse::util::threadpool::num_threads())?;
+    let target = args.get_f64("target")?;
+    common::plan_for(artifacts, &model, &calib, method, target, &cfg, true)?;
+    println!(
+        "plan ({} @ {:.0}% on {} weights) -> {}",
+        method,
+        target * 100.0,
+        mode.name(),
+        SparsityPlan::default_path(artifacts, &qname, method, target).display()
+    );
+    Ok(())
+}

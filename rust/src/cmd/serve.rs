@@ -24,15 +24,45 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         .opt("prefix-cache", "on", "radix-tree prompt prefix sharing (on|off)")
         .opt("draft-sparsity", "0.75", "draft sparsity target for --speculative")
         .opt("spec-k", "4", "initial speculative draft-chain length")
+        .opt("quant", "off", "weight quantization (off|int8|int4)")
+        .opt("quant-group", "64", "rows per scale group when quantizing in-process")
         .flag("speculative", "self-speculative decoding (high-sparsity draft, production verify)")
         .flag("synthetic", "use random weights (no artifacts needed)")
         .parse(argv)?;
     let artifacts = Path::new(args.get("artifacts"));
-    let model = Arc::new(common::load_model(
-        artifacts,
-        args.get("model"),
-        args.get_flag("synthetic"),
-    )?);
+    let base = args.get("model");
+    let quant = args.get("quant");
+    let model = if quant == "off" {
+        common::load_model(artifacts, base, args.get_flag("synthetic"))?
+    } else {
+        let mode = wisparse::quant::QuantMode::parse(quant)
+            .ok_or_else(|| anyhow::anyhow!("--quant must be off|int8|int4, got `{quant}`"))?;
+        let qname = mode.checkpoint_name(base);
+        let qdir = artifacts.join("models").join(&qname);
+        // --synthetic means synthetic: never silently substitute a saved
+        // real checkpoint for the requested random weights.
+        if !args.get_flag("synthetic") && qdir.join("weights.bin").exists() {
+            // A `wisparse quantize` checkpoint: codes, scales and manifest
+            // load directly.
+            wisparse::info!("loading quantized checkpoint {}", qdir.display());
+            wisparse::model::transformer::Model::load_dir(&qdir)?
+        } else {
+            let mut m = common::load_model(artifacts, base, args.get_flag("synthetic"))?;
+            m.quantize(mode, args.get_usize("quant-group")?);
+            if m.weight_repr_name() != mode.name() {
+                // quantize() never re-rounds existing codes, so a checkpoint
+                // already quantized in another mode cannot honor --quant.
+                anyhow::bail!(
+                    "model {base} already carries {} weights; cannot serve it as {}",
+                    m.weight_repr_name(),
+                    mode.name()
+                );
+            }
+            m.cfg.name = qname;
+            m
+        }
+    };
+    let model = Arc::new(model);
     let method = args.get("method");
     let speculative = args.get_flag("speculative");
     // Calibration activations feed both the production plan (non-dense
@@ -109,9 +139,11 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     let sched = Arc::clone(&coord);
     std::thread::spawn(move || sched.run_scheduler());
     println!(
-        "serving {} ({}) — POST /generate, GET /metrics, GET /health",
-        args.get("model"),
-        method
+        "serving {} ({}, weights {}, {:.1} MB resident) — POST /generate, GET /metrics, GET /health",
+        model.cfg.name,
+        method,
+        model.weight_repr_name(),
+        model.weight_bytes_resident() as f64 / 1e6
     );
     println!(
         "paged KV: {} blocks x {} positions, prefix cache {}",

@@ -19,6 +19,7 @@ pub mod model;
 pub mod kv;
 pub mod sparsity;
 pub mod sparse_kernel;
+pub mod quant;
 pub mod calib;
 pub mod eval;
 pub mod server;

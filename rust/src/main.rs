@@ -11,6 +11,7 @@ USAGE: wisparse <command> [options]   (--help per command)
 setup
   gen-data      generate the synthetic corpus + calibration sets
   calibrate     run a calibration pipeline, write a sparsity plan
+  quantize      group-quantize a checkpoint (int8/int4) and recalibrate
   validate      cross-validate native engine vs PJRT-compiled HLO
 
 serving
@@ -39,6 +40,7 @@ fn main() {
     let result = match cmd {
         "gen-data" => cmd::gen_data::run(&rest),
         "calibrate" => cmd::calibrate::run(&rest),
+        "quantize" => cmd::quantize::run(&rest),
         "validate" => cmd::validate::run(&rest),
         "serve" => cmd::serve::run(&rest),
         "bench-decode" => cmd::bench_decode::run(&rest),

@@ -11,28 +11,30 @@ use crate::model::kv_cache::KvCache;
 use crate::model::layers::{LayerId, LayerKind};
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
-use crate::sparse_kernel::{dense_gemv_parallel, ColMajorMatrix};
+use crate::quant::{QuantMode, WeightMat, WeightRepr};
+use crate::sparse_kernel::ColMajorMatrix;
 use crate::sparsity::Sparsifier;
 use crate::tensor::ops::{rmsnorm, rope_inplace, silu, softmax_inplace};
 use crate::tensor::Tensor;
 use crate::util::threadpool::intra_op_threads;
 use std::path::Path;
 
-/// One transformer block's weights in kernel layout.
+/// One transformer block's weights in kernel layout — dense-f32 columns or
+/// group-quantized codes, behind one [`WeightRepr`] contract either way.
 pub struct BlockWeights {
     pub attn_norm: Vec<f32>,
-    pub wq: ColMajorMatrix,
-    pub wk: ColMajorMatrix,
-    pub wv: ColMajorMatrix,
-    pub wo: ColMajorMatrix,
+    pub wq: WeightMat,
+    pub wk: WeightMat,
+    pub wv: WeightMat,
+    pub wo: WeightMat,
     pub mlp_norm: Vec<f32>,
-    pub w_gate: ColMajorMatrix,
-    pub w_up: ColMajorMatrix,
-    pub w_down: ColMajorMatrix,
+    pub w_gate: WeightMat,
+    pub w_up: WeightMat,
+    pub w_down: WeightMat,
 }
 
 impl BlockWeights {
-    pub fn w(&self, kind: LayerKind) -> &ColMajorMatrix {
+    pub fn w(&self, kind: LayerKind) -> &WeightMat {
         match kind {
             LayerKind::Q => &self.wq,
             LayerKind::K => &self.wk,
@@ -42,6 +44,31 @@ impl BlockWeights {
             LayerKind::Up => &self.w_up,
             LayerKind::Down => &self.w_down,
         }
+    }
+
+    pub fn w_mut(&mut self, kind: LayerKind) -> &mut WeightMat {
+        match kind {
+            LayerKind::Q => &mut self.wq,
+            LayerKind::K => &mut self.wk,
+            LayerKind::V => &mut self.wv,
+            LayerKind::O => &mut self.wo,
+            LayerKind::Gate => &mut self.w_gate,
+            LayerKind::Up => &mut self.w_up,
+            LayerKind::Down => &mut self.w_down,
+        }
+    }
+}
+
+/// Checkpoint tensor name for one linear layer (trainer convention).
+fn weight_name(block: usize, kind: LayerKind) -> String {
+    match kind {
+        LayerKind::Q => Weights::attn_weight_name(block, "q"),
+        LayerKind::K => Weights::attn_weight_name(block, "k"),
+        LayerKind::V => Weights::attn_weight_name(block, "v"),
+        LayerKind::O => Weights::attn_weight_name(block, "o"),
+        LayerKind::Gate => Weights::mlp_weight_name(block, "gate"),
+        LayerKind::Up => Weights::mlp_weight_name(block, "up"),
+        LayerKind::Down => Weights::mlp_weight_name(block, "down"),
     }
 }
 
@@ -132,27 +159,40 @@ impl Scratch {
 }
 
 /// The model: weights in kernel layout plus precomputed per-layer column
-/// norms (`g` of Eq. 4).
+/// norms (`g` of Eq. 4, always computed from the *deployed* representation
+/// so quantized checkpoints calibrate against the weights they execute).
 pub struct Model {
     pub cfg: ModelConfig,
     pub embed: Tensor,
     pub blocks: Vec<BlockWeights>,
     pub final_norm: Vec<f32>,
-    pub lm_head: ColMajorMatrix,
+    pub lm_head: WeightMat,
     /// `g` vectors indexed by `LayerId::flat()`.
     pub col_norms: Vec<Vec<f32>>,
 }
 
 impl Model {
-    /// Assemble from a named-tensor store (the trainer's output).
+    /// Assemble from a named-tensor store (the trainer's output, or a
+    /// quantized v2 checkpoint — each weight is taken from the quantized
+    /// entries when present, the f32 tensors otherwise).
     pub fn from_weights(cfg: ModelConfig, w: &Weights) -> anyhow::Result<Model> {
-        let expect2 = |name: &str, m: usize, n: usize| -> anyhow::Result<ColMajorMatrix> {
+        let expect2 = |name: &str, m: usize, n: usize| -> anyhow::Result<WeightMat> {
+            if let Some(q) = w.quants.get(name) {
+                if (q.m, q.n) != (m, n) {
+                    anyhow::bail!(
+                        "quant tensor `{name}`: expected [{m}, {n}], got [{}, {}]",
+                        q.m,
+                        q.n
+                    );
+                }
+                return Ok(WeightMat::Quant(q.clone()));
+            }
             let t = w.get(name)?;
             let (tm, tn) = t.dims2();
             if (tm, tn) != (m, n) {
                 anyhow::bail!("tensor `{name}`: expected [{m}, {n}], got {:?}", t.shape);
             }
-            Ok(ColMajorMatrix::from_row_major(t))
+            Ok(WeightMat::Dense(ColMajorMatrix::from_row_major(t)))
         };
         let expect1 = |name: &str, n: usize| -> anyhow::Result<Vec<f32>> {
             let t = w.get(name)?;
@@ -183,12 +223,7 @@ impl Model {
         }
         let final_norm = expect1("final_norm.weight", d)?;
         let lm_head = expect2("lm_head.weight", cfg.vocab_size, d)?;
-        let mut col_norms = Vec::with_capacity(cfg.n_layers * 7);
-        for block in &blocks {
-            for &kind in &LayerKind::ALL {
-                col_norms.push(block.w(kind).col_l2_norms());
-            }
-        }
+        let col_norms = Self::compute_col_norms(&cfg, &blocks);
         Ok(Model {
             cfg,
             embed,
@@ -199,6 +234,16 @@ impl Model {
         })
     }
 
+    fn compute_col_norms(cfg: &ModelConfig, blocks: &[BlockWeights]) -> Vec<Vec<f32>> {
+        let mut col_norms = Vec::with_capacity(cfg.n_layers * 7);
+        for block in blocks {
+            for &kind in &LayerKind::ALL {
+                col_norms.push(block.w(kind).col_l2_norms());
+            }
+        }
+        col_norms
+    }
+
     /// Load `config.json` + `weights.bin` from a model directory.
     pub fn load_dir(dir: &Path) -> anyhow::Result<Model> {
         let cfg = ModelConfig::load(&dir.join("config.json"))?;
@@ -206,13 +251,116 @@ impl Model {
         Self::from_weights(cfg, &w)
     }
 
-    pub fn w(&self, id: LayerId) -> &ColMajorMatrix {
+    pub fn w(&self, id: LayerId) -> &WeightMat {
         self.blocks[id.block].w(id.kind)
     }
 
     /// Precomputed `g_i = ||W[:,i]||_2` for a layer.
     pub fn g(&self, id: LayerId) -> &[f32] {
         &self.col_norms[id.flat()]
+    }
+
+    /// Group-quantize every linear projection (the seven per block plus the
+    /// lm_head) in place, then recompute the `g` norms from the quantized
+    /// groups so downstream calibration and tau selection match the weights
+    /// the kernels will actually multiply. Embeddings and norm vectors stay
+    /// f32. Idempotent on already-quantized weights.
+    pub fn quantize(&mut self, mode: QuantMode, group: usize) {
+        for block in self.blocks.iter_mut() {
+            for &kind in &LayerKind::ALL {
+                let w = block.w_mut(kind);
+                let q = w.quantized(mode, group);
+                *w = q;
+            }
+        }
+        self.lm_head = self.lm_head.quantized(mode, group);
+        self.col_norms = Self::compute_col_norms(&self.cfg, &self.blocks);
+    }
+
+    /// Representation label of the deployed weights: `f32`, `int8`, `int4`.
+    pub fn weight_repr_name(&self) -> &'static str {
+        self.lm_head.repr_name()
+    }
+
+    /// Bytes of weight memory actually resident (embeddings and norms are
+    /// always f32; projections and lm_head follow their representation).
+    pub fn weight_bytes_resident(&self) -> usize {
+        let mut bytes = (self.embed.numel() + self.final_norm.len()) * 4;
+        for block in &self.blocks {
+            bytes += (block.attn_norm.len() + block.mlp_norm.len()) * 4;
+            for &kind in &LayerKind::ALL {
+                bytes += block.w(kind).resident_bytes();
+            }
+        }
+        bytes + self.lm_head.resident_bytes()
+    }
+
+    /// Bytes the same model occupies with dense-f32 weights (the
+    /// compression-ratio denominator).
+    pub fn weight_bytes_dense(&self) -> usize {
+        let mut bytes = (self.embed.numel() + self.final_norm.len()) * 4;
+        for block in &self.blocks {
+            bytes += (block.attn_norm.len() + block.mlp_norm.len()) * 4;
+            for &kind in &LayerKind::ALL {
+                bytes += block.w(kind).dense_equiv_bytes();
+            }
+        }
+        bytes + self.lm_head.dense_equiv_bytes()
+    }
+
+    /// Serialize back to the checkpoint container: dense layers as f32
+    /// tensors (a byte-identical v1 file when nothing is quantized),
+    /// quantized layers as v2 quant entries with a manifest describing the
+    /// deployed representation.
+    pub fn export_weights(&self) -> Weights {
+        let mut w = Weights::default();
+        let d = self.cfg.d_model;
+        w.insert("embed.weight", self.embed.clone());
+        // Advisory manifest info: models quantized via `Model::quantize`
+        // are uniform, so the first quant layer describes them all.
+        let mut quant_info: Option<(QuantMode, usize)> = None;
+        let mut put = |w: &mut Weights, name: &str, mat: &WeightMat| match mat {
+            WeightMat::Dense(dm) => w.insert(name, dm.to_row_major()),
+            WeightMat::Quant(q) => {
+                quant_info.get_or_insert((q.mode, q.group));
+                w.insert_quant(name, q.clone());
+            }
+        };
+        for (b, block) in self.blocks.iter().enumerate() {
+            w.insert(
+                &format!("blocks.{b}.attn_norm.weight"),
+                Tensor::from_vec(&[d], block.attn_norm.clone()),
+            );
+            w.insert(
+                &format!("blocks.{b}.mlp_norm.weight"),
+                Tensor::from_vec(&[d], block.mlp_norm.clone()),
+            );
+            for &kind in &LayerKind::ALL {
+                put(&mut w, &weight_name(b, kind), block.w(kind));
+            }
+        }
+        w.insert(
+            "final_norm.weight",
+            Tensor::from_vec(&[d], self.final_norm.clone()),
+        );
+        put(&mut w, "lm_head.weight", &self.lm_head);
+        if let Some((mode, group)) = quant_info {
+            w.version = 2;
+            w.manifest = crate::util::json::Json::obj(vec![
+                ("format", crate::util::json::Json::Str("quant".into())),
+                (
+                    "mode",
+                    crate::util::json::Json::Str(mode.name().to_string()),
+                ),
+                ("group", crate::util::json::Json::Num(group as f64)),
+                (
+                    "source",
+                    crate::util::json::Json::Str(self.cfg.name.clone()),
+                ),
+            ])
+            .to_string_compact();
+        }
+        w
     }
 
     /// Run one token through one block in place. `x` is the residual stream.
@@ -244,8 +392,8 @@ impl Model {
             let id = LayerId::new(b, kind);
             let w = block.w(kind);
             let kept = sp.project(id, input, w, out);
-            stats.macs_kept += (kept * w.m) as u64;
-            stats.macs_dense += (w.n * w.m) as u64;
+            stats.macs_kept += (kept * w.out_dim()) as u64;
+            stats.macs_dense += (w.in_dim() * w.out_dim()) as u64;
             stats.macs_extra += sp.extra_macs(id, w);
         };
 
@@ -340,7 +488,8 @@ impl Model {
         rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut scratch.normed);
         scratch.resid = x;
         logits.resize(self.cfg.vocab_size, 0.0);
-        dense_gemv_parallel(&self.lm_head, &scratch.normed, logits, intra_op_threads());
+        self.lm_head
+            .gemv_dense(&scratch.normed, logits, intra_op_threads());
     }
 
     /// Decode a chunk of `m` already-known tokens in one layer-major pass,
@@ -408,8 +557,7 @@ impl Model {
                 self.cfg.rmsnorm_eps,
                 &mut scratch.normed,
             );
-            dense_gemv_parallel(
-                &self.lm_head,
+            self.lm_head.gemv_dense(
                 &scratch.normed,
                 &mut logits[j * vocab..(j + 1) * vocab],
                 intra_op_threads(),
@@ -453,12 +601,8 @@ impl Model {
             cache.len = pos + 1;
             stats.tokens += 1;
             rmsnorm(&x, &self.final_norm, self.cfg.rmsnorm_eps, &mut scratch.normed);
-            dense_gemv_parallel(
-                &self.lm_head,
-                &scratch.normed,
-                logits.row_mut(t),
-                intra_op_threads(),
-            );
+            self.lm_head
+                .gemv_dense(&scratch.normed, logits.row_mut(t), intra_op_threads());
         }
         scratch.resid = x;
         logits
@@ -735,5 +879,59 @@ mod tests {
             assert_eq!(g.len(), id.kind.dims(&m.cfg).1);
             assert!(g.iter().all(|&v| v >= 0.0));
         }
+    }
+
+    #[test]
+    fn quantized_model_decodes_and_tracks_norms() {
+        let mut m = nano();
+        let f32_bytes = m.weight_bytes_resident();
+        assert_eq!(m.weight_repr_name(), "f32");
+        m.quantize(QuantMode::Int8, 8);
+        assert_eq!(m.weight_repr_name(), "int8");
+        assert!(m.weight_bytes_resident() < f32_bytes);
+        assert_eq!(m.weight_bytes_dense(), f32_bytes);
+        // Norms were recomputed from the quantized groups.
+        for id in crate::model::layers::all_layers(&m.cfg) {
+            let g = m.g(id);
+            let deployed = m.w(id).col_l2_norms();
+            for (a, b) in g.iter().zip(&deployed) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // Decode still runs and is deterministic.
+        let mut s = ForwardStats::default();
+        let a = m.generate_greedy(&[1, 2], 8, &Dense, &mut s);
+        let b = m.generate_greedy(&[1, 2], 8, &Dense, &mut s);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8);
+        // Quantizing again is a no-op on the codes.
+        let before = m.weight_bytes_resident();
+        m.quantize(QuantMode::Int4, 8);
+        assert_eq!(m.weight_repr_name(), "int8");
+        assert_eq!(m.weight_bytes_resident(), before);
+    }
+
+    #[test]
+    fn export_import_roundtrips_quantized_checkpoint() {
+        let mut m = nano();
+        m.quantize(QuantMode::Int4, 4);
+        let w = m.export_weights();
+        assert_eq!(w.version, 2);
+        assert!(w.manifest.contains("int4"), "{}", w.manifest);
+        assert_eq!(w.quants.len(), m.cfg.n_layers * 7 + 1);
+        let m2 = Model::from_weights(m.cfg.clone(), &w).unwrap();
+        assert_eq!(m2.weight_repr_name(), "int4");
+        // Logit-identical: the codes round-trip exactly.
+        let mut s1 = ForwardStats::default();
+        let mut s2 = ForwardStats::default();
+        let a = m.forward_seq(&[3, 1, 4], &Dense, &mut s1, None);
+        let b = m2.forward_seq(&[3, 1, 4], &Dense, &mut s2, None);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // A dense model still exports a v1 container.
+        let dense = nano().export_weights();
+        assert_eq!(dense.version, 1);
+        assert!(dense.quants.is_empty());
     }
 }

@@ -1,6 +1,10 @@
 //! Binary weight interchange format shared with the Python trainer.
 //!
-//! Layout (all little-endian):
+//! Two container versions, distinguished by magic so an older reader can
+//! never silently misparse a newer file:
+//!
+//! **v1** (`WSPW0001`, what `python/compile/train.py` writes — all
+//! little-endian):
 //! ```text
 //!   magic    8 bytes  "WSPW0001"
 //!   count    u32      number of tensors
@@ -9,26 +13,76 @@
 //!     ndim     u32, dims ndim x u32
 //!     data     prod(dims) x f32
 //! ```
+//!
+//! **v2** (`WSPW0002`, written whenever a checkpoint carries quantized
+//! weights or a manifest):
+//! ```text
+//!   magic        8 bytes  "WSPW0002"
+//!   version      u32      (currently 2; readers reject anything newer)
+//!   manifest_len u32, manifest bytes (utf-8 JSON, e.g.
+//!                {"format":"quant","mode":"int8","group":64})
+//!   count        u32, f32 tensor entries exactly as in v1
+//!   qcount       u32
+//!   repeat qcount times:
+//!     name_len u32, name bytes (utf-8)
+//!     mode     u32   (bits per weight: 8 or 4)
+//!     m u32, n u32, group u32
+//!     scales_len u32, scales scales_len x f32
+//!     data_len   u32, data bytes (packed codes)
+//! ```
+//!
+//! Dense-only stores keep writing byte-identical v1 files, so the Python
+//! side and any pre-versioning reader are unaffected; legacy files load as
+//! `version = 1`.
+//!
 //! Tensor names follow the convention used by `python/compile/train.py`:
 //! `embed.weight`, `blocks.{i}.attn_norm.weight`, `blocks.{i}.attn.wq.weight`,
 //! ..., `final_norm.weight`, `lm_head.weight`.
 
+use crate::quant::{QuantMatrix, QuantMode};
 use crate::tensor::Tensor;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"WSPW0001";
+const MAGIC_V1: &[u8; 8] = b"WSPW0001";
+const MAGIC_V2: &[u8; 8] = b"WSPW0002";
 
-/// Named tensor store (order-preserving by name via BTreeMap).
-#[derive(Clone, Debug, Default)]
+/// Highest container version this reader understands.
+pub const FORMAT_VERSION: u32 = 2;
+
+/// Named tensor store (order-preserving by name via BTreeMap), optionally
+/// carrying group-quantized matrices alongside the f32 tensors.
+#[derive(Clone, Debug)]
 pub struct Weights {
+    /// Container format version: 1 for legacy/dense files, 2 when quantized
+    /// entries or a manifest are present.
+    pub version: u32,
+    /// Free-form JSON manifest (empty for v1/dense checkpoints).
+    pub manifest: String,
     pub tensors: BTreeMap<String, Tensor>,
+    /// Group-quantized matrices by the same naming convention.
+    pub quants: BTreeMap<String, QuantMatrix>,
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        Self {
+            version: 1,
+            manifest: String::new(),
+            tensors: BTreeMap::new(),
+            quants: BTreeMap::new(),
+        }
+    }
 }
 
 impl Weights {
     pub fn insert(&mut self, name: &str, t: Tensor) {
         self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn insert_quant(&mut self, name: &str, q: QuantMatrix) {
+        self.quants.insert(name.to_string(), q);
     }
 
     pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
@@ -37,9 +91,22 @@ impl Weights {
             .ok_or_else(|| anyhow::anyhow!("missing tensor `{name}`"))
     }
 
-    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+    /// Whether this store needs the v2 container.
+    fn needs_v2(&self) -> bool {
+        self.version >= 2 || !self.quants.is_empty() || !self.manifest.is_empty()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
-        buf.extend_from_slice(MAGIC);
+        if self.needs_v2() {
+            buf.extend_from_slice(MAGIC_V2);
+            buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+            let mb = self.manifest.as_bytes();
+            buf.extend_from_slice(&(mb.len() as u32).to_le_bytes());
+            buf.extend_from_slice(mb);
+        } else {
+            buf.extend_from_slice(MAGIC_V1);
+        }
         buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
         for (name, t) in &self.tensors {
             let nb = name.as_bytes();
@@ -53,6 +120,29 @@ impl Weights {
                 buf.extend_from_slice(&x.to_le_bytes());
             }
         }
+        if self.needs_v2() {
+            buf.extend_from_slice(&(self.quants.len() as u32).to_le_bytes());
+            for (name, q) in &self.quants {
+                let nb = name.as_bytes();
+                buf.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+                buf.extend_from_slice(nb);
+                buf.extend_from_slice(&q.mode.tag().to_le_bytes());
+                buf.extend_from_slice(&(q.m as u32).to_le_bytes());
+                buf.extend_from_slice(&(q.n as u32).to_le_bytes());
+                buf.extend_from_slice(&(q.group as u32).to_le_bytes());
+                buf.extend_from_slice(&(q.scales.len() as u32).to_le_bytes());
+                for &s in &q.scales {
+                    buf.extend_from_slice(&s.to_le_bytes());
+                }
+                buf.extend_from_slice(&(q.data.len() as u32).to_le_bytes());
+                buf.extend_from_slice(&q.data);
+            }
+        }
+        buf
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let buf = self.to_bytes();
         let mut f = std::fs::File::create(path)
             .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
         f.write_all(&buf)?;
@@ -77,23 +167,48 @@ impl Weights {
             *pos += n;
             Ok(s)
         };
+        let take_u32 = |pos: &mut usize| -> anyhow::Result<u32> {
+            if *pos + 4 > buf.len() {
+                anyhow::bail!("truncated weight file at byte {pos}");
+            }
+            let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
         let magic = take(&mut pos, 8)?;
-        if magic != MAGIC {
-            anyhow::bail!("bad magic {:?} (not a WSPW0001 weight file)", magic);
-        }
-        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
         let mut w = Weights::default();
+        if magic == MAGIC_V1 {
+            w.version = 1; // legacy files predate the version field
+        } else if magic == MAGIC_V2 {
+            let version = take_u32(&mut pos)?;
+            if version < 2 {
+                anyhow::bail!("v2 container claims version {version}");
+            }
+            if version > FORMAT_VERSION {
+                anyhow::bail!(
+                    "weight file version {version} is newer than this reader \
+                     (understands up to {FORMAT_VERSION})"
+                );
+            }
+            w.version = version;
+            let mlen = take_u32(&mut pos)? as usize;
+            w.manifest = String::from_utf8(take(&mut pos, mlen)?.to_vec())
+                .map_err(|_| anyhow::anyhow!("non-utf8 manifest"))?;
+        } else {
+            anyhow::bail!("bad magic {:?} (not a WSPW weight file)", magic);
+        }
+        let count = take_u32(&mut pos)? as usize;
         for _ in 0..count {
-            let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let name_len = take_u32(&mut pos)? as usize;
             let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
                 .map_err(|_| anyhow::anyhow!("non-utf8 tensor name"))?;
-            let ndim = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+            let ndim = take_u32(&mut pos)? as usize;
             if ndim == 0 || ndim > 3 {
                 anyhow::bail!("tensor `{name}`: bad ndim {ndim}");
             }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize);
+                shape.push(take_u32(&mut pos)? as usize);
             }
             let numel: usize = shape.iter().product();
             let raw = take(&mut pos, numel * 4)?;
@@ -102,6 +217,56 @@ impl Weights {
                 data.push(f32::from_le_bytes(c.try_into().unwrap()));
             }
             w.tensors.insert(name, Tensor::from_vec(&shape, data));
+        }
+        if w.version >= 2 {
+            let qcount = take_u32(&mut pos)? as usize;
+            for _ in 0..qcount {
+                let name_len = take_u32(&mut pos)? as usize;
+                let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                    .map_err(|_| anyhow::anyhow!("non-utf8 quant tensor name"))?;
+                let mode = QuantMode::from_tag(take_u32(&mut pos)?)
+                    .ok_or_else(|| anyhow::anyhow!("quant `{name}`: unknown mode tag"))?;
+                let m = take_u32(&mut pos)? as usize;
+                let n = take_u32(&mut pos)? as usize;
+                let group = take_u32(&mut pos)? as usize;
+                if group == 0 {
+                    anyhow::bail!("quant `{name}`: zero group size");
+                }
+                let gpc = m.div_ceil(group).max(1);
+                let scales_len = take_u32(&mut pos)? as usize;
+                if scales_len != n * gpc {
+                    anyhow::bail!(
+                        "quant `{name}`: {scales_len} scales for {n} cols x {gpc} groups"
+                    );
+                }
+                let raw = take(&mut pos, scales_len * 4)?;
+                let mut scales = Vec::with_capacity(scales_len);
+                for c in raw.chunks_exact(4) {
+                    scales.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+                let data_len = take_u32(&mut pos)? as usize;
+                let expect = match mode {
+                    QuantMode::Int8 => n * m,
+                    QuantMode::Int4 => n * m.div_ceil(2),
+                };
+                if data_len != expect {
+                    anyhow::bail!(
+                        "quant `{name}`: {data_len} code bytes, expected {expect}"
+                    );
+                }
+                let data = take(&mut pos, data_len)?.to_vec();
+                w.quants.insert(
+                    name,
+                    QuantMatrix {
+                        m,
+                        n,
+                        mode,
+                        group,
+                        scales,
+                        data,
+                    },
+                );
+            }
         }
         if pos != buf.len() {
             anyhow::bail!("trailing bytes in weight file ({} unused)", buf.len() - pos);
@@ -122,6 +287,7 @@ impl Weights {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse_kernel::ColMajorMatrix;
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -137,14 +303,49 @@ mod tests {
         w.save(&path).unwrap();
         let w2 = Weights::load(&path).unwrap();
         assert_eq!(w.tensors.len(), w2.tensors.len());
+        assert_eq!(w2.version, 1, "dense store stays a v1 file");
         for (name, t) in &w.tensors {
             assert_eq!(t, w2.tensors.get(name).unwrap(), "{name}");
         }
     }
 
     #[test]
-    fn rejects_bad_magic() {
+    fn dense_store_writes_legacy_v1_bytes() {
+        let mut w = Weights::default();
+        w.insert("t", Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]));
+        let bytes = w.to_bytes();
+        assert_eq!(&bytes[..8], MAGIC_V1, "python interop must stay intact");
+    }
+
+    #[test]
+    fn quantized_store_roundtrips_as_v2() {
+        let mut rng = Pcg64::new(12);
+        let dense = ColMajorMatrix::from_row_major(&Tensor::randn(&[10, 6], 1.0, &mut rng));
+        let q = QuantMatrix::quantize(&dense, QuantMode::Int4, 4);
+        let mut w = Weights::default();
+        w.insert("norm.weight", Tensor::randn(&[10], 1.0, &mut rng));
+        w.insert_quant("layer.weight", q.clone());
+        w.manifest = r#"{"format":"quant","mode":"int4","group":4}"#.to_string();
+        let bytes = w.to_bytes();
+        assert_eq!(&bytes[..8], MAGIC_V2);
+        let w2 = Weights::from_bytes(&bytes).unwrap();
+        assert_eq!(w2.version, 2);
+        assert_eq!(w2.manifest, w.manifest);
+        assert_eq!(w2.quants.get("layer.weight").unwrap(), &q);
+        assert_eq!(w2.tensors.len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_newer_versions() {
         assert!(Weights::from_bytes(b"NOTMAGIC\x00\x00\x00\x00").is_err());
+        // A v2 file stamped with a future version must be refused, not
+        // misread: that is the point of the version field.
+        let mut w = Weights::default();
+        w.manifest = "{}".to_string();
+        let mut bytes = w.to_bytes();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = Weights::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("newer"), "{err}");
     }
 
     #[test]
@@ -161,6 +362,15 @@ mod tests {
         let mut extended = bytes.clone();
         extended.extend_from_slice(&[0u8; 4]);
         assert!(Weights::from_bytes(&extended).is_err());
+        // v2 truncation inside the quant section too.
+        let mut w2 = Weights::default();
+        let dense = ColMajorMatrix::from_row_major(&Tensor::from_vec(
+            &[2, 2],
+            vec![1., 2., 3., 4.],
+        ));
+        w2.insert_quant("q", QuantMatrix::quantize(&dense, QuantMode::Int8, 2));
+        let b2 = w2.to_bytes();
+        assert!(Weights::from_bytes(&b2[..b2.len() - 1]).is_err());
     }
 
     #[test]

@@ -1,0 +1,401 @@
+//! Fused dequant×sparse GEMV kernels over [`QuantMatrix`] weights.
+//!
+//! Same two-pass structure as the f32 fused kernels in
+//! `sparse_kernel/gemv.rs`: pass 1 scans the mask predicate into a reusable
+//! index buffer (the *identical* SIMD scans — quantization never changes
+//! which channels are kept), pass 2 walks only the kept columns. Each kept
+//! column is dequantized inline — group-by-group, one scale broadcast per
+//! group, through the dispatched [`simd::dequant_i8`] primitive — into a
+//! thread-local eight-column window that stays L1/L2-resident, then
+//! accumulated with the same fused `axpy8` pass the f32 path uses. DRAM
+//! sees only the 1-byte (int8) or half-byte (int4) code stream plus the
+//! tiny scale stream; the f32 image of a column never exists outside the
+//! reused window.
+//!
+//! Because dequantization is a single IEEE multiply per element and the
+//! accumulate pass is byte-for-byte the f32 kernel's, every kernel here is
+//! **bit-identical** to "dequantize the whole matrix, then run the f32
+//! fused kernel on the same backend" — pinned down by
+//! `rust/tests/quant_subsystem.rs` across backends, odd shapes, group
+//! sizes and tau regimes.
+
+use crate::quant::matrix::QuantMatrix;
+use crate::sparse_kernel::gemv::PAR_MIN_MACS;
+use crate::sparse_kernel::simd::{self, Backend};
+use crate::util::threadpool::parallel_slices_aligned;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread dequant window: eight column slices of the widest layer
+    /// seen, grown once and reused (steady-state decode allocates nothing).
+    static DEQ_WIN: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Kept-index scratch for the collect entry point.
+    static COLLECT_IDX: RefCell<Vec<u32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Fused scored/threshold projection on the process-wide SIMD backend.
+/// `ga = None` is the TEAL/magnitude path. `kept_idx` is caller-owned
+/// scratch. Returns the kept-channel count.
+pub fn quant_gemv_fused(
+    w: &QuantMatrix,
+    x: &[f32],
+    ga: Option<&[f32]>,
+    tau: f32,
+    out: &mut [f32],
+    kept_idx: &mut Vec<u32>,
+) -> usize {
+    quant_gemv_fused_with(simd::active(), w, x, ga, tau, out, kept_idx)
+}
+
+/// Fused projection on an explicit backend (tests / bench sweeps).
+pub fn quant_gemv_fused_with(
+    backend: Backend,
+    w: &QuantMatrix,
+    x: &[f32],
+    ga: Option<&[f32]>,
+    tau: f32,
+    out: &mut [f32],
+    kept_idx: &mut Vec<u32>,
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    match ga {
+        Some(ga) => {
+            debug_assert_eq!(ga.len(), w.n);
+            simd::scan_scored_with(backend, x, ga, tau, kept_idx);
+        }
+        None => simd::scan_threshold_with(backend, x, tau, kept_idx),
+    }
+    out.fill(0.0);
+    accum_rows_quant(backend, w, x, kept_idx, 0, out);
+    kept_idx.len()
+}
+
+/// Fused projection with intra-GEMV row parallelism (window boundaries
+/// aligned to the SIMD group width, so the split is bit-identical to the
+/// serial kernel at any thread count — exactly as the f32 path).
+pub fn quant_gemv_fused_parallel(
+    w: &QuantMatrix,
+    x: &[f32],
+    ga: Option<&[f32]>,
+    tau: f32,
+    out: &mut [f32],
+    kept_idx: &mut Vec<u32>,
+    threads: usize,
+) -> usize {
+    quant_gemv_fused_parallel_with(
+        simd::active(),
+        w,
+        x,
+        ga,
+        tau,
+        out,
+        kept_idx,
+        threads,
+        PAR_MIN_MACS,
+    )
+}
+
+/// As [`quant_gemv_fused_parallel`] with explicit backend and split
+/// threshold (tests force `min_macs = 0` to exercise the split on small
+/// shapes).
+#[allow(clippy::too_many_arguments)]
+pub fn quant_gemv_fused_parallel_with(
+    backend: Backend,
+    w: &QuantMatrix,
+    x: &[f32],
+    ga: Option<&[f32]>,
+    tau: f32,
+    out: &mut [f32],
+    kept_idx: &mut Vec<u32>,
+    threads: usize,
+    min_macs: usize,
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    match ga {
+        Some(ga) => {
+            debug_assert_eq!(ga.len(), w.n);
+            simd::scan_scored_with(backend, x, ga, tau, kept_idx);
+        }
+        None => simd::scan_threshold_with(backend, x, tau, kept_idx),
+    }
+    let kept = kept_idx.len();
+    if threads <= 1 || w.m.saturating_mul(kept) < min_macs.max(1) {
+        out.fill(0.0);
+        accum_rows_quant(backend, w, x, kept_idx, 0, out);
+        return kept;
+    }
+    let idx: &[u32] = kept_idx.as_slice();
+    parallel_slices_aligned(out, threads, 8, |_, row0, rows| {
+        rows.fill(0.0);
+        accum_rows_quant(backend, w, x, idx, row0, rows);
+    });
+    kept
+}
+
+/// Dense projection (all channels kept) on an explicit backend.
+pub fn quant_gemv_dense_with(
+    backend: Backend,
+    w: &QuantMatrix,
+    x: &[f32],
+    out: &mut [f32],
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    out.fill(0.0);
+    dense_rows_quant(backend, w, x, 0, out);
+    w.n
+}
+
+/// Dense projection with intra-GEMV row parallelism — the quantized
+/// `lm_head` path of single-sequence decode.
+pub fn quant_gemv_dense_parallel(
+    w: &QuantMatrix,
+    x: &[f32],
+    out: &mut [f32],
+    threads: usize,
+) -> usize {
+    debug_assert_eq!(x.len(), w.n);
+    debug_assert_eq!(out.len(), w.m);
+    let backend = simd::active();
+    if threads <= 1 || w.m.saturating_mul(w.n) < PAR_MIN_MACS {
+        out.fill(0.0);
+        dense_rows_quant(backend, w, x, 0, out);
+        return w.n;
+    }
+    parallel_slices_aligned(out, threads, 8, |_, row0, rows| {
+        rows.fill(0.0);
+        dense_rows_quant(backend, w, x, row0, rows);
+    });
+    w.n
+}
+
+/// Scored projection that also reports the kept-channel indices (R-Sparse's
+/// exact path over quantized weights).
+pub fn quant_gemv_scored_collect(
+    w: &QuantMatrix,
+    x: &[f32],
+    ga: &[f32],
+    tau: f32,
+    out: &mut [f32],
+    kept_buf: &mut Vec<usize>,
+) -> usize {
+    COLLECT_IDX.with(|cell| {
+        let idx = &mut *cell.borrow_mut();
+        let kept = quant_gemv_fused(w, x, Some(ga), tau, out, idx);
+        kept_buf.clear();
+        kept_buf.extend(idx.iter().map(|&c| c as usize));
+        kept
+    })
+}
+
+/// rows += sum over kept channels of `x[c] * Wq[row0..row0+rows.len(), c]`,
+/// eight columns fused per accumulator pass. Each batch of eight kept
+/// columns is dequantized inline into the thread-local window, then fed to
+/// the same dispatched `axpy8` the f32 kernels use — identical values,
+/// identical op order, bit-identical output.
+fn accum_rows_quant(
+    backend: Backend,
+    w: &QuantMatrix,
+    x: &[f32],
+    idx: &[u32],
+    row0: usize,
+    rows: &mut [f32],
+) {
+    let mlen = rows.len();
+    debug_assert!(row0 + mlen <= w.m);
+    if mlen == 0 {
+        return;
+    }
+    DEQ_WIN.with(|cell| {
+        let deq = &mut *cell.borrow_mut();
+        if deq.len() < 8 * mlen {
+            deq.resize(8 * mlen, 0.0);
+        }
+        let mut coeffs = [0.0f32; 8];
+        let mut offs = [0usize; 8];
+        let groups = idx.chunks_exact(8);
+        let rem = groups.remainder();
+        for group in groups {
+            for (j, &c) in group.iter().enumerate() {
+                let c = c as usize;
+                coeffs[j] = x[c];
+                offs[j] = j * mlen;
+                w.dequant_col_range(c, row0, &mut deq[j * mlen..(j + 1) * mlen]);
+            }
+            simd::axpy8_with(backend, &coeffs, &offs, &deq[..8 * mlen], rows);
+        }
+        for &c in rem {
+            let c = c as usize;
+            w.dequant_col_range(c, row0, &mut deq[..mlen]);
+            simd::axpy_with(backend, x[c], &deq[..mlen], rows);
+        }
+    });
+}
+
+/// Dense counterpart of [`accum_rows_quant`]: every channel, eight at a
+/// time, mirroring the f32 `dense_rows` geometry exactly.
+fn dense_rows_quant(backend: Backend, w: &QuantMatrix, x: &[f32], row0: usize, rows: &mut [f32]) {
+    let mlen = rows.len();
+    let n = w.n;
+    debug_assert!(row0 + mlen <= w.m);
+    if mlen == 0 {
+        return;
+    }
+    DEQ_WIN.with(|cell| {
+        let deq = &mut *cell.borrow_mut();
+        if deq.len() < 8 * mlen {
+            deq.resize(8 * mlen, 0.0);
+        }
+        let mut coeffs = [0.0f32; 8];
+        let mut offs = [0usize; 8];
+        let mut c = 0usize;
+        while c + 8 <= n {
+            for j in 0..8 {
+                coeffs[j] = x[c + j];
+                offs[j] = j * mlen;
+                w.dequant_col_range(c + j, row0, &mut deq[j * mlen..(j + 1) * mlen]);
+            }
+            simd::axpy8_with(backend, &coeffs, &offs, &deq[..8 * mlen], rows);
+            c += 8;
+        }
+        while c < n {
+            w.dequant_col_range(c, row0, &mut deq[..mlen]);
+            simd::axpy_with(backend, x[c], &deq[..mlen], rows);
+            c += 1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::matrix::QuantMode;
+    use crate::sparse_kernel::gemv::{dense_gemv_simd_with, sparse_gemv_fused_with};
+    use crate::sparse_kernel::ColMajorMatrix;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg64;
+
+    fn setup(m: usize, n: usize, seed: u64) -> (ColMajorMatrix, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let w = ColMajorMatrix::from_row_major(&Tensor::randn(&[m, n], 1.0, &mut rng));
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let ga: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.05).collect();
+        (w, x, ga)
+    }
+
+    #[test]
+    fn fused_bit_identical_to_dequant_reference() {
+        for backend in crate::sparse_kernel::simd::available_backends() {
+            for mode in [QuantMode::Int8, QuantMode::Int4] {
+                for group in [3usize, 16, 64] {
+                    let (w, x, ga) = setup(29, 41, 7 + group as u64);
+                    let q = QuantMatrix::quantize(&w, mode, group);
+                    let dq = q.dequantize();
+                    let mut idx_a = Vec::new();
+                    let mut idx_b = Vec::new();
+                    for tau in [0.0f32, 0.3, 0.9, f32::INFINITY] {
+                        for ga_opt in [Some(ga.as_slice()), None] {
+                            let mut a = vec![0.0f32; 29];
+                            let mut b = vec![0.0f32; 29];
+                            let ka = sparse_gemv_fused_with(
+                                backend, &dq, &x, ga_opt, tau, &mut a, &mut idx_a,
+                            );
+                            let kb = quant_gemv_fused_with(
+                                backend, &q, &x, ga_opt, tau, &mut b, &mut idx_b,
+                            );
+                            assert_eq!(ka, kb, "{} {} tau {tau}", backend.name(), mode.name());
+                            for i in 0..29 {
+                                assert_eq!(
+                                    a[i].to_bits(),
+                                    b[i].to_bits(),
+                                    "{} {} group {group} tau {tau} row {i}: {} vs {}",
+                                    backend.name(),
+                                    mode.name(),
+                                    a[i],
+                                    b[i]
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_bit_identical_to_dequant_reference() {
+        for backend in crate::sparse_kernel::simd::available_backends() {
+            for mode in [QuantMode::Int8, QuantMode::Int4] {
+                let (w, x, _) = setup(27, 19, 83);
+                let q = QuantMatrix::quantize(&w, mode, 8);
+                let dq = q.dequantize();
+                let mut a = vec![0.0f32; 27];
+                let mut b = vec![0.0f32; 27];
+                assert_eq!(dense_gemv_simd_with(backend, &dq, &x, &mut a), 19);
+                assert_eq!(quant_gemv_dense_with(backend, &q, &x, &mut b), 19);
+                for i in 0..27 {
+                    assert_eq!(a[i].to_bits(), b[i].to_bits(), "{} row {i}", backend.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_split_bit_identical_to_serial() {
+        let (w, x, ga) = setup(53, 31, 71);
+        let q = QuantMatrix::quantize(&w, QuantMode::Int8, 16);
+        let mut idx = Vec::new();
+        let mut serial = vec![0.0f32; 53];
+        let backend = crate::sparse_kernel::simd::active();
+        let ks = quant_gemv_fused_with(backend, &q, &x, Some(&ga), 0.4, &mut serial, &mut idx);
+        for threads in [2usize, 3, 8] {
+            let mut par = vec![0.0f32; 53];
+            let kp = quant_gemv_fused_parallel_with(
+                backend,
+                &q,
+                &x,
+                Some(&ga),
+                0.4,
+                &mut par,
+                &mut idx,
+                threads,
+                0, // force the row split on this tiny shape
+            );
+            assert_eq!(ks, kp);
+            for i in 0..53 {
+                assert_eq!(serial[i].to_bits(), par[i].to_bits(), "threads {threads} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn collect_reports_kept_channels() {
+        let (w, x, ga) = setup(9, 14, 17);
+        let q = QuantMatrix::quantize(&w, QuantMode::Int8, 4);
+        let mut out = vec![0.0f32; 9];
+        let mut kept = Vec::new();
+        let k = quant_gemv_scored_collect(&q, &x, &ga, 0.4, &mut out, &mut kept);
+        assert_eq!(k, kept.len());
+        for &c in &kept {
+            assert!(x[c].abs() * ga[c] >= 0.4);
+        }
+        for c in 0..14 {
+            if !kept.contains(&c) {
+                assert!(x[c].abs() * ga[c] < 0.4);
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_tau_keeps_nothing() {
+        let (w, x, ga) = setup(5, 8, 23);
+        let q = QuantMatrix::quantize(&w, QuantMode::Int4, 2);
+        let mut out = vec![1.0f32; 5];
+        let mut idx = Vec::new();
+        let kept = quant_gemv_fused(&q, &x, Some(&ga), f32::INFINITY, &mut out, &mut idx);
+        assert_eq!(kept, 0);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,359 @@
+//! Group-quantized weight storage: symmetric per-group int8 and packed int4
+//! codes over the columns of a [`ColMajorMatrix`].
+//!
+//! Groups run *along* each column (the `m` output dimension), so a fused
+//! GEMV that walks one kept column dequantizes group-by-group with one
+//! scale broadcast per group — the scale stream is tiny (`m / group` floats
+//! per column) and the code stream is 1 byte (int8) or half a byte (int4)
+//! per element instead of 4. Decode is memory-bandwidth-bound, so the
+//! 4x/8x weight-traffic reduction is the whole point; the extra multiply
+//! per element is compute the memory system was waiting on anyway.
+//!
+//! The dequantized value of a code `q` in group `g` is exactly
+//! `scales[g] * (q as f32)` — one IEEE multiply, identical on every SIMD
+//! backend, which is what lets the fused kernels promise bit-identical
+//! results against the dequantize-then-f32-GEMV reference.
+
+use crate::sparse_kernel::simd;
+use crate::sparse_kernel::ColMajorMatrix;
+
+/// Quantization mode: symmetric int8 (codes in `[-127, 127]`) or packed
+/// int4 (codes in `[-7, 7]`, two per byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    Int8,
+    Int4,
+}
+
+impl QuantMode {
+    /// Largest code magnitude: the symmetric range is `[-levels, levels]`.
+    pub fn levels(self) -> i32 {
+        match self {
+            QuantMode::Int8 => 127,
+            QuantMode::Int4 => 7,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::Int8 => "int8",
+            QuantMode::Int4 => "int4",
+        }
+    }
+
+    /// Bits-per-weight tag used by the v2 checkpoint encoding.
+    pub fn tag(self) -> u32 {
+        match self {
+            QuantMode::Int8 => 8,
+            QuantMode::Int4 => 4,
+        }
+    }
+
+    pub fn from_tag(tag: u32) -> Option<QuantMode> {
+        match tag {
+            8 => Some(QuantMode::Int8),
+            4 => Some(QuantMode::Int4),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI spelling (`int8`/`int4`, case-insensitive).
+    pub fn parse(s: &str) -> Option<QuantMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "int8" | "i8" | "8" => Some(QuantMode::Int8),
+            "int4" | "i4" | "4" => Some(QuantMode::Int4),
+            _ => None,
+        }
+    }
+
+    /// Directory-name convention for a quantized checkpoint of `base` —
+    /// the single definition shared by `wisparse quantize` (writer) and
+    /// `serve --quant` / `bench-decode` (readers).
+    pub fn checkpoint_name(self, base: &str) -> String {
+        format!("{base}-{}", self.name())
+    }
+}
+
+/// A group-quantized column-major weight matrix (see module docs for the
+/// layout). `scales` holds `n * groups_per_col()` entries, column-major by
+/// group; `data` holds the codes — `n * m` bytes for int8, `n * ceil(m/2)`
+/// for int4 (row `2k` in the low nibble, row `2k+1` in the high nibble,
+/// nibbles biased by +8).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantMatrix {
+    /// Output dimension m.
+    pub m: usize,
+    /// Input dimension n (channels).
+    pub n: usize,
+    pub mode: QuantMode,
+    /// Rows per scale group within a column (>= 1; may exceed m).
+    pub group: usize,
+    pub scales: Vec<f32>,
+    pub data: Vec<u8>,
+}
+
+impl QuantMatrix {
+    /// Symmetric per-group quantization of `w`'s columns. A group's scale is
+    /// `max|v| / levels`; codes are `round(v / scale)` clamped to the
+    /// symmetric range (all-zero groups get scale 0 and codes 0).
+    pub fn quantize(w: &ColMajorMatrix, mode: QuantMode, group: usize) -> QuantMatrix {
+        assert!(group >= 1, "group size must be >= 1");
+        let (m, n) = (w.m, w.n);
+        let gpc = m.div_ceil(group).max(1);
+        let levels = mode.levels();
+        let mut scales = vec![0.0f32; n * gpc];
+        let mut data = match mode {
+            QuantMode::Int8 => vec![0u8; n * m],
+            QuantMode::Int4 => vec![0u8; n * m.div_ceil(2)],
+        };
+        let stride4 = m.div_ceil(2);
+        for c in 0..n {
+            let col = w.col(c);
+            for g in 0..gpc {
+                let lo = g * group;
+                let hi = (lo + group).min(m);
+                let max_abs = col[lo..hi].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+                let scale = if max_abs > 0.0 {
+                    max_abs / levels as f32
+                } else {
+                    0.0
+                };
+                scales[c * gpc + g] = scale;
+                for (r, &v) in col.iter().enumerate().take(hi).skip(lo) {
+                    let code: i32 = if scale > 0.0 {
+                        ((v / scale).round() as i32).clamp(-levels, levels)
+                    } else {
+                        0
+                    };
+                    match mode {
+                        QuantMode::Int8 => data[c * m + r] = code as i8 as u8,
+                        QuantMode::Int4 => {
+                            let idx = c * stride4 + r / 2;
+                            let nib = (code + 8) as u8 & 0x0F;
+                            if r % 2 == 0 {
+                                data[idx] = (data[idx] & 0xF0) | nib;
+                            } else {
+                                data[idx] = (data[idx] & 0x0F) | (nib << 4);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        QuantMatrix {
+            m,
+            n,
+            mode,
+            group,
+            scales,
+            data,
+        }
+    }
+
+    /// Scale groups per column.
+    pub fn groups_per_col(&self) -> usize {
+        self.m.div_ceil(self.group).max(1)
+    }
+
+    /// Bytes per column of code storage.
+    pub fn col_stride(&self) -> usize {
+        match self.mode {
+            QuantMode::Int8 => self.m,
+            QuantMode::Int4 => self.m.div_ceil(2),
+        }
+    }
+
+    /// Resident bytes of the quantized payload (codes + scales).
+    pub fn bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Dequantize rows `[row0, row0 + out.len())` of column `c` into `out`
+    /// — the inline-dequant primitive of the fused kernels. Every element
+    /// is exactly `scale * (code as f32)`.
+    pub fn dequant_col_range(&self, c: usize, row0: usize, out: &mut [f32]) {
+        debug_assert!(c < self.n);
+        debug_assert!(row0 + out.len() <= self.m);
+        let gpc = self.groups_per_col();
+        let scales = &self.scales[c * gpc..(c + 1) * gpc];
+        match self.mode {
+            QuantMode::Int8 => {
+                let col = &self.data[c * self.m..(c + 1) * self.m];
+                // Group-stepped: one scale broadcast per group segment.
+                let mut i = 0usize;
+                while i < out.len() {
+                    let r = row0 + i;
+                    let g = r / self.group;
+                    let gend = ((g + 1) * self.group).min(self.m);
+                    let take = (gend - r).min(out.len() - i);
+                    simd::dequant_i8(scales[g], &col[r..r + take], &mut out[i..i + take]);
+                    i += take;
+                }
+            }
+            QuantMode::Int4 => {
+                let stride = self.col_stride();
+                let col = &self.data[c * stride..(c + 1) * stride];
+                // Group-stepped like the int8 arm: the scale lookup and the
+                // group division are hoisted out of the per-element loop.
+                let mut i = 0usize;
+                while i < out.len() {
+                    let r = row0 + i;
+                    let g = r / self.group;
+                    let gend = ((g + 1) * self.group).min(self.m);
+                    let take = (gend - r).min(out.len() - i);
+                    let s = scales[g];
+                    for k in 0..take {
+                        let rr = r + k;
+                        let byte = col[rr / 2];
+                        let nib = if rr % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                        out[i + k] = s * (nib as i32 - 8) as f32;
+                    }
+                    i += take;
+                }
+            }
+        }
+    }
+
+    /// Full dequantization back to f32 columns (tests, calibration-time
+    /// references, R-Sparse factorization).
+    pub fn dequantize(&self) -> ColMajorMatrix {
+        let mut data = vec![0.0f32; self.m * self.n];
+        for c in 0..self.n {
+            self.dequant_col_range(c, 0, &mut data[c * self.m..(c + 1) * self.m]);
+        }
+        ColMajorMatrix {
+            m: self.m,
+            n: self.n,
+            data,
+        }
+    }
+
+    /// Column L2 norms of the *deployed* (dequantized) values — the `g` of
+    /// Eq. 4 must be computed from what the kernels actually multiply, so
+    /// calibration, tau selection and execution agree.
+    pub fn col_l2_norms(&self) -> Vec<f32> {
+        let mut tmp = vec![0.0f32; self.m];
+        (0..self.n)
+            .map(|c| {
+                self.dequant_col_range(c, 0, &mut tmp);
+                tmp.iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum::<f64>()
+                    .sqrt() as f32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg64;
+
+    fn random_cm(m: usize, n: usize, seed: u64) -> ColMajorMatrix {
+        let mut rng = Pcg64::new(seed);
+        ColMajorMatrix::from_row_major(&Tensor::randn(&[m, n], 1.0, &mut rng))
+    }
+
+    #[test]
+    fn roundtrip_error_within_analytic_bound() {
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            for group in [1usize, 3, 8, 64, 1000] {
+                let w = random_cm(37, 11, 5 + group as u64);
+                let q = QuantMatrix::quantize(&w, mode, group);
+                let dq = q.dequantize();
+                let gpc = q.groups_per_col();
+                for c in 0..w.n {
+                    let col = w.col(c);
+                    for r in 0..w.m {
+                        let scale = q.scales[c * gpc + r / group];
+                        let err = (col[r] - dq.col(c)[r]).abs();
+                        // Half a quantization step per group, plus fp slack.
+                        let bound = scale * 0.5 * (1.0 + 1e-4) + 1e-9;
+                        assert!(
+                            err <= bound,
+                            "{} group {group} c={c} r={r}: err {err} > bound {bound}",
+                            mode.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_group_quantizes_to_zero() {
+        let w = ColMajorMatrix::from_row_major(&Tensor::zeros(&[6, 3]));
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let q = QuantMatrix::quantize(&w, mode, 4);
+            assert!(q.scales.iter().all(|&s| s == 0.0));
+            let dq = q.dequantize();
+            assert!(dq.data.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn extreme_values_hit_full_range() {
+        // The group max must map to exactly +/- levels and back to itself.
+        let t = Tensor::from_vec(&[4, 1], vec![2.0, -2.0, 1.0, 0.5]);
+        let w = ColMajorMatrix::from_row_major(&t);
+        let q = QuantMatrix::quantize(&w, QuantMode::Int8, 4);
+        let dq = q.dequantize();
+        assert!((dq.col(0)[0] - 2.0).abs() < 1e-6);
+        assert!((dq.col(0)[1] + 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn int4_packing_roundtrips_odd_m() {
+        let w = random_cm(7, 5, 9);
+        let q = QuantMatrix::quantize(&w, QuantMode::Int4, 3);
+        assert_eq!(q.col_stride(), 4);
+        assert_eq!(q.data.len(), 5 * 4);
+        let dq = q.dequantize();
+        // Ranged dequant agrees with the full dequant on every window.
+        let mut buf = vec![0.0f32; 3];
+        for c in 0..5 {
+            for row0 in [0usize, 1, 2, 4] {
+                q.dequant_col_range(c, row0, &mut buf);
+                for i in 0..3 {
+                    assert_eq!(buf[i].to_bits(), dq.col(c)[row0 + i].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_norms_match_dequantized_reference() {
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let w = random_cm(23, 9, 31);
+            let q = QuantMatrix::quantize(&w, mode, 8);
+            let a = q.col_l2_norms();
+            let b = q.dequantize().col_l2_norms();
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-6, "{}", mode.name());
+            }
+        }
+    }
+
+    #[test]
+    fn compression_ratio_is_real() {
+        let w = random_cm(128, 64, 1);
+        let f32_bytes = w.bytes();
+        let q8 = QuantMatrix::quantize(&w, QuantMode::Int8, 64);
+        let q4 = QuantMatrix::quantize(&w, QuantMode::Int4, 64);
+        assert!(f32_bytes as f64 / q8.bytes() as f64 > 3.5);
+        assert!(f32_bytes as f64 / q4.bytes() as f64 > 7.0);
+    }
+
+    #[test]
+    fn mode_parse_and_tags() {
+        assert_eq!(QuantMode::parse("int8"), Some(QuantMode::Int8));
+        assert_eq!(QuantMode::parse(" INT4 "), Some(QuantMode::Int4));
+        assert_eq!(QuantMode::parse("fp16"), None);
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            assert_eq!(QuantMode::from_tag(mode.tag()), Some(mode));
+        }
+        assert_eq!(QuantMode::from_tag(16), None);
+    }
+}

@@ -1,0 +1,364 @@
+//! Group-quantized weight subsystem.
+//!
+//! Three pieces:
+//!
+//! - [`QuantMatrix`] (`matrix.rs`): symmetric per-group int8 / packed int4
+//!   codes over column-major weight columns, with per-group scales.
+//! - fused dequant×sparse GEMV kernels (`gemv.rs`): walk only the kept
+//!   columns, dequantize inline through the dispatched SIMD primitives,
+//!   bit-identical to the dequantize-then-f32 reference on every backend.
+//! - the [`WeightRepr`] trait + [`WeightMat`] enum: one projection contract
+//!   for dense-f32 and quantized weights, so the transformer, every
+//!   sparsifier, the lm_head, and flat/paged/speculative decode all run
+//!   unchanged on either representation.
+//!
+//! Weight-aware scores (`g_i = ||W[:,i]||_2`, Eq. 4) come from
+//! [`WeightRepr::col_l2_norms`], which quantized reprs compute from the
+//! *deployed* (dequantized) values — calibration, tau selection and the
+//! kernels always agree on the same weights.
+
+pub mod gemv;
+pub mod matrix;
+
+pub use gemv::{
+    quant_gemv_dense_parallel, quant_gemv_dense_with, quant_gemv_fused,
+    quant_gemv_fused_parallel, quant_gemv_fused_with, quant_gemv_scored_collect,
+};
+pub use matrix::{QuantMatrix, QuantMode};
+
+use crate::sparse_kernel::gemv::{
+    dense_gemv_parallel, sparse_gemv_fused_parallel, sparse_gemv_scored_collect,
+};
+use crate::sparse_kernel::ColMajorMatrix;
+use crate::tensor::Tensor;
+
+/// One linear layer's deployed weight representation. Everything the engine
+/// needs from a weight matrix goes through this trait, so dense-f32 and
+/// group-quantized checkpoints share a single execution path.
+pub trait WeightRepr: Send + Sync {
+    /// Output dimension m of `y = x W^T`.
+    fn out_dim(&self) -> usize;
+
+    /// Input (channel) dimension n.
+    fn in_dim(&self) -> usize;
+
+    /// Bytes resident for the weight payload (codes + scales for quant).
+    fn resident_bytes(&self) -> usize;
+
+    /// `g_i = ||W[:,i]||_2` of the representation as deployed (dequantized
+    /// values for quantized reprs).
+    fn col_l2_norms(&self) -> Vec<f32>;
+
+    /// Row-major f32 view (dequantized for quantized reprs) — calibration
+    /// references and R-Sparse's low-rank factorization.
+    fn to_row_major(&self) -> Tensor;
+
+    /// The raw f32 columns when this repr is dense (the pre-SIMD
+    /// `force_scalar` A/B paths need them; quantized reprs return None).
+    fn as_dense(&self) -> Option<&ColMajorMatrix>;
+
+    /// Dense projection `out = x W^T` (all channels kept). Returns n.
+    fn gemv_dense(&self, x: &[f32], out: &mut [f32], threads: usize) -> usize;
+
+    /// Masked fused projection: keep channel c iff `|x_c| * ga_c >= tau`
+    /// (`ga = None` = pure magnitude). `kept_idx` is caller-owned scratch.
+    /// Returns the kept count.
+    fn gemv_masked(
+        &self,
+        x: &[f32],
+        ga: Option<&[f32]>,
+        tau: f32,
+        out: &mut [f32],
+        kept_idx: &mut Vec<u32>,
+        threads: usize,
+    ) -> usize;
+
+    /// Masked projection that also reports the kept-channel indices
+    /// (R-Sparse routes the complement through its low-rank path).
+    fn gemv_masked_collect(
+        &self,
+        x: &[f32],
+        ga: &[f32],
+        tau: f32,
+        out: &mut [f32],
+        kept_buf: &mut Vec<usize>,
+    ) -> usize;
+}
+
+impl WeightRepr for ColMajorMatrix {
+    fn out_dim(&self) -> usize {
+        self.m
+    }
+
+    fn in_dim(&self) -> usize {
+        self.n
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    fn col_l2_norms(&self) -> Vec<f32> {
+        ColMajorMatrix::col_l2_norms(self)
+    }
+
+    fn to_row_major(&self) -> Tensor {
+        ColMajorMatrix::to_row_major(self)
+    }
+
+    fn as_dense(&self) -> Option<&ColMajorMatrix> {
+        Some(self)
+    }
+
+    fn gemv_dense(&self, x: &[f32], out: &mut [f32], threads: usize) -> usize {
+        dense_gemv_parallel(self, x, out, threads)
+    }
+
+    fn gemv_masked(
+        &self,
+        x: &[f32],
+        ga: Option<&[f32]>,
+        tau: f32,
+        out: &mut [f32],
+        kept_idx: &mut Vec<u32>,
+        threads: usize,
+    ) -> usize {
+        sparse_gemv_fused_parallel(self, x, ga, tau, out, kept_idx, threads)
+    }
+
+    fn gemv_masked_collect(
+        &self,
+        x: &[f32],
+        ga: &[f32],
+        tau: f32,
+        out: &mut [f32],
+        kept_buf: &mut Vec<usize>,
+    ) -> usize {
+        sparse_gemv_scored_collect(self, x, ga, tau, out, kept_buf)
+    }
+}
+
+impl WeightRepr for QuantMatrix {
+    fn out_dim(&self) -> usize {
+        self.m
+    }
+
+    fn in_dim(&self) -> usize {
+        self.n
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    fn col_l2_norms(&self) -> Vec<f32> {
+        QuantMatrix::col_l2_norms(self)
+    }
+
+    fn to_row_major(&self) -> Tensor {
+        self.dequantize().to_row_major()
+    }
+
+    fn as_dense(&self) -> Option<&ColMajorMatrix> {
+        None
+    }
+
+    fn gemv_dense(&self, x: &[f32], out: &mut [f32], threads: usize) -> usize {
+        quant_gemv_dense_parallel(self, x, out, threads)
+    }
+
+    fn gemv_masked(
+        &self,
+        x: &[f32],
+        ga: Option<&[f32]>,
+        tau: f32,
+        out: &mut [f32],
+        kept_idx: &mut Vec<u32>,
+        threads: usize,
+    ) -> usize {
+        quant_gemv_fused_parallel(self, x, ga, tau, out, kept_idx, threads)
+    }
+
+    fn gemv_masked_collect(
+        &self,
+        x: &[f32],
+        ga: &[f32],
+        tau: f32,
+        out: &mut [f32],
+        kept_buf: &mut Vec<usize>,
+    ) -> usize {
+        quant_gemv_scored_collect(self, x, ga, tau, out, kept_buf)
+    }
+}
+
+/// A weight matrix in whichever representation the checkpoint deployed.
+#[derive(Clone, Debug)]
+pub enum WeightMat {
+    Dense(ColMajorMatrix),
+    Quant(QuantMatrix),
+}
+
+impl WeightMat {
+    /// Build the dense representation from a row-major tensor.
+    pub fn dense(t: &Tensor) -> WeightMat {
+        WeightMat::Dense(ColMajorMatrix::from_row_major(t))
+    }
+
+    /// Group-quantized copy of this matrix (idempotent on already-quantized
+    /// weights — re-quantizing lossy codes would silently change them).
+    pub fn quantized(&self, mode: QuantMode, group: usize) -> WeightMat {
+        match self {
+            WeightMat::Dense(d) => WeightMat::Quant(QuantMatrix::quantize(d, mode, group)),
+            WeightMat::Quant(q) => WeightMat::Quant(q.clone()),
+        }
+    }
+
+    /// Representation label for metrics/reports: `f32`, `int8` or `int4`.
+    pub fn repr_name(&self) -> &'static str {
+        match self {
+            WeightMat::Dense(_) => "f32",
+            WeightMat::Quant(q) => q.mode.name(),
+        }
+    }
+
+    /// Bytes a dense-f32 copy of this matrix would occupy.
+    pub fn dense_equiv_bytes(&self) -> usize {
+        self.out_dim() * self.in_dim() * std::mem::size_of::<f32>()
+    }
+}
+
+impl WeightRepr for WeightMat {
+    fn out_dim(&self) -> usize {
+        match self {
+            WeightMat::Dense(d) => d.out_dim(),
+            WeightMat::Quant(q) => q.out_dim(),
+        }
+    }
+
+    fn in_dim(&self) -> usize {
+        match self {
+            WeightMat::Dense(d) => d.in_dim(),
+            WeightMat::Quant(q) => q.in_dim(),
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        match self {
+            WeightMat::Dense(d) => d.resident_bytes(),
+            WeightMat::Quant(q) => q.resident_bytes(),
+        }
+    }
+
+    fn col_l2_norms(&self) -> Vec<f32> {
+        match self {
+            WeightMat::Dense(d) => WeightRepr::col_l2_norms(d),
+            WeightMat::Quant(q) => WeightRepr::col_l2_norms(q),
+        }
+    }
+
+    fn to_row_major(&self) -> Tensor {
+        match self {
+            WeightMat::Dense(d) => WeightRepr::to_row_major(d),
+            WeightMat::Quant(q) => WeightRepr::to_row_major(q),
+        }
+    }
+
+    fn as_dense(&self) -> Option<&ColMajorMatrix> {
+        match self {
+            WeightMat::Dense(d) => Some(d),
+            WeightMat::Quant(_) => None,
+        }
+    }
+
+    fn gemv_dense(&self, x: &[f32], out: &mut [f32], threads: usize) -> usize {
+        match self {
+            WeightMat::Dense(d) => d.gemv_dense(x, out, threads),
+            WeightMat::Quant(q) => q.gemv_dense(x, out, threads),
+        }
+    }
+
+    fn gemv_masked(
+        &self,
+        x: &[f32],
+        ga: Option<&[f32]>,
+        tau: f32,
+        out: &mut [f32],
+        kept_idx: &mut Vec<u32>,
+        threads: usize,
+    ) -> usize {
+        match self {
+            WeightMat::Dense(d) => d.gemv_masked(x, ga, tau, out, kept_idx, threads),
+            WeightMat::Quant(q) => q.gemv_masked(x, ga, tau, out, kept_idx, threads),
+        }
+    }
+
+    fn gemv_masked_collect(
+        &self,
+        x: &[f32],
+        ga: &[f32],
+        tau: f32,
+        out: &mut [f32],
+        kept_buf: &mut Vec<usize>,
+    ) -> usize {
+        match self {
+            WeightMat::Dense(d) => d.gemv_masked_collect(x, ga, tau, out, kept_buf),
+            WeightMat::Quant(q) => q.gemv_masked_collect(x, ga, tau, out, kept_buf),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_mat(m: usize, n: usize, seed: u64) -> WeightMat {
+        let mut rng = Pcg64::new(seed);
+        WeightMat::dense(&Tensor::randn(&[m, n], 1.0, &mut rng))
+    }
+
+    #[test]
+    fn repr_roundtrip_through_trait() {
+        let w = random_mat(12, 9, 4);
+        assert_eq!(w.out_dim(), 12);
+        assert_eq!(w.in_dim(), 9);
+        assert_eq!(w.repr_name(), "f32");
+        assert!(w.as_dense().is_some());
+        let q = w.quantized(QuantMode::Int8, 4);
+        assert_eq!(q.repr_name(), "int8");
+        assert!(q.as_dense().is_none());
+        assert_eq!((q.out_dim(), q.in_dim()), (12, 9));
+        assert!(q.resident_bytes() < w.resident_bytes());
+        assert_eq!(q.dense_equiv_bytes(), w.resident_bytes());
+        // Quantizing twice must not re-round the codes.
+        let q2 = q.quantized(QuantMode::Int4, 4);
+        assert_eq!(q2.repr_name(), "int8");
+    }
+
+    #[test]
+    fn dense_and_quant_projections_agree_within_quant_error() {
+        let w = random_mat(16, 24, 9);
+        let q = w.quantized(QuantMode::Int8, 8);
+        let mut rng = Pcg64::new(17);
+        let x: Vec<f32> = (0..24).map(|_| rng.normal() as f32).collect();
+        let mut a = vec![0.0f32; 16];
+        let mut b = vec![0.0f32; 16];
+        assert_eq!(w.gemv_dense(&x, &mut a, 1), 24);
+        assert_eq!(q.gemv_dense(&x, &mut b, 1), 24);
+        for i in 0..16 {
+            assert!((a[i] - b[i]).abs() < 0.1, "row {i}: {} vs {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn quant_norms_track_deployed_weights() {
+        let w = random_mat(32, 8, 3);
+        let q = w.quantized(QuantMode::Int8, 8);
+        let gw = WeightRepr::col_l2_norms(&w);
+        let gq = WeightRepr::col_l2_norms(&q);
+        for (a, b) in gw.iter().zip(&gq) {
+            // int8 norms sit close to (but not exactly on) the f32 norms.
+            assert!((a - b).abs() < 0.05 * a.max(1.0), "{a} vs {b}");
+        }
+    }
+}

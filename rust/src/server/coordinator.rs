@@ -12,11 +12,12 @@
 //! active sequence is preempted — its pages released, its request requeued
 //! at the head of the line — instead of any sequence failing.
 
+use crate::data::corpus::detokenize;
 use crate::model::sampler::Sampling;
 use crate::server::batcher::{Batcher, BatcherCfg};
 use crate::server::engine::{Engine, SeqState, SpecEngine};
 use crate::server::metrics::Metrics;
-use crate::server::request::{GenRequest, GenResponse};
+use crate::server::request::{GenRequest, GenResponse, StreamEvent};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -32,6 +33,8 @@ pub struct CoordinatorCfg {
 struct SchedState {
     batcher: Batcher,
     waiters: HashMap<u64, Sender<GenResponse>>,
+    /// Per-token event channels for streaming requests (`"stream": true`).
+    streams: HashMap<u64, Sender<StreamEvent>>,
 }
 
 /// The serving coordinator. Cloneable handle via Arc.
@@ -73,6 +76,7 @@ impl Coordinator {
             state: Mutex::new(SchedState {
                 batcher: Batcher::new(cfg.batcher),
                 waiters: HashMap::new(),
+                streams: HashMap::new(),
             }),
             wake: Condvar::new(),
             metrics: Mutex::new(Metrics::new()),
@@ -128,6 +132,35 @@ impl Coordinator {
         self.submit_blocking_opts(prompt, max_new, sampling, true)
     }
 
+    /// Submit a streaming request: each committed token arrives as a
+    /// [`StreamEvent::Token`] on the returned channel (speculative rounds
+    /// can deliver several per scheduler step), terminated by a
+    /// [`StreamEvent::Done`] carrying the full response summary.
+    pub fn submit_stream(
+        &self,
+        prompt: &str,
+        max_new: usize,
+        sampling: Sampling,
+        speculative: bool,
+    ) -> anyhow::Result<std::sync::mpsc::Receiver<StreamEvent>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = GenRequest::new(id, prompt, max_new);
+        req.sampling = sampling;
+        req.speculative = speculative;
+        req.stream = true;
+        let (tx, rx) = channel();
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.batcher.enqueue(req).is_err() {
+                self.metrics.lock().unwrap().requests_rejected += 1;
+                anyhow::bail!("queue full");
+            }
+            st.streams.insert(id, tx);
+        }
+        self.wake.notify_all();
+        Ok(rx)
+    }
+
     /// [`Coordinator::submit_blocking`] with the per-request speculative
     /// opt-out — the one blocking completion path (HTTP router included).
     pub fn submit_blocking_opts(
@@ -163,6 +196,10 @@ impl Coordinator {
             m.prefix_hit_tokens = s.prefix_hit_tokens;
             m.prefix_miss_tokens = s.prefix_miss_tokens;
         }
+        let model = &self.engine.model;
+        m.weight_repr = model.weight_repr_name().to_string();
+        m.weight_bytes_resident = model.weight_bytes_resident() as u64;
+        m.weight_bytes_dense = model.weight_bytes_dense() as u64;
         m.to_json()
     }
 
@@ -171,6 +208,10 @@ impl Coordinator {
     pub fn run_scheduler(self: &Arc<Self>) {
         // (request, seq, admitted_at) triples in flight.
         let mut active: Vec<(GenRequest, SeqState, Instant)> = Vec::new();
+        // Per-request count of tokens already streamed. A preempted-and-
+        // resumed sequence regenerates its prefix deterministically, so the
+        // high-water mark naturally suppresses duplicate events.
+        let mut stream_sent: HashMap<u64, usize> = HashMap::new();
         loop {
             if self.is_shutdown() {
                 return;
@@ -274,6 +315,27 @@ impl Coordinator {
                 let mut m = self.metrics.lock().unwrap();
                 m.per_token_ms.add(step_ms / committed.max(1) as f64);
             }
+            // Stream newly committed tokens (one NDJSON event per accepted
+            // token; a speculative round can commit several per step).
+            // Finished sequences are still in `active` here, so their tail
+            // tokens flush before the Done event below.
+            {
+                let st = self.state.lock().unwrap();
+                if !st.streams.is_empty() {
+                    for (req, seq, _) in active.iter() {
+                        if let Some(tx) = st.streams.get(&req.id) {
+                            let sent = stream_sent.entry(req.id).or_insert(0);
+                            while *sent < seq.generated.len() {
+                                let _ = tx.send(StreamEvent::Token {
+                                    index: *sent,
+                                    text: detokenize(&seq.generated[*sent..*sent + 1]),
+                                });
+                                *sent += 1;
+                            }
+                        }
+                    }
+                }
+            }
             // Complete finished sequences.
             let mut i = 0;
             while i < active.len() {
@@ -302,7 +364,14 @@ impl Coordinator {
                         m.spec_drafted_tokens += seq.spec.drafted;
                         m.spec_accepted_tokens += seq.spec.accepted;
                     }
-                    let tx = self.state.lock().unwrap().waiters.remove(&req.id);
+                    let (tx, stx) = {
+                        let mut st = self.state.lock().unwrap();
+                        (st.waiters.remove(&req.id), st.streams.remove(&req.id))
+                    };
+                    if let Some(stx) = stx {
+                        let _ = stx.send(StreamEvent::Done(resp.clone()));
+                    }
+                    stream_sent.remove(&req.id);
                     if let Some(tx) = tx {
                         let _ = tx.send(resp);
                     }
@@ -428,6 +497,39 @@ mod tests {
         assert_eq!(m.requests_total, 5);
         assert_eq!(m.tokens_generated, 30);
         drop(m);
+        coord.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn streaming_request_emits_per_token_events() {
+        let (coord, handle) = start_coordinator(2);
+        let reference = coord
+            .submit_blocking("stream me", 6, Sampling::Greedy)
+            .unwrap();
+        let rx = coord
+            .submit_stream("stream me", 6, Sampling::Greedy, true)
+            .unwrap();
+        let mut text = String::new();
+        let mut n = 0usize;
+        let mut done = None;
+        for ev in rx {
+            match ev {
+                StreamEvent::Token { index, text: t } => {
+                    assert_eq!(index, n, "events arrive in order");
+                    n += 1;
+                    text.push_str(&t);
+                }
+                StreamEvent::Done(r) => {
+                    done = Some(r);
+                    break;
+                }
+            }
+        }
+        let done = done.expect("terminal done event");
+        assert_eq!(n, 6, "one event per generated token");
+        assert_eq!(text, done.text, "token stream reassembles the text");
+        assert_eq!(done.text, reference.text, "greedy stream matches blocking");
         coord.shutdown();
         handle.join().unwrap();
     }

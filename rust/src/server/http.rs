@@ -3,14 +3,20 @@
 //! Routes:
 //!   GET  /health            -> {"status": "ok"}
 //!   GET  /metrics           -> serving metrics JSON
-//!   POST /generate          -> {"prompt", "max_new"?, "temperature"?}
+//!   POST /generate          -> {"prompt", "max_new"?, "temperature"?,
+//!                               "speculative"?, "stream"?}
+//!
+//! `"stream": true` switches `/generate` to a chunked NDJSON response: one
+//! `{"done":false,"index":i,"token":"..."}` line per accepted token as it
+//! commits, then a final `{"done":true, ...}` summary line (the same
+//! object the blocking path returns).
 //!
 //! One thread per connection; connections are closed after each response
 //! (`Connection: close`), which keeps the parser honest and is plenty for a
 //! reproduction-scale router.
 
 use crate::server::coordinator::Coordinator;
-use crate::server::request::GenRequest;
+use crate::server::request::{GenRequest, StreamEvent};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -113,6 +119,40 @@ pub fn route(coord: &Arc<Coordinator>, req: &HttpRequest) -> (u16, &'static str,
     }
 }
 
+/// One chunk of a `Transfer-Encoding: chunked` body.
+fn write_chunk(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n{}\r\n", data.len(), data)
+}
+
+/// Streaming `/generate`: chunked NDJSON, one line per committed token,
+/// then the `"done": true` summary line and the terminating zero chunk.
+fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: &GenRequest) {
+    let rx = match coord.submit_stream(&r.prompt, r.max_new, r.sampling, r.speculative) {
+        Ok(rx) => rx,
+        Err(e) => {
+            let body = Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string_compact();
+            let _ = stream.write_all(response(503, "Service Unavailable", &body).as_bytes());
+            return;
+        }
+    };
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+    if stream.write_all(head.as_bytes()).is_err() {
+        return; // client gone; the scheduler still completes the request
+    }
+    for ev in rx {
+        let done = matches!(ev, StreamEvent::Done(_));
+        let line = format!("{}\n", ev.to_json().to_string_compact());
+        if write_chunk(stream, &line).is_err() {
+            return;
+        }
+        let _ = stream.flush();
+        if done {
+            break;
+        }
+    }
+    let _ = stream.write_all(b"0\r\n\r\n");
+}
+
 fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
     let peer = stream.peer_addr().ok();
     let mut reader = BufReader::new(match stream.try_clone() {
@@ -122,6 +162,26 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
     let mut stream = stream;
     match parse_request(&mut reader) {
         Ok(req) => {
+            if req.method == "POST" && req.path == "/generate" && req.body.contains("\"stream\"") {
+                // Streaming requests bypass the buffered router: the
+                // response is written incrementally as tokens commit. The
+                // substring guard keeps plain requests on the single-parse
+                // route() path.
+                if let Ok(j) = Json::parse(&req.body) {
+                    if let Ok(r) = GenRequest::from_json(0, &j) {
+                        if r.stream {
+                            stream_generate(&coord, &mut stream, &r);
+                            crate::debug!(
+                                "{:?} {} {} -> 200 (stream)",
+                                peer,
+                                req.method,
+                                req.path
+                            );
+                            return;
+                        }
+                    }
+                }
+            }
             let (status, reason, body) = route(&coord, &req);
             let _ = stream.write_all(response(status, reason, &body).as_bytes());
             crate::debug!("{:?} {} {} -> {status}", peer, req.method, req.path);

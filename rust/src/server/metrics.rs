@@ -31,6 +31,11 @@ pub struct Metrics {
     pub spec_drafted_tokens: u64,
     /// Of those, accepted by the production verify pass.
     pub spec_accepted_tokens: u64,
+    /// Deployed weight representation (`f32`, `int8`, `int4`) and its
+    /// resident/dense-equivalent byte footprint (refreshed at report time).
+    pub weight_repr: String,
+    pub weight_bytes_resident: u64,
+    pub weight_bytes_dense: u64,
 }
 
 impl Metrics {
@@ -54,7 +59,19 @@ impl Metrics {
             spec_rounds_total: 0,
             spec_drafted_tokens: 0,
             spec_accepted_tokens: 0,
+            weight_repr: "f32".to_string(),
+            weight_bytes_resident: 0,
+            weight_bytes_dense: 0,
         }
+    }
+
+    /// Dense-f32 bytes over resident bytes (1.0 for unquantized weights or
+    /// before the gauges are populated).
+    pub fn quant_compression_ratio(&self) -> f64 {
+        if self.weight_bytes_resident == 0 {
+            return 1.0;
+        }
+        self.weight_bytes_dense as f64 / self.weight_bytes_resident as f64
     }
 
     /// Fraction of proposed draft tokens accepted by verification (0.0
@@ -140,7 +157,34 @@ impl Metrics {
                 "spec_acceptance_rate",
                 Json::Num(self.spec_acceptance_rate()),
             ),
+            ("weight_repr", Json::Str(self.weight_repr.clone())),
+            (
+                "weight_bytes_resident",
+                Json::Num(self.weight_bytes_resident as f64),
+            ),
+            (
+                "quant_compression_ratio",
+                Json::Num(self.quant_compression_ratio()),
+            ),
+            ("decode_tok_s", self.decode_tok_s_json()),
         ])
+    }
+
+    /// Per-representation decode throughput gauges: the server's deployed
+    /// representation carries the live tok/s, the others read 0.
+    fn decode_tok_s_json(&self) -> Json {
+        let tput = self.throughput();
+        Json::obj(
+            ["f32", "int8", "int4"]
+                .into_iter()
+                .map(|r| {
+                    (
+                        r,
+                        Json::Num(if r == self.weight_repr { tput } else { 0.0 }),
+                    )
+                })
+                .collect(),
+        )
     }
 }
 
@@ -187,6 +231,24 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("spec_drafted_tokens").as_usize(), Some(40));
         assert!((j.get("spec_acceptance_rate").as_f64().unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quant_gauges_derive_compression() {
+        let mut m = Metrics::new();
+        assert_eq!(m.quant_compression_ratio(), 1.0, "no gauges yet");
+        m.weight_repr = "int8".to_string();
+        m.weight_bytes_resident = 256;
+        m.weight_bytes_dense = 1024;
+        assert!((m.quant_compression_ratio() - 4.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("weight_repr").as_str(), Some("int8"));
+        assert_eq!(j.get("weight_bytes_resident").as_usize(), Some(256));
+        assert!((j.get("quant_compression_ratio").as_f64().unwrap() - 4.0).abs() < 1e-12);
+        let tok = j.get("decode_tok_s");
+        assert!(tok.get("int8").as_f64().is_some());
+        assert_eq!(tok.get("f32").as_f64(), Some(0.0));
+        assert_eq!(tok.get("int4").as_f64(), Some(0.0));
     }
 
     #[test]

@@ -17,4 +17,4 @@ pub mod coordinator;
 
 pub use coordinator::{Coordinator, CoordinatorCfg};
 pub use engine::{Engine, EngineCfg, SpecCfg, SpecEngine};
-pub use request::{GenRequest, GenResponse};
+pub use request::{GenRequest, GenResponse, StreamEvent};

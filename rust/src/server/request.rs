@@ -21,6 +21,9 @@ pub struct GenRequest {
     /// sequences share the batch. Ignored when the server isn't
     /// speculative.
     pub speculative: bool,
+    /// Stream each accepted token back as a chunked NDJSON line
+    /// (`"stream": true` in the body) instead of one blocking response.
+    pub stream: bool,
 }
 
 impl GenRequest {
@@ -33,12 +36,13 @@ impl GenRequest {
             arrived: Instant::now(),
             preempted: false,
             speculative: true,
+            stream: false,
         }
     }
 
     /// Parse the POST /generate body:
     /// `{"prompt": "...", "max_new": 32, "temperature": 0.0,
-    /// "speculative": true}`.
+    /// "speculative": true, "stream": false}`.
     pub fn from_json(id: u64, j: &Json) -> anyhow::Result<GenRequest> {
         let prompt = j.req_str("prompt")?.to_string();
         if prompt.is_empty() {
@@ -47,6 +51,7 @@ impl GenRequest {
         let max_new = j.get("max_new").as_usize().unwrap_or(32);
         let temp = j.get("temperature").as_f64().unwrap_or(0.0);
         let speculative = j.get("speculative").as_bool().unwrap_or(true);
+        let stream = j.get("stream").as_bool().unwrap_or(false);
         Ok(GenRequest {
             id,
             prompt,
@@ -59,7 +64,36 @@ impl GenRequest {
             arrived: Instant::now(),
             preempted: false,
             speculative,
+            stream,
         })
+    }
+}
+
+/// One event on a streaming `/generate` connection.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// One committed token (speculative rounds may emit several per step).
+    Token { index: usize, text: String },
+    /// Generation finished: the full response summary.
+    Done(GenResponse),
+}
+
+impl StreamEvent {
+    pub fn to_json(&self) -> Json {
+        match self {
+            StreamEvent::Token { index, text } => Json::obj(vec![
+                ("done", Json::Bool(false)),
+                ("index", Json::Num(*index as f64)),
+                ("token", Json::Str(text.clone())),
+            ]),
+            StreamEvent::Done(resp) => {
+                let mut j = resp.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("done".to_string(), Json::Bool(true));
+                }
+                j
+            }
+        }
     }
 }
 
@@ -123,6 +157,40 @@ mod tests {
     fn parse_speculative_opt_out() {
         let j = Json::parse(r#"{"prompt": "x", "speculative": false}"#).unwrap();
         assert!(!GenRequest::from_json(5, &j).unwrap().speculative);
+    }
+
+    #[test]
+    fn parse_stream_flag() {
+        let j = Json::parse(r#"{"prompt": "x"}"#).unwrap();
+        assert!(!GenRequest::from_json(6, &j).unwrap().stream, "defaults off");
+        let j = Json::parse(r#"{"prompt": "x", "stream": true}"#).unwrap();
+        assert!(GenRequest::from_json(7, &j).unwrap().stream);
+    }
+
+    #[test]
+    fn stream_events_serialize() {
+        let tok = StreamEvent::Token {
+            index: 3,
+            text: "a".into(),
+        };
+        let j = tok.to_json();
+        assert_eq!(j.get("done").as_bool(), Some(false));
+        assert_eq!(j.get("index").as_usize(), Some(3));
+        assert_eq!(j.get("token").as_str(), Some("a"));
+        let done = StreamEvent::Done(GenResponse {
+            id: 1,
+            text: "abc".into(),
+            n_prompt_tokens: 2,
+            n_generated: 3,
+            queue_ms: 0.0,
+            total_ms: 1.0,
+            density: 1.0,
+            finish_reason: "length".into(),
+            prefix_hit_tokens: 0,
+        });
+        let j = done.to_json();
+        assert_eq!(j.get("done").as_bool(), Some(true));
+        assert_eq!(j.get("text").as_str(), Some("abc"));
     }
 
     #[test]

@@ -223,6 +223,29 @@ pub fn scan_threshold_with(backend: Backend, x: &[f32], tau: f32, idx: &mut Vec<
     }
 }
 
+/// out[i] = scale * (codes[i] as i8 as f32) — the group-uniform inline
+/// dequantization primitive of the quantized GEMV path (`quant/gemv.rs`).
+/// One IEEE multiply per element, so every backend produces bit-identical
+/// values; the SIMD versions only widen the 1-byte code loads.
+#[inline]
+pub fn dequant_i8(scale: f32, codes: &[u8], out: &mut [f32]) {
+    dequant_i8_with(active(), scale, codes, out)
+}
+
+#[inline]
+pub fn dequant_i8_with(backend: Backend, scale: f32, codes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    match backend {
+        Backend::Scalar => scalar_dequant_i8(scale, codes, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: feature checked at construction; lengths asserted above.
+        Backend::Avx2 => unsafe { avx2::dequant_i8(scale, codes, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Backend::Neon => unsafe { neon::dequant_i8(scale, codes, out) },
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Scalar reference implementations.
 // ---------------------------------------------------------------------------
@@ -254,6 +277,12 @@ fn scalar_axpy8(coeffs: &[f32; 8], offs: &[usize; 8], data: &[f32], out: &mut [f
             + coeffs[5] * c5[i]
             + coeffs[6] * c6[i]
             + coeffs[7] * c7[i];
+    }
+}
+
+fn scalar_dequant_i8(scale: f32, codes: &[u8], out: &mut [f32]) {
+    for (o, &b) in out.iter_mut().zip(codes) {
+        *o = scale * (b as i8 as f32);
     }
 }
 
@@ -326,6 +355,24 @@ mod avx2 {
                 s += coeffs[j] * *ptrs[j].add(i);
             }
             *out.get_unchecked_mut(i) = s;
+            i += 1;
+        }
+    }
+
+    /// SAFETY: caller checked avx2+fma support and `codes.len() == out.len()`.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dequant_i8(scale: f32, codes: &[u8], out: &mut [f32]) {
+        let n = out.len();
+        let vs = _mm256_set1_ps(scale);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let b = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+            let w = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(b));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(vs, w));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) = scale * (*codes.get_unchecked(i) as i8 as f32);
             i += 1;
         }
     }
@@ -434,6 +481,26 @@ mod neon {
                 s += coeffs[j] * *ptrs[j].add(i);
             }
             *out.get_unchecked_mut(i) = s;
+            i += 1;
+        }
+    }
+
+    /// SAFETY: NEON baseline; `codes.len() == out.len()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequant_i8(scale: f32, codes: &[u8], out: &mut [f32]) {
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let b = vld1_s8(codes.as_ptr().add(i) as *const i8);
+            let w16 = vmovl_s8(b);
+            let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16)));
+            let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16)));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_n_f32(lo, scale));
+            vst1q_f32(out.as_mut_ptr().add(i + 4), vmulq_n_f32(hi, scale));
+            i += 8;
+        }
+        while i < n {
+            *out.get_unchecked_mut(i) = scale * (*codes.get_unchecked(i) as i8 as f32);
             i += 1;
         }
     }
@@ -575,6 +642,29 @@ mod tests {
                     scan_threshold_with(Backend::Scalar, &x, tau, &mut a);
                     scan_threshold_with(backend, &x, tau, &mut b);
                     assert_eq!(a, b, "{} threshold n={n} tau={tau}", backend.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_matches_scalar_on_odd_lengths() {
+        let mut rng = Pcg64::new(21);
+        for backend in available_backends() {
+            for n in [0usize, 1, 3, 7, 8, 9, 15, 17, 31, 100] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u64() % 255) as u8).collect();
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n];
+                scalar_dequant_i8(0.031, &codes, &mut a);
+                dequant_i8_with(backend, 0.031, &codes, &mut b);
+                for i in 0..n {
+                    assert_eq!(
+                        a[i].to_bits(),
+                        b[i].to_bits(),
+                        "{} n={n} i={i}",
+                        backend.name()
+                    );
                 }
             }
         }

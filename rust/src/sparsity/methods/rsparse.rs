@@ -4,8 +4,7 @@
 
 use crate::model::layers::LayerId;
 use crate::model::transformer::Model;
-use crate::sparse_kernel::gemv::sparse_gemv_scored_collect;
-use crate::sparse_kernel::ColMajorMatrix;
+use crate::quant::WeightRepr;
 use crate::sparsity::plan::SparsityPlan;
 use crate::sparsity::Sparsifier;
 use crate::tensor::linalg::{truncated_svd, TruncatedSvd};
@@ -63,40 +62,34 @@ impl Sparsifier for RSparse {
         "rsparse"
     }
 
-    fn project(&self, layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize {
+    fn project(&self, layer: LayerId, x: &[f32], w: &dyn WeightRepr, out: &mut [f32]) -> usize {
         let lp = &self.layers[layer.flat()];
+        let (m, n) = (w.out_dim(), w.in_dim());
         SCRATCH.with(|cell| {
             let (kept, lowrank_out, is_kept) = &mut *cell.borrow_mut();
-            lowrank_out.resize(w.m, 0.0);
-            is_kept.resize(w.n, false);
+            lowrank_out.resize(m, 0.0);
+            is_kept.resize(n, false);
             // Exact path over high-magnitude channels.
-            let n_kept = sparse_gemv_scored_collect(
-                w,
-                x,
-                &self.ones[layer.flat()],
-                lp.tau,
-                out,
-                kept,
-            );
+            let n_kept =
+                w.gemv_masked_collect(x, &self.ones[layer.flat()], lp.tau, out, kept);
             // Low-rank path over the complement.
             is_kept.iter_mut().for_each(|b| *b = false);
             for &c in kept.iter() {
                 is_kept[c] = true;
             }
-            let complement: Vec<usize> =
-                (0..w.n).filter(|&c| !is_kept[c]).collect();
+            let complement: Vec<usize> = (0..n).filter(|&c| !is_kept[c]).collect();
             lp.svd.matvec_subset(x, &complement, lowrank_out);
-            for i in 0..w.m {
+            for i in 0..m {
                 out[i] += lowrank_out[i];
             }
             n_kept
         })
     }
 
-    fn extra_macs(&self, layer: LayerId, w: &ColMajorMatrix) -> u64 {
+    fn extra_macs(&self, layer: LayerId, w: &dyn WeightRepr) -> u64 {
         // diag(s) V^T x over ~all channels + U t: (n + m) * r.
         let r = self.layers[layer.flat()].rank as u64;
-        (w.n as u64 + w.m as u64) * r
+        (w.in_dim() as u64 + w.out_dim() as u64) * r
     }
 }
 
@@ -163,7 +156,10 @@ mod tests {
             let w = m.w(id);
             let extra = sp.extra_macs(id, w);
             assert!(extra > 0);
-            assert!(extra < (w.m * w.n) as u64, "low-rank must be cheaper than dense");
+            assert!(
+                extra < (w.out_dim() * w.in_dim()) as u64,
+                "low-rank must be cheaper than dense"
+            );
         }
     }
 }

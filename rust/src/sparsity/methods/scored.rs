@@ -6,8 +6,9 @@
 
 use crate::model::layers::LayerId;
 use crate::model::transformer::Model;
-use crate::sparse_kernel::gemv::{sparse_gemv_fused_parallel, sparse_gemv_scored_x4};
-use crate::sparse_kernel::{sparse_gemv_threshold, ColMajorMatrix};
+use crate::quant::WeightRepr;
+use crate::sparse_kernel::gemv::sparse_gemv_scored_x4;
+use crate::sparse_kernel::sparse_gemv_threshold;
 use crate::sparsity::plan::SparsityPlan;
 use crate::sparsity::score::pow_clamped;
 use crate::sparsity::Sparsifier;
@@ -114,18 +115,23 @@ impl Sparsifier for ScoredSparsifier {
         self.method
     }
 
-    fn project(&self, layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize {
+    fn project(&self, layer: LayerId, x: &[f32], w: &dyn WeightRepr, out: &mut [f32]) -> usize {
         let lp = &self.layers[layer.flat()];
         if self.force_scalar {
-            // The pre-SIMD production path, kept verbatim for A/B runs.
-            return match &lp.ga {
-                Some(ga) => sparse_gemv_scored_x4(w, x, ga, lp.tau, out),
-                None => sparse_gemv_threshold(w, x, lp.tau, out),
-            };
+            // The pre-SIMD production path, kept verbatim for A/B runs. It
+            // only ever existed for f32 columns; quantized weights fall
+            // through to the fused path below.
+            if let Some(dense) = w.as_dense() {
+                return match &lp.ga {
+                    Some(ga) => sparse_gemv_scored_x4(dense, x, ga, lp.tau, out),
+                    None => sparse_gemv_threshold(dense, x, lp.tau, out),
+                };
+            }
         }
         // Two-pass fused SIMD kernel for both the WiSparse/WINA (`ga`) and
         // the TEAL (`ga = None`) score; the kept-index scratch is per-thread
-        // and reused across layers and tokens.
+        // and reused across layers and tokens. Quantized weights take the
+        // same path through the fused dequant kernels.
         // The builder cap and the current thread's scoped budget (see
         // `with_intra_op_threads`) both bound the row split, so batched
         // decode never multiplies to threads^2.
@@ -134,7 +140,7 @@ impl Sparsifier for ScoredSparsifier {
             .min(crate::util::threadpool::intra_op_threads());
         KEPT_IDX.with(|cell| {
             let kept_idx = &mut *cell.borrow_mut();
-            sparse_gemv_fused_parallel(w, x, lp.ga.as_deref(), lp.tau, out, kept_idx, threads)
+            w.gemv_masked(x, lp.ga.as_deref(), lp.tau, out, kept_idx, threads)
         })
     }
 }

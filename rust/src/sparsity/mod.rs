@@ -18,22 +18,24 @@ pub use plan::{LayerPlan, SparsityPlan};
 pub use score::{pow_clamped, tau_for_keep_ratio};
 
 use crate::model::LayerId;
-use crate::sparse_kernel::ColMajorMatrix;
+use crate::quant::WeightRepr;
 
 /// A sparsification policy for linear projections.
 ///
 /// `project` computes `out = (x ⊙ m) W^T` for the layer's dynamic mask `m`
 /// and returns the number of kept channels, so the engine can account the
-/// FLOPs actually spent (Fig 4's x-axis). Implementations must be `Sync`:
-/// the serving coordinator shares one sparsifier across worker threads.
+/// FLOPs actually spent (Fig 4's x-axis). The weight arrives as a
+/// [`WeightRepr`], so every method runs unchanged on dense-f32 and
+/// group-quantized checkpoints. Implementations must be `Sync`: the
+/// serving coordinator shares one sparsifier across worker threads.
 pub trait Sparsifier: Sync + Send {
     fn name(&self) -> &'static str;
 
-    fn project(&self, layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize;
+    fn project(&self, layer: LayerId, x: &[f32], w: &dyn WeightRepr, out: &mut [f32]) -> usize;
 
     /// Extra multiply-accumulates this method spends *outside* the kept
     /// channels (e.g. R-Sparse's low-rank path). Default zero.
-    fn extra_macs(&self, _layer: LayerId, _w: &ColMajorMatrix) -> u64 {
+    fn extra_macs(&self, _layer: LayerId, _w: &dyn WeightRepr) -> u64 {
         0
     }
 }
@@ -46,13 +48,8 @@ impl Sparsifier for Dense {
         "dense"
     }
 
-    fn project(&self, _layer: LayerId, x: &[f32], w: &ColMajorMatrix, out: &mut [f32]) -> usize {
-        crate::sparse_kernel::dense_gemv_parallel(
-            w,
-            x,
-            out,
-            crate::util::threadpool::intra_op_threads(),
-        )
+    fn project(&self, _layer: LayerId, x: &[f32], w: &dyn WeightRepr, out: &mut [f32]) -> usize {
+        w.gemv_dense(x, out, crate::util::threadpool::intra_op_threads())
     }
 }
 
@@ -60,6 +57,8 @@ impl Sparsifier for Dense {
 mod tests {
     use super::*;
     use crate::model::LayerKind;
+    use crate::quant::QuantMode;
+    use crate::sparse_kernel::ColMajorMatrix;
     use crate::tensor::Tensor;
     use crate::util::rng::Pcg64;
 
@@ -72,5 +71,17 @@ mod tests {
         let kept = Dense.project(LayerId::new(0, LayerKind::Q), &x, &w, &mut out);
         assert_eq!(kept, 6);
         assert_eq!(Dense.extra_macs(LayerId::new(0, LayerKind::Q), &w), 0);
+    }
+
+    #[test]
+    fn dense_projects_quantized_weights() {
+        let mut rng = Pcg64::new(2);
+        let t = Tensor::randn(&[4, 6], 1.0, &mut rng);
+        let w = crate::quant::WeightMat::dense(&t).quantized(QuantMode::Int8, 4);
+        let x: Vec<f32> = (0..6).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; 4];
+        let kept = Dense.project(LayerId::new(0, LayerKind::Q), &x, &w, &mut out);
+        assert_eq!(kept, 6);
+        assert!(out.iter().any(|&v| v != 0.0));
     }
 }

@@ -80,6 +80,105 @@ fn request(addr: &str, method: &str, path: &str, body: &str) -> (u16, String) {
     (status, String::from_utf8(buf).unwrap())
 }
 
+/// Like [`request`] but for a `Transfer-Encoding: chunked` response:
+/// returns the status and the reassembled body.
+fn request_chunked(addr: &str, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = v.trim().eq_ignore_ascii_case("chunked");
+            }
+        }
+    }
+    assert!(chunked, "streaming response must be chunked");
+    let mut out = String::new();
+    loop {
+        let mut size_line = String::new();
+        reader.read_line(&mut size_line).unwrap();
+        let size = usize::from_str_radix(size_line.trim(), 16).unwrap();
+        if size == 0 {
+            break;
+        }
+        let mut buf = vec![0u8; size + 2]; // chunk data + trailing CRLF
+        reader.read_exact(&mut buf).unwrap();
+        out.push_str(std::str::from_utf8(&buf[..size]).unwrap());
+    }
+    (status, out)
+}
+
+#[test]
+fn streaming_generate_emits_one_line_per_token() {
+    let (coord, addr) = start_server();
+    // Blocking reference first: greedy decode is deterministic, so the
+    // streamed tokens must reassemble to exactly this text.
+    let (status, body) = request(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "stream this", "max_new": 5}"#,
+    );
+    assert_eq!(status, 200, "{body}");
+    let expect = Json::parse(&body)
+        .unwrap()
+        .get("text")
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    let (status, ndjson) = request_chunked(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "stream this", "max_new": 5, "stream": true}"#,
+    );
+    assert_eq!(status, 200);
+    let lines: Vec<&str> = ndjson.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 6, "5 token lines + done: {ndjson}");
+    let mut text = String::new();
+    for (i, line) in lines[..5].iter().enumerate() {
+        let j = Json::parse(line).unwrap();
+        assert_eq!(j.get("done").as_bool(), Some(false), "{line}");
+        assert_eq!(j.get("index").as_usize(), Some(i), "{line}");
+        text.push_str(j.get("token").as_str().unwrap());
+    }
+    let done = Json::parse(lines[5]).unwrap();
+    assert_eq!(done.get("done").as_bool(), Some(true));
+    assert_eq!(done.get("generated_tokens").as_usize(), Some(5));
+    assert_eq!(done.get("text").as_str(), Some(text.as_str()));
+    assert_eq!(text, expect, "streamed tokens diverge from blocking path");
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_expose_weight_representation_gauges() {
+    let (coord, addr) = start_server();
+    let (status, body) = request(&addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let m = Json::parse(&body).unwrap();
+    assert_eq!(m.get("weight_repr").as_str(), Some("f32"));
+    assert!(m.get("weight_bytes_resident").as_usize().unwrap() > 0);
+    assert!((m.get("quant_compression_ratio").as_f64().unwrap() - 1.0).abs() < 1e-9);
+    assert!(m.get("decode_tok_s").get("f32").as_f64().is_some());
+    coord.shutdown();
+}
+
 #[test]
 fn health_metrics_generate_roundtrip() {
     let (coord, addr) = start_server();
