@@ -21,6 +21,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         .opt("prompt-len", "5", "prompt length (paper: 5)")
         .opt("new-tokens", "200", "tokens to generate (paper: 200)")
         .opt("reps", "3", "repetitions (best reported)")
+        .opt("prefill-chunk", "64", "prompt tokens per prefill chunk")
         .opt("budget", "quick", "calibration budget if no cached plan")
         .opt("quant", "off", "weight quantization (off|int8|int4)")
         .opt("quant-group", "64", "rows per scale group when quantizing")
@@ -68,7 +69,14 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         )?;
         common::sparsifier_for(&model, method, &plan)?
     };
-    let engine = Engine::new(Arc::clone(&model), sparsifier, EngineCfg::default());
+    let engine = Engine::new(
+        Arc::clone(&model),
+        sparsifier,
+        EngineCfg {
+            prefill_chunk: args.get_usize("prefill-chunk")?.max(1),
+            ..EngineCfg::default()
+        },
+    );
     let prompt = "a".repeat(args.get_usize("prompt-len")?);
     let new_tokens = args.get_usize("new-tokens")?;
     let mut best_tps = 0.0f64;

@@ -21,6 +21,11 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         .opt("budget", "quick", "calibration budget if no cached plan")
         .opt("kv-pool-blocks", "256", "paged-KV pool size in blocks")
         .opt("kv-block-size", "16", "positions per KV block")
+        .opt(
+            "prefill-chunk",
+            "64",
+            "prompt tokens per prefill chunk (per-iteration token budget)",
+        )
         .opt("prefix-cache", "on", "radix-tree prompt prefix sharing (on|off)")
         .opt("draft-sparsity", "0.75", "draft sparsity target for --speculative")
         .opt("spec-k", "4", "initial speculative draft-chain length")
@@ -94,10 +99,14 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         block_size: args.get_usize("kv-block-size")?,
         prefix_cache: args.get("prefix-cache") != "off",
     };
+    let engine_cfg = EngineCfg {
+        prefill_chunk: args.get_usize("prefill-chunk")?.max(1),
+        ..EngineCfg::default()
+    };
     let engine = Arc::new(Engine::paged(
         Arc::clone(&model),
         sparsifier,
-        EngineCfg::default(),
+        engine_cfg,
         &kv_cfg,
     ));
     let coord_cfg = CoordinatorCfg {
@@ -146,10 +155,11 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         model.weight_bytes_resident() as f64 / 1e6
     );
     println!(
-        "paged KV: {} blocks x {} positions, prefix cache {}",
+        "paged KV: {} blocks x {} positions, prefix cache {}; chunked prefill {} tok/iter",
         kv_cfg.pool_blocks,
         kv_cfg.block_size,
-        if kv_cfg.prefix_cache { "on" } else { "off" }
+        if kv_cfg.prefix_cache { "on" } else { "off" },
+        engine.cfg.prefill_chunk
     );
     wisparse::server::http::serve(coord, args.get("addr"), |addr| {
         println!("listening on http://{addr}");

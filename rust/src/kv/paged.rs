@@ -293,8 +293,42 @@ impl KvManager {
     /// blocks. The match is capped below the full prompt so the last prompt
     /// token is always recomputed (its logits seed decoding). Returns the
     /// sequence and the number of prefix tokens served from cache.
+    /// Schedule-free (matches only all-dense-tagged entries exactly like
+    /// prior behaviour); prefill engines use
+    /// [`KvManager::acquire_scheduled`] so hits stay bit-identical to
+    /// misses under the mixed dense/sparse prefill split.
     pub fn acquire(&self, prompt: &[usize]) -> (PagedSeq, usize) {
-        let mut seq = PagedSeq::new(Arc::clone(&self.pool), self.max_seq);
+        self.acquire_scheduled(prompt, usize::MAX)
+    }
+
+    /// [`KvManager::acquire`] with the consumer's prefill-schedule tag: the
+    /// dense→sparse boundary (`dense_upto`) its own prefill would apply to
+    /// this prompt. Only cached prefixes produced under an agreeing
+    /// schedule are adopted.
+    pub fn acquire_scheduled(&self, prompt: &[usize], dense_upto: usize) -> (PagedSeq, usize) {
+        let mut seq = self.new_seq();
+        let hit = self.adopt_cached_prefix(&mut seq, prompt, dense_upto);
+        (seq, hit)
+    }
+
+    /// A fresh, empty sequence view over this manager's pool (no prefix
+    /// matching — the chunked-prefill engine defers that to the first
+    /// chunk via [`KvManager::adopt_cached_prefix`], so prompts admitted
+    /// together still share prefixes their batch-mates publish first).
+    pub fn new_seq(&self) -> PagedSeq {
+        PagedSeq::new(Arc::clone(&self.pool), self.max_seq)
+    }
+
+    /// Match `prompt` against the prefix cache under the consumer's
+    /// schedule tag and adopt the servable blocks into the (still empty)
+    /// sequence. Returns the tokens served from cache; also records
+    /// hit/miss stats for this prompt.
+    pub fn adopt_cached_prefix(
+        &self,
+        seq: &mut PagedSeq,
+        prompt: &[usize],
+        dense_upto: usize,
+    ) -> usize {
         let mut hit = 0usize;
         if self.prefix_cache && prompt.len() > 1 {
             let bs = self.pool.layout().block_size;
@@ -307,7 +341,7 @@ impl KvManager {
                     .radix
                     .lock()
                     .unwrap()
-                    .match_prefix(&prompt[..usable], &self.pool);
+                    .match_prefix_scheduled(&prompt[..usable], dense_upto, &self.pool);
                 hit = blocks.len() * bs;
                 if !blocks.is_empty() {
                     seq.adopt_prefix(blocks);
@@ -318,19 +352,28 @@ impl KvManager {
         s.prefix_hit_tokens += hit as u64;
         s.prefix_miss_tokens += (prompt.len() - hit) as u64;
         drop(s);
-        (seq, hit)
+        hit
     }
 
     /// Publish a prefilled prompt's full blocks into the prefix cache so
-    /// later sequences can share them.
+    /// later sequences can share them (schedule-free tag; prefill engines
+    /// use [`KvManager::insert_prefix_scheduled`]).
     pub fn insert_prefix(&self, prompt: &[usize], seq: &PagedSeq) {
+        self.insert_prefix_scheduled(prompt, seq, usize::MAX);
+    }
+
+    /// Publish a prefilled prompt's full blocks tagged with the schedule
+    /// (`dense_upto`) that produced their KV. Must only be called once the
+    /// *entire* prompt has committed under the production prefill schedule
+    /// — partially-prefilled or rolled-back KV never reaches the cache.
+    pub fn insert_prefix_scheduled(&self, prompt: &[usize], seq: &PagedSeq, dense_upto: usize) {
         if !self.prefix_cache {
             return;
         }
         self.radix
             .lock()
             .unwrap()
-            .insert(prompt, seq.blocks(), &self.pool);
+            .insert_scheduled(prompt, seq.blocks(), dense_upto, &self.pool);
     }
 
     /// Room for one more token, evicting LRU cached prefixes while the pool

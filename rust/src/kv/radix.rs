@@ -34,6 +34,37 @@ struct Node {
     /// Logical timestamp of the last match/insert touching this node.
     last_access: u64,
     in_use: bool,
+    /// Prefill-schedule tag of the KV stored in this node's blocks: the
+    /// producer's dense→sparse boundary position (`dense_upto`). Positions
+    /// below it were computed dense, the rest sparse. `usize::MAX` means
+    /// "all dense" / schedule-free (dense engines, direct pool users). A
+    /// cached span is only served to a consumer whose own schedule agrees
+    /// with the producer's over that span — see [`sched_agrees`].
+    dense_upto: usize,
+}
+
+/// Do two prefill schedules (dense below `du_a` / `du_b`, sparse at or
+/// above) execute positions `[start, end)` identically? True iff both
+/// boundaries clamp to the same point inside the span — i.e. neither
+/// schedule flips dense→sparse at a position where the other doesn't.
+fn sched_agrees(du_a: usize, du_b: usize, start: usize, end: usize) -> bool {
+    du_a.clamp(start, end) == du_b.clamp(start, end)
+}
+
+/// Longest block-aligned prefix of the span `[start, start + span)` the two
+/// schedules execute identically, in tokens. The schedules disagree exactly
+/// on `[min(du), max(du))`, so the usable prefix runs up to that interval
+/// (or covers the whole span when it starts past it).
+fn sched_prefix(du_a: usize, du_b: usize, start: usize, span: usize, bs: usize) -> usize {
+    let end = start + span;
+    let lo = du_a.min(du_b);
+    let hi = du_a.max(du_b);
+    let limit = if lo == hi || start >= hi {
+        end
+    } else {
+        lo.clamp(start, end)
+    };
+    (limit - start) / bs * bs
 }
 
 /// The prefix cache. Node 0 is the root (empty edge).
@@ -62,6 +93,7 @@ impl RadixCache {
                 parent: 0,
                 last_access: 0,
                 in_use: true,
+                dense_upto: usize::MAX,
             }],
             free_nodes: Vec::new(),
             clock: 0,
@@ -88,7 +120,24 @@ impl RadixCache {
     /// Each returned block is retained on behalf of the caller's page table
     /// before this returns (while the tree still holds its own reference),
     /// so the handoff is atomic under the owner's lock. Touches LRU clocks.
+    /// Schedule-free (`usize::MAX` tag — matches anything a dense schedule
+    /// produced); prefill consumers use [`RadixCache::match_prefix_scheduled`].
     pub fn match_prefix(&mut self, tokens: &[usize], pool: &BlockPool) -> Vec<BlockId> {
+        self.match_prefix_scheduled(tokens, usize::MAX, pool)
+    }
+
+    /// [`RadixCache::match_prefix`] restricted to cached KV whose producer
+    /// schedule agrees with the consumer's (`dense_upto`) on every matched
+    /// position: the walk stops at the first node whose span the two
+    /// schedules would execute differently, so a cache hit is always
+    /// bit-identical to recomputing the prefix under the consumer's own
+    /// half-dense/half-sparse prefill split.
+    pub fn match_prefix_scheduled(
+        &mut self,
+        tokens: &[usize],
+        dense_upto: usize,
+        pool: &BlockPool,
+    ) -> Vec<BlockId> {
         self.clock += 1;
         let clock = self.clock;
         let bs = self.block_size;
@@ -107,10 +156,25 @@ impl RadixCache {
             let common = common_prefix_len(&self.nodes[child].tokens, rem);
             let common_blocks = common / bs * bs;
             debug_assert!(common_blocks >= bs, "child key matched but edge does not");
-            if common_blocks < self.nodes[child].tokens.len() {
-                // Divergence (or exhaustion) inside this edge: split so the
-                // matched full-block prefix is its own node, and take it.
-                let head = self.split(child, common_blocks);
+            // The child's edge covers positions [pos, pos + common_blocks);
+            // only the leading part both schedules execute identically is
+            // servable.
+            let pos = tokens.len() - rem.len();
+            let take = sched_prefix(
+                self.nodes[child].dense_upto,
+                dense_upto,
+                pos,
+                common_blocks,
+                bs,
+            );
+            if take == 0 {
+                break;
+            }
+            if take < self.nodes[child].tokens.len() {
+                // Token divergence, query exhaustion or a schedule
+                // disagreement inside this edge: split so the servable
+                // full-block prefix is its own node, and take it.
+                let head = self.split(child, take);
                 self.nodes[head].last_access = clock;
                 out.extend_from_slice(&self.nodes[head].blocks);
                 break;
@@ -138,6 +202,7 @@ impl RadixCache {
         let tail_tokens: Vec<usize> = self.nodes[child].tokens[at..].to_vec();
         let tail_blocks: Vec<BlockId> = self.nodes[child].blocks[at / bs..].to_vec();
         let last_access = self.nodes[child].last_access;
+        let dense_upto = self.nodes[child].dense_upto;
         let mut head_children = HashMap::new();
         head_children.insert(tail_tokens[..bs].to_vec(), child);
         let head = self.new_node(Node {
@@ -147,6 +212,8 @@ impl RadixCache {
             parent,
             last_access,
             in_use: true,
+            // The tag is per-position, so both halves keep the producer's.
+            dense_upto,
         });
         let head_key = self.nodes[head].tokens[..bs].to_vec();
         self.nodes[parent].children.insert(head_key, head);
@@ -160,13 +227,31 @@ impl RadixCache {
     /// Register the full-block prefix of `tokens` (backed by `blocks`, the
     /// sequence's page table) with the tree. Newly referenced blocks get a
     /// pool retain (the tree's own reference); already-cached spans are left
-    /// untouched.
+    /// untouched. Schedule-free tag (`usize::MAX`); prefill producers use
+    /// [`RadixCache::insert_scheduled`].
     pub fn insert(&mut self, tokens: &[usize], blocks: &[BlockId], pool: &BlockPool) {
+        self.insert_scheduled(tokens, blocks, usize::MAX, pool);
+    }
+
+    /// [`RadixCache::insert`] tagging new nodes with the producing
+    /// prefill's `dense_upto` schedule. Descending through an existing node
+    /// whose schedule *disagrees* with the producer's over its span aborts
+    /// the insert: the producer's deeper KV attended to a differently-
+    /// scheduled prefix, so grafting it below the cached (other-schedule)
+    /// span would let a later match combine incompatible KV.
+    pub fn insert_scheduled(
+        &mut self,
+        tokens: &[usize],
+        blocks: &[BlockId],
+        dense_upto: usize,
+        pool: &BlockPool,
+    ) {
         self.clock += 1;
         let clock = self.clock;
         let bs = self.block_size;
         let n_blocks = (tokens.len() / bs).min(blocks.len());
-        let mut rem = &tokens[..n_blocks * bs];
+        let total = n_blocks * bs;
+        let mut rem = &tokens[..total];
         let mut rem_blocks = &blocks[..n_blocks];
         let mut node = 0usize;
         loop {
@@ -187,6 +272,7 @@ impl RadixCache {
                         parent: node,
                         last_access: clock,
                         in_use: true,
+                        dense_upto,
                     });
                     self.nodes[node].children.insert(rem[..bs].to_vec(), leaf);
                     return;
@@ -195,6 +281,10 @@ impl RadixCache {
                     let common = common_prefix_len(&self.nodes[child].tokens, rem);
                     let cb = common / bs * bs;
                     debug_assert!(cb >= bs);
+                    let pos = total - rem.len();
+                    if !sched_agrees(self.nodes[child].dense_upto, dense_upto, pos, pos + cb) {
+                        return;
+                    }
                     let next = if cb < self.nodes[child].tokens.len() {
                         self.split(child, cb)
                     } else {
@@ -513,6 +603,77 @@ mod tests {
         pool.release(ab[1]);
         pool.release(b2);
         assert_eq!(pool.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn schedule_tag_gates_matches() {
+        let pool = pool(8);
+        let mut t = RadixCache::new(4);
+        // Producer prefilled a 12-token prompt with dense_upto = 6: the
+        // boundary falls inside the second block (positions 4..8).
+        let tokens: Vec<usize> = (0..12).collect();
+        let blocks = take(&pool, 3);
+        t.insert_scheduled(&tokens, &blocks, 6, &pool);
+        // Same schedule: full hit.
+        let m = t.match_prefix_scheduled(&tokens, 6, &pool);
+        assert_eq!(m, blocks);
+        for &b in &m {
+            pool.release(b);
+        }
+        // Boundary moved to 10 (a longer prompt's schedule): block 0 (0..4,
+        // dense under both) still serves; block 1 (4..8) straddles the
+        // disagreement (6 vs 10) and is refused, cutting the match there.
+        let m = t.match_prefix_scheduled(&tokens, 10, &pool);
+        assert_eq!(m, &blocks[..1], "only the schedule-consistent span matches");
+        for &b in &m {
+            pool.release(b);
+        }
+        // Boundary 5 clamps to 5 within block 1 either way it disagrees
+        // with 6 — again only block 0.
+        let m = t.match_prefix_scheduled(&tokens, 5, &pool);
+        assert_eq!(m, &blocks[..1]);
+        for &b in &m {
+            pool.release(b);
+        }
+        // Deep spans where both schedules are already sparse stay shared:
+        // producer du=2, consumer du=3 — blocks 1 and 2 (positions 4..12)
+        // are sparse under both, but block 0 (0..4) straddles 2 vs 3, so
+        // nothing matches from position 0.
+        let mut t2 = RadixCache::new(4);
+        let b2 = take(&pool, 3);
+        t2.insert_scheduled(&tokens, &b2, 2, &pool);
+        assert!(t2.match_prefix_scheduled(&tokens, 3, &pool).is_empty());
+        // Identical boundary: everything matches again.
+        let m = t2.match_prefix_scheduled(&tokens, 2, &pool);
+        assert_eq!(m, b2);
+        for &b in &m {
+            pool.release(b);
+        }
+    }
+
+    #[test]
+    fn schedule_tag_gates_inserts() {
+        let pool = pool(8);
+        let mut t = RadixCache::new(4);
+        let tokens: Vec<usize> = (0..8).collect();
+        let blocks = take(&pool, 2);
+        t.insert_scheduled(&tokens, &blocks, 3, &pool);
+        assert_eq!(t.blocks_cached(), 2);
+        // A producer with a conflicting schedule over the cached span must
+        // not graft its extension below it: its deeper KV attended to a
+        // differently-scheduled prefix.
+        let longer: Vec<usize> = (0..12).collect();
+        let ext = take(&pool, 3);
+        t.insert_scheduled(&longer, &ext, 9, &pool);
+        assert_eq!(t.blocks_cached(), 2, "conflicting insert is refused");
+        // An agreeing extension (same boundary) is grafted normally.
+        t.insert_scheduled(&longer, &ext, 3, &pool);
+        assert_eq!(t.blocks_cached(), 3);
+        let m = t.match_prefix_scheduled(&longer, 3, &pool);
+        assert_eq!(m.len(), 3);
+        for &b in &m {
+            pool.release(b);
+        }
     }
 
     #[test]

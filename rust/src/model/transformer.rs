@@ -158,6 +158,20 @@ impl Scratch {
     }
 }
 
+/// Which logits a chunk forward pass materializes. Prefill chunks only need
+/// the final prompt token's logits (they seed decoding) — skipping the
+/// `[vocab, d]` lm_head GEMV for every interior position is a large share of
+/// the chunked-prefill win on small models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkLogits {
+    /// Per-position logits, row-major `[m, vocab]` (speculative verify).
+    PerToken,
+    /// Only the last position's logits, `[vocab]` (a prompt's final chunk).
+    LastOnly,
+    /// No logits at all (interior prefill chunks). The buffer is untouched.
+    Skip,
+}
+
 /// The model: weights in kernel layout plus precomputed per-layer column
 /// norms (`g` of Eq. 4, always computed from the *deployed* representation
 /// so quantized checkpoints calibrate against the weights they execute).
@@ -522,6 +536,42 @@ impl Model {
         stats: &mut ForwardStats,
         logits: &mut Vec<f32>,
     ) {
+        self.forward_chunk_mixed(
+            tokens,
+            cache,
+            sp,
+            sp,
+            0,
+            ChunkLogits::PerToken,
+            scratch,
+            stats,
+            logits,
+        );
+    }
+
+    /// [`Model::forward_chunk`] with a per-position sparsifier split and a
+    /// logits policy — the chunked-prefill workhorse. Positions strictly
+    /// below the *absolute* position `sparse_from` run through `dense_sp`,
+    /// positions at or beyond it through `sparse_sp`, so the paper's
+    /// `prefill_sparse_fraction` dense→sparse boundary may fall anywhere
+    /// inside the chunk (a chunk wholly on one side simply never consults
+    /// the other sparsifier). Per-token arithmetic remains exactly
+    /// [`Model::forward_token`]'s under the same per-position sparsifier
+    /// choice, so chunked prefill is bit-identical to the token-by-token
+    /// schedule; `want` controls which lm_head projections run at all.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_chunk_mixed(
+        &self,
+        tokens: &[usize],
+        cache: &mut dyn KvSeq,
+        dense_sp: &dyn Sparsifier,
+        sparse_sp: &dyn Sparsifier,
+        sparse_from: usize,
+        want: ChunkLogits,
+        scratch: &mut Scratch,
+        stats: &mut ForwardStats,
+        logits: &mut Vec<f32>,
+    ) {
         let m = tokens.len();
         assert!(m > 0, "empty chunk");
         let d = self.cfg.d_model;
@@ -544,24 +594,45 @@ impl Model {
         }
         for b in 0..self.cfg.n_layers {
             for j in 0..m {
+                let sp = if pos0 + j < sparse_from {
+                    dense_sp
+                } else {
+                    sparse_sp
+                };
                 let x = &mut xs[j * d..(j + 1) * d];
                 self.block_step(b, b, x, pos0 + j, cache, sp, scratch, stats);
             }
         }
         stats.tokens += m as u64;
-        logits.resize(m * vocab, 0.0);
-        for j in 0..m {
-            rmsnorm(
-                &xs[j * d..(j + 1) * d],
-                &self.final_norm,
-                self.cfg.rmsnorm_eps,
-                &mut scratch.normed,
-            );
-            self.lm_head.gemv_dense(
-                &scratch.normed,
-                &mut logits[j * vocab..(j + 1) * vocab],
-                intra_op_threads(),
-            );
+        match want {
+            ChunkLogits::PerToken => {
+                logits.resize(m * vocab, 0.0);
+                for j in 0..m {
+                    rmsnorm(
+                        &xs[j * d..(j + 1) * d],
+                        &self.final_norm,
+                        self.cfg.rmsnorm_eps,
+                        &mut scratch.normed,
+                    );
+                    self.lm_head.gemv_dense(
+                        &scratch.normed,
+                        &mut logits[j * vocab..(j + 1) * vocab],
+                        intra_op_threads(),
+                    );
+                }
+            }
+            ChunkLogits::LastOnly => {
+                logits.resize(vocab, 0.0);
+                rmsnorm(
+                    &xs[(m - 1) * d..m * d],
+                    &self.final_norm,
+                    self.cfg.rmsnorm_eps,
+                    &mut scratch.normed,
+                );
+                self.lm_head
+                    .gemv_dense(&scratch.normed, &mut logits[..], intra_op_threads());
+            }
+            ChunkLogits::Skip => {}
         }
         scratch.chunk = xs;
     }
@@ -858,6 +929,98 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn mixed_chunk_matches_per_token_schedule() {
+        // A dense→sparse boundary falling *inside* the chunk must reproduce
+        // the token-by-token mixed schedule bit-for-bit, and LastOnly must
+        // equal the PerToken pass's final row.
+        use crate::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+        let m = nano();
+        let sparse = ScoredSparsifier::new(
+            "teal",
+            (0..m.cfg.n_layers * 7)
+                .map(|_| ScoredLayer { ga: None, tau: 0.5 })
+                .collect(),
+        );
+        let tokens = [5usize, 9, 200, 3, 77, 13, 1, 42];
+        let sparse_from = 3usize; // inside the chunk below
+        let mut stats = ForwardStats::default();
+        // Reference: token-major decode under the same per-position choice.
+        let mut cache = KvCache::new(&m.cfg);
+        let mut scratch = Scratch::new(&m.cfg);
+        let mut l: Vec<f32> = Vec::new();
+        let mut expect: Vec<Vec<f32>> = Vec::new();
+        for (i, &t) in tokens.iter().enumerate() {
+            let sp: &dyn Sparsifier = if i < sparse_from { &Dense } else { &sparse };
+            m.forward_token(t, &mut cache, sp, &mut scratch, &mut stats, &mut l);
+            expect.push(l.clone());
+        }
+        // One warm-up token, then the rest as a single mixed chunk.
+        let mut cache = KvCache::new(&m.cfg);
+        let mut scratch = Scratch::new(&m.cfg);
+        m.forward_token(tokens[0], &mut cache, &Dense, &mut scratch, &mut stats, &mut l);
+        let mut chunk_logits: Vec<f32> = Vec::new();
+        m.forward_chunk_mixed(
+            &tokens[1..],
+            &mut cache,
+            &Dense,
+            &sparse,
+            sparse_from,
+            ChunkLogits::PerToken,
+            &mut scratch,
+            &mut stats,
+            &mut chunk_logits,
+        );
+        let vocab = m.cfg.vocab_size;
+        for (j, exp) in expect.iter().enumerate().skip(1) {
+            let row = &chunk_logits[(j - 1) * vocab..j * vocab];
+            for v in 0..vocab {
+                assert_eq!(
+                    row[v].to_bits(),
+                    exp[v].to_bits(),
+                    "mixed chunk diverged at pos {j} vocab {v}"
+                );
+            }
+        }
+        // LastOnly: same KV trajectory, only the final row materialized.
+        let mut cache = KvCache::new(&m.cfg);
+        let mut scratch = Scratch::new(&m.cfg);
+        let mut last: Vec<f32> = Vec::new();
+        m.forward_chunk_mixed(
+            &tokens,
+            &mut cache,
+            &Dense,
+            &sparse,
+            sparse_from,
+            ChunkLogits::LastOnly,
+            &mut scratch,
+            &mut stats,
+            &mut last,
+        );
+        assert_eq!(last.len(), vocab);
+        let exp = expect.last().unwrap();
+        for v in 0..vocab {
+            assert_eq!(last[v].to_bits(), exp[v].to_bits(), "LastOnly row differs");
+        }
+        // Skip: logits untouched, KV still advanced.
+        let mut cache = KvCache::new(&m.cfg);
+        let mut scratch = Scratch::new(&m.cfg);
+        let mut untouched: Vec<f32> = vec![7.0; 3];
+        m.forward_chunk_mixed(
+            &tokens,
+            &mut cache,
+            &Dense,
+            &sparse,
+            sparse_from,
+            ChunkLogits::Skip,
+            &mut scratch,
+            &mut stats,
+            &mut untouched,
+        );
+        assert_eq!(untouched, vec![7.0; 3], "Skip must not touch the buffer");
+        assert_eq!(cache.len, tokens.len());
     }
 
     #[test]

@@ -89,6 +89,14 @@ impl Batcher {
         self.waiting.pop_front()
     }
 
+    /// Drop a still-queued request by id (client cancellation before
+    /// admission). Returns whether anything was removed.
+    pub fn remove(&mut self, id: u64) -> bool {
+        let before = self.waiting.len();
+        self.waiting.retain(|r| r.id != id);
+        before != self.waiting.len()
+    }
+
     pub fn queue_len(&self) -> usize {
         self.waiting.len()
     }
@@ -177,6 +185,21 @@ mod tests {
         assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![7, 1]);
         assert_eq!(b.pop_front().unwrap().id, 2);
         assert!(b.pop_front().is_none());
+    }
+
+    #[test]
+    fn remove_drops_queued_request() {
+        let mut b = Batcher::new(BatcherCfg {
+            max_batch: 2,
+            max_queue: 10,
+        });
+        for i in 0..3 {
+            b.enqueue(req(i)).unwrap();
+        }
+        assert!(b.remove(1));
+        assert!(!b.remove(1), "already gone");
+        let admitted = b.admit(0);
+        assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
     }
 
     #[test]

@@ -15,10 +15,10 @@
 use crate::data::corpus::detokenize;
 use crate::model::sampler::Sampling;
 use crate::server::batcher::{Batcher, BatcherCfg};
-use crate::server::engine::{Engine, SeqState, SpecEngine};
+use crate::server::engine::{Engine, FinishReason, PrefillStep, SeqState, SpecEngine};
 use crate::server::metrics::Metrics;
 use crate::server::request::{GenRequest, GenResponse, StreamEvent};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -35,6 +35,9 @@ struct SchedState {
     waiters: HashMap<u64, Sender<GenResponse>>,
     /// Per-token event channels for streaming requests (`"stream": true`).
     streams: HashMap<u64, Sender<StreamEvent>>,
+    /// Requests cancelled by their client (disconnected streams): the
+    /// scheduler tears them down — queued or active — on its next pass.
+    cancelled: HashSet<u64>,
 }
 
 /// The serving coordinator. Cloneable handle via Arc.
@@ -77,6 +80,7 @@ impl Coordinator {
                 batcher: Batcher::new(cfg.batcher),
                 waiters: HashMap::new(),
                 streams: HashMap::new(),
+                cancelled: HashSet::new(),
             }),
             wake: Condvar::new(),
             metrics: Mutex::new(Metrics::new()),
@@ -135,14 +139,17 @@ impl Coordinator {
     /// Submit a streaming request: each committed token arrives as a
     /// [`StreamEvent::Token`] on the returned channel (speculative rounds
     /// can deliver several per scheduler step), terminated by a
-    /// [`StreamEvent::Done`] carrying the full response summary.
+    /// [`StreamEvent::Done`] carrying the full response summary. Returns
+    /// the request id alongside the channel so a disconnected client can be
+    /// cancelled via [`Coordinator::cancel`] — dropping the receiver also
+    /// cancels implicitly on the next token send.
     pub fn submit_stream(
         &self,
         prompt: &str,
         max_new: usize,
         sampling: Sampling,
         speculative: bool,
-    ) -> anyhow::Result<std::sync::mpsc::Receiver<StreamEvent>> {
+    ) -> anyhow::Result<(u64, std::sync::mpsc::Receiver<StreamEvent>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = GenRequest::new(id, prompt, max_new);
         req.sampling = sampling;
@@ -158,7 +165,16 @@ impl Coordinator {
             st.streams.insert(id, tx);
         }
         self.wake.notify_all();
-        Ok(rx)
+        Ok((id, rx))
+    }
+
+    /// Cancel an in-flight request (a streaming client hung up): still-
+    /// queued work is dropped outright; an active sequence is torn down on
+    /// the scheduler's next pass, releasing its KV blocks instead of
+    /// decoding to completion for nobody.
+    pub fn cancel(&self, id: u64) {
+        self.state.lock().unwrap().cancelled.insert(id);
+        self.wake.notify_all();
     }
 
     /// [`Coordinator::submit_blocking`] with the per-request speculative
@@ -205,6 +221,14 @@ impl Coordinator {
 
     /// The scheduler loop. Run on a dedicated thread:
     /// `std::thread::spawn(move || coordinator.run_scheduler())`.
+    ///
+    /// Each iteration runs *at most one prefill chunk* (layer-major, at
+    /// most `engine.cfg.prefill_chunk` tokens, shrunk by the number of
+    /// decoding sequences so the iteration's total token work stays under
+    /// one budget) and then one decode step across every prefilled
+    /// sequence. A long prompt therefore never stalls decode for more than
+    /// one chunk's worth of work — the old inline prefill blocked every
+    /// active sequence for the *entire* prompt.
     pub fn run_scheduler(self: &Arc<Self>) {
         // (request, seq, admitted_at) triples in flight.
         let mut active: Vec<(GenRequest, SeqState, Instant)> = Vec::new();
@@ -212,9 +236,35 @@ impl Coordinator {
         // resumed sequence regenerates its prefix deterministically, so the
         // high-water mark naturally suppresses duplicate events.
         let mut stream_sent: HashMap<u64, usize> = HashMap::new();
+        // Completion instant of the previous decode step (the decode-gap /
+        // inter-token fairness metric).
+        let mut last_decode: Option<Instant> = None;
         loop {
             if self.is_shutdown() {
                 return;
+            }
+            // Tear down cancelled requests: queued ones are dropped from
+            // the batcher, active ones release their KV blocks right here
+            // instead of decoding to completion for a vanished client.
+            let cancelled: Vec<u64> = {
+                let mut st = self.state.lock().unwrap();
+                if st.cancelled.is_empty() {
+                    Vec::new()
+                } else {
+                    let ids: Vec<u64> = st.cancelled.drain().collect();
+                    for &id in &ids {
+                        // Still-queued requests are dropped here; active
+                        // ones are torn down below. Closing the channels
+                        // covers both.
+                        st.batcher.remove(id);
+                        st.waiters.remove(&id);
+                        st.streams.remove(&id);
+                    }
+                    ids
+                }
+            };
+            for id in cancelled {
+                self.cancel_active(id, &mut active, &mut stream_sent);
             }
             // Admit new work. With a paged engine, admit only while the
             // head request's worst-case page demand fits the free +
@@ -231,6 +281,7 @@ impl Coordinator {
                         .unwrap()
                         .0;
                     st2.batcher.queue_len(); // keep borrowck simple
+                    last_decode = None;
                     continue;
                 }
                 let mut adm = match self.engine.kv.as_ref() {
@@ -269,56 +320,112 @@ impl Coordinator {
                 if let (Some(spec), true) = (&self.spec, req.speculative) {
                     spec.init_seq(&mut seq);
                 }
-                self.engine.prefill(&mut seq);
-                {
-                    let mut m = self.metrics.lock().unwrap();
+                // Prefill is NOT run here: the sequence joins the active
+                // set with its chunk cursor at the prefix-hit boundary and
+                // the loop below advances it one chunk per iteration.
+                if !req.preempted {
                     // A resumed request's wait includes its first run's
                     // decode time — sampling it again would both double-
                     // count the request and pollute queue_ms with run time.
-                    if !req.preempted {
-                        m.queue_ms.add(queue_ms);
-                    }
-                    // Tokens actually forwarded: excludes prefix-cache hits
-                    // and anything cut off by a cache_full abort.
-                    m.tokens_prefilled +=
-                        (seq.kv.seq_len() - seq.prefix_hit_tokens) as u64;
+                    self.metrics.lock().unwrap().queue_ms.add(queue_ms);
                 }
                 active.push((req, seq, Instant::now()));
             }
             if active.is_empty() {
+                last_decode = None;
                 continue;
             }
+            // At most one prefill chunk this iteration, its token budget
+            // shrunk by the decode batch's size so one iteration's total
+            // forward work stays bounded by `prefill_chunk` tokens (the
+            // `max(1)` keeps prefill live even when decode fills the
+            // budget by itself).
+            let decode_ready = active
+                .iter()
+                .filter(|(_, s, _)| s.prefill_complete() && !s.finished())
+                .count();
+            if let Some(idx) = active
+                .iter()
+                .position(|(_, s, _)| !s.prefill_complete() && !s.finished())
+            {
+                let budget = self
+                    .engine
+                    .cfg
+                    .prefill_chunk
+                    .saturating_sub(decode_ready)
+                    .max(1);
+                match self.engine.prefill_chunk(&mut active[idx].1, budget) {
+                    PrefillStep::Advanced(t) | PrefillStep::Completed(t) => {
+                        let mut m = self.metrics.lock().unwrap();
+                        m.prefill_chunks_total += 1;
+                        // Tokens actually forwarded: prefix-cache hits never
+                        // enter a chunk.
+                        m.tokens_prefilled += t as u64;
+                    }
+                    PrefillStep::PoolDry => {
+                        // Mid-prompt pool exhaustion: free blocks by
+                        // preempting the youngest sequence and retry the
+                        // chunk next iteration. With nobody to yield to the
+                        // prompt ends `cache_full` — partial prefill is an
+                        // explicit terminal state, never decodable.
+                        if !self.preempt_youngest(&mut active) {
+                            active[idx].1.abort(FinishReason::CacheFull);
+                        }
+                    }
+                }
+            }
             self.reserve_or_preempt(&mut active);
-            // One decode step across the batch: only unfinished sequences
-            // enter (chunks stay balanced when completions cluster); the
-            // decode policy itself is shared with `Engine::step_batch`. A
-            // speculative coordinator runs one draft/verify round per armed
-            // sequence instead, which can commit several tokens at once —
-            // per-token latency divides by the tokens actually committed.
+            // One decode step across the batch: only prefilled, unfinished
+            // sequences enter (chunks stay balanced when completions
+            // cluster); the decode policy itself is shared with
+            // `Engine::step_batch`. A speculative coordinator runs one
+            // draft/verify round per armed sequence instead, which can
+            // commit several tokens at once — per-token latency divides by
+            // the tokens actually committed.
             let t0 = Instant::now();
+            let mut decoded = false;
             let committed = {
                 let mut seqs: Vec<&mut SeqState> = active
                     .iter_mut()
                     .map(|(_, s, _)| s)
-                    .filter(|s| !s.finished())
+                    .filter(|s| s.prefill_complete() && !s.finished())
                     .collect();
-                let before: usize = seqs.iter().map(|s| s.generated.len()).sum();
-                match &self.spec {
-                    Some(spec) => spec.step_slots(&mut seqs[..]),
-                    None => self.engine.step_slots(&mut seqs[..]),
+                if seqs.is_empty() {
+                    0
+                } else {
+                    decoded = true;
+                    let before: usize = seqs.iter().map(|s| s.generated.len()).sum();
+                    match &self.spec {
+                        Some(spec) => spec.step_slots(&mut seqs[..]),
+                        None => self.engine.step_slots(&mut seqs[..]),
+                    }
+                    let after: usize = seqs.iter().map(|s| s.generated.len()).sum();
+                    after - before
                 }
-                let after: usize = seqs.iter().map(|s| s.generated.len()).sum();
-                after - before
             };
-            let step_ms = t0.elapsed().as_secs_f64() * 1e3;
-            {
+            if decoded {
+                let now = Instant::now();
+                let step_ms = (now - t0).as_secs_f64() * 1e3;
                 let mut m = self.metrics.lock().unwrap();
                 m.per_token_ms.add(step_ms / committed.max(1) as f64);
+                if let Some(prev) = last_decode {
+                    // Completion-to-completion: the stall a decoding client
+                    // actually observes, interleaved prefill included.
+                    m.decode_gap_ms.add((now - prev).as_secs_f64() * 1e3);
+                }
+                last_decode = Some(now);
+            } else {
+                // No decodable sequence exists (pure-prefill phase): nobody
+                // observes a gap.
+                last_decode = None;
             }
             // Stream newly committed tokens (one NDJSON event per accepted
             // token; a speculative round can commit several per step).
             // Finished sequences are still in `active` here, so their tail
-            // tokens flush before the Done event below.
+            // tokens flush before the Done event below. A failed send means
+            // the receiving client is gone: cancel the sequence instead of
+            // decoding the rest of it into the void.
+            let mut dead_streams: Vec<u64> = Vec::new();
             {
                 let st = self.state.lock().unwrap();
                 if !st.streams.is_empty() {
@@ -326,15 +433,22 @@ impl Coordinator {
                         if let Some(tx) = st.streams.get(&req.id) {
                             let sent = stream_sent.entry(req.id).or_insert(0);
                             while *sent < seq.generated.len() {
-                                let _ = tx.send(StreamEvent::Token {
+                                let ev = StreamEvent::Token {
                                     index: *sent,
                                     text: detokenize(&seq.generated[*sent..*sent + 1]),
-                                });
+                                };
+                                if tx.send(ev).is_err() {
+                                    dead_streams.push(req.id);
+                                    break;
+                                }
                                 *sent += 1;
                             }
                         }
                     }
                 }
+            }
+            for id in dead_streams {
+                self.cancel_active(id, &mut active, &mut stream_sent);
             }
             // Complete finished sequences.
             let mut i = 0;
@@ -396,38 +510,74 @@ impl Coordinator {
         while i < active.len() {
             let needs = {
                 let s = &active[i].1;
-                // decode_one samples one token first; a forward (and thus a
-                // page) is only needed when that doesn't finish the seq.
-                !s.finished() && s.generated.len() + 1 < s.max_new
+                // Only prefilled sequences decode this step; decode_one
+                // samples one token first, so a forward (and thus a page)
+                // is only needed when that doesn't finish the seq.
+                s.prefill_complete() && !s.finished() && s.generated.len() + 1 < s.max_new
             };
             if !needs || self.engine.reserve_seq(&mut active[i].1) {
                 i += 1;
                 continue;
             }
-            // With a single unfinished sequence there is nobody to yield
-            // to: preempting it would requeue-and-fail forever. Let
-            // `decode_one` surface `cache_full` instead.
-            if active.iter().filter(|(_, s, _)| !s.finished()).count() <= 1 {
+            if !self.preempt_youngest(active) {
+                // With a single unfinished sequence there is nobody to
+                // yield to: preempting it would requeue-and-fail forever.
+                // Let `decode_one` surface `cache_full` instead.
                 i += 1;
                 continue;
             }
-            // Preempt the youngest unfinished sequence (highest id ==
-            // latest submitted; preempted-and-resumed requests keep their
-            // original low id, so they are preempted last).
-            let victim = active
-                .iter()
-                .enumerate()
-                .filter(|(_, (_, s, _))| !s.finished())
-                .max_by_key(|(_, (r, _, _))| r.id)
-                .map(|(idx, _)| idx)
-                .expect("sequence i itself is unfinished");
-            let (mut req, seq, _) = active.swap_remove(victim);
-            drop(seq); // releases the page table's block refs
-            req.preempted = true;
-            self.state.lock().unwrap().batcher.requeue_front(req);
-            self.metrics.lock().unwrap().preemptions_total += 1;
             i = 0;
         }
+    }
+
+    /// Tear down one active sequence whose client is gone (explicit
+    /// [`Coordinator::cancel`] or a failed stream send): remove it from the
+    /// active set — dropping it releases its KV blocks — close its
+    /// channels, clear the stream high-water mark, and count the
+    /// cancellation. No-op for ids that are not active (still-queued
+    /// cancellations are handled by the batcher drain).
+    fn cancel_active(
+        &self,
+        id: u64,
+        active: &mut Vec<(GenRequest, SeqState, Instant)>,
+        stream_sent: &mut HashMap<u64, usize>,
+    ) {
+        stream_sent.remove(&id);
+        if let Some(i) = active.iter().position(|(r, _, _)| r.id == id) {
+            let (_, seq, _) = active.swap_remove(i);
+            drop(seq); // page table drops → blocks back to the pool
+            let mut st = self.state.lock().unwrap();
+            st.waiters.remove(&id);
+            st.streams.remove(&id);
+            drop(st);
+            self.metrics.lock().unwrap().cancellations_total += 1;
+        }
+    }
+
+    /// Preempt the youngest active unfinished sequence (highest id ==
+    /// latest submitted; preempted-and-resumed requests keep their original
+    /// low id, so they are preempted last): its pages are released and the
+    /// request requeued at the head of the line. Mid-prefill sequences are
+    /// legitimate victims — they restart from their (possibly now cached)
+    /// prefix when re-admitted. Returns false when at most one unfinished
+    /// sequence exists, i.e. there is nobody to yield to.
+    fn preempt_youngest(&self, active: &mut Vec<(GenRequest, SeqState, Instant)>) -> bool {
+        if active.iter().filter(|(_, s, _)| !s.finished()).count() <= 1 {
+            return false;
+        }
+        let victim = active
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, s, _))| !s.finished())
+            .max_by_key(|(_, (r, _, _))| r.id)
+            .map(|(idx, _)| idx)
+            .expect("checked: at least two unfinished sequences");
+        let (mut req, seq, _) = active.swap_remove(victim);
+        drop(seq); // releases the page table's block refs
+        req.preempted = true;
+        self.state.lock().unwrap().batcher.requeue_front(req);
+        self.metrics.lock().unwrap().preemptions_total += 1;
+        true
     }
 }
 
@@ -507,7 +657,7 @@ mod tests {
         let reference = coord
             .submit_blocking("stream me", 6, Sampling::Greedy)
             .unwrap();
-        let rx = coord
+        let (_, rx) = coord
             .submit_stream("stream me", 6, Sampling::Greedy, true)
             .unwrap();
         let mut text = String::new();

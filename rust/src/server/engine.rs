@@ -18,7 +18,7 @@ use crate::data::corpus::{detokenize, tokenize};
 use crate::kv::{KvCfg, KvManager, KvSeq, PagedSeq};
 use crate::model::kv_cache::KvCache;
 use crate::model::sampler::{residual_sample, sample_from, spec_accept, Sampling};
-use crate::model::transformer::{ForwardStats, Model, Scratch};
+use crate::model::transformer::{ChunkLogits, ForwardStats, Model, Scratch};
 use crate::sparsity::{Dense, Sparsifier};
 use crate::tensor::ops::argmax;
 use crate::util::rng::Pcg64;
@@ -30,6 +30,11 @@ use std::sync::Arc;
 pub struct EngineCfg {
     /// Fraction of prefill tokens (the trailing part) run sparse (paper: 0.5).
     pub prefill_sparse_fraction: f64,
+    /// Token budget per prefill chunk (`--prefill-chunk`). Each chunk runs
+    /// layer-major through [`Model::forward_chunk_mixed`], so weights stream
+    /// from memory once per chunk instead of once per prompt token, and the
+    /// serving scheduler interleaves decode steps between chunks.
+    pub prefill_chunk: usize,
     /// Threads for batch-level decode (sequences per step). Single-sequence
     /// decode additionally uses kernel-level intra-GEMV parallelism budgeted
     /// from `WISPARSE_THREADS`; inside batched steps that budget is scoped
@@ -43,6 +48,7 @@ impl Default for EngineCfg {
     fn default() -> Self {
         Self {
             prefill_sparse_fraction: 0.5,
+            prefill_chunk: 64,
             threads: crate::util::threadpool::num_threads(),
             seed: 0xD_EC0DE,
         }
@@ -139,6 +145,36 @@ impl SpecState {
     }
 }
 
+/// Progress of a sequence's chunked prefill (the chunk cursor lives here so
+/// the scheduler can interleave decode steps between a prompt's chunks).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefillState {
+    /// Next prompt index to compute. Jumps to the prefix-cache hit length
+    /// when the first chunk adopts cached blocks, and always equals
+    /// `kv.seq_len()` until prefill completes.
+    pub cursor: usize,
+    /// Chunks run so far (metrics/fairness accounting).
+    pub chunks: u64,
+    /// Whether the one-shot prefix-cache match has run (deferred from
+    /// admission to the first chunk, so prompts admitted in the same batch
+    /// can still share a prefix a batch-mate publishes first).
+    matched: bool,
+}
+
+/// Outcome of one [`Engine::prefill_chunk`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefillStep {
+    /// Computed this many prompt tokens; more chunks remain.
+    Advanced(usize),
+    /// Computed this many prompt tokens and finished the prompt: the
+    /// sequence is ready to decode (`last_logits` seeded, prefix published).
+    Completed(usize),
+    /// KV backing (pool or context window) exhausted before a single token
+    /// of the chunk could be reserved. The caller decides between
+    /// preemption (scheduler) and a terminal `cache_full` (standalone).
+    PoolDry,
+}
+
 /// One in-flight sequence.
 pub struct SeqState {
     pub id: u64,
@@ -152,6 +188,8 @@ pub struct SeqState {
     pub stats: ForwardStats,
     rng: Pcg64,
     prefilled: bool,
+    /// Chunked-prefill progress (cursor + chunk count).
+    pub prefill: PrefillState,
     /// Prompt tokens served from the prefix cache (skipped in prefill).
     pub prefix_hit_tokens: usize,
     /// Set when the sequence was preempted and re-admitted.
@@ -166,6 +204,20 @@ impl SeqState {
         self.finish_override.is_some()
             || self.generated.len() >= self.max_new
             || self.kv.is_full()
+    }
+
+    /// Whether the whole prompt has been prefilled (a mid-prompt
+    /// `cache_full` abort leaves this false — the sequence is terminal but
+    /// must never enter a decode step).
+    pub fn prefill_complete(&self) -> bool {
+        self.prefilled
+    }
+
+    /// Terminally finish the sequence with an explicit reason (scheduler-
+    /// side aborts, e.g. mid-prompt pool exhaustion with nobody left to
+    /// preempt). Idempotent; the first reason wins.
+    pub fn abort(&mut self, reason: FinishReason) {
+        self.finish_override.get_or_insert(reason);
     }
 
     /// Why this (finished) sequence stopped.
@@ -240,20 +292,19 @@ impl Engine {
     }
 
     /// Create sequence state for a prompt (tokenized, truncated to fit the
-    /// context window with room for generation). Paged engines adopt any
-    /// cached prefix blocks here; `prefill` then computes only the suffix.
+    /// context window with room for generation). Prefix-cache matching is
+    /// deferred to the first prefill chunk (see
+    /// [`Engine::adopt_cached_prefix`]), so prompts admitted in one batch
+    /// still share a prefix a batch-mate's prefill publishes first.
     pub fn admit(&self, id: u64, prompt: &str, max_new: usize, sampling: Sampling) -> SeqState {
         let mut tokens = tokenize(prompt);
         let keep = self.truncated_prompt_len(tokens.len(), max_new);
         if tokens.len() > keep {
             tokens.drain(..tokens.len() - keep);
         }
-        let (kv, hit) = match &self.kv {
-            Some(mgr) => {
-                let (seq, hit) = mgr.acquire(&tokens);
-                (SeqKv::Paged(seq), hit)
-            }
-            None => (SeqKv::Flat(KvCache::new(&self.model.cfg)), 0),
+        let kv = match &self.kv {
+            Some(mgr) => SeqKv::Paged(mgr.new_seq()),
+            None => SeqKv::Flat(KvCache::new(&self.model.cfg)),
         };
         SeqState {
             id,
@@ -268,10 +319,49 @@ impl Engine {
             stats: ForwardStats::default(),
             rng: Pcg64::with_stream(self.cfg.seed, id),
             prefilled: false,
-            prefix_hit_tokens: hit,
+            prefill: PrefillState::default(),
+            prefix_hit_tokens: 0,
             resumed: false,
             spec: SpecState::default(),
             finish_override: None,
+        }
+    }
+
+    /// One-shot prefix-cache adoption, run by the first prefill chunk (or
+    /// the sequential reference path). Matching is schedule-aware: only
+    /// cached KV whose producer ran the same dense/sparse positions this
+    /// prompt's own prefill would run is adopted, so hit and miss logits
+    /// are bit-identical.
+    fn adopt_cached_prefix(&self, seq: &mut SeqState) {
+        if seq.prefill.matched {
+            return;
+        }
+        seq.prefill.matched = true;
+        let n = seq.prompt_tokens.len();
+        if let (Some(mgr), SeqKv::Paged(p)) = (&self.kv, &mut seq.kv) {
+            debug_assert_eq!(p.seq_len(), 0, "prefix adoption on a started sequence");
+            let hit = mgr.adopt_cached_prefix(p, &seq.prompt_tokens, self.schedule_tag(n));
+            seq.prefix_hit_tokens = hit;
+            seq.prefill.cursor = hit;
+        }
+    }
+
+    /// First prompt position run sparse under the paper's prefill policy
+    /// (positions below this run dense).
+    pub fn dense_upto(&self, prompt_len: usize) -> usize {
+        ((1.0 - self.cfg.prefill_sparse_fraction) * prompt_len as f64).floor() as usize
+    }
+
+    /// Schedule tag for prefix-cache consistency: the dense→sparse boundary
+    /// this engine's prefill would use for a prompt of `prompt_len` tokens.
+    /// A dense-executing engine runs every position identically, so its KV
+    /// is valid under any boundary — tagged `usize::MAX` (always dense) so
+    /// prompts of different lengths keep sharing prefixes.
+    pub fn schedule_tag(&self, prompt_len: usize) -> usize {
+        if self.sparsifier.name() == "dense" {
+            usize::MAX
+        } else {
+            self.dense_upto(prompt_len)
         }
     }
 
@@ -332,20 +422,94 @@ impl Engine {
     }
 
     /// Prefill one sequence (paper policy: leading fraction dense, trailing
-    /// fraction sparse). Tokens covered by a prefix-cache hit are skipped
-    /// entirely — their K/V pages are already resident and shared. After a
-    /// successful prefill the prompt's full blocks are published to the
-    /// prefix cache.
+    /// fraction sparse), as a sequence of layer-major chunks of at most
+    /// `cfg.prefill_chunk` tokens — bit-identical to the token-by-token
+    /// schedule ([`Engine::prefill_sequential`]) but streaming every
+    /// layer's weights once per *chunk*. Tokens covered by a prefix-cache
+    /// hit are skipped entirely. Pool exhaustion mid-prompt is a terminal
+    /// `cache_full` here (the serving scheduler instead preempts and
+    /// retries); the sequence then stays `!prefill_complete()` and must not
+    /// decode.
     pub fn prefill(&self, seq: &mut SeqState) {
         assert!(!seq.prefilled);
+        while !seq.prefilled && seq.finish_override.is_none() {
+            if self.prefill_chunk(seq, self.cfg.prefill_chunk) == PrefillStep::PoolDry {
+                seq.finish_override = Some(FinishReason::CacheFull);
+            }
+        }
+    }
+
+    /// Run one chunk (at most `budget` tokens, at least 1) of `seq`'s
+    /// pending prefill through [`Model::forward_chunk_mixed`]. KV for the
+    /// whole chunk is reserved up front via [`Engine::reserve_ahead`]; when
+    /// the pool can only back part of the chunk the chunk shrinks, and when
+    /// it can back none of it [`PrefillStep::PoolDry`] is returned with the
+    /// sequence untouched. The final chunk computes only the last prompt
+    /// token's logits (they seed decoding; interior positions skip the
+    /// lm_head entirely) and publishes the prompt's full blocks — with the
+    /// engine's schedule tag — to the prefix cache. Publication therefore
+    /// only ever happens after the *full* prompt has committed.
+    pub fn prefill_chunk(&self, seq: &mut SeqState, budget: usize) -> PrefillStep {
+        assert!(!seq.prefilled, "prefill_chunk on a prefilled sequence");
+        debug_assert!(seq.finish_override.is_none());
+        self.adopt_cached_prefix(seq);
         let n = seq.prompt_tokens.len();
-        let start = seq.kv.seq_len();
-        debug_assert_eq!(start, seq.prefix_hit_tokens);
-        let dense_upto = ((1.0 - self.cfg.prefill_sparse_fraction) * n as f64).floor() as usize;
-        for i in start..n {
+        let cur = seq.prefill.cursor;
+        debug_assert_eq!(cur, seq.kv.seq_len());
+        if cur >= n {
+            // Empty prompt (nothing to forward): complete immediately, as
+            // the pre-chunking token-by-token loop did.
+            seq.prefilled = true;
+            return PrefillStep::Completed(0);
+        }
+        let want = budget.max(1).min(n - cur);
+        let got = self.reserve_ahead(seq, want);
+        if got == 0 {
+            return PrefillStep::PoolDry;
+        }
+        let m = want.min(got);
+        let last = cur + m == n;
+        self.model.forward_chunk_mixed(
+            &seq.prompt_tokens[cur..cur + m],
+            seq.kv.as_dyn(),
+            &Dense,
+            self.sparsifier.as_ref(),
+            self.dense_upto(n),
+            if last {
+                ChunkLogits::LastOnly
+            } else {
+                ChunkLogits::Skip
+            },
+            &mut seq.scratch,
+            &mut seq.stats,
+            &mut seq.last_logits,
+        );
+        seq.prefill.cursor += m;
+        seq.prefill.chunks += 1;
+        if !last {
+            return PrefillStep::Advanced(m);
+        }
+        seq.prefilled = true;
+        if let (Some(mgr), SeqKv::Paged(p)) = (&self.kv, &seq.kv) {
+            mgr.insert_prefix_scheduled(&seq.prompt_tokens, p, self.schedule_tag(n));
+        }
+        PrefillStep::Completed(m)
+    }
+
+    /// Token-by-token prefill — the pre-chunking reference path, kept for
+    /// the differential equivalence tests and the `BENCH_prefill.json` A/B.
+    /// Same per-position dense/sparse schedule, same terminal
+    /// partial-prefill semantics as [`Engine::prefill`].
+    pub fn prefill_sequential(&self, seq: &mut SeqState) {
+        assert!(!seq.prefilled);
+        self.adopt_cached_prefix(seq);
+        let n = seq.prompt_tokens.len();
+        debug_assert_eq!(seq.prefill.cursor, seq.kv.seq_len());
+        let dense_upto = self.dense_upto(n);
+        for i in seq.prefill.cursor..n {
             if !self.reserve_seq(seq) {
                 seq.finish_override = Some(FinishReason::CacheFull);
-                break;
+                return;
             }
             let tok = seq.prompt_tokens[i];
             let sp: &dyn Sparsifier = if i < dense_upto {
@@ -361,13 +525,19 @@ impl Engine {
                 &mut seq.stats,
                 &mut seq.last_logits,
             );
+            seq.prefill.cursor = i + 1;
         }
         seq.prefilled = true;
-        if seq.finish_override.is_none() {
-            if let (Some(mgr), SeqKv::Paged(p)) = (&self.kv, &seq.kv) {
-                mgr.insert_prefix(&seq.prompt_tokens, p);
-            }
+        if let (Some(mgr), SeqKv::Paged(p)) = (&self.kv, &seq.kv) {
+            mgr.insert_prefix_scheduled(&seq.prompt_tokens, p, self.schedule_tag(n));
         }
+    }
+
+    /// Final logits of the last prefilled/decoded position — the
+    /// distribution the next decode step samples from (test/bench hook for
+    /// the chunked-vs-sequential bit-equality assertions).
+    pub fn last_logits<'a>(&self, seq: &'a SeqState) -> &'a [f32] {
+        &seq.last_logits
     }
 
     /// One decode step for a single sequence (assumes prefilled). Steady
@@ -841,6 +1011,78 @@ mod tests {
         e.prefill(&mut seq);
         let d = seq.stats.density();
         assert!(d > 0.05 && d < 0.95, "density {d}");
+    }
+
+    #[test]
+    fn chunked_prefill_bit_identical_to_sequential() {
+        // Chunk sizes straddling the dense→sparse boundary, dividing and not
+        // dividing the prompt length — logits and decode continuations must
+        // match the token-by-token reference bit-for-bit.
+        for chunk in [1usize, 3, 5, 64] {
+            let mut e = engine(Some(0.4));
+            e.cfg.prefill_chunk = chunk;
+            let prompt = "the quick brown fox jumps";
+            let mut a = e.admit(0, prompt, 8, Sampling::Greedy);
+            e.prefill(&mut a);
+            let mut b = e.admit(1, prompt, 8, Sampling::Greedy);
+            e.prefill_sequential(&mut b);
+            assert!(a.prefill_complete() && b.prefill_complete());
+            assert!(a.prefill.chunks >= 1);
+            let la = e.last_logits(&a).to_vec();
+            let lb = e.last_logits(&b).to_vec();
+            assert_eq!(la.len(), lb.len());
+            for (x, y) in la.iter().zip(&lb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "chunk={chunk} logits differ");
+            }
+            while !a.finished() {
+                e.decode_one(&mut a);
+            }
+            while !b.finished() {
+                e.decode_one(&mut b);
+            }
+            assert_eq!(a.text(), b.text(), "chunk={chunk} decode diverged");
+        }
+    }
+
+    #[test]
+    fn empty_prompt_prefill_completes_without_work() {
+        // The chunked path must keep the old loop's n=0 behaviour: complete
+        // immediately instead of asserting or spinning PoolDry.
+        let e = engine(None);
+        let mut seq = e.admit(0, "", 0, Sampling::Greedy);
+        e.prefill(&mut seq);
+        assert!(seq.prefill_complete());
+        assert_eq!(seq.prefill.cursor, 0);
+        assert!(seq.finished(), "max_new 0 finishes with nothing to decode");
+    }
+
+    #[test]
+    fn partial_prefill_is_terminal_not_decodable() {
+        // Pool exhaustion mid-prompt must leave an explicitly terminal,
+        // never-decodable sequence — not a half-prefilled one that passes
+        // the decode guard.
+        let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+        let pe = Engine::paged(
+            model,
+            Arc::new(Dense),
+            EngineCfg {
+                threads: 1,
+                prefill_chunk: 4,
+                ..EngineCfg::default()
+            },
+            &KvCfg {
+                pool_blocks: 2,
+                block_size: 4,
+                prefix_cache: false,
+            },
+        );
+        let mut seq = pe.admit(0, &"x".repeat(16), 8, Sampling::Greedy);
+        pe.prefill(&mut seq);
+        assert!(!seq.prefill_complete(), "mid-prompt abort must not mark prefilled");
+        assert!(seq.finished(), "partial prefill is terminal");
+        assert_eq!(seq.finish_reason(), FinishReason::CacheFull);
+        assert!(seq.generated.is_empty());
+        assert_eq!(seq.prefill.cursor, 8, "8 positions fit the 8-slot pool");
     }
 
     #[test]

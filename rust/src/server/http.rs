@@ -18,9 +18,20 @@
 use crate::server::coordinator::Coordinator;
 use crate::server::request::{GenRequest, StreamEvent};
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Hard caps on untrusted request framing. Without them a slow or hostile
+/// client pins a connection thread forever and grows header buffers without
+/// bound (one giant never-terminated line, or an endless header stream).
+pub const MAX_HEADER_LINE_BYTES: usize = 8 * 1024;
+pub const MAX_HEADER_COUNT: usize = 64;
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+/// Socket read timeout: a client that stops sending mid-request gets a 408
+/// and its thread back instead of a permanent hang.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// A parsed HTTP request (just what the router needs).
 #[derive(Debug)]
@@ -30,45 +41,112 @@ pub struct HttpRequest {
     pub body: String,
 }
 
-/// Parse one HTTP/1.1 request from a stream.
-pub fn parse_request<R: BufRead>(reader: &mut R) -> anyhow::Result<HttpRequest> {
+/// Why parsing an HTTP request failed — each class maps to a distinct
+/// response status (408 / 431 / 413 / 400).
+#[derive(Debug)]
+pub enum ParseError {
+    /// A header line or the header count blew past its cap (431).
+    HeadersTooLarge(&'static str),
+    /// Declared Content-Length exceeds the body cap (413).
+    BodyTooLarge,
+    /// The socket read timed out mid-request (408).
+    Timeout,
+    /// Malformed request or transport error (400).
+    Bad(String),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::HeadersTooLarge(what) => write!(f, "{what}"),
+            ParseError::BodyTooLarge => write!(f, "body too large"),
+            ParseError::Timeout => write!(f, "read timed out"),
+            ParseError::Bad(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl From<std::io::Error> for ParseError {
+    fn from(e: std::io::Error) -> Self {
+        match e.kind() {
+            // Unix reports an expired SO_RCVTIMEO as WouldBlock, Windows as
+            // TimedOut.
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => ParseError::Timeout,
+            _ => ParseError::Bad(e.to_string()),
+        }
+    }
+}
+
+/// The status line a parse failure maps to.
+pub fn error_status(e: &ParseError) -> (u16, &'static str) {
+    match e {
+        ParseError::HeadersTooLarge(_) => (431, "Request Header Fields Too Large"),
+        ParseError::BodyTooLarge => (413, "Payload Too Large"),
+        ParseError::Timeout => (408, "Request Timeout"),
+        ParseError::Bad(_) => (400, "Bad Request"),
+    }
+}
+
+/// Read one CRLF-terminated line with a hard byte cap: the `take` adaptor
+/// bounds how much a line missing its terminator can buffer. Returns the
+/// bytes consumed (0 = EOF).
+fn read_line_capped<R: BufRead>(reader: &mut R, line: &mut String) -> Result<usize, ParseError> {
+    line.clear();
+    let n = (&mut *reader)
+        .take(MAX_HEADER_LINE_BYTES as u64 + 1)
+        .read_line(line)
+        .map_err(ParseError::from)?;
+    if line.len() > MAX_HEADER_LINE_BYTES {
+        return Err(ParseError::HeadersTooLarge("header line too long"));
+    }
+    Ok(n)
+}
+
+/// Parse one HTTP/1.1 request from a stream, enforcing the framing caps.
+pub fn parse_request<R: BufRead>(reader: &mut R) -> Result<HttpRequest, ParseError> {
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    read_line_capped(reader, &mut line)?;
     let mut parts = line.split_whitespace();
     let method = parts
         .next()
-        .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+        .ok_or_else(|| ParseError::Bad("empty request line".to_string()))?
         .to_string();
     let path = parts
         .next()
-        .ok_or_else(|| anyhow::anyhow!("missing path"))?
+        .ok_or_else(|| ParseError::Bad("missing path".to_string()))?
         .to_string();
     let mut content_length = 0usize;
+    let mut n_headers = 0usize;
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim_end();
-        if h.is_empty() {
+        let n = read_line_capped(reader, &mut line)?;
+        let h = line.trim_end();
+        if n == 0 || h.is_empty() {
             break;
+        }
+        n_headers += 1;
+        if n_headers > MAX_HEADER_COUNT {
+            return Err(ParseError::HeadersTooLarge("too many headers"));
         }
         if let Some((k, v)) = h.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v
                     .trim()
                     .parse()
-                    .map_err(|_| anyhow::anyhow!("bad content-length"))?;
+                    .map_err(|_| ParseError::Bad("bad content-length".to_string()))?;
             }
         }
     }
-    if content_length > 1 << 20 {
-        anyhow::bail!("body too large");
+    if content_length > MAX_BODY_BYTES {
+        return Err(ParseError::BodyTooLarge);
     }
     let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
+    reader.read_exact(&mut body).map_err(ParseError::from)?;
     Ok(HttpRequest {
         method,
         path,
-        body: String::from_utf8(body).map_err(|_| anyhow::anyhow!("non-utf8 body"))?,
+        body: String::from_utf8(body).map_err(|_| ParseError::Bad("non-utf8 body".into()))?,
     })
 }
 
@@ -126,9 +204,13 @@ fn write_chunk(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
 
 /// Streaming `/generate`: chunked NDJSON, one line per committed token,
 /// then the `"done": true` summary line and the terminating zero chunk.
+/// A failed socket write means the client hung up: the request is cancelled
+/// so the scheduler frees its KV blocks instead of decoding the rest of the
+/// sequence for nobody (dropping `rx` doubles as a backstop — the
+/// scheduler also cancels on its next failed token send).
 fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: &GenRequest) {
-    let rx = match coord.submit_stream(&r.prompt, r.max_new, r.sampling, r.speculative) {
-        Ok(rx) => rx,
+    let (id, rx) = match coord.submit_stream(&r.prompt, r.max_new, r.sampling, r.speculative) {
+        Ok(ok) => ok,
         Err(e) => {
             let body = Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string_compact();
             let _ = stream.write_all(response(503, "Service Unavailable", &body).as_bytes());
@@ -137,12 +219,14 @@ fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: &GenRequ
     };
     let head = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
     if stream.write_all(head.as_bytes()).is_err() {
-        return; // client gone; the scheduler still completes the request
+        coord.cancel(id);
+        return;
     }
     for ev in rx {
         let done = matches!(ev, StreamEvent::Done(_));
         let line = format!("{}\n", ev.to_json().to_string_compact());
         if write_chunk(stream, &line).is_err() {
+            coord.cancel(id);
             return;
         }
         let _ = stream.flush();
@@ -155,6 +239,9 @@ fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: &GenRequ
 
 fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
     let peer = stream.peer_addr().ok();
+    // A stalled client trips the read timeout (408) rather than pinning
+    // this thread forever. Writes (streaming responses) are unaffected.
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -187,9 +274,11 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
             crate::debug!("{:?} {} {} -> {status}", peer, req.method, req.path);
         }
         Err(e) => {
+            let (status, reason) = error_status(&e);
             let _ = stream.write_all(
-                response(400, "Bad Request", &format!(r#"{{"error":"{e}"}}"#)).as_bytes(),
+                response(status, reason, &format!(r#"{{"error":"{e}"}}"#)).as_bytes(),
             );
+            crate::debug!("{:?} parse error -> {status} ({e})", peer);
         }
     }
 }
@@ -243,7 +332,78 @@ mod tests {
     #[test]
     fn rejects_giant_body() {
         let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 1 << 22);
-        assert!(parse_request(&mut Cursor::new(raw.as_bytes())).is_err());
+        let err = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert!(matches!(err, ParseError::BodyTooLarge), "{err:?}");
+        assert_eq!(error_status(&err).0, 413);
+    }
+
+    #[test]
+    fn rejects_oversized_header_line() {
+        // One header line far past the cap — and, crucially, one with NO
+        // terminator at all: the cap must bound buffering, not wait for a
+        // newline that never comes.
+        let raw = format!("GET / HTTP/1.1\r\nX-Big: {}\r\n\r\n", "a".repeat(64 * 1024));
+        let err = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert!(matches!(err, ParseError::HeadersTooLarge(_)), "{err:?}");
+        assert_eq!(error_status(&err).0, 431);
+        let unterminated = format!("GET / HTTP/1.1\r\nX-Big: {}", "a".repeat(10 * 1024 * 1024));
+        let err = parse_request(&mut Cursor::new(unterminated.as_bytes())).unwrap_err();
+        assert!(matches!(err, ParseError::HeadersTooLarge(_)), "{err:?}");
+        // A giant request *line* is capped the same way.
+        let raw = format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(64 * 1024));
+        let err = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert!(matches!(err, ParseError::HeadersTooLarge(_)), "{err:?}");
+    }
+
+    #[test]
+    fn rejects_too_many_headers() {
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..(MAX_HEADER_COUNT + 1) {
+            raw.push_str(&format!("X-H{i}: v\r\n"));
+        }
+        raw.push_str("\r\n");
+        let err = parse_request(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert!(matches!(err, ParseError::HeadersTooLarge(_)), "{err:?}");
+        assert_eq!(error_status(&err).0, 431);
+        // Exactly at the cap still parses.
+        let mut ok = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..MAX_HEADER_COUNT {
+            ok.push_str(&format!("X-H{i}: v\r\n"));
+        }
+        ok.push_str("\r\n");
+        assert!(parse_request(&mut Cursor::new(ok.as_bytes())).is_ok());
+    }
+
+    /// A reader that yields its bytes, then fails like an expired
+    /// `SO_RCVTIMEO` (WouldBlock) — the stalled-client shape.
+    struct StallingReader(Cursor<Vec<u8>>);
+
+    impl std::io::Read for StallingReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.0.read(buf)?;
+            if n == 0 {
+                return Err(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+            }
+            Ok(n)
+        }
+    }
+
+    fn stalling(partial: &[u8]) -> std::io::BufReader<StallingReader> {
+        std::io::BufReader::new(StallingReader(Cursor::new(partial.to_vec())))
+    }
+
+    #[test]
+    fn stalled_client_maps_to_408() {
+        // The client sends a partial request then goes silent: the read
+        // times out and the parser reports Timeout, not a hang.
+        let mut reader = stalling(b"POST /generate HTTP/1.1\r\nContent-Le");
+        let err = parse_request(&mut reader).unwrap_err();
+        assert!(matches!(err, ParseError::Timeout), "{err:?}");
+        assert_eq!(error_status(&err), (408, "Request Timeout"));
+        // Same for a declared body that never arrives.
+        let mut reader = stalling(b"POST /g HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc");
+        let err = parse_request(&mut reader).unwrap_err();
+        assert!(matches!(err, ParseError::Timeout), "{err:?}");
     }
 
     #[test]

@@ -14,10 +14,21 @@ pub struct Metrics {
     pub queue_ms: Summary,
     pub total_ms: Summary,
     pub per_token_ms: Summary,
+    /// Wall time between consecutive decode steps of the scheduler — the
+    /// inter-token latency a decoding sequence observes, including any
+    /// prefill chunk interleaved between the two steps. The p95 is the
+    /// fairness headline: it stays bounded by the per-iteration prefill
+    /// token budget regardless of co-running prompt lengths.
+    pub decode_gap_ms: Summary,
     pub macs_kept: u64,
     pub macs_dense: u64,
+    /// Prefill chunks run by the scheduler (several per long prompt).
+    pub prefill_chunks_total: u64,
     /// Sequences preempted and requeued for KV pool pressure.
     pub preemptions_total: u64,
+    /// Streaming sequences cancelled because the client disconnected
+    /// mid-generation (their remaining decode work and KV blocks freed).
+    pub cancellations_total: u64,
     /// Paged-KV pool gauges (updated by the coordinator at report time;
     /// stay 0 for flat-cache engines).
     pub blocks_total: u64,
@@ -49,9 +60,12 @@ impl Metrics {
             queue_ms: Summary::new(1024),
             total_ms: Summary::new(1024),
             per_token_ms: Summary::new(4096),
+            decode_gap_ms: Summary::new(4096),
             macs_kept: 0,
             macs_dense: 0,
+            prefill_chunks_total: 0,
             preemptions_total: 0,
+            cancellations_total: 0,
             blocks_total: 0,
             blocks_in_use: 0,
             prefix_hit_tokens: 0,
@@ -125,6 +139,22 @@ impl Metrics {
             (
                 "per_token_ms_p50",
                 Json::Num(self.per_token_ms.percentile(0.5)),
+            ),
+            (
+                "decode_gap_ms_p50",
+                Json::Num(self.decode_gap_ms.percentile(0.5)),
+            ),
+            (
+                "decode_gap_ms_p95",
+                Json::Num(self.decode_gap_ms.percentile(0.95)),
+            ),
+            (
+                "prefill_chunks_total",
+                Json::Num(self.prefill_chunks_total as f64),
+            ),
+            (
+                "cancellations_total",
+                Json::Num(self.cancellations_total as f64),
             ),
             ("blocks_total", Json::Num(self.blocks_total as f64)),
             ("blocks_in_use", Json::Num(self.blocks_in_use as f64)),
@@ -219,6 +249,21 @@ mod tests {
         assert!(j.get("throughput_tok_s").as_f64().is_some());
         assert_eq!(j.get("blocks_total").as_usize(), Some(0));
         assert_eq!(j.get("preemptions_total").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn prefill_and_cancellation_gauges_serialize() {
+        let mut m = Metrics::new();
+        m.prefill_chunks_total = 9;
+        m.cancellations_total = 2;
+        for x in [1.0, 2.0, 50.0] {
+            m.decode_gap_ms.add(x);
+        }
+        let j = m.to_json();
+        assert_eq!(j.get("prefill_chunks_total").as_usize(), Some(9));
+        assert_eq!(j.get("cancellations_total").as_usize(), Some(2));
+        let p95 = j.get("decode_gap_ms_p95").as_f64().unwrap();
+        assert!(p95 > 2.0 && p95 <= 50.0, "p95 of the window, got {p95}");
     }
 
     #[test]

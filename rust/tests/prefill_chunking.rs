@@ -1,0 +1,446 @@
+//! Chunked continuous-batch prefill (ISSUE 5): the bit-equality oracle —
+//! chunked prefill must reproduce the token-by-token schedule exactly
+//! across flat KV, paged KV and speculative engines, for any chunk size,
+//! prompt length and `prefill_sparse_fraction` — plus the prefix-cache
+//! schedule-consistency regression (hit and miss logits identical), the
+//! partial-prefill terminal state, scheduler fairness under a co-running
+//! long prompt, and streaming-cancellation block reclamation.
+
+use std::sync::Arc;
+use wisparse::kv::KvCfg;
+use wisparse::model::sampler::Sampling;
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::server::batcher::BatcherCfg;
+use wisparse::server::engine::{Engine, EngineCfg, SeqState, SpecCfg, SpecEngine};
+use wisparse::server::request::StreamEvent;
+use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+use wisparse::sparsity::Sparsifier;
+
+fn teal(model: &Model, tau: f32) -> Arc<dyn Sparsifier> {
+    Arc::new(ScoredSparsifier::new(
+        "teal",
+        (0..model.cfg.n_layers * 7)
+            .map(|_| ScoredLayer { ga: None, tau })
+            .collect(),
+    ))
+}
+
+fn engine(
+    model: &Arc<Model>,
+    sp: &Arc<dyn Sparsifier>,
+    paged: bool,
+    prefix_cache: bool,
+    fraction: f64,
+    chunk: usize,
+) -> Engine {
+    let cfg = EngineCfg {
+        threads: 1,
+        prefill_sparse_fraction: fraction,
+        prefill_chunk: chunk,
+        ..EngineCfg::default()
+    };
+    if paged {
+        Engine::paged(
+            Arc::clone(model),
+            Arc::clone(sp),
+            cfg,
+            &KvCfg {
+                pool_blocks: 128,
+                block_size: 4,
+                prefix_cache,
+            },
+        )
+    } else {
+        Engine::new(Arc::clone(model), Arc::clone(sp), cfg)
+    }
+}
+
+fn assert_logits_bits_equal(a: &[f32], b: &[f32], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: logits length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: logits diverge at {i}");
+    }
+}
+
+fn decode_to_end(e: &Engine, seq: &mut SeqState) -> String {
+    while !seq.finished() {
+        e.decode_one(seq);
+    }
+    seq.text()
+}
+
+/// The core property: for every KV backend, chunk size (dividing and not
+/// dividing the prompt, straddling the dense→sparse boundary or not) and
+/// sparse fraction, chunked prefill's final logits and greedy continuation
+/// are bit-identical to the sequential reference.
+#[test]
+fn chunked_prefill_equals_sequential_property() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let sp = teal(&model, 0.45);
+    let prompts = ["abcd", "the sun rises over the hill", "12+34=46 and 9*9=81!"];
+    for paged in [false, true] {
+        for fraction in [0.0, 0.5, 0.8, 1.0] {
+            for chunk in [1usize, 2, 3, 7, 64] {
+                // Prefix cache off: hit-vs-miss equality is its own test.
+                let e = engine(&model, &sp, paged, false, fraction, chunk);
+                for prompt in prompts {
+                    let ctx = format!("paged={paged} fraction={fraction} chunk={chunk} {prompt:?}");
+                    let mut a = e.admit(0, prompt, 8, Sampling::Greedy);
+                    e.prefill(&mut a);
+                    let mut b = e.admit(1, prompt, 8, Sampling::Greedy);
+                    e.prefill_sequential(&mut b);
+                    assert!(a.prefill_complete() && b.prefill_complete(), "{ctx}");
+                    let expected_chunks = prompt.len().div_ceil(chunk);
+                    assert_eq!(a.prefill.chunks as usize, expected_chunks, "{ctx}");
+                    assert_logits_bits_equal(e.last_logits(&a), e.last_logits(&b), &ctx);
+                    assert_eq!(decode_to_end(&e, &mut a), decode_to_end(&e, &mut b), "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+/// Speculative decode on top of chunked prefill: identical output to the
+/// same speculative engine prefilled token-by-token, flat and paged.
+#[test]
+fn speculative_engine_unaffected_by_prefill_chunking() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let prod = teal(&model, 0.3);
+    let draft = teal(&model, 0.6);
+    for paged in [false, true] {
+        let e = Arc::new(engine(&model, &prod, paged, false, 0.5, 3));
+        let spec = SpecEngine::new(Arc::clone(&e), Arc::clone(&draft), SpecCfg::default());
+        // Chunked prefill (the default `prefill` path).
+        let chunked = spec.run_seq(0, "the sun rises ", 20, Sampling::Greedy);
+        // Sequential prefill, then the same speculative decode loop.
+        let mut seq = spec.admit(1, "the sun rises ", 20, Sampling::Greedy);
+        spec.verify.prefill_sequential(&mut seq);
+        while !seq.finished() {
+            spec.spec_round(&mut seq);
+        }
+        assert_eq!(chunked.text(), seq.text(), "paged={paged}");
+        assert_eq!(chunked.generated.len(), 20);
+    }
+}
+
+/// Prefix-cache schedule-consistency regression: the same prompt must
+/// produce bit-identical logits on a cache hit and a cache miss — including
+/// when the cached prefix was produced by a *different-length* prompt whose
+/// dense→sparse boundary disagrees over part of the prefix (the pre-fix
+/// bug: the hit silently adopted sparse-produced KV for positions the
+/// consumer's schedule runs dense).
+#[test]
+fn prefix_hit_and_miss_logits_bit_identical() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let sp = teal(&model, 0.45);
+    // Reference engine: no prefix cache, every prompt recomputed in full.
+    let miss = engine(&model, &sp, true, false, 0.5, 5);
+    // Cached engine: one manager shared across producer and consumers.
+    let hit = engine(&model, &sp, true, true, 0.5, 5);
+
+    // Producer publishes a 16-token prompt (dense_upto = 8).
+    let p16: String = "abcdefghijklmnop".into();
+    let mut producer = hit.admit(0, &p16, 4, Sampling::Greedy);
+    hit.prefill(&mut producer);
+
+    // Same prompt, same schedule: full-depth hit, logits bit-identical.
+    // (Matching is deferred to the first prefill chunk, so the hit count
+    // is observable only after prefill.)
+    let mut warm = hit.admit(1, &p16, 4, Sampling::Greedy);
+    hit.prefill(&mut warm);
+    assert!(
+        warm.prefix_hit_tokens > 0,
+        "same prompt must hit the cache (got {})",
+        warm.prefix_hit_tokens
+    );
+    let mut cold = miss.admit(1, &p16, 4, Sampling::Greedy);
+    miss.prefill(&mut cold);
+    assert_logits_bits_equal(hit.last_logits(&warm), miss.last_logits(&cold), "same prompt");
+    assert_eq!(
+        decode_to_end(&hit, &mut warm),
+        decode_to_end(&miss, &mut cold),
+        "same-prompt continuation"
+    );
+
+    // A longer prompt sharing the prefix: its boundary (dense_upto = 10)
+    // disagrees with the producer's (8) over positions 8..12, so the hit
+    // must stop at 8 tokens — and the logits must still equal a full miss.
+    let p20 = format!("{p16}qrst");
+    let mut warm = hit.admit(2, &p20, 4, Sampling::Greedy);
+    hit.prefill(&mut warm);
+    assert!(
+        warm.prefix_hit_tokens <= 8,
+        "schedule-inconsistent span must not be served (hit {})",
+        warm.prefix_hit_tokens
+    );
+    let mut cold = miss.admit(2, &p20, 4, Sampling::Greedy);
+    miss.prefill(&mut cold);
+    assert_logits_bits_equal(hit.last_logits(&warm), miss.last_logits(&cold), "longer prompt");
+    assert_eq!(
+        decode_to_end(&hit, &mut warm),
+        decode_to_end(&miss, &mut cold),
+        "longer-prompt continuation"
+    );
+}
+
+/// Pool exhaustion mid-prompt: terminal partial state, nothing published to
+/// the prefix cache, and the serving path surfaces `cache_full` without
+/// ever decoding the half-prefilled sequence.
+#[test]
+fn partial_prefill_terminal_and_unpublished() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let sp = teal(&model, 0.45);
+    // 2 blocks x 4 positions = 8 tokens of backing for a 16-token prompt.
+    let e = Engine::paged(
+        Arc::clone(&model),
+        Arc::clone(&sp),
+        EngineCfg {
+            threads: 1,
+            prefill_chunk: 4,
+            ..EngineCfg::default()
+        },
+        &KvCfg {
+            pool_blocks: 2,
+            block_size: 4,
+            prefix_cache: true,
+        },
+    );
+    let prompt = "abcdefghijklmnop";
+    let mut seq = e.admit(0, prompt, 4, Sampling::Greedy);
+    e.prefill(&mut seq);
+    assert!(!seq.prefill_complete());
+    assert!(seq.finished());
+    assert_eq!(seq.finish_reason().as_str(), "cache_full");
+    // Nothing was published: a new identical prompt gets no prefix hit
+    // (the aborted prefill must never seed the radix tree).
+    drop(seq); // release the pool first
+    let mut again = e.admit(1, prompt, 4, Sampling::Greedy);
+    let _ = e.prefill_chunk(&mut again, 4); // first chunk runs the match
+    assert_eq!(again.prefix_hit_tokens, 0, "partial prefill must not publish");
+    drop(again);
+
+    // Coordinator path: the oversized request is force-admitted, runs out
+    // of pool mid-prompt with nobody to preempt, and completes cache_full.
+    let coord = Coordinator::new(
+        Arc::new(e),
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 2,
+                max_queue: 8,
+            },
+        },
+    );
+    let sched = Arc::clone(&coord);
+    let handle = std::thread::spawn(move || sched.run_scheduler());
+    let resp = coord
+        .submit_blocking(prompt, 4, Sampling::Greedy)
+        .expect("submit");
+    assert_eq!(resp.finish_reason, "cache_full");
+    assert_eq!(resp.n_generated, 0, "half-prefilled sequences never decode");
+    coord.shutdown();
+    handle.join().unwrap();
+}
+
+/// Fairness: a long prompt arriving while a short sequence decodes must not
+/// stall it — the scheduler interleaves the short sequence's decode steps
+/// between the long prompt's chunks, so the short request finishes while
+/// the long prefill is still in flight (under the old inline prefill, the
+/// whole 200-token prompt ran to completion inside one scheduler iteration
+/// and every decode stalled behind it).
+#[test]
+fn long_prompt_does_not_stall_short_decodes() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let sp = teal(&model, 0.45);
+    let chunk = 8usize;
+    let long_len = 200usize;
+    let engine = Arc::new(Engine::paged(
+        Arc::clone(&model),
+        Arc::clone(&sp),
+        EngineCfg {
+            threads: 1,
+            prefill_chunk: chunk,
+            ..EngineCfg::default()
+        },
+        &KvCfg {
+            pool_blocks: 128,
+            block_size: 4,
+            prefix_cache: false,
+        },
+    ));
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 4,
+                max_queue: 16,
+            },
+        },
+    );
+    let sched = Arc::clone(&coord);
+    let handle = std::thread::spawn(move || sched.run_scheduler());
+    // Short first (so it sits ahead in the FIFO active set and begins
+    // decoding), then the long prompt lands behind it.
+    let short_rx = coord.submit("hey", 6, Sampling::Greedy).expect("short submit");
+    let long_prompt: String = (0..long_len).map(|i| (b'a' + (i % 26) as u8) as char).collect();
+    let long_rx = coord
+        .submit(&long_prompt, 8, Sampling::Greedy)
+        .expect("long submit");
+    let short = short_rx.recv().expect("short completion");
+    assert_eq!(short.n_generated, 6);
+    // The short request's decode steps ran between the long prompt's
+    // chunks: when it completes, the long prefill (>= 25 chunk iterations
+    // at 8 tokens per chunk) is still in flight.
+    assert!(
+        long_rx.try_recv().is_err(),
+        "short request should finish while the long prompt is still prefilling"
+    );
+    let long = long_rx.recv().expect("long completion");
+    assert_eq!(long.n_generated, 8);
+    assert!(
+        short.total_ms < long.total_ms,
+        "short ({:.1} ms) stalled behind long ({:.1} ms)",
+        short.total_ms,
+        long.total_ms
+    );
+    let m = coord.metrics.lock().unwrap();
+    // The prompt really was split: ceil(200 / budget) chunks minimum, where
+    // the budget shrinks below `chunk` only by the one co-decoding seq.
+    assert!(
+        m.prefill_chunks_total as usize >= long_len / chunk,
+        "expected >= {} chunks, got {}",
+        long_len / chunk,
+        m.prefill_chunks_total
+    );
+    assert!(m.decode_gap_ms.count > 0, "decode-gap fairness metric must have sampled");
+    drop(m);
+    coord.shutdown();
+    handle.join().unwrap();
+}
+
+/// Streaming cancellation: dropping the stream receiver (the HTTP layer
+/// also calls `cancel` explicitly on a broken pipe) must stop the decode
+/// and return every KV block to the pool — no leaks, no wasted compute to
+/// completion.
+#[test]
+fn cancelled_stream_frees_blocks_and_stops_decode() {
+    // llama-micro, not nano: the generation must take long enough that the
+    // cancellation always lands well before a natural completion.
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("llama-micro").unwrap(), 81));
+    let sp = teal(&model, 0.45);
+    let engine = Arc::new(Engine::paged(
+        Arc::clone(&model),
+        Arc::clone(&sp),
+        EngineCfg {
+            threads: 1,
+            ..EngineCfg::default()
+        },
+        &KvCfg {
+            pool_blocks: 64,
+            block_size: 4,
+            prefix_cache: false,
+        },
+    ));
+    let engine_probe = Arc::clone(&engine);
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 2,
+                max_queue: 8,
+            },
+        },
+    );
+    let sched = Arc::clone(&coord);
+    let handle = std::thread::spawn(move || sched.run_scheduler());
+    let (id, rx) = coord
+        .submit_stream("stream and vanish", 200, Sampling::Greedy, true)
+        .expect("stream submit");
+    // Consume a few tokens, then hang up like a disconnected client.
+    let mut got = 0usize;
+    for ev in rx.iter() {
+        if let StreamEvent::Token { .. } = ev {
+            got += 1;
+            if got == 3 {
+                break;
+            }
+        }
+    }
+    coord.cancel(id);
+    drop(rx);
+    // The scheduler tears the sequence down on its next pass: wait for the
+    // cancellation to land, then assert every block went back to the pool.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        let cancelled = coord.metrics.lock().unwrap().cancellations_total;
+        if cancelled == 1 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "cancellation never processed");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let mgr = engine_probe.kv.as_ref().expect("paged engine");
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        if mgr.blocks_in_use() == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "cancelled sequence leaked {} blocks",
+            mgr.blocks_in_use()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let (allocs, frees) = mgr.pool().counters();
+    assert_eq!(allocs, frees, "pool leak counters disagree after cancel");
+    // A follow-up request still serves normally (the scheduler survived).
+    let resp = coord
+        .submit_blocking("still alive", 4, Sampling::Greedy)
+        .expect("post-cancel request");
+    assert_eq!(resp.n_generated, 4);
+    coord.shutdown();
+    handle.join().unwrap();
+}
+
+/// `submit_stream` hands back the id used for cancellation; cancelling a
+/// still-queued request drops it before it ever runs.
+#[test]
+fn cancel_queued_request_never_runs() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let sp = teal(&model, 0.45);
+    let engine = Arc::new(Engine::new(
+        Arc::clone(&model),
+        Arc::clone(&sp),
+        EngineCfg {
+            threads: 1,
+            ..EngineCfg::default()
+        },
+    ));
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 1,
+                max_queue: 8,
+            },
+        },
+    );
+    // No scheduler yet: both requests queue.
+    let _head = coord.submit("head", 4, Sampling::Greedy).expect("head");
+    let (id, rx) = coord
+        .submit_stream("queued forever", 4, Sampling::Greedy, true)
+        .expect("queued stream");
+    coord.cancel(id);
+    let sched = Arc::clone(&coord);
+    let handle = std::thread::spawn(move || sched.run_scheduler());
+    // The head request completes normally; the cancelled one's channel
+    // closes without a single event ever having been produced.
+    let head = _head.recv().expect("head completion");
+    assert_eq!(head.n_generated, 4);
+    assert!(rx.recv().is_err(), "cancelled request must never produce events");
+    assert_eq!(coord.metrics.lock().unwrap().requests_total, 1);
+    coord.shutdown();
+    handle.join().unwrap();
+}
