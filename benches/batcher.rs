@@ -58,6 +58,7 @@ fn batch_width_sweep() -> Vec<Vec<String>> {
                     max_batch,
                     max_queue: 256,
                 },
+                ..CoordinatorCfg::default()
             },
         );
         let sched = Arc::clone(&coord);
@@ -128,6 +129,7 @@ fn shared_prefix_run(
                 max_batch: n_clients,
                 max_queue: 256,
             },
+            ..CoordinatorCfg::default()
         },
     );
     let sched = Arc::clone(&coord);

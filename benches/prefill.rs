@@ -127,6 +127,7 @@ fn fairness_run(model: &Arc<Model>, prefill_chunk: usize, prompt_tokens: usize) 
                 max_batch: 8,
                 max_queue: 64,
             },
+            ..CoordinatorCfg::default()
         },
     );
     let sched = Arc::clone(&coord);

@@ -103,6 +103,7 @@ fn run_workload(name: &str, model: Arc<Model>, sp: Arc<dyn Sparsifier>) -> anyho
                 max_batch: 8,
                 max_queue: 512,
             },
+            ..CoordinatorCfg::default()
         },
     );
     let sched = Arc::clone(&coord);

@@ -18,6 +18,13 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         .opt("target", "0.5", "sparsity target (plan must exist or be calibratable)")
         .opt("addr", "127.0.0.1:8077", "listen address")
         .opt("max-batch", "8", "max concurrent sequences")
+        .opt("max-queue", "256", "wait-queue cap; excess load sheds 503 + Retry-After")
+        .opt("deadline-ms", "0", "default per-request deadline in ms (0 = none)")
+        .opt(
+            "drain-timeout",
+            "30",
+            "seconds active sequences may keep running after a drain starts",
+        )
         .opt("budget", "quick", "calibration budget if no cached plan")
         .opt("kv-pool-blocks", "256", "paged-KV pool size in blocks")
         .opt("kv-block-size", "16", "positions per KV block")
@@ -112,9 +119,15 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     let coord_cfg = CoordinatorCfg {
         batcher: BatcherCfg {
             max_batch: args.get_usize("max-batch")?,
-            max_queue: 256,
+            max_queue: args.get_usize("max-queue")?,
         },
+        default_deadline: match args.get_usize("deadline-ms")? {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms as u64)),
+        },
+        drain_timeout: std::time::Duration::from_secs(args.get_usize("drain-timeout")? as u64),
     };
+    let prefill_chunk = engine.cfg.prefill_chunk;
     let coord = if speculative {
         // The draft is the same weights at higher sparsity: a calibrated
         // plan for the production method (or TEAL magnitude masks when the
@@ -146,9 +159,13 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         Coordinator::new(engine, coord_cfg)
     };
     let sched = Arc::clone(&coord);
-    std::thread::spawn(move || sched.run_scheduler());
+    let sched_handle = std::thread::spawn(move || sched.run_scheduler());
+    // SIGTERM/SIGINT start a graceful drain: admission stops, active
+    // sequences finish (bounded by --drain-timeout), then the scheduler
+    // and the accept loop below both exit on their own.
+    wisparse::server::install_sigterm_drain(Arc::clone(&coord));
     println!(
-        "serving {} ({}, weights {}, {:.1} MB resident) — POST /generate, GET /metrics, GET /health",
+        "serving {} ({}, weights {}, {:.1} MB resident) — POST /generate, GET /metrics, GET /healthz, GET /readyz, POST /admin/drain",
         model.cfg.name,
         method,
         model.weight_repr_name(),
@@ -159,9 +176,15 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         kv_cfg.pool_blocks,
         kv_cfg.block_size,
         if kv_cfg.prefix_cache { "on" } else { "off" },
-        engine.cfg.prefill_chunk
+        prefill_chunk
     );
-    wisparse::server::http::serve(coord, args.get("addr"), |addr| {
+    wisparse::server::http::serve(Arc::clone(&coord), args.get("addr"), |addr| {
         println!("listening on http://{addr}");
-    })
+    })?;
+    // The accept loop only exits once the coordinator is shut down (drain
+    // complete or explicit); join the scheduler so every response has been
+    // delivered before the process exits.
+    sched_handle.join().ok();
+    println!("drained: scheduler joined, all streams flushed");
+    Ok(())
 }

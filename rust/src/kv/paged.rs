@@ -5,6 +5,7 @@ use crate::kv::pool::{BlockId, BlockPool, KvLayout};
 use crate::kv::radix::RadixCache;
 use crate::kv::KvSeq;
 use crate::model::ModelConfig;
+use crate::util::sync::{lock_ok, read_ok, write_ok};
 use std::sync::{Arc, Mutex};
 
 /// Paged-KV configuration (the `wisparse serve` knobs).
@@ -160,8 +161,8 @@ impl KvSeq for PagedSeq {
                 };
                 let filled = self.len - bi * bs;
                 {
-                    let src = self.pool.block(cur).read().unwrap();
-                    let mut dst = self.pool.block(fresh).write().unwrap();
+                    let src = read_ok(self.pool.block(cur));
+                    let mut dst = write_ok(self.pool.block(fresh));
                     dst.copy_prefix_from(&src, filled);
                 }
                 self.blocks[bi] = fresh;
@@ -178,11 +179,7 @@ impl KvSeq for PagedSeq {
             self.pool.ref_count(b) == 1,
             "store into shared kv block {b}"
         );
-        self.pool
-            .block(b)
-            .write()
-            .unwrap()
-            .store(layer, pos % bs, k, v);
+        write_ok(self.pool.block(b)).store(layer, pos % bs, k, v);
     }
 
     fn advance(&mut self) {
@@ -222,7 +219,7 @@ impl KvSeq for PagedSeq {
                 break;
             }
             let n = (upto - pos).min(bs);
-            let g = self.pool.block(b).read().unwrap();
+            let g = read_ok(self.pool.block(b));
             f(pos, g.k_rows(layer, n));
             pos += bs;
         }
@@ -236,7 +233,7 @@ impl KvSeq for PagedSeq {
                 break;
             }
             let n = (upto - pos).min(bs);
-            let g = self.pool.block(b).read().unwrap();
+            let g = read_ok(self.pool.block(b));
             f(pos, g.v_rows(layer, n));
             pos += bs;
         }
@@ -286,7 +283,7 @@ impl KvManager {
     }
 
     pub fn stats(&self) -> KvStats {
-        *self.stats.lock().unwrap()
+        *lock_ok(&self.stats)
     }
 
     /// Build a sequence's KV view for `prompt`, adopting cached prefix
@@ -337,18 +334,18 @@ impl KvManager {
                 // match_prefix retains the matched blocks for this page
                 // table inside the radix lock, so a concurrent eviction can
                 // never free them between match and adoption.
-                let blocks = self
-                    .radix
-                    .lock()
-                    .unwrap()
-                    .match_prefix_scheduled(&prompt[..usable], dense_upto, &self.pool);
+                let blocks = lock_ok(&self.radix).match_prefix_scheduled(
+                    &prompt[..usable],
+                    dense_upto,
+                    &self.pool,
+                );
                 hit = blocks.len() * bs;
                 if !blocks.is_empty() {
                     seq.adopt_prefix(blocks);
                 }
             }
         }
-        let mut s = self.stats.lock().unwrap();
+        let mut s = lock_ok(&self.stats);
         s.prefix_hit_tokens += hit as u64;
         s.prefix_miss_tokens += (prompt.len() - hit) as u64;
         drop(s);
@@ -370,9 +367,7 @@ impl KvManager {
         if !self.prefix_cache {
             return;
         }
-        self.radix
-            .lock()
-            .unwrap()
+        lock_ok(&self.radix)
             .insert_scheduled(prompt, seq.blocks(), dense_upto, &self.pool);
     }
 
@@ -386,7 +381,7 @@ impl KvManager {
             if seq.seq_len() >= seq.capacity() {
                 return false; // context window, not pool pressure
             }
-            if self.radix.lock().unwrap().evict(1, &self.pool) == 0 {
+            if lock_ok(&self.radix).evict(1, &self.pool) == 0 {
                 return false;
             }
         }
@@ -402,7 +397,7 @@ impl KvManager {
             if got >= n.min(seq.capacity().saturating_sub(seq.seq_len())) {
                 return got;
             }
-            if self.radix.lock().unwrap().evict(1, &self.pool) == 0 {
+            if lock_ok(&self.radix).evict(1, &self.pool) == 0 {
                 return got;
             }
         }
@@ -431,9 +426,7 @@ impl KvManager {
                     .filter(|&b| self.pool.ref_count(b) > 1)
                     .collect();
                 if !bad.is_empty() {
-                    self.radix
-                        .lock()
-                        .unwrap()
+                    lock_ok(&self.radix)
                         .invalidate_blocks(&bad, &self.pool);
                 }
             }
@@ -453,7 +446,15 @@ impl KvManager {
     /// sequences (evicting those frees no memory) — the scheduler's
     /// preempt-and-requeue path covers the shortfall.
     pub fn admissible_blocks(&self) -> usize {
-        self.pool.blocks_free() + self.radix.lock().unwrap().blocks_cached()
+        self.pool.blocks_free() + lock_ok(&self.radix).blocks_cached()
+    }
+
+    /// Blocks currently pinned by the prefix cache. The leak invariant
+    /// after a drain with the prefix cache on is `blocks_in_use ==
+    /// cached_blocks()` (the cache's own refs are the only legitimate
+    /// holders once every sequence is gone); with it off, both are zero.
+    pub fn cached_blocks(&self) -> usize {
+        lock_ok(&self.radix).blocks_cached()
     }
 }
 

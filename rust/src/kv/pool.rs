@@ -14,6 +14,7 @@
 //! (copy-on-write guarantees rc == 1 before any store), so readers of
 //! shared prefix blocks never contend with writers.
 
+use crate::util::sync::lock_ok;
 use std::sync::{Arc, Mutex, RwLock};
 
 /// Index of a physical block in the pool.
@@ -145,7 +146,7 @@ impl BlockPool {
     /// Allocate a block with refcount 1. `None` when the pool is exhausted
     /// (callers evict cached prefixes or preempt, then retry).
     pub fn try_alloc(&self) -> Option<BlockId> {
-        let mut m = self.meta.lock().unwrap();
+        let mut m = lock_ok(&self.meta);
         let id = m.free.pop()?;
         debug_assert_eq!(m.rc[id as usize], 0);
         m.rc[id as usize] = 1;
@@ -156,7 +157,7 @@ impl BlockPool {
     /// Add a reference to a live block (page-table adoption, prefix-cache
     /// registration).
     pub fn retain(&self, id: BlockId) {
-        let mut m = self.meta.lock().unwrap();
+        let mut m = lock_ok(&self.meta);
         assert!(m.rc[id as usize] > 0, "retain of free kv block {id}");
         m.rc[id as usize] += 1;
     }
@@ -166,7 +167,7 @@ impl BlockPool {
     /// reached zero) — eviction uses this to count reclaimed memory.
     /// Panics on double-free (releasing an already-free block).
     pub fn release(&self, id: BlockId) -> bool {
-        let mut m = self.meta.lock().unwrap();
+        let mut m = lock_ok(&self.meta);
         let rc = &mut m.rc[id as usize];
         assert!(*rc > 0, "double free of kv block {id}");
         *rc -= 1;
@@ -180,11 +181,11 @@ impl BlockPool {
     }
 
     pub fn ref_count(&self, id: BlockId) -> u32 {
-        self.meta.lock().unwrap().rc[id as usize]
+        lock_ok(&self.meta).rc[id as usize]
     }
 
     pub fn blocks_free(&self) -> usize {
-        self.meta.lock().unwrap().free.len()
+        lock_ok(&self.meta).free.len()
     }
 
     pub fn blocks_in_use(&self) -> usize {
@@ -195,7 +196,7 @@ impl BlockPool {
     /// by the property test: after all refs are dropped, allocs == frees and
     /// blocks_in_use == 0.
     pub fn counters(&self) -> (u64, u64) {
-        let m = self.meta.lock().unwrap();
+        let m = lock_ok(&self.meta);
         (m.allocs, m.frees)
     }
 

@@ -97,6 +97,34 @@ impl Batcher {
         before != self.waiting.len()
     }
 
+    /// Remove and return every queued request matching `pred` (deadline
+    /// expiry sweeps). Queue order of the survivors is preserved.
+    pub fn expire(&mut self, mut pred: impl FnMut(&GenRequest) -> bool) -> Vec<GenRequest> {
+        let mut expired = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.waiting.len());
+        for req in self.waiting.drain(..) {
+            if pred(&req) {
+                expired.push(req);
+            } else {
+                keep.push_back(req);
+            }
+        }
+        self.waiting = keep;
+        expired
+    }
+
+    /// Remove and return the whole queue (graceful drain: queued work is
+    /// shed with a terminal response instead of silently dropped).
+    pub fn drain_queue(&mut self) -> Vec<GenRequest> {
+        self.waiting.drain(..).collect()
+    }
+
+    /// Ids of every queued request (supervisor restarts use this to tell
+    /// still-queued survivors from orphaned in-flight work).
+    pub fn queued_ids(&self) -> Vec<u64> {
+        self.waiting.iter().map(|r| r.id).collect()
+    }
+
     pub fn queue_len(&self) -> usize {
         self.waiting.len()
     }
@@ -200,6 +228,23 @@ mod tests {
         assert!(!b.remove(1), "already gone");
         let admitted = b.admit(0);
         assert_eq!(admitted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn expire_partitions_and_preserves_order() {
+        let mut b = Batcher::new(BatcherCfg {
+            max_batch: 2,
+            max_queue: 10,
+        });
+        for i in 0..5 {
+            b.enqueue(req(i)).unwrap();
+        }
+        let expired = b.expire(|r| r.id % 2 == 0);
+        assert_eq!(expired.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert_eq!(b.queued_ids(), vec![1, 3]);
+        let drained = b.drain_queue();
+        assert_eq!(drained.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.queue_len(), 0);
     }
 
     #[test]

@@ -11,23 +11,76 @@
 //! prefix blocks make the headroom estimate optimistic) the youngest
 //! active sequence is preempted — its pages released, its request requeued
 //! at the head of the line — instead of any sequence failing.
+//!
+//! # Supervision
+//!
+//! The scheduler is supervised: [`Coordinator::run_scheduler`] is a
+//! restart loop around the actual iteration loop. A panic inside one
+//! sequence's forward work is caught *per sequence* (the step closure
+//! wraps `decode_one`/`step_one` in `catch_unwind`), so one poisoned
+//! request finishes `internal_error` while its batchmates keep decoding.
+//! A panic that escapes per-sequence isolation (scheduler bookkeeping
+//! itself) unwinds the whole iteration loop: the stack-owned active set
+//! drops, which returns every in-flight sequence's KV blocks to the pool,
+//! the supervisor fails the orphaned waiters with `internal_error`, and a
+//! fresh iteration loop resumes serving the still-queued survivors.
+//!
+//! # Deadlines, shedding, drain
+//!
+//! Requests carry an optional deadline (`deadline_ms`, else the server
+//! default). Queued requests past their deadline fail `deadline_exceeded`
+//! without ever running; active sequences past theirs finish
+//! `deadline_exceeded` with whatever they generated. A full wait queue
+//! sheds new work immediately (`queue full`, HTTP 503) instead of queueing
+//! unboundedly. [`Coordinator::drain`] stops admission, sheds the queue,
+//! lets active sequences finish (bounded by `drain_timeout`), then exits
+//! the scheduler — every submitted request still gets exactly one
+//! response.
 
 use crate::data::corpus::detokenize;
 use crate::model::sampler::Sampling;
 use crate::server::batcher::{Batcher, BatcherCfg};
 use crate::server::engine::{Engine, FinishReason, PrefillStep, SeqState, SpecEngine};
+use crate::server::faults::FaultPoint;
 use crate::server::metrics::Metrics;
 use crate::server::request::{GenRequest, GenResponse, StreamEvent};
+use crate::util::sync::lock_ok;
 use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// How often blocking waiters poll their completion channel for scheduler
+/// death (the channel itself delivers the response; the poll is a backstop
+/// so a wedged or exited scheduler can't strand a client forever).
+const WAIT_POLL: Duration = Duration::from_millis(50);
+
+/// Grace added past a request's deadline before a blocking waiter gives up
+/// on the scheduler delivering the `deadline_exceeded` terminal itself.
+const WAIT_GRACE: Duration = Duration::from_secs(5);
 
 /// Coordinator configuration.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct CoordinatorCfg {
     pub batcher: BatcherCfg,
+    /// Deadline applied to requests that don't carry their own
+    /// `deadline_ms`. `None` (the default) means no deadline.
+    pub default_deadline: Option<Duration>,
+    /// How long [`Coordinator::drain`] lets active sequences run before
+    /// aborting the stragglers `deadline_exceeded`.
+    pub drain_timeout: Duration,
+}
+
+impl Default for CoordinatorCfg {
+    fn default() -> Self {
+        Self {
+            batcher: BatcherCfg::default(),
+            default_deadline: None,
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
 }
 
 struct SchedState {
@@ -46,11 +99,20 @@ pub struct Coordinator {
     /// Speculative decoder over the same engine; armed requests run
     /// draft/verify rounds instead of single-token steps.
     spec: Option<Arc<SpecEngine>>,
+    cfg: CoordinatorCfg,
     state: Mutex<SchedState>,
     wake: Condvar,
     pub metrics: Mutex<Metrics>,
     next_id: AtomicU64,
     shutdown: AtomicBool,
+    /// Graceful drain in progress: admission refused, queue shed, active
+    /// sequences finishing out.
+    draining: AtomicBool,
+    drain_started: Mutex<Option<Instant>>,
+    /// The scheduler thread has exited (clean shutdown or drain complete)
+    /// and swept every remaining waiter. Blocking submitters poll this so
+    /// they can never hang on a scheduler that is gone.
+    sched_exited: AtomicBool,
 }
 
 impl Coordinator {
@@ -77,16 +139,102 @@ impl Coordinator {
             engine,
             spec,
             state: Mutex::new(SchedState {
-                batcher: Batcher::new(cfg.batcher),
+                batcher: Batcher::new(cfg.batcher.clone()),
                 waiters: HashMap::new(),
                 streams: HashMap::new(),
                 cancelled: HashSet::new(),
             }),
+            cfg,
             wake: Condvar::new(),
             metrics: Mutex::new(Metrics::new()),
             next_id: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            drain_started: Mutex::new(None),
+            sched_exited: AtomicBool::new(false),
         })
+    }
+
+    /// The engine this coordinator schedules (tests and the fault layer
+    /// reach its pool counters and fault injector through here).
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Server default deadline (applied to requests without their own).
+    pub fn default_deadline(&self) -> Option<Duration> {
+        self.cfg.default_deadline
+    }
+
+    /// Register a request under the scheduler lock: refuse while draining
+    /// or shut down, shed on a full queue, otherwise enqueue and register
+    /// its completion channel atomically (so the scheduler's exit sweep —
+    /// which flips `shutdown` under this same lock — can never miss a
+    /// waiter).
+    fn enqueue_request(
+        &self,
+        req: GenRequest,
+        register: impl FnOnce(&mut SchedState),
+    ) -> anyhow::Result<()> {
+        {
+            let mut st = lock_ok(&self.state);
+            if self.is_shutdown() || self.is_draining() {
+                drop(st);
+                lock_ok(&self.metrics).shed_total += 1;
+                anyhow::bail!("draining: not accepting new requests");
+            }
+            match st.batcher.enqueue(req) {
+                Ok(()) => register(&mut st),
+                Err(_) => {
+                    drop(st);
+                    let mut m = lock_ok(&self.metrics);
+                    m.requests_rejected += 1;
+                    m.shed_total += 1;
+                    anyhow::bail!("queue full");
+                }
+            }
+        }
+        self.wake.notify_all();
+        Ok(())
+    }
+
+    /// Submit a fully-formed request (HTTP hands over the parsed body so
+    /// per-request fields like `deadline_ms` survive). Assigns the id and
+    /// the server default deadline; returns the id and completion channel.
+    pub fn submit_request(
+        &self,
+        mut req: GenRequest,
+    ) -> anyhow::Result<(u64, Receiver<GenResponse>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        if req.deadline.is_none() {
+            req.deadline = self.cfg.default_deadline;
+        }
+        let (tx, rx) = channel();
+        self.enqueue_request(req, |st| {
+            st.waiters.insert(id, tx);
+        })?;
+        Ok((id, rx))
+    }
+
+    /// Streaming variant of [`Coordinator::submit_request`]: each committed
+    /// token arrives as a [`StreamEvent::Token`], terminated by exactly one
+    /// [`StreamEvent::Done`].
+    pub fn submit_stream_request(
+        &self,
+        mut req: GenRequest,
+    ) -> anyhow::Result<(u64, Receiver<StreamEvent>)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        req.stream = true;
+        if req.deadline.is_none() {
+            req.deadline = self.cfg.default_deadline;
+        }
+        let (tx, rx) = channel();
+        self.enqueue_request(req, |st| {
+            st.streams.insert(id, tx);
+        })?;
+        Ok((id, rx))
     }
 
     /// Submit a request; returns a receiver for the completion, or Err on
@@ -96,7 +244,7 @@ impl Coordinator {
         prompt: &str,
         max_new: usize,
         sampling: Sampling,
-    ) -> anyhow::Result<std::sync::mpsc::Receiver<GenResponse>> {
+    ) -> anyhow::Result<Receiver<GenResponse>> {
         self.submit_opts(prompt, max_new, sampling, true)
     }
 
@@ -108,22 +256,11 @@ impl Coordinator {
         max_new: usize,
         sampling: Sampling,
         speculative: bool,
-    ) -> anyhow::Result<std::sync::mpsc::Receiver<GenResponse>> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut req = GenRequest::new(id, prompt, max_new);
+    ) -> anyhow::Result<Receiver<GenResponse>> {
+        let mut req = GenRequest::new(0, prompt, max_new);
         req.sampling = sampling;
         req.speculative = speculative;
-        let (tx, rx) = channel();
-        {
-            let mut st = self.state.lock().unwrap();
-            if st.batcher.enqueue(req).is_err() {
-                self.metrics.lock().unwrap().requests_rejected += 1;
-                anyhow::bail!("queue full");
-            }
-            st.waiters.insert(id, tx);
-        }
-        self.wake.notify_all();
-        Ok(rx)
+        self.submit_request(req).map(|(_, rx)| rx)
     }
 
     /// Submit and wait for completion.
@@ -149,23 +286,11 @@ impl Coordinator {
         max_new: usize,
         sampling: Sampling,
         speculative: bool,
-    ) -> anyhow::Result<(u64, std::sync::mpsc::Receiver<StreamEvent>)> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut req = GenRequest::new(id, prompt, max_new);
+    ) -> anyhow::Result<(u64, Receiver<StreamEvent>)> {
+        let mut req = GenRequest::new(0, prompt, max_new);
         req.sampling = sampling;
         req.speculative = speculative;
-        req.stream = true;
-        let (tx, rx) = channel();
-        {
-            let mut st = self.state.lock().unwrap();
-            if st.batcher.enqueue(req).is_err() {
-                self.metrics.lock().unwrap().requests_rejected += 1;
-                anyhow::bail!("queue full");
-            }
-            st.streams.insert(id, tx);
-        }
-        self.wake.notify_all();
-        Ok((id, rx))
+        self.submit_stream_request(req)
     }
 
     /// Cancel an in-flight request (a streaming client hung up): still-
@@ -173,12 +298,12 @@ impl Coordinator {
     /// the scheduler's next pass, releasing its KV blocks instead of
     /// decoding to completion for nobody.
     pub fn cancel(&self, id: u64) {
-        self.state.lock().unwrap().cancelled.insert(id);
+        lock_ok(&self.state).cancelled.insert(id);
         self.wake.notify_all();
     }
 
     /// [`Coordinator::submit_blocking`] with the per-request speculative
-    /// opt-out — the one blocking completion path (HTTP router included).
+    /// opt-out.
     pub fn submit_blocking_opts(
         &self,
         prompt: &str,
@@ -186,9 +311,56 @@ impl Coordinator {
         sampling: Sampling,
         speculative: bool,
     ) -> anyhow::Result<GenResponse> {
-        let rx = self.submit_opts(prompt, max_new, sampling, speculative)?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("scheduler dropped request"))
+        let mut req = GenRequest::new(0, prompt, max_new);
+        req.sampling = sampling;
+        req.speculative = speculative;
+        self.submit_request_blocking(req)
+    }
+
+    /// The one blocking completion path (HTTP router included): submit and
+    /// wait, without ever trusting the scheduler to still be alive. The
+    /// wait polls for scheduler exit and gives up `WAIT_GRACE` past the
+    /// request deadline, so a dead or wedged scheduler turns into an error
+    /// response instead of a connection thread blocked forever.
+    pub fn submit_request_blocking(&self, req: GenRequest) -> anyhow::Result<GenResponse> {
+        let deadline = req.deadline.or(self.cfg.default_deadline);
+        let (id, rx) = self.submit_request(req)?;
+        self.wait_response(id, rx, deadline)
+    }
+
+    fn wait_response(
+        &self,
+        id: u64,
+        rx: Receiver<GenResponse>,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<GenResponse> {
+        let hard = deadline.map(|d| Instant::now() + d + WAIT_GRACE);
+        loop {
+            match rx.recv_timeout(WAIT_POLL) {
+                Ok(resp) => return Ok(resp),
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("scheduler dropped request {id}")
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if self.scheduler_exited() {
+                        // The exit sweep may have delivered the terminal
+                        // response between our timeout and the flag read.
+                        if let Ok(resp) = rx.try_recv() {
+                            return Ok(resp);
+                        }
+                        anyhow::bail!("scheduler exited");
+                    }
+                    if hard.is_some_and(|h| Instant::now() >= h) {
+                        // Scheduler alive but long past this request's
+                        // deadline: stop waiting and make sure the
+                        // sequence is torn down rather than decoding for
+                        // a departed caller.
+                        self.cancel(id);
+                        anyhow::bail!("request {id} timed out waiting on the scheduler");
+                    }
+                }
+            }
+        }
     }
 
     pub fn shutdown(&self) {
@@ -200,11 +372,37 @@ impl Coordinator {
         self.shutdown.load(Ordering::SeqCst)
     }
 
+    /// Begin a graceful drain: admission stops (new submits fail and HTTP
+    /// sheds 503), the wait queue is shed with terminal responses, active
+    /// sequences finish out (bounded by `cfg.drain_timeout`), streams
+    /// flush, and the scheduler thread exits on its own — at which point
+    /// [`Coordinator::is_shutdown`] turns true and `serve` loops unwind.
+    /// Idempotent; the first call starts the drain clock.
+    pub fn drain(&self) {
+        if !self.draining.swap(true, Ordering::SeqCst) {
+            *lock_ok(&self.drain_started) = Some(Instant::now());
+        }
+        self.wake.notify_all();
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Whether the scheduler thread has exited and swept all waiters.
+    pub fn scheduler_exited(&self) -> bool {
+        self.sched_exited.load(Ordering::SeqCst)
+    }
+
     /// Report-time metrics snapshot: refreshes the paged-KV gauges (pool
-    /// occupancy, prefix hit/miss) before serializing, so `/metrics` always
-    /// reflects live pool state.
+    /// occupancy, prefix hit/miss) and the queue-depth gauge before
+    /// serializing, so `/metrics` always reflects live state.
     pub fn metrics_json(&self) -> crate::util::json::Json {
-        let mut m = self.metrics.lock().unwrap();
+        // Lock order is state -> metrics everywhere (submit counts
+        // rejections while holding state), so take the queue depth first.
+        let depth = lock_ok(&self.state).batcher.queue_len() as u64;
+        let mut m = lock_ok(&self.metrics);
+        m.queue_depth = depth;
         if let Some(mgr) = self.engine.kv.as_ref() {
             m.blocks_total = mgr.blocks_total() as u64;
             m.blocks_in_use = mgr.blocks_in_use() as u64;
@@ -219,18 +417,111 @@ impl Coordinator {
         m.to_json()
     }
 
-    /// The scheduler loop. Run on a dedicated thread:
+    /// Deliver a terminal no-output response for a request that never
+    /// produced one (shed, expired in queue, orphaned by a restart):
+    /// removes both channels under the lock, so exactly one terminal event
+    /// reaches the client and later sweeps can't double-send.
+    fn send_terminal(&self, id: u64, reason: &str) {
+        let (tx, stx) = {
+            let mut st = lock_ok(&self.state);
+            (st.waiters.remove(&id), st.streams.remove(&id))
+        };
+        let resp = GenResponse::terminal(id, reason);
+        if let Some(stx) = stx {
+            let _ = stx.send(StreamEvent::Done(resp.clone()));
+        }
+        if let Some(tx) = tx {
+            let _ = tx.send(resp);
+        }
+    }
+
+    /// The supervised scheduler entry point. Run on a dedicated thread:
     /// `std::thread::spawn(move || coordinator.run_scheduler())`.
     ///
-    /// Each iteration runs *at most one prefill chunk* (layer-major, at
-    /// most `engine.cfg.prefill_chunk` tokens, shrunk by the number of
-    /// decoding sequences so the iteration's total token work stays under
-    /// one budget) and then one decode step across every prefilled
-    /// sequence. A long prompt therefore never stalls decode for more than
-    /// one chunk's worth of work — the old inline prefill blocked every
-    /// active sequence for the *entire* prompt.
+    /// Wraps the iteration loop in `catch_unwind`: a panic that escapes
+    /// per-sequence isolation unwinds the loop's stack (dropping the active
+    /// set frees every in-flight sequence's KV blocks), the orphaned
+    /// waiters are failed with `internal_error`, and the loop restarts to
+    /// serve the still-queued survivors. Returns only after a clean exit
+    /// (shutdown or drain complete), with every remaining waiter swept.
     pub fn run_scheduler(self: &Arc<Self>) {
-        // (request, seq, admitted_at) triples in flight.
+        loop {
+            match catch_unwind(AssertUnwindSafe(|| self.scheduler_loop())) {
+                Ok(()) => break,
+                Err(_) => {
+                    lock_ok(&self.metrics).scheduler_restarts_total += 1;
+                    self.fail_orphaned_waiters();
+                    if self.is_shutdown() {
+                        break;
+                    }
+                }
+            }
+        }
+        self.finish_scheduler_exit();
+    }
+
+    /// After a scheduler panic: every registered waiter whose request is
+    /// *not* still sitting in the wait queue was in flight when the stack
+    /// unwound — its sequence (and KV) is gone, so fail it terminally.
+    /// Still-queued requests keep their waiters and are served by the
+    /// restarted loop.
+    fn fail_orphaned_waiters(&self) {
+        let orphans: Vec<u64> = {
+            let st = lock_ok(&self.state);
+            let queued: HashSet<u64> = st.batcher.queued_ids().into_iter().collect();
+            let mut ids: HashSet<u64> = HashSet::new();
+            ids.extend(st.waiters.keys().filter(|id| !queued.contains(*id)));
+            ids.extend(st.streams.keys().filter(|id| !queued.contains(*id)));
+            ids.into_iter().collect()
+        };
+        for id in orphans {
+            self.send_terminal(id, "internal_error");
+        }
+    }
+
+    /// Final sweep when the scheduler exits for good: flip `shutdown`
+    /// *under the state lock* (submission checks the flag under the same
+    /// lock, so no new waiter can register after this point), shed any
+    /// queued leftovers, and close every remaining channel with exactly one
+    /// terminal response.
+    fn finish_scheduler_exit(&self) {
+        let (waiters, streams, shed) = {
+            let mut st = lock_ok(&self.state);
+            self.shutdown.store(true, Ordering::SeqCst);
+            let shed = st.batcher.drain_queue().len() as u64;
+            let waiters: Vec<(u64, Sender<GenResponse>)> = st.waiters.drain().collect();
+            let streams: Vec<(u64, Sender<StreamEvent>)> = st.streams.drain().collect();
+            (waiters, streams, shed)
+        };
+        if shed > 0 {
+            lock_ok(&self.metrics).shed_total += shed;
+        }
+        for (id, tx) in waiters {
+            let _ = tx.send(GenResponse::terminal(id, "shutdown"));
+        }
+        for (id, stx) in streams {
+            let _ = stx.send(StreamEvent::Done(GenResponse::terminal(id, "shutdown")));
+        }
+        // Only now: blocking waiters that see the flag will find their
+        // terminal response already in the channel.
+        self.sched_exited.store(true, Ordering::SeqCst);
+        self.wake.notify_all();
+    }
+
+    /// One scheduler incarnation. Each iteration runs *at most one prefill
+    /// chunk* (layer-major, at most `engine.cfg.prefill_chunk` tokens,
+    /// shrunk by the number of decoding sequences so the iteration's total
+    /// token work stays under one budget) and then one decode step across
+    /// every prefilled sequence. A long prompt therefore never stalls
+    /// decode for more than one chunk's worth of work.
+    ///
+    /// Returns on shutdown or when a drain completes; panics propagate to
+    /// the supervisor in [`Coordinator::run_scheduler`].
+    fn scheduler_loop(self: &Arc<Self>) {
+        // (request, seq, admitted_at) triples in flight. Owned by this
+        // stack frame on purpose: a panic anywhere in the iteration drops
+        // the whole set, and `SeqState`'s page table frees its KV blocks
+        // on drop — supervision never leaks pool blocks.
         let mut active: Vec<(GenRequest, SeqState, Instant)> = Vec::new();
         // Per-request count of tokens already streamed. A preempted-and-
         // resumed sequence regenerates its prefix deterministically, so the
@@ -243,11 +534,15 @@ impl Coordinator {
             if self.is_shutdown() {
                 return;
             }
+            // Scheduler-level fault point: fires *outside* per-sequence
+            // isolation, exercising the supervisor restart path.
+            self.engine.faults.maybe_panic(FaultPoint::SchedPanic);
+            let draining = self.is_draining();
             // Tear down cancelled requests: queued ones are dropped from
             // the batcher, active ones release their KV blocks right here
             // instead of decoding to completion for a vanished client.
             let cancelled: Vec<u64> = {
-                let mut st = self.state.lock().unwrap();
+                let mut st = lock_ok(&self.state);
                 if st.cancelled.is_empty() {
                     Vec::new()
                 } else {
@@ -266,19 +561,72 @@ impl Coordinator {
             for id in cancelled {
                 self.cancel_active(id, &mut active, &mut stream_sent);
             }
-            // Admit new work. With a paged engine, admit only while the
-            // head request's worst-case page demand fits the free +
-            // evictable headroom; with nothing active, force-admit the head
-            // anyway so oversized requests still make progress (they end
-            // with `cache_full` rather than waiting forever).
-            let admitted: Vec<GenRequest> = {
-                let mut st = self.state.lock().unwrap();
+            // Queued requests past their deadline fail without running;
+            // a drain sheds the whole queue the same way.
+            let (expired, shed) = {
+                let mut st = lock_ok(&self.state);
+                let expired = st.batcher.expire(|r| r.past_deadline());
+                let shed = if draining {
+                    st.batcher.drain_queue()
+                } else {
+                    Vec::new()
+                };
+                (expired, shed)
+            };
+            if !expired.is_empty() {
+                lock_ok(&self.metrics).deadline_exceeded_total += expired.len() as u64;
+                for req in &expired {
+                    self.send_terminal(req.id, "deadline_exceeded");
+                }
+            }
+            if !shed.is_empty() {
+                lock_ok(&self.metrics).shed_total += shed.len() as u64;
+                for req in &shed {
+                    self.send_terminal(req.id, "shed");
+                }
+            }
+            if draining {
+                if active.is_empty() {
+                    // Drain complete: record how long it took and exit the
+                    // scheduler (the supervisor's exit sweep closes any
+                    // straggler channels).
+                    let ms = lock_ok(&self.drain_started)
+                        .map(|t| t.elapsed().as_secs_f64() * 1e3)
+                        .unwrap_or(0.0);
+                    lock_ok(&self.metrics).drain_duration_ms = ms;
+                    return;
+                }
+                let overdue = lock_ok(&self.drain_started)
+                    .map(|t| t.elapsed() >= self.cfg.drain_timeout)
+                    .unwrap_or(false);
+                if overdue {
+                    let mut aborted = 0u64;
+                    for (_, seq, _) in active.iter_mut() {
+                        if !seq.finished() {
+                            seq.abort(FinishReason::DeadlineExceeded);
+                            aborted += 1;
+                        }
+                    }
+                    if aborted > 0 {
+                        lock_ok(&self.metrics).deadline_exceeded_total += aborted;
+                    }
+                }
+            }
+            // Admit new work (never while draining). With a paged engine,
+            // admit only while the head request's worst-case page demand
+            // fits the free + evictable headroom; with nothing active,
+            // force-admit the head anyway so oversized requests still make
+            // progress (they end `cache_full` rather than waiting forever).
+            let admitted: Vec<GenRequest> = if draining {
+                Vec::new()
+            } else {
+                let mut st = lock_ok(&self.state);
                 if active.is_empty() && st.batcher.queue_len() == 0 {
-                    // Idle: wait for a submit or shutdown.
+                    // Idle: wait for a submit, drain, or shutdown.
                     let st2 = self
                         .wake
-                        .wait_timeout(st, std::time::Duration::from_millis(50))
-                        .unwrap()
+                        .wait_timeout(st, WAIT_POLL)
+                        .unwrap_or_else(|e| e.into_inner())
                         .0;
                     st2.batcher.queue_len(); // keep borrowck simple
                     last_decode = None;
@@ -327,13 +675,27 @@ impl Coordinator {
                     // A resumed request's wait includes its first run's
                     // decode time — sampling it again would both double-
                     // count the request and pollute queue_ms with run time.
-                    self.metrics.lock().unwrap().queue_ms.add(queue_ms);
+                    lock_ok(&self.metrics).queue_ms.add(queue_ms);
                 }
                 active.push((req, seq, Instant::now()));
             }
             if active.is_empty() {
                 last_decode = None;
                 continue;
+            }
+            // Active sequences past their deadline finish now with
+            // whatever they have (possibly nothing, mid-prefill).
+            {
+                let mut expired_now = 0u64;
+                for (req, seq, _) in active.iter_mut() {
+                    if !seq.finished() && req.past_deadline() {
+                        seq.abort(FinishReason::DeadlineExceeded);
+                        expired_now += 1;
+                    }
+                }
+                if expired_now > 0 {
+                    lock_ok(&self.metrics).deadline_exceeded_total += expired_now;
+                }
             }
             // At most one prefill chunk this iteration, its token budget
             // shrunk by the decode batch's size so one iteration's total
@@ -354,15 +716,18 @@ impl Coordinator {
                     .prefill_chunk
                     .saturating_sub(decode_ready)
                     .max(1);
-                match self.engine.prefill_chunk(&mut active[idx].1, budget) {
-                    PrefillStep::Advanced(t) | PrefillStep::Completed(t) => {
-                        let mut m = self.metrics.lock().unwrap();
+                let step = catch_unwind(AssertUnwindSafe(|| {
+                    self.engine.prefill_chunk(&mut active[idx].1, budget)
+                }));
+                match step {
+                    Ok(PrefillStep::Advanced(t)) | Ok(PrefillStep::Completed(t)) => {
+                        let mut m = lock_ok(&self.metrics);
                         m.prefill_chunks_total += 1;
                         // Tokens actually forwarded: prefix-cache hits never
                         // enter a chunk.
                         m.tokens_prefilled += t as u64;
                     }
-                    PrefillStep::PoolDry => {
+                    Ok(PrefillStep::PoolDry) => {
                         // Mid-prompt pool exhaustion: free blocks by
                         // preempting the youngest sequence and retry the
                         // chunk next iteration. With nobody to yield to the
@@ -371,6 +736,12 @@ impl Coordinator {
                         if !self.preempt_youngest(&mut active) {
                             active[idx].1.abort(FinishReason::CacheFull);
                         }
+                    }
+                    Err(_) => {
+                        // A panic mid-prompt is isolated to this sequence:
+                        // it finishes `internal_error`, its partially-built
+                        // page table frees on drop, batchmates continue.
+                        active[idx].1.abort(FinishReason::InternalError);
                     }
                 }
             }
@@ -382,6 +753,11 @@ impl Coordinator {
             // draft/verify round per armed sequence instead, which can
             // commit several tokens at once — per-token latency divides by
             // the tokens actually committed.
+            //
+            // Per-sequence panic isolation lives in the step closure: the
+            // `catch_unwind` runs *inside* the worker that owns the slot,
+            // so a panic never crosses `parallel_slices`' thread boundary
+            // and only the poisoned sequence aborts `internal_error`.
             let t0 = Instant::now();
             let mut decoded = false;
             let committed = {
@@ -396,8 +772,26 @@ impl Coordinator {
                     decoded = true;
                     let before: usize = seqs.iter().map(|s| s.generated.len()).sum();
                     match &self.spec {
-                        Some(spec) => spec.step_slots(&mut seqs[..]),
-                        None => self.engine.step_slots(&mut seqs[..]),
+                        Some(spec) => {
+                            self.engine.step_slots_with(&mut seqs[..], |seq| {
+                                if catch_unwind(AssertUnwindSafe(|| spec.step_one(seq)))
+                                    .is_err()
+                                {
+                                    seq.abort(FinishReason::InternalError);
+                                }
+                            });
+                        }
+                        None => {
+                            self.engine.step_slots_with(&mut seqs[..], |seq| {
+                                if catch_unwind(AssertUnwindSafe(|| {
+                                    self.engine.decode_one(seq)
+                                }))
+                                .is_err()
+                                {
+                                    seq.abort(FinishReason::InternalError);
+                                }
+                            });
+                        }
                     }
                     let after: usize = seqs.iter().map(|s| s.generated.len()).sum();
                     after - before
@@ -406,7 +800,7 @@ impl Coordinator {
             if decoded {
                 let now = Instant::now();
                 let step_ms = (now - t0).as_secs_f64() * 1e3;
-                let mut m = self.metrics.lock().unwrap();
+                let mut m = lock_ok(&self.metrics);
                 m.per_token_ms.add(step_ms / committed.max(1) as f64);
                 if let Some(prev) = last_decode {
                     // Completion-to-completion: the stall a decoding client
@@ -427,7 +821,7 @@ impl Coordinator {
             // decoding the rest of it into the void.
             let mut dead_streams: Vec<u64> = Vec::new();
             {
-                let st = self.state.lock().unwrap();
+                let st = lock_ok(&self.state);
                 if !st.streams.is_empty() {
                     for (req, seq, _) in active.iter() {
                         if let Some(tx) = st.streams.get(&req.id) {
@@ -468,7 +862,7 @@ impl Coordinator {
                         prefix_hit_tokens: seq.prefix_hit_tokens,
                     };
                     {
-                        let mut m = self.metrics.lock().unwrap();
+                        let mut m = lock_ok(&self.metrics);
                         m.requests_total += 1;
                         m.tokens_generated += seq.generated.len() as u64;
                         m.total_ms.add(total_ms);
@@ -477,9 +871,14 @@ impl Coordinator {
                         m.spec_rounds_total += seq.spec.rounds;
                         m.spec_drafted_tokens += seq.spec.drafted;
                         m.spec_accepted_tokens += seq.spec.accepted;
+                        if matches!(seq.finish_reason(), FinishReason::InternalError) {
+                            // A sequence only ever finishes `internal_error`
+                            // through a caught panic (prefill or decode).
+                            m.panics_caught_total += 1;
+                        }
                     }
                     let (tx, stx) = {
-                        let mut st = self.state.lock().unwrap();
+                        let mut st = lock_ok(&self.state);
                         (st.waiters.remove(&req.id), st.streams.remove(&req.id))
                     };
                     if let Some(stx) = stx {
@@ -546,11 +945,11 @@ impl Coordinator {
         if let Some(i) = active.iter().position(|(r, _, _)| r.id == id) {
             let (_, seq, _) = active.swap_remove(i);
             drop(seq); // page table drops → blocks back to the pool
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_ok(&self.state);
             st.waiters.remove(&id);
             st.streams.remove(&id);
             drop(st);
-            self.metrics.lock().unwrap().cancellations_total += 1;
+            lock_ok(&self.metrics).cancellations_total += 1;
         }
     }
 
@@ -575,8 +974,8 @@ impl Coordinator {
         let (mut req, seq, _) = active.swap_remove(victim);
         drop(seq); // releases the page table's block refs
         req.preempted = true;
-        self.state.lock().unwrap().batcher.requeue_front(req);
-        self.metrics.lock().unwrap().preemptions_total += 1;
+        lock_ok(&self.state).batcher.requeue_front(req);
+        lock_ok(&self.metrics).preemptions_total += 1;
         true
     }
 }
@@ -587,30 +986,42 @@ mod tests {
     use crate::model::transformer::Model;
     use crate::model::ModelConfig;
     use crate::server::engine::EngineCfg;
+    use crate::server::faults::Faults;
     use crate::sparsity::Dense;
 
-    fn start_coordinator(max_batch: usize) -> (Arc<Coordinator>, std::thread::JoinHandle<()>) {
+    fn coordinator_with(
+        cfg: CoordinatorCfg,
+        faults: Option<&str>,
+    ) -> (Arc<Coordinator>, std::thread::JoinHandle<()>) {
         let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 91));
-        let engine = Arc::new(Engine::new(
+        let mut engine = Engine::new(
             model,
             Arc::new(Dense),
             EngineCfg {
                 threads: 2,
                 ..EngineCfg::default()
             },
-        ));
-        let coord = Coordinator::new(
-            engine,
+        );
+        if let Some(spec) = faults {
+            engine.faults = Faults::scripted(spec);
+        }
+        let coord = Coordinator::new(Arc::new(engine), cfg);
+        let c2 = Arc::clone(&coord);
+        let handle = std::thread::spawn(move || c2.run_scheduler());
+        (coord, handle)
+    }
+
+    fn start_coordinator(max_batch: usize) -> (Arc<Coordinator>, std::thread::JoinHandle<()>) {
+        coordinator_with(
             CoordinatorCfg {
                 batcher: BatcherCfg {
                     max_batch,
                     max_queue: 32,
                 },
+                ..CoordinatorCfg::default()
             },
-        );
-        let c2 = Arc::clone(&coord);
-        let handle = std::thread::spawn(move || c2.run_scheduler());
-        (coord, handle)
+            None,
+        )
     }
 
     #[test]
@@ -622,6 +1033,7 @@ mod tests {
         assert!(resp.total_ms >= 0.0);
         coord.shutdown();
         handle.join().unwrap();
+        assert!(coord.scheduler_exited());
     }
 
     #[test]
@@ -646,6 +1058,8 @@ mod tests {
         let m = coord.metrics.lock().unwrap();
         assert_eq!(m.requests_total, 5);
         assert_eq!(m.tokens_generated, 30);
+        assert_eq!(m.panics_caught_total, 0);
+        assert_eq!(m.scheduler_restarts_total, 0);
         drop(m);
         coord.shutdown();
         handle.join().unwrap();
@@ -696,12 +1110,118 @@ mod tests {
                     max_batch: 1,
                     max_queue: 2,
                 },
+                ..CoordinatorCfg::default()
             },
         );
         // No scheduler running -> queue fills up.
         assert!(coord.submit("a", 1, Sampling::Greedy).is_ok());
         assert!(coord.submit("b", 1, Sampling::Greedy).is_ok());
         assert!(coord.submit("c", 1, Sampling::Greedy).is_err());
-        assert_eq!(coord.metrics.lock().unwrap().requests_rejected, 1);
+        let m = coord.metrics.lock().unwrap();
+        assert_eq!(m.requests_rejected, 1);
+        assert_eq!(m.shed_total, 1, "queue-full rejections count as shed");
+    }
+
+    #[test]
+    fn zero_default_deadline_expires_queued_requests() {
+        let (coord, handle) = coordinator_with(
+            CoordinatorCfg {
+                default_deadline: Some(Duration::ZERO),
+                ..CoordinatorCfg::default()
+            },
+            None,
+        );
+        let resp = coord.submit_blocking("abc", 5, Sampling::Greedy).unwrap();
+        assert_eq!(resp.finish_reason, "deadline_exceeded");
+        assert_eq!(resp.n_generated, 0, "expired in queue: never ran");
+        assert!(coord.metrics.lock().unwrap().deadline_exceeded_total >= 1);
+        coord.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn decode_panic_isolated_to_one_sequence() {
+        // First decode_one invocation panics; its sequence fails
+        // internal_error while the batchmate completes untouched and the
+        // scheduler never restarts.
+        let (coord, handle) = coordinator_with(
+            CoordinatorCfg::default(),
+            Some("decode_panic@1"),
+        );
+        let rx1 = coord.submit("abc", 6, Sampling::Greedy).unwrap();
+        let rx2 = coord.submit("hello w", 6, Sampling::Greedy).unwrap();
+        let r1 = rx1.recv().unwrap();
+        let r2 = rx2.recv().unwrap();
+        let reasons = [r1.finish_reason.as_str(), r2.finish_reason.as_str()];
+        assert!(
+            reasons.contains(&"internal_error"),
+            "one sequence fails: {reasons:?}"
+        );
+        assert!(
+            reasons.contains(&"length"),
+            "the other completes normally: {reasons:?}"
+        );
+        let m = coord.metrics.lock().unwrap();
+        assert_eq!(m.panics_caught_total, 1);
+        assert_eq!(m.scheduler_restarts_total, 0, "isolated, not restarted");
+        drop(m);
+        coord.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn sched_panic_restarts_scheduler_and_requests_survive() {
+        // The very first scheduler iteration panics outside per-sequence
+        // isolation; the supervisor restarts the loop and queued requests
+        // are served by the new incarnation.
+        let (coord, handle) = coordinator_with(
+            CoordinatorCfg::default(),
+            Some("sched_panic@1"),
+        );
+        let resp = coord.submit_blocking("abc", 6, Sampling::Greedy).unwrap();
+        assert_eq!(resp.finish_reason, "length");
+        assert_eq!(resp.n_generated, 6);
+        assert_eq!(coord.metrics.lock().unwrap().scheduler_restarts_total, 1);
+        coord.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn drain_completes_scheduler_and_refuses_new_work() {
+        let (coord, handle) = start_coordinator(2);
+        let rx = coord.submit("abc", 5, Sampling::Greedy).unwrap();
+        coord.drain();
+        // The in-flight request still terminates with exactly one
+        // response (finished normally or shed, depending on timing).
+        let resp = rx.recv().unwrap();
+        assert!(
+            ["length", "shed", "deadline_exceeded", "shutdown"]
+                .contains(&resp.finish_reason.as_str()),
+            "unexpected reason {}",
+            resp.finish_reason
+        );
+        // Drain ends the scheduler on its own — no explicit shutdown().
+        handle.join().unwrap();
+        assert!(coord.is_shutdown());
+        assert!(coord.scheduler_exited());
+        assert!(
+            coord.submit("late", 1, Sampling::Greedy).is_err(),
+            "admission refused after drain"
+        );
+        assert!(coord.metrics.lock().unwrap().drain_duration_ms >= 0.0);
+    }
+
+    #[test]
+    fn blocking_submit_never_hangs_after_scheduler_exit() {
+        // Scheduler exits underneath a queued blocking waiter: the exit
+        // sweep must deliver a terminal response rather than leaving the
+        // waiter blocked forever.
+        let (coord, handle) = start_coordinator(1);
+        coord.drain();
+        handle.join().unwrap();
+        let err = coord
+            .submit_blocking("abc", 4, Sampling::Greedy)
+            .expect_err("admission refused after exit");
+        assert!(err.to_string().contains("draining"), "{err}");
     }
 }

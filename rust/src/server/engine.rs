@@ -19,6 +19,7 @@ use crate::kv::{KvCfg, KvManager, KvSeq, PagedSeq};
 use crate::model::kv_cache::KvCache;
 use crate::model::sampler::{residual_sample, sample_from, spec_accept, Sampling};
 use crate::model::transformer::{ChunkLogits, ForwardStats, Model, Scratch};
+use crate::server::faults::{FaultPoint, Faults};
 use crate::sparsity::{Dense, Sparsifier};
 use crate::tensor::ops::argmax;
 use crate::util::rng::Pcg64;
@@ -65,6 +66,12 @@ pub enum FinishReason {
     CacheFull,
     /// Was preempted for pool pressure, resumed later, and completed.
     PreemptedResumed,
+    /// Ran past its per-request deadline mid-decode; the response carries
+    /// whatever was generated before the cutoff.
+    DeadlineExceeded,
+    /// The sequence's step panicked (caught by the scheduler's isolation);
+    /// its KV blocks were released and only this request failed.
+    InternalError,
 }
 
 impl FinishReason {
@@ -73,6 +80,8 @@ impl FinishReason {
             FinishReason::Length => "length",
             FinishReason::CacheFull => "cache_full",
             FinishReason::PreemptedResumed => "preempted->resumed",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
+            FinishReason::InternalError => "internal_error",
         }
     }
 }
@@ -248,6 +257,10 @@ pub struct Engine {
     pub cfg: EngineCfg,
     /// Paged-KV manager; `None` runs the flat per-sequence slabs.
     pub kv: Option<Arc<KvManager>>,
+    /// Deterministic fault-injection plan. Inert in production (one false
+    /// branch per site) unless `WISPARSE_FAULTS` carries a schedule; the
+    /// chaos suite swaps in scripted plans per engine instance.
+    pub faults: Arc<Faults>,
 }
 
 impl Engine {
@@ -257,6 +270,7 @@ impl Engine {
             sparsifier,
             cfg,
             kv: None,
+            faults: Faults::from_env(),
         }
     }
 
@@ -272,6 +286,7 @@ impl Engine {
             sparsifier,
             cfg,
             kv: Some(kv),
+            faults: Faults::from_env(),
         }
     }
 
@@ -389,6 +404,9 @@ impl Engine {
     /// prefixes when the pool is dry. False means pool exhaustion (paged)
     /// or a full context window.
     pub fn reserve_seq(&self, seq: &mut SeqState) -> bool {
+        if self.faults.should_fire(FaultPoint::PoolDry) {
+            return false;
+        }
         match (&self.kv, &mut seq.kv) {
             (Some(mgr), SeqKv::Paged(p)) => mgr.try_reserve(p),
             (_, SeqKv::Flat(c)) => !c.is_full(),
@@ -402,6 +420,9 @@ impl Engine {
     /// prefixes under pressure; flat caches are bounded by the context
     /// window. Returns how many of the `n` positions are covered.
     pub fn reserve_ahead(&self, seq: &mut SeqState, n: usize) -> usize {
+        if self.faults.should_fire(FaultPoint::PoolDry) {
+            return 0;
+        }
         match (&self.kv, &mut seq.kv) {
             (Some(mgr), SeqKv::Paged(p)) => mgr.reserve_ahead(p, n),
             (_, SeqKv::Flat(c)) => n.min(c.max_seq.saturating_sub(c.len)),
@@ -452,6 +473,7 @@ impl Engine {
     pub fn prefill_chunk(&self, seq: &mut SeqState, budget: usize) -> PrefillStep {
         assert!(!seq.prefilled, "prefill_chunk on a prefilled sequence");
         debug_assert!(seq.finish_override.is_none());
+        self.faults.maybe_panic(FaultPoint::PrefillPanic);
         self.adopt_cached_prefix(seq);
         let n = seq.prompt_tokens.len();
         let cur = seq.prefill.cursor;
@@ -548,6 +570,7 @@ impl Engine {
     /// one remaining allocation source on very large models.)
     pub fn decode_one(&self, seq: &mut SeqState) {
         debug_assert!(seq.prefilled && !seq.finished());
+        self.faults.maybe_panic(FaultPoint::DecodePanic);
         let next = seq.sampling.sample(&seq.last_logits, &mut seq.rng);
         seq.generated.push(next);
         if seq.finished() {
@@ -730,6 +753,7 @@ impl SpecEngine {
     /// position), so rounds and plain decode steps interleave freely.
     pub fn spec_round(&self, seq: &mut SeqState) {
         debug_assert!(seq.prefilled && !seq.finished());
+        self.verify.faults.maybe_panic(FaultPoint::DecodePanic);
         let model = &self.verify.model;
         let vocab = model.cfg.vocab_size;
         let greedy = matches!(seq.sampling, Sampling::Greedy);
@@ -884,7 +908,11 @@ impl SpecEngine {
         self.verify.step_slots_with(slots, |seq| self.step_one(seq));
     }
 
-    fn step_one(&self, seq: &mut SeqState) {
+    /// One scheduling step for one sequence: a speculative round when
+    /// armed, a plain decode step otherwise. Public so the supervised
+    /// coordinator can wrap exactly this unit of work in its per-sequence
+    /// panic isolation.
+    pub fn step_one(&self, seq: &mut SeqState) {
         if seq.spec.cur_k > 0 {
             self.spec_round(seq);
         } else {

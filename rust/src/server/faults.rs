@@ -1,0 +1,220 @@
+//! Deterministic fault injection for the supervised serving runtime.
+//!
+//! Compiled unconditionally, inert unless armed: every injection point is a
+//! single branch on `armed` when no schedule is loaded, so the production
+//! fast path pays one predictable-false branch per site. Faults are
+//! *scheduled by invocation count* — "fire at the Nth time this point is
+//! reached" — which makes a chaos run reproducible in the number and kind
+//! of faults injected regardless of thread interleaving (which sequence
+//! absorbs the Nth invocation may vary; the invariants under test must hold
+//! under arbitrary interleavings anyway).
+//!
+//! Two ways to arm:
+//!   * the `WISPARSE_FAULTS` environment variable, parsed at engine
+//!     construction (`Faults::from_env`), e.g.
+//!     `WISPARSE_FAULTS=decode_panic@5,pool_dry@3,pool_dry@9`
+//!   * programmatically via [`Faults::scripted`] (the chaos property suite
+//!     builds seeded schedules this way and swaps them into the engine).
+//!
+//! Points:
+//!   * `decode_panic`   — panic inside a sequence's decode/speculative step
+//!   * `prefill_panic`  — panic inside a prefill chunk
+//!   * `sched_panic`    — panic at the top of a scheduler iteration,
+//!     *outside* the per-sequence isolation (exercises the supervisor
+//!     restart path)
+//!   * `pool_dry`       — force one KV reservation to report an exhausted
+//!     pool (exercises preemption / `cache_full` paths without actually
+//!     starving the pool)
+//!   * `stream_stall`   — sleep briefly in the HTTP streaming write path
+//!     (a slow client draining its socket)
+
+use crate::util::sync::lock_ok;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// An injection point in the serving runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultPoint {
+    DecodePanic,
+    PrefillPanic,
+    SchedPanic,
+    PoolDry,
+    StreamStall,
+}
+
+impl FaultPoint {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::DecodePanic => "decode_panic",
+            FaultPoint::PrefillPanic => "prefill_panic",
+            FaultPoint::SchedPanic => "sched_panic",
+            FaultPoint::PoolDry => "pool_dry",
+            FaultPoint::StreamStall => "stream_stall",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultPoint> {
+        match s {
+            "decode_panic" => Some(FaultPoint::DecodePanic),
+            "prefill_panic" => Some(FaultPoint::PrefillPanic),
+            "sched_panic" => Some(FaultPoint::SchedPanic),
+            "pool_dry" => Some(FaultPoint::PoolDry),
+            "stream_stall" => Some(FaultPoint::StreamStall),
+            _ => None,
+        }
+    }
+}
+
+struct FaultState {
+    /// Per point: the 1-based invocation counts at which to fire.
+    schedule: HashMap<FaultPoint, Vec<u64>>,
+    /// Per point: invocations seen so far.
+    calls: HashMap<FaultPoint, u64>,
+    fired: u64,
+}
+
+/// A fault plan. One per engine; `inert()` is the production default unless
+/// `WISPARSE_FAULTS` carries a schedule.
+pub struct Faults {
+    armed: bool,
+    state: Mutex<FaultState>,
+}
+
+impl Faults {
+    /// No faults; every `should_fire` is a single false branch.
+    pub fn inert() -> Arc<Faults> {
+        Arc::new(Faults {
+            armed: false,
+            state: Mutex::new(FaultState {
+                schedule: HashMap::new(),
+                calls: HashMap::new(),
+                fired: 0,
+            }),
+        })
+    }
+
+    /// Parse a schedule like `decode_panic@5,pool_dry@3,pool_dry@9`.
+    /// Unknown points and malformed entries are ignored (a chaos harness
+    /// must never turn a typo into a refusal to start); an empty schedule
+    /// yields an inert plan.
+    pub fn scripted(spec: &str) -> Arc<Faults> {
+        let mut schedule: HashMap<FaultPoint, Vec<u64>> = HashMap::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let Some((point, at)) = entry.split_once('@') else {
+                continue;
+            };
+            let (Some(p), Ok(n)) = (FaultPoint::parse(point.trim()), at.trim().parse::<u64>())
+            else {
+                continue;
+            };
+            if n > 0 {
+                schedule.entry(p).or_default().push(n);
+            }
+        }
+        let armed = !schedule.is_empty();
+        Arc::new(Faults {
+            armed,
+            state: Mutex::new(FaultState {
+                schedule,
+                calls: HashMap::new(),
+                fired: 0,
+            }),
+        })
+    }
+
+    /// The production constructor: a schedule from `WISPARSE_FAULTS`, or an
+    /// inert plan when the variable is unset / carries no valid entries.
+    pub fn from_env() -> Arc<Faults> {
+        match std::env::var("WISPARSE_FAULTS") {
+            Ok(spec) => Self::scripted(&spec),
+            Err(_) => Self::inert(),
+        }
+    }
+
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Count this invocation of `point` and report whether the schedule
+    /// fires here. Inert plans return false without touching the lock.
+    pub fn should_fire(&self, point: FaultPoint) -> bool {
+        if !self.armed {
+            return false;
+        }
+        let mut st = lock_ok(&self.state);
+        let c = st.calls.entry(point).or_insert(0);
+        *c += 1;
+        let c = *c;
+        let fire = st.schedule.get(&point).is_some_and(|v| v.contains(&c));
+        if fire {
+            st.fired += 1;
+        }
+        fire
+    }
+
+    /// Panic at `point` when the schedule says so — the injected-panic
+    /// sites. Always called inside the runtime's `catch_unwind` scopes.
+    pub fn maybe_panic(&self, point: FaultPoint) {
+        if self.should_fire(point) {
+            panic!("injected fault: {}", point.name());
+        }
+    }
+
+    /// Faults fired so far (test assertion that a schedule was exercised).
+    pub fn fired(&self) -> u64 {
+        lock_ok(&self.state).fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_never_fires() {
+        let f = Faults::inert();
+        assert!(!f.armed());
+        for _ in 0..100 {
+            assert!(!f.should_fire(FaultPoint::DecodePanic));
+        }
+        assert_eq!(f.fired(), 0);
+    }
+
+    #[test]
+    fn scripted_fires_at_exact_counts() {
+        let f = Faults::scripted("decode_panic@2,pool_dry@1,pool_dry@3");
+        assert!(f.armed());
+        assert!(!f.should_fire(FaultPoint::DecodePanic)); // call 1
+        assert!(f.should_fire(FaultPoint::DecodePanic)); // call 2
+        assert!(!f.should_fire(FaultPoint::DecodePanic)); // call 3
+        assert!(f.should_fire(FaultPoint::PoolDry)); // call 1
+        assert!(!f.should_fire(FaultPoint::PoolDry)); // call 2
+        assert!(f.should_fire(FaultPoint::PoolDry)); // call 3
+        assert_eq!(f.fired(), 3);
+    }
+
+    #[test]
+    fn malformed_entries_ignored() {
+        let f = Faults::scripted("1");
+        assert!(!f.armed(), "a bare gate value arms nothing");
+        let f = Faults::scripted("bogus@3,decode_panic@,decode_panic@0,pool_dry@2");
+        assert!(f.armed());
+        assert!(!f.should_fire(FaultPoint::PoolDry));
+        assert!(f.should_fire(FaultPoint::PoolDry));
+        assert!(!f.should_fire(FaultPoint::DecodePanic));
+    }
+
+    #[test]
+    fn maybe_panic_panics_on_schedule() {
+        let f = Faults::scripted("prefill_panic@1");
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f.maybe_panic(FaultPoint::PrefillPanic)
+        }));
+        assert!(r.is_err());
+        assert_eq!(f.fired(), 1);
+    }
+}

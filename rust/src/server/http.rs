@@ -1,10 +1,17 @@
 //! Minimal HTTP/1.1 front end over std::net (no tokio in this environment).
 //!
 //! Routes:
-//!   GET  /health            -> {"status": "ok"}
+//!   GET  /health, /healthz  -> {"status": "ok"} (liveness)
+//!   GET  /readyz            -> 200 while accepting work, 503 once
+//!                              draining or shut down (readiness)
 //!   GET  /metrics           -> serving metrics JSON
 //!   POST /generate          -> {"prompt", "max_new"?, "temperature"?,
-//!                               "speculative"?, "stream"?}
+//!                               "speculative"?, "stream"?, "deadline_ms"?}
+//!   POST /admin/drain       -> begin graceful drain, 202
+//!
+//! `/generate` maps terminal no-output responses onto statuses: a request
+//! past its deadline is 504, a caught panic is 500, shed load (full queue
+//! or drain) is 503 with `Retry-After`. Every 503 carries `Retry-After`.
 //!
 //! `"stream": true` switches `/generate` to a chunked NDJSON response: one
 //! `{"done":false,"index":i,"token":"..."}` line per accepted token as it
@@ -16,12 +23,15 @@
 //! reproduction-scale router.
 
 use crate::server::coordinator::Coordinator;
-use crate::server::request::{GenRequest, StreamEvent};
+use crate::server::faults::FaultPoint;
+use crate::server::request::{GenRequest, GenResponse, StreamEvent};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Hard caps on untrusted request framing. Without them a slow or hostile
 /// client pins a connection thread forever and grows header buffers without
@@ -150,18 +160,53 @@ pub fn parse_request<R: BufRead>(reader: &mut R) -> Result<HttpRequest, ParseErr
     })
 }
 
-/// Serialize an HTTP response.
+/// Serialize an HTTP response. Every 503 carries `Retry-After` so shed
+/// clients back off instead of hammering a draining or saturated server.
 pub fn response(status: u16, reason: &str, body: &str) -> String {
+    let retry = if status == 503 { "Retry-After: 1\r\n" } else { "" };
     format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n{body}",
         body.len()
     )
+}
+
+/// The status a completed `/generate` maps to. Anything that produced
+/// tokens is a 200 (partial output is still output — `finish_reason`
+/// carries the why); terminal no-output responses surface their failure
+/// class as a status.
+fn generate_status(resp: &GenResponse) -> (u16, &'static str) {
+    if resp.n_generated > 0 {
+        return (200, "OK");
+    }
+    match resp.finish_reason.as_str() {
+        "deadline_exceeded" => (504, "Gateway Timeout"),
+        "internal_error" => (500, "Internal Server Error"),
+        "shed" | "shutdown" => (503, "Service Unavailable"),
+        _ => (200, "OK"),
+    }
 }
 
 /// Route one request against the coordinator.
 pub fn route(coord: &Arc<Coordinator>, req: &HttpRequest) -> (u16, &'static str, String) {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/health") => (200, "OK", r#"{"status":"ok"}"#.to_string()),
+        ("GET", "/health") | ("GET", "/healthz") => {
+            (200, "OK", r#"{"status":"ok"}"#.to_string())
+        }
+        ("GET", "/readyz") => {
+            if coord.is_draining() || coord.is_shutdown() {
+                (
+                    503,
+                    "Service Unavailable",
+                    r#"{"status":"draining"}"#.to_string(),
+                )
+            } else {
+                (200, "OK", r#"{"status":"ready"}"#.to_string())
+            }
+        }
+        ("POST", "/admin/drain") => {
+            coord.drain();
+            (202, "Accepted", r#"{"status":"draining"}"#.to_string())
+        }
         ("GET", "/metrics") => (200, "OK", coord.metrics_json().to_string_pretty()),
         ("POST", "/generate") => {
             let parsed = Json::parse(&req.body)
@@ -173,13 +218,14 @@ pub fn route(coord: &Arc<Coordinator>, req: &HttpRequest) -> (u16, &'static str,
                     "Bad Request",
                     Json::obj(vec![("error", Json::Str(e))]).to_string_compact(),
                 ),
-                Ok(r) => match coord.submit_blocking_opts(
-                    &r.prompt,
-                    r.max_new,
-                    r.sampling,
-                    r.speculative,
-                ) {
-                    Ok(resp) => (200, "OK", resp.to_json().to_string_pretty()),
+                // The parsed request is handed over whole so per-request
+                // fields (deadline_ms, sampling) survive; the coordinator
+                // assigns the id and the default deadline.
+                Ok(r) => match coord.submit_request_blocking(r) {
+                    Ok(resp) => {
+                        let (status, reason) = generate_status(&resp);
+                        (status, reason, resp.to_json().to_string_pretty())
+                    }
                     Err(e) => (
                         503,
                         "Service Unavailable",
@@ -202,14 +248,44 @@ fn write_chunk(stream: &mut TcpStream, data: &str) -> std::io::Result<()> {
     write!(stream, "{:x}\r\n{}\r\n", data.len(), data)
 }
 
+/// Wait for the next stream event without ever trusting the scheduler to
+/// still be alive: the blocking recv is bounded, scheduler exit is polled,
+/// and a wait far past the request deadline gives up. `None` means no
+/// event is coming — the caller synthesizes the terminal line.
+fn next_stream_event(
+    coord: &Arc<Coordinator>,
+    rx: &Receiver<StreamEvent>,
+    hard: Option<Instant>,
+) -> Option<StreamEvent> {
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(ev) => return Some(ev),
+            Err(RecvTimeoutError::Disconnected) => return None,
+            Err(RecvTimeoutError::Timeout) => {
+                if coord.scheduler_exited() {
+                    // The exit sweep may have raced our timeout: drain the
+                    // channel one last time before giving up.
+                    return rx.try_recv().ok();
+                }
+                if hard.is_some_and(|h| Instant::now() >= h) {
+                    return None;
+                }
+            }
+        }
+    }
+}
+
 /// Streaming `/generate`: chunked NDJSON, one line per committed token,
 /// then the `"done": true` summary line and the terminating zero chunk.
 /// A failed socket write means the client hung up: the request is cancelled
 /// so the scheduler frees its KV blocks instead of decoding the rest of the
 /// sequence for nobody (dropping `rx` doubles as a backstop — the
-/// scheduler also cancels on its next failed token send).
-fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: &GenRequest) {
-    let (id, rx) = match coord.submit_stream(&r.prompt, r.max_new, r.sampling, r.speculative) {
+/// scheduler also cancels on its next failed token send). A dead scheduler
+/// or a wait far past the deadline still produces exactly one `done` line
+/// instead of a silently pinned connection thread.
+fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: GenRequest) {
+    let deadline = r.deadline.or(coord.default_deadline());
+    let (id, rx) = match coord.submit_stream_request(r) {
         Ok(ok) => ok,
         Err(e) => {
             let body = Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string_compact();
@@ -222,7 +298,23 @@ fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: &GenRequ
         coord.cancel(id);
         return;
     }
-    for ev in rx {
+    let hard = deadline.map(|d| Instant::now() + d + Duration::from_secs(5));
+    loop {
+        let Some(ev) = next_stream_event(coord, &rx, hard) else {
+            // No event is coming (scheduler gone, or long past deadline):
+            // tear the request down and still close the stream with one
+            // synthetic terminal line so the client never sees a
+            // truncated-but-open response.
+            coord.cancel(id);
+            let done = StreamEvent::Done(GenResponse::terminal(id, "internal_error"));
+            let _ = write_chunk(stream, &format!("{}\n", done.to_json().to_string_compact()));
+            break;
+        };
+        if coord.engine().faults.should_fire(FaultPoint::StreamStall) {
+            // Injected slow consumer: hold the event before writing so
+            // chaos schedules exercise a stalled mid-stream client.
+            std::thread::sleep(Duration::from_millis(50));
+        }
         let done = matches!(ev, StreamEvent::Done(_));
         let line = format!("{}\n", ev.to_json().to_string_compact());
         if write_chunk(stream, &line).is_err() {
@@ -257,7 +349,7 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
                 if let Ok(j) = Json::parse(&req.body) {
                     if let Ok(r) = GenRequest::from_json(0, &j) {
                         if r.stream {
-                            stream_generate(&coord, &mut stream, &r);
+                            stream_generate(&coord, &mut stream, r);
                             crate::debug!(
                                 "{:?} {} {} -> 200 (stream)",
                                 peer,
@@ -283,26 +375,51 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
     }
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:8077"). Returns the bound local
-/// address via the callback before blocking (useful when binding port 0).
+/// Serve on `addr` (e.g. "127.0.0.1:8077") until the coordinator shuts
+/// down. Returns the bound local address via the callback before blocking
+/// (useful when binding port 0).
+///
+/// The accept loop is non-blocking so shutdown is noticed within ~5ms
+/// without needing a poke connection; accepted sockets are switched back
+/// to blocking for their connection thread. On exit, in-flight connection
+/// threads get a bounded grace period to flush their responses (a drain
+/// must deliver every response already owed, not sever sockets mid-write).
 pub fn serve(
     coord: Arc<Coordinator>,
     addr: &str,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
-    for stream in listener.incoming() {
+    let live = Arc::new(AtomicUsize::new(0));
+    loop {
         if coord.is_shutdown() {
             break;
         }
-        match stream {
-            Ok(s) => {
+        match listener.accept() {
+            Ok((s, _)) => {
+                let _ = s.set_nonblocking(false);
                 let c = Arc::clone(&coord);
-                std::thread::spawn(move || handle_conn(c, s));
+                let live2 = Arc::clone(&live);
+                live.fetch_add(1, Ordering::SeqCst);
+                std::thread::spawn(move || {
+                    handle_conn(c, s);
+                    live2.fetch_sub(1, Ordering::SeqCst);
+                });
             }
-            Err(e) => crate::warn_!("accept error: {e}"),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                crate::warn_!("accept error: {e}");
+                std::thread::sleep(Duration::from_millis(5));
+            }
         }
+    }
+    let t0 = Instant::now();
+    while live.load(Ordering::SeqCst) > 0 && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(5));
     }
     Ok(())
 }
@@ -412,5 +529,34 @@ mod tests {
         assert!(r.starts_with("HTTP/1.1 200 OK\r\n"));
         assert!(r.contains("Content-Length: 2\r\n"));
         assert!(r.ends_with("{}"));
+        assert!(!r.contains("Retry-After"), "only shed responses back off");
+    }
+
+    #[test]
+    fn shed_responses_carry_retry_after() {
+        let r = response(503, "Service Unavailable", "{}");
+        assert!(r.contains("Retry-After: 1\r\n"));
+    }
+
+    #[test]
+    fn generate_status_maps_terminal_reasons() {
+        let mk = |n_generated: usize, reason: &str| GenResponse {
+            id: 1,
+            text: String::new(),
+            n_prompt_tokens: 0,
+            n_generated,
+            queue_ms: 0.0,
+            total_ms: 0.0,
+            density: 1.0,
+            finish_reason: reason.to_string(),
+            prefix_hit_tokens: 0,
+        };
+        assert_eq!(generate_status(&mk(0, "deadline_exceeded")).0, 504);
+        assert_eq!(generate_status(&mk(0, "internal_error")).0, 500);
+        assert_eq!(generate_status(&mk(0, "shed")).0, 503);
+        assert_eq!(generate_status(&mk(0, "shutdown")).0, 503);
+        assert_eq!(generate_status(&mk(0, "length")).0, 200);
+        // Partial output is still a 200: the reason rides in the body.
+        assert_eq!(generate_status(&mk(3, "deadline_exceeded")).0, 200);
     }
 }

@@ -47,6 +47,21 @@ pub struct Metrics {
     pub weight_repr: String,
     pub weight_bytes_resident: u64,
     pub weight_bytes_dense: u64,
+    /// Per-sequence panics caught and converted to `internal_error`
+    /// completions (isolation working as intended: one request degraded,
+    /// not the process).
+    pub panics_caught_total: u64,
+    /// Scheduler iterations that panicked outside per-sequence isolation
+    /// and were restarted by the supervisor.
+    pub scheduler_restarts_total: u64,
+    /// Requests terminated for blowing their deadline (queued or active).
+    pub deadline_exceeded_total: u64,
+    /// Requests shed under overload or drain (503 + Retry-After).
+    pub shed_total: u64,
+    /// Waiting (unadmitted) requests right now (refreshed at report time).
+    pub queue_depth: u64,
+    /// Wall time of the last completed graceful drain (0 until one runs).
+    pub drain_duration_ms: f64,
 }
 
 impl Metrics {
@@ -76,6 +91,12 @@ impl Metrics {
             weight_repr: "f32".to_string(),
             weight_bytes_resident: 0,
             weight_bytes_dense: 0,
+            panics_caught_total: 0,
+            scheduler_restarts_total: 0,
+            deadline_exceeded_total: 0,
+            shed_total: 0,
+            queue_depth: 0,
+            drain_duration_ms: 0.0,
         }
     }
 
@@ -187,6 +208,21 @@ impl Metrics {
                 "spec_acceptance_rate",
                 Json::Num(self.spec_acceptance_rate()),
             ),
+            (
+                "panics_caught_total",
+                Json::Num(self.panics_caught_total as f64),
+            ),
+            (
+                "scheduler_restarts_total",
+                Json::Num(self.scheduler_restarts_total as f64),
+            ),
+            (
+                "deadline_exceeded_total",
+                Json::Num(self.deadline_exceeded_total as f64),
+            ),
+            ("shed_total", Json::Num(self.shed_total as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("drain_duration_ms", Json::Num(self.drain_duration_ms)),
             ("weight_repr", Json::Str(self.weight_repr.clone())),
             (
                 "weight_bytes_resident",
@@ -264,6 +300,24 @@ mod tests {
         assert_eq!(j.get("cancellations_total").as_usize(), Some(2));
         let p95 = j.get("decode_gap_ms_p95").as_f64().unwrap();
         assert!(p95 > 2.0 && p95 <= 50.0, "p95 of the window, got {p95}");
+    }
+
+    #[test]
+    fn robustness_gauges_serialize() {
+        let mut m = Metrics::new();
+        m.panics_caught_total = 2;
+        m.scheduler_restarts_total = 1;
+        m.deadline_exceeded_total = 3;
+        m.shed_total = 4;
+        m.queue_depth = 7;
+        m.drain_duration_ms = 12.5;
+        let j = m.to_json();
+        assert_eq!(j.get("panics_caught_total").as_usize(), Some(2));
+        assert_eq!(j.get("scheduler_restarts_total").as_usize(), Some(1));
+        assert_eq!(j.get("deadline_exceeded_total").as_usize(), Some(3));
+        assert_eq!(j.get("shed_total").as_usize(), Some(4));
+        assert_eq!(j.get("queue_depth").as_usize(), Some(7));
+        assert!((j.get("drain_duration_ms").as_f64().unwrap() - 12.5).abs() < 1e-9);
     }
 
     #[test]

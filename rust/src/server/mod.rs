@@ -11,10 +11,51 @@
 pub mod request;
 pub mod engine;
 pub mod batcher;
+pub mod faults;
 pub mod metrics;
 pub mod http;
 pub mod coordinator;
 
 pub use coordinator::{Coordinator, CoordinatorCfg};
 pub use engine::{Engine, EngineCfg, SpecCfg, SpecEngine};
+pub use faults::{FaultPoint, Faults};
 pub use request::{GenRequest, GenResponse, StreamEvent};
+
+use std::sync::Arc;
+
+/// Install a SIGTERM/SIGINT handler that starts a graceful drain on the
+/// coordinator: admission stops, active sequences finish (bounded by the
+/// drain timeout), streams flush, the scheduler exits, and `serve` loops
+/// unwind — every in-flight request still gets its response. Raw libc
+/// `signal(2)` via FFI: the handler only flips an atomic (async-signal
+/// safe); a watcher thread does the actual drain call.
+#[cfg(unix)]
+pub fn install_sigterm_drain(coord: Arc<Coordinator>) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, on_term);
+        signal(SIGINT, on_term);
+    }
+    std::thread::spawn(move || loop {
+        if TERM.load(Ordering::SeqCst) {
+            crate::warn_!("SIGTERM/SIGINT: draining");
+            coord.drain();
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    });
+}
+
+#[cfg(not(unix))]
+pub fn install_sigterm_drain(_coord: Arc<Coordinator>) {}

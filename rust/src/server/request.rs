@@ -2,7 +2,7 @@
 
 use crate::model::sampler::Sampling;
 use crate::util::json::Json;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A generation request as admitted by the router.
 #[derive(Clone, Debug)]
@@ -24,6 +24,13 @@ pub struct GenRequest {
     /// Stream each accepted token back as a chunked NDJSON line
     /// (`"stream": true` in the body) instead of one blocking response.
     pub stream: bool,
+    /// Completion deadline relative to `arrived` (`"deadline_ms"` in the
+    /// body, else the server default). Enforced at admission (a request
+    /// already past its deadline while queued fails `deadline_exceeded`
+    /// without running) and between decode steps (an active sequence past
+    /// it finishes `deadline_exceeded` with whatever it generated). `None`
+    /// means no deadline.
+    pub deadline: Option<Duration>,
 }
 
 impl GenRequest {
@@ -37,12 +44,20 @@ impl GenRequest {
             preempted: false,
             speculative: true,
             stream: false,
+            deadline: None,
         }
+    }
+
+    /// Whether this request's deadline (if any) has already passed.
+    pub fn past_deadline(&self) -> bool {
+        self.deadline.is_some_and(|d| self.arrived.elapsed() >= d)
     }
 
     /// Parse the POST /generate body:
     /// `{"prompt": "...", "max_new": 32, "temperature": 0.0,
-    /// "speculative": true, "stream": false}`.
+    /// "speculative": true, "stream": false, "deadline_ms": 0}`.
+    /// A `deadline_ms` of 0 or absent leaves the deadline to the server
+    /// default.
     pub fn from_json(id: u64, j: &Json) -> anyhow::Result<GenRequest> {
         let prompt = j.req_str("prompt")?.to_string();
         if prompt.is_empty() {
@@ -52,6 +67,10 @@ impl GenRequest {
         let temp = j.get("temperature").as_f64().unwrap_or(0.0);
         let speculative = j.get("speculative").as_bool().unwrap_or(true);
         let stream = j.get("stream").as_bool().unwrap_or(false);
+        let deadline = match j.get("deadline_ms").as_f64() {
+            Some(ms) if ms > 0.0 => Some(Duration::from_millis(ms as u64)),
+            _ => None,
+        };
         Ok(GenRequest {
             id,
             prompt,
@@ -65,6 +84,7 @@ impl GenRequest {
             preempted: false,
             speculative,
             stream,
+            deadline,
         })
     }
 }
@@ -116,6 +136,26 @@ pub struct GenResponse {
 }
 
 impl GenResponse {
+    /// A terminal no-output response: what a request that never generated
+    /// anything (queued past its deadline, shed under overload, orphaned by
+    /// a scheduler restart, drained at shutdown) is completed with. Exactly
+    /// one of these or a real completion reaches every waiter. Timings are
+    /// zero — an orphaned request's `GenRequest` no longer exists to
+    /// measure against.
+    pub fn terminal(id: u64, reason: &str) -> GenResponse {
+        GenResponse {
+            id,
+            text: String::new(),
+            n_prompt_tokens: 0,
+            n_generated: 0,
+            queue_ms: 0.0,
+            total_ms: 0.0,
+            density: 1.0,
+            finish_reason: reason.to_string(),
+            prefix_hit_tokens: 0,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("id", Json::Num(self.id as f64)),
@@ -165,6 +205,27 @@ mod tests {
         assert!(!GenRequest::from_json(6, &j).unwrap().stream, "defaults off");
         let j = Json::parse(r#"{"prompt": "x", "stream": true}"#).unwrap();
         assert!(GenRequest::from_json(7, &j).unwrap().stream);
+    }
+
+    #[test]
+    fn parse_deadline_ms() {
+        let j = Json::parse(r#"{"prompt": "x"}"#).unwrap();
+        assert!(GenRequest::from_json(8, &j).unwrap().deadline.is_none());
+        let j = Json::parse(r#"{"prompt": "x", "deadline_ms": 0}"#).unwrap();
+        assert!(GenRequest::from_json(9, &j).unwrap().deadline.is_none());
+        let j = Json::parse(r#"{"prompt": "x", "deadline_ms": 250}"#).unwrap();
+        let r = GenRequest::from_json(10, &j).unwrap();
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        assert!(!r.past_deadline(), "freshly parsed request has time left");
+    }
+
+    #[test]
+    fn terminal_response_has_no_output() {
+        let t = GenResponse::terminal(3, "deadline_exceeded");
+        assert_eq!(t.n_generated, 0);
+        assert!(t.text.is_empty());
+        assert_eq!(t.finish_reason, "deadline_exceeded");
+        assert_eq!(t.to_json().get("generated_tokens").as_usize(), Some(0));
     }
 
     #[test]

@@ -11,6 +11,8 @@ pub mod threadpool;
 pub mod prop;
 pub mod log;
 pub mod timer;
+pub mod sync;
 
 pub use rng::Pcg64;
 pub use json::Json;
+pub use sync::{lock_ok, read_ok, write_ok};

@@ -1,5 +1,9 @@
 //! Failure injection: every artifact-loading path must reject corrupted
-//! inputs with an error, never a panic or silent garbage.
+//! inputs with an error, never a panic or silent garbage — and the serving
+//! runtime must survive injected runtime faults (panics, pool exhaustion,
+//! disconnecting clients) with the chaos invariant intact: *every submitted
+//! request terminates with exactly one response, and the KV pool's leak
+//! counters balance after drain*.
 
 use std::io::Write;
 use wisparse::calib::CalibSet;
@@ -119,4 +123,243 @@ fn generation_request_bounds() {
     // Prompt longer than the context: truncated on admit.
     let (text, _) = engine.run_to_completion(&"x".repeat(5_000), 4, Sampling::Greedy);
     assert_eq!(text.len(), 4);
+}
+
+// ---------------------------------------------------------------------------
+// Chaos property suite: deterministic fault schedules against the serving
+// runtime. Each scenario submits a fixed workload (blocking + streaming with
+// a mid-stream disconnect), injects a scripted fault schedule, drains, and
+// asserts the chaos invariant.
+// ---------------------------------------------------------------------------
+
+mod chaos {
+    use std::sync::Arc;
+    use std::time::Duration;
+    use wisparse::model::sampler::Sampling;
+    use wisparse::model::{Model, ModelConfig};
+    use wisparse::server::batcher::BatcherCfg;
+    use wisparse::server::engine::{Engine, EngineCfg, SpecCfg, SpecEngine};
+    use wisparse::server::faults::Faults;
+    use wisparse::server::{Coordinator, CoordinatorCfg};
+    use wisparse::sparsity::Dense;
+
+    const ENGINE_KINDS: [&str; 3] = ["flat", "paged", "speculative"];
+
+    /// A coordinator over one of the three engine shapes, with a scripted
+    /// fault schedule armed on the (verify) engine. The prefix cache is off
+    /// so "pool leak counters balance" means strictly allocs == frees with
+    /// zero blocks in use — no cache retention to account for.
+    fn chaos_coordinator(
+        kind: &str,
+        faults: &str,
+    ) -> (Arc<Coordinator>, std::thread::JoinHandle<()>) {
+        let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 7));
+        let ecfg = EngineCfg {
+            threads: 2,
+            prefill_chunk: 8,
+            ..EngineCfg::default()
+        };
+        let kv = wisparse::kv::KvCfg {
+            pool_blocks: 96,
+            block_size: 8,
+            prefix_cache: false,
+        };
+        let cfg = CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 4,
+                max_queue: 64,
+            },
+            drain_timeout: Duration::from_secs(10),
+            ..CoordinatorCfg::default()
+        };
+        let coord = match kind {
+            "flat" => {
+                let mut e = Engine::new(model, Arc::new(Dense), ecfg);
+                e.faults = Faults::scripted(faults);
+                Coordinator::new(Arc::new(e), cfg)
+            }
+            "paged" => {
+                let mut e = Engine::paged(model, Arc::new(Dense), ecfg, &kv);
+                e.faults = Faults::scripted(faults);
+                Coordinator::new(Arc::new(e), cfg)
+            }
+            "speculative" => {
+                let mut e = Engine::paged(model, Arc::new(Dense), ecfg, &kv);
+                e.faults = Faults::scripted(faults);
+                let spec = Arc::new(SpecEngine::new(
+                    Arc::new(e),
+                    Arc::new(Dense),
+                    SpecCfg::default(),
+                ));
+                Coordinator::new_spec(spec, cfg)
+            }
+            other => panic!("unknown engine kind {other}"),
+        };
+        let c = Arc::clone(&coord);
+        let handle = std::thread::spawn(move || c.run_scheduler());
+        (coord, handle)
+    }
+
+    /// Run one scenario: N blocking requests plus one streaming request
+    /// whose client disconnects mid-stream, under the given fault schedule,
+    /// then drain. Returns the finish reasons of the blocking requests.
+    fn run_scenario(kind: &str, faults: &str) -> Vec<String> {
+        let (coord, handle) = chaos_coordinator(kind, faults);
+        let prompts = ["abc def", "hello w", "1+2= 3", "xyzw k", "the sun is"];
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| coord.submit(p, 6, Sampling::Greedy).unwrap())
+            .collect();
+        // Streaming client that hangs up after (at most) one event.
+        let (sid, srx) = coord
+            .submit_stream("stream chaos victim pad", 8, Sampling::Greedy, true)
+            .unwrap();
+        let _ = srx.recv_timeout(Duration::from_secs(10));
+        drop(srx); // mid-stream disconnect...
+        coord.cancel(sid); // ...and the explicit hangup path
+        // Chaos invariant, part 1: every submitted request terminates with
+        // exactly one response.
+        let mut reasons = Vec::new();
+        for (rx, p) in rxs.into_iter().zip(prompts) {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(60))
+                .unwrap_or_else(|e| panic!("[{kind}/{faults}] {p:?} got no response: {e}"));
+            assert!(!resp.finish_reason.is_empty());
+            assert!(
+                rx.recv_timeout(Duration::from_millis(20)).is_err(),
+                "[{kind}/{faults}] second response for {p:?}"
+            );
+            reasons.push(resp.finish_reason);
+        }
+        coord.drain();
+        handle.join().unwrap();
+        assert!(coord.is_shutdown() && coord.scheduler_exited());
+        // Chaos invariant, part 2: the pool leaks nothing — every alloc has
+        // a matching free and nothing is left in use (prefix cache is off).
+        if let Some(kv) = coord.engine().kv.as_ref() {
+            let (allocs, frees) = kv.pool().counters();
+            assert_eq!(
+                allocs, frees,
+                "[{kind}/{faults}] pool leak: {allocs} allocs vs {frees} frees"
+            );
+            assert_eq!(kv.blocks_in_use(), 0, "[{kind}/{faults}] blocks still held");
+        }
+        reasons
+    }
+
+    /// The full matrix: seeded fault schedules x engine shapes (all with
+    /// chunked prefill) x a mid-stream disconnect in every scenario.
+    #[test]
+    fn chaos_matrix_every_request_terminates_and_pool_balances() {
+        let schedules = [
+            "decode_panic@1",
+            "decode_panic@2,decode_panic@5",
+            "prefill_panic@1",
+            "pool_dry@1,decode_panic@3",
+            "sched_panic@1",
+            "sched_panic@2,pool_dry@2,decode_panic@4",
+        ];
+        for kind in ENGINE_KINDS {
+            for faults in schedules {
+                run_scenario(kind, faults);
+            }
+        }
+    }
+
+    /// No-fault A/B: with an empty schedule the chaos harness must decode
+    /// bit-identically to a plain engine — the fault layer is genuinely
+    /// inert when nothing is scripted.
+    #[test]
+    fn chaos_harness_without_faults_matches_reference() {
+        let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 7));
+        let reference = Engine::new(
+            model,
+            Arc::new(Dense),
+            EngineCfg {
+                threads: 2,
+                prefill_chunk: 8,
+                ..EngineCfg::default()
+            },
+        );
+        let prompts = ["abc def", "hello w", "1+2= 3", "xyzw k", "the sun is"];
+        let expected: Vec<String> = prompts
+            .iter()
+            .map(|p| reference.run_to_completion(p, 6, Sampling::Greedy).0)
+            .collect();
+        for kind in ENGINE_KINDS {
+            let (coord, handle) = chaos_coordinator(kind, "");
+            for (p, exp) in prompts.iter().zip(&expected) {
+                let resp = coord.submit_blocking(p, 6, Sampling::Greedy).unwrap();
+                assert_eq!(resp.finish_reason, "length", "[{kind}] {p:?}");
+                assert_eq!(&resp.text, exp, "[{kind}] {p:?} diverged");
+            }
+            let m = coord.metrics.lock().unwrap();
+            assert_eq!(m.panics_caught_total, 0, "[{kind}]");
+            assert_eq!(m.scheduler_restarts_total, 0, "[{kind}]");
+            drop(m);
+            coord.drain();
+            handle.join().unwrap();
+        }
+    }
+
+    /// Supervisor restart: a scheduler-level panic on the second iteration
+    /// fails only implicated in-flight requests; still-queued requests
+    /// survive the restart and complete normally.
+    #[test]
+    fn sched_panic_fails_only_inflight_requests() {
+        for kind in ENGINE_KINDS {
+            let (coord, handle) = chaos_coordinator(kind, "sched_panic@3");
+            let rxs: Vec<_> = (0..6)
+                .map(|i| {
+                    coord
+                        .submit(&format!("chaos queued {i}"), 5, Sampling::Greedy)
+                        .unwrap()
+                })
+                .collect();
+            let mut ok = 0usize;
+            let mut failed = 0usize;
+            for rx in rxs {
+                let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                match resp.finish_reason.as_str() {
+                    "internal_error" => failed += 1,
+                    _ => ok += 1,
+                }
+            }
+            assert_eq!(ok + failed, 6, "[{kind}] every request answered");
+            assert!(
+                ok >= 1,
+                "[{kind}] queued survivors must complete after the restart"
+            );
+            assert!(
+                coord.metrics.lock().unwrap().scheduler_restarts_total >= 1,
+                "[{kind}] supervisor restarted"
+            );
+            coord.drain();
+            handle.join().unwrap();
+            if let Some(kv) = coord.engine().kv.as_ref() {
+                let (allocs, frees) = kv.pool().counters();
+                assert_eq!(allocs, frees, "[{kind}] pool leak after restart");
+            }
+        }
+    }
+
+    /// Deadline enforcement end to end: an already-expired request fails
+    /// `deadline_exceeded` without running, under every engine shape.
+    #[test]
+    fn expired_requests_fail_terminally_without_leaking() {
+        for kind in ENGINE_KINDS {
+            let (coord, handle) = chaos_coordinator(kind, "");
+            let mut req = wisparse::server::GenRequest::new(0, "expired already", 6);
+            req.deadline = Some(Duration::ZERO);
+            let resp = coord.submit_request_blocking(req).unwrap();
+            assert_eq!(resp.finish_reason, "deadline_exceeded", "[{kind}]");
+            assert_eq!(resp.n_generated, 0, "[{kind}]");
+            coord.drain();
+            handle.join().unwrap();
+            if let Some(kv) = coord.engine().kv.as_ref() {
+                let (allocs, frees) = kv.pool().counters();
+                assert_eq!(allocs, frees, "[{kind}]");
+            }
+        }
+    }
 }

@@ -265,6 +265,7 @@ fn coordinator_preempts_youngest_and_resumes() {
                 max_batch: 4,
                 max_queue: 32,
             },
+            ..CoordinatorCfg::default()
         },
     );
     // Two requests sharing a 16-token prompt, each needing 12 blocks worst
@@ -329,6 +330,7 @@ fn oversized_request_finishes_cache_full() {
                 max_batch: 2,
                 max_queue: 8,
             },
+            ..CoordinatorCfg::default()
         },
     );
     let sched = Arc::clone(&coord);

@@ -230,6 +230,7 @@ fn partial_prefill_terminal_and_unpublished() {
                 max_batch: 2,
                 max_queue: 8,
             },
+            ..CoordinatorCfg::default()
         },
     );
     let sched = Arc::clone(&coord);
@@ -276,6 +277,7 @@ fn long_prompt_does_not_stall_short_decodes() {
                 max_batch: 4,
                 max_queue: 16,
             },
+            ..CoordinatorCfg::default()
         },
     );
     let sched = Arc::clone(&coord);
@@ -350,6 +352,7 @@ fn cancelled_stream_frees_blocks_and_stops_decode() {
                 max_batch: 2,
                 max_queue: 8,
             },
+            ..CoordinatorCfg::default()
         },
     );
     let sched = Arc::clone(&coord);
@@ -425,6 +428,7 @@ fn cancel_queued_request_never_runs() {
                 max_batch: 1,
                 max_queue: 8,
             },
+            ..CoordinatorCfg::default()
         },
     );
     // No scheduler yet: both requests queue.

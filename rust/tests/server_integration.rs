@@ -34,6 +34,7 @@ fn start_server() -> (Arc<Coordinator>, String) {
                 max_batch: 4,
                 max_queue: 64,
             },
+            ..CoordinatorCfg::default()
         },
     );
     let sched = Arc::clone(&coord);
@@ -243,5 +244,160 @@ fn concurrent_http_clients() {
         assert_eq!(*status, 200, "{body}");
     }
     assert_eq!(coord.metrics.lock().unwrap().requests_total, 6);
+    coord.shutdown();
+}
+
+/// Like [`request`] but also returns the response headers (lowercased
+/// names), for asserting on `Retry-After`.
+fn request_full(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, Vec<(String, String)>, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.trim_end().split_once(':') {
+            let k = k.to_ascii_lowercase();
+            let v = v.trim().to_string();
+            if k == "content-length" {
+                content_length = v.parse().unwrap();
+            }
+            headers.push((k, v));
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    reader.read_exact(&mut buf).unwrap();
+    (status, headers, String::from_utf8(buf).unwrap())
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k == name)
+        .map(|(_, v)| v.as_str())
+}
+
+/// Readiness and drain over HTTP. The coordinator deliberately has NO
+/// scheduler thread: a drain on it never completes, so the server stays
+/// up in the draining state and every assertion below is race-free.
+#[test]
+fn readyz_flips_and_admission_sheds_during_drain() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 202));
+    let engine = Arc::new(Engine::new(
+        model,
+        Arc::new(Dense),
+        EngineCfg {
+            threads: 2,
+            ..EngineCfg::default()
+        },
+    ));
+    let coord = Coordinator::new(engine, CoordinatorCfg::default());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let http_coord = Arc::clone(&coord);
+    std::thread::spawn(move || {
+        wisparse::server::http::serve(http_coord, "127.0.0.1:0", move |a| {
+            tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = rx.recv().unwrap().to_string();
+
+    let (status, body) = request(&addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("ok"));
+    let (status, body) = request(&addr, "GET", "/readyz", "");
+    assert_eq!(status, 200);
+    assert!(body.contains("ready"));
+
+    let (status, _) = request(&addr, "POST", "/admin/drain", "");
+    assert_eq!(status, 202);
+    assert!(coord.is_draining());
+
+    // Liveness is unaffected; readiness flips and carries Retry-After.
+    let (status, _) = request(&addr, "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let (status, headers, body) = request_full(&addr, "GET", "/readyz", "");
+    assert_eq!(status, 503);
+    assert!(body.contains("draining"), "{body}");
+    assert_eq!(header(&headers, "retry-after"), Some("1"));
+
+    // New work is shed at admission, with backoff advice.
+    let (status, headers, _) = request_full(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "too late", "max_new": 4}"#,
+    );
+    assert_eq!(status, 503);
+    assert_eq!(header(&headers, "retry-after"), Some("1"));
+    assert!(coord.metrics.lock().unwrap().shed_total >= 1);
+
+    coord.shutdown(); // lets the accept loop exit
+}
+
+/// A queued request whose deadline lapses before a batch slot frees up
+/// comes back 504 with `deadline_exceeded`, having generated nothing.
+#[test]
+fn queued_request_past_deadline_maps_to_504() {
+    let (coord, addr) = start_server();
+    // Fill every batch slot with long decodes so the HTTP request below
+    // has to wait in the queue past its 1ms deadline.
+    let busy: Vec<_> = (0..4)
+        .map(|i| {
+            coord
+                .submit(
+                    &format!("occupant {i} holding a slot"),
+                    200,
+                    wisparse::model::sampler::Sampling::Greedy,
+                )
+                .unwrap()
+        })
+        .collect();
+    let (status, body) = request(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "deadline bound", "max_new": 4, "deadline_ms": 1}"#,
+    );
+    assert_eq!(status, 504, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("finish_reason").as_str(), Some("deadline_exceeded"));
+    assert_eq!(j.get("generated_tokens").as_usize(), Some(0));
+    assert!(coord.metrics.lock().unwrap().deadline_exceeded_total >= 1);
+    drop(busy);
+    coord.shutdown();
+}
+
+/// The robustness counters ride on /metrics from the start.
+#[test]
+fn metrics_expose_robustness_counters() {
+    let (coord, addr) = start_server();
+    let (status, body) = request(&addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let m = Json::parse(&body).unwrap();
+    assert_eq!(m.get("panics_caught_total").as_usize(), Some(0));
+    assert_eq!(m.get("scheduler_restarts_total").as_usize(), Some(0));
+    assert_eq!(m.get("deadline_exceeded_total").as_usize(), Some(0));
+    assert_eq!(m.get("shed_total").as_usize(), Some(0));
+    assert_eq!(m.get("queue_depth").as_usize(), Some(0));
+    assert!(m.get("drain_duration_ms").as_f64().is_some());
     coord.shutdown();
 }

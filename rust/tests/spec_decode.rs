@@ -248,6 +248,7 @@ fn coordinator_spec_serving_matches_baseline() {
                 max_batch: 4,
                 max_queue: 32,
             },
+            ..CoordinatorCfg::default()
         },
     );
     let sched = Arc::clone(&coord);
