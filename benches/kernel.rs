@@ -209,11 +209,58 @@ fn main() {
             ("backends", Json::Arr(entries)),
         ]));
     }
+    // §Obs A/B: full synthetic-model forward with the default no-op
+    // ObsSink vs the recording BlockObs sink. The no-op column is the one
+    // the acceptance criterion pins: it must sit within noise of a build
+    // that predates the obs subsystem entirely.
+    println!("\n== §Obs: no-op vs recording ObsSink (synthetic forward, 16 tok) ==");
+    let obs_cfg = wisparse::model::ModelConfig::preset("nano").expect("nano preset");
+    let mut noop_model = wisparse::model::transformer::Model::synthetic(obs_cfg.clone(), 7);
+    let mut rec_model = wisparse::model::transformer::Model::synthetic(obs_cfg, 7);
+    noop_model.set_obs_sink(std::sync::Arc::new(wisparse::obs::NoopSink));
+    rec_model.set_obs_sink(std::sync::Arc::new(wisparse::obs::BlockObs::new(
+        rec_model.cfg.n_layers,
+    )));
+    let obs_tokens: Vec<usize> = (0..16).map(|i| (i * 13) % noop_model.cfg.vocab_size).collect();
+    let mut stats = wisparse::model::transformer::ForwardStats::default();
+    let noop = quick.run("forward noop-sink", || {
+        black_box(noop_model.forward_seq(
+            black_box(&obs_tokens),
+            &wisparse::sparsity::Dense,
+            &mut stats,
+            None,
+        ));
+    });
+    let rec = quick.run("forward recording-sink", || {
+        black_box(rec_model.forward_seq(
+            black_box(&obs_tokens),
+            &wisparse::sparsity::Dense,
+            &mut stats,
+            None,
+        ));
+    });
+    println!("{}", noop.line());
+    println!(
+        "{}   recording overhead {:+.1}%",
+        rec.line(),
+        (rec.mean_ns / noop.mean_ns - 1.0) * 100.0
+    );
     let report = Json::obj(vec![
         ("bench", Json::Str("kernel".to_string())),
         ("simd_active", Json::Str(simd::active().name().to_string())),
         ("threads", Json::Num(threads as f64)),
         ("shapes", Json::Arr(json_shapes)),
+        (
+            "obs_sink",
+            Json::obj(vec![
+                ("noop_forward_ns", Json::Num(noop.mean_ns)),
+                ("recording_forward_ns", Json::Num(rec.mean_ns)),
+                (
+                    "recording_overhead_pct",
+                    Json::Num((rec.mean_ns / noop.mean_ns - 1.0) * 100.0),
+                ),
+            ]),
+        ),
     ]);
     std::fs::write("BENCH_kernel.json", report.to_string_pretty()).expect("BENCH_kernel.json");
     println!("-> BENCH_kernel.json");

@@ -6,6 +6,7 @@ pub mod calibrate;
 pub mod quantize;
 pub mod validate;
 pub mod serve;
+pub mod profile;
 pub mod bench_decode;
 pub mod table1;
 pub mod table2;

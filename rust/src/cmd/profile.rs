@@ -1,0 +1,145 @@
+//! `wisparse profile`: run a short workload with the recording
+//! [`wisparse::obs::BlockObs`] sink installed and print a per-(block,
+//! projection) table of calls, achieved density, tau-vs-plan drift, wall
+//! time and effective weight bandwidth, against a measured STREAM-style
+//! roofline ceiling.
+//!
+//! The JSON dump (`--json`) is what CI's profile smoke asserts against:
+//! one row per (block, projection), each with nonzero traffic.
+
+use std::path::Path;
+use std::sync::Arc;
+use wisparse::calib::ModelCalib;
+use wisparse::data::corpus::{detokenize, CorpusGen};
+use wisparse::model::sampler::Sampling;
+use wisparse::obs::roofline::stream_gb_per_s;
+use wisparse::obs::{BlockObs, ObsSink};
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::util::cli::Args;
+use wisparse::util::json::Json;
+
+use crate::cmd::common;
+
+pub fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::new(
+        "profile",
+        "per-block density/bandwidth profile of a decode workload",
+    )
+    .opt("artifacts", "artifacts", "artifacts root")
+    .opt("model", "llama-micro", "model preset")
+    .opt("method", "wisparse", "sparsification method (or `dense`)")
+    .opt("target", "0.5", "sparsity target (plan must exist or be calibratable)")
+    .opt("budget", "quick", "calibration budget if no cached plan")
+    .opt("prompts", "4", "number of synthetic prompts to run")
+    .opt("prompt-len", "24", "tokens per synthetic prompt")
+    .opt("max-new", "16", "tokens to decode per prompt")
+    .opt("json", "", "also write the profile as JSON to this path")
+    .flag("synthetic", "use random weights (no artifacts needed)")
+    .parse(argv)?;
+    let artifacts = Path::new(args.get("artifacts"));
+    let mut model =
+        common::load_model(artifacts, args.get("model"), args.get_flag("synthetic"))?;
+    let method = args.get("method");
+    // Build the sparsifier BEFORE installing the recording sink, so
+    // calibration forwards don't pollute the workload's telemetry.
+    let sparsifier = if method == "dense" {
+        Arc::new(wisparse::sparsity::Dense) as Arc<dyn wisparse::sparsity::Sparsifier>
+    } else {
+        let search_cfg =
+            common::search_cfg(args.get("budget"), wisparse::util::threadpool::num_threads())?;
+        let calib_set = common::load_calib(artifacts, args.get("model"), 8, 96);
+        let calib = ModelCalib::collect(&model, &calib_set);
+        let plan = common::plan_for(
+            artifacts,
+            &model,
+            &calib,
+            method,
+            args.get_f64("target")?,
+            &search_cfg,
+            true,
+        )?;
+        common::sparsifier_for(&model, method, &plan)?
+    };
+    let obs = Arc::new(BlockObs::new(model.cfg.n_layers));
+    model.set_obs_sink(Arc::clone(&obs) as Arc<dyn ObsSink>);
+    let engine = Engine::new(Arc::new(model), sparsifier, EngineCfg::default());
+
+    // The workload: a handful of synthetic prompts decoded to completion.
+    let n_prompts = args.get_usize("prompts")?.max(1);
+    let prompt_len = args.get_usize("prompt-len")?.max(1);
+    let max_new = args.get_usize("max-new")?.max(1);
+    let mut corpus = CorpusGen::new(0xBEEF);
+    let t0 = std::time::Instant::now();
+    for seq in corpus.calib_sequences(n_prompts, prompt_len) {
+        let prompt = detokenize(&seq);
+        let _ = engine.run_to_completion(&prompt, max_new, Sampling::Greedy);
+    }
+    let workload_s = t0.elapsed().as_secs_f64();
+
+    println!(
+        "measuring STREAM roofline ({} threads)...",
+        wisparse::util::threadpool::num_threads()
+    );
+    let roof = stream_gb_per_s();
+    println!(
+        "workload: {n_prompts} prompts x {prompt_len} tok + {max_new} new in {workload_s:.2}s; roofline {roof:.1} GB/s\n"
+    );
+
+    println!("block proj        calls  density  plan   drift    time_ms    GB/s   %roof");
+    let mut rows = Vec::new();
+    for st in obs.snapshot() {
+        let planned = engine.sparsifier.planned_density(st.id);
+        let drift = planned.map(|p| st.density() - p);
+        println!(
+            "{:>5} {:<10} {:>6} {:>8.3} {:>5} {:>7} {:>10.3} {:>7.2} {:>7.1}",
+            st.id.block,
+            st.id.kind.name(),
+            st.calls,
+            st.density(),
+            planned.map_or("   -".to_string(), |p| format!("{p:.2}")),
+            drift.map_or("      -".to_string(), |d| format!("{d:+.3}")),
+            st.ns as f64 / 1e6,
+            st.gb_per_s(),
+            if roof > 0.0 {
+                100.0 * st.gb_per_s() / roof
+            } else {
+                0.0
+            },
+        );
+        let mut fields = vec![
+            ("block", Json::Num(st.id.block as f64)),
+            ("proj", Json::Str(st.id.kind.name().to_string())),
+            ("calls", Json::Num(st.calls as f64)),
+            ("density", Json::Num(st.density())),
+            ("ns", Json::Num(st.ns as f64)),
+            ("bytes", Json::Num(st.bytes as f64)),
+            ("gb_s", Json::Num(st.gb_per_s())),
+        ];
+        if let Some(p) = planned {
+            fields.push(("planned_density", Json::Num(p)));
+            fields.push(("drift", Json::Num(st.density() - p)));
+        }
+        rows.push(Json::obj(fields));
+    }
+    let report = Json::obj(vec![
+        ("cmd", Json::Str("profile".to_string())),
+        ("model", Json::Str(engine.model.cfg.name.clone())),
+        ("method", Json::Str(method.to_string())),
+        ("n_prompts", Json::Num(n_prompts as f64)),
+        ("max_new", Json::Num(max_new as f64)),
+        ("workload_s", Json::Num(workload_s)),
+        ("roofline_gb_s", Json::Num(roof)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let out = args.get("json");
+    if !out.is_empty() {
+        if let Some(dir) = Path::new(out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(out, report.to_string_pretty())?;
+        println!("\nwrote {out}");
+    }
+    Ok(())
+}

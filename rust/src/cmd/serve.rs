@@ -36,6 +36,11 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         .opt("prefix-cache", "on", "radix-tree prompt prefix sharing (on|off)")
         .opt("draft-sparsity", "0.75", "draft sparsity target for --speculative")
         .opt("spec-k", "4", "initial speculative draft-chain length")
+        .opt(
+            "block-telemetry",
+            "on",
+            "per-block density/bandwidth rows in /metrics?format=prometheus (on|off)",
+        )
         .opt("quant", "off", "weight quantization (off|int8|int4)")
         .opt("quant-group", "64", "rows per scale group when quantizing in-process")
         .flag("speculative", "self-speculative decoding (high-sparsity draft, production verify)")
@@ -44,7 +49,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     let artifacts = Path::new(args.get("artifacts"));
     let base = args.get("model");
     let quant = args.get("quant");
-    let model = if quant == "off" {
+    let mut model = if quant == "off" {
         common::load_model(artifacts, base, args.get_flag("synthetic"))?
     } else {
         let mode = wisparse::quant::QuantMode::parse(quant)
@@ -73,6 +78,16 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
             m.cfg.name = qname;
             m
         }
+    };
+    // Installed before Arc'ing (the sink setter needs `&mut Model`); the
+    // calibration forwards below run through it too, so the stats are wiped
+    // again right before serving starts.
+    let block_obs = if args.get("block-telemetry") != "off" {
+        let o = Arc::new(wisparse::obs::BlockObs::new(model.cfg.n_layers));
+        model.set_obs_sink(Arc::clone(&o) as Arc<dyn wisparse::obs::ObsSink>);
+        Some(o)
+    } else {
+        None
     };
     let model = Arc::new(model);
     let method = args.get("method");
@@ -158,6 +173,10 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     } else {
         Coordinator::new(engine, coord_cfg)
     };
+    if let Some(o) = &block_obs {
+        // Calibration forwards above went through the sink; serve clean.
+        o.reset();
+    }
     let sched = Arc::clone(&coord);
     let sched_handle = std::thread::spawn(move || sched.run_scheduler());
     // SIGTERM/SIGINT start a graceful drain: admission stops, active

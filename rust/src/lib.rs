@@ -22,6 +22,7 @@ pub mod sparse_kernel;
 pub mod quant;
 pub mod calib;
 pub mod eval;
+pub mod obs;
 pub mod server;
 pub mod runtime;
 pub mod report;

@@ -17,6 +17,7 @@ setup
 serving
   serve         start the HTTP serving coordinator
   bench-decode  end-to-end decode throughput for one configuration
+  profile       per-block density/bandwidth profile vs STREAM roofline
 
 experiments (regenerate the paper's tables and figures)
   table1        accuracy: methods x sparsities x models (Table 1)
@@ -44,6 +45,7 @@ fn main() {
         "validate" => cmd::validate::run(&rest),
         "serve" => cmd::serve::run(&rest),
         "bench-decode" => cmd::bench_decode::run(&rest),
+        "profile" => cmd::profile::run(&rest),
         "table1" => cmd::table1::run(&rest),
         "table2" => cmd::table2::run(&rest),
         "fig2" => cmd::figs::fig2(&rest),

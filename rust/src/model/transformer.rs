@@ -11,6 +11,7 @@ use crate::model::kv_cache::KvCache;
 use crate::model::layers::{LayerId, LayerKind};
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
+use crate::obs::{NoopSink, ObsSink};
 use crate::quant::{QuantMode, WeightMat, WeightRepr};
 use crate::sparse_kernel::ColMajorMatrix;
 use crate::sparsity::Sparsifier;
@@ -18,6 +19,7 @@ use crate::tensor::ops::{rmsnorm, rope_inplace, silu, softmax_inplace};
 use crate::tensor::Tensor;
 use crate::util::threadpool::intra_op_threads;
 use std::path::Path;
+use std::sync::Arc;
 
 /// One transformer block's weights in kernel layout — dense-f32 columns or
 /// group-quantized codes, behind one [`WeightRepr`] contract either way.
@@ -183,6 +185,10 @@ pub struct Model {
     pub lm_head: WeightMat,
     /// `g` vectors indexed by `LayerId::flat()`.
     pub col_norms: Vec<Vec<f32>>,
+    /// Forward-path telemetry sink. The default no-op sink costs one
+    /// virtual `enabled()` call per projection; install a recording sink
+    /// with [`Model::set_obs_sink`] before sharing the model.
+    pub obs: Arc<dyn ObsSink>,
 }
 
 impl Model {
@@ -245,7 +251,15 @@ impl Model {
             final_norm,
             lm_head,
             col_norms,
+            obs: Arc::new(NoopSink),
         })
+    }
+
+    /// Install a telemetry sink (e.g. [`crate::obs::BlockObs`]). Call before
+    /// the model is shared; the engine reads it lock-free on every
+    /// projection.
+    pub fn set_obs_sink(&mut self, sink: Arc<dyn ObsSink>) {
+        self.obs = sink;
     }
 
     fn compute_col_norms(cfg: &ModelConfig, blocks: &[BlockWeights]) -> Vec<Vec<f32>> {
@@ -399,13 +413,32 @@ impl Model {
         let d = cfg.d_model;
         let hd = cfg.head_dim();
         let block = &self.blocks[b];
+        // One virtual call when the no-op sink is installed; the timing
+        // branch only exists for recording sinks, so the hot path stays
+        // allocation- and syscall-free (pinned by the kernel bench A/B and
+        // the obs differential test).
+        let obs = &*self.obs;
+        let obs_on = obs.enabled();
         let proj = |kind: LayerKind,
                         input: &[f32],
                         out: &mut [f32],
                         stats: &mut ForwardStats| {
             let id = LayerId::new(b, kind);
             let w = block.w(kind);
-            let kept = sp.project(id, input, w, out);
+            let kept = if obs_on {
+                let t0 = std::time::Instant::now();
+                let kept = sp.project(id, input, w, out);
+                obs.record_proj(
+                    id,
+                    kept,
+                    w.in_dim(),
+                    w.resident_bytes(),
+                    t0.elapsed().as_nanos() as u64,
+                );
+                kept
+            } else {
+                sp.project(id, input, w, out)
+            };
             stats.macs_kept += (kept * w.out_dim()) as u64;
             stats.macs_dense += (w.in_dim() * w.out_dim()) as u64;
             stats.macs_extra += sp.extra_macs(id, w);

@@ -1,0 +1,213 @@
+//! Native histograms (fixed log-spaced buckets, Prometheus-renderable) and
+//! a sliding-window event rate.
+//!
+//! The `Summary` type in `util::stats` keeps exact recent percentiles for
+//! the JSON view; these histograms sit alongside it so `/metrics?format=`
+//! `prometheus` can expose aggregatable `_bucket/_sum/_count` series.
+
+use std::time::Instant;
+
+/// Log-spaced 1-2.5-5 millisecond bounds covering ~50µs .. 30s: wide enough
+/// for queue waits, per-token steps and whole-request latencies to share one
+/// bucket layout (Prometheus joins across families then stay trivial).
+pub const MS_BUCKETS: [f64; 18] = [
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0,
+    5000.0, 10000.0, 30000.0,
+];
+
+/// Fixed-bucket histogram. Bounds are upper-inclusive (`v <= le`), matching
+/// Prometheus `le` semantics.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    bounds: &'static [f64],
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Hist {
+    pub fn with_bounds(bounds: &'static [f64]) -> Self {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Self {
+            bounds,
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    /// The standard millisecond layout used by every latency family.
+    pub fn new_ms() -> Self {
+        Self::with_bounds(&MS_BUCKETS)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        self.bounds
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative `(le, count)` pairs ending with `(+Inf, total)`.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.bounds.len() + 1);
+        for (i, &b) in self.bounds.iter().enumerate() {
+            acc += self.counts[i];
+            out.push((b, acc));
+        }
+        acc += self.counts[self.bounds.len()];
+        out.push((f64::INFINITY, acc));
+        out
+    }
+}
+
+/// Sliding-window event rate over the last [`RATE_WINDOW_SECS`] seconds,
+/// kept as per-second buckets tagged with their absolute second index so
+/// reads need no mutation (stale slots are simply out of range).
+pub const RATE_WINDOW_SECS: u64 = 30;
+
+const RATE_SLOTS: usize = 32;
+
+#[derive(Clone, Debug)]
+pub struct RateWindow {
+    started: Instant,
+    /// (absolute second index, events in that second)
+    slots: [(u64, u64); RATE_SLOTS],
+}
+
+impl Default for RateWindow {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RateWindow {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            slots: [(0, 0); RATE_SLOTS],
+        }
+    }
+
+    fn now_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn add(&mut self, n: u64) {
+        let sec = self.now_s() as u64;
+        self.add_at(n, sec);
+    }
+
+    /// Deterministic-time variant used by tests.
+    pub fn add_at(&mut self, n: u64, sec: u64) {
+        let slot = &mut self.slots[(sec % RATE_SLOTS as u64) as usize];
+        if slot.0 != sec {
+            *slot = (sec, 0);
+        }
+        slot.1 += n;
+    }
+
+    /// Events/second over the trailing window (or since start, if younger).
+    pub fn rate(&self) -> f64 {
+        self.rate_at(self.now_s())
+    }
+
+    pub fn rate_at(&self, now_s: f64) -> f64 {
+        let now_sec = now_s as u64;
+        let lo = now_sec.saturating_sub(RATE_WINDOW_SECS - 1);
+        let total: u64 = self
+            .slots
+            .iter()
+            .filter(|(s, _)| *s >= lo && *s <= now_sec)
+            .map(|(_, c)| c)
+            .sum();
+        let span = now_s.min(RATE_WINDOW_SECS as f64).max(1.0);
+        total as f64 / span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_and_cumulative() {
+        let mut h = Hist::new_ms();
+        for v in [0.04, 0.05, 0.3, 7.0, 1e9] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - (0.04 + 0.05 + 0.3 + 7.0 + 1e9)).abs() < 1.0);
+        let cum = h.cumulative();
+        assert_eq!(cum.len(), MS_BUCKETS.len() + 1);
+        // Monotone, ends at +Inf with the full count.
+        assert!(cum.windows(2).all(|w| w[0].1 <= w[1].1));
+        let (last_le, last_n) = *cum.last().unwrap();
+        assert!(last_le.is_infinite());
+        assert_eq!(last_n, 5);
+        // 0.05 lands in the le=0.05 bucket (upper-inclusive).
+        assert_eq!(cum[0], (0.05, 2));
+    }
+
+    #[test]
+    fn rate_window_steady_state() {
+        let mut w = RateWindow::new();
+        // 100 tok/s for 60 simulated seconds.
+        for sec in 0..60 {
+            w.add_at(100, sec);
+        }
+        let r = w.rate_at(60.0);
+        assert!((r - 100.0).abs() < 5.0, "rate {r}");
+    }
+
+    #[test]
+    fn rate_window_decays_when_idle() {
+        let mut w = RateWindow::new();
+        for sec in 0..10 {
+            w.add_at(100, sec);
+        }
+        // Burst just ended: window still sees it.
+        assert!(w.rate_at(10.0) > 50.0);
+        // 40s later every bucket is stale: rate is 0, unlike the lifetime
+        // average which would still read ~20 tok/s and keep decaying.
+        assert_eq!(w.rate_at(50.0), 0.0);
+    }
+
+    #[test]
+    fn rate_window_reuses_slots() {
+        let mut w = RateWindow::new();
+        w.add_at(7, 3);
+        // Same slot index 35 seconds later must reset, not accumulate.
+        w.add_at(5, 3 + RATE_SLOTS as u64);
+        let r = w.rate_at((4 + RATE_SLOTS) as f64);
+        assert!((r - 5.0 / 30.0).abs() < 1e-9, "rate {r}");
+    }
+
+    #[test]
+    fn rate_window_young_process() {
+        let mut w = RateWindow::new();
+        w.add_at(50, 0);
+        // Half a second in, denominator clamps to 1s: no divide-by-zero blowup.
+        assert_eq!(w.rate_at(0.5), 50.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Zero-dependency observability: in-process span tracing, forward-path
+//! per-block telemetry behind the [`ObsSink`] trait, Prometheus text
+//! exposition, native log-spaced histograms + sliding-window rates, and
+//! STREAM-style roofline measurement for speed-of-light accounting.
+//!
+//! Everything here is allocation-free on the hot path: span records go into
+//! a preallocated ring (per-slot locking only), sink counters are plain
+//! atomics, and the no-op sink costs one virtual `enabled()` call per
+//! projection.
+
+pub mod hist;
+pub mod prom;
+pub mod roofline;
+pub mod sink;
+pub mod trace;
+
+pub use hist::{Hist, RateWindow};
+pub use prom::PromText;
+pub use sink::{BlockObs, BlockStat, NoopSink, ObsSink};
+pub use trace::{tracer, Span, SpanGuard, TraceSummary, Tracer};

@@ -1,0 +1,137 @@
+//! Prometheus text exposition format (version 0.0.4) renderer.
+//!
+//! Zero-dependency: a small builder that emits `# HELP`/`# TYPE` once per
+//! family (even when a family carries several label sets), escapes label
+//! values, and renders [`Hist`] as conformant `_bucket/_sum/_count` series.
+
+use crate::obs::hist::Hist;
+use std::collections::BTreeSet;
+use std::fmt::Write;
+
+/// Escape a label value per the exposition format: backslash, double-quote
+/// and line-feed.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_value(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf" } else { "-Inf" }.to_string()
+    } else if v.is_nan() {
+        "NaN".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn fmt_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Incremental exposition-text builder.
+#[derive(Default)]
+pub struct PromText {
+    out: String,
+    typed: BTreeSet<String>,
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn family(&mut self, name: &str, kind: &str, help: &str) {
+        if self.typed.insert(name.to_string()) {
+            let _ = writeln!(self.out, "# HELP {name} {help}");
+            let _ = writeln!(self.out, "# TYPE {name} {kind}");
+        }
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.family(name, "counter", help);
+        let _ = writeln!(self.out, "{name}{} {}", fmt_labels(labels), fmt_value(value));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.family(name, "gauge", help);
+        let _ = writeln!(self.out, "{name}{} {}", fmt_labels(labels), fmt_value(value));
+    }
+
+    pub fn histogram(&mut self, name: &str, help: &str, h: &Hist) {
+        self.family(name, "histogram", help);
+        for (le, count) in h.cumulative() {
+            let _ = writeln!(
+                self.out,
+                "{name}_bucket{{le=\"{}\"}} {count}",
+                fmt_value(le)
+            );
+        }
+        let _ = writeln!(self.out, "{name}_sum {}", fmt_value(h.sum()));
+        let _ = writeln!(self.out, "{name}_count {}", h.count());
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(escape_label("x\ny"), "x\\ny");
+        assert_eq!(escape_label("plain"), "plain");
+    }
+
+    #[test]
+    fn type_emitted_once_per_family() {
+        let mut p = PromText::new();
+        p.counter("m_total", "help", &[("reason", "stop")], 1.0);
+        p.counter("m_total", "help", &[("reason", "length")], 2.0);
+        let s = p.finish();
+        assert_eq!(s.matches("# TYPE m_total counter").count(), 1);
+        assert!(s.contains("m_total{reason=\"stop\"} 1"));
+        assert!(s.contains("m_total{reason=\"length\"} 2"));
+    }
+
+    #[test]
+    fn histogram_render_has_inf_sum_count() {
+        let mut h = Hist::new_ms();
+        h.observe(0.3);
+        h.observe(40.0);
+        let mut p = PromText::new();
+        p.histogram("lat_ms", "latency", &h);
+        let s = p.finish();
+        assert!(s.contains("# TYPE lat_ms histogram"));
+        assert!(s.contains("lat_ms_bucket{le=\"+Inf\"} 2"));
+        assert!(s.contains("lat_ms_count 2"));
+        assert!(s.contains("lat_ms_sum 40.3"));
+    }
+
+    #[test]
+    fn infinity_and_plain_values() {
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(2.5), "2.5");
+        assert_eq!(fmt_value(3.0), "3");
+    }
+}

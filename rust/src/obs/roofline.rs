@@ -1,0 +1,67 @@
+//! STREAM-style memory-bandwidth ceiling for roofline accounting.
+//!
+//! Sparse decode on CPU is weight-streaming-bound, so the honest "speed of
+//! light" for a projection is the machine's sustained memory bandwidth, not
+//! peak FLOPs. This measures the classic STREAM *scale* kernel
+//! (`b[i] = s * a[i]`) over buffers far larger than cache, split across the
+//! same number of threads the engine uses, and reports the best-of-reps
+//! GB/s. `wisparse profile` prints every block's achieved GB/s against it.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Floats per buffer for the default measurement (32 MiB per buffer).
+pub const STREAM_FLOATS: usize = 1 << 23;
+
+/// Best-of-`reps` scale-kernel bandwidth in GB/s using `threads` workers.
+/// One extra warm-up reps runs first and is discarded.
+pub fn stream_gb_per_s_with(n: usize, reps: usize, threads: usize) -> f64 {
+    let threads = threads.max(1);
+    let a = vec![1.0f32; n];
+    let mut b = vec![0.0f32; n];
+    let chunk = n.div_ceil(threads);
+    let mut best = 0.0f64;
+    for rep in 0..=reps {
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for (dst, src) in b.chunks_mut(chunk).zip(a.chunks(chunk)) {
+                scope.spawn(move || {
+                    for (d, s) in dst.iter_mut().zip(src) {
+                        *d = 1.000001 * *s;
+                    }
+                    black_box(&dst[0]);
+                });
+            }
+        });
+        let ns = t0.elapsed().as_nanos().max(1) as f64;
+        // 4 bytes read + 4 bytes written per element; bytes/ns == GB/s.
+        let gb_s = (n * 8) as f64 / ns;
+        if rep > 0 {
+            best = best.max(gb_s);
+        }
+    }
+    black_box(&b);
+    best
+}
+
+/// Default measurement: 32 MiB buffers, 3 timed reps, engine thread count.
+pub fn stream_gb_per_s() -> f64 {
+    stream_gb_per_s_with(
+        STREAM_FLOATS,
+        3,
+        crate::util::threadpool::num_threads(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_is_positive_and_sane() {
+        // Small buffer keeps the test fast; any real machine moves >0.1 GB/s
+        // and <10 TB/s.
+        let gb_s = stream_gb_per_s_with(1 << 18, 2, 2);
+        assert!(gb_s > 0.1 && gb_s < 10_000.0, "gb/s {gb_s}");
+    }
+}

@@ -1,0 +1,199 @@
+//! Forward-path telemetry behind the [`ObsSink`] trait.
+//!
+//! The transformer's projection loop calls `enabled()` once per projection;
+//! only when a recording sink is installed does it also time the projection
+//! and call `record_proj`. The no-op sink therefore costs one virtual call
+//! on the hot path and never touches activations, which is what keeps the
+//! recording/no-op logits bit-identical (pinned by `tests/obs_telemetry.rs`).
+
+use crate::model::layers::{LayerId, LayerKind};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-(block, projection) accumulated telemetry.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockStat {
+    pub id: LayerId,
+    /// Projection invocations (== tokens processed through this linear).
+    pub calls: u64,
+    /// Input channels actually kept across all calls.
+    pub kept_channels: u64,
+    /// Input channels a dense pass would have used (`calls * in_dim`).
+    pub dense_channels: u64,
+    /// Wall time spent inside the projection, summed.
+    pub ns: u64,
+    /// Weight bytes touched, estimated as `resident_bytes * kept / in_dim`
+    /// per call (channel skipping saves proportional weight traffic).
+    pub bytes: u64,
+}
+
+impl BlockStat {
+    /// Achieved density (kept / dense channel fraction); 1.0 before any call.
+    pub fn density(&self) -> f64 {
+        if self.dense_channels == 0 {
+            1.0
+        } else {
+            self.kept_channels as f64 / self.dense_channels as f64
+        }
+    }
+
+    /// Achieved weight-streaming bandwidth. bytes/ns == GB/s.
+    pub fn gb_per_s(&self) -> f64 {
+        if self.ns == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.ns as f64
+        }
+    }
+}
+
+/// Near-zero-cost sink for per-projection forward-path telemetry.
+pub trait ObsSink: Send + Sync {
+    /// Whether `record_proj` wants data; checked before any timing work.
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    #[allow(unused_variables)]
+    fn record_proj(
+        &self,
+        layer: LayerId,
+        kept: usize,
+        in_dim: usize,
+        resident_bytes: usize,
+        dur_ns: u64,
+    ) {
+    }
+
+    /// Accumulated per-(block, projection) rows; empty for non-recording sinks.
+    fn snapshot(&self) -> Vec<BlockStat> {
+        Vec::new()
+    }
+}
+
+/// The default sink: records nothing.
+pub struct NoopSink;
+
+impl ObsSink for NoopSink {}
+
+/// Recording sink: one atomic row per `LayerId::flat()` index.
+pub struct BlockObs {
+    calls: Vec<AtomicU64>,
+    kept: Vec<AtomicU64>,
+    dense: Vec<AtomicU64>,
+    ns: Vec<AtomicU64>,
+    bytes: Vec<AtomicU64>,
+}
+
+impl BlockObs {
+    pub fn new(n_blocks: usize) -> Self {
+        let n = n_blocks * LayerKind::ALL.len();
+        let zeros = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect();
+        Self {
+            calls: zeros(n),
+            kept: zeros(n),
+            dense: zeros(n),
+            ns: zeros(n),
+            bytes: zeros(n),
+        }
+    }
+
+    /// Zero every row. Lets a caller that must install the sink early (the
+    /// sink needs `&mut Model`, calibration only `&Model`) discard
+    /// calibration-forward traffic before the real workload starts.
+    pub fn reset(&self) {
+        for v in [&self.calls, &self.kept, &self.dense, &self.ns, &self.bytes] {
+            for a in v {
+                a.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl ObsSink for BlockObs {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record_proj(
+        &self,
+        layer: LayerId,
+        kept: usize,
+        in_dim: usize,
+        resident_bytes: usize,
+        dur_ns: u64,
+    ) {
+        let i = layer.flat();
+        if i >= self.calls.len() || in_dim == 0 {
+            return;
+        }
+        let touched = (resident_bytes as u128 * kept as u128 / in_dim as u128) as u64;
+        self.calls[i].fetch_add(1, Ordering::Relaxed);
+        self.kept[i].fetch_add(kept as u64, Ordering::Relaxed);
+        self.dense[i].fetch_add(in_dim as u64, Ordering::Relaxed);
+        self.ns[i].fetch_add(dur_ns, Ordering::Relaxed);
+        self.bytes[i].fetch_add(touched, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> Vec<BlockStat> {
+        (0..self.calls.len())
+            .map(|i| BlockStat {
+                id: LayerId::from_flat(i),
+                calls: self.calls[i].load(Ordering::Relaxed),
+                kept_channels: self.kept[i].load(Ordering::Relaxed),
+                dense_channels: self.dense[i].load(Ordering::Relaxed),
+                ns: self.ns[i].load(Ordering::Relaxed),
+                bytes: self.bytes[i].load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noop_is_disabled_and_empty() {
+        assert!(!NoopSink.enabled());
+        assert!(NoopSink.snapshot().is_empty());
+    }
+
+    #[test]
+    fn block_obs_accumulates_per_flat_row() {
+        let obs = BlockObs::new(2);
+        let id = LayerId::new(1, LayerKind::Up);
+        obs.record_proj(id, 64, 128, 1000, 500);
+        obs.record_proj(id, 32, 128, 1000, 300);
+        let rows = obs.snapshot();
+        assert_eq!(rows.len(), 14);
+        let row = rows.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(row.calls, 2);
+        assert_eq!(row.kept_channels, 96);
+        assert_eq!(row.dense_channels, 256);
+        assert_eq!(row.ns, 800);
+        // 1000*64/128 + 1000*32/128 = 500 + 250
+        assert_eq!(row.bytes, 750);
+        assert!((row.density() - 96.0 / 256.0).abs() < 1e-12);
+        assert!((row.gb_per_s() - 750.0 / 800.0).abs() < 1e-12);
+        // Untouched rows stay zeroed but present (one row per projection).
+        assert!(rows.iter().filter(|r| r.calls == 0).count() == 13);
+    }
+
+    #[test]
+    fn reset_zeroes_all_rows() {
+        let obs = BlockObs::new(1);
+        obs.record_proj(LayerId::new(0, LayerKind::Q), 4, 8, 100, 50);
+        obs.reset();
+        assert!(obs
+            .snapshot()
+            .iter()
+            .all(|r| r.calls == 0 && r.ns == 0 && r.bytes == 0 && r.dense_channels == 0));
+    }
+
+    #[test]
+    fn out_of_range_layer_ignored() {
+        let obs = BlockObs::new(1);
+        obs.record_proj(LayerId::new(5, LayerKind::Q), 1, 1, 1, 1);
+        assert!(obs.snapshot().iter().all(|r| r.calls == 0));
+    }
+}

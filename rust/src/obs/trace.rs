@@ -1,0 +1,329 @@
+//! In-process span tracer: a fixed-capacity ring of [`Span`] records with
+//! cheap RAII guards, plus a bounded worst-N exemplar table.
+//!
+//! Design constraints (enforced by `rust/tests/alloc_steady_state.rs`):
+//! recording a span in the decode hot path must not allocate. Spans carry
+//! `&'static str` names and a fixed-size attribute array; the ring is
+//! preallocated at construction and writers only take the per-slot lock of
+//! the slot they overwrite ("lock-free-ish": the head index is a single
+//! `fetch_add`, contention is spread over the whole ring).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Fixed attribute capacity per span (numeric key/value pairs).
+pub const MAX_ATTRS: usize = 3;
+
+/// Default global ring capacity: ~260 spans per 256-token generation means
+/// roughly the last ~125 requests stay reconstructable.
+pub const DEFAULT_CAPACITY: usize = 1 << 15;
+
+/// How many worst exemplars each slow table retains.
+pub const SLOW_KEEP: usize = 32;
+
+/// One timed event. `start_ns`/`dur_ns` are offsets from the tracer's epoch
+/// (process start, effectively), so spans from different threads share a
+/// timeline. `parent == 0` means "no parent".
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub trace_id: u64,
+    pub id: u64,
+    pub parent: u64,
+    pub name: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    n_attrs: u8,
+    attrs: [(&'static str, f64); MAX_ATTRS],
+}
+
+impl Span {
+    pub fn new(trace_id: u64, id: u64, parent: u64, name: &'static str) -> Self {
+        Self {
+            trace_id,
+            id,
+            parent,
+            name,
+            start_ns: 0,
+            dur_ns: 0,
+            n_attrs: 0,
+            attrs: [("", 0.0); MAX_ATTRS],
+        }
+    }
+
+    /// Attach a numeric attribute; silently dropped past [`MAX_ATTRS`].
+    pub fn push_attr(&mut self, key: &'static str, value: f64) {
+        if (self.n_attrs as usize) < MAX_ATTRS {
+            self.attrs[self.n_attrs as usize] = (key, value);
+            self.n_attrs += 1;
+        }
+    }
+
+    pub fn attrs(&self) -> &[(&'static str, f64)] {
+        &self.attrs[..self.n_attrs as usize]
+    }
+}
+
+/// Per-trace rollup kept by the slow-exemplar tables.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    pub trace_id: u64,
+    pub total_ms: f64,
+    pub decode_gap_max_ms: f64,
+}
+
+pub struct Tracer {
+    epoch: Instant,
+    head: AtomicU64,
+    next_span: AtomicU64,
+    next_trace: AtomicU64,
+    slots: Vec<Mutex<Option<Span>>>,
+    slow_total: Mutex<Vec<TraceSummary>>,
+    slow_gap: Mutex<Vec<TraceSummary>>,
+}
+
+impl Tracer {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            epoch: Instant::now(),
+            head: AtomicU64::new(0),
+            next_span: AtomicU64::new(1),
+            next_trace: AtomicU64::new(1),
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+            slow_total: Mutex::new(Vec::new()),
+            slow_gap: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever recorded (monotonic, exceeds capacity once wrapped).
+    pub fn written(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Nanoseconds since the tracer's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Epoch offset of an `Instant`; clamps to 0 for pre-epoch instants.
+    pub fn ns_of(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+    }
+
+    /// Allocate a span id (never 0).
+    pub fn next_span_id(&self) -> u64 {
+        self.next_span.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Allocate a trace id (never 0); distinct from request ids so that
+    /// several coordinators in one process cannot collide.
+    pub fn next_trace_id(&self) -> u64 {
+        self.next_trace.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Write a fully-formed span into the ring (wraps, overwriting oldest).
+    pub fn record(&self, span: Span) {
+        let i = (self.head.fetch_add(1, Ordering::Relaxed) % self.slots.len() as u64) as usize;
+        // A poisoned slot only means a writer panicked mid-copy; the slot
+        // content is a plain Copy value, safe to overwrite.
+        let mut slot = match self.slots[i].lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        *slot = Some(span);
+    }
+
+    /// Record a completed interval measured by the caller. Returns the new
+    /// span's id so children recorded after the fact can parent onto it.
+    pub fn record_at(
+        &self,
+        trace_id: u64,
+        parent: u64,
+        name: &'static str,
+        start: Instant,
+        dur_ns: u64,
+        attrs: &[(&'static str, f64)],
+    ) -> u64 {
+        let id = self.next_span_id();
+        let mut s = Span::new(trace_id, id, parent, name);
+        s.start_ns = self.ns_of(start);
+        s.dur_ns = dur_ns;
+        for &(k, v) in attrs {
+            s.push_attr(k, v);
+        }
+        self.record(s);
+        id
+    }
+
+    /// Start an RAII-timed span; recorded on drop.
+    pub fn start(&self, trace_id: u64, parent: u64, name: &'static str) -> SpanGuard<'_> {
+        SpanGuard {
+            tracer: self,
+            span: Span::new(trace_id, self.next_span_id(), parent, name),
+            started: Instant::now(),
+        }
+    }
+
+    /// Roll a finished trace into the slow-exemplar tables.
+    pub fn note_trace(&self, summary: TraceSummary) {
+        fn push(
+            table: &Mutex<Vec<TraceSummary>>,
+            s: TraceSummary,
+            key: impl Fn(&TraceSummary) -> f64,
+        ) {
+            let mut t = match table.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            t.push(s);
+            t.sort_by(|a, b| key(b).partial_cmp(&key(a)).unwrap_or(std::cmp::Ordering::Equal));
+            t.truncate(SLOW_KEEP);
+        }
+        push(&self.slow_total, summary, |s| s.total_ms);
+        push(&self.slow_gap, summary, |s| s.decode_gap_max_ms);
+    }
+
+    /// Worst exemplars: (by total latency, by max decode gap), worst first.
+    pub fn slow(&self) -> (Vec<TraceSummary>, Vec<TraceSummary>) {
+        let total = match self.slow_total.lock() {
+            Ok(g) => g.clone(),
+            Err(p) => p.into_inner().clone(),
+        };
+        let gap = match self.slow_gap.lock() {
+            Ok(g) => g.clone(),
+            Err(p) => p.into_inner().clone(),
+        };
+        (total, gap)
+    }
+
+    /// All retained spans of one trace, in start order.
+    pub fn trace(&self, trace_id: u64) -> Vec<Span> {
+        let mut out: Vec<Span> = self
+            .slots
+            .iter()
+            .filter_map(|s| {
+                let g = match s.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                g.filter(|sp| sp.trace_id == trace_id)
+            })
+            .collect();
+        out.sort_by_key(|s| (s.start_ns, s.id));
+        out
+    }
+}
+
+/// RAII span: times from construction to drop, then records.
+pub struct SpanGuard<'a> {
+    tracer: &'a Tracer,
+    span: Span,
+    started: Instant,
+}
+
+impl SpanGuard<'_> {
+    /// This span's id, for parenting children onto it.
+    pub fn id(&self) -> u64 {
+        self.span.id
+    }
+
+    pub fn attr(&mut self, key: &'static str, value: f64) {
+        self.span.push_attr(key, value);
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        self.span.start_ns = self.tracer.ns_of(self.started);
+        self.span.dur_ns = self.started.elapsed().as_nanos() as u64;
+        self.tracer.record(self.span);
+    }
+}
+
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-wide tracer used by the serving path. First call fixes the
+/// epoch; the coordinator touches it at construction so request arrival
+/// times never predate it.
+pub fn tracer() -> &'static Tracer {
+    GLOBAL.get_or_init(|| Tracer::with_capacity(DEFAULT_CAPACITY))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_records_on_drop() {
+        let t = Tracer::with_capacity(8);
+        {
+            let mut g = t.start(7, 0, "work");
+            g.attr("tokens", 3.0);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let spans = t.trace(7);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "work");
+        assert!(spans[0].dur_ns >= 1_000_000, "dur {}", spans[0].dur_ns);
+        assert_eq!(spans[0].attrs(), &[("tokens", 3.0)]);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest() {
+        let t = Tracer::with_capacity(4);
+        for i in 0..10u64 {
+            let mut s = Span::new(1, t.next_span_id(), 0, "e");
+            s.start_ns = i;
+            t.record(s);
+        }
+        let spans = t.trace(1);
+        assert_eq!(spans.len(), 4);
+        // Only the last 4 writes survive.
+        assert_eq!(spans[0].start_ns, 6);
+        assert_eq!(spans[3].start_ns, 9);
+        assert_eq!(t.written(), 10);
+    }
+
+    #[test]
+    fn attr_overflow_dropped_not_panicking() {
+        let mut s = Span::new(1, 1, 0, "x");
+        for i in 0..(MAX_ATTRS + 2) {
+            s.push_attr("k", i as f64);
+        }
+        assert_eq!(s.attrs().len(), MAX_ATTRS);
+    }
+
+    #[test]
+    fn slow_tables_rank_independently() {
+        let t = Tracer::with_capacity(4);
+        for i in 0..40u64 {
+            t.note_trace(TraceSummary {
+                trace_id: i,
+                total_ms: i as f64,
+                decode_gap_max_ms: (40 - i) as f64,
+            });
+        }
+        let (by_total, by_gap) = t.slow();
+        assert_eq!(by_total.len(), SLOW_KEEP);
+        assert_eq!(by_total[0].trace_id, 39);
+        assert_eq!(by_gap[0].trace_id, 0);
+        assert!(by_total.windows(2).all(|w| w[0].total_ms >= w[1].total_ms));
+        assert!(by_gap
+            .windows(2)
+            .all(|w| w[0].decode_gap_max_ms >= w[1].decode_gap_max_ms));
+    }
+
+    #[test]
+    fn ids_start_nonzero() {
+        let t = Tracer::with_capacity(1);
+        assert!(t.next_span_id() >= 1);
+        assert!(t.next_trace_id() >= 1);
+    }
+}

@@ -39,6 +39,7 @@
 
 use crate::data::corpus::detokenize;
 use crate::model::sampler::Sampling;
+use crate::obs::{tracer, PromText, Span, TraceSummary};
 use crate::server::batcher::{Batcher, BatcherCfg};
 use crate::server::engine::{Engine, FinishReason, PrefillStep, SeqState, SpecEngine};
 use crate::server::faults::FaultPoint;
@@ -135,6 +136,10 @@ impl Coordinator {
         spec: Option<Arc<SpecEngine>>,
         cfg: CoordinatorCfg,
     ) -> Arc<Self> {
+        // Pin the global tracer's epoch no later than construction, so no
+        // request arrival instant can predate it (and the lazy init never
+        // lands inside the allocation-counted decode steady state).
+        tracer();
         Arc::new(Self {
             engine,
             spec,
@@ -207,6 +212,9 @@ impl Coordinator {
     ) -> anyhow::Result<(u64, Receiver<GenResponse>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.id = id;
+        let t = tracer();
+        req.trace_id = t.next_trace_id();
+        req.root_span = t.next_span_id();
         if req.deadline.is_none() {
             req.deadline = self.cfg.default_deadline;
         }
@@ -226,6 +234,9 @@ impl Coordinator {
     ) -> anyhow::Result<(u64, Receiver<StreamEvent>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.id = id;
+        let t = tracer();
+        req.trace_id = t.next_trace_id();
+        req.root_span = t.next_span_id();
         req.stream = true;
         if req.deadline.is_none() {
             req.deadline = self.cfg.default_deadline;
@@ -402,6 +413,14 @@ impl Coordinator {
         // rejections while holding state), so take the queue depth first.
         let depth = lock_ok(&self.state).batcher.queue_len() as u64;
         let mut m = lock_ok(&self.metrics);
+        self.refresh_gauges(&mut m, depth);
+        m.to_json()
+    }
+
+    /// Refresh the report-time gauges (paged-KV pool occupancy, prefix
+    /// hit/miss, queue depth, weight representation) on a held metrics
+    /// guard, shared by the JSON and Prometheus views.
+    fn refresh_gauges(&self, m: &mut Metrics, depth: u64) {
         m.queue_depth = depth;
         if let Some(mgr) = self.engine.kv.as_ref() {
             m.blocks_total = mgr.blocks_total() as u64;
@@ -414,7 +433,64 @@ impl Coordinator {
         m.weight_repr = model.weight_repr_name().to_string();
         m.weight_bytes_resident = model.weight_bytes_resident() as u64;
         m.weight_bytes_dense = model.weight_bytes_dense() as u64;
-        m.to_json()
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of the same state
+    /// `metrics_json` reports, plus per-(block, projection) sparsity
+    /// telemetry when the model carries a recording [`crate::obs::ObsSink`].
+    pub fn metrics_prometheus(&self) -> String {
+        let depth = lock_ok(&self.state).batcher.queue_len() as u64;
+        let mut p = PromText::new();
+        {
+            let mut m = lock_ok(&self.metrics);
+            self.refresh_gauges(&mut m, depth);
+            m.render_prometheus(&mut p);
+        }
+        self.render_block_telemetry(&mut p);
+        p.finish()
+    }
+
+    /// Per-(block, projection) achieved density, call counts, effective
+    /// weight bandwidth and tau-vs-plan drift. Empty (no families emitted)
+    /// when the model runs the no-op sink.
+    fn render_block_telemetry(&self, p: &mut PromText) {
+        let obs = &self.engine.model.obs;
+        if !obs.enabled() {
+            return;
+        }
+        for st in obs.snapshot() {
+            if st.calls == 0 {
+                continue;
+            }
+            let block = st.id.block.to_string();
+            let labels = [("block", block.as_str()), ("proj", st.id.kind.name())];
+            p.counter(
+                "wisparse_block_proj_calls_total",
+                "Projection invocations per (block, projection).",
+                &labels,
+                st.calls as f64,
+            );
+            p.gauge(
+                "wisparse_block_density",
+                "Achieved keep-fraction per (block, projection).",
+                &labels,
+                st.density(),
+            );
+            p.gauge(
+                "wisparse_block_gb_per_s",
+                "Effective weight-streaming bandwidth per (block, projection).",
+                &labels,
+                st.gb_per_s(),
+            );
+            if let Some(planned) = self.engine.sparsifier.planned_density(st.id) {
+                p.gauge(
+                    "wisparse_block_plan_drift",
+                    "Achieved minus planned density per (block, projection).",
+                    &labels,
+                    st.density() - planned,
+                );
+            }
+        }
     }
 
     /// Deliver a terminal no-output response for a request that never
@@ -426,6 +502,7 @@ impl Coordinator {
             let mut st = lock_ok(&self.state);
             (st.waiters.remove(&id), st.streams.remove(&id))
         };
+        lock_ok(&self.metrics).count_finish(reason);
         let resp = GenResponse::terminal(id, reason);
         if let Some(stx) = stx {
             let _ = stx.send(StreamEvent::Done(resp.clone()));
@@ -493,8 +570,12 @@ impl Coordinator {
             let streams: Vec<(u64, Sender<StreamEvent>)> = st.streams.drain().collect();
             (waiters, streams, shed)
         };
-        if shed > 0 {
-            lock_ok(&self.metrics).shed_total += shed;
+        {
+            let mut m = lock_ok(&self.metrics);
+            m.shed_total += shed;
+            for _ in 0..(waiters.len() + streams.len()) {
+                m.count_finish("shutdown");
+            }
         }
         for (id, tx) in waiters {
             let _ = tx.send(GenResponse::terminal(id, "shutdown"));
@@ -590,10 +671,15 @@ impl Coordinator {
                     // Drain complete: record how long it took and exit the
                     // scheduler (the supervisor's exit sweep closes any
                     // straggler channels).
-                    let ms = lock_ok(&self.drain_started)
+                    let started_at = *lock_ok(&self.drain_started);
+                    let ms = started_at
                         .map(|t| t.elapsed().as_secs_f64() * 1e3)
                         .unwrap_or(0.0);
                     lock_ok(&self.metrics).drain_duration_ms = ms;
+                    if let Some(t0) = started_at {
+                        // Server-lifecycle event: trace 0 (no request).
+                        tracer().record_at(0, 0, "drain", t0, (ms * 1e6) as u64, &[]);
+                    }
                     return;
                 }
                 let overdue = lock_ok(&self.drain_started)
@@ -660,11 +746,16 @@ impl Coordinator {
                 adm
             };
             for req in admitted {
-                let queue_ms = req.arrived.elapsed().as_secs_f64() * 1e3;
+                let waited = req.arrived.elapsed();
+                let queue_ms = waited.as_secs_f64() * 1e3;
                 let mut seq =
                     self.engine
                         .admit(req.id, &req.prompt, req.max_new, req.sampling);
                 seq.resumed = req.preempted;
+                // Engine-level spans (prefill chunks, decode steps) parent
+                // onto this request's reserved root span.
+                seq.obs.trace = req.trace_id;
+                seq.obs.root = req.root_span;
                 if let (Some(spec), true) = (&self.spec, req.speculative) {
                     spec.init_seq(&mut seq);
                 }
@@ -675,7 +766,15 @@ impl Coordinator {
                     // A resumed request's wait includes its first run's
                     // decode time — sampling it again would both double-
                     // count the request and pollute queue_ms with run time.
-                    lock_ok(&self.metrics).queue_ms.add(queue_ms);
+                    lock_ok(&self.metrics).observe_queue(queue_ms);
+                    tracer().record_at(
+                        req.trace_id,
+                        req.root_span,
+                        "queue",
+                        req.arrived,
+                        waited.as_nanos() as u64,
+                        &[],
+                    );
                 }
                 active.push((req, seq, Instant::now()));
             }
@@ -801,11 +900,12 @@ impl Coordinator {
                 let now = Instant::now();
                 let step_ms = (now - t0).as_secs_f64() * 1e3;
                 let mut m = lock_ok(&self.metrics);
-                m.per_token_ms.add(step_ms / committed.max(1) as f64);
+                m.observe_per_token(step_ms / committed.max(1) as f64);
+                m.record_decoded(committed as u64);
                 if let Some(prev) = last_decode {
                     // Completion-to-completion: the stall a decoding client
                     // actually observes, interleaved prefill included.
-                    m.decode_gap_ms.add((now - prev).as_secs_f64() * 1e3);
+                    m.observe_decode_gap((now - prev).as_secs_f64() * 1e3);
                 }
                 last_decode = Some(now);
             } else {
@@ -860,12 +960,33 @@ impl Coordinator {
                         density: seq.stats.density(),
                         finish_reason: seq.finish_reason().as_str().to_string(),
                         prefix_hit_tokens: seq.prefix_hit_tokens,
+                        trace_id: req.trace_id,
                     };
+                    // Close the trace: the root span (its reserved id is
+                    // what every child already parents onto) plus the
+                    // slow-exemplar rollup.
+                    {
+                        let t = tracer();
+                        let gap_ms = seq.obs.max_gap_ns as f64 / 1e6;
+                        let mut root = Span::new(req.trace_id, req.root_span, 0, "request");
+                        root.start_ns = t.ns_of(req.arrived);
+                        root.dur_ns = (total_ms * 1e6) as u64;
+                        root.push_attr("total_ms", total_ms);
+                        root.push_attr("gap_max_ms", gap_ms);
+                        root.push_attr("generated", seq.generated.len() as f64);
+                        t.record(root);
+                        t.note_trace(TraceSummary {
+                            trace_id: req.trace_id,
+                            total_ms,
+                            decode_gap_max_ms: gap_ms,
+                        });
+                    }
                     {
                         let mut m = lock_ok(&self.metrics);
                         m.requests_total += 1;
                         m.tokens_generated += seq.generated.len() as u64;
-                        m.total_ms.add(total_ms);
+                        m.observe_total(total_ms);
+                        m.count_finish(seq.finish_reason().as_str());
                         m.macs_kept += seq.stats.macs_kept + seq.stats.macs_extra;
                         m.macs_dense += seq.stats.macs_dense;
                         m.spec_rounds_total += seq.spec.rounds;
@@ -974,6 +1095,16 @@ impl Coordinator {
         let (mut req, seq, _) = active.swap_remove(victim);
         drop(seq); // releases the page table's block refs
         req.preempted = true;
+        // Zero-duration event span: the victim's timeline shows when its
+        // first run ended and KV went back to the pool.
+        tracer().record_at(
+            req.trace_id,
+            req.root_span,
+            "kv_preempt",
+            Instant::now(),
+            0,
+            &[],
+        );
         lock_ok(&self.state).batcher.requeue_front(req);
         lock_ok(&self.metrics).preemptions_total += 1;
         true

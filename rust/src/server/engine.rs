@@ -19,6 +19,7 @@ use crate::kv::{KvCfg, KvManager, KvSeq, PagedSeq};
 use crate::model::kv_cache::KvCache;
 use crate::model::sampler::{residual_sample, sample_from, spec_accept, Sampling};
 use crate::model::transformer::{ChunkLogits, ForwardStats, Model, Scratch};
+use crate::obs::tracer;
 use crate::server::faults::{FaultPoint, Faults};
 use crate::sparsity::{Dense, Sparsifier};
 use crate::tensor::ops::argmax;
@@ -184,6 +185,24 @@ pub enum PrefillStep {
     PoolDry,
 }
 
+/// Per-sequence tracing context. Engine spans (prefill chunks, decode
+/// steps, speculative rounds, KV events) record under `trace`/`root`; the
+/// serving coordinator overwrites both at admission with the request's
+/// globally-unique trace id and pre-allocated root span, so standalone
+/// engine use just produces locally-scoped traces keyed by the sequence id.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SeqObs {
+    /// Trace id all of this sequence's spans carry.
+    pub trace: u64,
+    /// Parent span id for engine spans (0 = no parent).
+    pub root: u64,
+    /// Tracer-epoch timestamp of the previous step's end (gap tracking).
+    prev_step_end_ns: u64,
+    /// Largest observed between-step gap — the per-request decode-gap
+    /// exemplar metric.
+    pub max_gap_ns: u64,
+}
+
 /// One in-flight sequence.
 pub struct SeqState {
     pub id: u64,
@@ -205,6 +224,8 @@ pub struct SeqState {
     pub resumed: bool,
     /// Speculative-decoding state (inert unless a [`SpecEngine`] armed it).
     pub spec: SpecState,
+    /// Tracing context (trace id, root span, decode-gap tracking).
+    pub obs: SeqObs,
     finish_override: Option<FinishReason>,
 }
 
@@ -247,6 +268,19 @@ impl SeqState {
 
     pub fn text(&self) -> String {
         detokenize(&self.generated)
+    }
+
+    /// Update decode-gap tracking around a step spanning
+    /// `[start_ns, end_ns]` (tracer-epoch offsets): the gap is the idle
+    /// time between the previous step's end and this step's start.
+    fn note_step_gap(&mut self, start_ns: u64, end_ns: u64) {
+        if self.obs.prev_step_end_ns > 0 && start_ns > self.obs.prev_step_end_ns {
+            let gap = start_ns - self.obs.prev_step_end_ns;
+            if gap > self.obs.max_gap_ns {
+                self.obs.max_gap_ns = gap;
+            }
+        }
+        self.obs.prev_step_end_ns = end_ns;
     }
 }
 
@@ -338,6 +372,10 @@ impl Engine {
             prefix_hit_tokens: 0,
             resumed: false,
             spec: SpecState::default(),
+            obs: SeqObs {
+                trace: id,
+                ..SeqObs::default()
+            },
             finish_override: None,
         }
     }
@@ -358,6 +396,10 @@ impl Engine {
             let hit = mgr.adopt_cached_prefix(p, &seq.prompt_tokens, self.schedule_tag(n));
             seq.prefix_hit_tokens = hit;
             seq.prefill.cursor = hit;
+            if hit > 0 {
+                let mut span = tracer().start(seq.obs.trace, seq.obs.root, "kv_prefix_hit");
+                span.attr("tokens", hit as f64);
+            }
         }
     }
 
@@ -473,10 +515,12 @@ impl Engine {
     pub fn prefill_chunk(&self, seq: &mut SeqState, budget: usize) -> PrefillStep {
         assert!(!seq.prefilled, "prefill_chunk on a prefilled sequence");
         debug_assert!(seq.finish_override.is_none());
+        let mut span = tracer().start(seq.obs.trace, seq.obs.root, "prefill_chunk");
         self.faults.maybe_panic(FaultPoint::PrefillPanic);
         self.adopt_cached_prefix(seq);
         let n = seq.prompt_tokens.len();
         let cur = seq.prefill.cursor;
+        span.attr("cursor", cur as f64);
         debug_assert_eq!(cur, seq.kv.seq_len());
         if cur >= n {
             // Empty prompt (nothing to forward): complete immediately, as
@@ -487,9 +531,11 @@ impl Engine {
         let want = budget.max(1).min(n - cur);
         let got = self.reserve_ahead(seq, want);
         if got == 0 {
+            span.attr("pool_dry", 1.0);
             return PrefillStep::PoolDry;
         }
         let m = want.min(got);
+        span.attr("tokens", m as f64);
         let last = cur + m == n;
         self.model.forward_chunk_mixed(
             &seq.prompt_tokens[cur..cur + m],
@@ -570,10 +616,17 @@ impl Engine {
     /// one remaining allocation source on very large models.)
     pub fn decode_one(&self, seq: &mut SeqState) {
         debug_assert!(seq.prefilled && !seq.finished());
+        // Span + gap tracking are allocation-free (preallocated ring, fixed
+        // attrs): the steady-state zero-alloc invariant still holds.
+        let t = tracer();
+        let step_start_ns = t.now_ns();
+        let mut span = t.start(seq.obs.trace, seq.obs.root, "decode_step");
+        span.attr("pos", seq.kv.seq_len() as f64);
         self.faults.maybe_panic(FaultPoint::DecodePanic);
         let next = seq.sampling.sample(&seq.last_logits, &mut seq.rng);
         seq.generated.push(next);
         if seq.finished() {
+            seq.note_step_gap(step_start_ns, t.now_ns());
             return;
         }
         if !self.reserve_seq(seq) {
@@ -581,6 +634,8 @@ impl Engine {
             // panic. The coordinator avoids this by preempting before the
             // step; standalone engine users see a `cache_full` finish.
             seq.finish_override = Some(FinishReason::CacheFull);
+            span.attr("cache_full", 1.0);
+            seq.note_step_gap(step_start_ns, t.now_ns());
             return;
         }
         self.model.forward_token(
@@ -591,6 +646,7 @@ impl Engine {
             &mut seq.stats,
             &mut seq.last_logits,
         );
+        seq.note_step_gap(step_start_ns, t.now_ns());
     }
 
     /// One decode step across a batch of sequences, parallel over
@@ -753,6 +809,9 @@ impl SpecEngine {
     /// position), so rounds and plain decode steps interleave freely.
     pub fn spec_round(&self, seq: &mut SeqState) {
         debug_assert!(seq.prefilled && !seq.finished());
+        let t = tracer();
+        let round_start_ns = t.now_ns();
+        let mut round = t.start(seq.obs.trace, seq.obs.root, "spec_round");
         self.verify.faults.maybe_panic(FaultPoint::DecodePanic);
         let model = &self.verify.model;
         let vocab = model.cfg.vocab_size;
@@ -763,6 +822,7 @@ impl SpecEngine {
         let d1 = seq.sampling.sample(&seq.last_logits, &mut seq.rng);
         seq.generated.push(d1);
         if seq.finished() {
+            seq.note_step_gap(round_start_ns, t.now_ns());
             return; // hit max_new: token committed unforwarded, like decode_one
         }
 
@@ -774,6 +834,8 @@ impl SpecEngine {
         let have = self.verify.reserve_ahead(seq, want);
         if have == 0 {
             seq.finish_override = Some(FinishReason::CacheFull);
+            round.attr("cache_full", 1.0);
+            seq.note_step_gap(round_start_ns, t.now_ns());
             return;
         }
         let m = want.min(have);
@@ -794,40 +856,48 @@ impl SpecEngine {
         qall.clear();
 
         // --- draft: m-1 sequential steps at draft sparsity ---
-        for i in 1..m {
-            let prev = chain[i - 1];
-            model.forward_token(
-                prev,
-                seq.kv.as_dyn(),
-                self.draft.as_ref(),
-                &mut seq.scratch,
-                &mut seq.stats,
-                &mut qstep,
-            );
-            let next = if greedy {
-                argmax(&qstep)
-            } else {
-                seq.sampling.probs_into(&qstep, &mut pbuf);
-                let d = sample_from(&pbuf, &mut seq.rng);
-                qall.extend_from_slice(&pbuf);
-                d
-            };
-            chain.push(next);
+        {
+            let mut draft_span = t.start(seq.obs.trace, round.id(), "spec_draft");
+            draft_span.attr("tokens", (m - 1) as f64);
+            for i in 1..m {
+                let prev = chain[i - 1];
+                model.forward_token(
+                    prev,
+                    seq.kv.as_dyn(),
+                    self.draft.as_ref(),
+                    &mut seq.scratch,
+                    &mut seq.stats,
+                    &mut qstep,
+                );
+                let next = if greedy {
+                    argmax(&qstep)
+                } else {
+                    seq.sampling.probs_into(&qstep, &mut pbuf);
+                    let d = sample_from(&pbuf, &mut seq.rng);
+                    qall.extend_from_slice(&pbuf);
+                    d
+                };
+                chain.push(next);
+            }
         }
         seq.spec.drafted += (m - 1) as u64;
 
         // --- verify: rewind the draft KV (blocks retained — the chunk
         // rewrites the same positions) and re-score the chain in one
         // layer-major production pass ---
-        seq.kv.as_dyn().rewind(l0);
-        model.forward_chunk(
-            &chain[..m],
-            seq.kv.as_dyn(),
-            self.verify.sparsifier.as_ref(),
-            &mut seq.scratch,
-            &mut seq.stats,
-            &mut vlog,
-        );
+        {
+            let mut verify_span = t.start(seq.obs.trace, round.id(), "spec_verify");
+            verify_span.attr("tokens", m as f64);
+            seq.kv.as_dyn().rewind(l0);
+            model.forward_chunk(
+                &chain[..m],
+                seq.kv.as_dyn(),
+                self.verify.sparsifier.as_ref(),
+                &mut seq.scratch,
+                &mut seq.stats,
+                &mut vlog,
+            );
+        }
 
         // --- accept the longest matching prefix ---
         let mut a = 1usize; // chain[0] came from production logits: committed
@@ -898,6 +968,9 @@ impl SpecEngine {
                 a.clamp(self.cfg.min_k, self.cfg.max_k)
             };
         }
+        round.attr("drafted", (m - 1) as f64);
+        round.attr("accepted", (a - 1) as f64);
+        seq.note_step_gap(round_start_ns, t.now_ns());
     }
 
     /// One scheduling step over sequence slots: armed sequences run a full

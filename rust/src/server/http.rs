@@ -5,8 +5,13 @@
 //!   GET  /readyz            -> 200 while accepting work, 503 once
 //!                              draining or shut down (readiness)
 //!   GET  /metrics           -> serving metrics JSON
+//!   GET  /metrics?format=prometheus -> text exposition format 0.0.4
+//!   GET  /debug/traces?id=N -> span timeline of one request's trace
+//!   GET  /debug/traces/slow -> worst-N trace exemplars (by total latency
+//!                              and by max decode gap)
 //!   POST /generate          -> {"prompt", "max_new"?, "temperature"?,
 //!                               "speculative"?, "stream"?, "deadline_ms"?}
+//!                              (response echoes its "trace_id")
 //!   POST /admin/drain       -> begin graceful drain, 202
 //!
 //! `/generate` maps terminal no-output responses onto statuses: a request
@@ -22,6 +27,7 @@
 //! (`Connection: close`), which keeps the parser honest and is plenty for a
 //! reproduction-scale router.
 
+use crate::obs::{tracer, Span, TraceSummary};
 use crate::server::coordinator::Coordinator;
 use crate::server::faults::FaultPoint;
 use crate::server::request::{GenRequest, GenResponse, StreamEvent};
@@ -163,9 +169,15 @@ pub fn parse_request<R: BufRead>(reader: &mut R) -> Result<HttpRequest, ParseErr
 /// Serialize an HTTP response. Every 503 carries `Retry-After` so shed
 /// clients back off instead of hammering a draining or saturated server.
 pub fn response(status: u16, reason: &str, body: &str) -> String {
+    response_typed(status, reason, "application/json", body)
+}
+
+/// [`response`] with an explicit content type (the Prometheus exposition
+/// is text, not JSON).
+pub fn response_typed(status: u16, reason: &str, content_type: &str, body: &str) -> String {
     let retry = if status == 503 { "Retry-After: 1\r\n" } else { "" };
     format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n{body}",
         body.len()
     )
 }
@@ -186,36 +198,134 @@ fn generate_status(resp: &GenResponse) -> (u16, &'static str) {
     }
 }
 
-/// Route one request against the coordinator.
-pub fn route(coord: &Arc<Coordinator>, req: &HttpRequest) -> (u16, &'static str, String) {
-    match (req.method.as_str(), req.path.as_str()) {
+/// The Prometheus text exposition content type.
+const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Fetch one key from a `k=v&k2=v2` query string.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+fn span_json(s: &Span) -> Json {
+    let mut fields = vec![
+        ("id", Json::Num(s.id as f64)),
+        ("parent", Json::Num(s.parent as f64)),
+        ("name", Json::Str(s.name.to_string())),
+        ("start_ms", Json::Num(s.start_ns as f64 / 1e6)),
+        ("dur_ms", Json::Num(s.dur_ns as f64 / 1e6)),
+    ];
+    if !s.attrs().is_empty() {
+        fields.push((
+            "attrs",
+            Json::obj(
+                s.attrs()
+                    .iter()
+                    .map(|(k, v)| (*k, Json::Num(*v)))
+                    .collect(),
+            ),
+        ));
+    }
+    Json::obj(fields)
+}
+
+/// One trace's span timeline (`GET /debug/traces?id=N`). Start offsets are
+/// milliseconds since the tracer epoch, shared across threads, so nested
+/// spans can be laid out on one timeline.
+fn trace_json(trace_id: u64) -> Json {
+    let spans: Vec<Json> = tracer().trace(trace_id).iter().map(span_json).collect();
+    Json::obj(vec![
+        ("trace_id", Json::Num(trace_id as f64)),
+        ("n_spans", Json::Num(spans.len() as f64)),
+        ("spans", Json::Arr(spans)),
+    ])
+}
+
+/// Worst-N exemplars (`GET /debug/traces/slow`): the same requests ranked
+/// by total latency and by worst decode gap — the two ways a request is
+/// slow (took long overall vs. stalled mid-decode).
+fn slow_traces_json() -> Json {
+    fn row(s: &TraceSummary) -> Json {
+        Json::obj(vec![
+            ("trace_id", Json::Num(s.trace_id as f64)),
+            ("total_ms", Json::Num(s.total_ms)),
+            ("decode_gap_max_ms", Json::Num(s.decode_gap_max_ms)),
+        ])
+    }
+    let (by_total, by_gap) = tracer().slow();
+    Json::obj(vec![
+        ("by_total_ms", Json::Arr(by_total.iter().map(row).collect())),
+        (
+            "by_decode_gap_ms",
+            Json::Arr(by_gap.iter().map(row).collect()),
+        ),
+    ])
+}
+
+/// Route one request against the coordinator. Returns
+/// `(status, reason, content_type, body)`.
+pub fn route(
+    coord: &Arc<Coordinator>,
+    req: &HttpRequest,
+) -> (u16, &'static str, &'static str, String) {
+    const JSON: &str = "application/json";
+    let (path, query) = req
+        .path
+        .split_once('?')
+        .map(|(p, q)| (p, q))
+        .unwrap_or((req.path.as_str(), ""));
+    match (req.method.as_str(), path) {
         ("GET", "/health") | ("GET", "/healthz") => {
-            (200, "OK", r#"{"status":"ok"}"#.to_string())
+            (200, "OK", JSON, r#"{"status":"ok"}"#.to_string())
         }
         ("GET", "/readyz") => {
             if coord.is_draining() || coord.is_shutdown() {
                 (
                     503,
                     "Service Unavailable",
+                    JSON,
                     r#"{"status":"draining"}"#.to_string(),
                 )
             } else {
-                (200, "OK", r#"{"status":"ready"}"#.to_string())
+                (200, "OK", JSON, r#"{"status":"ready"}"#.to_string())
             }
         }
         ("POST", "/admin/drain") => {
             coord.drain();
-            (202, "Accepted", r#"{"status":"draining"}"#.to_string())
+            (202, "Accepted", JSON, r#"{"status":"draining"}"#.to_string())
         }
-        ("GET", "/metrics") => (200, "OK", coord.metrics_json().to_string_pretty()),
+        ("GET", "/metrics") => {
+            if query_param(query, "format") == Some("prometheus") {
+                (200, "OK", PROM_CONTENT_TYPE, coord.metrics_prometheus())
+            } else {
+                (200, "OK", JSON, coord.metrics_json().to_string_pretty())
+            }
+        }
+        ("GET", "/debug/traces/slow") => {
+            (200, "OK", JSON, slow_traces_json().to_string_pretty())
+        }
+        ("GET", "/debug/traces") => match query_param(query, "id").and_then(|v| v.parse().ok()) {
+            Some(id) => (200, "OK", JSON, trace_json(id).to_string_pretty()),
+            None => (
+                400,
+                "Bad Request",
+                JSON,
+                r#"{"error":"missing or bad ?id=<trace_id>"}"#.to_string(),
+            ),
+        },
         ("POST", "/generate") => {
+            let t_parse = Instant::now();
             let parsed = Json::parse(&req.body)
                 .map_err(|e| e.to_string())
                 .and_then(|j| GenRequest::from_json(0, &j).map_err(|e| e.to_string()));
+            let parse_ns = t_parse.elapsed().as_nanos() as u64;
             match parsed {
                 Err(e) => (
                     400,
                     "Bad Request",
+                    JSON,
                     Json::obj(vec![("error", Json::Str(e))]).to_string_compact(),
                 ),
                 // The parsed request is handed over whole so per-request
@@ -223,12 +333,24 @@ pub fn route(coord: &Arc<Coordinator>, req: &HttpRequest) -> (u16, &'static str,
                 // assigns the id and the default deadline.
                 Ok(r) => match coord.submit_request_blocking(r) {
                     Ok(resp) => {
+                        // The trace id only exists after submission, so the
+                        // body-parse interval is attached post-hoc (top-
+                        // level: it predates the root request span).
+                        tracer().record_at(
+                            resp.trace_id,
+                            0,
+                            "http_parse",
+                            t_parse,
+                            parse_ns,
+                            &[],
+                        );
                         let (status, reason) = generate_status(&resp);
-                        (status, reason, resp.to_json().to_string_pretty())
+                        (status, reason, JSON, resp.to_json().to_string_pretty())
                     }
                     Err(e) => (
                         503,
                         "Service Unavailable",
+                        JSON,
                         Json::obj(vec![("error", Json::Str(e.to_string()))])
                             .to_string_compact(),
                     ),
@@ -238,6 +360,7 @@ pub fn route(coord: &Arc<Coordinator>, req: &HttpRequest) -> (u16, &'static str,
         _ => (
             404,
             "Not Found",
+            JSON,
             r#"{"error":"not found"}"#.to_string(),
         ),
     }
@@ -361,8 +484,9 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
                     }
                 }
             }
-            let (status, reason, body) = route(&coord, &req);
-            let _ = stream.write_all(response(status, reason, &body).as_bytes());
+            let (status, reason, content_type, body) = route(&coord, &req);
+            let _ =
+                stream.write_all(response_typed(status, reason, content_type, &body).as_bytes());
             crate::debug!("{:?} {} {} -> {status}", peer, req.method, req.path);
         }
         Err(e) => {
@@ -539,6 +663,24 @@ mod tests {
     }
 
     #[test]
+    fn query_params_split() {
+        assert_eq!(
+            query_param("format=prometheus", "format"),
+            Some("prometheus")
+        );
+        assert_eq!(query_param("a=1&id=42", "id"), Some("42"));
+        assert_eq!(query_param("", "id"), None);
+        assert_eq!(query_param("id", "id"), None, "bare key has no value");
+    }
+
+    #[test]
+    fn typed_response_content_type() {
+        let r = response_typed(200, "OK", PROM_CONTENT_TYPE, "x 1\n");
+        assert!(r.contains("Content-Type: text/plain; version=0.0.4"));
+        assert!(r.ends_with("x 1\n"));
+    }
+
+    #[test]
     fn generate_status_maps_terminal_reasons() {
         let mk = |n_generated: usize, reason: &str| GenResponse {
             id: 1,
@@ -550,6 +692,7 @@ mod tests {
             density: 1.0,
             finish_reason: reason.to_string(),
             prefix_hit_tokens: 0,
+            trace_id: 0,
         };
         assert_eq!(generate_status(&mk(0, "deadline_exceeded")).0, 504);
         assert_eq!(generate_status(&mk(0, "internal_error")).0, 500);

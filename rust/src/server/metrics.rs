@@ -1,7 +1,9 @@
 //! Serving metrics: throughput, latency percentiles, achieved density.
 
+use crate::obs::{Hist, PromText, RateWindow};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Aggregated serving metrics; the coordinator holds this behind its lock.
@@ -62,6 +64,21 @@ pub struct Metrics {
     pub queue_depth: u64,
     /// Wall time of the last completed graceful drain (0 until one runs).
     pub drain_duration_ms: f64,
+    /// Prometheus-renderable latency histograms alongside the `Summary`
+    /// percentile windows (fixed log-spaced buckets aggregate across
+    /// scrapes; percentiles don't). Fed by the `observe_*` helpers.
+    pub queue_ms_hist: Hist,
+    pub total_ms_hist: Hist,
+    pub per_token_ms_hist: Hist,
+    pub decode_gap_ms_hist: Hist,
+    /// Terminal outcomes by finish reason (`length`, `cache_full`,
+    /// `deadline_exceeded`, `shed`, `shutdown`, ...). Counts every terminal
+    /// event — completions and never-ran terminals alike.
+    pub finished: BTreeMap<String, u64>,
+    /// Tokens committed by decode, bucketed per second for the sliding-
+    /// window throughput (the lifetime average decays toward zero on an
+    /// idle server; this doesn't).
+    pub decode_window: RateWindow,
 }
 
 impl Metrics {
@@ -97,7 +114,54 @@ impl Metrics {
             shed_total: 0,
             queue_depth: 0,
             drain_duration_ms: 0.0,
+            queue_ms_hist: Hist::new_ms(),
+            total_ms_hist: Hist::new_ms(),
+            per_token_ms_hist: Hist::new_ms(),
+            decode_gap_ms_hist: Hist::new_ms(),
+            finished: BTreeMap::new(),
+            decode_window: RateWindow::new(),
         }
+    }
+
+    /// Record one request's queue wait (summary window + histogram).
+    pub fn observe_queue(&mut self, ms: f64) {
+        self.queue_ms.add(ms);
+        self.queue_ms_hist.observe(ms);
+    }
+
+    /// Record one request's end-to-end latency.
+    pub fn observe_total(&mut self, ms: f64) {
+        self.total_ms.add(ms);
+        self.total_ms_hist.observe(ms);
+    }
+
+    /// Record one decode step's per-committed-token latency.
+    pub fn observe_per_token(&mut self, ms: f64) {
+        self.per_token_ms.add(ms);
+        self.per_token_ms_hist.observe(ms);
+    }
+
+    /// Record one completion-to-completion decode gap.
+    pub fn observe_decode_gap(&mut self, ms: f64) {
+        self.decode_gap_ms.add(ms);
+        self.decode_gap_ms_hist.observe(ms);
+    }
+
+    /// Count one terminal event under its finish reason.
+    pub fn count_finish(&mut self, reason: &str) {
+        *self.finished.entry(reason.to_string()).or_insert(0) += 1;
+    }
+
+    /// Feed `n` freshly committed tokens into the sliding throughput window.
+    pub fn record_decoded(&mut self, n: u64) {
+        self.decode_window.add(n);
+    }
+
+    /// Decode throughput over the trailing 30s window (tokens/s). Unlike
+    /// [`Metrics::throughput`] this reads 0 on an idle server instead of a
+    /// slowly decaying lifetime average.
+    pub fn throughput_window(&self) -> f64 {
+        self.decode_window.rate()
     }
 
     /// Dense-f32 bytes over resident bytes (1.0 for unquantized weights or
@@ -152,6 +216,10 @@ impl Metrics {
             ("tokens_generated", Json::Num(self.tokens_generated as f64)),
             ("tokens_prefilled", Json::Num(self.tokens_prefilled as f64)),
             ("throughput_tok_s", Json::Num(self.throughput())),
+            (
+                "throughput_window_tok_s",
+                Json::Num(self.throughput_window()),
+            ),
             ("density", Json::Num(self.density())),
             ("queue_ms_p50", Json::Num(self.queue_ms.percentile(0.5))),
             ("queue_ms_p99", Json::Num(self.queue_ms.percentile(0.99))),
@@ -233,13 +301,26 @@ impl Metrics {
                 Json::Num(self.quant_compression_ratio()),
             ),
             ("decode_tok_s", self.decode_tok_s_json()),
+            ("finished_total", self.finished_json()),
         ])
     }
 
+    fn finished_json(&self) -> Json {
+        Json::obj(
+            self.finished
+                .iter()
+                .map(|(k, v)| (k.as_str(), Json::Num(*v as f64)))
+                .collect(),
+        )
+    }
+
     /// Per-representation decode throughput gauges: the server's deployed
-    /// representation carries the live tok/s, the others read 0.
+    /// representation carries the live windowed tok/s, the others read 0.
+    /// Windowed, not lifetime: a gauge that decays toward zero while the
+    /// server sits idle (and dilutes bursts with idle time) is useless for
+    /// alerting — the 30s window reflects what decode is doing *now*.
     fn decode_tok_s_json(&self) -> Json {
-        let tput = self.throughput();
+        let tput = self.throughput_window();
         Json::obj(
             ["f32", "int8", "int4"]
                 .into_iter()
@@ -251,6 +332,222 @@ impl Metrics {
                 })
                 .collect(),
         )
+    }
+
+    /// Render every metric family into a Prometheus exposition builder.
+    /// The coordinator appends per-block telemetry to the same builder, so
+    /// `# TYPE` dedup spans the whole page.
+    pub fn render_prometheus(&self, p: &mut PromText) {
+        let repr = self.weight_repr.as_str();
+        p.gauge(
+            "wisparse_uptime_seconds",
+            "Seconds since server start.",
+            &[],
+            self.started.elapsed().as_secs_f64(),
+        );
+        p.counter(
+            "wisparse_requests_total",
+            "Requests completed.",
+            &[],
+            self.requests_total as f64,
+        );
+        p.counter(
+            "wisparse_requests_rejected_total",
+            "Requests refused at admission (queue full).",
+            &[],
+            self.requests_rejected as f64,
+        );
+        p.counter(
+            "wisparse_tokens_generated_total",
+            "Tokens committed by decode.",
+            &[],
+            self.tokens_generated as f64,
+        );
+        p.counter(
+            "wisparse_tokens_prefilled_total",
+            "Prompt tokens forwarded by prefill chunks.",
+            &[],
+            self.tokens_prefilled as f64,
+        );
+        p.gauge(
+            "wisparse_throughput_tok_s",
+            "Lifetime-average decode throughput.",
+            &[],
+            self.throughput(),
+        );
+        p.gauge(
+            "wisparse_throughput_window_tok_s",
+            "Decode throughput over the trailing 30s window.",
+            &[],
+            self.throughput_window(),
+        );
+        for r in ["f32", "int8", "int4"] {
+            let v = if r == repr {
+                self.throughput_window()
+            } else {
+                0.0
+            };
+            p.gauge(
+                "wisparse_decode_tok_s",
+                "Windowed decode throughput per weight representation.",
+                &[("repr", r)],
+                v,
+            );
+        }
+        p.gauge(
+            "wisparse_density",
+            "Achieved activation density over all linear projections.",
+            &[],
+            self.density(),
+        );
+        p.histogram(
+            "wisparse_queue_ms",
+            "Queue wait per request (ms).",
+            &self.queue_ms_hist,
+        );
+        p.histogram(
+            "wisparse_total_ms",
+            "End-to-end request latency (ms).",
+            &self.total_ms_hist,
+        );
+        p.histogram(
+            "wisparse_per_token_ms",
+            "Decode-step latency per committed token (ms).",
+            &self.per_token_ms_hist,
+        );
+        p.histogram(
+            "wisparse_decode_gap_ms",
+            "Wall gap between consecutive decode steps (ms).",
+            &self.decode_gap_ms_hist,
+        );
+        for (reason, n) in &self.finished {
+            p.counter(
+                "wisparse_finished_total",
+                "Terminal events by finish reason.",
+                &[("reason", reason.as_str())],
+                *n as f64,
+            );
+        }
+        p.counter(
+            "wisparse_prefill_chunks_total",
+            "Prefill chunks run by the scheduler.",
+            &[],
+            self.prefill_chunks_total as f64,
+        );
+        p.counter(
+            "wisparse_preemptions_total",
+            "Sequences preempted for KV pool pressure.",
+            &[],
+            self.preemptions_total as f64,
+        );
+        p.counter(
+            "wisparse_cancellations_total",
+            "Active sequences cancelled by departed clients.",
+            &[],
+            self.cancellations_total as f64,
+        );
+        p.gauge(
+            "wisparse_kv_blocks_total",
+            "Paged-KV pool size in blocks.",
+            &[],
+            self.blocks_total as f64,
+        );
+        p.gauge(
+            "wisparse_kv_blocks_in_use",
+            "Paged-KV blocks currently referenced.",
+            &[],
+            self.blocks_in_use as f64,
+        );
+        p.counter(
+            "wisparse_prefix_hit_tokens_total",
+            "Prompt tokens served from the prefix cache.",
+            &[],
+            self.prefix_hit_tokens as f64,
+        );
+        p.counter(
+            "wisparse_prefix_miss_tokens_total",
+            "Prompt tokens missed by the prefix cache.",
+            &[],
+            self.prefix_miss_tokens as f64,
+        );
+        p.gauge(
+            "wisparse_prefix_hit_rate",
+            "Fraction of prompt tokens served from the prefix cache.",
+            &[],
+            self.prefix_hit_rate(),
+        );
+        p.counter(
+            "wisparse_spec_rounds_total",
+            "Speculative draft/verify rounds completed.",
+            &[],
+            self.spec_rounds_total as f64,
+        );
+        p.counter(
+            "wisparse_spec_drafted_tokens_total",
+            "Draft tokens proposed beyond each round's free token.",
+            &[],
+            self.spec_drafted_tokens as f64,
+        );
+        p.counter(
+            "wisparse_spec_accepted_tokens_total",
+            "Draft tokens accepted by verification.",
+            &[],
+            self.spec_accepted_tokens as f64,
+        );
+        p.gauge(
+            "wisparse_spec_acceptance_rate",
+            "Fraction of drafted tokens accepted.",
+            &[],
+            self.spec_acceptance_rate(),
+        );
+        p.counter(
+            "wisparse_panics_caught_total",
+            "Per-sequence panics converted to internal_error.",
+            &[],
+            self.panics_caught_total as f64,
+        );
+        p.counter(
+            "wisparse_scheduler_restarts_total",
+            "Scheduler incarnations restarted by the supervisor.",
+            &[],
+            self.scheduler_restarts_total as f64,
+        );
+        p.counter(
+            "wisparse_deadline_exceeded_total",
+            "Requests terminated past their deadline.",
+            &[],
+            self.deadline_exceeded_total as f64,
+        );
+        p.counter(
+            "wisparse_shed_total",
+            "Requests shed under overload or drain.",
+            &[],
+            self.shed_total as f64,
+        );
+        p.gauge(
+            "wisparse_queue_depth",
+            "Waiting (unadmitted) requests right now.",
+            &[],
+            self.queue_depth as f64,
+        );
+        p.gauge(
+            "wisparse_drain_duration_ms",
+            "Wall time of the last completed graceful drain.",
+            &[],
+            self.drain_duration_ms,
+        );
+        p.gauge(
+            "wisparse_weight_bytes_resident",
+            "Resident weight bytes of the deployed representation.",
+            &[("repr", repr)],
+            self.weight_bytes_resident as f64,
+        );
+        p.gauge(
+            "wisparse_quant_compression_ratio",
+            "Dense-f32 bytes over resident bytes.",
+            &[],
+            self.quant_compression_ratio(),
+        );
     }
 }
 
@@ -358,6 +655,56 @@ mod tests {
         m.prefix_miss_tokens = 25;
         assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
         assert!((m.to_json().get("prefix_hit_rate").as_f64().unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_throughput_and_finished_serialize() {
+        let mut m = Metrics::new();
+        m.record_decoded(30);
+        m.count_finish("length");
+        m.count_finish("length");
+        m.count_finish("shed");
+        let j = m.to_json();
+        assert!(
+            j.get("throughput_window_tok_s").as_f64().unwrap() > 0.0,
+            "fresh tokens show up in the window rate"
+        );
+        let f = j.get("finished_total");
+        assert_eq!(f.get("length").as_usize(), Some(2));
+        assert_eq!(f.get("shed").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn decode_tok_s_uses_window_not_lifetime() {
+        let mut m = Metrics::new();
+        m.weight_repr = "f32".to_string();
+        // Lifetime counter says tokens were generated long ago; the window
+        // has seen nothing. The gauge must read the window (0), not a
+        // decayed lifetime average.
+        m.tokens_generated = 1_000_000;
+        let j = m.to_json();
+        assert_eq!(j.get("decode_tok_s").get("f32").as_f64(), Some(0.0));
+        m.record_decoded(60);
+        let j = m.to_json();
+        assert!(j.get("decode_tok_s").get("f32").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn prometheus_render_contains_families() {
+        let mut m = Metrics::new();
+        m.requests_total = 2;
+        m.observe_queue(1.5);
+        m.count_finish("length");
+        let mut p = PromText::new();
+        m.render_prometheus(&mut p);
+        let s = p.finish();
+        assert!(s.contains("# TYPE wisparse_requests_total counter"));
+        assert!(s.contains("wisparse_requests_total 2"));
+        assert!(s.contains("# TYPE wisparse_queue_ms histogram"));
+        assert!(s.contains("wisparse_queue_ms_count 1"));
+        assert!(s.contains("wisparse_queue_ms_bucket{le=\"+Inf\"} 1"));
+        assert!(s.contains("wisparse_finished_total{reason=\"length\"} 1"));
+        assert!(s.contains("wisparse_decode_tok_s{repr=\"f32\"}"));
     }
 
     #[test]

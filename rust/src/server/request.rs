@@ -31,6 +31,12 @@ pub struct GenRequest {
     /// it finishes `deadline_exceeded` with whatever it generated). `None`
     /// means no deadline.
     pub deadline: Option<Duration>,
+    /// Tracing correlation id, assigned by the coordinator at submission
+    /// (process-global, never reused across coordinators). 0 = untraced.
+    pub trace_id: u64,
+    /// Span id reserved for this request's root span, so engine-level child
+    /// spans can parent onto it before the root is recorded at completion.
+    pub root_span: u64,
 }
 
 impl GenRequest {
@@ -45,6 +51,8 @@ impl GenRequest {
             speculative: true,
             stream: false,
             deadline: None,
+            trace_id: 0,
+            root_span: 0,
         }
     }
 
@@ -85,6 +93,8 @@ impl GenRequest {
             speculative,
             stream,
             deadline,
+            trace_id: 0,
+            root_span: 0,
         })
     }
 }
@@ -133,6 +143,10 @@ pub struct GenResponse {
     pub finish_reason: String,
     /// Prompt tokens served from the shared prefix cache (0 without one).
     pub prefix_hit_tokens: usize,
+    /// The request's tracing correlation id; fetch the span timeline at
+    /// `GET /debug/traces?id=<trace_id>`. 0 = untraced (terminal responses
+    /// for requests that never ran).
+    pub trace_id: u64,
 }
 
 impl GenResponse {
@@ -153,6 +167,7 @@ impl GenResponse {
             density: 1.0,
             finish_reason: reason.to_string(),
             prefix_hit_tokens: 0,
+            trace_id: 0,
         }
     }
 
@@ -167,6 +182,7 @@ impl GenResponse {
             ("density", Json::Num(self.density)),
             ("finish_reason", Json::Str(self.finish_reason.clone())),
             ("prefix_hit_tokens", Json::Num(self.prefix_hit_tokens as f64)),
+            ("trace_id", Json::Num(self.trace_id as f64)),
         ])
     }
 }
@@ -248,6 +264,7 @@ mod tests {
             density: 1.0,
             finish_reason: "length".into(),
             prefix_hit_tokens: 0,
+            trace_id: 0,
         });
         let j = done.to_json();
         assert_eq!(j.get("done").as_bool(), Some(true));
@@ -274,11 +291,13 @@ mod tests {
             density: 0.55,
             finish_reason: "length".into(),
             prefix_hit_tokens: 4,
+            trace_id: 17,
         };
         let j = r.to_json();
         assert_eq!(j.get("text").as_str(), Some("46."));
         assert_eq!(j.get("generated_tokens").as_usize(), Some(3));
         assert_eq!(j.get("finish_reason").as_str(), Some("length"));
         assert_eq!(j.get("prefix_hit_tokens").as_usize(), Some(4));
+        assert_eq!(j.get("trace_id").as_usize(), Some(17));
     }
 }

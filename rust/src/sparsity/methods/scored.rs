@@ -34,6 +34,9 @@ pub struct ScoredLayer {
 pub struct ScoredSparsifier {
     method: &'static str,
     layers: Vec<ScoredLayer>,
+    /// Plan target keep-fraction per flat layer (empty when hand-built);
+    /// telemetry reports achieved-vs-planned drift against it.
+    planned: Vec<f64>,
     /// Thread budget for intra-GEMV row parallelism on large-output layers
     /// (`gate`/`up`-sized and beyond; small layers never split).
     intra_threads: usize,
@@ -49,6 +52,7 @@ impl ScoredSparsifier {
         Self {
             method,
             layers,
+            planned: Vec::new(),
             intra_threads: crate::util::threadpool::num_threads_cached(),
             force_scalar: false,
         }
@@ -94,7 +98,9 @@ impl ScoredSparsifier {
                 ScoredLayer { ga, tau: lp.tau }
             })
             .collect();
-        Self::new(method, layers)
+        let mut sp = Self::new(method, layers);
+        sp.planned = plan.layers.iter().map(|lp| 1.0 - lp.sparsity).collect();
+        sp
     }
 
     pub fn layer(&self, id: LayerId) -> &ScoredLayer {
@@ -142,6 +148,10 @@ impl Sparsifier for ScoredSparsifier {
             let kept_idx = &mut *cell.borrow_mut();
             w.gemv_masked(x, lp.ga.as_deref(), lp.tau, out, kept_idx, threads)
         })
+    }
+
+    fn planned_density(&self, layer: LayerId) -> Option<f64> {
+        self.planned.get(layer.flat()).copied()
     }
 }
 

@@ -38,6 +38,14 @@ pub trait Sparsifier: Sync + Send {
     fn extra_macs(&self, _layer: LayerId, _w: &dyn WeightRepr) -> u64 {
         0
     }
+
+    /// The calibrated target keep-fraction for this layer, when the method
+    /// was built from a plan. Telemetry compares it against the achieved
+    /// density to report tau-vs-plan drift; `None` means "no plan target"
+    /// (hand-built sparsifiers, uniform-tau baselines).
+    fn planned_density(&self, _layer: LayerId) -> Option<f64> {
+        None
+    }
 }
 
 /// Dense execution (the 0%-sparsity baseline).
@@ -50,6 +58,10 @@ impl Sparsifier for Dense {
 
     fn project(&self, _layer: LayerId, x: &[f32], w: &dyn WeightRepr, out: &mut [f32]) -> usize {
         w.gemv_dense(x, out, crate::util::threadpool::intra_op_threads())
+    }
+
+    fn planned_density(&self, _layer: LayerId) -> Option<f64> {
+        Some(1.0)
     }
 }
 

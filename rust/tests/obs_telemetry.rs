@@ -1,0 +1,351 @@
+//! Observability integration: Prometheus exposition conformance, tracer
+//! ring behavior under concurrent writers, no-op vs recording `ObsSink`
+//! logit bit-identity, and end-to-end trace reconstruction of a served
+//! request.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use wisparse::model::transformer::{ForwardStats, Model};
+use wisparse::model::ModelConfig;
+use wisparse::obs::{BlockObs, NoopSink, ObsSink, Span, Tracer};
+use wisparse::server::batcher::BatcherCfg;
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::sparsity::Dense;
+use wisparse::util::json::Json;
+
+fn start_server() -> (Arc<Coordinator>, String) {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 99));
+    let engine = Arc::new(Engine::paged(
+        model,
+        Arc::new(Dense),
+        EngineCfg {
+            threads: 2,
+            ..EngineCfg::default()
+        },
+        &wisparse::kv::KvCfg {
+            pool_blocks: 128,
+            block_size: 8,
+            prefix_cache: true,
+        },
+    ));
+    let coord = Coordinator::new(
+        engine,
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 4,
+                max_queue: 64,
+            },
+            ..CoordinatorCfg::default()
+        },
+    );
+    let sched = Arc::clone(&coord);
+    std::thread::spawn(move || sched.run_scheduler());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let http_coord = Arc::clone(&coord);
+    std::thread::spawn(move || {
+        wisparse::server::http::serve(http_coord, "127.0.0.1:0", move |a| {
+            tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = rx.recv().unwrap().to_string();
+    (coord, addr)
+}
+
+/// Returns (status, content-type, body).
+fn request(addr: &str, method: &str, path: &str, body: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut content_length = 0usize;
+    let mut content_type = String::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap();
+            } else if k.eq_ignore_ascii_case("content-type") {
+                content_type = v.trim().to_string();
+            }
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    reader.read_exact(&mut buf).unwrap();
+    (status, content_type, String::from_utf8(buf).unwrap())
+}
+
+/// Minimal text-format 0.0.4 conformance check: every sample belongs to a
+/// family with exactly one `# TYPE`, histogram buckets are cumulative and
+/// monotone, and the `+Inf` bucket equals `_count`.
+fn assert_prom_conformant(body: &str) {
+    use std::collections::BTreeMap;
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap().to_string();
+            let ty = it.next().unwrap().to_string();
+            assert!(
+                types.insert(name.clone(), ty).is_none(),
+                "duplicate TYPE for {name}"
+            );
+        }
+    }
+    // (family, le) -> bucket count; family -> (_count, _sum seen).
+    let mut buckets: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<String, f64> = BTreeMap::new();
+    let mut sums: BTreeMap<String, f64> = BTreeMap::new();
+    for line in body.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let name_end = line.find(|c| c == '{' || c == ' ').unwrap_or(line.len());
+        let name = &line[..name_end];
+        let value: f64 = {
+            let v = line.rsplit(' ').next().unwrap();
+            if v == "+Inf" {
+                f64::INFINITY
+            } else {
+                v.parse().unwrap_or_else(|_| panic!("bad value in `{line}`"))
+            }
+        };
+        // Resolve the declared family: exact, or histogram component.
+        let family = if types.contains_key(name) {
+            name.to_string()
+        } else {
+            let base = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_count"))
+                .or_else(|| name.strip_suffix("_sum"))
+                .unwrap_or_else(|| panic!("sample `{name}` has no TYPE"));
+            assert_eq!(
+                types.get(base).map(String::as_str),
+                Some("histogram"),
+                "sample `{name}` has no TYPE"
+            );
+            base.to_string()
+        };
+        if name.ends_with("_bucket") && types.get(&family).map(String::as_str) == Some("histogram")
+        {
+            let le_start = line.find("le=\"").unwrap_or_else(|| panic!("no le in `{line}`")) + 4;
+            let le_str = &line[le_start..line[le_start..].find('"').unwrap() + le_start];
+            let le = if le_str == "+Inf" {
+                f64::INFINITY
+            } else {
+                le_str.parse().unwrap()
+            };
+            buckets.entry(family).or_default().push((le, value));
+        } else if name.ends_with("_count") && types.contains_key(&family) {
+            counts.insert(family, value);
+        } else if name.ends_with("_sum") && types.contains_key(&family) {
+            sums.insert(family, value);
+        }
+    }
+    for (family, ty) in &types {
+        if ty != "histogram" {
+            continue;
+        }
+        let b = buckets
+            .get(family)
+            .unwrap_or_else(|| panic!("histogram {family} has no buckets"));
+        assert!(
+            b.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 <= w[1].1),
+            "{family} buckets not monotone: {b:?}"
+        );
+        let (last_le, last_count) = *b.last().unwrap();
+        assert!(last_le.is_infinite(), "{family} missing +Inf bucket");
+        assert_eq!(
+            Some(&last_count),
+            counts.get(family),
+            "{family}: +Inf bucket != _count"
+        );
+        assert!(sums.contains_key(family), "{family} missing _sum");
+    }
+}
+
+#[test]
+fn prometheus_exposition_is_conformant() {
+    let (coord, addr) = start_server();
+    let (status, _, body) = request(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "conformance probe", "max_new": 4}"#,
+    );
+    assert_eq!(status, 200, "{body}");
+    let (status, ctype, prom) = request(&addr, "GET", "/metrics?format=prometheus", "");
+    assert_eq!(status, 200);
+    assert_eq!(ctype, "text/plain; version=0.0.4; charset=utf-8");
+    assert_prom_conformant(&prom);
+    // Spot-check the families the scrape config in README names.
+    for family in [
+        "# TYPE wisparse_requests_total counter",
+        "# TYPE wisparse_queue_ms histogram",
+        "# TYPE wisparse_total_ms histogram",
+        "# TYPE wisparse_decode_gap_ms histogram",
+        "# TYPE wisparse_throughput_window_tok_s gauge",
+        "# TYPE wisparse_finished_total counter",
+    ] {
+        assert!(prom.contains(family), "missing `{family}`");
+    }
+    assert!(
+        prom.contains("wisparse_finished_total{reason=\"length\"} 1"),
+        "finished counter: {prom}"
+    );
+    // The JSON view stays the default and keeps its keys.
+    let (_, ctype, json) = request(&addr, "GET", "/metrics", "");
+    assert_eq!(ctype, "application/json");
+    let m = Json::parse(&json).unwrap();
+    assert_eq!(m.get("requests_total").as_usize(), Some(1));
+    assert!(m.get("throughput_window_tok_s").as_f64().is_some());
+    assert_eq!(m.get("finished_total").get("length").as_usize(), Some(1));
+    coord.shutdown();
+}
+
+#[test]
+fn tracer_ring_wraps_under_concurrent_writers() {
+    let t = Arc::new(Tracer::with_capacity(64));
+    let threads: Vec<_> = (0..8u64)
+        .map(|tid| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    let mut s = Span::new(tid + 1, t.next_span_id(), 0, "w");
+                    s.start_ns = i;
+                    s.dur_ns = 1;
+                    t.record(s);
+                }
+            })
+        })
+        .collect();
+    for h in threads {
+        h.join().unwrap();
+    }
+    assert_eq!(t.written(), 8000);
+    // The ring retains exactly `capacity` spans, all well-formed.
+    let retained: Vec<Span> = (1..=8).flat_map(|tid| t.trace(tid)).collect();
+    assert_eq!(retained.len(), 64);
+    for s in &retained {
+        assert_eq!(s.name, "w");
+        assert!(s.trace_id >= 1 && s.trace_id <= 8);
+        assert!(s.start_ns < 1000);
+        assert_eq!(s.dur_ns, 1);
+    }
+    // Span ids are unique even under contention.
+    let mut ids: Vec<u64> = retained.iter().map(|s| s.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 64);
+}
+
+#[test]
+fn recording_sink_keeps_logits_bit_identical() {
+    let cfg = ModelConfig::preset("nano").unwrap();
+    let mut noop_model = Model::synthetic(cfg.clone(), 321);
+    let mut rec_model = Model::synthetic(cfg, 321);
+    noop_model.set_obs_sink(Arc::new(NoopSink));
+    let obs = Arc::new(BlockObs::new(rec_model.cfg.n_layers));
+    rec_model.set_obs_sink(Arc::clone(&obs) as Arc<dyn ObsSink>);
+    let tokens = [7usize, 3, 9, 1, 14, 2];
+    let mut s1 = ForwardStats::default();
+    let mut s2 = ForwardStats::default();
+    let a = noop_model.forward_seq(&tokens, &Dense, &mut s1, None);
+    let b = rec_model.forward_seq(&tokens, &Dense, &mut s2, None);
+    assert_eq!(a.data.len(), b.data.len());
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "logit {i} diverged");
+    }
+    // The recording sink actually saw the traffic: every (block, proj) row.
+    let rows = obs.snapshot();
+    assert!(!rows.is_empty());
+    for r in &rows {
+        assert_eq!(r.calls, tokens.len() as u64, "{:?}", r.id);
+        assert!(r.dense_channels > 0 && r.bytes > 0);
+        assert!((r.density() - 1.0).abs() < 1e-12, "dense pass keeps all");
+    }
+    assert!(noop_model.obs.snapshot().is_empty());
+}
+
+#[test]
+fn served_request_reconstructs_end_to_end() {
+    let (coord, addr) = start_server();
+    let (status, _, body) = request(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "trace me through the whole stack", "max_new": 8}"#,
+    );
+    assert_eq!(status, 200, "{body}");
+    let resp = Json::parse(&body).unwrap();
+    let trace_id = resp.get("trace_id").as_usize().unwrap();
+    assert!(trace_id > 0, "served response must carry a trace id");
+
+    let (status, ctype, body) =
+        request(&addr, "GET", &format!("/debug/traces?id={trace_id}"), "");
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(ctype, "application/json");
+    let t = Json::parse(&body).unwrap();
+    assert_eq!(t.get("trace_id").as_usize(), Some(trace_id));
+    let spans = t.get("spans").as_arr().unwrap();
+    assert_eq!(spans.len(), t.get("n_spans").as_usize().unwrap());
+    let names: Vec<&str> = spans.iter().filter_map(|s| s.get("name").as_str()).collect();
+    for expected in ["http_parse", "request", "queue", "prefill_chunk", "decode_step"] {
+        assert!(names.contains(&expected), "missing span `{expected}` in {names:?}");
+    }
+    let root = spans
+        .iter()
+        .find(|s| s.get("name").as_str() == Some("request"))
+        .unwrap();
+    assert_eq!(root.get("parent").as_usize(), Some(0));
+    let root_id = root.get("id").as_usize().unwrap();
+    let root_start = root.get("start_ms").as_f64().unwrap();
+    let root_end = root_start + root.get("dur_ms").as_f64().unwrap();
+    let total_ms = root.get("attrs").get("total_ms").as_f64().unwrap();
+    assert!(
+        (root.get("dur_ms").as_f64().unwrap() - total_ms).abs() < 0.5,
+        "root span duration must agree with total_ms"
+    );
+    // Every child nests inside the root's window (small clock slack).
+    let mut children = 0;
+    for s in spans {
+        if s.get("parent").as_usize() == Some(root_id) {
+            children += 1;
+            let start = s.get("start_ms").as_f64().unwrap();
+            let end = start + s.get("dur_ms").as_f64().unwrap();
+            assert!(
+                start >= root_start - 1.0 && end <= root_end + 1.0,
+                "span {s:?} outside root [{root_start}, {root_end}]"
+            );
+        }
+    }
+    assert!(children >= 3, "queue + prefill + decode at minimum");
+
+    // The slow-exemplar tables picked the request up.
+    let (status, _, body) = request(&addr, "GET", "/debug/traces/slow", "");
+    assert_eq!(status, 200);
+    let slow = Json::parse(&body).unwrap();
+    let by_total = slow.get("by_total_ms").as_arr().unwrap();
+    assert!(by_total
+        .iter()
+        .any(|s| s.get("trace_id").as_usize() == Some(trace_id)));
+    assert!(!slow.get("by_decode_gap_ms").as_arr().unwrap().is_empty());
+
+    // Missing / malformed ids are 400s, not panics.
+    assert_eq!(request(&addr, "GET", "/debug/traces", "").0, 400);
+    assert_eq!(request(&addr, "GET", "/debug/traces?id=bogus", "").0, 400);
+    coord.shutdown();
+}

@@ -1,0 +1,209 @@
+#!/usr/bin/env python3
+"""Committed perf trajectory: an append-only per-commit record of the
+headline numbers from the BENCH_*.json reports.
+
+    python3 scripts/trajectory.py append --commit <sha> [--date YYYY-MM-DD]
+    python3 scripts/trajectory.py check
+
+`append` scans the working directory for BENCH_*.json files (written by
+`cargo bench`) and appends one CSV row per headline metric to
+results/trajectory/trajectory.csv. CI runs it on main after the bench jobs.
+
+`check` compares the same headline metrics of the current BENCH_*.json
+files against the most recent committed row per (bench, metric) and exits
+nonzero on a >10% regression in the metric's bad direction. Only
+runner-independent ratios (speedups, acceptance/hit rates, KL) gate;
+absolute tok/s and GB/s are recorded as `info` for plotting but never fail
+the build, because they track the runner's hardware as much as the code.
+
+Stdlib only; no third-party imports.
+"""
+
+import argparse
+import csv
+import datetime
+import json
+import os
+import sys
+
+CSV_PATH = os.path.join("results", "trajectory", "trajectory.csv")
+HEADER = ["commit", "date", "bench", "metric", "value"]
+REGRESSION_TOLERANCE = 0.10
+
+# Direction per gated metric: "up" = higher is better (gate on drops),
+# "down" = lower is better (gate on rises), "info" = record only.
+
+
+def _kernel_headline(r):
+    rows = []
+    for shape in r.get("shapes", []):
+        label = str(shape.get("label", "?")).replace(" ", "_").replace("/", "-")
+        backends = shape.get("backends", [])
+        if not backends:
+            continue
+        rows.append(
+            (
+                f"{label}.best_speedup",
+                max(b.get("speedup_vs_scalar", 0.0) for b in backends),
+                "up",
+            )
+        )
+        rows.append(
+            (
+                f"{label}.best_tok_s",
+                max(b.get("tokens_per_s", 0.0) for b in backends),
+                "info",
+            )
+        )
+    obs = r.get("obs_sink")
+    if obs:
+        rows.append(
+            ("obs_recording_overhead_pct", obs.get("recording_overhead_pct", 0.0), "info")
+        )
+    return rows
+
+
+def _keyed_headline(spec):
+    def extract(r):
+        return [(metric, r[key], d) for metric, key, d in spec if key in r]
+
+    return extract
+
+
+HEADLINES = {
+    "BENCH_kernel.json": ("kernel", _kernel_headline),
+    "BENCH_serve.json": (
+        "serve",
+        _keyed_headline(
+            [
+                ("prefill_speedup", "prefill_speedup", "up"),
+                ("prefix_hit_rate", "prefix_hit_rate", "up"),
+                ("e2e_tok_s_prefix_on", "e2e_tok_s_prefix_on", "info"),
+            ]
+        ),
+    ),
+    "BENCH_quant.json": (
+        "quant",
+        _keyed_headline(
+            [
+                ("int8_speedup_sparse", "int8_speedup_sparse", "up"),
+                ("int4_speedup_sparse", "int4_speedup_sparse", "up"),
+                ("int8_kl", "int8_kl", "down"),
+                ("int8_compression", "int8_compression", "info"),
+            ]
+        ),
+    ),
+    "BENCH_prefill.json": (
+        "prefill",
+        _keyed_headline(
+            [
+                ("prefill_speedup", "prefill_speedup", "up"),
+                ("decode_gap_ratio", "decode_gap_ratio", "up"),
+            ]
+        ),
+    ),
+    "BENCH_spec.json": (
+        "spec",
+        _keyed_headline(
+            [
+                ("speedup", "speedup", "up"),
+                ("acceptance_rate", "acceptance_rate", "up"),
+            ]
+        ),
+    ),
+}
+
+
+def current_metrics():
+    """[(bench, metric, value, direction)] for every BENCH report present."""
+    out = []
+    for fname, (bench, extract) in sorted(HEADLINES.items()):
+        if not os.path.exists(fname):
+            continue
+        with open(fname) as f:
+            report = json.load(f)
+        for metric, value, direction in extract(report):
+            out.append((bench, metric, float(value), direction))
+    return out
+
+
+def cmd_append(args):
+    metrics = current_metrics()
+    if not metrics:
+        print("trajectory: no BENCH_*.json in cwd, nothing to append")
+        return 0
+    date = args.date or datetime.date.today().isoformat()
+    os.makedirs(os.path.dirname(CSV_PATH), exist_ok=True)
+    new_file = not os.path.exists(CSV_PATH)
+    with open(CSV_PATH, "a", newline="") as f:
+        w = csv.writer(f)
+        if new_file:
+            w.writerow(HEADER)
+        for bench, metric, value, _d in metrics:
+            w.writerow([args.commit, date, bench, metric, f"{value:.6g}"])
+    print(f"trajectory: appended {len(metrics)} rows for {args.commit[:12]}")
+    return 0
+
+
+def last_committed():
+    """(bench, metric) -> most recently appended value."""
+    last = {}
+    if not os.path.exists(CSV_PATH):
+        return last
+    with open(CSV_PATH, newline="") as f:
+        for row in csv.DictReader(f):
+            try:
+                last[(row["bench"], row["metric"])] = float(row["value"])
+            except (KeyError, TypeError, ValueError):
+                continue
+    return last
+
+
+def cmd_check(_args):
+    baseline = last_committed()
+    if not baseline:
+        print("trajectory: no committed baseline yet, passing")
+        return 0
+    metrics = current_metrics()
+    if not metrics:
+        print("trajectory: no BENCH_*.json in cwd, nothing to check")
+        return 0
+    failures = []
+    for bench, metric, value, direction in metrics:
+        prev = baseline.get((bench, metric))
+        if prev is None or direction == "info" or prev <= 0:
+            continue
+        ratio = value / prev
+        if direction == "up" and ratio < 1.0 - REGRESSION_TOLERANCE:
+            failures.append((bench, metric, prev, value, ratio))
+        elif direction == "down" and ratio > 1.0 + REGRESSION_TOLERANCE:
+            failures.append((bench, metric, prev, value, ratio))
+        else:
+            print(f"ok   {bench}.{metric}: {prev:.4g} -> {value:.4g} ({ratio:.2f}x)")
+    for bench, metric, prev, value, ratio in failures:
+        print(
+            f"FAIL {bench}.{metric}: {prev:.4g} -> {value:.4g} "
+            f"({ratio:.2f}x, tolerance {REGRESSION_TOLERANCE:.0%})",
+            file=sys.stderr,
+        )
+    if failures:
+        return 1
+    print("trajectory: no regressions beyond tolerance")
+    return 0
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    sub = p.add_subparsers(dest="cmd", required=True)
+    a = sub.add_parser("append", help="append current BENCH_*.json headline rows")
+    a.add_argument("--commit", required=True)
+    a.add_argument("--date", default=None)
+    a.set_defaults(fn=cmd_append)
+    c = sub.add_parser("check", help="fail on >10% regression vs last committed row")
+    c.set_defaults(fn=cmd_check)
+    args = p.parse_args()
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
