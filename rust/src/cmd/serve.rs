@@ -34,6 +34,11 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
             "prompt tokens per prefill chunk (per-iteration token budget)",
         )
         .opt("prefix-cache", "on", "radix-tree prompt prefix sharing (on|off)")
+        .opt(
+            "fused-batch",
+            "on",
+            "batch-fused decode: stream weights once per step across the batch (on|off)",
+        )
         .opt("draft-sparsity", "0.75", "draft sparsity target for --speculative")
         .opt("spec-k", "4", "initial speculative draft-chain length")
         .opt(
@@ -123,6 +128,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     };
     let engine_cfg = EngineCfg {
         prefill_chunk: args.get_usize("prefill-chunk")?.max(1),
+        fused_batch: args.get("fused-batch") != "off",
         ..EngineCfg::default()
     };
     let engine = Arc::new(Engine::paged(
@@ -191,11 +197,12 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         model.weight_bytes_resident() as f64 / 1e6
     );
     println!(
-        "paged KV: {} blocks x {} positions, prefix cache {}; chunked prefill {} tok/iter",
+        "paged KV: {} blocks x {} positions, prefix cache {}; chunked prefill {} tok/iter; fused batch decode {}",
         kv_cfg.pool_blocks,
         kv_cfg.block_size,
         if kv_cfg.prefix_cache { "on" } else { "off" },
-        prefill_chunk
+        prefill_chunk,
+        if engine.cfg.fused_batch { "on" } else { "off" }
     );
     wisparse::server::http::serve(Arc::clone(&coord), args.get("addr"), |addr| {
         println!("listening on http://{addr}");

@@ -174,6 +174,88 @@ pub enum ChunkLogits {
     Skip,
 }
 
+/// Mutable access to the per-sequence state a batch-fused decode step
+/// needs: the tokens each sequence contributes, its KV store, its FLOP
+/// stats and its logits destination. Implemented by the engine's batch
+/// adapters; object-safe so the model stays ignorant of engine types.
+pub trait FusedSeqAccess {
+    fn n_seqs(&self) -> usize;
+    /// Tokens sequence `i` contributes this step (plain decode: one;
+    /// speculative verify: the draft chain). Must be non-empty.
+    fn tokens(&self, i: usize) -> &[usize];
+    fn want(&self, i: usize) -> ChunkLogits;
+    fn cache(&mut self, i: usize) -> &mut dyn KvSeq;
+    fn stats(&mut self, i: usize) -> &mut ForwardStats;
+    fn logits(&mut self, i: usize) -> &mut Vec<f32>;
+}
+
+/// Reusable buffers for [`Model::forward_fused`]: stacked `[P, dim]`
+/// activations for the whole batch, grown once to the widest step seen and
+/// then reused (the steady-state fused decode step allocates nothing).
+#[derive(Default)]
+pub struct FusedScratch {
+    /// Residual streams, `[P, d]` row-major.
+    xs: Vec<f32>,
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    o: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    hbuf: Vec<f32>,
+    down: Vec<f32>,
+    scores: Vec<f32>,
+    /// Per-position kept-channel counts from the last fused projection.
+    kept: Vec<usize>,
+    /// Final-normed rows that need logits, `[R, d]`.
+    head: Vec<f32>,
+    head_logits: Vec<f32>,
+    /// Row-range prefix: sequence `i` owns rows `row0[i]..row0[i+1]`
+    /// (`n + 1` entries, last = total row count).
+    row0: Vec<usize>,
+    /// Absolute KV position of sequence `i`'s first row this step.
+    pos0: Vec<usize>,
+}
+
+impl FusedScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, cfg: &ModelConfig, p_total: usize) {
+        let d = cfg.d_model;
+        let f = cfg.ffn_dim;
+        let grow = |v: &mut Vec<f32>, len: usize| {
+            if v.len() < len {
+                v.resize(len, 0.0);
+            }
+        };
+        for buf in [
+            &mut self.xs,
+            &mut self.normed,
+            &mut self.q,
+            &mut self.k,
+            &mut self.v,
+            &mut self.attn,
+            &mut self.o,
+            &mut self.down,
+            &mut self.head,
+        ] {
+            grow(buf, p_total * d);
+        }
+        for buf in [&mut self.gate, &mut self.up, &mut self.hbuf] {
+            grow(buf, p_total * f);
+        }
+        grow(&mut self.scores, cfg.max_seq);
+        grow(&mut self.head_logits, p_total * cfg.vocab_size);
+        if self.kept.len() < p_total {
+            self.kept.resize(p_total, 0);
+        }
+    }
+}
+
 /// The model: weights in kernel layout plus precomputed per-layer column
 /// norms (`g` of Eq. 4, always computed from the *deployed* representation
 /// so quantized checkpoints calibrate against the weights they execute).
@@ -670,6 +752,284 @@ impl Model {
         scratch.chunk = xs;
     }
 
+    /// One batch-fused projection: a single weight walk covering every row
+    /// of the step, with per-sequence FLOP attribution and one telemetry
+    /// record for the whole call (weight bytes charged once, not per row).
+    #[allow(clippy::too_many_arguments)]
+    fn fused_proj(
+        &self,
+        b: usize,
+        kind: LayerKind,
+        sp: &dyn Sparsifier,
+        ins: &[f32],
+        outs: &mut [f32],
+        kept: &mut [usize],
+        row0: &[usize],
+        batch: &mut dyn FusedSeqAccess,
+    ) {
+        let id = LayerId::new(b, kind);
+        let w = self.blocks[b].w(kind);
+        let n_pos = *row0.last().expect("row0 has a sentinel");
+        let (ind, outd) = (w.in_dim(), w.out_dim());
+        let obs = &*self.obs;
+        if obs.enabled() {
+            let t0 = std::time::Instant::now();
+            let streamed = sp.project_batch(id, ins, ind, w, outs, outd, n_pos, kept);
+            obs.record_proj_batch(
+                id,
+                n_pos,
+                kept[..n_pos].iter().sum(),
+                streamed,
+                ind,
+                w.resident_bytes(),
+                t0.elapsed().as_nanos() as u64,
+            );
+        } else {
+            sp.project_batch(id, ins, ind, w, outs, outd, n_pos, kept);
+        }
+        let extra = sp.extra_macs(id, w);
+        for i in 0..row0.len() - 1 {
+            let (r0, r1) = (row0[i], row0[i + 1]);
+            let ksum: usize = kept[r0..r1].iter().sum();
+            let st = batch.stats(i);
+            st.macs_kept += (ksum * outd) as u64;
+            st.macs_dense += ((r1 - r0) * ind * outd) as u64;
+            st.macs_extra += (r1 - r0) as u64 * extra;
+        }
+    }
+
+    /// Batch-fused decode step: every sequence's pending tokens run through
+    /// the model together, with each linear projection streaming its weight
+    /// columns **once** for the whole batch (the union of the batch's
+    /// dynamic masks) instead of once per sequence.
+    ///
+    /// Per-row arithmetic is exactly [`Model::forward_token`]'s /
+    /// [`Model::forward_chunk`]'s — same ops in the same order per row, with
+    /// each sequence's rows visited in ascending position order against its
+    /// own KV store — so every sequence's logits are bit-identical to
+    /// running it alone (pinned by `rust/tests/fused_batch.rs` across KV
+    /// layouts, weight representations and batch sizes).
+    pub fn forward_fused(
+        &self,
+        batch: &mut dyn FusedSeqAccess,
+        sp: &dyn Sparsifier,
+        scratch: &mut FusedScratch,
+    ) {
+        let n = batch.n_seqs();
+        assert!(n > 0, "empty fused batch");
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let f = cfg.ffn_dim;
+        let hd = cfg.head_dim();
+        let vocab = cfg.vocab_size;
+        // Row layout: sequence i owns rows row0[i]..row0[i+1].
+        scratch.row0.clear();
+        scratch.pos0.clear();
+        let mut p_total = 0usize;
+        for i in 0..n {
+            scratch.row0.push(p_total);
+            let m = batch.tokens(i).len();
+            assert!(m > 0, "fused member {i} contributes no tokens");
+            p_total += m;
+        }
+        scratch.row0.push(p_total);
+        // Reserve + advance every position up front, exactly as
+        // `forward_chunk_mixed` does per sequence.
+        for i in 0..n {
+            let m = batch.tokens(i).len();
+            let mut first = 0usize;
+            for j in 0..m {
+                let t = batch.tokens(i)[j];
+                assert!(t < vocab, "token {t} out of vocab");
+                let cache = batch.cache(i);
+                if j == 0 {
+                    first = cache.seq_len();
+                }
+                assert!(
+                    cache.try_reserve(),
+                    "KV reserve failed at pos {} (capacity {})",
+                    cache.seq_len(),
+                    cache.capacity()
+                );
+                cache.advance();
+            }
+            scratch.pos0.push(first);
+        }
+        scratch.ensure(cfg, p_total);
+        let FusedScratch {
+            xs,
+            normed,
+            q,
+            k,
+            v,
+            attn,
+            o,
+            gate,
+            up,
+            hbuf,
+            down,
+            scores,
+            kept,
+            head,
+            head_logits,
+            row0,
+            pos0,
+        } = scratch;
+        for i in 0..n {
+            let toks = batch.tokens(i);
+            for (j, &t) in toks.iter().enumerate() {
+                let p = row0[i] + j;
+                xs[p * d..(p + 1) * d].copy_from_slice(self.embed.row(t));
+            }
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        for b in 0..cfg.n_layers {
+            let block = &self.blocks[b];
+            // --- attention ---
+            for p in 0..p_total {
+                rmsnorm(
+                    &xs[p * d..(p + 1) * d],
+                    &block.attn_norm,
+                    cfg.rmsnorm_eps,
+                    &mut normed[p * d..(p + 1) * d],
+                );
+            }
+            self.fused_proj(b, LayerKind::Q, sp, normed, q, kept, row0, batch);
+            self.fused_proj(b, LayerKind::K, sp, normed, k, kept, row0, batch);
+            self.fused_proj(b, LayerKind::V, sp, normed, v, kept, row0, batch);
+            for i in 0..n {
+                let m = row0[i + 1] - row0[i];
+                let cache = batch.cache(i);
+                for j in 0..m {
+                    let p = row0[i] + j;
+                    let pos = pos0[i] + j;
+                    for h in 0..cfg.n_heads {
+                        rope_inplace(
+                            &mut q[p * d + h * hd..p * d + (h + 1) * hd],
+                            pos,
+                            cfg.rope_base,
+                        );
+                        rope_inplace(
+                            &mut k[p * d + h * hd..p * d + (h + 1) * hd],
+                            pos,
+                            cfg.rope_base,
+                        );
+                    }
+                    cache.store(b, pos, &k[p * d..(p + 1) * d], &v[p * d..(p + 1) * d]);
+                    for h in 0..cfg.n_heads {
+                        let qh = &q[p * d + h * hd..p * d + (h + 1) * hd];
+                        let sc = &mut scores[..=pos];
+                        cache.with_k(b, pos + 1, &mut |start, rows| {
+                            for (r, kr) in rows.chunks_exact(d).enumerate() {
+                                let kh = &kr[h * hd..(h + 1) * hd];
+                                let mut acc = 0.0f32;
+                                for t in 0..hd {
+                                    acc += qh[t] * kh[t];
+                                }
+                                sc[start + r] = acc * scale;
+                            }
+                        });
+                        softmax_inplace(sc);
+                        let out_h = &mut attn[p * d + h * hd..p * d + (h + 1) * hd];
+                        out_h.fill(0.0);
+                        let sc: &[f32] = sc;
+                        cache.with_v(b, pos + 1, &mut |start, rows| {
+                            for (r, vr) in rows.chunks_exact(d).enumerate() {
+                                let s = sc[start + r];
+                                let vh = &vr[h * hd..(h + 1) * hd];
+                                for t in 0..hd {
+                                    out_h[t] += s * vh[t];
+                                }
+                            }
+                        });
+                    }
+                }
+            }
+            self.fused_proj(b, LayerKind::O, sp, attn, o, kept, row0, batch);
+            for p in 0..p_total {
+                for t in 0..d {
+                    xs[p * d + t] += o[p * d + t];
+                }
+            }
+            // --- MLP (SwiGLU) ---
+            for p in 0..p_total {
+                rmsnorm(
+                    &xs[p * d..(p + 1) * d],
+                    &block.mlp_norm,
+                    cfg.rmsnorm_eps,
+                    &mut normed[p * d..(p + 1) * d],
+                );
+            }
+            self.fused_proj(b, LayerKind::Gate, sp, normed, gate, kept, row0, batch);
+            self.fused_proj(b, LayerKind::Up, sp, normed, up, kept, row0, batch);
+            for p in 0..p_total {
+                for t in 0..f {
+                    hbuf[p * f + t] = silu(gate[p * f + t]) * up[p * f + t];
+                }
+            }
+            self.fused_proj(b, LayerKind::Down, sp, hbuf, down, kept, row0, batch);
+            for p in 0..p_total {
+                for t in 0..d {
+                    xs[p * d + t] += down[p * d + t];
+                }
+            }
+        }
+        for i in 0..n {
+            let m = (row0[i + 1] - row0[i]) as u64;
+            batch.stats(i).tokens += m;
+        }
+        // Gather the rows that need logits, final-norm them, run one fused
+        // lm_head pass, then scatter rows back to each sequence's buffer
+        // (copies preserve bits).
+        let mut nrows = 0usize;
+        for i in 0..n {
+            let (r0, r1) = (row0[i], row0[i + 1]);
+            let sel = match batch.want(i) {
+                ChunkLogits::PerToken => r0..r1,
+                ChunkLogits::LastOnly => (r1 - 1)..r1,
+                ChunkLogits::Skip => r0..r0,
+            };
+            for p in sel {
+                rmsnorm(
+                    &xs[p * d..(p + 1) * d],
+                    &self.final_norm,
+                    cfg.rmsnorm_eps,
+                    &mut head[nrows * d..(nrows + 1) * d],
+                );
+                nrows += 1;
+            }
+        }
+        if nrows > 0 {
+            self.lm_head.gemv_dense_batch(
+                &head[..nrows * d],
+                d,
+                &mut head_logits[..nrows * vocab],
+                vocab,
+                nrows,
+                intra_op_threads(),
+            );
+        }
+        let mut r = 0usize;
+        for i in 0..n {
+            let m = row0[i + 1] - row0[i];
+            match batch.want(i) {
+                ChunkLogits::PerToken => {
+                    let lg = batch.logits(i);
+                    lg.resize(m * vocab, 0.0);
+                    lg.copy_from_slice(&head_logits[r * vocab..(r + m) * vocab]);
+                    r += m;
+                }
+                ChunkLogits::LastOnly => {
+                    let lg = batch.logits(i);
+                    lg.resize(vocab, 0.0);
+                    lg.copy_from_slice(&head_logits[r * vocab..(r + 1) * vocab]);
+                    r += 1;
+                }
+                ChunkLogits::Skip => {}
+            }
+        }
+    }
+
     /// Full-sequence forward. Returns `[T, vocab]` logits. If `block_taps`
     /// is provided it receives, per block, the `[T, d]` inputs to that block
     /// (the calibration capture for Alg. 2-4).
@@ -1054,6 +1414,142 @@ mod tests {
         );
         assert_eq!(untouched, vec![7.0; 3], "Skip must not touch the buffer");
         assert_eq!(cache.len, tokens.len());
+    }
+
+    #[test]
+    fn fused_batch_bit_identical_to_per_sequence() {
+        // Three sequences of different lengths step together through one
+        // fused pass — one plain decode (LastOnly), one multi-token chunk
+        // (PerToken, the speculative-verify shape), one logits-free chunk
+        // (Skip) — and every logit must match the per-sequence paths
+        // bit-for-bit, as must the FLOP accounting.
+        use crate::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+        struct TestBatch {
+            seqs: Vec<(Vec<usize>, KvCache, ForwardStats, Vec<f32>, ChunkLogits)>,
+        }
+        impl FusedSeqAccess for TestBatch {
+            fn n_seqs(&self) -> usize {
+                self.seqs.len()
+            }
+            fn tokens(&self, i: usize) -> &[usize] {
+                &self.seqs[i].0
+            }
+            fn want(&self, i: usize) -> ChunkLogits {
+                self.seqs[i].4
+            }
+            fn cache(&mut self, i: usize) -> &mut dyn KvSeq {
+                &mut self.seqs[i].1
+            }
+            fn stats(&mut self, i: usize) -> &mut ForwardStats {
+                &mut self.seqs[i].2
+            }
+            fn logits(&mut self, i: usize) -> &mut Vec<f32> {
+                &mut self.seqs[i].3
+            }
+        }
+        let m = nano();
+        let sp = ScoredSparsifier::new(
+            "teal",
+            (0..m.cfg.n_layers * 7)
+                .map(|_| ScoredLayer { ga: None, tau: 0.3 })
+                .collect(),
+        );
+        let prompts: [&[usize]; 3] = [&[1, 2, 3], &[7, 9], &[5, 5, 5, 5]];
+        let steps: [&[usize]; 3] = [&[11], &[42, 13, 8], &[99]];
+        let wants = [ChunkLogits::LastOnly, ChunkLogits::PerToken, ChunkLogits::Skip];
+        // Reference: each sequence alone through the per-sequence paths.
+        let mut expect: Vec<Vec<f32>> = Vec::new();
+        let mut expect_stats: Vec<ForwardStats> = Vec::new();
+        for i in 0..3 {
+            let mut cache = KvCache::new(&m.cfg);
+            let mut scratch = Scratch::new(&m.cfg);
+            let mut stats = ForwardStats::default();
+            let mut logits: Vec<f32> = Vec::new();
+            for &t in prompts[i] {
+                m.forward_token(t, &mut cache, &sp, &mut scratch, &mut stats, &mut logits);
+            }
+            m.forward_chunk_mixed(
+                steps[i],
+                &mut cache,
+                &sp,
+                &sp,
+                0,
+                wants[i],
+                &mut scratch,
+                &mut stats,
+                &mut logits,
+            );
+            expect.push(logits);
+            expect_stats.push(stats);
+        }
+        // Fused: same prefills, one batched step.
+        let mut batch = TestBatch { seqs: Vec::new() };
+        for i in 0..3 {
+            let mut cache = KvCache::new(&m.cfg);
+            let mut scratch = Scratch::new(&m.cfg);
+            let mut stats = ForwardStats::default();
+            let mut logits: Vec<f32> = Vec::new();
+            for &t in prompts[i] {
+                m.forward_token(t, &mut cache, &sp, &mut scratch, &mut stats, &mut logits);
+            }
+            batch
+                .seqs
+                .push((steps[i].to_vec(), cache, stats, logits, wants[i]));
+        }
+        let mut fs = FusedScratch::new();
+        m.forward_fused(&mut batch, &sp, &mut fs);
+        for i in 0..3 {
+            let got = &batch.seqs[i].3;
+            assert_eq!(got.len(), expect[i].len(), "seq {i} logits len");
+            for (a, b) in got.iter().zip(&expect[i]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seq {i} first-step logits");
+            }
+            assert_eq!(
+                batch.seqs[i].1.len,
+                prompts[i].len() + steps[i].len(),
+                "seq {i} cache advanced"
+            );
+            let gs = &batch.seqs[i].2;
+            let es = &expect_stats[i];
+            assert_eq!(gs.tokens, es.tokens, "seq {i} tokens");
+            assert_eq!(gs.macs_kept, es.macs_kept, "seq {i} macs_kept");
+            assert_eq!(gs.macs_dense, es.macs_dense, "seq {i} macs_dense");
+            assert_eq!(gs.macs_extra, es.macs_extra, "seq {i} macs_extra");
+        }
+        // A second fused step over fresh single-token chains checks scratch
+        // reuse across steps with a different batch shape.
+        for (i, s) in batch.seqs.iter_mut().enumerate() {
+            s.0 = vec![3 + i];
+            s.4 = ChunkLogits::LastOnly;
+        }
+        m.forward_fused(&mut batch, &sp, &mut fs);
+        for i in 0..3 {
+            let mut cache = KvCache::new(&m.cfg);
+            let mut scratch = Scratch::new(&m.cfg);
+            let mut stats = ForwardStats::default();
+            let mut logits: Vec<f32> = Vec::new();
+            for &t in prompts[i] {
+                m.forward_token(t, &mut cache, &sp, &mut scratch, &mut stats, &mut logits);
+            }
+            m.forward_chunk_mixed(
+                steps[i],
+                &mut cache,
+                &sp,
+                &sp,
+                0,
+                wants[i],
+                &mut scratch,
+                &mut stats,
+                &mut logits,
+            );
+            m.forward_token(3 + i, &mut cache, &sp, &mut scratch, &mut stats, &mut logits);
+            let got = &batch.seqs[i].3;
+            assert_eq!(got.len(), logits.len(), "seq {i} second-step logits len");
+            for (a, b) in got.iter().zip(&logits) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seq {i} second-step logits");
+            }
+            assert_eq!(batch.seqs[i].1.len, cache.len, "seq {i} second-step cache");
+        }
     }
 
     #[test]

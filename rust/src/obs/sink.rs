@@ -64,6 +64,25 @@ pub trait ObsSink: Send + Sync {
     ) {
     }
 
+    /// One batch-fused projection call covering `positions` tokens that
+    /// shared a single weight walk. `kept_sum` is the per-position kept
+    /// counts summed (density accounting); `streamed` is the number of
+    /// weight columns actually read — the *union* of the batch's masks —
+    /// so weight-bytes are charged once per fused call instead of once per
+    /// position (the per-position accounting over-reported bandwidth N×).
+    #[allow(unused_variables)]
+    fn record_proj_batch(
+        &self,
+        layer: LayerId,
+        positions: usize,
+        kept_sum: usize,
+        streamed: usize,
+        in_dim: usize,
+        resident_bytes: usize,
+        dur_ns: u64,
+    ) {
+    }
+
     /// Accumulated per-(block, projection) rows; empty for non-recording sinks.
     fn snapshot(&self) -> Vec<BlockStat> {
         Vec::new()
@@ -134,6 +153,31 @@ impl ObsSink for BlockObs {
         self.bytes[i].fetch_add(touched, Ordering::Relaxed);
     }
 
+    fn record_proj_batch(
+        &self,
+        layer: LayerId,
+        positions: usize,
+        kept_sum: usize,
+        streamed: usize,
+        in_dim: usize,
+        resident_bytes: usize,
+        dur_ns: u64,
+    ) {
+        let i = layer.flat();
+        if i >= self.calls.len() || in_dim == 0 {
+            return;
+        }
+        // Bytes follow the columns the fused walk actually streamed (the
+        // mask union), charged once for the whole batch; density keeps the
+        // per-position sums so the achieved-vs-planned drift stays per-token.
+        let touched = (resident_bytes as u128 * streamed as u128 / in_dim as u128) as u64;
+        self.calls[i].fetch_add(positions as u64, Ordering::Relaxed);
+        self.kept[i].fetch_add(kept_sum as u64, Ordering::Relaxed);
+        self.dense[i].fetch_add((positions * in_dim) as u64, Ordering::Relaxed);
+        self.ns[i].fetch_add(dur_ns, Ordering::Relaxed);
+        self.bytes[i].fetch_add(touched, Ordering::Relaxed);
+    }
+
     fn snapshot(&self) -> Vec<BlockStat> {
         (0..self.calls.len())
             .map(|i| BlockStat {
@@ -177,6 +221,41 @@ mod tests {
         assert!((row.gb_per_s() - 750.0 / 800.0).abs() < 1e-12);
         // Untouched rows stay zeroed but present (one row per projection).
         assert!(rows.iter().filter(|r| r.calls == 0).count() == 13);
+    }
+
+    #[test]
+    fn batch_record_charges_bytes_once_per_fused_call() {
+        let obs = BlockObs::new(2);
+        let id = LayerId::new(0, LayerKind::Gate);
+        // 4 positions sharing one weight walk: union 80 of 128 channels
+        // streamed, per-position kept counts summing to 200.
+        obs.record_proj_batch(id, 4, 200, 80, 128, 1280, 900);
+        let rows = obs.snapshot();
+        let row = rows.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(row.calls, 4);
+        assert_eq!(row.kept_channels, 200);
+        assert_eq!(row.dense_channels, 4 * 128);
+        assert_eq!(row.ns, 900);
+        // bytes = resident * union / in_dim, once — NOT summed per position
+        // (the per-position accounting would have charged 200/128 * 1280).
+        assert_eq!(row.bytes, 1280 * 80 / 128);
+        // The equivalent per-position recording over-reports bytes.
+        let per_pos = BlockObs::new(2);
+        for kept in [80usize, 40, 40, 40] {
+            per_pos.record_proj(id, kept, 128, 1280, 225);
+        }
+        let pp = per_pos.snapshot();
+        let pp_row = pp.iter().find(|r| r.id == id).unwrap();
+        assert!(pp_row.bytes > row.bytes, "{} vs {}", pp_row.bytes, row.bytes);
+        assert_eq!(pp_row.kept_channels, row.kept_channels);
+        assert_eq!(pp_row.dense_channels, row.dense_channels);
+    }
+
+    #[test]
+    fn batch_record_out_of_range_ignored() {
+        let obs = BlockObs::new(1);
+        obs.record_proj_batch(LayerId::new(5, LayerKind::Q), 2, 2, 2, 2, 2, 2);
+        assert!(obs.snapshot().iter().all(|r| r.calls == 0));
     }
 
     #[test]

@@ -20,9 +20,9 @@
 //! sizes and tau regimes.
 
 use crate::quant::matrix::QuantMatrix;
-use crate::sparse_kernel::gemv::PAR_MIN_MACS;
+use crate::sparse_kernel::gemv::{merge_walk_groups, union_count, with_scanned_batch, PAR_MIN_MACS};
 use crate::sparse_kernel::simd::{self, Backend};
-use crate::util::threadpool::parallel_slices_aligned;
+use crate::util::threadpool::{parallel_row_windows, parallel_slices_aligned, SendPtr};
 use std::cell::RefCell;
 
 thread_local! {
@@ -268,6 +268,288 @@ fn dense_rows_quant(backend: Backend, w: &QuantMatrix, x: &[f32], row0: usize, r
     });
 }
 
+// ---------------------------------------------------------------------------
+// Batch-fused kernels (§Tentpole, PR 8): the quant counterparts of
+// `sparse_gemv_masked_batch` / `dense_gemv_batch`. The masked path streams
+// each kept column's *code* bytes once per group flush — the codes stay
+// cache-hot across positions sharing a column, so DRAM sees the union
+// stream — while the dense path dequantizes each eight-column group exactly
+// once into the shared window and replays it across every position (the
+// fused `lm_head` win). Both are bit-identical per position to the
+// per-sequence quant kernels: same scans, same dequant values, same flush
+// grouping.
+// ---------------------------------------------------------------------------
+
+/// Union merge-walk over one row window. Each flush dequantizes the
+/// position's pending columns into the thread-local window before the same
+/// `axpy8` pass `accum_rows_quant` uses.
+///
+/// # Safety
+/// Same disjoint-window contract as the f32 `walk_rows_batch`: the windows
+/// `out_base[p*out_stride + row0 .. + rows]` must be valid for writes and
+/// disjoint from every other live reference.
+#[allow(clippy::too_many_arguments)]
+unsafe fn walk_rows_quant_batch(
+    backend: Backend,
+    w: &QuantMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    idx: &[Vec<u32>],
+    out_base: *mut f32,
+    out_stride: usize,
+    row0: usize,
+    rows: usize,
+) {
+    let window = |p: usize| unsafe {
+        std::slice::from_raw_parts_mut(out_base.add(p * out_stride + row0), rows)
+    };
+    for p in 0..idx.len() {
+        window(p).fill(0.0);
+    }
+    if rows == 0 {
+        return;
+    }
+    DEQ_WIN.with(|cell| {
+        let deq = &mut *cell.borrow_mut();
+        if deq.len() < 8 * rows {
+            deq.resize(8 * rows, 0.0);
+        }
+        let mut coeffs = [0.0f32; 8];
+        let mut offs = [0usize; 8];
+        merge_walk_groups(
+            idx,
+            |p, cols| {
+                let x = &xs[p * in_stride..];
+                for (j, &c) in cols.iter().enumerate() {
+                    let c = c as usize;
+                    coeffs[j] = x[c];
+                    offs[j] = j * rows;
+                    w.dequant_col_range(c, row0, &mut deq[j * rows..(j + 1) * rows]);
+                }
+                simd::axpy8_with(backend, &coeffs, &offs, &deq[..8 * rows], window(p));
+            },
+            |p, c| {
+                let c = c as usize;
+                w.dequant_col_range(c, row0, &mut deq[..rows]);
+                simd::axpy_with(backend, xs[p * in_stride + c], &deq[..rows], window(p));
+            },
+        );
+    });
+}
+
+/// Batch-fused scored/threshold projection over quantized weights on the
+/// process-wide backend. Writes each position's kept count into `kept_out`;
+/// returns the union (distinct streamed) column count.
+#[allow(clippy::too_many_arguments)]
+pub fn quant_gemv_masked_batch(
+    w: &QuantMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    ga: Option<&[f32]>,
+    tau: f32,
+    outs: &mut [f32],
+    out_stride: usize,
+    n_pos: usize,
+    kept_out: &mut [usize],
+    threads: usize,
+) -> usize {
+    quant_gemv_masked_batch_with(
+        simd::active(),
+        w,
+        xs,
+        in_stride,
+        ga,
+        tau,
+        outs,
+        out_stride,
+        n_pos,
+        kept_out,
+        threads,
+        PAR_MIN_MACS,
+    )
+}
+
+/// As [`quant_gemv_masked_batch`] with explicit backend and split threshold.
+#[allow(clippy::too_many_arguments)]
+pub fn quant_gemv_masked_batch_with(
+    backend: Backend,
+    w: &QuantMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    ga: Option<&[f32]>,
+    tau: f32,
+    outs: &mut [f32],
+    out_stride: usize,
+    n_pos: usize,
+    kept_out: &mut [usize],
+    threads: usize,
+    min_macs: usize,
+) -> usize {
+    debug_assert!(n_pos >= 1);
+    debug_assert!(in_stride >= w.n && out_stride >= w.m);
+    debug_assert!(xs.len() >= (n_pos - 1) * in_stride + w.n);
+    debug_assert!(outs.len() >= (n_pos - 1) * out_stride + w.m);
+    debug_assert!(kept_out.len() >= n_pos);
+    with_scanned_batch(
+        n_pos,
+        w.n,
+        |p, l| {
+            let x = &xs[p * in_stride..p * in_stride + w.n];
+            match ga {
+                Some(ga) => {
+                    debug_assert_eq!(ga.len(), w.n);
+                    simd::scan_scored_with(backend, x, ga, tau, l);
+                }
+                None => simd::scan_threshold_with(backend, x, tau, l),
+            }
+            kept_out[p] = l.len();
+        },
+        |idx| {
+            let union = union_count(idx);
+            let base = SendPtr(outs.as_mut_ptr());
+            if threads <= 1 || w.m.saturating_mul(union) < min_macs.max(1) {
+                // Safety: `outs` is exclusively borrowed; serial walk only
+                // writer.
+                unsafe {
+                    walk_rows_quant_batch(backend, w, xs, in_stride, idx, base.0, out_stride, 0, w.m)
+                };
+                return union;
+            }
+            parallel_row_windows(w.m, threads, 8, |row0, rows| {
+                let b = base;
+                // Safety: disjoint row windows per worker, disjoint strided
+                // rows per position.
+                unsafe {
+                    walk_rows_quant_batch(
+                        backend, w, xs, in_stride, idx, b.0, out_stride, row0, rows,
+                    )
+                };
+            });
+            union
+        },
+    )
+}
+
+/// Dense batch row-window accumulation: each eight-column group is
+/// dequantized *once* into the shared window, then replayed across every
+/// position — shared dequant work, identical window contents to
+/// `dense_rows_quant`, so per-position output is bit-identical.
+///
+/// # Safety
+/// Same disjoint-window contract as [`walk_rows_quant_batch`].
+unsafe fn dense_rows_quant_batch(
+    backend: Backend,
+    w: &QuantMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    n_pos: usize,
+    out_base: *mut f32,
+    out_stride: usize,
+    row0: usize,
+    rows: usize,
+) {
+    let n = w.n;
+    let window = |p: usize| unsafe {
+        std::slice::from_raw_parts_mut(out_base.add(p * out_stride + row0), rows)
+    };
+    for p in 0..n_pos {
+        window(p).fill(0.0);
+    }
+    if rows == 0 {
+        return;
+    }
+    DEQ_WIN.with(|cell| {
+        let deq = &mut *cell.borrow_mut();
+        if deq.len() < 8 * rows {
+            deq.resize(8 * rows, 0.0);
+        }
+        let mut coeffs = [0.0f32; 8];
+        let mut offs = [0usize; 8];
+        let mut c = 0usize;
+        while c + 8 <= n {
+            for (j, off) in offs.iter_mut().enumerate() {
+                *off = j * rows;
+                w.dequant_col_range(c + j, row0, &mut deq[j * rows..(j + 1) * rows]);
+            }
+            for p in 0..n_pos {
+                let x = &xs[p * in_stride..];
+                for (j, coeff) in coeffs.iter_mut().enumerate() {
+                    *coeff = x[c + j];
+                }
+                simd::axpy8_with(backend, &coeffs, &offs, &deq[..8 * rows], window(p));
+            }
+            c += 8;
+        }
+        while c < n {
+            w.dequant_col_range(c, row0, &mut deq[..rows]);
+            for p in 0..n_pos {
+                simd::axpy_with(backend, xs[p * in_stride + c], &deq[..rows], window(p));
+            }
+            c += 1;
+        }
+    });
+}
+
+/// Dense batch projection over quantized weights (the fused quant `lm_head`
+/// path). Returns `w.n`.
+pub fn quant_gemv_dense_batch(
+    w: &QuantMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    outs: &mut [f32],
+    out_stride: usize,
+    n_pos: usize,
+    threads: usize,
+) -> usize {
+    quant_gemv_dense_batch_with(
+        simd::active(),
+        w,
+        xs,
+        in_stride,
+        outs,
+        out_stride,
+        n_pos,
+        threads,
+        PAR_MIN_MACS,
+    )
+}
+
+/// As [`quant_gemv_dense_batch`] with explicit backend and split threshold.
+#[allow(clippy::too_many_arguments)]
+pub fn quant_gemv_dense_batch_with(
+    backend: Backend,
+    w: &QuantMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    outs: &mut [f32],
+    out_stride: usize,
+    n_pos: usize,
+    threads: usize,
+    min_macs: usize,
+) -> usize {
+    debug_assert!(n_pos >= 1);
+    debug_assert!(in_stride >= w.n && out_stride >= w.m);
+    debug_assert!(xs.len() >= (n_pos - 1) * in_stride + w.n);
+    debug_assert!(outs.len() >= (n_pos - 1) * out_stride + w.m);
+    let base = SendPtr(outs.as_mut_ptr());
+    if threads <= 1 || w.m.saturating_mul(w.n) < min_macs.max(1) {
+        // Safety: `outs` is exclusively borrowed; serial walk only writer.
+        unsafe {
+            dense_rows_quant_batch(backend, w, xs, in_stride, n_pos, base.0, out_stride, 0, w.m)
+        };
+        return w.n;
+    }
+    parallel_row_windows(w.m, threads, 8, |row0, rows| {
+        let b = base;
+        // Safety: disjoint row windows per worker, disjoint strided rows per
+        // position.
+        unsafe {
+            dense_rows_quant_batch(backend, w, xs, in_stride, n_pos, b.0, out_stride, row0, rows)
+        };
+    });
+    w.n
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -397,5 +679,98 @@ mod tests {
         let kept = quant_gemv_fused(&q, &x, Some(&ga), f32::INFINITY, &mut out, &mut idx);
         assert_eq!(kept, 0);
         assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn masked_batch_bit_identical_to_per_position() {
+        let (m, n, n_pos) = (29usize, 41usize, 5usize);
+        let backend = crate::sparse_kernel::simd::active();
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let (w, _, ga) = setup(m, n, 7);
+            let q = QuantMatrix::quantize(&w, mode, 16);
+            let mut rng = Pcg64::new(0x5EED);
+            let in_stride = n + 3;
+            let mut xs = vec![f32::NAN; n_pos * in_stride];
+            for p in 0..n_pos {
+                for c in 0..n {
+                    xs[p * in_stride + c] = rng.normal() as f32;
+                }
+            }
+            for ga_opt in [Some(ga.as_slice()), None] {
+                for tau in [0.0f32, 0.4, f32::INFINITY] {
+                    let mut refs = vec![0.0f32; n_pos * m];
+                    let mut kept_ref = vec![0usize; n_pos];
+                    let mut idx = Vec::new();
+                    for p in 0..n_pos {
+                        kept_ref[p] = quant_gemv_fused_with(
+                            backend,
+                            &q,
+                            &xs[p * in_stride..p * in_stride + n],
+                            ga_opt,
+                            tau,
+                            &mut refs[p * m..(p + 1) * m],
+                            &mut idx,
+                        );
+                    }
+                    for threads in [1usize, 3] {
+                        let mut outs = vec![f32::NAN; n_pos * m];
+                        let mut kept = vec![0usize; n_pos];
+                        let union = quant_gemv_masked_batch_with(
+                            backend, &q, &xs, in_stride, ga_opt, tau, &mut outs, m, n_pos,
+                            &mut kept, threads, 0,
+                        );
+                        assert_eq!(kept, kept_ref, "{} tau {tau}", mode.name());
+                        assert!(union >= kept.iter().copied().max().unwrap_or(0));
+                        for i in 0..n_pos * m {
+                            assert_eq!(
+                                outs[i].to_bits(),
+                                refs[i].to_bits(),
+                                "{} tau {tau} threads {threads} idx {i}",
+                                mode.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_batch_bit_identical_to_per_position() {
+        let (m, n, n_pos) = (27usize, 19usize, 4usize);
+        let backend = crate::sparse_kernel::simd::active();
+        for mode in [QuantMode::Int8, QuantMode::Int4] {
+            let (w, _, _) = setup(m, n, 83);
+            let q = QuantMatrix::quantize(&w, mode, 8);
+            let mut rng = Pcg64::new(0xBA7C);
+            let mut xs = vec![0.0f32; n_pos * n];
+            for v in xs.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+            let mut refs = vec![0.0f32; n_pos * m];
+            for p in 0..n_pos {
+                quant_gemv_dense_with(
+                    backend,
+                    &q,
+                    &xs[p * n..(p + 1) * n],
+                    &mut refs[p * m..(p + 1) * m],
+                );
+            }
+            for threads in [1usize, 4] {
+                let mut outs = vec![f32::NAN; n_pos * m];
+                let streamed = quant_gemv_dense_batch_with(
+                    backend, &q, &xs, n, &mut outs, m, n_pos, threads, 0,
+                );
+                assert_eq!(streamed, n);
+                for i in 0..n_pos * m {
+                    assert_eq!(
+                        outs[i].to_bits(),
+                        refs[i].to_bits(),
+                        "{} threads {threads} idx {i}",
+                        mode.name()
+                    );
+                }
+            }
+        }
     }
 }

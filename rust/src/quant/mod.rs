@@ -21,13 +21,15 @@ pub mod gemv;
 pub mod matrix;
 
 pub use gemv::{
-    quant_gemv_dense_parallel, quant_gemv_dense_with, quant_gemv_fused,
-    quant_gemv_fused_parallel, quant_gemv_fused_with, quant_gemv_scored_collect,
+    quant_gemv_dense_batch, quant_gemv_dense_parallel, quant_gemv_dense_with, quant_gemv_fused,
+    quant_gemv_fused_parallel, quant_gemv_fused_with, quant_gemv_masked_batch,
+    quant_gemv_scored_collect,
 };
 pub use matrix::{QuantMatrix, QuantMode};
 
 use crate::sparse_kernel::gemv::{
-    dense_gemv_parallel, sparse_gemv_fused_parallel, sparse_gemv_scored_collect,
+    dense_gemv_batch, dense_gemv_parallel, sparse_gemv_fused_parallel, sparse_gemv_masked_batch,
+    sparse_gemv_scored_collect,
 };
 use crate::sparse_kernel::ColMajorMatrix;
 use crate::tensor::Tensor;
@@ -83,6 +85,64 @@ pub trait WeightRepr: Send + Sync {
         out: &mut [f32],
         kept_buf: &mut Vec<usize>,
     ) -> usize;
+
+    /// Batched dense projection: position `p` reads `xs[p*in_stride..][..n]`
+    /// and writes `outs[p*out_stride..][..m]`. Returns the number of
+    /// channels streamed (n). The fallback streams the weights once per
+    /// position; batch-aware reprs stream them once for the whole batch.
+    fn gemv_dense_batch(
+        &self,
+        xs: &[f32],
+        in_stride: usize,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        threads: usize,
+    ) -> usize {
+        for p in 0..n_pos {
+            let x = &xs[p * in_stride..p * in_stride + self.in_dim()];
+            let out = &mut outs[p * out_stride..p * out_stride + self.out_dim()];
+            self.gemv_dense(x, out, threads);
+        }
+        self.in_dim()
+    }
+
+    /// Batched masked projection over the same strided layout as
+    /// [`WeightRepr::gemv_dense_batch`], one mask per position (shared
+    /// `ga`/`tau`). `kept_out[p]` gets position `p`'s kept count; the return
+    /// value is the number of weight columns streamed — the *union* of the
+    /// batch's masks for batch-fused reprs, the sum for the per-position
+    /// fallback.
+    fn gemv_masked_batch(
+        &self,
+        xs: &[f32],
+        in_stride: usize,
+        ga: Option<&[f32]>,
+        tau: f32,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        kept_out: &mut [usize],
+        threads: usize,
+    ) -> usize {
+        BATCH_FALLBACK_IDX.with(|cell| {
+            let idx = &mut *cell.borrow_mut();
+            let mut streamed = 0usize;
+            for p in 0..n_pos {
+                let x = &xs[p * in_stride..p * in_stride + self.in_dim()];
+                let out = &mut outs[p * out_stride..p * out_stride + self.out_dim()];
+                kept_out[p] = self.gemv_masked(x, ga, tau, out, idx, threads);
+                streamed += kept_out[p];
+            }
+            streamed
+        })
+    }
+}
+
+thread_local! {
+    /// Kept-index scratch for the default (per-position) batch fallbacks.
+    static BATCH_FALLBACK_IDX: std::cell::RefCell<Vec<u32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
 }
 
 impl WeightRepr for ColMajorMatrix {
@@ -136,6 +196,35 @@ impl WeightRepr for ColMajorMatrix {
     ) -> usize {
         sparse_gemv_scored_collect(self, x, ga, tau, out, kept_buf)
     }
+
+    fn gemv_dense_batch(
+        &self,
+        xs: &[f32],
+        in_stride: usize,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        threads: usize,
+    ) -> usize {
+        dense_gemv_batch(self, xs, in_stride, outs, out_stride, n_pos, threads)
+    }
+
+    fn gemv_masked_batch(
+        &self,
+        xs: &[f32],
+        in_stride: usize,
+        ga: Option<&[f32]>,
+        tau: f32,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        kept_out: &mut [usize],
+        threads: usize,
+    ) -> usize {
+        sparse_gemv_masked_batch(
+            self, xs, in_stride, ga, tau, outs, out_stride, n_pos, kept_out, threads,
+        )
+    }
 }
 
 impl WeightRepr for QuantMatrix {
@@ -188,6 +277,35 @@ impl WeightRepr for QuantMatrix {
         kept_buf: &mut Vec<usize>,
     ) -> usize {
         quant_gemv_scored_collect(self, x, ga, tau, out, kept_buf)
+    }
+
+    fn gemv_dense_batch(
+        &self,
+        xs: &[f32],
+        in_stride: usize,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        threads: usize,
+    ) -> usize {
+        quant_gemv_dense_batch(self, xs, in_stride, outs, out_stride, n_pos, threads)
+    }
+
+    fn gemv_masked_batch(
+        &self,
+        xs: &[f32],
+        in_stride: usize,
+        ga: Option<&[f32]>,
+        tau: f32,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        kept_out: &mut [usize],
+        threads: usize,
+    ) -> usize {
+        quant_gemv_masked_batch(
+            self, xs, in_stride, ga, tau, outs, out_stride, n_pos, kept_out, threads,
+        )
     }
 }
 
@@ -305,6 +423,43 @@ impl WeightRepr for WeightMat {
             WeightMat::Quant(q) => q.gemv_masked_collect(x, ga, tau, out, kept_buf),
         }
     }
+
+    fn gemv_dense_batch(
+        &self,
+        xs: &[f32],
+        in_stride: usize,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        threads: usize,
+    ) -> usize {
+        match self {
+            WeightMat::Dense(d) => d.gemv_dense_batch(xs, in_stride, outs, out_stride, n_pos, threads),
+            WeightMat::Quant(q) => q.gemv_dense_batch(xs, in_stride, outs, out_stride, n_pos, threads),
+        }
+    }
+
+    fn gemv_masked_batch(
+        &self,
+        xs: &[f32],
+        in_stride: usize,
+        ga: Option<&[f32]>,
+        tau: f32,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        kept_out: &mut [usize],
+        threads: usize,
+    ) -> usize {
+        match self {
+            WeightMat::Dense(d) => d.gemv_masked_batch(
+                xs, in_stride, ga, tau, outs, out_stride, n_pos, kept_out, threads,
+            ),
+            WeightMat::Quant(q) => q.gemv_masked_batch(
+                xs, in_stride, ga, tau, outs, out_stride, n_pos, kept_out, threads,
+            ),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -347,6 +502,39 @@ mod tests {
         assert_eq!(q.gemv_dense(&x, &mut b, 1), 24);
         for i in 0..16 {
             assert!((a[i] - b[i]).abs() < 0.1, "row {i}: {} vs {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn batch_dispatch_matches_per_position() {
+        let w = random_mat(16, 24, 21);
+        let q = w.quantized(QuantMode::Int8, 8);
+        let mut rng = Pcg64::new(5);
+        let n_pos = 3;
+        let xs: Vec<f32> = (0..n_pos * 24).map(|_| rng.normal() as f32).collect();
+        for repr in [&w, &q] {
+            let ga = WeightRepr::col_l2_norms(repr);
+            let mut outs = vec![0.0f32; n_pos * 16];
+            let mut kept = vec![0usize; n_pos];
+            repr.gemv_masked_batch(&xs, 24, Some(&ga), 0.4, &mut outs, 16, n_pos, &mut kept, 1);
+            for p in 0..n_pos {
+                let mut one = vec![0.0f32; 16];
+                let mut idx = Vec::new();
+                let k = repr.gemv_masked(&xs[p * 24..(p + 1) * 24], Some(&ga), 0.4, &mut one, &mut idx, 1);
+                assert_eq!(k, kept[p], "{} pos {p} kept", repr.repr_name());
+                for r in 0..16 {
+                    assert_eq!(outs[p * 16 + r].to_bits(), one[r].to_bits());
+                }
+            }
+            let mut outs = vec![0.0f32; n_pos * 16];
+            assert_eq!(repr.gemv_dense_batch(&xs, 24, &mut outs, 16, n_pos, 1), 24);
+            for p in 0..n_pos {
+                let mut one = vec![0.0f32; 16];
+                repr.gemv_dense(&xs[p * 24..(p + 1) * 24], &mut one, 1);
+                for r in 0..16 {
+                    assert_eq!(outs[p * 16 + r].to_bits(), one[r].to_bits());
+                }
+            }
         }
     }
 

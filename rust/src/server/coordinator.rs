@@ -848,15 +848,17 @@ impl Coordinator {
             // One decode step across the batch: only prefilled, unfinished
             // sequences enter (chunks stay balanced when completions
             // cluster); the decode policy itself is shared with
-            // `Engine::step_batch`. A speculative coordinator runs one
-            // draft/verify round per armed sequence instead, which can
-            // commit several tokens at once — per-token latency divides by
-            // the tokens actually committed.
+            // `Engine::step_batch` — batch-fused by default (`--fused-batch`:
+            // one forward pass streams each layer's weights once for the
+            // whole batch), per-sequence otherwise. A speculative
+            // coordinator runs one draft/verify round per armed sequence
+            // instead, which can commit several tokens at once — per-token
+            // latency divides by the tokens actually committed.
             //
-            // Per-sequence panic isolation lives in the step closure: the
-            // `catch_unwind` runs *inside* the worker that owns the slot,
-            // so a panic never crosses `parallel_slices`' thread boundary
-            // and only the poisoned sequence aborts `internal_error`.
+            // Per-sequence panic isolation lives inside the supervised
+            // step: each member's sequential phase runs under its own
+            // `catch_unwind`, so a poisoned sequence aborts
+            // `internal_error` while batchmates keep decoding.
             let t0 = Instant::now();
             let mut decoded = false;
             let committed = {
@@ -871,26 +873,8 @@ impl Coordinator {
                     decoded = true;
                     let before: usize = seqs.iter().map(|s| s.generated.len()).sum();
                     match &self.spec {
-                        Some(spec) => {
-                            self.engine.step_slots_with(&mut seqs[..], |seq| {
-                                if catch_unwind(AssertUnwindSafe(|| spec.step_one(seq)))
-                                    .is_err()
-                                {
-                                    seq.abort(FinishReason::InternalError);
-                                }
-                            });
-                        }
-                        None => {
-                            self.engine.step_slots_with(&mut seqs[..], |seq| {
-                                if catch_unwind(AssertUnwindSafe(|| {
-                                    self.engine.decode_one(seq)
-                                }))
-                                .is_err()
-                                {
-                                    seq.abort(FinishReason::InternalError);
-                                }
-                            });
-                        }
+                        Some(spec) => spec.step_slots_supervised(&mut seqs[..]),
+                        None => self.engine.step_slots_supervised(&mut seqs[..]),
                     }
                     let after: usize = seqs.iter().map(|s| s.generated.len()).sum();
                     after - before

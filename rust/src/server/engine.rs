@@ -18,13 +18,17 @@ use crate::data::corpus::{detokenize, tokenize};
 use crate::kv::{KvCfg, KvManager, KvSeq, PagedSeq};
 use crate::model::kv_cache::KvCache;
 use crate::model::sampler::{residual_sample, sample_from, spec_accept, Sampling};
-use crate::model::transformer::{ChunkLogits, ForwardStats, Model, Scratch};
+use crate::model::transformer::{
+    ChunkLogits, ForwardStats, FusedScratch, FusedSeqAccess, Model, Scratch,
+};
 use crate::obs::tracer;
 use crate::server::faults::{FaultPoint, Faults};
 use crate::sparsity::{Dense, Sparsifier};
 use crate::tensor::ops::argmax;
 use crate::util::rng::Pcg64;
 use crate::util::threadpool::parallel_slices;
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 
 /// Engine configuration.
@@ -44,6 +48,12 @@ pub struct EngineCfg {
     /// multiply.
     pub threads: usize,
     pub seed: u64,
+    /// Fuse multi-sequence decode steps into one layer-major pass
+    /// ([`Model::forward_fused`]): the batch's weights stream from memory
+    /// once per step under the union of the per-sequence masks, instead of
+    /// once per sequence (`--fused-batch`). Bit-identical to the
+    /// per-sequence path; batches of one fall back to it automatically.
+    pub fused_batch: bool,
 }
 
 impl Default for EngineCfg {
@@ -53,6 +63,7 @@ impl Default for EngineCfg {
             prefill_chunk: 64,
             threads: crate::util::threadpool::num_threads(),
             seed: 0xD_EC0DE,
+            fused_batch: true,
         }
     }
 }
@@ -143,6 +154,12 @@ pub struct SpecState {
     chunk_logits: Vec<f32>,
     /// Target-distribution scratch for the accept/residual math.
     pbuf: Vec<f32>,
+    /// Chain length of the round in flight between the draft phase and the
+    /// verify/accept phase (fused steps split the round around the shared
+    /// forward pass).
+    fused_m: usize,
+    /// KV length at the start of the in-flight round's chain.
+    fused_l0: usize,
 }
 
 impl SpecState {
@@ -227,6 +244,11 @@ pub struct SeqState {
     /// Tracing context (trace id, root span, decode-gap tracking).
     pub obs: SeqObs,
     finish_override: Option<FinishReason>,
+    /// Set while the sequence participates in the current fused/supervised
+    /// batch step; the step's gap sweep clears it and charges the gap
+    /// against the *batch* window, so time spent decoding batch-mates in
+    /// the same step never counts as this sequence's idle gap.
+    stepped_in_batch: bool,
 }
 
 impl SeqState {
@@ -281,6 +303,139 @@ impl SeqState {
             }
         }
         self.obs.prev_step_end_ns = end_ns;
+    }
+}
+
+/// Uniform mutable access to a step's sequence slots, so the fused decode
+/// step runs unchanged over an owned batch (`&mut [SeqState]`, the
+/// `step_batch` path) and over the coordinator's borrowed slot views
+/// (`&mut [&mut SeqState]`).
+pub trait SlotsMut {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn get(&self, i: usize) -> &SeqState;
+    fn get_mut(&mut self, i: usize) -> &mut SeqState;
+}
+
+impl SlotsMut for [SeqState] {
+    fn len(&self) -> usize {
+        <[SeqState]>::len(self)
+    }
+    fn get(&self, i: usize) -> &SeqState {
+        &self[i]
+    }
+    fn get_mut(&mut self, i: usize) -> &mut SeqState {
+        &mut self[i]
+    }
+}
+
+impl<'s> SlotsMut for [&'s mut SeqState] {
+    fn len(&self) -> usize {
+        <[&'s mut SeqState]>::len(self)
+    }
+    fn get(&self, i: usize) -> &SeqState {
+        &*self[i]
+    }
+    fn get_mut(&mut self, i: usize) -> &mut SeqState {
+        &mut *self[i]
+    }
+}
+
+/// How a batch member participates in a fused step: one plain decode token,
+/// or a speculative verify chain.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum FusedMode {
+    Plain,
+    Spec,
+}
+
+/// Per-thread fused-step context: the member index/token lists and the
+/// shared forward scratch, reused across steps so steady-state fused decode
+/// allocates nothing at the batch layer.
+#[derive(Default)]
+struct FusedCtx {
+    idx: Vec<usize>,
+    toks: Vec<usize>,
+    mode: Vec<FusedMode>,
+    scratch: FusedScratch,
+}
+
+thread_local! {
+    static FUSED_CTX: RefCell<FusedCtx> = RefCell::new(FusedCtx::default());
+}
+
+/// [`FusedSeqAccess`] view of a plain decode batch: every member contributes
+/// exactly one sampled token and wants only that token's logits.
+struct DecodeBatch<'a, S: SlotsMut + ?Sized> {
+    slots: &'a mut S,
+    idx: &'a [usize],
+    toks: &'a [usize],
+}
+
+impl<S: SlotsMut + ?Sized> FusedSeqAccess for DecodeBatch<'_, S> {
+    fn n_seqs(&self) -> usize {
+        self.idx.len()
+    }
+    fn tokens(&self, i: usize) -> &[usize] {
+        &self.toks[i..i + 1]
+    }
+    fn want(&self, _i: usize) -> ChunkLogits {
+        ChunkLogits::LastOnly
+    }
+    fn cache(&mut self, i: usize) -> &mut dyn KvSeq {
+        self.slots.get_mut(self.idx[i]).kv.as_dyn()
+    }
+    fn stats(&mut self, i: usize) -> &mut ForwardStats {
+        &mut self.slots.get_mut(self.idx[i]).stats
+    }
+    fn logits(&mut self, i: usize) -> &mut Vec<f32> {
+        &mut self.slots.get_mut(self.idx[i]).last_logits
+    }
+}
+
+/// [`FusedSeqAccess`] view of a mixed speculative/plain batch: speculative
+/// members verify their whole draft chain (per-token logits into the spec
+/// verify buffer), plain members decode one token.
+struct SpecBatch<'a, S: SlotsMut + ?Sized> {
+    slots: &'a mut S,
+    idx: &'a [usize],
+    mode: &'a [FusedMode],
+    toks: &'a [usize],
+}
+
+impl<S: SlotsMut + ?Sized> FusedSeqAccess for SpecBatch<'_, S> {
+    fn n_seqs(&self) -> usize {
+        self.idx.len()
+    }
+    fn tokens(&self, i: usize) -> &[usize] {
+        match self.mode[i] {
+            FusedMode::Plain => &self.toks[i..i + 1],
+            FusedMode::Spec => {
+                let seq = self.slots.get(self.idx[i]);
+                &seq.spec.chain[..seq.spec.fused_m]
+            }
+        }
+    }
+    fn want(&self, i: usize) -> ChunkLogits {
+        match self.mode[i] {
+            FusedMode::Plain => ChunkLogits::LastOnly,
+            FusedMode::Spec => ChunkLogits::PerToken,
+        }
+    }
+    fn cache(&mut self, i: usize) -> &mut dyn KvSeq {
+        self.slots.get_mut(self.idx[i]).kv.as_dyn()
+    }
+    fn stats(&mut self, i: usize) -> &mut ForwardStats {
+        &mut self.slots.get_mut(self.idx[i]).stats
+    }
+    fn logits(&mut self, i: usize) -> &mut Vec<f32> {
+        let seq = self.slots.get_mut(self.idx[i]);
+        match self.mode[i] {
+            FusedMode::Plain => &mut seq.last_logits,
+            FusedMode::Spec => &mut seq.spec.chunk_logits,
+        }
     }
 }
 
@@ -377,6 +532,7 @@ impl Engine {
                 ..SeqObs::default()
             },
             finish_override: None,
+            stepped_in_batch: false,
         }
     }
 
@@ -616,18 +772,43 @@ impl Engine {
     /// one remaining allocation source on very large models.)
     pub fn decode_one(&self, seq: &mut SeqState) {
         debug_assert!(seq.prefilled && !seq.finished());
-        // Span + gap tracking are allocation-free (preallocated ring, fixed
-        // attrs): the steady-state zero-alloc invariant still holds.
         let t = tracer();
         let step_start_ns = t.now_ns();
+        self.decode_one_inner(seq);
+        seq.note_step_gap(step_start_ns, t.now_ns());
+    }
+
+    /// `decode_one` without the gap bookkeeping — the batched/supervised
+    /// steps measure the gap against the whole batch window instead.
+    fn decode_one_inner(&self, seq: &mut SeqState) {
+        if let Some(next) = self.fused_phase_a_plain(seq) {
+            self.model.forward_token(
+                next,
+                seq.kv.as_dyn(),
+                self.sparsifier.as_ref(),
+                &mut seq.scratch,
+                &mut seq.stats,
+                &mut seq.last_logits,
+            );
+        }
+    }
+
+    /// The sequential half of a plain decode step: sample the next token
+    /// from `last_logits`, commit it, and reserve KV for its forward pass.
+    /// Returns the token to forward, or `None` when the sequence finished
+    /// (length reached, or `cache_full`) without needing a forward.
+    ///
+    /// Span + gap tracking are allocation-free (preallocated ring, fixed
+    /// attrs): the steady-state zero-alloc invariant still holds.
+    fn fused_phase_a_plain(&self, seq: &mut SeqState) -> Option<usize> {
+        let t = tracer();
         let mut span = t.start(seq.obs.trace, seq.obs.root, "decode_step");
         span.attr("pos", seq.kv.seq_len() as f64);
         self.faults.maybe_panic(FaultPoint::DecodePanic);
         let next = seq.sampling.sample(&seq.last_logits, &mut seq.rng);
         seq.generated.push(next);
         if seq.finished() {
-            seq.note_step_gap(step_start_ns, t.now_ns());
-            return;
+            return None;
         }
         if !self.reserve_seq(seq) {
             // Pool exhausted and nothing evictable: stop early rather than
@@ -635,27 +816,146 @@ impl Engine {
             // step; standalone engine users see a `cache_full` finish.
             seq.finish_override = Some(FinishReason::CacheFull);
             span.attr("cache_full", 1.0);
-            seq.note_step_gap(step_start_ns, t.now_ns());
-            return;
+            return None;
         }
-        self.model.forward_token(
-            next,
-            seq.kv.as_dyn(),
-            self.sparsifier.as_ref(),
-            &mut seq.scratch,
-            &mut seq.stats,
-            &mut seq.last_logits,
-        );
-        seq.note_step_gap(step_start_ns, t.now_ns());
+        Some(next)
     }
 
-    /// One decode step across a batch of sequences, parallel over
-    /// sequences. Finished sequences are filtered out before the split so
-    /// chunks stay balanced even when completions cluster.
+    /// One decode step across a batch of sequences. With `cfg.fused_batch`
+    /// (the default) the step runs batch-fused: every member samples and
+    /// reserves sequentially, then one [`Model::forward_fused`] pass streams
+    /// each layer's weights once for the whole batch. Without it, the step
+    /// falls back to per-sequence decode parallel over sequences. Neither
+    /// path allocates per step: the fused member lists live in reusable
+    /// thread-local scratch, and the per-sequence path iterates the slots
+    /// in place instead of collecting the active subset.
     pub fn step_batch(&self, seqs: &mut [SeqState]) {
-        let mut active: Vec<&mut SeqState> =
-            seqs.iter_mut().filter(|s| !s.finished()).collect();
-        self.step_slots(&mut active[..]);
+        if self.cfg.fused_batch {
+            self.step_fused(seqs);
+            return;
+        }
+        let threads = self.cfg.threads.min(seqs.len());
+        if threads <= 1 {
+            for seq in seqs.iter_mut() {
+                if !seq.finished() && seq.prefill_complete() {
+                    self.decode_one(seq);
+                }
+            }
+            return;
+        }
+        parallel_slices(seqs, threads, |_, _, chunk| {
+            for seq in chunk.iter_mut() {
+                if !seq.finished() && seq.prefill_complete() {
+                    self.decode_one(seq);
+                }
+            }
+        });
+    }
+
+    /// One batch-fused decode step over the step's slots. Three phases:
+    /// (A) per sequence, sample + commit the next token and reserve its KV
+    /// slot — panics here abort only that member; (B) one shared
+    /// [`Model::forward_fused`] pass over everything still standing (a
+    /// single survivor takes the plain `forward_token` path instead, where
+    /// fusion has nothing to amortize); (C) charge every participant's
+    /// decode gap against the batch window, so time spent decoding
+    /// batch-mates never inflates `decode_gap_ms_p95`.
+    pub(crate) fn step_fused<S: SlotsMut + ?Sized>(&self, slots: &mut S) {
+        let t = tracer();
+        let batch_start_ns = t.now_ns();
+        FUSED_CTX.with(|cell| {
+            let ctx = &mut *cell.borrow_mut();
+            let FusedCtx {
+                idx, toks, scratch, ..
+            } = ctx;
+            idx.clear();
+            toks.clear();
+            for s in 0..slots.len() {
+                let seq = slots.get_mut(s);
+                if seq.finished() || !seq.prefill_complete() {
+                    continue;
+                }
+                seq.stepped_in_batch = true;
+                match catch_unwind(AssertUnwindSafe(|| self.fused_phase_a_plain(seq))) {
+                    Ok(Some(next)) => {
+                        idx.push(s);
+                        toks.push(next);
+                    }
+                    Ok(None) => {}
+                    Err(_) => seq.abort(FinishReason::InternalError),
+                }
+            }
+            if idx.len() == 1 {
+                let seq = slots.get_mut(idx[0]);
+                let next = toks[0];
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    self.model.forward_token(
+                        next,
+                        seq.kv.as_dyn(),
+                        self.sparsifier.as_ref(),
+                        &mut seq.scratch,
+                        &mut seq.stats,
+                        &mut seq.last_logits,
+                    );
+                }));
+                if r.is_err() {
+                    seq.abort(FinishReason::InternalError);
+                }
+            } else if idx.len() > 1 {
+                let mut batch = DecodeBatch {
+                    slots: &mut *slots,
+                    idx: &idx[..],
+                    toks: &toks[..],
+                };
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    self.model
+                        .forward_fused(&mut batch, self.sparsifier.as_ref(), scratch);
+                }));
+                if r.is_err() {
+                    // A panic mid-fused-pass leaves every member's KV/logits
+                    // in an unknown state: the whole batch fails together.
+                    for &s in idx.iter() {
+                        slots.get_mut(s).abort(FinishReason::InternalError);
+                    }
+                }
+            }
+        });
+        let end_ns = t.now_ns();
+        for s in 0..slots.len() {
+            let seq = slots.get_mut(s);
+            if seq.stepped_in_batch {
+                seq.stepped_in_batch = false;
+                seq.note_step_gap(batch_start_ns, end_ns);
+            }
+        }
+    }
+
+    /// One supervised decode step over the coordinator's slot views:
+    /// fused when configured, otherwise per-sequence with the same
+    /// per-member panic isolation and batch-window gap attribution.
+    pub fn step_slots_supervised(&self, slots: &mut [&mut SeqState]) {
+        if slots.is_empty() {
+            return;
+        }
+        if self.cfg.fused_batch {
+            self.step_fused(slots);
+            return;
+        }
+        let t = tracer();
+        let batch_start_ns = t.now_ns();
+        self.step_slots_with(slots, |seq| {
+            seq.stepped_in_batch = true;
+            if catch_unwind(AssertUnwindSafe(|| self.decode_one_inner(seq))).is_err() {
+                seq.abort(FinishReason::InternalError);
+            }
+        });
+        let end_ns = t.now_ns();
+        for seq in slots.iter_mut() {
+            if seq.stepped_in_batch {
+                seq.stepped_in_batch = false;
+                seq.note_step_gap(batch_start_ns, end_ns);
+            }
+        }
     }
 
     /// One decode step over a set of sequence slots — the shared policy
@@ -740,6 +1040,18 @@ impl Default for SpecCfg {
     }
 }
 
+/// Outcome of a speculative round's sequential first half
+/// ([`SpecEngine::spec_phase_a`]).
+enum SpecPhase {
+    /// The chain is drafted and rewound: run the verify pass, then
+    /// [`SpecEngine::spec_phase_c`].
+    Verify,
+    /// The sequence finished on the free first token; nothing to verify.
+    Done,
+    /// KV exhausted before the round could reserve its footprint.
+    CacheFull,
+}
+
 /// Self-speculative decoding: the same weights at a high-sparsity
 /// [`Sparsifier`] act as a free draft model for the production-sparsity
 /// configuration. Each round drafts a chain of tokens sequentially at draft
@@ -808,13 +1120,40 @@ impl SpecEngine {
     /// except a final unforwarded token, `last_logits` predicting the next
     /// position), so rounds and plain decode steps interleave freely.
     pub fn spec_round(&self, seq: &mut SeqState) {
-        debug_assert!(seq.prefilled && !seq.finished());
         let t = tracer();
         let round_start_ns = t.now_ns();
+        self.spec_round_inner(seq);
+        seq.note_step_gap(round_start_ns, t.now_ns());
+    }
+
+    /// `spec_round` without the gap bookkeeping — the batched/supervised
+    /// steps measure the gap against the whole batch window instead.
+    fn spec_round_inner(&self, seq: &mut SeqState) {
+        debug_assert!(seq.prefilled && !seq.finished());
+        let t = tracer();
         let mut round = t.start(seq.obs.trace, seq.obs.root, "spec_round");
         self.verify.faults.maybe_panic(FaultPoint::DecodePanic);
+        match self.spec_phase_a(seq, round.id()) {
+            SpecPhase::Done => {}
+            SpecPhase::CacheFull => round.attr("cache_full", 1.0),
+            SpecPhase::Verify => {
+                self.spec_verify_one(seq, round.id());
+                let (m, a) = self.spec_phase_c(seq);
+                round.attr("drafted", (m - 1) as f64);
+                round.attr("accepted", (a - 1) as f64);
+            }
+        }
+    }
+
+    /// The sequential first half of a speculative round: commit the free
+    /// first token, reserve the round's KV footprint, draft the chain at
+    /// draft sparsity and rewind the draft KV. On [`SpecPhase::Verify`] the
+    /// chain (`spec.chain[..spec.fused_m]`) is ready for a production-
+    /// sparsity verify pass — standalone via [`SpecEngine::spec_verify_one`],
+    /// batched via the shared fused forward.
+    fn spec_phase_a(&self, seq: &mut SeqState, parent: u64) -> SpecPhase {
+        let t = tracer();
         let model = &self.verify.model;
-        let vocab = model.cfg.vocab_size;
         let greedy = matches!(seq.sampling, Sampling::Greedy);
 
         // The free first token: the production-quality decision already in
@@ -822,8 +1161,7 @@ impl SpecEngine {
         let d1 = seq.sampling.sample(&seq.last_logits, &mut seq.rng);
         seq.generated.push(d1);
         if seq.finished() {
-            seq.note_step_gap(round_start_ns, t.now_ns());
-            return; // hit max_new: token committed unforwarded, like decode_one
+            return SpecPhase::Done; // hit max_new: committed unforwarded
         }
 
         // Chain length: capped by the remaining budget so the speculative
@@ -834,9 +1172,7 @@ impl SpecEngine {
         let have = self.verify.reserve_ahead(seq, want);
         if have == 0 {
             seq.finish_override = Some(FinishReason::CacheFull);
-            round.attr("cache_full", 1.0);
-            seq.note_step_gap(round_start_ns, t.now_ns());
-            return;
+            return SpecPhase::CacheFull;
         }
         let m = want.min(have);
         let l0 = seq.kv.seq_len();
@@ -849,7 +1185,6 @@ impl SpecEngine {
         let mut chain = std::mem::take(&mut seq.spec.chain);
         let mut qall = std::mem::take(&mut seq.spec.draft_probs);
         let mut qstep = std::mem::take(&mut seq.spec.qstep);
-        let mut vlog = std::mem::take(&mut seq.spec.chunk_logits);
         let mut pbuf = std::mem::take(&mut seq.spec.pbuf);
         chain.clear();
         chain.push(d1);
@@ -857,7 +1192,7 @@ impl SpecEngine {
 
         // --- draft: m-1 sequential steps at draft sparsity ---
         {
-            let mut draft_span = t.start(seq.obs.trace, round.id(), "spec_draft");
+            let mut draft_span = t.start(seq.obs.trace, parent, "spec_draft");
             draft_span.attr("tokens", (m - 1) as f64);
             for i in 1..m {
                 let prev = chain[i - 1];
@@ -882,22 +1217,57 @@ impl SpecEngine {
         }
         seq.spec.drafted += (m - 1) as u64;
 
-        // --- verify: rewind the draft KV (blocks retained — the chunk
-        // rewrites the same positions) and re-score the chain in one
-        // layer-major production pass ---
-        {
-            let mut verify_span = t.start(seq.obs.trace, round.id(), "spec_verify");
-            verify_span.attr("tokens", m as f64);
-            seq.kv.as_dyn().rewind(l0);
-            model.forward_chunk(
-                &chain[..m],
-                seq.kv.as_dyn(),
-                self.verify.sparsifier.as_ref(),
-                &mut seq.scratch,
-                &mut seq.stats,
-                &mut vlog,
-            );
-        }
+        // Rewind the draft KV (blocks retained — the verify pass rewrites
+        // the same positions).
+        seq.kv.as_dyn().rewind(l0);
+
+        seq.spec.chain = chain;
+        seq.spec.draft_probs = qall;
+        seq.spec.qstep = qstep;
+        seq.spec.pbuf = pbuf;
+        seq.spec.fused_m = m;
+        seq.spec.fused_l0 = l0;
+        SpecPhase::Verify
+    }
+
+    /// Standalone verify pass for one round: re-score the drafted chain in
+    /// one layer-major production chunk (the unfused counterpart of the
+    /// shared fused forward).
+    fn spec_verify_one(&self, seq: &mut SeqState, parent: u64) {
+        let m = seq.spec.fused_m;
+        let mut verify_span = tracer().start(seq.obs.trace, parent, "spec_verify");
+        verify_span.attr("tokens", m as f64);
+        let chain = std::mem::take(&mut seq.spec.chain);
+        let mut vlog = std::mem::take(&mut seq.spec.chunk_logits);
+        self.verify.model.forward_chunk(
+            &chain[..m],
+            seq.kv.as_dyn(),
+            self.verify.sparsifier.as_ref(),
+            &mut seq.scratch,
+            &mut seq.stats,
+            &mut vlog,
+        );
+        seq.spec.chain = chain;
+        seq.spec.chunk_logits = vlog;
+    }
+
+    /// The sequential second half of a speculative round, after the verify
+    /// logits landed in `spec.chunk_logits`: accept the longest matching
+    /// prefix, roll back rejected positions, adopt the last accepted
+    /// position's logits, forward the rejection-sampling correction and
+    /// adapt the chain length. Returns `(m, a)` — chain length and accepted
+    /// prefix length — for span attribution.
+    fn spec_phase_c(&self, seq: &mut SeqState) -> (usize, usize) {
+        let model = &self.verify.model;
+        let vocab = model.cfg.vocab_size;
+        let greedy = matches!(seq.sampling, Sampling::Greedy);
+        let m = seq.spec.fused_m;
+        let l0 = seq.spec.fused_l0;
+
+        let chain = std::mem::take(&mut seq.spec.chain);
+        let qall = std::mem::take(&mut seq.spec.draft_probs);
+        let vlog = std::mem::take(&mut seq.spec.chunk_logits);
+        let mut pbuf = std::mem::take(&mut seq.spec.pbuf);
 
         // --- accept the longest matching prefix ---
         let mut a = 1usize; // chain[0] came from production logits: committed
@@ -937,7 +1307,6 @@ impl SpecEngine {
 
         seq.spec.chain = chain;
         seq.spec.draft_probs = qall;
-        seq.spec.qstep = qstep;
         seq.spec.chunk_logits = vlog;
         seq.spec.pbuf = pbuf;
 
@@ -968,9 +1337,7 @@ impl SpecEngine {
                 a.clamp(self.cfg.min_k, self.cfg.max_k)
             };
         }
-        round.attr("drafted", (m - 1) as f64);
-        round.attr("accepted", (a - 1) as f64);
-        seq.note_step_gap(round_start_ns, t.now_ns());
+        (m, a)
     }
 
     /// One scheduling step over sequence slots: armed sequences run a full
@@ -993,11 +1360,193 @@ impl SpecEngine {
         }
     }
 
-    /// One step across a batch (unfinished sequences only).
+    /// `step_one` without the gap bookkeeping (batched/supervised steps
+    /// charge the gap against the whole batch window).
+    fn step_one_inner(&self, seq: &mut SeqState) {
+        if seq.spec.cur_k > 0 {
+            self.spec_round_inner(seq);
+        } else {
+            self.verify.decode_one_inner(seq);
+        }
+    }
+
+    /// One batch-fused scheduling step: every member runs its sequential
+    /// first half (plain sampling, or a full speculative draft), then one
+    /// shared [`Model::forward_fused`] pass serves both the plain members'
+    /// decode tokens and the speculative members' verify chains — weights
+    /// stream once per step for the whole mixed batch — and the
+    /// speculative members finish with their accept/commit phase.
+    pub(crate) fn step_fused<S: SlotsMut + ?Sized>(&self, slots: &mut S) {
+        let t = tracer();
+        let batch_start_ns = t.now_ns();
+        FUSED_CTX.with(|cell| {
+            let ctx = &mut *cell.borrow_mut();
+            let FusedCtx {
+                idx,
+                toks,
+                mode,
+                scratch,
+            } = ctx;
+            idx.clear();
+            toks.clear();
+            mode.clear();
+            for s in 0..slots.len() {
+                let seq = slots.get_mut(s);
+                if seq.finished() || !seq.prefill_complete() {
+                    continue;
+                }
+                seq.stepped_in_batch = true;
+                if seq.spec.cur_k > 0 {
+                    let root = seq.obs.root;
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        self.verify.faults.maybe_panic(FaultPoint::DecodePanic);
+                        self.spec_phase_a(seq, root)
+                    }));
+                    match r {
+                        Ok(SpecPhase::Verify) => {
+                            idx.push(s);
+                            toks.push(0); // placeholder: chain carries the tokens
+                            mode.push(FusedMode::Spec);
+                        }
+                        Ok(_) => {}
+                        Err(_) => seq.abort(FinishReason::InternalError),
+                    }
+                } else {
+                    match catch_unwind(AssertUnwindSafe(|| self.verify.fused_phase_a_plain(seq))) {
+                        Ok(Some(next)) => {
+                            idx.push(s);
+                            toks.push(next);
+                            mode.push(FusedMode::Plain);
+                        }
+                        Ok(None) => {}
+                        Err(_) => seq.abort(FinishReason::InternalError),
+                    }
+                }
+            }
+            let mut forwarded = true;
+            if idx.len() == 1 {
+                let seq = slots.get_mut(idx[0]);
+                let r = match mode[0] {
+                    FusedMode::Plain => {
+                        let next = toks[0];
+                        catch_unwind(AssertUnwindSafe(|| {
+                            self.verify.model.forward_token(
+                                next,
+                                seq.kv.as_dyn(),
+                                self.verify.sparsifier.as_ref(),
+                                &mut seq.scratch,
+                                &mut seq.stats,
+                                &mut seq.last_logits,
+                            );
+                        }))
+                    }
+                    FusedMode::Spec => {
+                        let root = seq.obs.root;
+                        catch_unwind(AssertUnwindSafe(|| {
+                            self.spec_verify_one(seq, root);
+                        }))
+                    }
+                };
+                if r.is_err() {
+                    seq.abort(FinishReason::InternalError);
+                    forwarded = false;
+                }
+            } else if idx.len() > 1 {
+                let mut batch = SpecBatch {
+                    slots: &mut *slots,
+                    idx: &idx[..],
+                    mode: &mode[..],
+                    toks: &toks[..],
+                };
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    self.verify.model.forward_fused(
+                        &mut batch,
+                        self.verify.sparsifier.as_ref(),
+                        scratch,
+                    );
+                }));
+                if r.is_err() {
+                    // A panic mid-fused-pass leaves every member's KV/logits
+                    // in an unknown state: the whole batch fails together.
+                    for &s in idx.iter() {
+                        slots.get_mut(s).abort(FinishReason::InternalError);
+                    }
+                    forwarded = false;
+                }
+            }
+            if forwarded {
+                for (j, &s) in idx.iter().enumerate() {
+                    if mode[j] != FusedMode::Spec {
+                        continue;
+                    }
+                    let seq = slots.get_mut(s);
+                    if catch_unwind(AssertUnwindSafe(|| self.spec_phase_c(seq))).is_err() {
+                        seq.abort(FinishReason::InternalError);
+                    }
+                }
+            }
+        });
+        let end_ns = t.now_ns();
+        for s in 0..slots.len() {
+            let seq = slots.get_mut(s);
+            if seq.stepped_in_batch {
+                seq.stepped_in_batch = false;
+                seq.note_step_gap(batch_start_ns, end_ns);
+            }
+        }
+    }
+
+    /// One supervised scheduling step over the coordinator's slot views:
+    /// fused when configured, otherwise per-sequence with the same
+    /// per-member panic isolation and batch-window gap attribution.
+    pub fn step_slots_supervised(&self, slots: &mut [&mut SeqState]) {
+        if slots.is_empty() {
+            return;
+        }
+        if self.verify.cfg.fused_batch {
+            self.step_fused(slots);
+            return;
+        }
+        let t = tracer();
+        let batch_start_ns = t.now_ns();
+        self.verify.step_slots_with(slots, |seq| {
+            seq.stepped_in_batch = true;
+            if catch_unwind(AssertUnwindSafe(|| self.step_one_inner(seq))).is_err() {
+                seq.abort(FinishReason::InternalError);
+            }
+        });
+        let end_ns = t.now_ns();
+        for seq in slots.iter_mut() {
+            if seq.stepped_in_batch {
+                seq.stepped_in_batch = false;
+                seq.note_step_gap(batch_start_ns, end_ns);
+            }
+        }
+    }
+
+    /// One step across a batch of sequences — fused by default (see
+    /// [`Engine::step_batch`]), per-sequence otherwise.
     pub fn step_batch(&self, seqs: &mut [SeqState]) {
-        let mut active: Vec<&mut SeqState> =
-            seqs.iter_mut().filter(|s| !s.finished()).collect();
-        self.step_slots(&mut active[..]);
+        if self.verify.cfg.fused_batch {
+            self.step_fused(seqs);
+            return;
+        }
+        let threads = self.verify.cfg.threads.min(seqs.len());
+        if threads <= 1 {
+            for seq in seqs.iter_mut() {
+                if !seq.finished() && seq.prefill_complete() {
+                    self.step_one(seq);
+                }
+            }
+            return;
+        }
+        parallel_slices(seqs, threads, |_, _, chunk| {
+            for seq in chunk.iter_mut() {
+                if !seq.finished() && seq.prefill_complete() {
+                    self.step_one(seq);
+                }
+            }
+        });
     }
 
     /// Run a prompt to completion speculatively, returning the sequence for

@@ -8,7 +8,8 @@
 
 use super::layout::ColMajorMatrix;
 use super::simd::{self, Backend};
-use crate::util::threadpool::parallel_slices_aligned;
+use crate::util::threadpool::{parallel_row_windows, parallel_slices_aligned, SendPtr};
+use std::cell::RefCell;
 
 /// Minimum multiply-accumulates before intra-GEMV row parallelism pays for
 /// its thread fork-join. Below this the fused kernels run on the calling
@@ -389,6 +390,407 @@ fn dense_rows(backend: Backend, w: &ColMajorMatrix, x: &[f32], row0: usize, rows
     }
 }
 
+// ---------------------------------------------------------------------------
+// Batch-fused kernels (§Tentpole, PR 8): one weight walk shared by every
+// position of a decode batch. Pass 1 scans each position's mask exactly as
+// the per-sequence kernels do (identical kept sets, per-position tau/ga
+// preserved); pass 2 merge-walks the *union* of the kept lists in ascending
+// column order, so each kept weight column is streamed from memory once no
+// matter how many positions keep it. Every position accumulates through its
+// own pending group of eight, reproducing `accum_rows`' exact flush grouping
+// — the output is bit-identical to running the per-sequence kernel per
+// position.
+//
+// Inputs and outputs are strided row-major stacks: position `p` reads
+// `xs[p*in_stride..][..n]` and writes `outs[p*out_stride..][..m]`.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Per-position kept-index lists for the batch scan (reused across calls
+    /// so the steady-state fused decode step never allocates).
+    static BATCH_IDX: RefCell<Vec<Vec<u32>>> = const { RefCell::new(Vec::new()) };
+    /// Merge cursors + pending flush groups for the union walk.
+    static WALK_SCRATCH: RefCell<WalkScratch> = RefCell::new(WalkScratch::default());
+}
+
+#[derive(Default)]
+struct WalkScratch {
+    cur: Vec<usize>,
+    pend: Vec<[u32; 8]>,
+    pn: Vec<u8>,
+}
+
+/// Scan each position's mask into the reusable per-thread kept-index lists,
+/// then hand the populated lists to `body` (shared by the f32 and quant
+/// batch kernels). `cap` is the worst-case kept count (the channel dim):
+/// each list is grown to it *before* the scan, so a later step that keeps
+/// more channels than any earlier one never reallocates mid-steady-state.
+pub(crate) fn with_scanned_batch<R>(
+    n_pos: usize,
+    cap: usize,
+    mut scan: impl FnMut(usize, &mut Vec<u32>),
+    body: impl FnOnce(&[Vec<u32>]) -> R,
+) -> R {
+    BATCH_IDX.with(|cell| {
+        let all = &mut *cell.borrow_mut();
+        if all.len() < n_pos {
+            all.resize_with(n_pos, Vec::new);
+        }
+        for (p, l) in all.iter_mut().enumerate().take(n_pos) {
+            if l.capacity() < cap {
+                l.reserve(cap.saturating_sub(l.len()));
+            }
+            scan(p, l);
+        }
+        body(&all[..n_pos])
+    })
+}
+
+impl WalkScratch {
+    fn ensure(&mut self, n_pos: usize) {
+        if self.cur.len() < n_pos {
+            self.cur.resize(n_pos, 0);
+            self.pend.resize(n_pos, [0u32; 8]);
+            self.pn.resize(n_pos, 0);
+        }
+    }
+}
+
+/// Distinct columns across the per-position kept lists (each sorted
+/// ascending) — the number of weight columns the fused walk streams.
+pub(crate) fn union_count(idx: &[Vec<u32>]) -> usize {
+    if idx.len() == 1 {
+        return idx[0].len();
+    }
+    WALK_SCRATCH.with(|cell| {
+        let ws = &mut *cell.borrow_mut();
+        ws.ensure(idx.len());
+        let cur = &mut ws.cur[..idx.len()];
+        cur.fill(0);
+        let mut union = 0usize;
+        loop {
+            let mut c_min = u32::MAX;
+            for (p, l) in idx.iter().enumerate() {
+                if cur[p] < l.len() && l[cur[p]] < c_min {
+                    c_min = l[cur[p]];
+                }
+            }
+            if c_min == u32::MAX {
+                break;
+            }
+            union += 1;
+            for (p, l) in idx.iter().enumerate() {
+                if cur[p] < l.len() && l[cur[p]] == c_min {
+                    cur[p] += 1;
+                }
+            }
+        }
+        union
+    })
+}
+
+/// Drives the union merge-walk shared by the f32 and quant batch kernels:
+/// visits each distinct kept column once in ascending order, staging it into
+/// the pending group of every position that keeps it. `flush8(p, cols)`
+/// fires when position `p`'s group fills; `flush1(p, c)` drains each
+/// position's `< 8` tail ascending afterwards — byte-for-byte the grouping
+/// `accum_rows` gives each position on its own.
+pub(crate) fn merge_walk_groups(
+    idx: &[Vec<u32>],
+    mut flush8: impl FnMut(usize, &[u32; 8]),
+    mut flush1: impl FnMut(usize, u32),
+) {
+    let n_pos = idx.len();
+    WALK_SCRATCH.with(|cell| {
+        let ws = &mut *cell.borrow_mut();
+        ws.ensure(n_pos);
+        let cur = &mut ws.cur[..n_pos];
+        let pend = &mut ws.pend[..n_pos];
+        let pn = &mut ws.pn[..n_pos];
+        cur.fill(0);
+        pn.fill(0);
+        loop {
+            let mut c_min = u32::MAX;
+            for p in 0..n_pos {
+                if cur[p] < idx[p].len() && idx[p][cur[p]] < c_min {
+                    c_min = idx[p][cur[p]];
+                }
+            }
+            if c_min == u32::MAX {
+                break;
+            }
+            for p in 0..n_pos {
+                if cur[p] < idx[p].len() && idx[p][cur[p]] == c_min {
+                    cur[p] += 1;
+                    pend[p][pn[p] as usize] = c_min;
+                    pn[p] += 1;
+                    if pn[p] == 8 {
+                        flush8(p, &pend[p]);
+                        pn[p] = 0;
+                    }
+                }
+            }
+        }
+        for p in 0..n_pos {
+            for j in 0..pn[p] as usize {
+                flush1(p, pend[p][j]);
+            }
+            pn[p] = 0;
+        }
+    });
+}
+
+/// Union merge-walk over one row window `[row0, row0+rows)`.
+///
+/// # Safety
+/// The windows `out_base[p*out_stride + row0 .. + rows]` must be valid for
+/// writes and disjoint from every other live reference for all
+/// `p < idx.len()` (they are: positions occupy disjoint strided rows, and
+/// the parallel driver hands each worker a disjoint row window).
+unsafe fn walk_rows_batch(
+    backend: Backend,
+    w: &ColMajorMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    idx: &[Vec<u32>],
+    out_base: *mut f32,
+    out_stride: usize,
+    row0: usize,
+    rows: usize,
+) {
+    let m = w.m;
+    let window = |p: usize| unsafe {
+        std::slice::from_raw_parts_mut(out_base.add(p * out_stride + row0), rows)
+    };
+    for p in 0..idx.len() {
+        window(p).fill(0.0);
+    }
+    let mut coeffs = [0.0f32; 8];
+    let mut offs = [0usize; 8];
+    merge_walk_groups(
+        idx,
+        |p, cols| {
+            let x = &xs[p * in_stride..];
+            for (j, &c) in cols.iter().enumerate() {
+                let c = c as usize;
+                coeffs[j] = x[c];
+                offs[j] = c * m + row0;
+            }
+            simd::axpy8_with(backend, &coeffs, &offs, &w.data, window(p));
+        },
+        |p, c| {
+            let c = c as usize;
+            let lo = c * m + row0;
+            simd::axpy_with(backend, xs[p * in_stride + c], &w.data[lo..lo + rows], window(p));
+        },
+    );
+}
+
+/// Batch-fused scored/threshold projection on the process-wide backend with
+/// the production split threshold. Writes each position's kept count into
+/// `kept_out`; returns the union (distinct streamed) column count.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_gemv_masked_batch(
+    w: &ColMajorMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    ga: Option<&[f32]>,
+    tau: f32,
+    outs: &mut [f32],
+    out_stride: usize,
+    n_pos: usize,
+    kept_out: &mut [usize],
+    threads: usize,
+) -> usize {
+    sparse_gemv_masked_batch_with(
+        simd::active(),
+        w,
+        xs,
+        in_stride,
+        ga,
+        tau,
+        outs,
+        out_stride,
+        n_pos,
+        kept_out,
+        threads,
+        PAR_MIN_MACS,
+    )
+}
+
+/// As [`sparse_gemv_masked_batch`] with explicit backend and split
+/// threshold. A shared `tau`/`ga` applies to every position (the engine
+/// fuses only positions under the same layer plan; per-sequence plans that
+/// differ fall back to per-position projection upstream).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_gemv_masked_batch_with(
+    backend: Backend,
+    w: &ColMajorMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    ga: Option<&[f32]>,
+    tau: f32,
+    outs: &mut [f32],
+    out_stride: usize,
+    n_pos: usize,
+    kept_out: &mut [usize],
+    threads: usize,
+    min_macs: usize,
+) -> usize {
+    debug_assert!(n_pos >= 1);
+    debug_assert!(in_stride >= w.n && out_stride >= w.m);
+    debug_assert!(xs.len() >= (n_pos - 1) * in_stride + w.n);
+    debug_assert!(outs.len() >= (n_pos - 1) * out_stride + w.m);
+    debug_assert!(kept_out.len() >= n_pos);
+    with_scanned_batch(
+        n_pos,
+        w.n,
+        |p, l| {
+            let x = &xs[p * in_stride..p * in_stride + w.n];
+            match ga {
+                Some(ga) => {
+                    debug_assert_eq!(ga.len(), w.n);
+                    simd::scan_scored_with(backend, x, ga, tau, l);
+                }
+                None => simd::scan_threshold_with(backend, x, tau, l),
+            }
+            kept_out[p] = l.len();
+        },
+        |idx| {
+        let union = union_count(idx);
+        let base = SendPtr(outs.as_mut_ptr());
+        if threads <= 1 || w.m.saturating_mul(union) < min_macs.max(1) {
+            // Safety: `outs` is exclusively borrowed; the serial walk is the
+            // only writer.
+            unsafe {
+                walk_rows_batch(backend, w, xs, in_stride, idx, base.0, out_stride, 0, w.m)
+            };
+            return union;
+        }
+        // AXPY accumulation is elementwise over output rows, so any aligned
+        // row split is bit-identical to the serial walk.
+        parallel_row_windows(w.m, threads, 8, |row0, rows| {
+            let b = base;
+            // Safety: workers receive disjoint row windows; within a worker
+            // positions occupy disjoint strided rows.
+            unsafe {
+                walk_rows_batch(backend, w, xs, in_stride, idx, b.0, out_stride, row0, rows)
+            };
+        });
+        union
+    })
+}
+
+/// Dense row window accumulation for a strided batch: every column, eight at
+/// a time, per position — per-position op order identical to `dense_rows`,
+/// while the just-touched weight group stays cache-hot across positions.
+///
+/// # Safety
+/// Same disjoint-window contract as [`walk_rows_batch`].
+unsafe fn dense_rows_batch(
+    backend: Backend,
+    w: &ColMajorMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    n_pos: usize,
+    out_base: *mut f32,
+    out_stride: usize,
+    row0: usize,
+    rows: usize,
+) {
+    let m = w.m;
+    let n = w.n;
+    let window = |p: usize| unsafe {
+        std::slice::from_raw_parts_mut(out_base.add(p * out_stride + row0), rows)
+    };
+    for p in 0..n_pos {
+        window(p).fill(0.0);
+    }
+    let mut coeffs = [0.0f32; 8];
+    let mut offs = [0usize; 8];
+    let mut c = 0usize;
+    while c + 8 <= n {
+        for (j, off) in offs.iter_mut().enumerate() {
+            *off = (c + j) * m + row0;
+        }
+        for p in 0..n_pos {
+            let x = &xs[p * in_stride..];
+            for (j, coeff) in coeffs.iter_mut().enumerate() {
+                *coeff = x[c + j];
+            }
+            simd::axpy8_with(backend, &coeffs, &offs, &w.data, window(p));
+        }
+        c += 8;
+    }
+    while c < n {
+        let lo = c * m + row0;
+        for p in 0..n_pos {
+            simd::axpy_with(backend, xs[p * in_stride + c], &w.data[lo..lo + rows], window(p));
+        }
+        c += 1;
+    }
+}
+
+/// Dense batch projection (the fused `lm_head` path): all channels for every
+/// position, one pass over the weight columns. Returns `w.n`.
+pub fn dense_gemv_batch(
+    w: &ColMajorMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    outs: &mut [f32],
+    out_stride: usize,
+    n_pos: usize,
+    threads: usize,
+) -> usize {
+    dense_gemv_batch_with(
+        simd::active(),
+        w,
+        xs,
+        in_stride,
+        outs,
+        out_stride,
+        n_pos,
+        threads,
+        PAR_MIN_MACS,
+    )
+}
+
+/// As [`dense_gemv_batch`] with explicit backend and split threshold.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_gemv_batch_with(
+    backend: Backend,
+    w: &ColMajorMatrix,
+    xs: &[f32],
+    in_stride: usize,
+    outs: &mut [f32],
+    out_stride: usize,
+    n_pos: usize,
+    threads: usize,
+    min_macs: usize,
+) -> usize {
+    debug_assert!(n_pos >= 1);
+    debug_assert!(in_stride >= w.n && out_stride >= w.m);
+    debug_assert!(xs.len() >= (n_pos - 1) * in_stride + w.n);
+    debug_assert!(outs.len() >= (n_pos - 1) * out_stride + w.m);
+    let base = SendPtr(outs.as_mut_ptr());
+    if threads <= 1 || w.m.saturating_mul(w.n) < min_macs.max(1) {
+        // Safety: `outs` is exclusively borrowed; serial walk only writer.
+        unsafe {
+            dense_rows_batch(backend, w, xs, in_stride, n_pos, base.0, out_stride, 0, w.m)
+        };
+        return w.n;
+    }
+    parallel_row_windows(w.m, threads, 8, |row0, rows| {
+        let b = base;
+        // Safety: disjoint row windows per worker, disjoint strided rows
+        // per position.
+        unsafe {
+            dense_rows_batch(backend, w, xs, in_stride, n_pos, b.0, out_stride, row0, rows)
+        };
+    });
+    w.n
+}
+
 /// Count of channels a scored mask keeps (no compute) — used by FLOP
 /// accounting dry-runs and tests.
 pub fn count_kept_scored(x: &[f32], ga: &[f32], tau: f32) -> usize {
@@ -607,5 +1009,116 @@ mod tests {
         let kept = sparse_gemv_scored(&cm, &x, &ga, f32::INFINITY, &mut out);
         assert_eq!(kept, 0);
         assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    /// Strided batch of `n_pos` activation rows with a padded stride so the
+    /// stride-handling paths get exercised, not just the compact layout.
+    fn batch_setup(m: usize, n: usize, n_pos: usize, seed: u64) -> (ColMajorMatrix, Vec<f32>, usize) {
+        let mut rng = Pcg64::new(seed);
+        let w = ColMajorMatrix::from_row_major(&Tensor::randn(&[m, n], 1.0, &mut rng));
+        let in_stride = n + 3;
+        let mut xs = vec![f32::NAN; n_pos * in_stride];
+        for p in 0..n_pos {
+            for c in 0..n {
+                xs[p * in_stride + c] = rng.normal() as f32;
+            }
+        }
+        (w, xs, in_stride)
+    }
+
+    #[test]
+    fn masked_batch_bit_identical_to_per_position() {
+        let (m, n, n_pos) = (29usize, 41usize, 5usize);
+        for seed in [3u64, 11] {
+            let (cm, xs, in_stride) = batch_setup(m, n, n_pos, seed);
+            let mut rng = Pcg64::new(seed ^ 0xC0);
+            let ga: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.05).collect();
+            let backend = crate::sparse_kernel::simd::active();
+            for ga_opt in [Some(ga.as_slice()), None] {
+                // INFINITY: keep-nothing masks in a batch still zero their rows.
+                for tau in [0.0f32, 0.3, 0.9, f32::INFINITY] {
+                    let out_stride = m + 5;
+                    let mut refs = vec![0.0f32; n_pos * m];
+                    let mut kept_ref = vec![0usize; n_pos];
+                    let mut idx = Vec::new();
+                    for p in 0..n_pos {
+                        kept_ref[p] = sparse_gemv_fused_with(
+                            backend,
+                            &cm,
+                            &xs[p * in_stride..p * in_stride + n],
+                            ga_opt,
+                            tau,
+                            &mut refs[p * m..(p + 1) * m],
+                            &mut idx,
+                        );
+                    }
+                    for threads in [1usize, 3] {
+                        let mut outs = vec![f32::NAN; n_pos * out_stride];
+                        let mut kept = vec![0usize; n_pos];
+                        // min_macs = 0 forces the row split at threads > 1.
+                        let union = sparse_gemv_masked_batch_with(
+                            backend, &cm, &xs, in_stride, ga_opt, tau, &mut outs,
+                            out_stride, n_pos, &mut kept, threads, 0,
+                        );
+                        assert_eq!(kept, kept_ref, "tau {tau} threads {threads}");
+                        assert!(union <= kept.iter().sum::<usize>().max(n));
+                        assert!(union >= kept.iter().copied().max().unwrap_or(0));
+                        for p in 0..n_pos {
+                            for i in 0..m {
+                                assert_eq!(
+                                    outs[p * out_stride + i].to_bits(),
+                                    refs[p * m + i].to_bits(),
+                                    "tau {tau} threads {threads} pos {p} row {i}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_batch_of_one_matches_single_kernel() {
+        let (cm, xs, in_stride) = batch_setup(23, 17, 1, 9);
+        let mut idx = Vec::new();
+        let mut single = vec![0.0f32; 23];
+        let backend = crate::sparse_kernel::simd::active();
+        let ks = sparse_gemv_fused_with(backend, &cm, &xs[..17], None, 0.4, &mut single, &mut idx);
+        let mut outs = vec![0.0f32; 23];
+        let mut kept = [0usize; 1];
+        let union = sparse_gemv_masked_batch_with(
+            backend, &cm, &xs, in_stride, None, 0.4, &mut outs, 23, 1, &mut kept, 1, 0,
+        );
+        assert_eq!((union, kept[0]), (ks, ks));
+        for i in 0..23 {
+            assert_eq!(outs[i].to_bits(), single[i].to_bits(), "row {i}");
+        }
+    }
+
+    #[test]
+    fn dense_batch_bit_identical_to_per_position() {
+        let (m, n, n_pos) = (27usize, 19usize, 4usize);
+        let (cm, xs, in_stride) = batch_setup(m, n, n_pos, 83);
+        let backend = crate::sparse_kernel::simd::active();
+        let mut refs = vec![0.0f32; n_pos * m];
+        for p in 0..n_pos {
+            dense_gemv_simd_with(
+                backend,
+                &cm,
+                &xs[p * in_stride..p * in_stride + n],
+                &mut refs[p * m..(p + 1) * m],
+            );
+        }
+        for threads in [1usize, 4] {
+            let mut outs = vec![f32::NAN; n_pos * m];
+            let streamed = dense_gemv_batch_with(
+                backend, &cm, &xs, in_stride, &mut outs, m, n_pos, threads, 0,
+            );
+            assert_eq!(streamed, n);
+            for i in 0..n_pos * m {
+                assert_eq!(outs[i].to_bits(), refs[i].to_bits(), "threads {threads} idx {i}");
+            }
+        }
     }
 }

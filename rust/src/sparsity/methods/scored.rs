@@ -153,6 +153,46 @@ impl Sparsifier for ScoredSparsifier {
     fn planned_density(&self, layer: LayerId) -> Option<f64> {
         self.planned.get(layer.flat()).copied()
     }
+
+    fn project_batch(
+        &self,
+        layer: LayerId,
+        xs: &[f32],
+        in_stride: usize,
+        w: &dyn WeightRepr,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        kept_out: &mut [usize],
+    ) -> usize {
+        if self.force_scalar && w.as_dense().is_some() {
+            // The pre-SIMD kernels have no batched form; keep the A/B
+            // baseline honest by running them per position.
+            let mut streamed = 0usize;
+            for p in 0..n_pos {
+                let x = &xs[p * in_stride..p * in_stride + w.in_dim()];
+                let out = &mut outs[p * out_stride..p * out_stride + w.out_dim()];
+                kept_out[p] = self.project(layer, x, w, out);
+                streamed += kept_out[p];
+            }
+            return streamed;
+        }
+        let lp = &self.layers[layer.flat()];
+        let threads = self
+            .intra_threads
+            .min(crate::util::threadpool::intra_op_threads());
+        w.gemv_masked_batch(
+            xs,
+            in_stride,
+            lp.ga.as_deref(),
+            lp.tau,
+            outs,
+            out_stride,
+            n_pos,
+            kept_out,
+            threads,
+        )
+    }
 }
 
 #[cfg(test)]

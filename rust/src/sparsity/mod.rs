@@ -46,6 +46,35 @@ pub trait Sparsifier: Sync + Send {
     fn planned_density(&self, _layer: LayerId) -> Option<f64> {
         None
     }
+
+    /// Batch-fused projection: position `p` reads `xs[p*in_stride..][..n]`
+    /// and writes `outs[p*out_stride..][..m]`, each under its *own* dynamic
+    /// mask, with the weight columns walked once per fused call (the union
+    /// of the batch's masks) instead of once per position. `kept_out[p]`
+    /// receives position `p`'s kept count; the return value is the number
+    /// of columns streamed. Output must be bit-identical to `n_pos`
+    /// [`Sparsifier::project`] calls — the default simply makes them.
+    #[allow(clippy::too_many_arguments)]
+    fn project_batch(
+        &self,
+        layer: LayerId,
+        xs: &[f32],
+        in_stride: usize,
+        w: &dyn WeightRepr,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        kept_out: &mut [usize],
+    ) -> usize {
+        let mut streamed = 0usize;
+        for p in 0..n_pos {
+            let x = &xs[p * in_stride..p * in_stride + w.in_dim()];
+            let out = &mut outs[p * out_stride..p * out_stride + w.out_dim()];
+            kept_out[p] = self.project(layer, x, w, out);
+            streamed += kept_out[p];
+        }
+        streamed
+    }
 }
 
 /// Dense execution (the 0%-sparsity baseline).
@@ -62,6 +91,29 @@ impl Sparsifier for Dense {
 
     fn planned_density(&self, _layer: LayerId) -> Option<f64> {
         Some(1.0)
+    }
+
+    fn project_batch(
+        &self,
+        _layer: LayerId,
+        xs: &[f32],
+        in_stride: usize,
+        w: &dyn WeightRepr,
+        outs: &mut [f32],
+        out_stride: usize,
+        n_pos: usize,
+        kept_out: &mut [usize],
+    ) -> usize {
+        w.gemv_dense_batch(
+            xs,
+            in_stride,
+            outs,
+            out_stride,
+            n_pos,
+            crate::util::threadpool::intra_op_threads(),
+        );
+        kept_out[..n_pos].fill(w.in_dim());
+        w.in_dim()
     }
 }
 

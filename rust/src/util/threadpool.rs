@@ -189,6 +189,45 @@ where
     });
 }
 
+/// Fork-join over contiguous row windows of a conceptual `n`-row output,
+/// without handing the workers a slice: `f(row0, rows)` is called once per
+/// window, boundaries aligned to `align` (final window takes the remainder).
+/// The batch-fused GEMV kernels use this where [`parallel_slices_aligned`]
+/// cannot express the carve — each worker writes the same row window of
+/// *several* strided output rows, so no single `&mut [T]` covers its share.
+/// Same chunk math as [`parallel_slices_aligned`]; workers run with their
+/// intra-op budget pinned to 1.
+pub fn parallel_row_windows<F>(n: usize, threads: usize, align: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync, // (row0, rows)
+{
+    let align = align.max(1);
+    let units = n.div_ceil(align);
+    let threads = threads.max(1).min(units.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = units.div_ceil(threads) * align;
+    std::thread::scope(|s| {
+        let mut row0 = 0usize;
+        while row0 < n {
+            let rows = chunk.min(n - row0);
+            let fref = &f;
+            s.spawn(move || with_intra_op_threads(1, || fref(row0, rows)));
+            row0 += rows;
+        }
+    });
+}
+
+/// Raw `*mut f32` that crosses [`parallel_row_windows`] worker boundaries.
+/// Safe to send because the workers write disjoint (row-window × stride)
+/// regions; each reconstructs only its own windows from the base pointer.
+#[derive(Clone, Copy)]
+pub struct SendPtr(pub *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,6 +294,23 @@ mod tests {
                 assert_eq!(len % 8, 0, "interior chunk length {len} not aligned");
             }
         }
+    }
+
+    #[test]
+    fn row_windows_cover_everything_aligned() {
+        let seen = Mutex::new(vec![false; 103]);
+        parallel_row_windows(103, 4, 8, |row0, rows| {
+            assert_eq!(row0 % 8, 0, "window offset {row0} not aligned");
+            let mut s = seen.lock().unwrap();
+            for i in row0..row0 + rows {
+                assert!(!s[i], "row {i} visited twice");
+                s[i] = true;
+            }
+        });
+        assert!(seen.into_inner().unwrap().into_iter().all(|b| b));
+        parallel_row_windows(0, 4, 8, |row0, rows| {
+            assert_eq!((row0, rows), (0, 0));
+        });
     }
 
     #[test]

@@ -94,6 +94,45 @@ fn decode_steady_state_allocates_nothing() {
     }
 }
 
+/// The batched decode path must hit steady state too: `Engine::step_batch`
+/// used to collect a fresh `Vec<&mut SeqState>` of active slots every step,
+/// and the fused step's member lists / stacked scratch must likewise reach
+/// a high-water mark during warmup and stay there.
+#[test]
+fn batched_decode_steady_state_allocates_nothing() {
+    for fused in [true, false] {
+        let mut engine = sparse_engine(true);
+        engine.cfg.fused_batch = fused;
+        let prompts = ["warmup prompt", "abc", "the sun is", "12+34="];
+        let mut seqs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| engine.admit(i as u64, p, 64, Sampling::Greedy))
+            .collect();
+        for seq in seqs.iter_mut() {
+            engine.prefill(seq);
+        }
+        // Warmup: grow logits, kernel scratch, fused member lists and the
+        // stacked forward buffers to their steady-state sizes.
+        for _ in 0..4 {
+            engine.step_batch(&mut seqs);
+        }
+        assert!(seqs.iter().all(|s| !s.finished()), "warmup exhausted a sequence");
+        let before = ALLOC_CALLS.load(Ordering::Relaxed);
+        for _ in 0..16 {
+            engine.step_batch(&mut seqs);
+        }
+        let allocs = ALLOC_CALLS.load(Ordering::Relaxed) - before;
+        assert_eq!(
+            allocs, 0,
+            "steady-state batched decode hit the allocator {allocs} times (fused={fused})"
+        );
+        for seq in &seqs {
+            assert_eq!(seq.generated.len(), 20);
+        }
+    }
+}
+
 #[test]
 fn dense_decode_steady_state_allocates_nothing() {
     let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 9));

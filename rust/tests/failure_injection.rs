@@ -343,6 +343,67 @@ mod chaos {
         }
     }
 
+    /// One batch member panics mid-fused-step (its sequential sample/reserve
+    /// phase): only that member fails `internal_error`, the rest of the
+    /// fused batch keeps decoding to completion, and the pool's leak
+    /// counters balance once the failed sequence's blocks drop.
+    #[test]
+    fn fused_batch_member_panic_isolated_and_pool_balances() {
+        let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 7));
+        let mut e = Engine::paged(
+            model,
+            Arc::new(Dense),
+            EngineCfg {
+                threads: 2,
+                ..EngineCfg::default()
+            },
+            &wisparse::kv::KvCfg {
+                pool_blocks: 96,
+                block_size: 8,
+                prefix_cache: false,
+            },
+        );
+        assert!(e.cfg.fused_batch, "fused decode is the default");
+        e.faults = Faults::scripted("decode_panic@2");
+        let prompts = ["abc def", "hello w", "1+2= 3", "xyzw k"];
+        let mut seqs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| e.admit(i as u64, p, 6, Sampling::Greedy))
+            .collect();
+        for s in seqs.iter_mut() {
+            e.prefill(s);
+        }
+        let mut steps = 0;
+        while seqs.iter().any(|s| !s.finished()) {
+            e.step_batch(&mut seqs);
+            steps += 1;
+            assert!(steps < 100, "fused batch stopped making progress");
+        }
+        let reasons: Vec<_> = seqs.iter().map(|s| s.finish_reason()).collect();
+        let failed = reasons
+            .iter()
+            .filter(|r| **r == wisparse::server::engine::FinishReason::InternalError)
+            .count();
+        assert_eq!(failed, 1, "exactly one member fails: {reasons:?}");
+        for (s, r) in seqs.iter().zip(&reasons) {
+            if *r == wisparse::server::engine::FinishReason::InternalError {
+                continue;
+            }
+            assert_eq!(
+                *r,
+                wisparse::server::engine::FinishReason::Length,
+                "surviving members decode to completion"
+            );
+            assert_eq!(s.generated.len(), 6);
+        }
+        let kv = e.kv.clone().expect("paged engine");
+        drop(seqs);
+        let (allocs, frees) = kv.pool().counters();
+        assert_eq!(allocs, frees, "pool leak: {allocs} allocs vs {frees} frees");
+        assert_eq!(kv.blocks_in_use(), 0, "blocks still held after drop");
+    }
+
     /// Deadline enforcement end to end: an already-expired request fails
     /// `deadline_exceeded` without running, under every engine shape.
     #[test]

@@ -60,6 +60,20 @@ def _kernel_headline(r):
         rows.append(
             ("obs_recording_overhead_pct", obs.get("recording_overhead_pct", 0.0), "info")
         )
+    # Batch-fused decode scaling curve: the per-batch-size fused tok/s is
+    # runner-bound (info), but the fused-vs-per-sequence speedup at batch 8
+    # is a ratio and gates like the kernel speedups do.
+    scaling = r.get("batch_scaling", {})
+    for row in scaling.get("rows", []):
+        b = int(row.get("batch", 0))
+        rows.append((f"fused_batch{b}.tok_s", row.get("fused_tok_s", 0.0), "info"))
+        rows.append(
+            (
+                f"fused_batch{b}.speedup_vs_per_seq",
+                row.get("speedup", 0.0),
+                "up" if b >= 8 else "info",
+            )
+        )
     return rows
 
 
