@@ -368,6 +368,73 @@ fn main() {
         ]));
     }
 
+    // §Shadow sampling (ISSUE 9): decode tok/s with the quality monitor off
+    // vs the default 1-in-100 shadow-dense rate. The sampled column pays one
+    // extra dense forward per 100 decode steps; the acceptance gate is <2%
+    // overhead at rate 0.01. A single long sequence, because the sampling
+    // counter is per-sequence: short sequences would never reach step 100.
+    println!("\n== §Shadow sampling: decode overhead at rate 0.01 ==");
+    let scfg = ModelConfig {
+        name: "bench-shadow".to_string(),
+        vocab_size: 2048,
+        d_model: 256,
+        n_layers: 4,
+        n_heads: 4,
+        ffn_dim: 1024,
+        max_seq: 192,
+        rope_base: 10000.0,
+        rmsnorm_eps: 1e-5,
+    };
+    let smodel = Arc::new(Model::synthetic(scfg.clone(), 0x5AD0));
+    let ssp: Arc<dyn Sparsifier> = Arc::new(ScoredSparsifier::new(
+        "teal",
+        (0..scfg.n_layers * 7)
+            .map(|_| ScoredLayer { ga: None, tau: 0.5 })
+            .collect(),
+    ));
+    let shadow_decode = 160usize;
+    let srun = |rate: f64| -> (f64, Vec<usize>, u64) {
+        let mut best = f64::INFINITY;
+        let mut gen = Vec::new();
+        let mut samples = 0u64;
+        for rep in 0..3 {
+            let e = Engine::new(
+                Arc::clone(&smodel),
+                Arc::clone(&ssp),
+                EngineCfg {
+                    threads: 1,
+                    quality_sample_rate: rate,
+                    ..EngineCfg::default()
+                },
+            );
+            let mut s = e.admit(0, "shadow bench", shadow_decode, Sampling::Greedy);
+            e.prefill(&mut s);
+            let t0 = std::time::Instant::now();
+            while !s.finished() {
+                e.decode_one(&mut s);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+            if rep == 0 {
+                gen = s.generated.clone();
+                samples = e.quality.as_ref().map_or(0, |q| q.samples());
+            }
+        }
+        (best, gen, samples)
+    };
+    let (base_s, base_gen, _) = srun(0.0);
+    let (samp_s, samp_gen, shadow_samples) = srun(0.01);
+    let (base_tok, samp_tok) = (
+        shadow_decode as f64 / base_s,
+        shadow_decode as f64 / samp_s,
+    );
+    let shadow_overhead_pct = (base_tok / samp_tok - 1.0) * 100.0;
+    let shadow_identical = base_gen == samp_gen;
+    println!(
+        "rate 0.00 {base_tok:>7.0} tok/s   rate 0.01 {samp_tok:>7.0} tok/s \
+         ({shadow_samples} shadow samples)  overhead {shadow_overhead_pct:+.2}%  \
+         tokens_identical {shadow_identical}"
+    );
+
     let report = Json::obj(vec![
         ("bench", Json::Str("kernel".to_string())),
         ("simd_active", Json::Str(simd::active().name().to_string())),
@@ -391,6 +458,19 @@ fn main() {
                     "recording_overhead_pct",
                     Json::Num((rec.mean_ns / noop.mean_ns - 1.0) * 100.0),
                 ),
+            ]),
+        ),
+        (
+            "shadow_sampling",
+            Json::obj(vec![
+                ("model", scfg.to_json()),
+                ("rate", Json::Num(0.01)),
+                ("decode_tokens", Json::Num(shadow_decode as f64)),
+                ("samples", Json::Num(shadow_samples as f64)),
+                ("baseline_tok_s", Json::Num(base_tok)),
+                ("sampled_tok_s", Json::Num(samp_tok)),
+                ("overhead_pct", Json::Num(shadow_overhead_pct)),
+                ("tokens_identical", Json::Bool(shadow_identical)),
             ]),
         ),
     ]);

@@ -6,6 +6,13 @@
 //!
 //! The JSON dump (`--json`) is what CI's profile smoke asserts against:
 //! one row per (block, projection), each with nonzero traffic.
+//!
+//! With `--quality-sample-rate` > 0 (default 1.0: every decode step) the
+//! table also carries per-projection shadow-dense columns — replay samples
+//! and relative L2 reconstruction error of the sparse output against a
+//! dense re-execution — plus a workload-level shadow-KL summary.
+//! `--chrome-trace out.json` exports the workload's span timeline as Chrome
+//! trace-event JSON for ui.perfetto.dev.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -34,8 +41,22 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     .opt("prompt-len", "24", "tokens per synthetic prompt")
     .opt("max-new", "16", "tokens to decode per prompt")
     .opt("json", "", "also write the profile as JSON to this path")
+    .opt(
+        "quality-sample-rate",
+        "1.0",
+        "shadow-dense sampling rate for the recon-error/KL columns (0 = off)",
+    )
+    .opt(
+        "chrome-trace",
+        "",
+        "write the workload's spans as Chrome trace-event JSON to this path",
+    )
     .flag("synthetic", "use random weights (no artifacts needed)")
     .parse(argv)?;
+    let quality_rate = args.get_f64("quality-sample-rate")?;
+    if !(0.0..=1.0).contains(&quality_rate) {
+        anyhow::bail!("--quality-sample-rate must be in [0, 1], got {quality_rate}");
+    }
     let artifacts = Path::new(args.get("artifacts"));
     let mut model =
         common::load_model(artifacts, args.get("model"), args.get_flag("synthetic"))?;
@@ -62,17 +83,31 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
     };
     let obs = Arc::new(BlockObs::new(model.cfg.n_layers));
     model.set_obs_sink(Arc::clone(&obs) as Arc<dyn ObsSink>);
-    let engine = Engine::new(Arc::new(model), sparsifier, EngineCfg::default());
+    let engine_cfg = EngineCfg {
+        quality_sample_rate: quality_rate,
+        ..EngineCfg::default()
+    };
+    let engine = Engine::new(Arc::new(model), sparsifier, engine_cfg);
 
     // The workload: a handful of synthetic prompts decoded to completion.
+    // Each prompt is admitted under its own trace id (1-based) so the
+    // Chrome export lays requests out on separate tracks.
     let n_prompts = args.get_usize("prompts")?.max(1);
     let prompt_len = args.get_usize("prompt-len")?.max(1);
     let max_new = args.get_usize("max-new")?.max(1);
     let mut corpus = CorpusGen::new(0xBEEF);
     let t0 = std::time::Instant::now();
-    for seq in corpus.calib_sequences(n_prompts, prompt_len) {
+    for (i, seq) in corpus
+        .calib_sequences(n_prompts, prompt_len)
+        .into_iter()
+        .enumerate()
+    {
         let prompt = detokenize(&seq);
-        let _ = engine.run_to_completion(&prompt, max_new, Sampling::Greedy);
+        let mut s = engine.admit(i as u64 + 1, &prompt, max_new, Sampling::Greedy);
+        engine.prefill(&mut s);
+        while !s.finished() {
+            engine.decode_one(&mut s);
+        }
     }
     let workload_s = t0.elapsed().as_secs_f64();
 
@@ -85,13 +120,15 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         "workload: {n_prompts} prompts x {prompt_len} tok + {max_new} new in {workload_s:.2}s; roofline {roof:.1} GB/s\n"
     );
 
-    println!("block proj        calls  density  plan   drift    time_ms    GB/s   %roof");
+    println!(
+        "block proj        calls  density  plan   drift    time_ms    GB/s   %roof  shadow  rel_err"
+    );
     let mut rows = Vec::new();
     for st in obs.snapshot() {
         let planned = engine.sparsifier.planned_density(st.id);
         let drift = planned.map(|p| st.density() - p);
         println!(
-            "{:>5} {:<10} {:>6} {:>8.3} {:>5} {:>7} {:>10.3} {:>7.2} {:>7.1}",
+            "{:>5} {:<10} {:>6} {:>8.3} {:>5} {:>7} {:>10.3} {:>7.2} {:>7.1} {:>7} {:>8}",
             st.id.block,
             st.id.kind.name(),
             st.calls,
@@ -105,6 +142,12 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
             } else {
                 0.0
             },
+            st.shadow_samples,
+            if st.shadow_samples > 0 {
+                format!("{:.2e}", st.shadow_rel_err())
+            } else {
+                "-".to_string()
+            },
         );
         let mut fields = vec![
             ("block", Json::Num(st.id.block as f64)),
@@ -114,6 +157,8 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
             ("ns", Json::Num(st.ns as f64)),
             ("bytes", Json::Num(st.bytes as f64)),
             ("gb_s", Json::Num(st.gb_per_s())),
+            ("shadow_samples", Json::Num(st.shadow_samples as f64)),
+            ("shadow_rel_err", Json::Num(st.shadow_rel_err())),
         ];
         if let Some(p) = planned {
             fields.push(("planned_density", Json::Num(p)));
@@ -121,7 +166,7 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         }
         rows.push(Json::obj(fields));
     }
-    let report = Json::obj(vec![
+    let mut report_fields = vec![
         ("cmd", Json::Str("profile".to_string())),
         ("model", Json::Str(engine.model.cfg.name.clone())),
         ("method", Json::Str(method.to_string())),
@@ -130,7 +175,18 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         ("workload_s", Json::Num(workload_s)),
         ("roofline_gb_s", Json::Num(roof)),
         ("rows", Json::Arr(rows)),
-    ]);
+    ];
+    if let Some(q) = &engine.quality {
+        println!(
+            "\nshadow quality: {} samples, KL(dense||sparse) mean {:.3e} max {:.3e}, top-1 agreement {:.1}%",
+            q.samples(),
+            q.mean_kl(),
+            q.max_kl(),
+            100.0 * q.top1_agreement()
+        );
+        report_fields.push(("quality", q.snapshot_json()));
+    }
+    let report = Json::obj(report_fields);
     let out = args.get("json");
     if !out.is_empty() {
         if let Some(dir) = Path::new(out).parent() {
@@ -140,6 +196,24 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         }
         std::fs::write(out, report.to_string_pretty())?;
         println!("\nwrote {out}");
+    }
+    let trace_out = args.get("chrome-trace");
+    if !trace_out.is_empty() {
+        // One track per prompt (tid = trace id assigned at admission).
+        let mut spans = Vec::new();
+        for id in 1..=n_prompts as u64 {
+            spans.extend(wisparse::obs::tracer().trace(id));
+        }
+        if let Some(dir) = Path::new(trace_out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(
+            trace_out,
+            wisparse::obs::chrome_trace(&spans).to_string_pretty(),
+        )?;
+        println!("wrote {trace_out} ({} spans) — open in ui.perfetto.dev", spans.len());
     }
     Ok(())
 }

@@ -46,6 +46,16 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
             "on",
             "per-block density/bandwidth rows in /metrics?format=prometheus (on|off)",
         )
+        .opt(
+            "quality-sample-rate",
+            "0.0",
+            "shadow-dense sampling rate: replay ~this fraction of decode steps densely and record KL/top-1 drift (0 = off)",
+        )
+        .opt(
+            "shadow-kl-ceiling",
+            "0.05",
+            "shadow-KL value above which a sample counts against the shadow_kl SLO",
+        )
         .opt("quant", "off", "weight quantization (off|int8|int4)")
         .opt("quant-group", "64", "rows per scale group when quantizing in-process")
         .flag("speculative", "self-speculative decoding (high-sparsity draft, production verify)")
@@ -126,9 +136,19 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         block_size: args.get_usize("kv-block-size")?,
         prefix_cache: args.get("prefix-cache") != "off",
     };
+    let quality_sample_rate = args.get_f64("quality-sample-rate")?;
+    if !(0.0..=1.0).contains(&quality_sample_rate) {
+        anyhow::bail!("--quality-sample-rate must be in [0, 1], got {quality_sample_rate}");
+    }
+    let shadow_kl_ceiling = args.get_f64("shadow-kl-ceiling")?;
+    if shadow_kl_ceiling <= 0.0 {
+        anyhow::bail!("--shadow-kl-ceiling must be > 0, got {shadow_kl_ceiling}");
+    }
     let engine_cfg = EngineCfg {
         prefill_chunk: args.get_usize("prefill-chunk")?.max(1),
         fused_batch: args.get("fused-batch") != "off",
+        quality_sample_rate,
+        shadow_kl_ceiling,
         ..EngineCfg::default()
     };
     let engine = Arc::new(Engine::paged(
@@ -147,6 +167,9 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
             ms => Some(std::time::Duration::from_millis(ms as u64)),
         },
         drain_timeout: std::time::Duration::from_secs(args.get_usize("drain-timeout")? as u64),
+        // The shadow_kl objective's threshold tracks the engine's ceiling so
+        // the burn-rate alert and the per-sample breach counter agree.
+        slos: wisparse::obs::SloSpec::default_set(shadow_kl_ceiling),
     };
     let prefill_chunk = engine.cfg.prefill_chunk;
     let coord = if speculative {
@@ -204,6 +227,12 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         prefill_chunk,
         if engine.cfg.fused_batch { "on" } else { "off" }
     );
+    if quality_sample_rate > 0.0 {
+        println!(
+            "shadow-dense quality sampling: ~1 in {} decode steps, KL ceiling {shadow_kl_ceiling}",
+            (1.0 / quality_sample_rate).round().max(1.0) as u64
+        );
+    }
     wisparse::server::http::serve(Arc::clone(&coord), args.get("addr"), |addr| {
         println!("listening on http://{addr}");
     })?;

@@ -621,6 +621,145 @@ impl Model {
             .gemv_dense(&scratch.normed, logits, intra_op_threads());
     }
 
+    /// Shadow-dense replay of the most recently committed decode step, for
+    /// the online quality monitor: re-run `token` (the token whose forward
+    /// produced position `seq_len() - 1`) with every projection dense,
+    /// against the *same* KV history the served step saw, writing the dense
+    /// logits into `logits` — without mutating the cache, the sequence's
+    /// RNG, its stats, or anything else the served path reads.
+    ///
+    /// Non-perturbation is structural: the cache is taken by `&dyn KvSeq`
+    /// (shared reference — `store`/`advance`/`truncate` are uncallable),
+    /// and every `Scratch` buffer is fully overwritten by the next served
+    /// forward, so reusing the sequence's scratch here cannot leak state
+    /// (pinned bit-for-bit by `rust/tests/quality_shadow.rs`).
+    ///
+    /// The committed rows `[0, pos)` hold the *served* (sparse-path) K/V —
+    /// exactly what the served step attended over. The cache row at `pos`
+    /// holds the served step's own sparse K/V and must not be read: the
+    /// shadow's dense K/V for `pos` stays in scratch and is folded into the
+    /// scores and weighted-V sums manually.
+    ///
+    /// When a recording [`ObsSink`] is installed, each projection also runs
+    /// the served sparsifier on the shadow's input and records the
+    /// per-(block, projection) output-L2 reconstruction error via
+    /// [`ObsSink::record_shadow`] — `record_proj` is deliberately not
+    /// called, so density/bandwidth telemetry stays pure production
+    /// traffic.
+    pub fn forward_shadow(
+        &self,
+        token: usize,
+        cache: &dyn KvSeq,
+        sparse_sp: &dyn Sparsifier,
+        scratch: &mut Scratch,
+        recon_tmp: &mut Vec<f32>,
+        logits: &mut Vec<f32>,
+    ) {
+        assert!(token < self.cfg.vocab_size, "token {token} out of vocab");
+        assert!(cache.seq_len() >= 1, "no committed step to shadow");
+        let pos = cache.seq_len() - 1;
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let hd = cfg.head_dim();
+        let scale = 1.0 / (hd as f32).sqrt();
+        let obs = &*self.obs;
+        let obs_on = obs.enabled();
+        recon_tmp.resize(d.max(cfg.ffn_dim), 0.0);
+
+        let mut x = std::mem::take(&mut scratch.resid);
+        x.copy_from_slice(self.embed.row(token));
+        for b in 0..cfg.n_layers {
+            let block = &self.blocks[b];
+            let proj = |kind: LayerKind, input: &[f32], out: &mut [f32], tmp: &mut [f32]| {
+                let w = block.w(kind);
+                w.gemv_dense(input, out, intra_op_threads());
+                if obs_on {
+                    let id = LayerId::new(b, kind);
+                    let tmp = &mut tmp[..out.len()];
+                    sparse_sp.project(id, input, w, tmp);
+                    let (mut err_sq, mut ref_sq) = (0.0f64, 0.0f64);
+                    for (dv, sv) in out.iter().zip(tmp.iter()) {
+                        let e = (*dv - *sv) as f64;
+                        err_sq += e * e;
+                        ref_sq += *dv as f64 * *dv as f64;
+                    }
+                    obs.record_shadow(id, err_sq, ref_sq);
+                }
+            };
+
+            // --- attention (dense replay of `block_step`) ---
+            rmsnorm(&x, &block.attn_norm, cfg.rmsnorm_eps, &mut scratch.normed);
+            proj(LayerKind::Q, &scratch.normed, &mut scratch.q, recon_tmp);
+            proj(LayerKind::K, &scratch.normed, &mut scratch.k, recon_tmp);
+            proj(LayerKind::V, &scratch.normed, &mut scratch.v, recon_tmp);
+            for h in 0..cfg.n_heads {
+                rope_inplace(&mut scratch.q[h * hd..(h + 1) * hd], pos, cfg.rope_base);
+                rope_inplace(&mut scratch.k[h * hd..(h + 1) * hd], pos, cfg.rope_base);
+            }
+            for h in 0..cfg.n_heads {
+                let qh = &scratch.q[h * hd..(h + 1) * hd];
+                let scores = &mut scratch.scores[..=pos];
+                // Committed history only: `[0, pos)` through the cache, the
+                // shadow's own row folded in from scratch.
+                cache.with_k(b, pos, &mut |start, rows| {
+                    for (r, kr) in rows.chunks_exact(d).enumerate() {
+                        let kh = &kr[h * hd..(h + 1) * hd];
+                        let mut acc = 0.0f32;
+                        for i in 0..hd {
+                            acc += qh[i] * kh[i];
+                        }
+                        scores[start + r] = acc * scale;
+                    }
+                });
+                let kh = &scratch.k[h * hd..(h + 1) * hd];
+                let mut acc = 0.0f32;
+                for i in 0..hd {
+                    acc += qh[i] * kh[i];
+                }
+                scores[pos] = acc * scale;
+                softmax_inplace(scores);
+                let out_h = &mut scratch.attn_out[h * hd..(h + 1) * hd];
+                out_h.fill(0.0);
+                let scores: &[f32] = scores;
+                cache.with_v(b, pos, &mut |start, rows| {
+                    for (r, vr) in rows.chunks_exact(d).enumerate() {
+                        let sc = scores[start + r];
+                        let vh = &vr[h * hd..(h + 1) * hd];
+                        for i in 0..hd {
+                            out_h[i] += sc * vh[i];
+                        }
+                    }
+                });
+                let sc = scores[pos];
+                let vh = &scratch.v[h * hd..(h + 1) * hd];
+                for i in 0..hd {
+                    out_h[i] += sc * vh[i];
+                }
+            }
+            proj(LayerKind::O, &scratch.attn_out, &mut scratch.o, recon_tmp);
+            for i in 0..d {
+                x[i] += scratch.o[i];
+            }
+
+            // --- MLP (SwiGLU) ---
+            rmsnorm(&x, &block.mlp_norm, cfg.rmsnorm_eps, &mut scratch.normed);
+            proj(LayerKind::Gate, &scratch.normed, &mut scratch.gate, recon_tmp);
+            proj(LayerKind::Up, &scratch.normed, &mut scratch.up, recon_tmp);
+            for i in 0..cfg.ffn_dim {
+                scratch.hbuf[i] = silu(scratch.gate[i]) * scratch.up[i];
+            }
+            proj(LayerKind::Down, &scratch.hbuf, &mut scratch.down, recon_tmp);
+            for i in 0..d {
+                x[i] += scratch.down[i];
+            }
+        }
+        rmsnorm(&x, &self.final_norm, cfg.rmsnorm_eps, &mut scratch.normed);
+        scratch.resid = x;
+        logits.resize(cfg.vocab_size, 0.0);
+        self.lm_head
+            .gemv_dense(&scratch.normed, logits, intra_op_threads());
+    }
+
     /// Decode a chunk of `m` already-known tokens in one layer-major pass,
     /// writing per-position logits into `logits` (`[m, vocab]`, row-major,
     /// resized on first use). This is the speculative-decode verify pass:

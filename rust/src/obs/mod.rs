@@ -10,11 +10,15 @@
 
 pub mod hist;
 pub mod prom;
+pub mod quality;
 pub mod roofline;
 pub mod sink;
+pub mod slo;
 pub mod trace;
 
 pub use hist::{Hist, RateWindow};
 pub use prom::PromText;
+pub use quality::{top2_margin, with_shadow_ctx, QualityObs, ShadowCtx};
 pub use sink::{BlockObs, BlockStat, NoopSink, ObsSink};
-pub use trace::{tracer, Span, SpanGuard, TraceSummary, Tracer};
+pub use slo::{Alert, SloEngine, SloSpec};
+pub use trace::{chrome_trace, is_truncated, tracer, Span, SpanGuard, TraceSummary, Tracer};

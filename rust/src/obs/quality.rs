@@ -1,0 +1,297 @@
+//! Online quality monitor: shadow-dense sampling.
+//!
+//! WiSparse's headline claim is quality under sparsity, so quality must be
+//! an *online* signal next to the GB/s telemetry: every Nth committed
+//! decode step is replayed dense ([`Model::forward_shadow`]) against the
+//! same residual and KV state, and the divergence between the dense logits
+//! and the served sparse logits is recorded here — KL(dense‖sparse), top-1
+//! agreement and the served logit margin — without perturbing the served
+//! output (pinned bit-for-bit by `rust/tests/quality_shadow.rs`).
+//!
+//! [`Model::forward_shadow`]: crate::model::Model::forward_shadow
+
+use crate::obs::hist::Hist;
+use crate::obs::prom::PromText;
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Log-spaced KL bounds (nats): a healthy 50%-sparsity plan sits well under
+/// 0.1, a dense plan at exactly 0.
+pub const KL_BOUNDS: [f64; 14] = [
+    1e-6, 1e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 0.01, 0.025, 0.05, 0.1, 0.5, 2.5,
+];
+
+/// Served top1−top2 logit-margin bounds: small margins mean the sparse
+/// decision was fragile even when top-1 agreed.
+pub const MARGIN_BOUNDS: [f64; 12] = [
+    0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 20.0, 50.0,
+];
+
+/// Per-thread shadow-replay buffers (dense logits + projection recon tmp),
+/// lazily grown and reused so steady-state decode with sampling *on* is
+/// allocation-free after the first sample, and sampling *off* never touches
+/// them at all (`rust/tests/alloc_steady_state.rs` stays green).
+#[derive(Default)]
+pub struct ShadowCtx {
+    pub logits: Vec<f32>,
+    pub recon: Vec<f32>,
+}
+
+thread_local! {
+    static SHADOW_CTX: RefCell<ShadowCtx> = RefCell::new(ShadowCtx::default());
+}
+
+/// Run `f` with this thread's shadow buffers.
+pub fn with_shadow_ctx<R>(f: impl FnOnce(&mut ShadowCtx) -> R) -> R {
+    SHADOW_CTX.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+struct QualityHists {
+    kl: Hist,
+    margin: Hist,
+}
+
+/// Aggregated shadow-sample quality state, shared across sequences and
+/// worker threads. Counters are atomics (hot-ish path), the histograms sit
+/// behind a mutex taken once per sample — samples are rare by construction
+/// (default 1-in-100 steps), so contention is negligible.
+pub struct QualityObs {
+    /// Sample every `period`-th decode step of each sequence (deterministic
+    /// per-sequence counter, so runs are reproducible).
+    period: u64,
+    /// One sample's KL above this is an SLO-relevant breach (nats).
+    kl_ceiling: f64,
+    samples: AtomicU64,
+    top1_agree: AtomicU64,
+    kl_breaches: AtomicU64,
+    /// Max single-sample KL, as `f64::to_bits` (KL ≥ 0, so the bit pattern
+    /// ordering matches the value ordering).
+    kl_max_bits: AtomicU64,
+    hists: Mutex<QualityHists>,
+}
+
+impl QualityObs {
+    /// `rate` is the sampled fraction of decode steps, in `(0, 1]`.
+    pub fn new(rate: f64, kl_ceiling: f64) -> Self {
+        assert!(
+            rate > 0.0 && rate <= 1.0,
+            "quality sample rate must be in (0, 1], got {rate}"
+        );
+        assert!(kl_ceiling > 0.0, "kl ceiling must be positive");
+        Self {
+            period: (1.0 / rate).round().max(1.0) as u64,
+            kl_ceiling,
+            samples: AtomicU64::new(0),
+            top1_agree: AtomicU64::new(0),
+            kl_breaches: AtomicU64::new(0),
+            kl_max_bits: AtomicU64::new(0),
+            hists: Mutex::new(QualityHists {
+                kl: Hist::with_bounds(&KL_BOUNDS),
+                margin: Hist::with_bounds(&MARGIN_BOUNDS),
+            }),
+        }
+    }
+
+    /// Steps between samples (≥ 1; 1 means every step).
+    pub fn period(&self) -> u64 {
+        self.period
+    }
+
+    pub fn kl_ceiling(&self) -> f64 {
+        self.kl_ceiling
+    }
+
+    /// Record one shadow sample: `kl` is KL(dense‖sparse) in nats,
+    /// `top1_agree` whether the dense and served argmax matched, `margin`
+    /// the served logits' top1−top2 gap.
+    pub fn record_sample(&self, kl: f64, top1_agree: bool, margin: f64) {
+        self.samples.fetch_add(1, Ordering::Relaxed);
+        if top1_agree {
+            self.top1_agree.fetch_add(1, Ordering::Relaxed);
+        }
+        if kl > self.kl_ceiling {
+            self.kl_breaches.fetch_add(1, Ordering::Relaxed);
+        }
+        self.kl_max_bits
+            .fetch_max(kl.max(0.0).to_bits(), Ordering::Relaxed);
+        let mut h = self.hists.lock().expect("quality hists poisoned");
+        h.kl.observe(kl);
+        h.margin.observe(margin);
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Relaxed)
+    }
+
+    pub fn kl_breaches(&self) -> u64 {
+        self.kl_breaches.load(Ordering::Relaxed)
+    }
+
+    /// Mean KL across samples (0 before any sample).
+    pub fn mean_kl(&self) -> f64 {
+        let h = self.hists.lock().expect("quality hists poisoned");
+        if h.kl.count() == 0 {
+            0.0
+        } else {
+            h.kl.sum() / h.kl.count() as f64
+        }
+    }
+
+    pub fn max_kl(&self) -> f64 {
+        f64::from_bits(self.kl_max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Fraction of samples where dense and served argmax agreed (1.0 before
+    /// any sample — no evidence of disagreement).
+    pub fn top1_agreement(&self) -> f64 {
+        let n = self.samples();
+        if n == 0 {
+            1.0
+        } else {
+            self.top1_agree.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    pub fn snapshot_json(&self) -> Json {
+        let (mean_margin, kl_count) = {
+            let h = self.hists.lock().expect("quality hists poisoned");
+            let m = if h.margin.count() == 0 {
+                0.0
+            } else {
+                h.margin.sum() / h.margin.count() as f64
+            };
+            (m, h.kl.count())
+        };
+        debug_assert_eq!(kl_count, self.samples());
+        Json::obj(vec![
+            ("samples", Json::Num(self.samples() as f64)),
+            ("period", Json::Num(self.period as f64)),
+            ("mean_kl", Json::Num(self.mean_kl())),
+            ("max_kl", Json::Num(self.max_kl())),
+            ("top1_agreement", Json::Num(self.top1_agreement())),
+            ("kl_ceiling", Json::Num(self.kl_ceiling)),
+            ("kl_breaches", Json::Num(self.kl_breaches() as f64)),
+            ("mean_margin", Json::Num(mean_margin)),
+        ])
+    }
+
+    pub fn render_prometheus(&self, p: &mut PromText) {
+        p.counter(
+            "wisparse_shadow_samples_total",
+            "Shadow-dense replay samples taken",
+            &[],
+            self.samples() as f64,
+        );
+        p.counter(
+            "wisparse_shadow_top1_agree_total",
+            "Shadow samples where dense and served argmax agreed",
+            &[],
+            self.top1_agree.load(Ordering::Relaxed) as f64,
+        );
+        p.counter(
+            "wisparse_shadow_kl_breaches_total",
+            "Shadow samples whose KL(dense||sparse) exceeded the ceiling",
+            &[],
+            self.kl_breaches() as f64,
+        );
+        p.gauge(
+            "wisparse_shadow_kl_max",
+            "Maximum single-sample KL(dense||sparse) in nats",
+            &[],
+            self.max_kl(),
+        );
+        let h = self.hists.lock().expect("quality hists poisoned");
+        p.histogram(
+            "wisparse_shadow_kl",
+            "KL(dense||sparse) per shadow sample, nats",
+            &h.kl,
+        );
+        p.histogram(
+            "wisparse_shadow_margin",
+            "Served logits top1-top2 margin per shadow sample",
+            &h.margin,
+        );
+    }
+}
+
+/// Top1−top2 gap of a logit vector (0 for fewer than two entries).
+pub fn top2_margin(logits: &[f32]) -> f64 {
+    let (mut top1, mut top2) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+    for &v in logits {
+        if v > top1 {
+            top2 = top1;
+            top1 = v;
+        } else if v > top2 {
+            top2 = v;
+        }
+    }
+    if top2 == f32::NEG_INFINITY {
+        0.0
+    } else {
+        (top1 - top2) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn period_from_rate() {
+        assert_eq!(QualityObs::new(1.0, 0.5).period(), 1);
+        assert_eq!(QualityObs::new(0.01, 0.5).period(), 100);
+        assert_eq!(QualityObs::new(0.5, 0.5).period(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "sample rate")]
+    fn zero_rate_rejected() {
+        QualityObs::new(0.0, 0.5);
+    }
+
+    #[test]
+    fn samples_aggregate() {
+        let q = QualityObs::new(1.0, 0.1);
+        q.record_sample(0.02, true, 3.0);
+        q.record_sample(0.3, false, 0.05);
+        assert_eq!(q.samples(), 2);
+        assert_eq!(q.kl_breaches(), 1);
+        assert!((q.top1_agreement() - 0.5).abs() < 1e-12);
+        assert!((q.mean_kl() - 0.16).abs() < 1e-12);
+        assert!((q.max_kl() - 0.3).abs() < 1e-12);
+        let j = q.snapshot_json();
+        assert_eq!(j.get("samples").as_f64(), Some(2.0));
+        assert_eq!(j.get("kl_breaches").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn no_samples_is_benign() {
+        let q = QualityObs::new(0.01, 0.5);
+        assert_eq!(q.mean_kl(), 0.0);
+        assert_eq!(q.max_kl(), 0.0);
+        assert_eq!(q.top1_agreement(), 1.0);
+    }
+
+    #[test]
+    fn prometheus_families_render() {
+        let q = QualityObs::new(1.0, 0.5);
+        q.record_sample(0.001, true, 1.0);
+        let mut p = PromText::new();
+        q.render_prometheus(&mut p);
+        let s = p.finish();
+        assert!(s.contains("# TYPE wisparse_shadow_samples_total counter"));
+        assert!(s.contains("wisparse_shadow_samples_total 1"));
+        assert!(s.contains("# TYPE wisparse_shadow_kl histogram"));
+        assert!(s.contains("wisparse_shadow_kl_bucket{le=\"+Inf\"} 1"));
+        assert!(s.contains("wisparse_shadow_margin_count 1"));
+    }
+
+    #[test]
+    fn margin_of_logits() {
+        assert!((top2_margin(&[1.0, 4.0, 2.5]) - 1.5).abs() < 1e-6);
+        assert_eq!(top2_margin(&[7.0]), 0.0);
+        assert_eq!(top2_margin(&[]), 0.0);
+    }
+}

@@ -24,6 +24,12 @@ pub struct BlockStat {
     /// Weight bytes touched, estimated as `resident_bytes * kept / in_dim`
     /// per call (channel skipping saves proportional weight traffic).
     pub bytes: u64,
+    /// Shadow-dense replay samples recorded against this projection.
+    pub shadow_samples: u64,
+    /// Σ‖dense_out − sparse_out‖² across shadow samples.
+    pub shadow_err_sq: f64,
+    /// Σ‖dense_out‖² across shadow samples (the relative-error denominator).
+    pub shadow_ref_sq: f64,
 }
 
 impl BlockStat {
@@ -42,6 +48,17 @@ impl BlockStat {
             0.0
         } else {
             self.bytes as f64 / self.ns as f64
+        }
+    }
+
+    /// Relative L2 reconstruction error of the sparse projection output
+    /// against the dense shadow replay: `sqrt(Σerr² / Σref²)`. 0.0 before
+    /// any shadow sample lands (and for an exactly-dense plan).
+    pub fn shadow_rel_err(&self) -> f64 {
+        if self.shadow_ref_sq <= 0.0 {
+            0.0
+        } else {
+            (self.shadow_err_sq / self.shadow_ref_sq).sqrt()
         }
     }
 }
@@ -83,6 +100,13 @@ pub trait ObsSink: Send + Sync {
     ) {
     }
 
+    /// One shadow-dense replay sample for a projection: `err_sq` is
+    /// ‖dense_out − sparse_out‖², `ref_sq` is ‖dense_out‖². Recorded only
+    /// by the quality monitor's dense replay, never by the served forward,
+    /// so the density/bandwidth rows above stay pure production traffic.
+    #[allow(unused_variables)]
+    fn record_shadow(&self, layer: LayerId, err_sq: f64, ref_sq: f64) {}
+
     /// Accumulated per-(block, projection) rows; empty for non-recording sinks.
     fn snapshot(&self) -> Vec<BlockStat> {
         Vec::new()
@@ -101,6 +125,23 @@ pub struct BlockObs {
     dense: Vec<AtomicU64>,
     ns: Vec<AtomicU64>,
     bytes: Vec<AtomicU64>,
+    shadow_samples: Vec<AtomicU64>,
+    /// f64 sums stored as `to_bits`, accumulated with a CAS loop (shadow
+    /// samples are rare — contention is negligible).
+    shadow_err: Vec<AtomicU64>,
+    shadow_ref: Vec<AtomicU64>,
+}
+
+/// Add `add` to an `f64::to_bits`-encoded atomic accumulator.
+fn f64_fetch_add(a: &AtomicU64, add: f64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + add).to_bits();
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
 }
 
 impl BlockObs {
@@ -113,6 +154,9 @@ impl BlockObs {
             dense: zeros(n),
             ns: zeros(n),
             bytes: zeros(n),
+            shadow_samples: zeros(n),
+            shadow_err: zeros(n),
+            shadow_ref: zeros(n),
         }
     }
 
@@ -120,7 +164,16 @@ impl BlockObs {
     /// sink needs `&mut Model`, calibration only `&Model`) discard
     /// calibration-forward traffic before the real workload starts.
     pub fn reset(&self) {
-        for v in [&self.calls, &self.kept, &self.dense, &self.ns, &self.bytes] {
+        for v in [
+            &self.calls,
+            &self.kept,
+            &self.dense,
+            &self.ns,
+            &self.bytes,
+            &self.shadow_samples,
+            &self.shadow_err,
+            &self.shadow_ref,
+        ] {
             for a in v {
                 a.store(0, Ordering::Relaxed);
             }
@@ -178,6 +231,16 @@ impl ObsSink for BlockObs {
         self.bytes[i].fetch_add(touched, Ordering::Relaxed);
     }
 
+    fn record_shadow(&self, layer: LayerId, err_sq: f64, ref_sq: f64) {
+        let i = layer.flat();
+        if i >= self.calls.len() {
+            return;
+        }
+        self.shadow_samples[i].fetch_add(1, Ordering::Relaxed);
+        f64_fetch_add(&self.shadow_err[i], err_sq);
+        f64_fetch_add(&self.shadow_ref[i], ref_sq);
+    }
+
     fn snapshot(&self) -> Vec<BlockStat> {
         (0..self.calls.len())
             .map(|i| BlockStat {
@@ -187,6 +250,9 @@ impl ObsSink for BlockObs {
                 dense_channels: self.dense[i].load(Ordering::Relaxed),
                 ns: self.ns[i].load(Ordering::Relaxed),
                 bytes: self.bytes[i].load(Ordering::Relaxed),
+                shadow_samples: self.shadow_samples[i].load(Ordering::Relaxed),
+                shadow_err_sq: f64::from_bits(self.shadow_err[i].load(Ordering::Relaxed)),
+                shadow_ref_sq: f64::from_bits(self.shadow_ref[i].load(Ordering::Relaxed)),
             })
             .collect()
     }
@@ -267,6 +333,30 @@ mod tests {
             .snapshot()
             .iter()
             .all(|r| r.calls == 0 && r.ns == 0 && r.bytes == 0 && r.dense_channels == 0));
+    }
+
+    #[test]
+    fn shadow_samples_accumulate_relative_error() {
+        let obs = BlockObs::new(2);
+        let id = LayerId::new(1, LayerKind::Down);
+        obs.record_shadow(id, 1.0, 100.0);
+        obs.record_shadow(id, 3.0, 300.0);
+        let rows = obs.snapshot();
+        let row = rows.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(row.shadow_samples, 2);
+        assert!((row.shadow_err_sq - 4.0).abs() < 1e-12);
+        assert!((row.shadow_ref_sq - 400.0).abs() < 1e-12);
+        assert!((row.shadow_rel_err() - (4.0f64 / 400.0).sqrt()).abs() < 1e-12);
+        // Rows without shadow traffic report 0, not NaN.
+        let other = rows.iter().find(|r| r.shadow_samples == 0).unwrap();
+        assert_eq!(other.shadow_rel_err(), 0.0);
+        // Out-of-range layers are ignored, and reset clears shadow sums.
+        obs.record_shadow(LayerId::new(9, LayerKind::Q), 1.0, 1.0);
+        obs.reset();
+        assert!(obs
+            .snapshot()
+            .iter()
+            .all(|r| r.shadow_samples == 0 && r.shadow_err_sq == 0.0 && r.shadow_ref_sq == 0.0));
     }
 
     #[test]

@@ -1,0 +1,411 @@
+//! Declarative SLOs with multi-window burn-rate alerting.
+//!
+//! Each objective is event-based: a feeder turns observations into
+//! cumulative `(total, bad)` counters (request over the latency threshold,
+//! decode gap over budget, shadow-KL sample over the ceiling, request
+//! finishing `internal_error`), and [`SloEngine::tick`] differences those
+//! counters into per-second sliding windows ([`RateWindow`]-style slots:
+//! absolute-second tags, stale slots reset on write). An alert fires when
+//! the burn rate — `(bad/total) / budget` — exceeds the threshold on both
+//! the fast and the slow window, and resolves when the fast window
+//! recovers; the classic multi-window pattern that pages quickly on hard
+//! outages without flapping on single bad seconds.
+//!
+//! [`RateWindow`]: crate::obs::hist::RateWindow
+
+use crate::obs::prom::PromText;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// How many recently-resolved alerts `/alerts` retains.
+const RESOLVED_KEEP: usize = 32;
+
+/// One declarative objective.
+#[derive(Clone, Debug)]
+pub struct SloSpec {
+    /// Stable identifier, used as the `slo` label (`latency_p95_ms`, ...).
+    pub name: String,
+    /// Fraction of events allowed to be bad (e.g. 0.05 ⇒ "p95 objective").
+    pub budget: f64,
+    /// Threshold the event feeder applies to call an event bad — ms for
+    /// latency/gap objectives, nats for shadow-KL, unused (0) for pure
+    /// error-rate objectives. Advisory metadata surfaced in `/alerts`.
+    pub threshold: f64,
+    /// Fast evaluation window, seconds (short: detects, resolves).
+    pub fast_s: u64,
+    /// Slow evaluation window, seconds (long: confirms, de-flaps).
+    pub slow_s: u64,
+    /// Burn-rate multiple that fires the alert (1.0 = burning exactly at
+    /// budget; SRE-style paging uses ~14 for fast, here one knob for both
+    /// windows keeps the config small).
+    pub burn: f64,
+}
+
+impl SloSpec {
+    pub fn new(name: &str, budget: f64, threshold: f64) -> Self {
+        assert!(budget > 0.0 && budget < 1.0, "budget in (0,1): {budget}");
+        Self {
+            name: name.to_string(),
+            budget,
+            threshold,
+            fast_s: 60,
+            slow_s: 600,
+            burn: 2.0,
+        }
+    }
+
+    pub fn windows(mut self, fast_s: u64, slow_s: u64, burn: f64) -> Self {
+        assert!(fast_s >= 1 && slow_s >= fast_s && burn > 0.0);
+        self.fast_s = fast_s;
+        self.slow_s = slow_s;
+        self.burn = burn;
+        self
+    }
+
+    /// The default serving objectives; thresholds are deliberately loose —
+    /// operators tune them per deployment (`CoordinatorCfg::slos`).
+    pub fn default_set(kl_ceiling: f64) -> Vec<SloSpec> {
+        vec![
+            SloSpec::new("latency_p95_ms", 0.05, 2500.0),
+            SloSpec::new("decode_gap_p95_ms", 0.05, 500.0),
+            SloSpec::new("shadow_kl", 0.05, kl_ceiling),
+            SloSpec::new("error_rate", 0.01, 0.0),
+        ]
+    }
+}
+
+/// A fired alert, active or recently resolved.
+#[derive(Clone, Debug)]
+pub struct Alert {
+    pub slo: String,
+    pub fired_at_s: u64,
+    pub resolved_at_s: Option<u64>,
+    /// Burn rates observed when the alert fired.
+    pub burn_fast: f64,
+    pub burn_slow: f64,
+}
+
+impl Alert {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("slo", Json::Str(self.slo.clone())),
+            ("fired_at_s", Json::Num(self.fired_at_s as f64)),
+            (
+                "resolved_at_s",
+                match self.resolved_at_s {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("burn_fast", Json::Num(self.burn_fast)),
+            ("burn_slow", Json::Num(self.burn_slow)),
+        ])
+    }
+}
+
+struct SloState {
+    spec: SloSpec,
+    /// Last cumulative counters seen, for differencing.
+    last_total: u64,
+    last_bad: u64,
+    /// Per-second deltas: (absolute second, total, bad); stale slots are
+    /// reset on write, reads filter by second range.
+    slots: Vec<(u64, u64, u64)>,
+    active: Option<Alert>,
+    fired_total: u64,
+}
+
+impl SloState {
+    fn new(spec: SloSpec) -> Self {
+        let n = (spec.slow_s as usize + 2).max(8);
+        Self {
+            spec,
+            last_total: 0,
+            last_bad: 0,
+            slots: vec![(u64::MAX, 0, 0); n],
+            active: None,
+            fired_total: 0,
+        }
+    }
+
+    fn push(&mut self, sec: u64, d_total: u64, d_bad: u64) {
+        let n = self.slots.len() as u64;
+        let slot = &mut self.slots[(sec % n) as usize];
+        if slot.0 != sec {
+            *slot = (sec, 0, 0);
+        }
+        slot.1 += d_total;
+        slot.2 += d_bad;
+    }
+
+    /// Burn rate over the trailing `w`-second window ending at `now_sec`:
+    /// `(bad/total) / budget`, 0 when the window saw no events.
+    fn burn(&self, now_sec: u64, w: u64) -> f64 {
+        let lo = now_sec.saturating_sub(w - 1);
+        let (mut total, mut bad) = (0u64, 0u64);
+        for &(s, t, b) in &self.slots {
+            if s >= lo && s <= now_sec {
+                total += t;
+                bad += b;
+            }
+        }
+        if total == 0 {
+            0.0
+        } else {
+            (bad as f64 / total as f64) / self.spec.budget
+        }
+    }
+}
+
+/// The burn-rate evaluator over a fixed set of [`SloSpec`]s.
+pub struct SloEngine {
+    started: Instant,
+    slos: Vec<SloState>,
+    resolved: Vec<Alert>,
+}
+
+impl SloEngine {
+    pub fn new(specs: Vec<SloSpec>) -> Self {
+        Self {
+            started: Instant::now(),
+            slos: specs.into_iter().map(SloState::new).collect(),
+            resolved: Vec::new(),
+        }
+    }
+
+    pub fn specs(&self) -> impl Iterator<Item = &SloSpec> {
+        self.slos.iter().map(|s| &s.spec)
+    }
+
+    fn now_sec(&self) -> u64 {
+        self.started.elapsed().as_secs()
+    }
+
+    /// Ingest the current cumulative `(name, total, bad)` counters and
+    /// evaluate every objective. Call it from the scheduler loop and on
+    /// scrape — per-second slots make the cadence irrelevant.
+    pub fn tick(&mut self, inputs: &[(&str, u64, u64)]) {
+        self.tick_at(self.now_sec(), inputs)
+    }
+
+    /// Deterministic-time variant used by tests.
+    pub fn tick_at(&mut self, now_sec: u64, inputs: &[(&str, u64, u64)]) {
+        for slo in self.slos.iter_mut() {
+            if let Some(&(_, total, bad)) =
+                inputs.iter().find(|(n, _, _)| *n == slo.spec.name)
+            {
+                // Counters are cumulative and monotone; saturate defensively
+                // so a feeder reset cannot underflow.
+                let d_total = total.saturating_sub(slo.last_total);
+                let d_bad = bad.saturating_sub(slo.last_bad);
+                slo.last_total = total;
+                slo.last_bad = bad;
+                if d_total > 0 || d_bad > 0 {
+                    slo.push(now_sec, d_total, d_bad);
+                }
+            }
+            let fast = slo.burn(now_sec, slo.spec.fast_s);
+            let slow = slo.burn(now_sec, slo.spec.slow_s);
+            match &mut slo.active {
+                None => {
+                    if fast >= slo.spec.burn && slow >= slo.spec.burn {
+                        slo.fired_total += 1;
+                        slo.active = Some(Alert {
+                            slo: slo.spec.name.clone(),
+                            fired_at_s: now_sec,
+                            resolved_at_s: None,
+                            burn_fast: fast,
+                            burn_slow: slow,
+                        });
+                    }
+                }
+                Some(alert) => {
+                    if fast < slo.spec.burn {
+                        let mut done = alert.clone();
+                        done.resolved_at_s = Some(now_sec);
+                        slo.active = None;
+                        self.resolved.push(done);
+                        if self.resolved.len() > RESOLVED_KEEP {
+                            let drop = self.resolved.len() - RESOLVED_KEEP;
+                            self.resolved.drain(..drop);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn active(&self) -> Vec<&Alert> {
+        self.slos.iter().filter_map(|s| s.active.as_ref()).collect()
+    }
+
+    pub fn fired_total(&self) -> u64 {
+        self.slos.iter().map(|s| s.fired_total).sum()
+    }
+
+    /// The `GET /alerts` body: objectives, active alerts, recently resolved.
+    pub fn alerts_json(&self) -> Json {
+        let objectives = self
+            .slos
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("slo", Json::Str(s.spec.name.clone())),
+                    ("budget", Json::Num(s.spec.budget)),
+                    ("threshold", Json::Num(s.spec.threshold)),
+                    ("fast_s", Json::Num(s.spec.fast_s as f64)),
+                    ("slow_s", Json::Num(s.spec.slow_s as f64)),
+                    ("burn", Json::Num(s.spec.burn)),
+                    ("active", Json::Bool(s.active.is_some())),
+                    ("fired_total", Json::Num(s.fired_total as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("objectives", Json::Arr(objectives)),
+            (
+                "active",
+                Json::Arr(self.active().iter().map(|a| a.to_json()).collect()),
+            ),
+            (
+                "resolved",
+                Json::Arr(self.resolved.iter().rev().map(|a| a.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn render_prometheus(&self, p: &mut PromText) {
+        for s in &self.slos {
+            p.gauge(
+                "wisparse_alert_active",
+                "1 while the SLO's burn-rate alert is firing",
+                &[("slo", &s.spec.name)],
+                if s.active.is_some() { 1.0 } else { 0.0 },
+            );
+        }
+        for s in &self.slos {
+            p.counter(
+                "wisparse_alerts_fired_total",
+                "Burn-rate alerts fired since start",
+                &[("slo", &s.spec.name)],
+                s.fired_total as f64,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(fast_s: u64, slow_s: u64, burn: f64) -> SloEngine {
+        SloEngine::new(vec![
+            SloSpec::new("error_rate", 0.01, 0.0).windows(fast_s, slow_s, burn)
+        ])
+    }
+
+    #[test]
+    fn quiet_traffic_never_fires() {
+        let mut e = engine(5, 30, 2.0);
+        for sec in 0..60 {
+            e.tick_at(sec, &[("error_rate", sec * 10, 0)]);
+        }
+        assert!(e.active().is_empty());
+        assert_eq!(e.fired_total(), 0);
+        let j = e.alerts_json();
+        assert_eq!(j.get("active").as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn fires_on_burn_and_resolves_on_recovery() {
+        let mut e = engine(5, 30, 2.0);
+        // 20 good events/sec for 10s, then 10s of 50% errors (error rate
+        // 0.5 ≫ budget 0.01 ⇒ burn 50), then recovery.
+        let (mut total, mut bad) = (0u64, 0u64);
+        for sec in 0..10 {
+            total += 20;
+            e.tick_at(sec, &[("error_rate", total, bad)]);
+        }
+        assert!(e.active().is_empty());
+        let mut fired_at = None;
+        for sec in 10..20 {
+            total += 20;
+            bad += 10;
+            e.tick_at(sec, &[("error_rate", total, bad)]);
+            if !e.active().is_empty() && fired_at.is_none() {
+                fired_at = Some(sec);
+            }
+        }
+        let fired_at = fired_at.expect("burn alert fired");
+        assert_eq!(e.fired_total(), 1);
+        // Recovery: the fast window (5s) clears once it holds only good
+        // seconds; the alert moves to resolved.
+        for sec in 20..40 {
+            total += 20;
+            e.tick_at(sec, &[("error_rate", total, bad)]);
+        }
+        assert!(e.active().is_empty(), "alert must clear after recovery");
+        let j = e.alerts_json();
+        let resolved = j.get("resolved").as_arr().unwrap();
+        assert_eq!(resolved.len(), 1);
+        assert_eq!(resolved[0].get("slo").as_str(), Some("error_rate"));
+        assert_eq!(
+            resolved[0].get("fired_at_s").as_f64(),
+            Some(fired_at as f64)
+        );
+        assert!(resolved[0].get("resolved_at_s").as_f64().unwrap() >= 20.0);
+    }
+
+    #[test]
+    fn slow_window_suppresses_single_bad_second() {
+        // One bad second inside an otherwise-clean long history: the fast
+        // window burns but the slow window stays under threshold.
+        let mut e = engine(2, 30, 2.0);
+        let (mut total, mut bad) = (0u64, 0u64);
+        for sec in 0..29 {
+            total += 100;
+            e.tick_at(sec, &[("error_rate", total, bad)]);
+        }
+        total += 100;
+        bad += 3; // 3% of one second's 100 events; ~0.1% of the slow window
+        e.tick_at(29, &[("error_rate", total, bad)]);
+        assert!(
+            e.active().is_empty(),
+            "slow window must veto a blip: {:?}",
+            e.active()
+        );
+    }
+
+    #[test]
+    fn no_events_means_no_burn() {
+        let mut e = engine(5, 30, 1.0);
+        e.tick_at(0, &[("error_rate", 0, 0)]);
+        e.tick_at(1, &[]);
+        assert!(e.active().is_empty());
+    }
+
+    #[test]
+    fn prometheus_families() {
+        let mut e = engine(1, 1, 1.0);
+        e.tick_at(0, &[("error_rate", 10, 10)]);
+        assert_eq!(e.active().len(), 1);
+        let mut p = PromText::new();
+        e.render_prometheus(&mut p);
+        let s = p.finish();
+        assert!(s.contains("# TYPE wisparse_alert_active gauge"));
+        assert!(s.contains("wisparse_alert_active{slo=\"error_rate\"} 1"));
+        assert!(s.contains("wisparse_alerts_fired_total{slo=\"error_rate\"} 1"));
+    }
+
+    #[test]
+    fn default_set_names() {
+        let names: Vec<String> = SloSpec::default_set(0.5)
+            .into_iter()
+            .map(|s| s.name)
+            .collect();
+        assert_eq!(
+            names,
+            vec!["latency_p95_ms", "decode_gap_p95_ms", "shadow_kl", "error_rate"]
+        );
+    }
+}

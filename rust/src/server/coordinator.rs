@@ -39,7 +39,7 @@
 
 use crate::data::corpus::detokenize;
 use crate::model::sampler::Sampling;
-use crate::obs::{tracer, PromText, Span, TraceSummary};
+use crate::obs::{tracer, PromText, SloEngine, SloSpec, Span, TraceSummary};
 use crate::server::batcher::{Batcher, BatcherCfg};
 use crate::server::engine::{Engine, FinishReason, PrefillStep, SeqState, SpecEngine};
 use crate::server::faults::FaultPoint;
@@ -72,6 +72,11 @@ pub struct CoordinatorCfg {
     /// How long [`Coordinator::drain`] lets active sequences run before
     /// aborting the stragglers `deadline_exceeded`.
     pub drain_timeout: Duration,
+    /// Declarative serving objectives evaluated by the burn-rate engine
+    /// and surfaced at `GET /alerts`. The `latency_p95_ms` and
+    /// `decode_gap_p95_ms` entries also set the per-event breach
+    /// thresholds the metrics feed applies.
+    pub slos: Vec<SloSpec>,
 }
 
 impl Default for CoordinatorCfg {
@@ -80,6 +85,7 @@ impl Default for CoordinatorCfg {
             batcher: BatcherCfg::default(),
             default_deadline: None,
             drain_timeout: Duration::from_secs(30),
+            slos: SloSpec::default_set(0.05),
         }
     }
 }
@@ -104,6 +110,14 @@ pub struct Coordinator {
     state: Mutex<SchedState>,
     wake: Condvar,
     pub metrics: Mutex<Metrics>,
+    /// Burn-rate SLO evaluator. Locked *after* (never while holding)
+    /// `metrics` — `tick_slos` snapshots the feed counters first, drops the
+    /// metrics lock, then ticks.
+    slo: Mutex<SloEngine>,
+    /// Per-event breach thresholds mirrored out of `cfg.slos` (infinite
+    /// when the objective is absent, so nothing counts as a breach).
+    latency_slo_ms: f64,
+    gap_slo_ms: f64,
     next_id: AtomicU64,
     shutdown: AtomicBool,
     /// Graceful drain in progress: admission refused, queue shed, active
@@ -140,6 +154,16 @@ impl Coordinator {
         // request arrival instant can predate it (and the lazy init never
         // lands inside the allocation-counted decode steady state).
         tracer();
+        let threshold_of = |name: &str| {
+            cfg.slos
+                .iter()
+                .find(|s| s.name == name)
+                .map(|s| s.threshold)
+                .unwrap_or(f64::INFINITY)
+        };
+        let latency_slo_ms = threshold_of("latency_p95_ms");
+        let gap_slo_ms = threshold_of("decode_gap_p95_ms");
+        let slo = Mutex::new(SloEngine::new(cfg.slos.clone()));
         Arc::new(Self {
             engine,
             spec,
@@ -150,6 +174,9 @@ impl Coordinator {
                 cancelled: HashSet::new(),
             }),
             cfg,
+            slo,
+            latency_slo_ms,
+            gap_slo_ms,
             wake: Condvar::new(),
             metrics: Mutex::new(Metrics::new()),
             next_id: AtomicU64::new(1),
@@ -412,9 +439,17 @@ impl Coordinator {
         // Lock order is state -> metrics everywhere (submit counts
         // rejections while holding state), so take the queue depth first.
         let depth = lock_ok(&self.state).batcher.queue_len() as u64;
-        let mut m = lock_ok(&self.metrics);
-        self.refresh_gauges(&mut m, depth);
-        m.to_json()
+        let mut j = {
+            let mut m = lock_ok(&self.metrics);
+            self.refresh_gauges(&mut m, depth);
+            m.to_json()
+        };
+        if let Some(q) = &self.engine.quality {
+            if let crate::util::json::Json::Obj(map) = &mut j {
+                map.insert("quality".to_string(), q.snapshot_json());
+            }
+        }
+        j
     }
 
     /// Refresh the report-time gauges (paged-KV pool occupancy, prefix
@@ -439,6 +474,7 @@ impl Coordinator {
     /// `metrics_json` reports, plus per-(block, projection) sparsity
     /// telemetry when the model carries a recording [`crate::obs::ObsSink`].
     pub fn metrics_prometheus(&self) -> String {
+        self.tick_slos();
         let depth = lock_ok(&self.state).batcher.queue_len() as u64;
         let mut p = PromText::new();
         {
@@ -447,7 +483,49 @@ impl Coordinator {
             m.render_prometheus(&mut p);
         }
         self.render_block_telemetry(&mut p);
+        if let Some(q) = &self.engine.quality {
+            q.render_prometheus(&mut p);
+        }
+        lock_ok(&self.slo).render_prometheus(&mut p);
         p.finish()
+    }
+
+    /// Feed the SLO burn-rate engine the current cumulative counters and
+    /// evaluate every objective. Called from the scheduler loop each
+    /// iteration and from the `/alerts` and `/metrics` handlers, so alerts
+    /// fire and resolve even on an idle or scrape-only server. Lock
+    /// discipline: the metrics lock is released before the SLO lock is
+    /// taken, and the SLO lock is never held across any other lock.
+    pub fn tick_slos(&self) {
+        let (lat, lat_bad, gap, gap_bad, err, err_bad) = {
+            let m = lock_ok(&self.metrics);
+            (
+                m.latency_events_total,
+                m.latency_breaches_total,
+                m.decode_gap_events_total,
+                m.decode_gap_breaches_total,
+                m.finished_events(),
+                m.internal_errors(),
+            )
+        };
+        let (kl, kl_bad) = match &self.engine.quality {
+            Some(q) => (q.samples(), q.kl_breaches()),
+            None => (0, 0),
+        };
+        lock_ok(&self.slo).tick(&[
+            ("latency_p95_ms", lat, lat_bad),
+            ("decode_gap_p95_ms", gap, gap_bad),
+            ("shadow_kl", kl, kl_bad),
+            ("error_rate", err, err_bad),
+        ]);
+    }
+
+    /// The `GET /alerts` body: objectives with their config, active alerts,
+    /// and recently-resolved history. Ticks first, so a scrape always sees
+    /// the freshest evaluation.
+    pub fn alerts_json(&self) -> crate::util::json::Json {
+        self.tick_slos();
+        lock_ok(&self.slo).alerts_json()
     }
 
     /// Per-(block, projection) achieved density, call counts, effective
@@ -488,6 +566,15 @@ impl Coordinator {
                     "Achieved minus planned density per (block, projection).",
                     &labels,
                     st.density() - planned,
+                );
+            }
+            if st.shadow_samples > 0 {
+                p.gauge(
+                    "wisparse_block_shadow_rel_err",
+                    "Relative L2 error of the sparse projection output vs a \
+                     dense shadow replay, per (block, projection).",
+                    &labels,
+                    st.shadow_rel_err(),
                 );
             }
         }
@@ -615,6 +702,9 @@ impl Coordinator {
             if self.is_shutdown() {
                 return;
             }
+            // Evaluate the SLO burn rates every iteration (idle waits loop
+            // back through here too, so alerts resolve on a quiet server).
+            self.tick_slos();
             // Scheduler-level fault point: fires *outside* per-sequence
             // isolation, exercising the supervisor restart path.
             self.engine.faults.maybe_panic(FaultPoint::SchedPanic);
@@ -889,7 +979,12 @@ impl Coordinator {
                 if let Some(prev) = last_decode {
                     // Completion-to-completion: the stall a decoding client
                     // actually observes, interleaved prefill included.
-                    m.observe_decode_gap((now - prev).as_secs_f64() * 1e3);
+                    let gap_ms = (now - prev).as_secs_f64() * 1e3;
+                    m.observe_decode_gap(gap_ms);
+                    m.decode_gap_events_total += 1;
+                    if gap_ms > self.gap_slo_ms {
+                        m.decode_gap_breaches_total += 1;
+                    }
                 }
                 last_decode = Some(now);
             } else {
@@ -970,6 +1065,10 @@ impl Coordinator {
                         m.requests_total += 1;
                         m.tokens_generated += seq.generated.len() as u64;
                         m.observe_total(total_ms);
+                        m.latency_events_total += 1;
+                        if total_ms > self.latency_slo_ms {
+                            m.latency_breaches_total += 1;
+                        }
                         m.count_finish(seq.finish_reason().as_str());
                         m.macs_kept += seq.stats.macs_kept + seq.stats.macs_extra;
                         m.macs_dense += seq.stats.macs_dense;

@@ -21,7 +21,8 @@ use crate::model::sampler::{residual_sample, sample_from, spec_accept, Sampling}
 use crate::model::transformer::{
     ChunkLogits, ForwardStats, FusedScratch, FusedSeqAccess, Model, Scratch,
 };
-use crate::obs::tracer;
+use crate::eval::kl::kl_from_logits;
+use crate::obs::{top2_margin, tracer, with_shadow_ctx, QualityObs};
 use crate::server::faults::{FaultPoint, Faults};
 use crate::sparsity::{Dense, Sparsifier};
 use crate::tensor::ops::argmax;
@@ -54,6 +55,14 @@ pub struct EngineCfg {
     /// once per sequence (`--fused-batch`). Bit-identical to the
     /// per-sequence path; batches of one fall back to it automatically.
     pub fused_batch: bool,
+    /// Fraction of committed decode steps replayed dense by the online
+    /// quality monitor (`--quality-sample-rate`). 0 disables shadow
+    /// sampling entirely; a sampled step costs one extra dense forward but
+    /// never perturbs the served token, KV or RNG.
+    pub quality_sample_rate: f64,
+    /// KL(dense‖sparse) in nats above which a shadow sample counts as a
+    /// quality breach (feeds the `shadow_kl` SLO burn rate).
+    pub shadow_kl_ceiling: f64,
 }
 
 impl Default for EngineCfg {
@@ -64,6 +73,8 @@ impl Default for EngineCfg {
             threads: crate::util::threadpool::num_threads(),
             seed: 0xD_EC0DE,
             fused_batch: true,
+            quality_sample_rate: 0.0,
+            shadow_kl_ceiling: 0.05,
         }
     }
 }
@@ -106,6 +117,16 @@ pub enum SeqKv {
 
 impl SeqKv {
     pub fn as_dyn(&mut self) -> &mut dyn KvSeq {
+        match self {
+            SeqKv::Flat(c) => c,
+            SeqKv::Paged(p) => p,
+        }
+    }
+
+    /// Read-only [`KvSeq`] view — what the shadow-dense quality replay
+    /// forwards against, so non-mutation of the served KV is enforced at
+    /// the type level rather than by convention.
+    pub fn as_dyn_ref(&self) -> &dyn KvSeq {
         match self {
             SeqKv::Flat(c) => c,
             SeqKv::Paged(p) => p,
@@ -249,6 +270,11 @@ pub struct SeqState {
     /// against the *batch* window, so time spent decoding batch-mates in
     /// the same step never counts as this sequence's idle gap.
     stepped_in_batch: bool,
+    /// Deterministic shadow-sampling counter: incremented once per decode
+    /// step (or speculative round); every `QualityObs::period`-th step is
+    /// replayed dense. Per-sequence so runs are reproducible regardless of
+    /// batch composition or thread scheduling.
+    quality_ctr: u64,
 }
 
 impl SeqState {
@@ -450,16 +476,35 @@ pub struct Engine {
     /// branch per site) unless `WISPARSE_FAULTS` carries a schedule; the
     /// chaos suite swaps in scripted plans per engine instance.
     pub faults: Arc<Faults>,
+    /// Online shadow-dense quality monitor; `None` (the default, rate 0)
+    /// costs one branch per decode step.
+    pub quality: Option<Arc<QualityObs>>,
+}
+
+/// Build the quality monitor the engine configuration asks for (rate 0
+/// disables it outright — no counter bump, no sampling branch beyond the
+/// `Option` check).
+fn quality_from_cfg(cfg: &EngineCfg) -> Option<Arc<QualityObs>> {
+    if cfg.quality_sample_rate > 0.0 {
+        Some(Arc::new(QualityObs::new(
+            cfg.quality_sample_rate,
+            cfg.shadow_kl_ceiling,
+        )))
+    } else {
+        None
+    }
 }
 
 impl Engine {
     pub fn new(model: Arc<Model>, sparsifier: Arc<dyn Sparsifier>, cfg: EngineCfg) -> Self {
+        let quality = quality_from_cfg(&cfg);
         Self {
             model,
             sparsifier,
             cfg,
             kv: None,
             faults: Faults::from_env(),
+            quality,
         }
     }
 
@@ -470,12 +515,14 @@ impl Engine {
         cfg: EngineCfg,
         kv: Arc<KvManager>,
     ) -> Self {
+        let quality = quality_from_cfg(&cfg);
         Self {
             model,
             sparsifier,
             cfg,
             kv: Some(kv),
             faults: Faults::from_env(),
+            quality,
         }
     }
 
@@ -533,6 +580,7 @@ impl Engine {
             },
             finish_override: None,
             stepped_in_batch: false,
+            quality_ctr: 0,
         }
     }
 
@@ -790,7 +838,40 @@ impl Engine {
                 &mut seq.stats,
                 &mut seq.last_logits,
             );
+            self.maybe_shadow_sample(seq, next);
         }
+    }
+
+    /// Shadow-dense quality hook, run after a decode forward has committed
+    /// `token`'s KV row and `seq.last_logits` holds the served
+    /// distribution. Every `period`-th step of each sequence is replayed
+    /// dense ([`Model::forward_shadow`]) against the *same* residual and
+    /// committed KV — the cache is handed over read-only and the RNG is
+    /// never touched, so the served output is bit-identical with sampling
+    /// on or off (pinned by `rust/tests/quality_shadow.rs`). The extra
+    /// dense forward is the entire cost: at the default 1-in-100 rate it
+    /// is ~1–2% of decode throughput.
+    fn maybe_shadow_sample(&self, seq: &mut SeqState, token: usize) {
+        let Some(q) = &self.quality else { return };
+        seq.quality_ctr += 1;
+        if seq.quality_ctr % q.period() != 0 {
+            return;
+        }
+        let mut span = tracer().start(seq.obs.trace, seq.obs.root, "shadow_sample");
+        with_shadow_ctx(|ctx| {
+            self.model.forward_shadow(
+                token,
+                seq.kv.as_dyn_ref(),
+                self.sparsifier.as_ref(),
+                &mut seq.scratch,
+                &mut ctx.recon,
+                &mut ctx.logits,
+            );
+            let kl = kl_from_logits(&ctx.logits, &seq.last_logits);
+            let agree = argmax(&ctx.logits) == argmax(&seq.last_logits);
+            span.attr("kl", kl);
+            q.record_sample(kl, agree, top2_margin(&seq.last_logits));
+        });
     }
 
     /// The sequential half of a plain decode step: sample the next token
@@ -900,6 +981,8 @@ impl Engine {
                 }));
                 if r.is_err() {
                     seq.abort(FinishReason::InternalError);
+                } else {
+                    self.maybe_shadow_sample(seq, next);
                 }
             } else if idx.len() > 1 {
                 let mut batch = DecodeBatch {
@@ -916,6 +999,10 @@ impl Engine {
                     // in an unknown state: the whole batch fails together.
                     for &s in idx.iter() {
                         slots.get_mut(s).abort(FinishReason::InternalError);
+                    }
+                } else {
+                    for (j, &s) in idx.iter().enumerate() {
+                        self.maybe_shadow_sample(slots.get_mut(s), toks[j]);
                     }
                 }
             }
@@ -1310,6 +1397,7 @@ impl SpecEngine {
         seq.spec.chunk_logits = vlog;
         seq.spec.pbuf = pbuf;
 
+        let mut forwarded_correction = None;
         if let Some(c) = correction {
             // Rejection sampling's residual draw is a committed token; it
             // must be forwarded now (production) to keep the invariants.
@@ -1324,6 +1412,7 @@ impl SpecEngine {
                         &mut seq.stats,
                         &mut seq.last_logits,
                     );
+                    forwarded_correction = Some(c);
                 } else {
                     seq.finish_override = Some(FinishReason::CacheFull);
                 }
@@ -1337,6 +1426,16 @@ impl SpecEngine {
                 a.clamp(self.cfg.min_k, self.cfg.max_k)
             };
         }
+
+        // Shadow-dense quality sample, one opportunity per round: replay
+        // the position whose forward produced `last_logits` — the
+        // forwarded correction when there was one, else the last accepted
+        // chain token (whose verify logits were adopted above). Both leave
+        // that token's KV as the cache's final committed row, which is
+        // exactly the state the read-only dense replay re-executes.
+        let shadow_tok = forwarded_correction.unwrap_or(seq.spec.chain[a - 1]);
+        self.verify.maybe_shadow_sample(seq, shadow_tok);
+
         (m, a)
     }
 
@@ -1450,6 +1549,8 @@ impl SpecEngine {
                 if r.is_err() {
                     seq.abort(FinishReason::InternalError);
                     forwarded = false;
+                } else if mode[0] == FusedMode::Plain {
+                    self.verify.maybe_shadow_sample(seq, toks[0]);
                 }
             } else if idx.len() > 1 {
                 let mut batch = SpecBatch {
@@ -1476,12 +1577,21 @@ impl SpecEngine {
             }
             if forwarded {
                 for (j, &s) in idx.iter().enumerate() {
-                    if mode[j] != FusedMode::Spec {
-                        continue;
-                    }
                     let seq = slots.get_mut(s);
-                    if catch_unwind(AssertUnwindSafe(|| self.spec_phase_c(seq))).is_err() {
-                        seq.abort(FinishReason::InternalError);
+                    match mode[j] {
+                        // Plain members' shadow hook runs here, after the
+                        // shared fused forward landed their logits; spec
+                        // members sample inside `spec_phase_c`.
+                        FusedMode::Plain => {
+                            if idx.len() > 1 {
+                                self.verify.maybe_shadow_sample(seq, toks[j]);
+                            }
+                        }
+                        FusedMode::Spec => {
+                            if catch_unwind(AssertUnwindSafe(|| self.spec_phase_c(seq))).is_err() {
+                                seq.abort(FinishReason::InternalError);
+                            }
+                        }
                     }
                 }
             }

@@ -7,8 +7,14 @@
 //!   GET  /metrics           -> serving metrics JSON
 //!   GET  /metrics?format=prometheus -> text exposition format 0.0.4
 //!   GET  /debug/traces?id=N -> span timeline of one request's trace
+//!                              (`"truncated": true` when the span ring
+//!                              wrapped and evicted part of it)
+//!   GET  /debug/traces/export?id=N -> the same trace as Chrome
+//!                              trace-event JSON (load in ui.perfetto.dev)
 //!   GET  /debug/traces/slow -> worst-N trace exemplars (by total latency
 //!                              and by max decode gap)
+//!   GET  /alerts            -> SLO burn-rate alerts (active + recently
+//!                              resolved) and the configured objectives
 //!   POST /generate          -> {"prompt", "max_new"?, "temperature"?,
 //!                               "speculative"?, "stream"?, "deadline_ms"?}
 //!                              (response echoes its "trace_id")
@@ -27,7 +33,7 @@
 //! (`Connection: close`), which keeps the parser honest and is plenty for a
 //! reproduction-scale router.
 
-use crate::obs::{tracer, Span, TraceSummary};
+use crate::obs::{chrome_trace, is_truncated, tracer, Span, TraceSummary};
 use crate::server::coordinator::Coordinator;
 use crate::server::faults::FaultPoint;
 use crate::server::request::{GenRequest, GenResponse, StreamEvent};
@@ -233,14 +239,25 @@ fn span_json(s: &Span) -> Json {
 
 /// One trace's span timeline (`GET /debug/traces?id=N`). Start offsets are
 /// milliseconds since the tracer epoch, shared across threads, so nested
-/// spans can be laid out on one timeline.
+/// spans can be laid out on one timeline. `truncated` flags a timeline the
+/// span ring partially evicted (a span parents onto a missing ancestor) —
+/// the ring wrapped mid-request, so the gaps are data loss, not idle time.
 fn trace_json(trace_id: u64) -> Json {
-    let spans: Vec<Json> = tracer().trace(trace_id).iter().map(span_json).collect();
+    let spans = tracer().trace(trace_id);
+    let rows: Vec<Json> = spans.iter().map(span_json).collect();
     Json::obj(vec![
         ("trace_id", Json::Num(trace_id as f64)),
-        ("n_spans", Json::Num(spans.len() as f64)),
-        ("spans", Json::Arr(spans)),
+        ("n_spans", Json::Num(rows.len() as f64)),
+        ("truncated", Json::Bool(is_truncated(&spans))),
+        ("spans", Json::Arr(rows)),
     ])
+}
+
+/// One trace exported as Chrome trace-event JSON
+/// (`GET /debug/traces/export?id=N`) — save the body to a file and open it
+/// in ui.perfetto.dev or `chrome://tracing`.
+fn trace_export_json(trace_id: u64) -> Json {
+    chrome_trace(&tracer().trace(trace_id))
 }
 
 /// Worst-N exemplars (`GET /debug/traces/slow`): the same requests ranked
@@ -303,8 +320,20 @@ pub fn route(
                 (200, "OK", JSON, coord.metrics_json().to_string_pretty())
             }
         }
+        ("GET", "/alerts") => (200, "OK", JSON, coord.alerts_json().to_string_pretty()),
         ("GET", "/debug/traces/slow") => {
             (200, "OK", JSON, slow_traces_json().to_string_pretty())
+        }
+        ("GET", "/debug/traces/export") => {
+            match query_param(query, "id").and_then(|v| v.parse().ok()) {
+                Some(id) => (200, "OK", JSON, trace_export_json(id).to_string_pretty()),
+                None => (
+                    400,
+                    "Bad Request",
+                    JSON,
+                    r#"{"error":"missing or bad ?id=<trace_id>"}"#.to_string(),
+                ),
+            }
         }
         ("GET", "/debug/traces") => match query_param(query, "id").and_then(|v| v.parse().ok()) {
             Some(id) => (200, "OK", JSON, trace_json(id).to_string_pretty()),

@@ -79,6 +79,26 @@ pub struct Metrics {
     /// window throughput (the lifetime average decays toward zero on an
     /// idle server; this doesn't).
     pub decode_window: RateWindow,
+    /// SLO feed counters: cumulative (events, breaches) pairs that the
+    /// burn-rate engine ([`crate::obs::SloEngine`]) differences into its
+    /// per-second windows. The breach thresholds come from
+    /// `CoordinatorCfg::slos` and are applied at the observe sites.
+    pub latency_events_total: u64,
+    pub latency_breaches_total: u64,
+    pub decode_gap_events_total: u64,
+    pub decode_gap_breaches_total: u64,
+}
+
+/// Build metadata baked in at compile time (`wisparse_build_info`). The
+/// git SHA and feature list arrive via `WISPARSE_GIT_SHA` /
+/// `WISPARSE_FEATURES` set at build time; absent (local builds) they read
+/// `"unknown"` / `"default"`.
+pub fn build_info() -> (&'static str, &'static str, &'static str) {
+    (
+        env!("CARGO_PKG_VERSION"),
+        option_env!("WISPARSE_GIT_SHA").unwrap_or("unknown"),
+        option_env!("WISPARSE_FEATURES").unwrap_or("default"),
+    )
 }
 
 impl Metrics {
@@ -120,7 +140,22 @@ impl Metrics {
             decode_gap_ms_hist: Hist::new_ms(),
             finished: BTreeMap::new(),
             decode_window: RateWindow::new(),
+            latency_events_total: 0,
+            latency_breaches_total: 0,
+            decode_gap_events_total: 0,
+            decode_gap_breaches_total: 0,
         }
+    }
+
+    /// Terminal events counted so far (the error-rate SLO's denominator).
+    pub fn finished_events(&self) -> u64 {
+        self.finished.values().sum()
+    }
+
+    /// Terminal events that were `internal_error` (the error-rate SLO's
+    /// numerator).
+    pub fn internal_errors(&self) -> u64 {
+        self.finished.get("internal_error").copied().unwrap_or(0)
     }
 
     /// Record one request's queue wait (summary window + histogram).
@@ -209,7 +244,16 @@ impl Metrics {
     }
 
     pub fn to_json(&self) -> Json {
+        let (version, git_sha, features) = build_info();
         Json::obj(vec![
+            (
+                "build_info",
+                Json::obj(vec![
+                    ("version", Json::Str(version.to_string())),
+                    ("git_sha", Json::Str(git_sha.to_string())),
+                    ("features", Json::Str(features.to_string())),
+                ]),
+            ),
             ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
             ("requests_total", Json::Num(self.requests_total as f64)),
             ("requests_rejected", Json::Num(self.requests_rejected as f64)),
@@ -339,6 +383,17 @@ impl Metrics {
     /// `# TYPE` dedup spans the whole page.
     pub fn render_prometheus(&self, p: &mut PromText) {
         let repr = self.weight_repr.as_str();
+        let (version, git_sha, features) = build_info();
+        p.gauge(
+            "wisparse_build_info",
+            "Build metadata carried in labels; the value is always 1.",
+            &[
+                ("version", version),
+                ("git_sha", git_sha),
+                ("features", features),
+            ],
+            1.0,
+        );
         p.gauge(
             "wisparse_uptime_seconds",
             "Seconds since server start.",
@@ -705,6 +760,34 @@ mod tests {
         assert!(s.contains("wisparse_queue_ms_bucket{le=\"+Inf\"} 1"));
         assert!(s.contains("wisparse_finished_total{reason=\"length\"} 1"));
         assert!(s.contains("wisparse_decode_tok_s{repr=\"f32\"}"));
+    }
+
+    #[test]
+    fn build_info_in_both_views() {
+        let m = Metrics::new();
+        let j = m.to_json();
+        let b = j.get("build_info");
+        assert_eq!(b.get("version").as_str(), Some(env!("CARGO_PKG_VERSION")));
+        assert!(b.get("git_sha").as_str().is_some());
+        let mut p = PromText::new();
+        m.render_prometheus(&mut p);
+        let s = p.finish();
+        assert!(s.contains("# TYPE wisparse_build_info gauge"));
+        assert!(s.contains("wisparse_build_info{version=\""));
+        assert!(s.contains("git_sha=\""));
+        assert!(s.contains("} 1"));
+    }
+
+    #[test]
+    fn slo_feed_counters_derive() {
+        let mut m = Metrics::new();
+        assert_eq!(m.finished_events(), 0);
+        assert_eq!(m.internal_errors(), 0);
+        m.count_finish("length");
+        m.count_finish("internal_error");
+        m.count_finish("internal_error");
+        assert_eq!(m.finished_events(), 3);
+        assert_eq!(m.internal_errors(), 2);
     }
 
     #[test]

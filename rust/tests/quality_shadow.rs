@@ -1,0 +1,582 @@
+//! Online quality observability (ISSUE 9): the shadow-dense sampling
+//! monitor must be provably non-perturbing — served tokens and KV contents
+//! bit-identical with sampling off vs. every-step sampling, across
+//! {flat, paged, speculative} × {f32, int8} engines — its KL must be
+//! exactly 0 under a dense plan and positive under a sparse one, the SLO
+//! burn-rate alerts must fire and clear through `GET /alerts` under fault
+//! injection, the new Prometheus families must be conformant, and the
+//! Chrome trace export must round-trip the `/debug/traces` span hierarchy.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+use wisparse::kv::{KvCfg, KvSeq};
+use wisparse::model::sampler::Sampling;
+use wisparse::model::transformer::Model;
+use wisparse::model::ModelConfig;
+use wisparse::obs::{BlockObs, ObsSink, SloSpec};
+use wisparse::quant::QuantMode;
+use wisparse::server::batcher::BatcherCfg;
+use wisparse::server::engine::{Engine, EngineCfg, SeqState, SpecCfg, SpecEngine};
+use wisparse::server::faults::Faults;
+use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::sparsity::methods::{ScoredLayer, ScoredSparsifier};
+use wisparse::sparsity::{Dense, Sparsifier};
+use wisparse::util::json::Json;
+
+fn teal(model: &Model, tau: f32) -> Arc<dyn Sparsifier> {
+    Arc::new(ScoredSparsifier::new(
+        "teal",
+        (0..model.cfg.n_layers * 7)
+            .map(|_| ScoredLayer { ga: None, tau })
+            .collect(),
+    ))
+}
+
+fn engine_with_rate(
+    model: &Arc<Model>,
+    sp: &Arc<dyn Sparsifier>,
+    paged: bool,
+    rate: f64,
+) -> Engine {
+    let cfg = EngineCfg {
+        threads: 1,
+        quality_sample_rate: rate,
+        ..EngineCfg::default()
+    };
+    if paged {
+        Engine::paged(
+            Arc::clone(model),
+            Arc::clone(sp),
+            cfg,
+            &KvCfg {
+                pool_blocks: 96,
+                block_size: 4,
+                prefix_cache: false,
+            },
+        )
+    } else {
+        Engine::new(Arc::clone(model), Arc::clone(sp), cfg)
+    }
+}
+
+fn run_plain(eng: &Engine, id: u64, prompt: &str, max_new: usize, sampling: Sampling) -> SeqState {
+    let mut s = eng.admit(id, prompt, max_new, sampling);
+    eng.prefill(&mut s);
+    while !s.finished() {
+        eng.decode_one(&mut s);
+    }
+    s
+}
+
+/// Every K and V value of every layer, as raw bits — the strictest possible
+/// "the shadow replay did not touch the cache" witness.
+fn kv_bits(seq: &SeqState, n_layers: usize) -> Vec<u32> {
+    let kv = seq.kv.as_dyn_ref();
+    let upto = kv.seq_len();
+    let mut out = Vec::new();
+    for layer in 0..n_layers {
+        kv.with_k(layer, upto, &mut |_start, rows| {
+            out.extend(rows.iter().map(|v| v.to_bits()));
+        });
+        kv.with_v(layer, upto, &mut |_start, rows| {
+            out.extend(rows.iter().map(|v| v.to_bits()));
+        });
+    }
+    out
+}
+
+/// The tentpole invariant: enabling shadow sampling at rate 1.0 (a dense
+/// replay after *every* decode step) changes nothing the served path
+/// produces — not the sampled tokens (so the RNG was never advanced) and
+/// not one bit of the KV cache — for flat and paged engines over f32 and
+/// int8 weights, under greedy and temperature sampling.
+#[test]
+fn shadow_sampling_is_non_perturbing() {
+    let prompts = ["the sun rises ", "12+34=", "zqj!"];
+    for quantized in [false, true] {
+        let mut m = Model::synthetic(ModelConfig::preset("nano").unwrap(), 4242);
+        if quantized {
+            m.quantize(QuantMode::Int8, 16);
+        }
+        let model = Arc::new(m);
+        let sp = teal(&model, 0.3);
+        for paged in [false, true] {
+            let base = engine_with_rate(&model, &sp, paged, 0.0);
+            let shadowed = engine_with_rate(&model, &sp, paged, 1.0);
+            assert!(base.quality.is_none(), "rate 0 must not arm the monitor");
+            let q = shadowed.quality.as_ref().expect("rate 1 arms the monitor");
+            assert_eq!(q.period(), 1);
+            for (i, prompt) in prompts.iter().enumerate() {
+                for sampling in [Sampling::Greedy, Sampling::Temperature(0.8)] {
+                    let a = run_plain(&base, i as u64, prompt, 12, sampling);
+                    let b = run_plain(&shadowed, i as u64, prompt, 12, sampling);
+                    assert_eq!(
+                        a.generated, b.generated,
+                        "served tokens diverged (quantized={quantized}, \
+                         paged={paged}, prompt={prompt:?}, {sampling:?})"
+                    );
+                    assert_eq!(
+                        kv_bits(&a, model.cfg.n_layers),
+                        kv_bits(&b, model.cfg.n_layers),
+                        "KV contents diverged (quantized={quantized}, \
+                         paged={paged}, prompt={prompt:?}, {sampling:?})"
+                    );
+                }
+            }
+            assert!(q.samples() > 0, "every-step sampling must record samples");
+        }
+    }
+}
+
+/// Same invariant for the speculative engine: shadow sampling on the verify
+/// engine must not change what speculative decode commits.
+#[test]
+fn spec_shadow_sampling_is_non_perturbing() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 81));
+    let prod = teal(&model, 0.3);
+    for paged in [false, true] {
+        let base = Arc::new(engine_with_rate(&model, &prod, paged, 0.0));
+        let shadowed = Arc::new(engine_with_rate(&model, &prod, paged, 1.0));
+        let spec_a = SpecEngine::new(Arc::clone(&base), teal(&model, 0.6), SpecCfg::default());
+        let spec_b = SpecEngine::new(Arc::clone(&shadowed), teal(&model, 0.6), SpecCfg::default());
+        for (i, prompt) in ["abc", "the quick brown fox", "12+34="].iter().enumerate() {
+            for sampling in [Sampling::Greedy, Sampling::Temperature(0.7)] {
+                let a = spec_a.run_seq(i as u64, prompt, 16, sampling);
+                let b = spec_b.run_seq(i as u64, prompt, 16, sampling);
+                assert_eq!(
+                    a.generated, b.generated,
+                    "speculative tokens diverged (paged={paged}, prompt={prompt:?}, {sampling:?})"
+                );
+                assert_eq!(
+                    kv_bits(&a, model.cfg.n_layers),
+                    kv_bits(&b, model.cfg.n_layers),
+                    "speculative KV diverged (paged={paged}, prompt={prompt:?}, {sampling:?})"
+                );
+            }
+        }
+        let q = shadowed.quality.as_ref().unwrap();
+        assert!(q.samples() > 0, "spec rounds must feed the monitor too");
+    }
+}
+
+/// Under a dense plan the shadow replay *is* the served computation, so
+/// KL(dense‖sparse) must be exactly zero — not merely small — and top-1
+/// agreement exact. This is also what CI's quality smoke asserts.
+#[test]
+fn dense_plan_has_exactly_zero_shadow_kl() {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 7));
+    let sp: Arc<dyn Sparsifier> = Arc::new(Dense);
+    let eng = engine_with_rate(&model, &sp, false, 1.0);
+    run_plain(&eng, 1, "hello world of dense shadows", 16, Sampling::Greedy);
+    let q = eng.quality.as_ref().unwrap();
+    assert!(q.samples() > 0);
+    assert_eq!(q.max_kl(), 0.0, "dense shadow must be bit-identical");
+    assert_eq!(q.mean_kl(), 0.0);
+    assert_eq!(q.top1_agreement(), 1.0);
+    assert_eq!(q.kl_breaches(), 0);
+}
+
+/// A genuinely sparse plan must show positive KL, and with a recording sink
+/// installed the shadow replay must attribute per-(block, projection)
+/// output reconstruction error — while leaving the production
+/// density/bandwidth rows untouched by shadow traffic (calls stay equal to
+/// the served token count).
+#[test]
+fn sparse_plan_records_kl_and_per_block_recon_error() {
+    // Two identically-seeded models, one engine sampling every step, one
+    // with sampling off — the recording sinks let us assert the shadow
+    // replays recorded recon error WITHOUT inflating the production
+    // density/bandwidth rows (call counts must match the quiet twin).
+    let build = |rate: f64| {
+        let mut m = Model::synthetic(ModelConfig::preset("nano").unwrap(), 55);
+        let obs = Arc::new(BlockObs::new(m.cfg.n_layers));
+        m.set_obs_sink(Arc::clone(&obs) as Arc<dyn ObsSink>);
+        let model = Arc::new(m);
+        let sp = teal(&model, 0.3);
+        (engine_with_rate(&model, &sp, false, rate), obs)
+    };
+    let (quiet_eng, quiet_obs) = build(0.0);
+    let (eng, obs) = build(1.0);
+    run_plain(&quiet_eng, 1, "a sparse plan drifts a little", 16, Sampling::Greedy);
+    run_plain(&eng, 1, "a sparse plan drifts a little", 16, Sampling::Greedy);
+    let q = eng.quality.as_ref().unwrap();
+    assert!(q.samples() > 0);
+    assert!(q.max_kl() > 0.0, "sparse logits must diverge from dense");
+    let rows = obs.snapshot();
+    assert!(rows.iter().any(|r| r.shadow_samples > 0), "recon recorded");
+    assert!(
+        rows.iter().any(|r| r.shadow_rel_err() > 0.0),
+        "sparse projections must show reconstruction error"
+    );
+    // Shadow replays never pollute production telemetry: every projection's
+    // call/density/byte accounting matches the sampling-off twin exactly.
+    for (r, quiet) in rows.iter().zip(quiet_obs.snapshot()) {
+        assert_eq!(r.id, quiet.id);
+        assert_eq!(r.calls, quiet.calls, "{:?} saw shadow traffic", r.id);
+        assert_eq!(r.kept_channels, quiet.kept_channels, "{:?}", r.id);
+        assert_eq!(r.bytes, quiet.bytes, "{:?}", r.id);
+        assert_eq!(quiet.shadow_samples, 0, "quiet twin must see no shadows");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP-level integration: /alerts fire-and-clear, Prometheus conformance of
+// the new families, and the Chrome trace export.
+// ---------------------------------------------------------------------------
+
+fn start_server(
+    quality_sample_rate: f64,
+    faults: &str,
+    slos: Vec<SloSpec>,
+) -> (Arc<Coordinator>, String) {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), 99));
+    let mut engine = Engine::paged(
+        model,
+        Arc::new(Dense),
+        EngineCfg {
+            threads: 2,
+            quality_sample_rate,
+            ..EngineCfg::default()
+        },
+        &KvCfg {
+            pool_blocks: 128,
+            block_size: 8,
+            prefix_cache: true,
+        },
+    );
+    if !faults.is_empty() {
+        engine.faults = Faults::scripted(faults);
+    }
+    let coord = Coordinator::new(
+        Arc::new(engine),
+        CoordinatorCfg {
+            batcher: BatcherCfg {
+                max_batch: 4,
+                max_queue: 64,
+            },
+            slos,
+            ..CoordinatorCfg::default()
+        },
+    );
+    let sched = Arc::clone(&coord);
+    std::thread::spawn(move || sched.run_scheduler());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let http_coord = Arc::clone(&coord);
+    std::thread::spawn(move || {
+        wisparse::server::http::serve(http_coord, "127.0.0.1:0", move |a| {
+            tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    let addr = rx.recv().unwrap().to_string();
+    (coord, addr)
+}
+
+/// Returns (status, body).
+fn request(addr: &str, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .unwrap()
+        .parse()
+        .unwrap();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap();
+            }
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    reader.read_exact(&mut buf).unwrap();
+    (status, String::from_utf8(buf).unwrap())
+}
+
+/// A scripted decode panic burns the error-rate budget; the alert must be
+/// visible at `GET /alerts` (and as the Prometheus gauge), then resolve on
+/// its own once the fast window outruns the bad second.
+#[test]
+fn alerts_fire_and_clear_on_error_burn() {
+    // A 3s fast window: the alert provably stays active for the immediate
+    // scrape after the failure, and provably clears after a 4s quiet spell.
+    let slos = vec![SloSpec::new("error_rate", 0.01, 0.0).windows(3, 6, 1.0)];
+    let (coord, addr) = start_server(0.0, "decode_panic@1", slos);
+    let (status, body) = request(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "panic fodder", "max_new": 4}"#,
+    );
+    assert_eq!(status, 500, "decode panic surfaces as internal_error: {body}");
+
+    let (status, body) = request(&addr, "GET", "/alerts", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    let active = j.get("active").as_arr().unwrap();
+    assert!(
+        active.iter().any(|a| a.get("slo").as_str() == Some("error_rate")),
+        "error_rate alert must be active: {body}"
+    );
+    let objectives = j.get("objectives").as_arr().unwrap();
+    let err_obj = objectives
+        .iter()
+        .find(|o| o.get("slo").as_str() == Some("error_rate"))
+        .unwrap();
+    assert_eq!(err_obj.get("active").as_bool(), Some(true));
+    assert_eq!(err_obj.get("fired_total").as_f64(), Some(1.0));
+    let (_, prom) = request(&addr, "GET", "/metrics?format=prometheus", "");
+    assert!(
+        prom.contains("wisparse_alert_active{slo=\"error_rate\"} 1"),
+        "{prom}"
+    );
+    assert!(prom.contains("wisparse_alerts_fired_total{slo=\"error_rate\"} 1"));
+
+    // Quiet recovery: once the bad second leaves the 3s fast window the
+    // alert resolves (the /alerts scrape itself ticks the evaluator).
+    std::thread::sleep(Duration::from_millis(4200));
+    let (_, body) = request(&addr, "GET", "/alerts", "");
+    let j = Json::parse(&body).unwrap();
+    assert!(
+        j.get("active").as_arr().unwrap().is_empty(),
+        "alert must clear after recovery: {body}"
+    );
+    let resolved = j.get("resolved").as_arr().unwrap();
+    let r = resolved
+        .iter()
+        .find(|a| a.get("slo").as_str() == Some("error_rate"))
+        .expect("resolved alert retained");
+    assert!(r.get("resolved_at_s").as_f64().is_some());
+    assert!(r.get("burn_fast").as_f64().unwrap() >= 1.0);
+    let (_, prom) = request(&addr, "GET", "/metrics?format=prometheus", "");
+    assert!(prom.contains("wisparse_alert_active{slo=\"error_rate\"} 0"));
+    assert!(prom.contains("wisparse_alerts_fired_total{slo=\"error_rate\"} 1"));
+    coord.shutdown();
+}
+
+/// Minimal text-format 0.0.4 conformance for the quality/SLO/build-info
+/// families: every sample belongs to a family with exactly one `# TYPE`,
+/// histogram buckets are cumulative-monotone and `+Inf` equals `_count`.
+fn assert_prom_conformant(body: &str) {
+    use std::collections::BTreeMap;
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap().to_string();
+            let ty = it.next().unwrap().to_string();
+            assert!(
+                types.insert(name.clone(), ty).is_none(),
+                "duplicate TYPE for {name}"
+            );
+        }
+    }
+    let mut buckets: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<String, f64> = BTreeMap::new();
+    for line in body.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let name_end = line.find(|c| c == '{' || c == ' ').unwrap_or(line.len());
+        let name = &line[..name_end];
+        let value: f64 = {
+            let v = line.rsplit(' ').next().unwrap();
+            if v == "+Inf" {
+                f64::INFINITY
+            } else {
+                v.parse().unwrap_or_else(|_| panic!("bad value in `{line}`"))
+            }
+        };
+        let family = if types.contains_key(name) {
+            name.to_string()
+        } else {
+            let base = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_count"))
+                .or_else(|| name.strip_suffix("_sum"))
+                .unwrap_or_else(|| panic!("sample `{name}` has no TYPE"));
+            assert_eq!(
+                types.get(base).map(String::as_str),
+                Some("histogram"),
+                "sample `{name}` has no TYPE"
+            );
+            base.to_string()
+        };
+        if name.ends_with("_bucket") && types.get(&family).map(String::as_str) == Some("histogram")
+        {
+            let le_start = line.find("le=\"").unwrap_or_else(|| panic!("no le in `{line}`")) + 4;
+            let le_str = &line[le_start..line[le_start..].find('"').unwrap() + le_start];
+            let le = if le_str == "+Inf" {
+                f64::INFINITY
+            } else {
+                le_str.parse().unwrap()
+            };
+            buckets.entry(family).or_default().push((le, value));
+        } else if name.ends_with("_count") && types.contains_key(&family) {
+            counts.insert(family, value);
+        }
+    }
+    for (family, ty) in &types {
+        if ty != "histogram" {
+            continue;
+        }
+        let b = buckets
+            .get(family)
+            .unwrap_or_else(|| panic!("histogram {family} has no buckets"));
+        assert!(
+            b.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 <= w[1].1),
+            "{family} buckets not monotone: {b:?}"
+        );
+        let (last_le, last_count) = *b.last().unwrap();
+        assert!(last_le.is_infinite(), "{family} missing +Inf bucket");
+        assert_eq!(
+            Some(&last_count),
+            counts.get(family),
+            "{family}: +Inf bucket != _count"
+        );
+    }
+}
+
+/// With sampling armed, both `/metrics` views must carry the quality, SLO
+/// and build-info families — conformantly.
+#[test]
+fn quality_metrics_in_both_views() {
+    let (coord, addr) = start_server(1.0, "", SloSpec::default_set(0.05));
+    let (status, body) = request(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "sample me densely please", "max_new": 8}"#,
+    );
+    assert_eq!(status, 200, "{body}");
+    let (status, prom) = request(&addr, "GET", "/metrics?format=prometheus", "");
+    assert_eq!(status, 200);
+    assert_prom_conformant(&prom);
+    for family in [
+        "# TYPE wisparse_shadow_samples_total counter",
+        "# TYPE wisparse_shadow_top1_agree_total counter",
+        "# TYPE wisparse_shadow_kl_breaches_total counter",
+        "# TYPE wisparse_shadow_kl_max gauge",
+        "# TYPE wisparse_shadow_kl histogram",
+        "# TYPE wisparse_shadow_margin histogram",
+        "# TYPE wisparse_alert_active gauge",
+        "# TYPE wisparse_alerts_fired_total counter",
+        "# TYPE wisparse_build_info gauge",
+    ] {
+        assert!(prom.contains(family), "missing `{family}`");
+    }
+    assert!(prom.contains("wisparse_build_info{version=\""));
+    assert!(prom.contains("wisparse_alert_active{slo=\"shadow_kl\"} 0"));
+    // Dense serving plan: samples landed, none breached the ceiling.
+    assert!(prom.contains("wisparse_shadow_kl_breaches_total 0"));
+
+    let (_, json) = request(&addr, "GET", "/metrics", "");
+    let m = Json::parse(&json).unwrap();
+    assert!(m.get("quality").get("samples").as_f64().unwrap() > 0.0);
+    assert_eq!(m.get("quality").get("max_kl").as_f64(), Some(0.0));
+    assert_eq!(m.get("quality").get("top1_agreement").as_f64(), Some(1.0));
+    assert!(m.get("build_info").get("version").as_str().is_some());
+    coord.shutdown();
+}
+
+/// The Chrome trace export must parse back, mirror `/debug/traces?id=`
+/// (same span ids, names and parents in `args`), and carry valid
+/// trace-event fields for ui.perfetto.dev.
+#[test]
+fn chrome_trace_export_round_trips() {
+    let (coord, addr) = start_server(0.0, "", SloSpec::default_set(0.05));
+    let (status, body) = request(
+        &addr,
+        "POST",
+        "/generate",
+        r#"{"prompt": "trace me for perfetto", "max_new": 6}"#,
+    );
+    assert_eq!(status, 200, "{body}");
+    let trace_id = Json::parse(&body)
+        .unwrap()
+        .get("trace_id")
+        .as_usize()
+        .unwrap();
+
+    let (status, body) = request(&addr, "GET", &format!("/debug/traces?id={trace_id}"), "");
+    assert_eq!(status, 200);
+    let t = Json::parse(&body).unwrap();
+    assert_eq!(
+        t.get("truncated").as_bool(),
+        Some(false),
+        "complete trace must not report truncation: {body}"
+    );
+    let spans = t.get("spans").as_arr().unwrap();
+    assert!(!spans.is_empty());
+
+    let (status, body) = request(
+        &addr,
+        "GET",
+        &format!("/debug/traces/export?id={trace_id}"),
+        "",
+    );
+    assert_eq!(status, 200);
+    let export = Json::parse(&body).expect("export must be valid JSON");
+    assert_eq!(export.get("displayTimeUnit").as_str(), Some("ms"));
+    assert_eq!(export.get("truncated").as_bool(), Some(false));
+    let events = export.get("traceEvents").as_arr().unwrap();
+    assert_eq!(events.len(), spans.len(), "one event per span");
+    for ev in events {
+        assert_eq!(ev.get("ph").as_str(), Some("X"));
+        assert_eq!(ev.get("pid").as_f64(), Some(1.0));
+        assert_eq!(ev.get("tid").as_usize(), Some(trace_id));
+        assert!(ev.get("ts").as_f64().is_some());
+        assert!(ev.get("dur").as_f64().unwrap() >= 0.0);
+        assert!(ev.get("name").as_str().is_some());
+    }
+    // The span hierarchy `/debug/traces` reports is recoverable from the
+    // export: identical (id -> parent, name) triples.
+    let mut from_debug: Vec<(usize, usize, String)> = spans
+        .iter()
+        .map(|s| {
+            (
+                s.get("id").as_usize().unwrap(),
+                s.get("parent").as_usize().unwrap(),
+                s.get("name").as_str().unwrap().to_string(),
+            )
+        })
+        .collect();
+    let mut from_export: Vec<(usize, usize, String)> = events
+        .iter()
+        .map(|e| {
+            (
+                e.get("args").get("id").as_usize().unwrap(),
+                e.get("args").get("parent").as_usize().unwrap(),
+                e.get("name").as_str().unwrap().to_string(),
+            )
+        })
+        .collect();
+    from_debug.sort();
+    from_export.sort();
+    assert_eq!(from_debug, from_export, "span hierarchy must round-trip");
+
+    // Missing / malformed ids are 400s on the export route too.
+    assert_eq!(request(&addr, "GET", "/debug/traces/export", "").0, 400);
+    assert_eq!(
+        request(&addr, "GET", "/debug/traces/export?id=bogus", "").0,
+        400
+    );
+    coord.shutdown();
+}

@@ -74,7 +74,34 @@ def _kernel_headline(r):
                 "up" if b >= 8 else "info",
             )
         )
+    # Shadow-dense sampling decode overhead at the default 1-in-100 rate.
+    # Timing-noise-bound, so info only; the hard <2% gate lives in the CI
+    # quality job against the same report.
+    shadow = r.get("shadow_sampling")
+    if shadow:
+        rows.append(
+            ("shadow_sampling_overhead_pct", shadow.get("overhead_pct", 0.0), "info")
+        )
     return rows
+
+
+def _quality_headline(r):
+    """Headline shadow-dense drift metrics from the CI quality job's sparse
+    profile smoke (a `wisparse profile --quality-sample-rate 1.0` report).
+
+    The workload is deterministic (synthetic weights, fixed corpus seed,
+    greedy sampling), so mean shadow-KL is a code property, not a runner
+    property: it gates. max_kl is a single-sample extreme and stays info.
+    """
+    q = r.get("quality")
+    if not q:
+        return []
+    return [
+        ("shadow_mean_kl", q.get("mean_kl", 0.0), "down"),
+        ("shadow_max_kl", q.get("max_kl", 0.0), "info"),
+        ("shadow_top1_agreement", q.get("top1_agreement", 0.0), "up"),
+        ("shadow_samples", q.get("samples", 0.0), "info"),
+    ]
 
 
 def _keyed_headline(spec):
@@ -125,6 +152,7 @@ HEADLINES = {
             ]
         ),
     ),
+    "BENCH_quality.json": ("quality", _quality_headline),
 }
 
 
