@@ -1,12 +1,17 @@
 //! Coordinator/batching benchmark: serving throughput and per-step latency
 //! as the continuous-batching width grows, plus the shared-prefix workload
 //! that exercises the paged KV cache's radix-tree prefix sharing (N clients
-//! behind one long common system prompt). Writes `results/bench_batcher.csv`
-//! and `BENCH_serve.json` (prefill tok/s with the prefix cache on vs off,
-//! speedup, hit rate) so future PRs can track the serving trajectory.
+//! behind one long common system prompt). A final section A/Bs the sharded
+//! front end: keep-alive HTTP clients through the epoll reactor against 1
+//! vs 2 engine replicas behind the prefix-affinity router. Writes
+//! `results/bench_batcher.csv` and `BENCH_serve.json` (prefill tok/s with
+//! the prefix cache on vs off, speedup, hit rate, and a `replica_scaling`
+//! table) so future PRs can track the serving trajectory.
 //!
 //!     cargo bench --bench batcher
 
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 use wisparse::kv::KvCfg;
 use wisparse::model::sampler::Sampling;
@@ -15,7 +20,8 @@ use wisparse::model::ModelConfig;
 use wisparse::report::csv::{f, write_csv};
 use wisparse::server::batcher::BatcherCfg;
 use wisparse::server::engine::{Engine, EngineCfg};
-use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::server::router::prefix_hash;
+use wisparse::server::{Coordinator, CoordinatorCfg, ReactorCfg, Router, RouterCfg};
 use wisparse::sparsity::methods::{ScoredLayer, ScoredSparsifier};
 use wisparse::util::json::Json;
 use wisparse::util::timer::Stopwatch;
@@ -178,6 +184,190 @@ fn shared_prefix_run(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Replica scaling: real HTTP through the epoll reactor
+// ---------------------------------------------------------------------------
+
+struct ReplicaScaling {
+    tok_s: f64,
+    p95_total_ms: f64,
+    hit_rate: f64,
+}
+
+/// One POST /generate over an already-open keep-alive connection; returns
+/// (generated tokens, server-reported total_ms).
+fn http_generate(
+    writer: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    prompt: &str,
+    max_new: usize,
+) -> (usize, f64) {
+    let body = format!(r#"{{"prompt": "{prompt}", "max_new": {max_new}}}"#);
+    write!(
+        writer,
+        "POST /generate HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("http write");
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    assert!(status_line.contains("200"), "generate failed: {status_line}");
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).expect("header");
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().expect("content-length");
+            }
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    reader.read_exact(&mut buf).expect("body");
+    let j = Json::parse(std::str::from_utf8(&buf).expect("utf8")).expect("json body");
+    (
+        j.get("generated_tokens").as_usize().unwrap_or(0),
+        j.get("total_ms").as_f64().unwrap_or(0.0),
+    )
+}
+
+/// The group prefixes are salted so that under `balance_mod` replicas the
+/// router's first-64-byte hash pins group g to replica g % balance_mod:
+/// the A/B then measures replica parallelism, not hash luck. The same
+/// prefixes are reused at every replica count (with one replica the pin is
+/// moot — everything lands on replica 0).
+fn balanced_group_prefix(g: usize, prefix_tokens: usize, balance_mod: usize) -> String {
+    let pad: String = (0..prefix_tokens)
+        .map(|i| (b'a' + ((i + 7 * g) % 26) as u8) as char)
+        .collect();
+    (0..1000)
+        .map(|salt| format!("group {g:02}.{salt:03} {pad}"))
+        .find(|p| prefix_hash(p, 64) % balance_mod as u64 == (g % balance_mod) as u64)
+        .expect("salt search always terminates")
+}
+
+/// N single-threaded engine replicas behind the prefix-affinity router and
+/// the epoll reactor, loaded by concurrent keep-alive HTTP clients each
+/// pinned to its own shared-prefix group. Decode-heavy (`max_new` 16) so
+/// the engines, not the socket layer, are the bottleneck being scaled.
+fn replica_scaling_run(
+    model: &Arc<Model>,
+    n_replicas: usize,
+    n_clients: usize,
+    reqs_per_client: usize,
+    prefix_tokens: usize,
+    balance_mod: usize,
+) -> ReplicaScaling {
+    let max_new = 16usize;
+    let mut replicas = Vec::with_capacity(n_replicas);
+    let mut scheds = Vec::with_capacity(n_replicas);
+    for r in 0..n_replicas {
+        let engine = Arc::new(Engine::paged(
+            Arc::clone(model),
+            teal_sparsifier(model),
+            EngineCfg {
+                threads: 1,
+                ..EngineCfg::default()
+            },
+            &KvCfg {
+                pool_blocks: 512 / n_replicas,
+                block_size: 16,
+                prefix_cache: true,
+            },
+        ));
+        let coord = Coordinator::new(
+            engine,
+            CoordinatorCfg {
+                batcher: BatcherCfg {
+                    max_batch: 8,
+                    max_queue: 256,
+                },
+                replica_id: r,
+                ..CoordinatorCfg::default()
+            },
+        );
+        let sched = Arc::clone(&coord);
+        scheds.push(std::thread::spawn(move || sched.run_scheduler()));
+        replicas.push(coord);
+    }
+    let router = Router::new(replicas, RouterCfg::default());
+    let (tx, rx) = std::sync::mpsc::channel();
+    let rr = Arc::clone(&router);
+    let serve = std::thread::spawn(move || {
+        wisparse::server::reactor::serve(rr, "127.0.0.1:0", ReactorCfg::default(), move |a| {
+            tx.send(a).unwrap();
+        })
+        .expect("reactor serve");
+    });
+    let addr = rx.recv().expect("bound addr").to_string();
+    let prefixes: Vec<String> = (0..n_clients)
+        .map(|g| balanced_group_prefix(g, prefix_tokens, balance_mod))
+        .collect();
+
+    // Warm each group's radix blocks on its affinity replica.
+    for p in &prefixes {
+        let stream = TcpStream::connect(&addr).expect("connect");
+        let mut writer = stream.try_clone().expect("clone");
+        let mut reader = BufReader::new(stream);
+        http_generate(&mut writer, &mut reader, &format!("{p} warm"), max_new);
+    }
+
+    let sw = Stopwatch::start();
+    let per_client: Vec<(usize, usize, Vec<f64>)> = std::thread::scope(|s| {
+        prefixes
+            .iter()
+            .map(|prefix| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let stream = TcpStream::connect(&addr).expect("connect");
+                    let mut writer = stream.try_clone().expect("clone");
+                    let mut reader = BufReader::new(stream);
+                    let mut prompt_tokens = 0usize;
+                    let mut generated = 0usize;
+                    let mut lat = Vec::with_capacity(reqs_per_client);
+                    for i in 0..reqs_per_client {
+                        let prompt = format!("{prefix} q{i:02}");
+                        prompt_tokens += prompt.len();
+                        let (n, ms) = http_generate(&mut writer, &mut reader, &prompt, max_new);
+                        generated += n;
+                        lat.push(ms);
+                    }
+                    (prompt_tokens, generated, lat)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let wall = sw.elapsed_secs();
+
+    let prompt_tokens: usize = per_client.iter().map(|(p, _, _)| *p).sum();
+    let generated: usize = per_client.iter().map(|(_, g, _)| *g).sum();
+    let mut lats: Vec<f64> = per_client.into_iter().flat_map(|(_, _, l)| l).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p95 = lats[((lats.len() as f64 * 0.95) as usize).min(lats.len() - 1)];
+    let hit_rate = router
+        .metrics_json()
+        .get("prefix_hit_rate")
+        .as_f64()
+        .unwrap_or(0.0);
+
+    router.drain();
+    for h in scheds {
+        h.join().expect("scheduler thread");
+    }
+    serve.join().expect("serve thread");
+    ReplicaScaling {
+        tok_s: (prompt_tokens + generated) as f64 / wall,
+        p95_total_ms: p95,
+        hit_rate,
+    }
+}
+
 fn main() {
     let csv = batch_width_sweep();
     write_csv(
@@ -207,6 +397,41 @@ fn main() {
         "prefix cache on : {:>8.1} prefill tok/s  (hit rate {:.3})  -> {speedup:.2}x",
         on.prefill_tok_s, on.hit_rate
     );
+    // Replica scaling through the reactor: single-threaded engines, so the
+    // A/B isolates what sharding buys. One run per replica count, same
+    // balanced shared-prefix workload each time.
+    let reqs_per_client = 4usize;
+    let replica_counts = [1usize, 2];
+    let balance_mod = *replica_counts.iter().max().unwrap();
+    println!("== replica scaling: epoll reactor, {n_clients} keep-alive clients ==");
+    let mut scaling_rows = Vec::new();
+    let mut base_tok_s = 0.0f64;
+    for r in replica_counts {
+        let res = replica_scaling_run(
+            &model,
+            r,
+            n_clients,
+            reqs_per_client,
+            prefix_tokens,
+            balance_mod,
+        );
+        if r == 1 {
+            base_tok_s = res.tok_s;
+        }
+        let speedup = res.tok_s / base_tok_s;
+        println!(
+            "replicas {r}: {:>8.1} tok/s  p95 {:>7.1} ms  hit rate {:.3}  -> {speedup:.2}x vs 1",
+            res.tok_s, res.p95_total_ms, res.hit_rate
+        );
+        scaling_rows.push(Json::obj(vec![
+            ("replicas", Json::Num(r as f64)),
+            ("tok_s", Json::Num(res.tok_s)),
+            ("p95_total_ms", Json::Num(res.p95_total_ms)),
+            ("prefix_hit_rate", Json::Num(res.hit_rate)),
+            ("speedup_vs_1", Json::Num(speedup)),
+        ]));
+    }
+
     let report = Json::obj(vec![
         ("bench", Json::Str("serve_shared_prefix".into())),
         ("n_clients", Json::Num(n_clients as f64)),
@@ -218,6 +443,7 @@ fn main() {
         ("e2e_tok_s_prefix_on", Json::Num(on.e2e_tok_s)),
         ("prefix_hit_rate", Json::Num(on.hit_rate)),
         ("preemptions_total", Json::Num(on.preemptions)),
+        ("replica_scaling", Json::Arr(scaling_rows)),
     ]);
     std::fs::write("BENCH_serve.json", report.to_string_pretty()).expect("BENCH_serve.json");
     println!("-> BENCH_serve.json");

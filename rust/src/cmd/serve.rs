@@ -5,7 +5,7 @@ use std::sync::Arc;
 use wisparse::calib::ModelCalib;
 use wisparse::server::batcher::BatcherCfg;
 use wisparse::server::engine::{Engine, EngineCfg, SpecCfg, SpecEngine};
-use wisparse::server::{Coordinator, CoordinatorCfg};
+use wisparse::server::{Coordinator, CoordinatorCfg, ReactorCfg, Router, RouterCfg};
 use wisparse::util::cli::Args;
 
 use crate::cmd::common;
@@ -17,8 +17,24 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         .opt("method", "wisparse", "sparsification method (or `dense`)")
         .opt("target", "0.5", "sparsity target (plan must exist or be calibratable)")
         .opt("addr", "127.0.0.1:8077", "listen address")
-        .opt("max-batch", "8", "max concurrent sequences")
-        .opt("max-queue", "256", "wait-queue cap; excess load sheds 503 + Retry-After")
+        .opt(
+            "frontend",
+            "reactor",
+            "HTTP front end: epoll reactor or legacy thread-per-connection (reactor|blocking)",
+        )
+        .opt(
+            "replicas",
+            "1",
+            "engine replicas behind the prefix-affinity router (each gets its own scheduler and an equal share of the KV pool)",
+        )
+        .opt(
+            "route-prefix-k",
+            "64",
+            "prompt-prefix bytes hashed for replica affinity (keep a multiple of --kv-block-size)",
+        )
+        .opt("max-conns", "1024", "reactor connection cap; accept throttles above it")
+        .opt("max-batch", "8", "max concurrent sequences (per replica)")
+        .opt("max-queue", "256", "per-replica wait-queue cap; excess load sheds 503 + Retry-After")
         .opt("deadline-ms", "0", "default per-request deadline in ms (0 = none)")
         .opt(
             "drain-timeout",
@@ -151,12 +167,23 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         shadow_kl_ceiling,
         ..EngineCfg::default()
     };
-    let engine = Arc::new(Engine::paged(
-        Arc::clone(&model),
-        sparsifier,
-        engine_cfg,
-        &kv_cfg,
-    ));
+    let replicas_n = args.get_usize("replicas")?.max(1);
+    let frontend = args.get("frontend");
+    if frontend != "reactor" && frontend != "blocking" {
+        anyhow::bail!("--frontend must be reactor|blocking, got `{frontend}`");
+    }
+    if kv_cfg.pool_blocks / replicas_n == 0 {
+        anyhow::bail!(
+            "--kv-pool-blocks {} cannot be split across {replicas_n} replicas",
+            kv_cfg.pool_blocks
+        );
+    }
+    // Each replica carves an equal share out of the configured pool budget
+    // so N replicas never hold more KV memory than one replica would.
+    let replica_kv = wisparse::kv::KvCfg {
+        pool_blocks: kv_cfg.pool_blocks / replicas_n,
+        ..kv_cfg
+    };
     let coord_cfg = CoordinatorCfg {
         batcher: BatcherCfg {
             max_batch: args.get_usize("max-batch")?,
@@ -170,12 +197,14 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         // The shadow_kl objective's threshold tracks the engine's ceiling so
         // the burn-rate alert and the per-sample breach counter agree.
         slos: wisparse::obs::SloSpec::default_set(shadow_kl_ceiling),
+        replica_id: 0,
     };
-    let prefill_chunk = engine.cfg.prefill_chunk;
-    let coord = if speculative {
-        // The draft is the same weights at higher sparsity: a calibrated
-        // plan for the production method (or TEAL magnitude masks when the
-        // production path is dense) at `--draft-sparsity`.
+    let prefill_chunk = engine_cfg.prefill_chunk;
+    // The draft is the same weights at higher sparsity: a calibrated plan
+    // for the production method (or TEAL magnitude masks when the
+    // production path is dense) at `--draft-sparsity`. Shared by every
+    // replica's SpecEngine.
+    let spec_setup = if speculative {
         let draft_method = if method == "dense" { "teal" } else { method };
         let draft_target = args.get_f64("draft-sparsity")?;
         let draft_plan = common::plan_for(
@@ -197,21 +226,48 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
             draft_target * 100.0,
             spec_cfg.k
         );
-        let spec = Arc::new(SpecEngine::new(Arc::clone(&engine), draft, spec_cfg));
-        Coordinator::new_spec(spec, coord_cfg)
+        Some((draft, spec_cfg))
     } else {
-        Coordinator::new(engine, coord_cfg)
+        None
     };
+    let mut replicas = Vec::with_capacity(replicas_n);
+    let mut sched_handles = Vec::with_capacity(replicas_n);
+    for r in 0..replicas_n {
+        let engine = Arc::new(Engine::paged(
+            Arc::clone(&model),
+            Arc::clone(&sparsifier),
+            engine_cfg.clone(),
+            &replica_kv,
+        ));
+        let cfg_r = CoordinatorCfg {
+            replica_id: r,
+            ..coord_cfg.clone()
+        };
+        let coord = if let Some((draft, spec_cfg)) = &spec_setup {
+            let spec = Arc::new(SpecEngine::new(engine, Arc::clone(draft), spec_cfg.clone()));
+            Coordinator::new_spec(spec, cfg_r)
+        } else {
+            Coordinator::new(engine, cfg_r)
+        };
+        let sched = Arc::clone(&coord);
+        sched_handles.push(std::thread::spawn(move || sched.run_scheduler()));
+        replicas.push(coord);
+    }
+    let router = Router::new(
+        replicas,
+        RouterCfg {
+            prefix_k: args.get_usize("route-prefix-k")?.max(1),
+            ..RouterCfg::default()
+        },
+    );
     if let Some(o) = &block_obs {
         // Calibration forwards above went through the sink; serve clean.
         o.reset();
     }
-    let sched = Arc::clone(&coord);
-    let sched_handle = std::thread::spawn(move || sched.run_scheduler());
     // SIGTERM/SIGINT start a graceful drain: admission stops, active
-    // sequences finish (bounded by --drain-timeout), then the scheduler
-    // and the accept loop below both exit on their own.
-    wisparse::server::install_sigterm_drain(Arc::clone(&coord));
+    // sequences finish (bounded by --drain-timeout), then every scheduler
+    // and the front-end loop below both exit on their own.
+    wisparse::server::install_sigterm_drain_router(Arc::clone(&router));
     println!(
         "serving {} ({}, weights {}, {:.1} MB resident) — POST /generate, GET /metrics, GET /healthz, GET /readyz, POST /admin/drain",
         model.cfg.name,
@@ -220,12 +276,14 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
         model.weight_bytes_resident() as f64 / 1e6
     );
     println!(
-        "paged KV: {} blocks x {} positions, prefix cache {}; chunked prefill {} tok/iter; fused batch decode {}",
-        kv_cfg.pool_blocks,
-        kv_cfg.block_size,
-        if kv_cfg.prefix_cache { "on" } else { "off" },
+        "replicas: {replicas_n} ({} front end, prefix-affinity k={}); paged KV per replica: {} blocks x {} positions, prefix cache {}; chunked prefill {} tok/iter; fused batch decode {}",
+        frontend,
+        router.cfg().prefix_k,
+        replica_kv.pool_blocks,
+        replica_kv.block_size,
+        if replica_kv.prefix_cache { "on" } else { "off" },
         prefill_chunk,
-        if engine.cfg.fused_batch { "on" } else { "off" }
+        if engine_cfg.fused_batch { "on" } else { "off" }
     );
     if quality_sample_rate > 0.0 {
         println!(
@@ -233,13 +291,28 @@ pub fn run(argv: &[String]) -> anyhow::Result<()> {
             (1.0 / quality_sample_rate).round().max(1.0) as u64
         );
     }
-    wisparse::server::http::serve(Arc::clone(&coord), args.get("addr"), |addr| {
-        println!("listening on http://{addr}");
-    })?;
-    // The accept loop only exits once the coordinator is shut down (drain
-    // complete or explicit); join the scheduler so every response has been
+    match frontend {
+        "reactor" => wisparse::server::reactor::serve(
+            Arc::clone(&router),
+            args.get("addr"),
+            ReactorCfg {
+                max_conns: args.get_usize("max-conns")?.max(1),
+                ..ReactorCfg::default()
+            },
+            |addr| {
+                println!("listening on http://{addr}");
+            },
+        )?,
+        _ => wisparse::server::http::serve_blocking(Arc::clone(&router), args.get("addr"), |addr| {
+            println!("listening on http://{addr}");
+        })?,
+    }
+    // The front-end loop only exits once every replica is shut down (drain
+    // complete or explicit); join the schedulers so every response has been
     // delivered before the process exits.
-    sched_handle.join().ok();
-    println!("drained: scheduler joined, all streams flushed");
+    for h in sched_handles {
+        h.join().ok();
+    }
+    println!("drained: schedulers joined, all streams flushed");
     Ok(())
 }

@@ -67,6 +67,23 @@ impl Hist {
         self.sum
     }
 
+    /// Add another histogram's observations bucket-wise (both sides must
+    /// share a bucket layout — every latency family uses [`MS_BUCKETS`]).
+    /// Used by the router to aggregate per-replica histograms at scrape
+    /// time; cumulative monotonicity is preserved by construction.
+    pub fn merge_from(&mut self, o: &Hist) {
+        assert_eq!(
+            self.bounds.len(),
+            o.bounds.len(),
+            "histogram merge requires identical bucket layouts"
+        );
+        for (a, b) in self.counts.iter_mut().zip(o.counts.iter()) {
+            *a += b;
+        }
+        self.sum += o.sum;
+        self.count += o.count;
+    }
+
     /// Cumulative `(le, count)` pairs ending with `(+Inf, total)`.
     pub fn cumulative(&self) -> Vec<(f64, u64)> {
         let mut acc = 0u64;
@@ -125,6 +142,29 @@ impl RateWindow {
             *slot = (sec, 0);
         }
         slot.1 += n;
+    }
+
+    /// Fold another window's per-second buckets into this one, translating
+    /// second indices between the two epochs. Replica windows are created
+    /// within milliseconds of each other, so the rounded shift is 0 in
+    /// practice and the aggregate rate reads as the sum of replica rates.
+    pub fn merge_from(&mut self, o: &RateWindow) {
+        if self.slots.iter().all(|(_, c)| *c == 0) {
+            // Fresh aggregate: adopt the other window wholesale.
+            self.started = o.started;
+            self.slots = o.slots;
+            return;
+        }
+        let delta = if o.started >= self.started {
+            (o.started - self.started).as_secs_f64().round()
+        } else {
+            -(self.started - o.started).as_secs_f64().round()
+        };
+        for &(sec, n) in o.slots.iter() {
+            if n > 0 {
+                self.add_at(n, (sec as f64 + delta).max(0.0) as u64);
+            }
+        }
     }
 
     /// Events/second over the trailing window (or since start, if younger).

@@ -77,6 +77,9 @@ pub struct CoordinatorCfg {
     /// `decode_gap_p95_ms` entries also set the per-event breach
     /// thresholds the metrics feed applies.
     pub slos: Vec<SloSpec>,
+    /// This coordinator's position in the router's replica set (0 for a
+    /// single-engine server). Carried in per-replica metric labels.
+    pub replica_id: usize,
 }
 
 impl Default for CoordinatorCfg {
@@ -86,6 +89,7 @@ impl Default for CoordinatorCfg {
             default_deadline: None,
             drain_timeout: Duration::from_secs(30),
             slos: SloSpec::default_set(0.05),
+            replica_id: 0,
         }
     }
 }
@@ -196,6 +200,75 @@ impl Coordinator {
     /// Server default deadline (applied to requests without their own).
     pub fn default_deadline(&self) -> Option<Duration> {
         self.cfg.default_deadline
+    }
+
+    /// This coordinator's position in the router's replica set.
+    pub fn replica_id(&self) -> usize {
+        self.cfg.replica_id
+    }
+
+    /// Waiting (unadmitted) requests right now.
+    pub fn queue_depth(&self) -> usize {
+        lock_ok(&self.state).batcher.queue_len()
+    }
+
+    /// Wait-queue capacity (`BatcherCfg::max_queue`).
+    pub fn queue_capacity(&self) -> usize {
+        self.cfg.batcher.max_queue
+    }
+
+    /// In-flight requests (queued + active): every request with a
+    /// registered completion or stream channel. The router's least-loaded
+    /// fallback reads this as the replica's load signal.
+    pub fn load(&self) -> usize {
+        let st = lock_ok(&self.state);
+        st.waiters.len() + st.streams.len()
+    }
+
+    /// Refresh this replica's report-time gauges and fold its metrics into
+    /// a scrape-time aggregate (see [`Metrics::merge_from`]).
+    pub fn merge_metrics_into(&self, agg: &mut Metrics) {
+        let depth = lock_ok(&self.state).batcher.queue_len() as u64;
+        let mut m = lock_ok(&self.metrics);
+        self.refresh_gauges(&mut m, depth);
+        agg.merge_from(&m);
+    }
+
+    /// Compact per-replica block for the `/metrics` JSON `replicas[]`
+    /// array: identity, load, KV pool occupancy, windowed throughput and
+    /// the health counters that distinguish a sick replica from its peers.
+    pub fn replica_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let (depth, in_flight) = {
+            let st = lock_ok(&self.state);
+            (
+                st.batcher.queue_len() as u64,
+                (st.waiters.len() + st.streams.len()) as u64,
+            )
+        };
+        let mut m = lock_ok(&self.metrics);
+        self.refresh_gauges(&mut m, depth);
+        Json::obj(vec![
+            ("replica", Json::Num(self.cfg.replica_id as f64)),
+            ("queue_depth", Json::Num(depth as f64)),
+            ("in_flight", Json::Num(in_flight as f64)),
+            ("blocks_total", Json::Num(m.blocks_total as f64)),
+            ("blocks_in_use", Json::Num(m.blocks_in_use as f64)),
+            ("decode_tok_s", Json::Num(m.throughput_window())),
+            ("requests_total", Json::Num(m.requests_total as f64)),
+            ("tokens_generated", Json::Num(m.tokens_generated as f64)),
+            ("prefix_hit_rate", Json::Num(m.prefix_hit_rate())),
+            (
+                "panics_caught_total",
+                Json::Num(m.panics_caught_total as f64),
+            ),
+            (
+                "scheduler_restarts_total",
+                Json::Num(m.scheduler_restarts_total as f64),
+            ),
+            ("draining", Json::Bool(self.is_draining())),
+            ("scheduler_exited", Json::Bool(self.scheduler_exited())),
+        ])
     }
 
     /// Register a request under the scheduler lock: refuse while draining

@@ -29,14 +29,20 @@
 //! commits, then a final `{"done":true, ...}` summary line (the same
 //! object the blocking path returns).
 //!
-//! One thread per connection; connections are closed after each response
-//! (`Connection: close`), which keeps the parser honest and is plenty for a
-//! reproduction-scale router.
+//! Two front ends share this module's parsing, caps and routing table:
+//! the legacy blocking path below (one thread per connection, each response
+//! `Connection: close`) and the epoll reactor in
+//! [`crate::server::reactor`] (one thread for every connection, HTTP
+//! keep-alive). Both serve the same [`crate::server::router::Router`], so
+//! `wisparse serve --frontend blocking|reactor` is a pure transport swap —
+//! the differential suites in `tests/sharded_serve.rs` pin the two paths
+//! response-equivalent.
 
 use crate::obs::{chrome_trace, is_truncated, tracer, Span, TraceSummary};
 use crate::server::coordinator::Coordinator;
 use crate::server::faults::FaultPoint;
 use crate::server::request::{GenRequest, GenResponse, StreamEvent};
+use crate::server::router::Router;
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -61,6 +67,11 @@ pub struct HttpRequest {
     pub method: String,
     pub path: String,
     pub body: String,
+    /// Whether the client may reuse this connection (HTTP/1.1 default
+    /// unless it sent `Connection: close`; HTTP/1.0 defaults closed). The
+    /// blocking front end ignores this and always closes; the reactor
+    /// honors it.
+    pub keep_alive: bool,
 }
 
 /// Why parsing an HTTP request failed — each class maps to a distinct
@@ -139,6 +150,8 @@ pub fn parse_request<R: BufRead>(reader: &mut R) -> Result<HttpRequest, ParseErr
         .next()
         .ok_or_else(|| ParseError::Bad("missing path".to_string()))?
         .to_string();
+    // HTTP/1.1 defaults to keep-alive, HTTP/1.0 (or no version) to close.
+    let mut keep_alive = parts.next().is_some_and(|v| v != "HTTP/1.0");
     let mut content_length = 0usize;
     let mut n_headers = 0usize;
     loop {
@@ -157,6 +170,13 @@ pub fn parse_request<R: BufRead>(reader: &mut R) -> Result<HttpRequest, ParseErr
                     .trim()
                     .parse()
                     .map_err(|_| ParseError::Bad("bad content-length".to_string()))?;
+            } else if k.eq_ignore_ascii_case("connection") {
+                let v = v.trim();
+                if v.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if v.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
             }
         }
     }
@@ -169,7 +189,71 @@ pub fn parse_request<R: BufRead>(reader: &mut R) -> Result<HttpRequest, ParseErr
         method,
         path,
         body: String::from_utf8(body).map_err(|_| ParseError::Bad("non-utf8 body".into()))?,
+        keep_alive,
     })
+}
+
+/// Header-section byte ceiling for the buffered (reactor) parser: every
+/// header line is individually capped, so the section as a whole is too.
+const MAX_HEADER_SECTION_BYTES: usize = (MAX_HEADER_COUNT + 2) * MAX_HEADER_LINE_BYTES;
+
+/// Incremental variant of [`parse_request`] for the reactor's nonblocking
+/// reads: attempt to parse one complete request from the front of `buf`.
+///
+/// Returns `None` while more bytes are needed, `Some(Ok((req, consumed)))`
+/// once a whole request (headers + declared body) is buffered — leftover
+/// bytes past `consumed` belong to the next pipelined request — or
+/// `Some(Err(..))` when the buffered prefix can already be rejected. The
+/// caps are enforced incrementally, so a hostile client cannot buffer an
+/// unbounded header section by withholding its terminator: validation is
+/// then delegated to [`parse_request`] over the complete bytes, keeping
+/// one authoritative parser for both front ends.
+pub fn try_parse_buffered(buf: &[u8]) -> Option<Result<(HttpRequest, usize), ParseError>> {
+    let header_end = buf.windows(4).position(|w| w == b"\r\n\r\n");
+    let Some(h) = header_end else {
+        // No terminator yet: reject what can already be rejected.
+        if buf.len() > MAX_HEADER_SECTION_BYTES {
+            return Some(Err(ParseError::HeadersTooLarge("too many headers")));
+        }
+        let tail = buf
+            .iter()
+            .rposition(|&b| b == b'\n')
+            .map(|i| buf.len() - i - 1)
+            .unwrap_or(buf.len());
+        if tail > MAX_HEADER_LINE_BYTES {
+            return Some(Err(ParseError::HeadersTooLarge("header line too long")));
+        }
+        if buf.iter().filter(|&&b| b == b'\n').count() > MAX_HEADER_COUNT + 1 {
+            return Some(Err(ParseError::HeadersTooLarge("too many headers")));
+        }
+        return None;
+    };
+    // Light scan for Content-Length so we know how many body bytes to wait
+    // for; full validation happens in parse_request below.
+    let header = &buf[..h];
+    let mut content_length = 0usize;
+    for line in header.split(|&b| b == b'\n').skip(1) {
+        let line = String::from_utf8_lossy(line);
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                match v.trim().parse::<usize>() {
+                    Ok(n) => content_length = n,
+                    Err(_) => {
+                        return Some(Err(ParseError::Bad("bad content-length".to_string())))
+                    }
+                }
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Some(Err(ParseError::BodyTooLarge));
+    }
+    let total = h + 4 + content_length;
+    if buf.len() < total {
+        return None;
+    }
+    let mut cursor = std::io::Cursor::new(&buf[..total]);
+    Some(parse_request(&mut std::io::BufReader::new(&mut cursor)).map(|req| (req, total)))
 }
 
 /// Serialize an HTTP response. Every 503 carries `Retry-After` so shed
@@ -181,9 +265,23 @@ pub fn response(status: u16, reason: &str, body: &str) -> String {
 /// [`response`] with an explicit content type (the Prometheus exposition
 /// is text, not JSON).
 pub fn response_typed(status: u16, reason: &str, content_type: &str, body: &str) -> String {
+    response_conn(status, reason, content_type, body, false)
+}
+
+/// [`response_typed`] with an explicit connection disposition: the reactor
+/// keeps HTTP/1.1 connections open between requests; the blocking front
+/// end always closes.
+pub fn response_conn(
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+    keep_alive: bool,
+) -> String {
     let retry = if status == 503 { "Retry-After: 1\r\n" } else { "" };
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{retry}Connection: {conn}\r\n\r\n{body}",
         body.len()
     )
 }
@@ -192,7 +290,7 @@ pub fn response_typed(status: u16, reason: &str, content_type: &str, body: &str)
 /// tokens is a 200 (partial output is still output — `finish_reason`
 /// carries the why); terminal no-output responses surface their failure
 /// class as a status.
-fn generate_status(resp: &GenResponse) -> (u16, &'static str) {
+pub(crate) fn generate_status(resp: &GenResponse) -> (u16, &'static str) {
     if resp.n_generated > 0 {
         return (200, "OK");
     }
@@ -281,12 +379,11 @@ fn slow_traces_json() -> Json {
     ])
 }
 
-/// Route one request against the coordinator. Returns
-/// `(status, reason, content_type, body)`.
-pub fn route(
-    coord: &Arc<Coordinator>,
-    req: &HttpRequest,
-) -> (u16, &'static str, &'static str, String) {
+/// Route one request against the router (single replica or sharded).
+/// Returns `(status, reason, content_type, body)`. The reactor intercepts
+/// `POST /generate` before calling this (its dispatch is asynchronous);
+/// the blocking front end lets the `/generate` arm below submit-and-wait.
+pub fn route(router: &Router, req: &HttpRequest) -> (u16, &'static str, &'static str, String) {
     const JSON: &str = "application/json";
     let (path, query) = req
         .path
@@ -298,7 +395,7 @@ pub fn route(
             (200, "OK", JSON, r#"{"status":"ok"}"#.to_string())
         }
         ("GET", "/readyz") => {
-            if coord.is_draining() || coord.is_shutdown() {
+            if router.is_draining() || router.is_shutdown() {
                 (
                     503,
                     "Service Unavailable",
@@ -310,17 +407,17 @@ pub fn route(
             }
         }
         ("POST", "/admin/drain") => {
-            coord.drain();
+            router.drain();
             (202, "Accepted", JSON, r#"{"status":"draining"}"#.to_string())
         }
         ("GET", "/metrics") => {
             if query_param(query, "format") == Some("prometheus") {
-                (200, "OK", PROM_CONTENT_TYPE, coord.metrics_prometheus())
+                (200, "OK", PROM_CONTENT_TYPE, router.metrics_prometheus())
             } else {
-                (200, "OK", JSON, coord.metrics_json().to_string_pretty())
+                (200, "OK", JSON, router.metrics_json().to_string_pretty())
             }
         }
-        ("GET", "/alerts") => (200, "OK", JSON, coord.alerts_json().to_string_pretty()),
+        ("GET", "/alerts") => (200, "OK", JSON, router.alerts_json().to_string_pretty()),
         ("GET", "/debug/traces/slow") => {
             (200, "OK", JSON, slow_traces_json().to_string_pretty())
         }
@@ -358,9 +455,9 @@ pub fn route(
                     Json::obj(vec![("error", Json::Str(e))]).to_string_compact(),
                 ),
                 // The parsed request is handed over whole so per-request
-                // fields (deadline_ms, sampling) survive; the coordinator
-                // assigns the id and the default deadline.
-                Ok(r) => match coord.submit_request_blocking(r) {
+                // fields (deadline_ms, sampling) survive; the routed
+                // coordinator assigns the id and the default deadline.
+                Ok(r) => match router.submit_request_blocking(r) {
                     Ok(resp) => {
                         // The trace id only exists after submission, so the
                         // body-parse interval is attached post-hoc (top-
@@ -435,9 +532,11 @@ fn next_stream_event(
 /// scheduler also cancels on its next failed token send). A dead scheduler
 /// or a wait far past the deadline still produces exactly one `done` line
 /// instead of a silently pinned connection thread.
-fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: GenRequest) {
-    let deadline = r.deadline.or(coord.default_deadline());
-    let (id, rx) = match coord.submit_stream_request(r) {
+fn stream_generate(router: &Router, stream: &mut TcpStream, r: GenRequest) {
+    let deadline = r.deadline.or(router
+        .replica(router.affinity_replica(&r.prompt))
+        .default_deadline());
+    let (replica, id, rx) = match router.submit_stream_request(r) {
         Ok(ok) => ok,
         Err(e) => {
             let body = Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string_compact();
@@ -445,6 +544,7 @@ fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: GenReque
             return;
         }
     };
+    let coord = router.replica(replica);
     let head = "HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
     if stream.write_all(head.as_bytes()).is_err() {
         coord.cancel(id);
@@ -481,7 +581,7 @@ fn stream_generate(coord: &Arc<Coordinator>, stream: &mut TcpStream, r: GenReque
     let _ = stream.write_all(b"0\r\n\r\n");
 }
 
-fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
+fn handle_conn(router: Arc<Router>, stream: TcpStream) {
     let peer = stream.peer_addr().ok();
     // A stalled client trips the read timeout (408) rather than pinning
     // this thread forever. Writes (streaming responses) are unaffected.
@@ -501,7 +601,7 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
                 if let Ok(j) = Json::parse(&req.body) {
                     if let Ok(r) = GenRequest::from_json(0, &j) {
                         if r.stream {
-                            stream_generate(&coord, &mut stream, r);
+                            stream_generate(&router, &mut stream, r);
                             crate::debug!(
                                 "{:?} {} {} -> 200 (stream)",
                                 peer,
@@ -513,7 +613,7 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
                     }
                 }
             }
-            let (status, reason, content_type, body) = route(&coord, &req);
+            let (status, reason, content_type, body) = route(&router, &req);
             let _ =
                 stream.write_all(response_typed(status, reason, content_type, &body).as_bytes());
             crate::debug!("{:?} {} {} -> {status}", peer, req.method, req.path);
@@ -528,41 +628,57 @@ fn handle_conn(coord: Arc<Coordinator>, stream: TcpStream) {
     }
 }
 
-/// Serve on `addr` (e.g. "127.0.0.1:8077") until the coordinator shuts
-/// down. Returns the bound local address via the callback before blocking
-/// (useful when binding port 0).
-///
-/// The accept loop is non-blocking so shutdown is noticed within ~5ms
-/// without needing a poke connection; accepted sockets are switched back
-/// to blocking for their connection thread. On exit, in-flight connection
-/// threads get a bounded grace period to flush their responses (a drain
-/// must deliver every response already owed, not sever sockets mid-write).
+/// Serve one coordinator on `addr` with the blocking front end — the
+/// pre-router compatibility entry point used throughout the tests and
+/// examples. Equivalent to [`serve_blocking`] over [`Router::single`].
 pub fn serve(
     coord: Arc<Coordinator>,
     addr: &str,
     on_bound: impl FnOnce(std::net::SocketAddr),
 ) -> anyhow::Result<()> {
+    serve_blocking(Router::single(coord), addr, on_bound)
+}
+
+/// Serve on `addr` (e.g. "127.0.0.1:8077") with the legacy blocking front
+/// end (`--frontend blocking`) until every replica shuts down. Returns the
+/// bound local address via the callback before blocking (useful when
+/// binding port 0).
+///
+/// The accept loop parks in `poll(2)` on the listener — a pending
+/// connection wakes it immediately and an idle listener costs ~0 CPU —
+/// and still notices shutdown within one poll timeout. Accepted sockets
+/// run blocking on their own thread. On exit, in-flight connection
+/// threads get a bounded grace period to flush their responses (a drain
+/// must deliver every response already owed, not sever sockets mid-write).
+pub fn serve_blocking(
+    router: Arc<Router>,
+    addr: &str,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    use std::os::unix::io::AsRawFd;
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     on_bound(listener.local_addr()?);
     let live = Arc::new(AtomicUsize::new(0));
     loop {
-        if coord.is_shutdown() {
+        if router.is_shutdown() {
             break;
         }
         match listener.accept() {
             Ok((s, _)) => {
                 let _ = s.set_nonblocking(false);
-                let c = Arc::clone(&coord);
+                let r = Arc::clone(&router);
                 let live2 = Arc::clone(&live);
                 live.fetch_add(1, Ordering::SeqCst);
                 std::thread::spawn(move || {
-                    handle_conn(c, s);
+                    handle_conn(r, s);
                     live2.fetch_sub(1, Ordering::SeqCst);
                 });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
+                // Park until a connection arrives (instant wakeup) or the
+                // timeout elapses (bounds shutdown-detection latency).
+                crate::server::reactor::wait_readable(listener.as_raw_fd(), 50);
             }
             Err(e) => {
                 crate::warn_!("accept error: {e}");

@@ -147,6 +147,61 @@ impl Metrics {
         }
     }
 
+    /// Fold another replica's metrics into this one. The router builds its
+    /// unified `/metrics` aggregate by merging every replica into a fresh
+    /// `Metrics` at scrape time: counters and the finish-reason map sum,
+    /// histograms merge bucket-wise, summary windows blend (bounded), and
+    /// the throughput window re-bases onto the earliest epoch so the
+    /// aggregate windowed rate is the sum of replica rates. Weight gauges
+    /// are overwritten, not summed — replicas share one `Arc<Model>`, so
+    /// resident bytes must be counted once.
+    pub fn merge_from(&mut self, o: &Metrics) {
+        if o.started < self.started {
+            self.started = o.started;
+        }
+        self.requests_total += o.requests_total;
+        self.requests_rejected += o.requests_rejected;
+        self.tokens_generated += o.tokens_generated;
+        self.tokens_prefilled += o.tokens_prefilled;
+        self.queue_ms.merge_from(&o.queue_ms);
+        self.total_ms.merge_from(&o.total_ms);
+        self.per_token_ms.merge_from(&o.per_token_ms);
+        self.decode_gap_ms.merge_from(&o.decode_gap_ms);
+        self.macs_kept += o.macs_kept;
+        self.macs_dense += o.macs_dense;
+        self.prefill_chunks_total += o.prefill_chunks_total;
+        self.preemptions_total += o.preemptions_total;
+        self.cancellations_total += o.cancellations_total;
+        self.blocks_total += o.blocks_total;
+        self.blocks_in_use += o.blocks_in_use;
+        self.prefix_hit_tokens += o.prefix_hit_tokens;
+        self.prefix_miss_tokens += o.prefix_miss_tokens;
+        self.spec_rounds_total += o.spec_rounds_total;
+        self.spec_drafted_tokens += o.spec_drafted_tokens;
+        self.spec_accepted_tokens += o.spec_accepted_tokens;
+        self.weight_repr = o.weight_repr.clone();
+        self.weight_bytes_resident = o.weight_bytes_resident;
+        self.weight_bytes_dense = o.weight_bytes_dense;
+        self.panics_caught_total += o.panics_caught_total;
+        self.scheduler_restarts_total += o.scheduler_restarts_total;
+        self.deadline_exceeded_total += o.deadline_exceeded_total;
+        self.shed_total += o.shed_total;
+        self.queue_depth += o.queue_depth;
+        self.drain_duration_ms = self.drain_duration_ms.max(o.drain_duration_ms);
+        self.queue_ms_hist.merge_from(&o.queue_ms_hist);
+        self.total_ms_hist.merge_from(&o.total_ms_hist);
+        self.per_token_ms_hist.merge_from(&o.per_token_ms_hist);
+        self.decode_gap_ms_hist.merge_from(&o.decode_gap_ms_hist);
+        for (reason, n) in &o.finished {
+            *self.finished.entry(reason.clone()).or_insert(0) += n;
+        }
+        self.decode_window.merge_from(&o.decode_window);
+        self.latency_events_total += o.latency_events_total;
+        self.latency_breaches_total += o.latency_breaches_total;
+        self.decode_gap_events_total += o.decode_gap_events_total;
+        self.decode_gap_breaches_total += o.decode_gap_breaches_total;
+    }
+
     /// Terminal events counted so far (the error-rate SLO's denominator).
     pub fn finished_events(&self) -> u64 {
         self.finished.values().sum()

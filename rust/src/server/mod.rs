@@ -1,12 +1,14 @@
 //! The L3 serving coordinator.
 //!
-//! A vLLM-router-shaped stack scaled to this testbed: an HTTP/1.1 front end
-//! (std::net + threads — the environment has no tokio), a FIFO admission
-//! queue, a continuous batcher that admits new sequences between decode
-//! steps, and the sparse inference engine running every sequence's
-//! per-token dynamic masks. Python is never on this path: the engine serves
-//! from the native weights, with the PJRT backend available for
-//! cross-validation.
+//! A vLLM-router-shaped stack scaled to this testbed: an HTTP/1.1 front
+//! end — the epoll reactor in [`reactor`] (default) or the legacy
+//! thread-per-connection path in [`http`] (`--frontend blocking`) — over
+//! a prefix-affinity [`router::Router`] of N engine replicas, each with a
+//! FIFO admission queue, a continuous batcher that admits new sequences
+//! between decode steps, and the sparse inference engine running every
+//! sequence's per-token dynamic masks. Python is never on this path: the
+//! engine serves from the native weights, with the PJRT backend available
+//! for cross-validation.
 
 pub mod request;
 pub mod engine;
@@ -14,23 +16,27 @@ pub mod batcher;
 pub mod faults;
 pub mod metrics;
 pub mod http;
+pub mod reactor;
+pub mod router;
 pub mod coordinator;
 
 pub use coordinator::{Coordinator, CoordinatorCfg};
 pub use engine::{Engine, EngineCfg, SpecCfg, SpecEngine};
 pub use faults::{FaultPoint, Faults};
+pub use reactor::ReactorCfg;
 pub use request::{GenRequest, GenResponse, StreamEvent};
+pub use router::{Router, RouterCfg};
 
 use std::sync::Arc;
 
-/// Install a SIGTERM/SIGINT handler that starts a graceful drain on the
-/// coordinator: admission stops, active sequences finish (bounded by the
-/// drain timeout), streams flush, the scheduler exits, and `serve` loops
-/// unwind — every in-flight request still gets its response. Raw libc
-/// `signal(2)` via FFI: the handler only flips an atomic (async-signal
-/// safe); a watcher thread does the actual drain call.
+/// Install a SIGTERM/SIGINT handler that starts a graceful drain on every
+/// replica behind the router: admission stops, active sequences finish
+/// (bounded by the drain timeout), streams flush, the schedulers exit, and
+/// the serve loops unwind — every in-flight request still gets its
+/// response. Raw libc `signal(2)` via FFI: the handler only flips an
+/// atomic (async-signal safe); a watcher thread does the actual drain.
 #[cfg(unix)]
-pub fn install_sigterm_drain(coord: Arc<Coordinator>) {
+pub fn install_sigterm_drain_router(router: Arc<Router>) {
     use std::sync::atomic::{AtomicBool, Ordering};
     use std::time::Duration;
 
@@ -50,12 +56,17 @@ pub fn install_sigterm_drain(coord: Arc<Coordinator>) {
     std::thread::spawn(move || loop {
         if TERM.load(Ordering::SeqCst) {
             crate::warn_!("SIGTERM/SIGINT: draining");
-            coord.drain();
+            router.drain();
             return;
         }
         std::thread::sleep(Duration::from_millis(20));
     });
 }
 
+/// Single-coordinator wrapper around [`install_sigterm_drain_router`].
+pub fn install_sigterm_drain(coord: Arc<Coordinator>) {
+    install_sigterm_drain_router(Router::single(coord));
+}
+
 #[cfg(not(unix))]
-pub fn install_sigterm_drain(_coord: Arc<Coordinator>) {}
+pub fn install_sigterm_drain_router(_router: Arc<Router>) {}

@@ -1,0 +1,803 @@
+//! Epoll-based single-threaded reactor front end.
+//!
+//! The blocking front end spends one OS thread per connection and sleep-
+//! polls its accept loop; fine for a reproduction-scale router, a ceiling
+//! for anything else. This reactor multiplexes every connection on one
+//! thread with Linux `epoll` — raw FFI against the libc the process is
+//! already linked with, mirroring the no-new-deps `signal(2)` discipline
+//! of the SIGTERM drain hook — and drives each connection through an
+//! explicit state machine:
+//!
+//!   Reading --parse--> (dispatch) --> Waiting   --resp--> write, keep-alive
+//!                                 \-> Streaming --events-> write, close
+//!                                 \-> immediate response (GET endpoints)
+//!
+//! Backpressure is explicit at both edges: per-connection write buffers
+//! are bounded (a slow streaming client stops pulling tokens from its
+//! channel instead of buffering without bound), and the listener is
+//! disarmed while the connection table is at capacity (admission-aware
+//! accept throttling — the kernel's SYN backlog absorbs the burst).
+//!
+//! Engine completions arrive on `mpsc` channels, which epoll cannot wait
+//! on; the loop therefore polls engine-bound connections between socket
+//! events, tightening its epoll timeout to ~2ms only while any exist. An
+//! idle reactor parks in `epoll_wait` for 100ms at a time: idle CPU ~0.
+
+use crate::server::faults::FaultPoint;
+use crate::server::http::{
+    error_status, generate_status, response_conn, route, try_parse_buffered, HttpRequest,
+    READ_TIMEOUT,
+};
+use crate::server::request::{GenRequest, GenResponse, StreamEvent};
+use crate::server::router::Router;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::raw::c_int;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// --- minimal epoll/poll FFI (Linux; no external crates) ---------------------
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+const EPOLLRDHUP: u32 = 0x2000;
+const POLLIN: i16 = 0x001;
+
+/// `struct epoll_event`; packed on x86 ABIs (the kernel's layout), natural
+/// alignment elsewhere — matching libc's definition.
+#[repr(C)]
+#[cfg_attr(any(target_arch = "x86", target_arch = "x86_64"), repr(packed))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+#[repr(C)]
+struct PollFd {
+    fd: c_int,
+    events: i16,
+    revents: i16,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int) -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: c_int) -> c_int;
+}
+
+/// Park until `fd` is readable or `timeout_ms` elapses (`poll(2)`). The
+/// legacy blocking front end's accept loop uses this instead of a 5ms
+/// sleep-poll: a pending connection wakes it immediately, and an idle
+/// listener costs a handful of wakeups per second instead of 200.
+pub fn wait_readable(fd: RawFd, timeout_ms: i32) -> bool {
+    let mut pfd = PollFd {
+        fd,
+        events: POLLIN,
+        revents: 0,
+    };
+    unsafe { poll(&mut pfd, 1, timeout_ms) > 0 }
+}
+
+/// Thin RAII epoll instance.
+struct Epoll {
+    fd: c_int,
+}
+
+impl Epoll {
+    fn new() -> std::io::Result<Self> {
+        // EPOLL_CLOEXEC
+        let fd = unsafe { epoll_create1(0o2000000) };
+        if fd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(Self { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> std::io::Result<()> {
+        let mut ev = EpollEvent {
+            events,
+            data: token,
+        };
+        let p = if op == EPOLL_CTL_DEL {
+            std::ptr::null_mut()
+        } else {
+            &mut ev as *mut EpollEvent
+        };
+        if unsafe { epoll_ctl(self.fd, op, fd, p) } < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn wait(&self, out: &mut [EpollEvent], timeout_ms: i32) -> usize {
+        let n = unsafe {
+            epoll_wait(
+                self.fd,
+                out.as_mut_ptr(),
+                out.len() as c_int,
+                timeout_ms,
+            )
+        };
+        n.max(0) as usize
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+// --- reactor configuration ---------------------------------------------------
+
+/// Reactor knobs (`wisparse serve --max-conns ...`).
+#[derive(Clone, Debug)]
+pub struct ReactorCfg {
+    /// Connection-table capacity; the listener is disarmed at the cap.
+    pub max_conns: usize,
+    /// Per-connection write-buffer high-water mark: a streaming connection
+    /// stops pulling token events from its channel while more than this
+    /// many bytes are waiting on the socket.
+    pub write_buf_cap: usize,
+}
+
+impl Default for ReactorCfg {
+    fn default() -> Self {
+        Self {
+            max_conns: 1024,
+            write_buf_cap: 256 * 1024,
+        }
+    }
+}
+
+/// Extra wait past a request's deadline before the reactor gives up on the
+/// scheduler delivering the terminal itself (mirrors the blocking path's
+/// `WAIT_GRACE`).
+const WAIT_GRACE: Duration = Duration::from_secs(5);
+/// Idle keep-alive connections (at least one response served) are closed
+/// silently after this long; fresh connections that never complete a
+/// request get a 408 after `READ_TIMEOUT` like the blocking path.
+const KEEP_ALIVE_IDLE: Duration = READ_TIMEOUT;
+/// Bound on buffered-but-unparsed request bytes per connection.
+const MAX_CONN_BUF: usize = 2 * 1024 * 1024;
+
+// --- per-connection state machine -------------------------------------------
+
+enum ConnState {
+    /// Accumulating request bytes.
+    Reading,
+    /// A non-streaming `/generate` dispatched; polling its completion.
+    Waiting {
+        rx: Receiver<GenResponse>,
+        replica: usize,
+        id: u64,
+        hard: Option<Instant>,
+        keep_alive: bool,
+        parse_t: Instant,
+        parse_ns: u64,
+    },
+    /// A streaming `/generate`; pulling token events into chunked writes.
+    Streaming {
+        rx: Receiver<StreamEvent>,
+        replica: usize,
+        id: u64,
+        hard: Option<Instant>,
+        /// Event held back by an injected `stream_stall` (chaos schedules
+        /// exercising a slow consumer without blocking the reactor).
+        pending: Option<StreamEvent>,
+        stall_until: Option<Instant>,
+    },
+}
+
+struct Conn {
+    stream: TcpStream,
+    state: ConnState,
+    /// Unparsed request bytes.
+    buf: Vec<u8>,
+    /// Bounded write queue: bytes queued for the socket.
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Close once `out` is flushed (error responses, `Connection: close`).
+    close_after_flush: bool,
+    /// Socket reported readable and `Reading` hasn't drained it yet.
+    readable: bool,
+    /// Event mask currently registered with epoll.
+    armed: u32,
+    /// Peer hung up (EPOLLRDHUP/HUP/ERR).
+    hangup: bool,
+    last_activity: Instant,
+    responses_served: u64,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Self {
+            stream,
+            state: ConnState::Reading,
+            buf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            close_after_flush: false,
+            readable: true, // optimistic first read
+            armed: EPOLLIN | EPOLLRDHUP,
+            hangup: false,
+            last_activity: Instant::now(),
+            responses_served: 0,
+            dead: false,
+        }
+    }
+
+    fn engine_bound(&self) -> bool {
+        matches!(
+            self.state,
+            ConnState::Waiting { .. } | ConnState::Streaming { .. }
+        )
+    }
+
+    fn has_pending_out(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    fn push_response(&mut self, status: u16, reason: &str, content_type: &str, body: &str, keep: bool) {
+        self.out
+            .extend_from_slice(response_conn(status, reason, content_type, body, keep).as_bytes());
+        if !keep {
+            self.close_after_flush = true;
+        }
+        self.responses_served += 1;
+        self.last_activity = Instant::now();
+    }
+
+    fn push_chunk(&mut self, data: &str) {
+        self.out
+            .extend_from_slice(format!("{:x}\r\n{}\r\n", data.len(), data).as_bytes());
+    }
+
+    /// Write as much of `out` as the socket accepts. Returns false when the
+    /// connection died mid-write.
+    fn flush(&mut self) -> bool {
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => return false,
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+        } else if self.out_pos > 64 * 1024 {
+            // Reclaim the flushed prefix of a large in-flight buffer.
+            self.out.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+        true
+    }
+
+    /// Cancel the in-flight request (if any) on its replica — the client
+    /// is gone, so the scheduler should free the sequence's KV blocks
+    /// rather than decode for nobody.
+    fn cancel_in_flight(&self, router: &Router) {
+        match &self.state {
+            ConnState::Waiting { replica, id, .. }
+            | ConnState::Streaming { replica, id, .. } => router.cancel(*replica, *id),
+            ConnState::Reading => {}
+        }
+    }
+}
+
+// --- the reactor itself ------------------------------------------------------
+
+const TOKEN_LISTENER: u64 = 0;
+
+/// Serve on `addr` with the epoll reactor until every replica behind the
+/// router has shut down. Reports the bound address via `on_bound` before
+/// entering the loop (bind port 0 to let the OS pick).
+pub fn serve(
+    router: Arc<Router>,
+    addr: &str,
+    cfg: ReactorCfg,
+    on_bound: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+    let ep = Epoll::new()?;
+    ep.ctl(
+        EPOLL_CTL_ADD,
+        listener.as_raw_fd(),
+        EPOLLIN,
+        TOKEN_LISTENER,
+    )?;
+    let mut listener_armed = true;
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token: u64 = 1;
+    let mut events = [EpollEvent { events: 0, data: 0 }; 64];
+
+    loop {
+        if router.is_shutdown() {
+            break;
+        }
+        // Engine-bound connections wait on mpsc channels epoll can't see:
+        // poll them at ~2ms. Otherwise park properly.
+        let timeout = if conns.values().any(|c| c.engine_bound()) {
+            2
+        } else {
+            100
+        };
+        let n = ep.wait(&mut events, timeout);
+        for ev in events.iter().take(n) {
+            let (token, mask) = (ev.data, ev.events);
+            if token == TOKEN_LISTENER {
+                accept_burst(&listener, &ep, &mut conns, &mut next_token, &cfg);
+                continue;
+            }
+            if let Some(c) = conns.get_mut(&token) {
+                if mask & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0 {
+                    c.hangup = true;
+                }
+                if mask & EPOLLIN != 0 {
+                    c.readable = true;
+                }
+                if mask & EPOLLOUT != 0 {
+                    // Level-triggered: just try flushing on this tick.
+                }
+            }
+        }
+        tick_conns(&router, &cfg, &ep, &mut conns);
+        // Rearm the listener once back under the connection cap.
+        let want_armed = conns.len() < cfg.max_conns;
+        if want_armed != listener_armed {
+            let (op, evs) = if want_armed {
+                (EPOLL_CTL_MOD, EPOLLIN)
+            } else {
+                (EPOLL_CTL_MOD, 0)
+            };
+            let _ = ep.ctl(op, listener.as_raw_fd(), evs, TOKEN_LISTENER);
+            listener_armed = want_armed;
+        }
+    }
+
+    // Shutdown: replicas' exit sweeps still owe terminal responses to
+    // engine-bound connections. Give them (and pending writes) a bounded
+    // grace to flush — a drain must deliver every response already owed,
+    // not sever sockets mid-write.
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_secs(10)
+        && conns
+            .values()
+            .any(|c| c.engine_bound() || c.has_pending_out())
+    {
+        let n = ep.wait(&mut events, 10);
+        for ev in events.iter().take(n) {
+            if let Some(c) = conns.get_mut(&ev.data) {
+                if ev.events & (EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0 {
+                    c.hangup = true;
+                }
+                if ev.events & EPOLLIN != 0 {
+                    c.readable = true;
+                }
+            }
+        }
+        tick_conns(&router, &cfg, &ep, &mut conns);
+    }
+    Ok(())
+}
+
+fn accept_burst(
+    listener: &TcpListener,
+    ep: &Epoll,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    cfg: &ReactorCfg,
+) {
+    while conns.len() < cfg.max_conns {
+        match listener.accept() {
+            Ok((s, _)) => {
+                if s.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = s.set_nodelay(true);
+                let token = *next_token;
+                *next_token += 1;
+                if ep
+                    .ctl(EPOLL_CTL_ADD, s.as_raw_fd(), EPOLLIN | EPOLLRDHUP, token)
+                    .is_ok()
+                {
+                    conns.insert(token, Conn::new(s));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(_) => break,
+        }
+    }
+}
+
+fn tick_conns(router: &Arc<Router>, cfg: &ReactorCfg, ep: &Epoll, conns: &mut HashMap<u64, Conn>) {
+    let mut dead: Vec<u64> = Vec::new();
+    for (tok, c) in conns.iter_mut() {
+        tick_one(router, cfg, c);
+        // Keep the registered mask in sync: EPOLLIN only while parsing (a
+        // pipelining client must not spin the level-triggered loop while
+        // its request is engine-bound), EPOLLOUT only while output is
+        // pending.
+        let mut want = EPOLLRDHUP;
+        if matches!(c.state, ConnState::Reading) && !c.close_after_flush {
+            want |= EPOLLIN;
+        }
+        if c.has_pending_out() {
+            want |= EPOLLOUT;
+        }
+        if want != c.armed
+            && !c.dead
+            && ep
+                .ctl(EPOLL_CTL_MOD, c.stream.as_raw_fd(), want, *tok)
+                .is_ok()
+        {
+            c.armed = want;
+        }
+        if c.dead {
+            dead.push(*tok);
+        }
+    }
+    for tok in dead {
+        if let Some(c) = conns.remove(&tok) {
+            let _ = ep.ctl(EPOLL_CTL_DEL, c.stream.as_raw_fd(), 0, tok);
+            // TcpStream drop closes the socket.
+        }
+    }
+}
+
+fn tick_one(router: &Arc<Router>, cfg: &ReactorCfg, c: &mut Conn) {
+    if c.hangup {
+        c.cancel_in_flight(router);
+        c.dead = true;
+        return;
+    }
+    if !c.flush() {
+        c.cancel_in_flight(router);
+        c.dead = true;
+        return;
+    }
+    match &mut c.state {
+        ConnState::Reading => tick_reading(router, c),
+        ConnState::Waiting { .. } => tick_waiting(router, c),
+        ConnState::Streaming { .. } => tick_streaming(router, cfg, c),
+    }
+    if !c.flush() {
+        c.cancel_in_flight(router);
+        c.dead = true;
+        return;
+    }
+    if c.close_after_flush && !c.has_pending_out() && !c.engine_bound() {
+        c.dead = true;
+    }
+}
+
+fn tick_reading(router: &Arc<Router>, c: &mut Conn) {
+    if c.readable && !c.close_after_flush {
+        loop {
+            let mut tmp = [0u8; 4096];
+            match c.stream.read(&mut tmp) {
+                Ok(0) => {
+                    // EOF: a half-finished request dies silently (the
+                    // client is gone); an empty connection just closes.
+                    c.dead = true;
+                    return;
+                }
+                Ok(n) => {
+                    c.buf.extend_from_slice(&tmp[..n]);
+                    c.last_activity = Instant::now();
+                    if c.buf.len() > MAX_CONN_BUF {
+                        break; // parser will reject below
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    c.readable = false;
+                    break;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    c.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+    // Parse as many pipelined requests as are buffered; stop if a dispatch
+    // leaves Reading (an engine-bound request serializes the connection).
+    while matches!(c.state, ConnState::Reading) && !c.close_after_flush {
+        match try_parse_buffered(&c.buf) {
+            None => break,
+            Some(Err(e)) => {
+                let (status, reason) = error_status(&e);
+                c.push_response(
+                    status,
+                    reason,
+                    "application/json",
+                    &format!(r#"{{"error":"{e}"}}"#),
+                    false,
+                );
+                break;
+            }
+            Some(Ok((req, consumed))) => {
+                c.buf.drain(..consumed);
+                dispatch(router, c, req);
+            }
+        }
+    }
+    // Timeouts: a stalled half-request gets the blocking path's 408; an
+    // idle keep-alive connection closes silently.
+    if matches!(c.state, ConnState::Reading) && !c.close_after_flush {
+        let idle = c.last_activity.elapsed();
+        if !c.buf.is_empty() || c.responses_served == 0 {
+            if idle > READ_TIMEOUT {
+                c.push_response(
+                    408,
+                    "Request Timeout",
+                    "application/json",
+                    r#"{"error":"read timed out"}"#,
+                    false,
+                );
+            }
+        } else if idle > KEEP_ALIVE_IDLE {
+            c.dead = true;
+        }
+    }
+}
+
+fn dispatch(router: &Arc<Router>, c: &mut Conn, req: HttpRequest) {
+    let keep = req.keep_alive;
+    if req.method == "POST" && req.path == "/generate" {
+        let t_parse = Instant::now();
+        let parsed = Json::parse(&req.body)
+            .map_err(|e| e.to_string())
+            .and_then(|j| GenRequest::from_json(0, &j).map_err(|e| e.to_string()));
+        let parse_ns = t_parse.elapsed().as_nanos() as u64;
+        match parsed {
+            Err(e) => {
+                c.push_response(
+                    400,
+                    "Bad Request",
+                    "application/json",
+                    &Json::obj(vec![("error", Json::Str(e))]).to_string_compact(),
+                    keep,
+                );
+            }
+            Ok(r) if r.stream => {
+                let deadline = r
+                    .deadline
+                    .or(router.replica(router.affinity_replica(&r.prompt)).default_deadline());
+                match router.submit_stream_request(r) {
+                    Err(e) => {
+                        c.push_response(
+                            503,
+                            "Service Unavailable",
+                            "application/json",
+                            &Json::obj(vec![("error", Json::Str(e.to_string()))])
+                                .to_string_compact(),
+                            keep,
+                        );
+                    }
+                    Ok((replica, id, rx)) => {
+                        // Chunked NDJSON always closes the connection, like
+                        // the blocking path.
+                        c.out.extend_from_slice(
+                            b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\n\
+                              Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+                        );
+                        let hard = deadline.map(|d| Instant::now() + d + WAIT_GRACE);
+                        c.state = ConnState::Streaming {
+                            rx,
+                            replica,
+                            id,
+                            hard,
+                            pending: None,
+                            stall_until: None,
+                        };
+                    }
+                }
+            }
+            Ok(r) => {
+                let deadline = r
+                    .deadline
+                    .or(router.replica(router.affinity_replica(&r.prompt)).default_deadline());
+                match router.submit_request(r) {
+                    Err(e) => {
+                        c.push_response(
+                            503,
+                            "Service Unavailable",
+                            "application/json",
+                            &Json::obj(vec![("error", Json::Str(e.to_string()))])
+                                .to_string_compact(),
+                            keep,
+                        );
+                    }
+                    Ok((replica, id, rx)) => {
+                        let hard = deadline.map(|d| Instant::now() + d + WAIT_GRACE);
+                        c.state = ConnState::Waiting {
+                            rx,
+                            replica,
+                            id,
+                            hard,
+                            keep_alive: keep,
+                            parse_t: t_parse,
+                            parse_ns,
+                        };
+                    }
+                }
+            }
+        }
+        return;
+    }
+    let (status, reason, content_type, body) = route(router, &req);
+    c.push_response(status, reason, content_type, &body, keep);
+}
+
+fn tick_waiting(router: &Arc<Router>, c: &mut Conn) {
+    let ConnState::Waiting {
+        rx,
+        replica,
+        id,
+        hard,
+        keep_alive,
+        parse_t,
+        parse_ns,
+    } = &c.state
+    else {
+        return;
+    };
+    let (replica, id, keep) = (*replica, *id, *keep_alive);
+    enum Outcome {
+        Resp(GenResponse),
+        Fail(String),
+        Pending,
+    }
+    let outcome = match rx.try_recv() {
+        Ok(resp) => Outcome::Resp(resp),
+        Err(TryRecvError::Disconnected) => Outcome::Fail(format!("scheduler dropped request {id}")),
+        Err(TryRecvError::Empty) => {
+            let coord = router.replica(replica);
+            if coord.scheduler_exited() {
+                // The exit sweep may have delivered between the poll and
+                // the flag read: drain one last time.
+                match rx.try_recv() {
+                    Ok(resp) => Outcome::Resp(resp),
+                    Err(_) => Outcome::Fail("scheduler exited".to_string()),
+                }
+            } else if hard.is_some_and(|h| Instant::now() >= h) {
+                router.cancel(replica, id);
+                Outcome::Fail(format!("request {id} timed out waiting on the scheduler"))
+            } else {
+                Outcome::Pending
+            }
+        }
+    };
+    match outcome {
+        Outcome::Pending => {}
+        Outcome::Resp(resp) => {
+            crate::obs::tracer().record_at(resp.trace_id, 0, "http_parse", *parse_t, *parse_ns, &[]);
+            let (status, reason) = generate_status(&resp);
+            let body = resp.to_json().to_string_pretty();
+            c.state = ConnState::Reading;
+            c.push_response(status, reason, "application/json", &body, keep);
+        }
+        Outcome::Fail(e) => {
+            let body = Json::obj(vec![("error", Json::Str(e))]).to_string_compact();
+            c.state = ConnState::Reading;
+            c.push_response(503, "Service Unavailable", "application/json", &body, keep);
+        }
+    }
+}
+
+fn tick_streaming(router: &Arc<Router>, cfg: &ReactorCfg, c: &mut Conn) {
+    // Backpressure: while the socket is behind, stop pulling events.
+    if c.out.len() - c.out_pos > cfg.write_buf_cap {
+        return;
+    }
+    let ConnState::Streaming {
+        rx,
+        replica,
+        id,
+        hard,
+        pending,
+        stall_until,
+    } = &mut c.state
+    else {
+        return;
+    };
+    let (replica, id) = (*replica, *id);
+    let mut lines: Vec<String> = Vec::new();
+    let mut finished = false;
+    let mut cancel = false;
+    loop {
+        if let Some(t) = *stall_until {
+            if Instant::now() < t {
+                break;
+            }
+            *stall_until = None;
+        }
+        let ev = match pending.take() {
+            Some(ev) => ev,
+            None => match rx.try_recv() {
+                Ok(ev) => {
+                    if router
+                        .replica(replica)
+                        .engine()
+                        .faults
+                        .should_fire(FaultPoint::StreamStall)
+                    {
+                        // Injected slow consumer: hold the event for 50ms
+                        // without stalling the whole reactor.
+                        *pending = Some(ev);
+                        *stall_until = Some(Instant::now() + Duration::from_millis(50));
+                        break;
+                    }
+                    ev
+                }
+                Err(TryRecvError::Disconnected) => {
+                    cancel = true;
+                    let done = StreamEvent::Done(GenResponse::terminal(id, "internal_error"));
+                    lines.push(format!("{}\n", done.to_json().to_string_compact()));
+                    finished = true;
+                    break;
+                }
+                Err(TryRecvError::Empty) => {
+                    let coord = router.replica(replica);
+                    let gone = coord.scheduler_exited();
+                    let expired = hard.is_some_and(|h| Instant::now() >= h);
+                    if gone || expired {
+                        if let Ok(ev) = rx.try_recv() {
+                            // Raced the exit sweep; deliver what arrived.
+                            *pending = Some(ev);
+                            continue;
+                        }
+                        cancel = true;
+                        let done =
+                            StreamEvent::Done(GenResponse::terminal(id, "internal_error"));
+                        lines.push(format!("{}\n", done.to_json().to_string_compact()));
+                        finished = true;
+                    }
+                    break;
+                }
+            },
+        };
+        let done = matches!(ev, StreamEvent::Done(_));
+        lines.push(format!("{}\n", ev.to_json().to_string_compact()));
+        if done {
+            finished = true;
+            break;
+        }
+        if c.out.len() - c.out_pos > cfg.write_buf_cap {
+            break;
+        }
+    }
+    for line in lines {
+        c.push_chunk(&line);
+    }
+    if cancel {
+        router.cancel(replica, id);
+    }
+    if finished {
+        c.out.extend_from_slice(b"0\r\n\r\n");
+        c.state = ConnState::Reading;
+        c.close_after_flush = true;
+        c.responses_served += 1;
+        c.last_activity = Instant::now();
+    }
+}

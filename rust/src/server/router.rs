@@ -1,0 +1,438 @@
+//! Prefix-affinity router over N engine replicas.
+//!
+//! Sharding naively round-robin would destroy the radix prefix cache hit
+//! rates that make sparse prefill pay off: two requests sharing a long
+//! system prompt must land on the *same* replica to reuse its cached
+//! blocks. The router therefore hash-routes on the first `prefix_k` prompt
+//! tokens (a multiple of the KV block size, so the hashed span aligns with
+//! radix block granularity) and only spills to the least-loaded replica
+//! when the affinity target's wait queue is saturated — trading a cold
+//! prefill for latency under skew. When every replica is saturated the
+//! submit fails and HTTP sheds with 503 + `Retry-After`.
+//!
+//! The router is also the fan-out point for lifecycle (drain/shutdown all
+//! replicas) and observability: `/metrics` serves a unified aggregate
+//! (per-replica [`Metrics`] merged at scrape time) plus a `replicas[]`
+//! array and `replica`-labeled Prometheus families.
+
+use crate::obs::PromText;
+use crate::server::coordinator::Coordinator;
+use crate::server::metrics::Metrics;
+use crate::server::request::{GenRequest, GenResponse, StreamEvent};
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// Router knobs (`wisparse serve --replicas N --route-prefix-k K`).
+#[derive(Clone, Debug)]
+pub struct RouterCfg {
+    /// Prompt bytes (= tokens for the byte-level tokenizer) hashed for
+    /// replica affinity. Keep it a multiple of the KV block size so the
+    /// hashed span maps onto whole radix blocks.
+    pub prefix_k: usize,
+    /// Queue depth at which the affinity replica is considered saturated
+    /// and the request spills to the least-loaded replica instead.
+    /// Defaults to the replica's full queue capacity: spill only when
+    /// affinity would otherwise shed, because every spill is a cold
+    /// prefill on the other replica.
+    pub spill_at: usize,
+}
+
+impl Default for RouterCfg {
+    fn default() -> Self {
+        Self {
+            prefix_k: 64,
+            spill_at: usize::MAX,
+        }
+    }
+}
+
+/// Where a routed request actually went (telemetry).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteOutcome {
+    /// Landed on its prefix-affinity replica.
+    Affinity,
+    /// Affinity replica saturated; spilled to the least-loaded replica.
+    Spill,
+}
+
+pub struct Router {
+    replicas: Vec<Arc<Coordinator>>,
+    cfg: RouterCfg,
+    routed_affinity: AtomicU64,
+    routed_spill: AtomicU64,
+    shed: AtomicU64,
+}
+
+/// FNV-1a over the first `k` prompt bytes: cheap, deterministic and
+/// well-distributed for the short spans we hash. Prompts sharing at least
+/// `k` bytes of prefix route identically; shorter prompts hash whole.
+/// Public so benches can construct replica-balanced workloads without
+/// duplicating the constants.
+pub fn prefix_hash(prompt: &str, k: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in &prompt.as_bytes()[..prompt.len().min(k)] {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl Router {
+    pub fn new(replicas: Vec<Arc<Coordinator>>, cfg: RouterCfg) -> Arc<Self> {
+        assert!(!replicas.is_empty(), "router needs at least one replica");
+        Arc::new(Self {
+            replicas,
+            cfg,
+            routed_affinity: AtomicU64::new(0),
+            routed_spill: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        })
+    }
+
+    /// Wrap one coordinator (the compatibility path for `http::serve` and
+    /// every pre-router caller).
+    pub fn single(coord: Arc<Coordinator>) -> Arc<Self> {
+        Self::new(vec![coord], RouterCfg::default())
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replica(&self, i: usize) -> &Arc<Coordinator> {
+        &self.replicas[i]
+    }
+
+    pub fn replicas(&self) -> &[Arc<Coordinator>] {
+        &self.replicas
+    }
+
+    pub fn cfg(&self) -> &RouterCfg {
+        &self.cfg
+    }
+
+    /// The replica a prompt's prefix hashes to (before load fallback).
+    pub fn affinity_replica(&self, prompt: &str) -> usize {
+        (prefix_hash(prompt, self.cfg.prefix_k) % self.replicas.len() as u64) as usize
+    }
+
+    /// Route one prompt: its affinity replica, unless that replica's wait
+    /// queue is saturated (or its scheduler is gone), in which case the
+    /// least-loaded live replica. The decision is made *before* the single
+    /// submit attempt so a shed counted by a replica really was offered to
+    /// the best available one.
+    pub fn route_replica(&self, prompt: &str) -> (usize, RouteOutcome) {
+        let idx = self.affinity_replica(prompt);
+        let c = &self.replicas[idx];
+        let spill_at = self.cfg.spill_at.min(c.queue_capacity());
+        if self.replicas.len() > 1 && (c.scheduler_exited() || c.queue_depth() >= spill_at) {
+            let fallback = self.least_loaded();
+            if fallback != idx {
+                self.routed_spill.fetch_add(1, Ordering::Relaxed);
+                return (fallback, RouteOutcome::Spill);
+            }
+        }
+        self.routed_affinity.fetch_add(1, Ordering::Relaxed);
+        (idx, RouteOutcome::Affinity)
+    }
+
+    /// The live replica with the fewest in-flight requests.
+    fn least_loaded(&self) -> usize {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| !c.scheduler_exited())
+            .min_by_key(|(_, c)| c.load())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Non-blocking routed submit (the reactor's path). Returns the chosen
+    /// replica index alongside the id and completion channel so the caller
+    /// can cancel or consult the right replica later.
+    pub fn submit_request(
+        &self,
+        req: GenRequest,
+    ) -> anyhow::Result<(usize, u64, Receiver<GenResponse>)> {
+        let (idx, _) = self.route_replica(&req.prompt);
+        match self.replicas[idx].submit_request(req) {
+            Ok((id, rx)) => Ok((idx, id, rx)),
+            Err(e) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Streaming variant of [`Router::submit_request`].
+    pub fn submit_stream_request(
+        &self,
+        req: GenRequest,
+    ) -> anyhow::Result<(usize, u64, Receiver<StreamEvent>)> {
+        let (idx, _) = self.route_replica(&req.prompt);
+        match self.replicas[idx].submit_stream_request(req) {
+            Ok((id, rx)) => Ok((idx, id, rx)),
+            Err(e) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Routed submit-and-wait (the blocking front end's path).
+    pub fn submit_request_blocking(&self, req: GenRequest) -> anyhow::Result<GenResponse> {
+        let (idx, _) = self.route_replica(&req.prompt);
+        let r = self.replicas[idx].submit_request_blocking(req);
+        if r.is_err() {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    /// Cancel an in-flight request on the replica it was routed to.
+    pub fn cancel(&self, replica: usize, id: u64) {
+        self.replicas[replica].cancel(id);
+    }
+
+    /// Begin a graceful drain on every replica (idempotent).
+    pub fn drain(&self) {
+        for c in &self.replicas {
+            c.drain();
+        }
+    }
+
+    /// Hard-stop every replica.
+    pub fn shutdown(&self) {
+        for c in &self.replicas {
+            c.shutdown();
+        }
+    }
+
+    /// Draining if any replica is: drain is a router-wide operation, so a
+    /// half-drained fleet must already refuse admission at the edge.
+    pub fn is_draining(&self) -> bool {
+        self.replicas.iter().any(|c| c.is_draining())
+    }
+
+    /// Shut down once every replica is (the serve loops' exit condition:
+    /// responses may still be owed by stragglers until the last scheduler
+    /// sweeps its waiters).
+    pub fn is_shutdown(&self) -> bool {
+        self.replicas.iter().all(|c| c.is_shutdown())
+    }
+
+    /// Every replica's scheduler has exited and swept its waiters.
+    pub fn all_schedulers_exited(&self) -> bool {
+        self.replicas.iter().all(|c| c.scheduler_exited())
+    }
+
+    /// Requests shed at the router (the chosen replica refused admission).
+    pub fn shed_total(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// `/metrics` JSON: the merged aggregate (same keys as the
+    /// single-engine view), plus a `replicas[]` array of compact
+    /// per-replica blocks and a `router` block with routing counters.
+    pub fn metrics_json(&self) -> Json {
+        let mut j = if self.replicas.len() == 1 {
+            // Single engine: the coordinator's own view, verbatim (plus the
+            // replicas/router keys below) — byte-compatible with the
+            // pre-router server.
+            self.replicas[0].metrics_json()
+        } else {
+            let mut agg = Metrics::new();
+            for c in &self.replicas {
+                c.merge_metrics_into(&mut agg);
+            }
+            let mut j = agg.to_json();
+            if let Some(q) = &self.replicas[0].engine().quality {
+                if let Json::Obj(map) = &mut j {
+                    map.insert("quality".to_string(), q.snapshot_json());
+                }
+            }
+            j
+        };
+        if let Json::Obj(map) = &mut j {
+            map.insert(
+                "replicas".to_string(),
+                Json::Arr(self.replicas.iter().map(|c| c.replica_json()).collect()),
+            );
+            map.insert("router".to_string(), self.router_json());
+        }
+        j
+    }
+
+    fn router_json(&self) -> Json {
+        Json::obj(vec![
+            ("replicas_n", Json::Num(self.replicas.len() as f64)),
+            ("prefix_k", Json::Num(self.cfg.prefix_k as f64)),
+            (
+                "routed_affinity_total",
+                Json::Num(self.routed_affinity.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "routed_spill_total",
+                Json::Num(self.routed_spill.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "shed_total",
+                Json::Num(self.shed.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+
+    /// Prometheus exposition: replica 0's full single-engine page when the
+    /// router wraps one coordinator (byte-compatible with the pre-router
+    /// server), otherwise the merged aggregate families (unlabeled, same
+    /// names as before) followed by `replica`-labeled per-replica gauges
+    /// and the router's own families. Per-replica *histograms* are
+    /// deliberately not emitted: mixing label sets inside one histogram
+    /// family breaks bucket-monotonicity checks in strict parsers.
+    pub fn metrics_prometheus(&self) -> String {
+        if self.replicas.len() == 1 {
+            return self.replicas[0].metrics_prometheus();
+        }
+        for c in &self.replicas {
+            c.tick_slos();
+        }
+        let mut agg = Metrics::new();
+        for c in &self.replicas {
+            c.merge_metrics_into(&mut agg);
+        }
+        let mut p = PromText::new();
+        agg.render_prometheus(&mut p);
+        self.render_replica_prometheus(&mut p);
+        p.finish()
+    }
+
+    fn render_replica_prometheus(&self, p: &mut PromText) {
+        p.gauge(
+            "wisparse_router_replicas",
+            "Engine replicas behind the prefix-affinity router.",
+            &[],
+            self.replicas.len() as f64,
+        );
+        for (outcome, v) in [
+            ("affinity", self.routed_affinity.load(Ordering::Relaxed)),
+            ("spill", self.routed_spill.load(Ordering::Relaxed)),
+        ] {
+            p.counter(
+                "wisparse_router_routed_total",
+                "Requests routed, by whether they hit their affinity replica.",
+                &[("outcome", outcome)],
+                v as f64,
+            );
+        }
+        p.counter(
+            "wisparse_router_shed_total",
+            "Requests shed at the router (chosen replica refused admission).",
+            &[],
+            self.shed.load(Ordering::Relaxed) as f64,
+        );
+        for c in &self.replicas {
+            let rid = c.replica_id().to_string();
+            let labels = [("replica", rid.as_str())];
+            let j = c.replica_json();
+            let num = |k: &str| j.get(k).as_f64().unwrap_or(0.0);
+            p.gauge(
+                "wisparse_replica_up",
+                "1 while the replica's scheduler is running.",
+                &labels,
+                if c.scheduler_exited() { 0.0 } else { 1.0 },
+            );
+            p.gauge(
+                "wisparse_replica_queue_depth",
+                "Waiting (unadmitted) requests on this replica.",
+                &labels,
+                num("queue_depth"),
+            );
+            p.gauge(
+                "wisparse_replica_in_flight",
+                "Queued plus active requests on this replica.",
+                &labels,
+                num("in_flight"),
+            );
+            p.gauge(
+                "wisparse_replica_kv_blocks_total",
+                "This replica's share of the paged-KV block budget.",
+                &labels,
+                num("blocks_total"),
+            );
+            p.gauge(
+                "wisparse_replica_kv_blocks_in_use",
+                "Paged-KV blocks this replica currently references.",
+                &labels,
+                num("blocks_in_use"),
+            );
+            p.gauge(
+                "wisparse_replica_decode_tok_s",
+                "This replica's windowed decode throughput.",
+                &labels,
+                num("decode_tok_s"),
+            );
+            p.counter(
+                "wisparse_replica_requests_total",
+                "Requests completed by this replica.",
+                &labels,
+                num("requests_total"),
+            );
+            p.counter(
+                "wisparse_replica_tokens_generated_total",
+                "Tokens committed by this replica's decode.",
+                &labels,
+                num("tokens_generated"),
+            );
+            p.gauge(
+                "wisparse_replica_prefix_hit_rate",
+                "Fraction of this replica's prompt tokens served from its prefix cache.",
+                &labels,
+                num("prefix_hit_rate"),
+            );
+        }
+    }
+
+    /// `/alerts`: the single replica's body verbatim (compatibility), or a
+    /// per-replica array when sharded.
+    pub fn alerts_json(&self) -> Json {
+        if self.replicas.len() == 1 {
+            return self.replicas[0].alerts_json();
+        }
+        Json::obj(vec![(
+            "replicas",
+            Json::Arr(
+                self.replicas
+                    .iter()
+                    .map(|c| {
+                        Json::obj(vec![
+                            ("replica", Json::Num(c.replica_id() as f64)),
+                            ("alerts", c.alerts_json()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_hash_is_prefix_stable() {
+        let a = prefix_hash("system prompt: be terse. Q1", 16);
+        let b = prefix_hash("system prompt: be terse. Q2 entirely different tail", 16);
+        assert_eq!(a, b, "first 16 bytes agree, hash must agree");
+        let c = prefix_hash("other prompt entirely", 16);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn short_prompts_hash_whole() {
+        assert_eq!(prefix_hash("ab", 64), prefix_hash("ab", 64));
+        assert_ne!(prefix_hash("ab", 64), prefix_hash("ac", 64));
+    }
+}

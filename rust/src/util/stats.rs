@@ -158,6 +158,24 @@ impl Summary {
         }
         quantile(&self.window, q)
     }
+
+    /// Fold another summary into this one (the router's aggregate view over
+    /// per-replica metrics). Counts and extrema merge exactly; the
+    /// percentile window absorbs the other's retained samples up to its own
+    /// capacity, so aggregate percentiles are computed over a bounded blend
+    /// of every replica's recent values.
+    pub fn merge_from(&mut self, o: &Summary) {
+        self.count += o.count;
+        self.sum += o.sum;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+        for &v in &o.window {
+            if self.window.len() >= self.cap {
+                break;
+            }
+            self.window.push(v);
+        }
+    }
 }
 
 #[cfg(test)]

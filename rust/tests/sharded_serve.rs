@@ -1,0 +1,639 @@
+//! Integration: the sharded serving stack — the prefix-affinity router over
+//! N engine replicas, behind both front ends (epoll reactor and the legacy
+//! blocking path).
+//!
+//! Covers the acceptance criteria for the sharded front end:
+//! - prefix-affinity routing keeps a shared-prefix group on one replica,
+//!   with spill-to-least-loaded only under saturation;
+//! - aggregate prefix hit rate at 2 replicas matches the single-replica
+//!   baseline (each group's cache locality survives sharding);
+//! - reactor and blocking front ends are behaviorally equivalent (same
+//!   bodies and terminal reasons, non-streaming and NDJSON streaming);
+//! - the chaos invariant (every request terminates exactly once, pool
+//!   counters balance) holds under the reactor with 2 replicas and
+//!   scripted faults, including a replica-level scheduler crash;
+//! - reactor keep-alive serves several requests per connection.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+use wisparse::model::{Model, ModelConfig};
+use wisparse::server::batcher::BatcherCfg;
+use wisparse::server::engine::{Engine, EngineCfg};
+use wisparse::server::faults::Faults;
+use wisparse::server::{Coordinator, CoordinatorCfg, GenRequest, ReactorCfg, Router, RouterCfg};
+use wisparse::sparsity::Dense;
+use wisparse::util::json::Json;
+
+/// N replicas over one synthetic model, each with its own scheduler thread
+/// and KV pool slice. `faults[r]` (when present and non-empty) arms a
+/// scripted fault schedule on replica r's engine.
+fn build_router(
+    n: usize,
+    prefix_k: usize,
+    faults: &[&str],
+    seed: u64,
+    prefix_cache: bool,
+) -> (Arc<Router>, Vec<std::thread::JoinHandle<()>>) {
+    let model = Arc::new(Model::synthetic(ModelConfig::preset("nano").unwrap(), seed));
+    let mut replicas = Vec::with_capacity(n);
+    let mut handles = Vec::with_capacity(n);
+    for r in 0..n {
+        let mut e = Engine::paged(
+            Arc::clone(&model),
+            Arc::new(Dense),
+            EngineCfg {
+                threads: 2,
+                ..EngineCfg::default()
+            },
+            &wisparse::kv::KvCfg {
+                pool_blocks: 128,
+                block_size: 8,
+                prefix_cache,
+            },
+        );
+        if let Some(f) = faults.get(r) {
+            if !f.is_empty() {
+                e.faults = Faults::scripted(f);
+            }
+        }
+        let coord = Coordinator::new(
+            Arc::new(e),
+            CoordinatorCfg {
+                batcher: BatcherCfg {
+                    max_batch: 4,
+                    max_queue: 64,
+                },
+                drain_timeout: Duration::from_secs(10),
+                replica_id: r,
+                ..CoordinatorCfg::default()
+            },
+        );
+        let sched = Arc::clone(&coord);
+        handles.push(std::thread::spawn(move || sched.run_scheduler()));
+        replicas.push(coord);
+    }
+    let router = Router::new(
+        replicas,
+        RouterCfg {
+            prefix_k,
+            ..RouterCfg::default()
+        },
+    );
+    (router, handles)
+}
+
+fn drain_and_join(router: &Arc<Router>, handles: Vec<std::thread::JoinHandle<()>>) {
+    router.drain();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(router.is_shutdown() && router.all_schedulers_exited());
+}
+
+fn start_reactor(router: &Arc<Router>) -> String {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let r = Arc::clone(router);
+    std::thread::spawn(move || {
+        wisparse::server::reactor::serve(r, "127.0.0.1:0", ReactorCfg::default(), move |a| {
+            tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    rx.recv().unwrap().to_string()
+}
+
+fn start_blocking(router: &Arc<Router>) -> String {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let r = Arc::clone(router);
+    std::thread::spawn(move || {
+        wisparse::server::http::serve_blocking(r, "127.0.0.1:0", move |a| {
+            tx.send(a).unwrap();
+        })
+        .unwrap();
+    });
+    rx.recv().unwrap().to_string()
+}
+
+fn send_request(stream: &mut TcpStream, method: &str, path: &str, body: &str) {
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+}
+
+/// Read one Content-Length-framed response off `reader`, leaving the
+/// connection usable for the next request (keep-alive).
+fn read_response(reader: &mut BufReader<TcpStream>) -> (u16, Vec<(String, String)>, String) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("bad status line {status_line:?}"))
+        .parse()
+        .unwrap();
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.trim_end().split_once(':') {
+            let k = k.to_ascii_lowercase();
+            let v = v.trim().to_string();
+            if k == "content-length" {
+                content_length = v.parse().unwrap();
+            }
+            headers.push((k, v));
+        }
+    }
+    let mut buf = vec![0u8; content_length];
+    reader.read_exact(&mut buf).unwrap();
+    (status, headers, String::from_utf8(buf).unwrap())
+}
+
+fn request(addr: &str, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    send_request(&mut stream, method, path, body);
+    let mut reader = BufReader::new(stream);
+    let (status, _, body) = read_response(&mut reader);
+    (status, body)
+}
+
+/// Like [`request`] but for a `Transfer-Encoding: chunked` response:
+/// returns the status and the reassembled body.
+fn request_chunked(addr: &str, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    send_request(&mut stream, method, path, body);
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).unwrap();
+    let status: u16 = status_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).unwrap();
+        if h.trim_end().is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = v.trim().eq_ignore_ascii_case("chunked");
+            }
+        }
+    }
+    assert!(chunked, "streaming response must be chunked");
+    let mut out = String::new();
+    loop {
+        let mut size_line = String::new();
+        reader.read_line(&mut size_line).unwrap();
+        let size = usize::from_str_radix(size_line.trim(), 16).unwrap();
+        if size == 0 {
+            break;
+        }
+        let mut buf = vec![0u8; size + 2]; // chunk data + trailing CRLF
+        reader.read_exact(&mut buf).unwrap();
+        out.push_str(std::str::from_utf8(&buf[..size]).unwrap());
+    }
+    (status, out)
+}
+
+/// A 48-byte shared prefix (>= prefix_k, so the prefix alone decides the
+/// route for every prompt extending it) whose affinity replica is `want`.
+fn prefix_with_affinity(router: &Arc<Router>, want: usize) -> String {
+    for salt in 0..64 {
+        let prefix = format!("{:.<48}", format!("group {salt} shared prefix "));
+        assert!(prefix.len() >= router.cfg().prefix_k);
+        if router.affinity_replica(&prefix) == want {
+            return prefix;
+        }
+    }
+    panic!("no 48-byte prefix found with affinity {want}");
+}
+
+// ---------------------------------------------------------------------------
+// Routing
+// ---------------------------------------------------------------------------
+
+/// Prompts sharing a first-`prefix_k`-byte prefix all route to the same
+/// replica, routing is all-affinity under light load, and the per-replica
+/// request counters account for exactly the groups pinned to each replica.
+#[test]
+fn prefix_groups_route_wholly_to_one_replica() {
+    let (router, handles) = build_router(2, 16, &[], 301, true);
+    let group_a = prefix_with_affinity(&router, 0);
+    let group_b = prefix_with_affinity(&router, 1);
+    let mut sent = [0usize; 2];
+    for prefix in [&group_a, &group_b] {
+        let want = router.affinity_replica(prefix);
+        for i in 0..3 {
+            let prompt = format!("{prefix} q{i}");
+            assert_eq!(
+                router.affinity_replica(&prompt),
+                want,
+                "suffix changed the route for {prompt:?}"
+            );
+            let resp = router
+                .submit_request_blocking(GenRequest::new(0, &prompt, 4))
+                .unwrap();
+            assert_eq!(resp.finish_reason, "length");
+            sent[want] += 1;
+        }
+    }
+    let m = router.metrics_json();
+    let routed = m.get("router");
+    assert_eq!(routed.get("routed_affinity_total").as_usize(), Some(6));
+    assert_eq!(routed.get("routed_spill_total").as_usize(), Some(0));
+    assert_eq!(routed.get("shed_total").as_usize(), Some(0));
+    // Every group's requests landed wholly on its affinity replica.
+    if let Json::Arr(reps) = m.get("replicas") {
+        assert_eq!(reps.len(), 2);
+        for (i, r) in reps.iter().enumerate() {
+            assert_eq!(r.get("replica").as_usize(), Some(i));
+            assert_eq!(
+                r.get("requests_total").as_usize(),
+                Some(sent[i]),
+                "replica {i} request count"
+            );
+        }
+    } else {
+        panic!("metrics_json missing replicas[]: {m:?}");
+    }
+    // The aggregate view still carries the single-engine keys.
+    assert_eq!(m.get("requests_total").as_usize(), Some(6));
+    drain_and_join(&router, handles);
+}
+
+/// With the spill threshold forced to zero, a prompt pinned to a busy-by-
+/// definition replica spills to the least-loaded one instead of queueing.
+#[test]
+fn saturated_affinity_replica_spills_to_least_loaded() {
+    let (router, handles) = build_router(2, 16, &[], 302, true);
+    // Rebuild with spill_at = 0 semantics by routing directly: a fresh
+    // router over the same replicas with the aggressive threshold.
+    let spilly = Router::new(
+        router.replicas().to_vec(),
+        RouterCfg {
+            prefix_k: 16,
+            spill_at: 0,
+        },
+    );
+    // A prompt whose affinity is replica 1: with spill_at=0 its affinity
+    // queue counts as saturated, and the least-loaded tie-break picks
+    // replica 0 — a genuine spill.
+    let prefix = prefix_with_affinity(&spilly, 1);
+    let (idx, outcome) = spilly.route_replica(&format!("{prefix} q"));
+    assert_eq!(idx, 0, "spill must pick the other replica");
+    assert_eq!(outcome, wisparse::server::router::RouteOutcome::Spill);
+    // A prompt already pinned to the least-loaded replica cannot spill.
+    let prefix0 = prefix_with_affinity(&spilly, 0);
+    let (idx, outcome) = spilly.route_replica(&format!("{prefix0} q"));
+    assert_eq!(idx, 0);
+    assert_eq!(outcome, wisparse::server::router::RouteOutcome::Affinity);
+    drain_and_join(&router, handles);
+}
+
+/// Sharding must not cost prefix-cache locality: the aggregate hit rate at
+/// 2 replicas stays within 10% of the single-replica baseline on the same
+/// shared-prefix workload (affinity keeps each group's cache warm on one
+/// replica).
+#[test]
+fn prefix_hit_rate_parity_across_shard_counts() {
+    fn run(n: usize) -> f64 {
+        let (router, handles) = build_router(n, 16, &[], 303, true);
+        for g in 0..4 {
+            let prefix = format!("{:.<48}", format!("hit rate group {g} "));
+            for i in 0..3 {
+                let resp = router
+                    .submit_request_blocking(GenRequest::new(0, &format!("{prefix} s{i}"), 4))
+                    .unwrap();
+                assert_eq!(resp.finish_reason, "length");
+            }
+        }
+        let m = router.metrics_json();
+        let rate = m.get("prefix_hit_rate").as_f64().unwrap();
+        drain_and_join(&router, handles);
+        rate
+    }
+    let baseline = run(1);
+    let sharded = run(2);
+    assert!(
+        baseline > 0.3,
+        "workload must exercise the prefix cache: {baseline}"
+    );
+    assert!(
+        (baseline - sharded).abs() <= 0.10 * baseline.max(1e-9),
+        "sharded hit rate {sharded} diverged from baseline {baseline}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Front-end equivalence
+// ---------------------------------------------------------------------------
+
+/// The reactor and the blocking front end serve byte-equivalent results
+/// over identical 2-replica stacks: same JSON fields for non-streaming
+/// generates, same reassembled NDJSON stream, same error statuses.
+#[test]
+fn reactor_matches_blocking_front_end() {
+    let (r_reactor, h_reactor) = build_router(2, 16, &[], 304, true);
+    let (r_blocking, h_blocking) = build_router(2, 16, &[], 304, true);
+    let addr_r = start_reactor(&r_reactor);
+    let addr_b = start_blocking(&r_blocking);
+
+    for prompt in ["abc def", "hello world pad", "12+34=", "the sun is"] {
+        let body = format!(r#"{{"prompt": "{prompt}", "max_new": 5}}"#);
+        let (sr, br) = request(&addr_r, "POST", "/generate", &body);
+        let (sb, bb) = request(&addr_b, "POST", "/generate", &body);
+        assert_eq!(sr, 200, "{br}");
+        assert_eq!(sb, 200, "{bb}");
+        let jr = Json::parse(&br).unwrap();
+        let jb = Json::parse(&bb).unwrap();
+        for key in ["text", "finish_reason"] {
+            assert_eq!(
+                jr.get(key).as_str(),
+                jb.get(key).as_str(),
+                "{prompt:?} diverged on {key}"
+            );
+        }
+        assert_eq!(
+            jr.get("generated_tokens").as_usize(),
+            jb.get("generated_tokens").as_usize()
+        );
+    }
+
+    // Streaming: same token sequence, same done summary.
+    let body = r#"{"prompt": "stream parity pad", "max_new": 5, "stream": true}"#;
+    let (sr, nr) = request_chunked(&addr_r, "POST", "/generate", body);
+    let (sb, nb) = request_chunked(&addr_b, "POST", "/generate", body);
+    assert_eq!(sr, 200);
+    assert_eq!(sb, 200);
+    let parse_lines = |nd: &str| -> (Vec<String>, String) {
+        let lines: Vec<&str> = nd.lines().filter(|l| !l.is_empty()).collect();
+        let done = Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(done.get("done").as_bool(), Some(true));
+        (
+            lines[..lines.len() - 1]
+                .iter()
+                .map(|l| {
+                    Json::parse(l)
+                        .unwrap()
+                        .get("token")
+                        .as_str()
+                        .unwrap()
+                        .to_string()
+                })
+                .collect(),
+            done.get("text").as_str().unwrap().to_string(),
+        )
+    };
+    let (toks_r, text_r) = parse_lines(&nr);
+    let (toks_b, text_b) = parse_lines(&nb);
+    assert_eq!(toks_r, toks_b, "streamed tokens diverged");
+    assert_eq!(text_r, text_b);
+
+    // Error statuses agree.
+    for (method, path, body, want) in [
+        ("POST", "/generate", "not json", 400u16),
+        ("GET", "/nope", "", 404),
+        ("GET", "/health", "", 200),
+        ("GET", "/metrics", "", 200),
+    ] {
+        let (sr, _) = request(&addr_r, method, path, body);
+        let (sb, _) = request(&addr_b, method, path, body);
+        assert_eq!(sr, want, "{method} {path} on reactor");
+        assert_eq!(sb, want, "{method} {path} on blocking");
+    }
+
+    drain_and_join(&r_reactor, h_reactor);
+    drain_and_join(&r_blocking, h_blocking);
+}
+
+/// Keep-alive on the reactor: one connection serves several requests
+/// back to back, and non-streaming responses advertise keep-alive.
+#[test]
+fn reactor_keep_alive_serves_many_requests_per_connection() {
+    let (router, handles) = build_router(2, 16, &[], 305, true);
+    let addr = start_reactor(&router);
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    send_request(&mut writer, "GET", "/health", "");
+    let (status, headers, body) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert!(body.contains("ok"));
+    assert_eq!(
+        headers
+            .iter()
+            .find(|(k, _)| k == "connection")
+            .map(|(_, v)| v.as_str()),
+        Some("keep-alive")
+    );
+
+    for i in 0..3 {
+        send_request(
+            &mut writer,
+            "POST",
+            "/generate",
+            &format!(r#"{{"prompt": "keep alive {i}", "max_new": 3}}"#),
+        );
+        let (status, _, body) = read_response(&mut reader);
+        assert_eq!(status, 200, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("generated_tokens").as_usize(), Some(3));
+    }
+
+    send_request(&mut writer, "GET", "/metrics", "");
+    let (status, _, body) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(
+        Json::parse(&body).unwrap().get("requests_total").as_usize(),
+        Some(3)
+    );
+    drain_and_join(&router, handles);
+}
+
+// ---------------------------------------------------------------------------
+// Chaos under the sharded reactor
+// ---------------------------------------------------------------------------
+
+/// A scheduler-level crash on one replica stays contained: every request
+/// still terminates exactly once, the healthy replica never notices, the
+/// crashed one restarts its scheduler, and both pools balance after drain.
+#[test]
+fn replica_crash_contained_and_pool_balances() {
+    let (router, handles) = build_router(2, 16, &["", "sched_panic@1"], 306, false);
+    let crashed = 1usize;
+    let healthy = 0usize;
+    let p_healthy = prefix_with_affinity(&router, healthy);
+    let p_crashed = prefix_with_affinity(&router, crashed);
+    let results: Vec<_> = std::thread::scope(|s| {
+        (0..8)
+            .map(|i| {
+                let router = Arc::clone(&router);
+                let prefix = if i % 2 == 0 { &p_healthy } else { &p_crashed };
+                let prompt = format!("{prefix} c{i}");
+                s.spawn(move || router.submit_request_blocking(GenRequest::new(0, &prompt, 5)))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for r in results {
+        let resp = r.expect("admission never fails under this load");
+        assert!(!resp.finish_reason.is_empty());
+        match resp.finish_reason.as_str() {
+            "internal_error" => failed += 1,
+            _ => ok += 1,
+        }
+    }
+    assert_eq!(ok + failed, 8, "every request answered exactly once");
+    assert!(ok >= 4, "healthy replica and restarted queue must complete");
+    let m = router.metrics_json();
+    if let Json::Arr(reps) = m.get("replicas") {
+        assert_eq!(reps[healthy].get("panics_caught_total").as_usize(), Some(0));
+        assert!(
+            reps[crashed]
+                .get("scheduler_restarts_total")
+                .as_usize()
+                .unwrap()
+                >= 1,
+            "crashed replica restarted its scheduler"
+        );
+    } else {
+        panic!("metrics_json missing replicas[]");
+    }
+    drain_and_join(&router, handles);
+    for i in 0..2 {
+        let kv = router.replica(i).engine().kv.as_ref().unwrap();
+        let (allocs, frees) = kv.pool().counters();
+        assert_eq!(allocs, frees, "replica {i} pool leak");
+        assert_eq!(kv.blocks_in_use(), 0, "replica {i} blocks still held");
+    }
+}
+
+/// The PR-6 fault-injection invariant under the reactor with 2 replicas:
+/// scripted engine faults on both replicas, concurrent HTTP clients plus a
+/// mid-stream disconnect — every HTTP request gets exactly one complete
+/// response with a sane status, and both pools balance after drain.
+#[test]
+fn fault_injection_under_reactor_with_two_replicas() {
+    let (router, handles) = build_router(
+        2,
+        16,
+        &["decode_panic@2", "sched_panic@1,decode_panic@3"],
+        307,
+        false,
+    );
+    let addr = start_reactor(&router);
+
+    // A streaming client that hangs up mid-stream.
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        send_request(
+            &mut stream,
+            "POST",
+            "/generate",
+            r#"{"prompt": "stream chaos victim pad", "max_new": 8, "stream": true}"#,
+        );
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        let _ = reader.read_line(&mut line); // at most the status line
+    } // ...dropped: mid-stream disconnect
+
+    let results: Vec<(u16, String)> = std::thread::scope(|s| {
+        (0..6)
+            .map(|i| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    request(
+                        &addr,
+                        "POST",
+                        "/generate",
+                        &format!(r#"{{"prompt": "chaos client {i} pad", "max_new": 5}}"#),
+                    )
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (status, body) in &results {
+        assert!(
+            [200, 500, 503, 504].contains(status),
+            "unexpected status {status}: {body}"
+        );
+        let j = Json::parse(body).unwrap_or_else(|e| panic!("unparseable body {body:?}: {e}"));
+        if *status == 503 {
+            // Shed at admission: an error body, no generation happened.
+            assert!(j.get("error").as_str().is_some(), "{body}");
+        } else {
+            assert!(
+                j.get("finish_reason").as_str().is_some_and(|r| !r.is_empty()),
+                "terminal reason missing: {body}"
+            );
+        }
+    }
+
+    // Drain over HTTP, then let the schedulers exit.
+    let (status, _) = request(&addr, "POST", "/admin/drain", "");
+    assert_eq!(status, 202);
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(router.all_schedulers_exited());
+    for i in 0..2 {
+        let kv = router.replica(i).engine().kv.as_ref().unwrap();
+        let (allocs, frees) = kv.pool().counters();
+        assert_eq!(allocs, frees, "replica {i} pool leak");
+        assert_eq!(kv.blocks_in_use(), 0, "replica {i} blocks still held");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Aggregated observability
+// ---------------------------------------------------------------------------
+
+/// The 2-replica Prometheus page carries the merged unlabeled families,
+/// the router families, and `replica`-labeled per-replica gauges.
+#[test]
+fn sharded_prometheus_page_has_router_and_replica_families() {
+    let (router, handles) = build_router(2, 16, &[], 308, true);
+    for g in 0..2 {
+        let prefix = format!("{:.<48}", format!("prom group {g} "));
+        router
+            .submit_request_blocking(GenRequest::new(0, &format!("{prefix} p"), 3))
+            .unwrap();
+    }
+    let page = router.metrics_prometheus();
+    for family in [
+        "wisparse_requests_total",
+        "wisparse_router_replicas 2",
+        "wisparse_router_routed_total{outcome=\"affinity\"}",
+        "wisparse_replica_up{replica=\"0\"}",
+        "wisparse_replica_up{replica=\"1\"}",
+        "wisparse_replica_requests_total{replica=\"0\"}",
+    ] {
+        assert!(page.contains(family), "missing {family:?} in:\n{page}");
+    }
+    // The merged requests_total equals the sum of the replica-labeled ones.
+    let total: f64 = page
+        .lines()
+        .find(|l| l.starts_with("wisparse_requests_total "))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap();
+    assert_eq!(total, 2.0);
+    drain_and_join(&router, handles);
+}

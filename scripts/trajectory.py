@@ -111,18 +111,31 @@ def _keyed_headline(spec):
     return extract
 
 
+def _serve_headline(r):
+    rows = _keyed_headline(
+        [
+            ("prefill_speedup", "prefill_speedup", "up"),
+            ("prefix_hit_rate", "prefix_hit_rate", "up"),
+            ("e2e_tok_s_prefix_on", "e2e_tok_s_prefix_on", "info"),
+        ]
+    )(r)
+    # Sharded-reactor A/B: absolute tok/s per replica count is runner-bound
+    # (info), but the speedup over one replica and each fleet's prefix hit
+    # rate are ratios of same-runner runs, so they gate at >=2 replicas.
+    for row in r.get("replica_scaling", []):
+        n = int(row.get("replicas", 0))
+        gate = "up" if n >= 2 else "info"
+        rows.append((f"replica{n}.tok_s", row.get("tok_s", 0.0), "info"))
+        rows.append((f"replica{n}.speedup_vs_1", row.get("speedup_vs_1", 0.0), gate))
+        rows.append(
+            (f"replica{n}.prefix_hit_rate", row.get("prefix_hit_rate", 0.0), gate)
+        )
+    return rows
+
+
 HEADLINES = {
     "BENCH_kernel.json": ("kernel", _kernel_headline),
-    "BENCH_serve.json": (
-        "serve",
-        _keyed_headline(
-            [
-                ("prefill_speedup", "prefill_speedup", "up"),
-                ("prefix_hit_rate", "prefix_hit_rate", "up"),
-                ("e2e_tok_s_prefix_on", "e2e_tok_s_prefix_on", "info"),
-            ]
-        ),
-    ),
+    "BENCH_serve.json": ("serve", _serve_headline),
     "BENCH_quant.json": (
         "quant",
         _keyed_headline(
